@@ -1,0 +1,36 @@
+//! Full-simulation throughput per policy: how many simulated
+//! worker-steps per second the L3 stack sustains (drives the wall-clock
+//! of every repro experiment).
+
+use bfio_serve::config::SimConfig;
+use bfio_serve::policies::by_name;
+use bfio_serve::sim::Simulator;
+use bfio_serve::util::bench::Bench;
+use bfio_serve::util::rng::Rng;
+use bfio_serve::workload::adversarial::overloaded_trace;
+use bfio_serve::workload::longbench::LongBenchLike;
+
+fn main() {
+    let bench = Bench::quick();
+    println!("simulation throughput per policy (G=64, B=24, 200 steps)\n");
+    let g = 64;
+    let b = 24;
+    let steps = 200;
+    let sampler = LongBenchLike::paper();
+    let mut rng = Rng::new(1);
+    let trace = overloaded_trace(&sampler, g, b, steps, 3.0, &mut rng);
+    let cfg = SimConfig { g, b, max_steps: steps, seed: 1, ..SimConfig::default() };
+
+    for name in ["fcfs", "jsq", "rr", "pow2", "least", "minmin", "bfio:0", "bfio:40"] {
+        let sim = Simulator::new(cfg.clone());
+        let r = bench.run(&format!("sim/{name}"), || {
+            let mut p = by_name(name).unwrap();
+            sim.run(&trace, p.as_mut())
+        });
+        let worker_steps = (g as f64) * steps as f64;
+        println!(
+            "    -> {:.1}k worker-steps/s",
+            worker_steps / (r.mean_ns / 1e9) / 1e3
+        );
+    }
+}

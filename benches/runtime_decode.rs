@@ -1,0 +1,49 @@
+//! PJRT decode-step latency per KV-capacity variant: the L2 hot path the
+//! live coordinator drives every barrier tick.  Requires `make artifacts`.
+
+use bfio_serve::runtime::Runtime;
+use bfio_serve::util::bench::Bench;
+use std::path::Path;
+
+fn main() {
+    let dir = Path::new("artifacts");
+    if !dir.join("meta.json").exists() {
+        eprintln!("artifacts not built — run `make artifacts` first");
+        return;
+    }
+    let mut rt = Runtime::load(dir).unwrap();
+    let golden = rt.meta.golden.clone();
+    let bench = Bench {
+        target_time: std::time::Duration::from_secs(1),
+        ..Bench::default()
+    };
+    println!(
+        "TinyLM decode step (batch={}, {} params) per KV variant\n",
+        rt.meta.decode_batch(),
+        rt.meta.n_params
+    );
+
+    let caps = rt.meta.decode_capacities();
+    for cap in caps {
+        let (_, mut state) = rt.prefill_batch(&golden.prompt, cap).unwrap();
+        let tokens = golden.next_tokens.clone();
+        let r = bench.run(&format!("decode_step/l{cap}"), || {
+            // reset positions to keep capacity fixed across iterations
+            for p in state.positions.iter_mut() {
+                *p = golden.positions[0];
+            }
+            rt.decode_step(&mut state, &tokens).unwrap()
+        });
+        let toks = rt.meta.decode_batch() as f64;
+        println!(
+            "    -> {:.0} tokens/s/worker at this variant",
+            toks / (r.mean_ns / 1e9)
+        );
+    }
+
+    // prefill for comparison
+    let cap0 = rt.meta.decode_capacities()[0];
+    bench.run("prefill_batch/l64", || {
+        rt.prefill_batch(&golden.prompt, cap0).unwrap()
+    });
+}

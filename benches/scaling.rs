@@ -1,0 +1,27 @@
+//! Figs 10/11 regeneration with timing: the G-sweep that demonstrates
+//! super-linear FCFS imbalance growth vs bounded BF-IO.
+
+use bfio_serve::experiments::scaling::scaling_sweep;
+use bfio_serve::experiments::ExpScale;
+use std::time::Instant;
+
+fn main() {
+    let scale = ExpScale {
+        g: 0,
+        b: 24,
+        steps: 300,
+        seed: 7,
+        out_dir: "results".into(),
+    };
+    let t0 = Instant::now();
+    let rows = scaling_sweep(&scale, &[16, 32, 64, 96, 128]);
+    let dt = t0.elapsed().as_secs_f64();
+    let first = rows.first().unwrap();
+    let last = rows.last().unwrap();
+    println!(
+        "\nimbalance ratio grows {:.2}x -> {:.2}x across the sweep ({:.2}s total)",
+        first.fcfs_imb / first.bfio_imb,
+        last.fcfs_imb / last.bfio_imb,
+        dt
+    );
+}

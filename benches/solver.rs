@@ -1,0 +1,102 @@
+//! BF-IO decision latency: the per-step cost of solving (IO) at serving
+//! scale.  The paper's requirement is a millisecond decision budget at
+//! G=256, B=72 (Section 7.3 "millisecond decision budgets").
+
+use bfio_serve::config::BfIoConfig;
+use bfio_serve::policies::bfio::BfIo;
+use bfio_serve::policies::{ActiveView, AssignCtx, Policy, WaitingView, WorkerView};
+use bfio_serve::util::bench::Bench;
+use bfio_serve::util::rng::Rng;
+use bfio_serve::workload::Drift;
+
+/// Build a steady-state decision instance: G workers nearly full, a few
+/// free slots (the per-step completion count), deep FIFO pool.
+fn instance(
+    g: usize,
+    b: usize,
+    free_frac: f64,
+    pool: usize,
+    seed: u64,
+) -> (Vec<WorkerView>, Vec<WaitingView>) {
+    let mut rng = Rng::new(seed);
+    let workers: Vec<WorkerView> = (0..g)
+        .map(|_| {
+            let free = if rng.f64() < free_frac { 1 } else { 0 };
+            let n = b - free;
+            let active: Vec<ActiveView> = (0..n)
+                .map(|_| ActiveView {
+                    load: 500.0 + rng.f64() * 3000.0,
+                    pred_remaining: 1 + rng.below(200),
+                })
+                .collect();
+            WorkerView {
+                load: active.iter().map(|a| a.load).sum(),
+                free_slots: free,
+                active,
+            }
+        })
+        .collect();
+    let waiting: Vec<WaitingView> = (0..pool)
+        .map(|i| WaitingView {
+            idx: i,
+            prefill: 100.0 + rng.f64() * 5000.0,
+            arrival_step: 0,
+        })
+        .collect();
+    (workers, waiting)
+}
+
+fn main() {
+    let bench = Bench::default();
+    println!("BF-IO (IO) solver decision latency — paper budget: < 1 ms/step\n");
+
+    for (g, b) in [(64, 24), (256, 72)] {
+        for h in [0usize, 40, 100] {
+            let (workers, waiting) = instance(g, b, 0.5, 4096, 42);
+            let drift = Drift::Unit.cumulative(0, h.max(1));
+            let mut policy = BfIo::new(BfIoConfig::with_horizon(h));
+            let mut rng = Rng::new(7);
+            bench.run(&format!("bfio_decide/g{g}_b{b}_h{h}"), || {
+                let ctx = AssignCtx {
+                    step: 0,
+                    batch_cap: b,
+                    workers: &workers,
+                    waiting: &waiting,
+                    cum_drift: &drift,
+                };
+                policy.assign(&ctx, &mut rng)
+            });
+        }
+    }
+
+    // Cold-start (empty cluster, G·B admissions at once) — the worst case.
+    let (workers, waiting) = {
+        let mut rng = Rng::new(3);
+        let g = 256;
+        let b = 72;
+        let workers: Vec<WorkerView> = (0..g)
+            .map(|_| WorkerView { load: 0.0, free_slots: b, active: vec![] })
+            .collect();
+        let waiting: Vec<WaitingView> = (0..g * b)
+            .map(|i| WaitingView {
+                idx: i,
+                prefill: 100.0 + rng.f64() * 5000.0,
+                arrival_step: 0,
+            })
+            .collect();
+        (workers, waiting)
+    };
+    let drift = Drift::Unit.cumulative(0, 1);
+    let mut policy = BfIo::new(BfIoConfig::with_horizon(0));
+    let mut rng = Rng::new(9);
+    Bench::quick().run("bfio_decide/cold_start_g256_b72_18432_reqs", || {
+        let ctx = AssignCtx {
+            step: 0,
+            batch_cap: 72,
+            workers: &workers,
+            waiting: &waiting,
+            cum_drift: &drift,
+        };
+        policy.assign(&ctx, &mut rng)
+    });
+}

@@ -1,0 +1,23 @@
+//! End-to-end Table-1 regeneration (the paper's headline table) with
+//! timing: workload generation + all nine policy runs.
+
+use bfio_serve::experiments::{table1, ExpScale};
+use std::time::Instant;
+
+fn main() {
+    let scale = ExpScale {
+        g: 64,
+        b: 24,
+        steps: 400,
+        seed: 7,
+        out_dir: "results".into(),
+    };
+    println!(
+        "table1 bench: G={} B={} steps={} (use `bfio repro table1 --full` for paper scale)\n",
+        scale.g, scale.b, scale.steps
+    );
+    let t0 = Instant::now();
+    let rows = table1(&scale);
+    let dt = t0.elapsed().as_secs_f64();
+    println!("\nregenerated {} rows in {:.2}s", rows.len(), dt);
+}

@@ -1,0 +1,56 @@
+//! Quickstart: simulate a small barrier-synchronized decode cluster and
+//! compare FCFS against BF-IO on the paper's four metrics.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use bfio_serve::config::SimConfig;
+use bfio_serve::metrics::Report;
+use bfio_serve::policies::bfio::BfIo;
+use bfio_serve::policies::fcfs::Fcfs;
+use bfio_serve::sim::Simulator;
+use bfio_serve::util::rng::Rng;
+use bfio_serve::workload::adversarial::overloaded_trace;
+use bfio_serve::workload::longbench::LongBenchLike;
+
+fn main() {
+    // A 16-worker cluster, batch size 16, LongBench-like overloaded load.
+    let cfg = SimConfig {
+        g: 16,
+        b: 16,
+        max_steps: 500,
+        warmup_steps: 100,
+        seed: 42,
+        ..SimConfig::default()
+    };
+    let sampler = LongBenchLike::paper();
+    let mut rng = Rng::new(cfg.seed);
+    let trace = overloaded_trace(&sampler, cfg.g, cfg.b, cfg.max_steps, 3.0, &mut rng);
+    println!(
+        "quickstart: G={} B={} | {} requests in trace",
+        cfg.g,
+        cfg.b,
+        trace.len()
+    );
+
+    let sim = Simulator::new(cfg);
+    println!("{}", Report::table_header());
+
+    let fcfs = sim.run(&trace, &mut Fcfs::new());
+    println!("{}", fcfs.report.table_row(&fcfs.policy));
+
+    let bfio = sim.run(&trace, &mut BfIo::with_horizon(40));
+    println!("{}", bfio.report.table_row(&bfio.policy));
+
+    let iir = fcfs.report.avg_imbalance / bfio.report.avg_imbalance;
+    let de = 1.0 - bfio.report.total_energy_j / fcfs.report.total_energy_j;
+    println!(
+        "\nBF-IO(H=40) vs FCFS: {:.1}x lower imbalance, {:.1}% energy saved, \
+         {:.1}% higher throughput",
+        iir,
+        de * 100.0,
+        (bfio.report.throughput_tps / fcfs.report.throughput_tps - 1.0) * 100.0
+    );
+    assert!(iir > 1.0, "BF-IO should beat FCFS on imbalance");
+}

@@ -1,0 +1,40 @@
+//! Scaling study (Figs 10 & 11): sweep the cluster size G and watch FCFS
+//! imbalance grow super-linearly while BF-IO stays bounded, with the
+//! energy gap widening — the "benefits compound at scale" result.
+//!
+//! ```bash
+//! cargo run --release --example scaling_study
+//! ```
+
+use bfio_serve::experiments::scaling::scaling_sweep;
+use bfio_serve::experiments::ExpScale;
+
+fn main() {
+    let scale = ExpScale {
+        g: 0, // per-sweep
+        b: 24,
+        steps: 400,
+        seed: 11,
+        out_dir: "results".into(),
+    };
+    let rows = scaling_sweep(&scale, &[8, 16, 32, 64, 96]);
+
+    // The headline shape: the FCFS/BF-IO imbalance ratio grows with G.
+    let first = rows.first().unwrap();
+    let last = rows.last().unwrap();
+    let r0 = first.fcfs_imb / first.bfio_imb;
+    let r1 = last.fcfs_imb / last.bfio_imb;
+    println!(
+        "\nimbalance ratio FCFS/BF-IO: {:.2}x at G={} -> {:.2}x at G={}",
+        r0, first.g, r1, last.g
+    );
+    let e0 = 1.0 - first.bfio_mj / first.fcfs_mj;
+    let e1 = 1.0 - last.bfio_mj / last.fcfs_mj;
+    println!(
+        "energy reduction: {:.1}% at G={} -> {:.1}% at G={}",
+        e0 * 100.0,
+        first.g,
+        e1 * 100.0,
+        last.g
+    );
+}

@@ -1,0 +1,90 @@
+//! End-to-end driver: serve batched requests against a REAL model through
+//! the full three-layer stack — BF-IO router (Rust, L3) → compiled TinyLM
+//! decode steps (JAX/Pallas → HLO text, L2/L1) executed by PJRT workers.
+//!
+//! Each worker is a thread with its own PJRT client and KV cache; every
+//! decode step is barrier-synchronized, and per-step idle time is
+//! *measured* from real wall-clock local compute times.  This proves all
+//! three layers compose: the router's decisions change the measured
+//! latency/throughput/energy of actual model execution.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example serve_llm
+//! ```
+
+use bfio_serve::coordinator::{serve, CoordinatorConfig, ServeRequest};
+use bfio_serve::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let artifacts = std::path::PathBuf::from(
+        std::env::var("BFIO_ARTIFACTS").unwrap_or_else(|_| "artifacts".into()),
+    );
+    if !artifacts.join("meta.json").exists() {
+        eprintln!("artifacts not found — run `make artifacts` first");
+        std::process::exit(1);
+    }
+
+    // Heterogeneous workload: mixed prompt lengths and generation budgets
+    // (the heavy tail is what creates decode-stage imbalance).
+    let mut rng = Rng::new(7);
+    let requests: Vec<ServeRequest> = (0..48)
+        .map(|i| {
+            let heavy = rng.bernoulli(0.25);
+            let plen = if heavy { 12 + rng.below_usize(4) } else { 2 + rng.below_usize(6) };
+            let gen = if heavy { 24 + rng.below(40) as u32 } else { 2 + rng.below(10) as u32 };
+            ServeRequest {
+                id: i as u64,
+                prompt: (0..plen).map(|_| rng.below(512) as i32).collect(),
+                max_new_tokens: gen,
+            }
+        })
+        .collect();
+    let total_tokens: u32 = requests
+        .iter()
+        .map(|r| r.prompt.len() as u32 + r.max_new_tokens)
+        .sum();
+    println!(
+        "serving {} requests ({} total tokens) through real PJRT workers\n",
+        requests.len(),
+        total_tokens
+    );
+
+    // Two interleaved rounds per policy; keep each policy's best round.
+    // (PJRT compilation, allocator and thermal state drift over a
+    // process lifetime — interleaving removes the order bias.)
+    let mut best: std::collections::BTreeMap<String, bfio_serve::coordinator::ServeReport> =
+        Default::default();
+    for round in 0..2 {
+        for policy in ["fcfs", "bfio:16"] {
+            let cfg = CoordinatorConfig {
+                artifacts_dir: artifacts.clone(),
+                workers: 4,
+                policy: policy.to_string(),
+                max_steps: 100_000,
+                seed: 1,
+            };
+            let rep = serve(&cfg, &requests)?;
+            assert_eq!(rep.served.len(), requests.len(), "round {round}");
+            let slot = best.entry(rep.policy.clone()).or_insert_with(|| rep.clone());
+            if rep.wall_s < slot.wall_s {
+                *slot = rep;
+            }
+        }
+    }
+    for (_, rep) in best {
+        println!(
+            "{:<12} steps={:<5} wall={:>6.2}s  tok/s={:>7.1}  tpot={:>7.4}s  \
+             measured-idle={:>5.1}%  load-imbalance={:>7.1}  energy={:>7.1} J",
+            rep.policy,
+            rep.steps,
+            rep.wall_s,
+            rep.tokens_per_s,
+            rep.tpot_s,
+            rep.mean_idle_fraction * 100.0,
+            rep.avg_imbalance,
+            rep.energy_j,
+        );
+    }
+    println!("\nall layers composed: router -> PJRT -> Pallas-lowered HLO decode");
+    Ok(())
+}

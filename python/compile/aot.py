@@ -1,0 +1,211 @@
+"""AOT pipeline: lower TinyLM prefill/decode to HLO text for the Rust runtime.
+
+Run once at build time (``make artifacts``); Python never runs at serving
+time.  Interchange format is **HLO text**, NOT ``.serialize()``: jax >= 0.5
+emits HloModuleProto with 64-bit instruction ids which xla_extension 0.5.1
+rejects (``proto.id() <= INT_MAX``); the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Outputs (in --out-dir, default ../artifacts):
+  decode_b{B}_l{L}.hlo.txt    one decode step per KV-capacity variant
+  prefill_b{B}_t{T}_l{L}.hlo.txt
+  params.bin                  flat little-endian f32 params, param_specs order
+  golden.bin                  expected decode-step logits [B, vocab] f32
+  meta.json                   model config, ABI, artifact index, golden inputs
+
+KV-capacity variants: the Rust coordinator picks the smallest variant whose
+capacity covers a worker's maximal resident length, so heavier-loaded
+workers genuinely run a larger attention computation — the load-dependent
+``T_local^(g)`` of the paper, realized with static XLA shapes.
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from .model import ModelConfig, decode_step, init_params, param_specs, prefill
+
+DEFAULT_KV_VARIANTS = (64, 128, 256)
+DEFAULT_BATCH = 4
+DEFAULT_PREFILL_T = 16
+GOLDEN_SEED = 0
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_decode(cfg: ModelConfig, batch: int, kv_cap: int) -> str:
+    n_args = len(param_specs(cfg))
+    cache_shape = (cfg.n_layers, batch, kv_cap, cfg.n_heads, cfg.head_dim)
+
+    def fn(*args):
+        params = list(args[:n_args])
+        token_ids, positions, k_cache, v_cache = args[n_args:]
+        return decode_step(params, token_ids, positions, k_cache, v_cache, cfg)
+
+    example = [jax.ShapeDtypeStruct(s, jnp.float32) for _, s in param_specs(cfg)]
+    example += [
+        jax.ShapeDtypeStruct((batch,), jnp.int32),
+        jax.ShapeDtypeStruct((batch,), jnp.int32),
+        jax.ShapeDtypeStruct(cache_shape, jnp.float32),
+        jax.ShapeDtypeStruct(cache_shape, jnp.float32),
+    ]
+    return to_hlo_text(jax.jit(fn).lower(*example))
+
+
+def lower_prefill(cfg: ModelConfig, batch: int, t: int, kv_cap: int) -> str:
+    n_args = len(param_specs(cfg))
+
+    def fn(*args):
+        params = list(args[:n_args])
+        token_ids = args[n_args]
+        return prefill(params, token_ids, cfg, kv_cap)
+
+    example = [jax.ShapeDtypeStruct(s, jnp.float32) for _, s in param_specs(cfg)]
+    example += [jax.ShapeDtypeStruct((batch, t), jnp.int32)]
+    return to_hlo_text(jax.jit(fn).lower(*example))
+
+
+def golden_case(cfg: ModelConfig, params: List[jax.Array], batch: int,
+                t: int, kv_cap: int):
+    """Reference trajectory: prefill a prompt, then one decode step.
+
+    The Rust integration test replays exactly this through the compiled
+    artifacts and checks logits against golden.bin.
+    """
+    rng = np.random.RandomState(GOLDEN_SEED)
+    prompt = rng.randint(0, cfg.vocab, size=(batch, t)).astype(np.int32)
+    logits_p, k_cache, v_cache = prefill(params, jnp.asarray(prompt), cfg, kv_cap)
+    next_tokens = np.asarray(jnp.argmax(logits_p, axis=-1), dtype=np.int32)
+    positions = np.full((batch,), t, dtype=np.int32)
+    logits_d, _, _ = decode_step(
+        params, jnp.asarray(next_tokens), jnp.asarray(positions),
+        k_cache, v_cache, cfg,
+    )
+    return prompt, next_tokens, positions, np.asarray(logits_d, dtype=np.float32)
+
+
+def build(out_dir: str, cfg: ModelConfig, batch: int, t: int,
+          kv_variants=DEFAULT_KV_VARIANTS, force: bool = False) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    meta_path = os.path.join(out_dir, "meta.json")
+
+    # Incremental: skip if inputs unchanged (make-level check also exists).
+    # The fingerprint covers the config AND the compile-path sources, so
+    # editing a kernel or the model forces a rebuild.
+    src_dir = os.path.dirname(os.path.abspath(__file__))
+    code = hashlib.sha256()
+    for root, _, files in sorted(os.walk(src_dir)):
+        for fname in sorted(files):
+            if fname.endswith(".py"):
+                with open(os.path.join(root, fname), "rb") as f:
+                    code.update(f.read())
+    fingerprint = hashlib.sha256(
+        json.dumps([cfg.__dict__, batch, t, list(kv_variants),
+                    code.hexdigest()], sort_keys=True).encode()
+    ).hexdigest()
+    if not force and os.path.exists(meta_path):
+        try:
+            with open(meta_path) as f:
+                old = json.load(f)
+            if old.get("fingerprint") == fingerprint:
+                print(f"artifacts up-to-date in {out_dir} (fingerprint match)")
+                return old
+        except (json.JSONDecodeError, OSError):
+            pass
+
+    params = init_params(cfg)
+    flat = np.concatenate([np.asarray(p, dtype=np.float32).ravel() for p in params])
+    flat.tofile(os.path.join(out_dir, "params.bin"))
+
+    artifacts = []
+    for kv_cap in kv_variants:
+        name = f"decode_b{batch}_l{kv_cap}"
+        text = lower_decode(cfg, batch, kv_cap)
+        with open(os.path.join(out_dir, f"{name}.hlo.txt"), "w") as f:
+            f.write(text)
+        artifacts.append({"name": name, "kind": "decode", "batch": batch,
+                          "kv_capacity": kv_cap, "file": f"{name}.hlo.txt"})
+        print(f"wrote {name}.hlo.txt ({len(text)} chars)")
+
+        pname = f"prefill_b{batch}_t{t}_l{kv_cap}"
+        ptext = lower_prefill(cfg, batch, t, kv_cap)
+        with open(os.path.join(out_dir, f"{pname}.hlo.txt"), "w") as f:
+            f.write(ptext)
+        artifacts.append({"name": pname, "kind": "prefill", "batch": batch,
+                          "prompt_len": t, "kv_capacity": kv_cap,
+                          "file": f"{pname}.hlo.txt"})
+        print(f"wrote {pname}.hlo.txt ({len(ptext)} chars)")
+
+    prompt, next_tokens, positions, logits = golden_case(
+        cfg, params, batch, t, kv_variants[0])
+    logits.tofile(os.path.join(out_dir, "golden.bin"))
+
+    specs = param_specs(cfg)
+    offsets, off = [], 0
+    for _, shape in specs:
+        n = int(np.prod(shape))
+        offsets.append(off)
+        off += n
+
+    meta = {
+        "fingerprint": fingerprint,
+        "model": {
+            "vocab": cfg.vocab, "d_model": cfg.d_model,
+            "n_heads": cfg.n_heads, "head_dim": cfg.head_dim,
+            "n_layers": cfg.n_layers, "d_ff": cfg.d_ff,
+            "n_params": int(flat.size),
+        },
+        "params": [
+            {"name": name, "shape": list(shape), "offset": offsets[i]}
+            for i, (name, shape) in enumerate(specs)
+        ],
+        "artifacts": artifacts,
+        "golden": {
+            "kv_capacity": kv_variants[0],
+            "prompt": prompt.tolist(),
+            "next_tokens": next_tokens.tolist(),
+            "positions": positions.tolist(),
+            "logits_file": "golden.bin",
+            "logits_shape": [batch, cfg.vocab],
+            "rtol": 2e-4,
+            "atol": 2e-4,
+        },
+    }
+    with open(meta_path, "w") as f:
+        json.dump(meta, f, indent=1)
+    print(f"wrote meta.json, params.bin ({flat.size} f32), golden.bin")
+    return meta
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--batch", type=int, default=DEFAULT_BATCH)
+    ap.add_argument("--prefill-len", type=int, default=DEFAULT_PREFILL_T)
+    ap.add_argument("--kv-variants", type=int, nargs="+",
+                    default=list(DEFAULT_KV_VARIANTS))
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+    cfg = ModelConfig()
+    build(args.out_dir, cfg, args.batch, args.prefill_len,
+          tuple(args.kv_variants), force=args.force)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,137 @@
+"""L1 Pallas kernel: batched decode attention over a padded KV cache.
+
+This is the paper's decode-stage hot spot: at each decode step, worker g
+computes attention for its batch of requests; the local runtime
+``T_local^(g)`` is linear in the aggregate *resident* KV it must read
+(Section 1 of the paper).  One query token per sequence attends over that
+sequence's resident KV prefix.
+
+TPU adaptation (DESIGN.md section "Hardware adaptation"):
+  * the grid iterates over the batch; BlockSpec streams one sequence's
+    KV from HBM into VMEM per grid step (the TPU analogue of the GPU
+    threadblock tiling the paper's A100 testbed would use),
+  * inside the kernel the VMEM-resident KV is consumed in ``CHUNK``-sized
+    tiles with an online-softmax (flash-decoding) recurrence, so the
+    working set per iteration is MXU-friendly ``[CHUNK, H*D]`` tiles,
+  * contractions run through ``lax.dot_general`` with
+    ``preferred_element_type=float32`` so bf16 inputs accumulate in f32
+    on the MXU.
+
+The kernel MUST be lowered with ``interpret=True`` on this image: the CPU
+PJRT plugin cannot execute Mosaic custom-calls (see /opt/xla-example
+README).  Correctness is pinned against the pure-jnp oracle in ``ref.py``.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+# Finite stand-in for -inf: keeps the online-softmax recurrence NaN-free
+# when an entire chunk is masked out (exp(-1e30 - m) underflows to 0).
+_NEG_INF = -1.0e30
+
+
+def _attention_kernel(q_ref, k_ref, v_ref, len_ref, o_ref, *, chunk: int):
+    """Single-sequence decode attention with online softmax.
+
+    Block shapes (leading batch-block dim of 1 squeezed below):
+      q_ref: [1, H, D]   k_ref/v_ref: [1, L, H, D]   len_ref: [1]
+      o_ref: [1, H, D]
+    """
+    q = q_ref[0].astype(jnp.float32)  # [H, D]
+    h, d = q.shape
+    l_total = k_ref.shape[1]
+    length = len_ref[0]
+    scale = 1.0 / math.sqrt(d)
+
+    n_chunks = l_total // chunk
+
+    def body(i, carry):
+        m, s, acc = carry  # [H], [H], [H, D]
+        start = i * chunk
+        k = pl.load(k_ref, (0, pl.ds(start, chunk), slice(None), slice(None)))
+        v = pl.load(v_ref, (0, pl.ds(start, chunk), slice(None), slice(None)))
+        k = k.astype(jnp.float32)  # [C, H, D]
+        v = v.astype(jnp.float32)
+
+        # logits[h, c] = sum_d q[h, d] * k[c, h, d]  — MXU contraction.
+        logits = lax.dot_general(
+            q, k,
+            dimension_numbers=(((1,), (2,)), ((0,), (1,))),
+            preferred_element_type=jnp.float32,
+        ) * scale  # [H, C]
+
+        pos = start + lax.broadcasted_iota(jnp.int32, (1, chunk), 1)
+        mask = pos < length  # [1, C]
+        logits = jnp.where(mask, logits, _NEG_INF)
+
+        m_new = jnp.maximum(m, jnp.max(logits, axis=1))  # [H]
+        p = jnp.exp(logits - m_new[:, None])  # [H, C]
+        corr = jnp.exp(m - m_new)  # [H]
+        s_new = s * corr + jnp.sum(p, axis=1)
+        # acc[h, d] += sum_c p[h, c] * v[c, h, d]
+        pv = lax.dot_general(
+            p, v,
+            dimension_numbers=(((1,), (0,)), ((0,), (1,))),
+            preferred_element_type=jnp.float32,
+        )  # [H, D]
+        acc_new = acc * corr[:, None] + pv
+        return m_new, s_new, acc_new
+
+    m0 = jnp.full((h,), _NEG_INF, dtype=jnp.float32)
+    s0 = jnp.zeros((h,), dtype=jnp.float32)
+    acc0 = jnp.zeros((h, d), dtype=jnp.float32)
+    m, s, acc = lax.fori_loop(0, n_chunks, body, (m0, s0, acc0))
+
+    out = acc / s[:, None]
+    o_ref[0] = out.astype(o_ref.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, lengths, *, chunk: int | None = None):
+    """Batched decode attention via the Pallas kernel (interpret mode).
+
+    Args:
+      q: [B, H, D] query for the single new token of each sequence.
+      k_cache: [B, L, H, D] padded key cache.
+      v_cache: [B, L, H, D] padded value cache.
+      lengths: [B] int32, resident KV length per sequence (1 <= len <= L).
+      chunk: KV tile size; defaults to min(128, L); must divide L.
+
+    Returns:
+      [B, H, D] attention output, in q.dtype.
+    """
+    b, h, d = q.shape
+    l_total = k_cache.shape[1]
+    if chunk is None:
+        chunk = min(128, l_total)
+    if l_total % chunk != 0:
+        raise ValueError(f"chunk {chunk} must divide KV capacity {l_total}")
+    lengths = lengths.astype(jnp.int32)
+
+    kernel = functools.partial(_attention_kernel, chunk=chunk)
+    return pl.pallas_call(
+        kernel,
+        grid=(b,),
+        in_specs=[
+            pl.BlockSpec((1, h, d), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, l_total, h, d), lambda i: (i, 0, 0, 0)),
+            pl.BlockSpec((1, l_total, h, d), lambda i: (i, 0, 0, 0)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((1, h, d), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, d), q.dtype),
+        interpret=True,
+    )(q, k_cache, v_cache, lengths)
+
+
+def vmem_bytes(l_total: int, h: int, d: int, dtype_bytes: int = 2) -> int:
+    """Estimated VMEM footprint of one grid step (K+V blocks + q/o)."""
+    kv = 2 * l_total * h * d * dtype_bytes
+    qo = 2 * h * d * 4
+    return kv + qo

@@ -1,0 +1,59 @@
+"""Pure-jnp oracle for the Pallas decode-attention kernel.
+
+This is the CORE correctness signal for Layer 1: ``pytest python/tests``
+sweeps shapes/dtypes (hypothesis) and asserts the Pallas kernel matches
+this reference to tight tolerances.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+
+_NEG_INF = -1.0e30
+
+
+def decode_attention_ref(q, k_cache, v_cache, lengths):
+    """Masked single-token attention, straightforward softmax.
+
+    Args:
+      q: [B, H, D]; k_cache/v_cache: [B, L, H, D]; lengths: [B] int.
+    Returns:
+      [B, H, D] in q.dtype.
+    """
+    b, h, d = q.shape
+    l_total = k_cache.shape[1]
+    qf = q.astype(jnp.float32)
+    kf = k_cache.astype(jnp.float32)
+    vf = v_cache.astype(jnp.float32)
+
+    # logits[b, h, l] = q[b, h, :] . k[b, l, h, :]
+    logits = jnp.einsum("bhd,blhd->bhl", qf, kf) / math.sqrt(d)
+    mask = jnp.arange(l_total)[None, None, :] < lengths[:, None, None]
+    logits = jnp.where(mask, logits, _NEG_INF)
+    w = jnp.exp(logits - jnp.max(logits, axis=-1, keepdims=True))
+    w = w / jnp.sum(w, axis=-1, keepdims=True)
+    out = jnp.einsum("bhl,blhd->bhd", w, vf)
+    return out.astype(q.dtype)
+
+
+def causal_attention_ref(q, k, v):
+    """Full causal self-attention for the prefill path.
+
+    Args:
+      q, k, v: [B, T, H, D].
+    Returns:
+      [B, T, H, D] in q.dtype.
+    """
+    b, t, h, d = q.shape
+    qf = q.astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    logits = jnp.einsum("bqhd,bkhd->bhqk", qf, kf) / math.sqrt(d)
+    causal = jnp.tril(jnp.ones((t, t), dtype=bool))
+    logits = jnp.where(causal[None, None, :, :], logits, _NEG_INF)
+    w = jnp.exp(logits - jnp.max(logits, axis=-1, keepdims=True))
+    w = w / jnp.sum(w, axis=-1, keepdims=True)
+    out = jnp.einsum("bhqk,bkhd->bqhd", w, vf)
+    return out.astype(q.dtype)

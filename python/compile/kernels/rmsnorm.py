@@ -1,0 +1,67 @@
+"""L1 Pallas kernel: RMSNorm over the model dimension.
+
+Used by TinyLM at every layer boundary (two per block plus the final
+norm), so it sits on the decode hot path together with the attention
+kernel.  TPU shaping: the grid iterates over rows (batch elements or
+batch×time positions); each grid step streams one `[1, D]` row through
+VMEM, reduces in f32, and scales — a pure VPU kernel (no MXU), fused into
+the surrounding HLO at AOT time.
+
+interpret=True as required on this image (CPU PJRT, no Mosaic).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _rmsnorm_kernel(x_ref, w_ref, o_ref, *, eps: float):
+    x = x_ref[0].astype(jnp.float32)  # [D]
+    w = w_ref[...].astype(jnp.float32)  # [D]
+    var = jnp.mean(jnp.square(x))
+    y = x * jax.lax.rsqrt(var + eps) * w
+    o_ref[0] = y.astype(o_ref.dtype)
+
+
+def rms_norm(x, w, *, eps: float = 1e-5):
+    """RMSNorm along the last axis via Pallas.
+
+    Args:
+      x: [..., D] activations (any leading shape; flattened to rows).
+      w: [D] scale.
+    Returns:
+      same shape/dtype as x.
+    """
+    orig_shape = x.shape
+    d = orig_shape[-1]
+    if w.shape != (d,):
+        raise ValueError(f"scale shape {w.shape} != ({d},)")
+    rows = 1
+    for s in orig_shape[:-1]:
+        rows *= s
+    x2 = x.reshape(rows, d)
+
+    kernel = functools.partial(_rmsnorm_kernel, eps=eps)
+    out = pl.pallas_call(
+        kernel,
+        grid=(rows,),
+        in_specs=[
+            pl.BlockSpec((1, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, d), x.dtype),
+        interpret=True,
+    )(x2, w)
+    return out.reshape(orig_shape)
+
+
+def rms_norm_ref(x, w, *, eps: float = 1e-5):
+    """Pure-jnp oracle."""
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * w.astype(jnp.float32)).astype(x.dtype)

@@ -1,0 +1,190 @@
+"""L2: TinyLM — a small decoder-only transformer for the serving stack.
+
+The decode step (one token per active sequence, attention over the padded
+per-sequence KV cache via the L1 Pallas kernel) is the compute that runs on
+every simulated "GPU worker" in the Rust coordinator.  Both ``prefill`` and
+``decode_step`` are lowered to HLO text by ``aot.py`` and executed from Rust
+through PJRT; Python never runs at serving time.
+
+Parameter layout is a *flat list* (see ``param_specs``) so the Rust side can
+feed PJRT inputs positionally from ``params.bin`` without a pytree library.
+
+Weights are randomly initialized (deterministic seed).  A pretrained
+checkpoint is not available offline; for the paper's purposes the serving
+load is architecture-shaped (attention cost linear in resident KV), which
+random weights exercise identically — see DESIGN.md "Substitutions".
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.decode_attention import decode_attention
+from .kernels.ref import causal_attention_ref
+from .kernels.rmsnorm import rms_norm
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    vocab: int = 512
+    d_model: int = 128
+    n_heads: int = 4
+    head_dim: int = 32
+    n_layers: int = 2
+    d_ff: int = 256
+    eps: float = 1e-5
+
+    @property
+    def qkv_dim(self) -> int:
+        return self.n_heads * self.head_dim
+
+    def n_params(self) -> int:
+        return sum(int(math.prod(s)) for _, s in param_specs(self))
+
+
+def param_specs(cfg: ModelConfig) -> List[Tuple[str, Tuple[int, ...]]]:
+    """Ordered (name, shape) list — the ABI between aot.py and Rust."""
+    specs: List[Tuple[str, Tuple[int, ...]]] = [
+        ("embed", (cfg.vocab, cfg.d_model)),
+    ]
+    for i in range(cfg.n_layers):
+        specs += [
+            (f"l{i}.ln1", (cfg.d_model,)),
+            (f"l{i}.wq", (cfg.d_model, cfg.qkv_dim)),
+            (f"l{i}.wk", (cfg.d_model, cfg.qkv_dim)),
+            (f"l{i}.wv", (cfg.d_model, cfg.qkv_dim)),
+            (f"l{i}.wo", (cfg.qkv_dim, cfg.d_model)),
+            (f"l{i}.ln2", (cfg.d_model,)),
+            (f"l{i}.w_gate", (cfg.d_model, cfg.d_ff)),
+            (f"l{i}.w_up", (cfg.d_model, cfg.d_ff)),
+            (f"l{i}.w_down", (cfg.d_ff, cfg.d_model)),
+        ]
+    specs.append(("ln_f", (cfg.d_model,)))
+    return specs
+
+
+def init_params(cfg: ModelConfig, seed: int = 0) -> List[jax.Array]:
+    """Deterministic scaled-normal init, flat list in param_specs order."""
+    key = jax.random.PRNGKey(seed)
+    params: List[jax.Array] = []
+    for name, shape in param_specs(cfg):
+        key, sub = jax.random.split(key)
+        if name.endswith(("ln1", "ln2", "ln_f")):
+            params.append(jnp.ones(shape, jnp.float32))
+        else:
+            fan_in = shape[0]
+            std = 1.0 / math.sqrt(fan_in)
+            params.append(jax.random.normal(sub, shape, jnp.float32) * std)
+    return params
+
+
+def _rms_norm(x: jax.Array, w: jax.Array, eps: float) -> jax.Array:
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + eps) * w
+
+
+def _unpack(params: Sequence[jax.Array], cfg: ModelConfig):
+    """Group the flat list into per-layer tuples."""
+    embed = params[0]
+    layers = []
+    idx = 1
+    for _ in range(cfg.n_layers):
+        layers.append(tuple(params[idx:idx + 9]))
+        idx += 9
+    ln_f = params[idx]
+    return embed, layers, ln_f
+
+
+def decode_step(
+    params: Sequence[jax.Array],
+    token_ids: jax.Array,     # [B] int32
+    positions: jax.Array,     # [B] int32 — write index == current resident len
+    k_cache: jax.Array,       # [n_layers, B, L, H, Dh]
+    v_cache: jax.Array,       # [n_layers, B, L, H, Dh]
+    cfg: ModelConfig,
+):
+    """One barrier-synchronized decode step for a batch of B sequences.
+
+    Writes this step's K/V at ``positions`` and attends over
+    ``positions + 1`` resident entries (the new token included), exactly the
+    "+1 KV growth per decode step" workload model of the paper (Section 3).
+
+    Returns (logits [B, vocab], k_cache', v_cache').
+    """
+    embed, layers, ln_f = _unpack(params, cfg)
+    b = token_ids.shape[0]
+    h, dh = cfg.n_heads, cfg.head_dim
+    lengths = positions + 1
+
+    x = embed[token_ids]  # [B, D]
+    new_k = k_cache
+    new_v = v_cache
+    for li, (ln1, wq, wk, wv, wo, ln2, w_gate, w_up, w_down) in enumerate(layers):
+        y = rms_norm(x, ln1, eps=cfg.eps)  # L1 Pallas kernel
+        q = (y @ wq).reshape(b, h, dh)
+        k = (y @ wk).reshape(b, h, dh)
+        v = (y @ wv).reshape(b, h, dh)
+
+        # Scatter this step's K/V into the cache at per-sequence positions.
+        def write(cache_l, kv, pos):
+            return jax.vmap(
+                lambda c, t, p: jax.lax.dynamic_update_slice(c, t[None], (p, 0, 0))
+            )(cache_l, kv, pos)
+
+        k_l = write(new_k[li], k, positions)  # [B, L, H, Dh]
+        v_l = write(new_v[li], v, positions)
+        new_k = new_k.at[li].set(k_l)
+        new_v = new_v.at[li].set(v_l)
+
+        attn = decode_attention(q, k_l, v_l, lengths)  # [B, H, Dh] (Pallas)
+        x = x + attn.reshape(b, h * dh) @ wo
+
+        y = rms_norm(x, ln2, eps=cfg.eps)
+        x = x + (jax.nn.silu(y @ w_gate) * (y @ w_up)) @ w_down
+
+    x = rms_norm(x, ln_f, eps=cfg.eps)
+    logits = x @ embed.T  # tied head
+    return logits, new_k, new_v
+
+
+def prefill(
+    params: Sequence[jax.Array],
+    token_ids: jax.Array,   # [B, T] int32
+    cfg: ModelConfig,
+    kv_capacity: int,
+):
+    """Encode a length-T prompt per sequence; emit logits of the last token
+    and a KV cache padded to ``kv_capacity``.
+
+    Returns (logits [B, vocab], k_cache, v_cache) with caches
+    [n_layers, B, kv_capacity, H, Dh].
+    """
+    embed, layers, ln_f = _unpack(params, cfg)
+    b, t = token_ids.shape
+    h, dh = cfg.n_heads, cfg.head_dim
+    if t > kv_capacity:
+        raise ValueError(f"prompt length {t} exceeds KV capacity {kv_capacity}")
+
+    x = embed[token_ids]  # [B, T, D]
+    ks, vs = [], []
+    for (ln1, wq, wk, wv, wo, ln2, w_gate, w_up, w_down) in layers:
+        y = _rms_norm(x, ln1, cfg.eps)
+        q = (y @ wq).reshape(b, t, h, dh)
+        k = (y @ wk).reshape(b, t, h, dh)
+        v = (y @ wv).reshape(b, t, h, dh)
+        attn = causal_attention_ref(q, k, v)  # [B, T, H, Dh]
+        x = x + attn.reshape(b, t, h * dh) @ wo
+        y = _rms_norm(x, ln2, cfg.eps)
+        x = x + (jax.nn.silu(y @ w_gate) * (y @ w_up)) @ w_down
+        pad = ((0, 0), (0, kv_capacity - t), (0, 0), (0, 0))
+        ks.append(jnp.pad(k, pad))
+        vs.append(jnp.pad(v, pad))
+
+    x = _rms_norm(x, ln_f, cfg.eps)
+    logits = x[:, -1, :] @ embed.T
+    return logits, jnp.stack(ks), jnp.stack(vs)

@@ -1,0 +1,112 @@
+"""AOT pipeline tests: HLO text artifacts, ABI metadata, golden case."""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+from compile.aot import build, golden_case, lower_decode, lower_prefill
+from compile.model import ModelConfig, init_params, param_specs
+
+SMALL = ModelConfig(vocab=32, d_model=16, n_heads=2, head_dim=8,
+                    n_layers=1, d_ff=32)
+
+
+def _entry_params(text: str) -> int:
+    """Count parameter() instructions in the ENTRY computation only."""
+    in_entry = False
+    count = 0
+    for ln in text.splitlines():
+        if ln.startswith("ENTRY "):
+            in_entry = True
+            continue
+        if in_entry:
+            if ln.startswith("}"):
+                break
+            if " parameter(" in ln:
+                count += 1
+    return count
+
+
+class TestLowering:
+    def test_decode_hlo_text_wellformed(self):
+        text = lower_decode(SMALL, batch=2, kv_cap=16)
+        assert "ENTRY" in text and "HloModule" in text
+        # one tensor parameter per model param + 4 runtime inputs
+        assert _entry_params(text) == len(param_specs(SMALL)) + 4
+
+    def test_prefill_hlo_text_wellformed(self):
+        text = lower_prefill(SMALL, batch=2, t=4, kv_cap=16)
+        assert "ENTRY" in text
+        assert _entry_params(text) == len(param_specs(SMALL)) + 1
+
+    def test_hlo_is_text_not_proto(self):
+        """Guard the interchange-format decision (DESIGN.md): HLO text."""
+        text = lower_decode(SMALL, batch=1, kv_cap=16)
+        assert text.lstrip().startswith("HloModule")
+
+
+class TestBuild:
+    @pytest.fixture(scope="class")
+    def built(self, tmp_path_factory):
+        out = str(tmp_path_factory.mktemp("artifacts"))
+        meta = build(out, SMALL, batch=2, t=4, kv_variants=(16, 32))
+        return out, meta
+
+    def test_files_exist(self, built):
+        out, meta = built
+        for a in meta["artifacts"]:
+            assert os.path.exists(os.path.join(out, a["file"]))
+        assert os.path.exists(os.path.join(out, "params.bin"))
+        assert os.path.exists(os.path.join(out, "golden.bin"))
+        assert os.path.exists(os.path.join(out, "meta.json"))
+
+    def test_params_bin_size(self, built):
+        out, meta = built
+        n = meta["model"]["n_params"]
+        assert os.path.getsize(os.path.join(out, "params.bin")) == 4 * n
+        assert n == SMALL.n_params()
+
+    def test_param_offsets_contiguous(self, built):
+        _, meta = built
+        off = 0
+        for p in meta["params"]:
+            assert p["offset"] == off
+            off += int(np.prod(p["shape"]))
+        assert off == meta["model"]["n_params"]
+
+    def test_golden_shape(self, built):
+        out, meta = built
+        g = meta["golden"]
+        logits = np.fromfile(os.path.join(out, "golden.bin"), dtype=np.float32)
+        assert logits.size == int(np.prod(g["logits_shape"]))
+        assert np.isfinite(logits).all()
+
+    def test_incremental_skip(self, built, capsys):
+        out, _ = built
+        build(out, SMALL, batch=2, t=4, kv_variants=(16, 32))
+        assert "up-to-date" in capsys.readouterr().out
+
+    def test_force_rebuild_reproducible(self, built):
+        out, meta = built
+        before = np.fromfile(os.path.join(out, "golden.bin"), np.float32)
+        build(out, SMALL, batch=2, t=4, kv_variants=(16, 32), force=True)
+        after = np.fromfile(os.path.join(out, "golden.bin"), np.float32)
+        np.testing.assert_allclose(before, after, rtol=1e-6, atol=1e-6)
+
+
+class TestGolden:
+    def test_golden_case_deterministic(self):
+        params = init_params(SMALL)
+        a = golden_case(SMALL, params, batch=2, t=4, kv_cap=16)
+        b = golden_case(SMALL, params, batch=2, t=4, kv_cap=16)
+        np.testing.assert_array_equal(a[0], b[0])
+        np.testing.assert_allclose(a[3], b[3], rtol=1e-6, atol=1e-6)
+
+    def test_golden_capacity_invariance(self):
+        """Golden logits must not depend on the KV padding capacity."""
+        params = init_params(SMALL)
+        a = golden_case(SMALL, params, batch=2, t=4, kv_cap=16)
+        b = golden_case(SMALL, params, batch=2, t=4, kv_cap=32)
+        np.testing.assert_allclose(a[3], b[3], rtol=1e-4, atol=1e-4)

@@ -1,0 +1,148 @@
+"""L1 correctness: Pallas decode-attention kernel vs the pure-jnp oracle.
+
+This is the CORE correctness signal for the kernel layer — hypothesis
+sweeps shapes, dtypes, chunk sizes, and resident lengths.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.decode_attention import decode_attention, vmem_bytes
+from compile.kernels.ref import decode_attention_ref
+
+
+def _rand_case(seed, b, l, h, d, dtype):
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, 4)
+    q = jax.random.normal(ks[0], (b, h, d), jnp.float32).astype(dtype)
+    k = jax.random.normal(ks[1], (b, l, h, d), jnp.float32).astype(dtype)
+    v = jax.random.normal(ks[2], (b, l, h, d), jnp.float32).astype(dtype)
+    lengths = jax.random.randint(ks[3], (b,), 1, l + 1).astype(jnp.int32)
+    return q, k, v, lengths
+
+
+def _check(q, k, v, lengths, chunk=None, rtol=1e-5, atol=1e-5):
+    out = decode_attention(q, k, v, lengths, chunk=chunk)
+    ref = decode_attention_ref(q, k, v, lengths)
+    assert out.shape == ref.shape
+    assert out.dtype == q.dtype
+    np.testing.assert_allclose(
+        np.asarray(out, dtype=np.float32),
+        np.asarray(ref, dtype=np.float32),
+        rtol=rtol, atol=atol,
+    )
+
+
+class TestBasic:
+    def test_single_sequence_full_length(self):
+        q, k, v, _ = _rand_case(0, 1, 32, 2, 16, jnp.float32)
+        _check(q, k, v, jnp.array([32], jnp.int32))
+
+    def test_length_one(self):
+        """Only the first KV entry is resident -> output == v[:, 0]."""
+        q, k, v, _ = _rand_case(1, 2, 16, 2, 8, jnp.float32)
+        lengths = jnp.array([1, 1], jnp.int32)
+        out = decode_attention(q, k, v, lengths)
+        np.testing.assert_allclose(
+            np.asarray(out), np.asarray(v[:, 0]), rtol=1e-6, atol=1e-6)
+
+    def test_mixed_lengths(self):
+        q, k, v, _ = _rand_case(2, 4, 64, 4, 32, jnp.float32)
+        lengths = jnp.array([1, 13, 40, 64], jnp.int32)
+        _check(q, k, v, lengths)
+
+    def test_single_head(self):
+        q, k, v, lengths = _rand_case(3, 2, 32, 1, 8, jnp.float32)
+        _check(q, k, v, lengths)
+
+    def test_chunk_boundary_lengths(self):
+        """Resident length exactly at / around a chunk boundary."""
+        q, k, v, _ = _rand_case(4, 3, 64, 2, 16, jnp.float32)
+        for lens in ([16, 17, 15], [32, 33, 31], [64, 48, 1]):
+            _check(q, k, v, jnp.array(lens, jnp.int32), chunk=16)
+
+    def test_explicit_chunk_sizes(self):
+        q, k, v, lengths = _rand_case(5, 2, 48, 2, 16, jnp.float32)
+        for chunk in (1, 2, 4, 8, 16, 24, 48):
+            _check(q, k, v, lengths, chunk=chunk)
+
+    def test_chunk_must_divide(self):
+        q, k, v, lengths = _rand_case(6, 1, 48, 1, 8, jnp.float32)
+        with pytest.raises(ValueError):
+            decode_attention(q, k, v, lengths, chunk=13)
+
+    def test_bf16(self):
+        q, k, v, lengths = _rand_case(7, 3, 64, 4, 32, jnp.bfloat16)
+        _check(q, k, v, lengths, rtol=3e-2, atol=3e-2)
+
+    def test_mask_ignores_padding_garbage(self):
+        """Entries beyond `length` must not affect the result."""
+        q, k, v, _ = _rand_case(8, 2, 32, 2, 16, jnp.float32)
+        lengths = jnp.array([10, 20], jnp.int32)
+        out1 = decode_attention(q, k, v, lengths)
+        k2 = k.at[:, 25:].set(1e4)
+        v2 = v.at[:, 25:].set(-1e4)
+        out2 = decode_attention(q, k2, v2, lengths)
+        np.testing.assert_allclose(np.asarray(out1), np.asarray(out2))
+
+    def test_large_logit_stability(self):
+        """Online softmax must be stable for large-magnitude logits."""
+        q, k, v, lengths = _rand_case(9, 2, 32, 2, 16, jnp.float32)
+        q = q * 100.0
+        out = decode_attention(q, k, v, lengths, chunk=8)
+        assert np.isfinite(np.asarray(out)).all()
+        _check(q, k, v, lengths, chunk=8, rtol=1e-4, atol=1e-4)
+
+    def test_jit_compatible(self):
+        q, k, v, lengths = _rand_case(10, 2, 32, 2, 16, jnp.float32)
+        jitted = jax.jit(lambda *a: decode_attention(*a))
+        out = jitted(q, k, v, lengths)
+        ref = decode_attention_ref(q, k, v, lengths)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=1e-5, atol=1e-5)
+
+    def test_vmem_estimate_monotone(self):
+        assert vmem_bytes(256, 4, 32) > vmem_bytes(128, 4, 32)
+        # default config, bf16: well under the 16 MiB/core VMEM budget
+        assert vmem_bytes(2048, 4, 128, 2) < 16 * 2**20
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    b=st.integers(1, 4),
+    h=st.sampled_from([1, 2, 4]),
+    d=st.sampled_from([8, 16, 32, 64]),
+    l_total=st.sampled_from([8, 16, 32, 64, 128]),
+)
+def test_hypothesis_f32(seed, b, h, d, l_total):
+    q, k, v, lengths = _rand_case(seed, b, l_total, h, d, jnp.float32)
+    _check(q, k, v, lengths)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    b=st.integers(1, 3),
+    h=st.sampled_from([1, 4]),
+    d=st.sampled_from([16, 32]),
+    l_total=st.sampled_from([16, 64]),
+    chunk_div=st.sampled_from([1, 2, 4]),
+)
+def test_hypothesis_chunks(seed, b, h, d, l_total, chunk_div):
+    q, k, v, lengths = _rand_case(seed, b, l_total, h, d, jnp.float32)
+    _check(q, k, v, lengths, chunk=l_total // chunk_div)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    b=st.integers(1, 3),
+    l_total=st.sampled_from([16, 64]),
+)
+def test_hypothesis_bf16(seed, b, l_total):
+    q, k, v, lengths = _rand_case(seed, b, l_total, 2, 32, jnp.bfloat16)
+    _check(q, k, v, lengths, rtol=5e-2, atol=5e-2)

@@ -1,0 +1,144 @@
+"""L2 correctness: TinyLM decode/prefill semantics and shape contracts."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.model import (
+    ModelConfig, decode_step, init_params, param_specs, prefill,
+)
+
+CFG = ModelConfig(vocab=64, d_model=32, n_heads=2, head_dim=16,
+                  n_layers=2, d_ff=64)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return init_params(CFG, seed=0)
+
+
+def _prompt(b, t, seed=0):
+    rng = np.random.RandomState(seed)
+    return jnp.asarray(rng.randint(0, CFG.vocab, size=(b, t)), jnp.int32)
+
+
+class TestSpecs:
+    def test_param_count_matches_specs(self, params):
+        specs = param_specs(CFG)
+        assert len(params) == len(specs)
+        for p, (_, shape) in zip(params, specs):
+            assert p.shape == shape
+
+    def test_n_params(self):
+        total = sum(int(np.prod(s)) for _, s in param_specs(CFG))
+        assert CFG.n_params() == total
+
+    def test_ln_initialized_to_ones(self, params):
+        specs = param_specs(CFG)
+        for p, (name, _) in zip(params, specs):
+            if name.endswith(("ln1", "ln2", "ln_f")):
+                np.testing.assert_array_equal(np.asarray(p), 1.0)
+
+    def test_init_deterministic(self):
+        a = init_params(CFG, seed=0)
+        b = init_params(CFG, seed=0)
+        for x, y in zip(a, b):
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+class TestPrefill:
+    def test_shapes(self, params):
+        b, t, cap = 3, 8, 32
+        logits, k, v = prefill(params, _prompt(b, t), CFG, cap)
+        assert logits.shape == (b, CFG.vocab)
+        assert k.shape == (CFG.n_layers, b, cap, CFG.n_heads, CFG.head_dim)
+        assert v.shape == k.shape
+
+    def test_cache_zero_beyond_prompt(self, params):
+        b, t, cap = 2, 8, 32
+        _, k, v = prefill(params, _prompt(b, t), CFG, cap)
+        np.testing.assert_array_equal(np.asarray(k[:, :, t:]), 0.0)
+        np.testing.assert_array_equal(np.asarray(v[:, :, t:]), 0.0)
+
+    def test_capacity_validation(self, params):
+        with pytest.raises(ValueError):
+            prefill(params, _prompt(1, 64), CFG, 32)
+
+    def test_padding_invariance(self, params):
+        """Same prompt, different KV capacity -> identical logits."""
+        b, t = 2, 8
+        l32, _, _ = prefill(params, _prompt(b, t), CFG, 32)
+        l64, _, _ = prefill(params, _prompt(b, t), CFG, 64)
+        np.testing.assert_allclose(np.asarray(l32), np.asarray(l64),
+                                   rtol=1e-5, atol=1e-5)
+
+
+class TestDecode:
+    def test_shapes_and_cache_update(self, params):
+        b, t, cap = 2, 8, 32
+        logits_p, k, v = prefill(params, _prompt(b, t), CFG, cap)
+        tok = jnp.argmax(logits_p, axis=-1).astype(jnp.int32)
+        pos = jnp.full((b,), t, jnp.int32)
+        logits, k2, v2 = decode_step(params, tok, pos, k, v, CFG)
+        assert logits.shape == (b, CFG.vocab)
+        # new KV written exactly at position t, elsewhere unchanged
+        assert not np.allclose(np.asarray(k2[:, :, t]), 0.0)
+        np.testing.assert_array_equal(np.asarray(k2[:, :, t + 1:]), 0.0)
+        np.testing.assert_allclose(np.asarray(k2[:, :, :t]),
+                                   np.asarray(k[:, :, :t]))
+
+    def test_decode_matches_prefill_extension(self, params):
+        """prefill(T tokens) + decode(token T) must equal prefill(T+1)."""
+        b, t, cap = 2, 8, 32
+        prompt = _prompt(b, t + 1, seed=3)
+        logits_full, _, _ = prefill(params, prompt, CFG, cap)
+
+        _, k, v = prefill(params, prompt[:, :t], CFG, cap)
+        pos = jnp.full((b,), t, jnp.int32)
+        logits_dec, _, _ = decode_step(params, prompt[:, t], pos, k, v, CFG)
+        np.testing.assert_allclose(np.asarray(logits_dec),
+                                   np.asarray(logits_full),
+                                   rtol=2e-4, atol=2e-4)
+
+    def test_multi_step_decode_chain(self, params):
+        """Three chained decode steps equal one prefill of the full string."""
+        b, t, cap, steps = 1, 4, 32, 3
+        prompt = _prompt(b, t + steps, seed=7)
+        logits_full, _, _ = prefill(params, prompt, CFG, cap)
+
+        _, k, v = prefill(params, prompt[:, :t], CFG, cap)
+        logits = None
+        for s in range(steps):
+            pos = jnp.full((b,), t + s, jnp.int32)
+            logits, k, v = decode_step(params, prompt[:, t + s], pos, k, v, CFG)
+        np.testing.assert_allclose(np.asarray(logits), np.asarray(logits_full),
+                                   rtol=5e-4, atol=5e-4)
+
+    def test_batch_isolation(self, params):
+        """Changing one sequence must not change another's logits."""
+        b, t, cap = 2, 8, 32
+        p1 = _prompt(b, t, seed=1)
+        p2 = np.asarray(p1).copy()
+        p2[1] = (p2[1] + 7) % CFG.vocab
+        p2 = jnp.asarray(p2)
+
+        def run(p):
+            logits_p, k, v = prefill(params, p, CFG, cap)
+            tok = jnp.argmax(logits_p, axis=-1).astype(jnp.int32)
+            pos = jnp.full((b,), t, jnp.int32)
+            logits, _, _ = decode_step(params, tok, pos, k, v, CFG)
+            return logits
+
+        l1, l2 = run(p1), run(p2)
+        np.testing.assert_allclose(np.asarray(l1[0]), np.asarray(l2[0]),
+                                   rtol=1e-5, atol=1e-5)
+        assert not np.allclose(np.asarray(l1[1]), np.asarray(l2[1]))
+
+    def test_finite_logits(self, params):
+        b, t, cap = 4, 8, 64
+        logits_p, k, v = prefill(params, _prompt(b, t, seed=9), CFG, cap)
+        tok = jnp.argmax(logits_p, axis=-1).astype(jnp.int32)
+        pos = jnp.full((b,), t, jnp.int32)
+        logits, _, _ = decode_step(params, tok, pos, k, v, CFG)
+        assert np.isfinite(np.asarray(logits)).all()

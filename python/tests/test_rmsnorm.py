@@ -1,0 +1,95 @@
+"""L1 correctness: Pallas RMSNorm kernel vs the pure-jnp oracle."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.rmsnorm import rms_norm, rms_norm_ref
+
+
+def _case(seed, shape, dtype):
+    key = jax.random.PRNGKey(seed)
+    k1, k2 = jax.random.split(key)
+    x = jax.random.normal(k1, shape, jnp.float32).astype(dtype)
+    w = (1.0 + 0.1 * jax.random.normal(k2, shape[-1:], jnp.float32)).astype(dtype)
+    return x, w
+
+
+def _check(x, w, rtol=1e-5, atol=1e-5):
+    out = rms_norm(x, w)
+    ref = rms_norm_ref(x, w)
+    assert out.shape == x.shape
+    assert out.dtype == x.dtype
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32),
+        rtol=rtol, atol=atol,
+    )
+
+
+class TestBasic:
+    def test_2d(self):
+        x, w = _case(0, (4, 32), jnp.float32)
+        _check(x, w)
+
+    def test_3d_batch_time(self):
+        x, w = _case(1, (2, 8, 16), jnp.float32)
+        _check(x, w)
+
+    def test_single_row(self):
+        x, w = _case(2, (1, 64), jnp.float32)
+        _check(x, w)
+
+    def test_unit_scale_normalizes(self):
+        x, _ = _case(3, (8, 128), jnp.float32)
+        w = jnp.ones((128,), jnp.float32)
+        out = rms_norm(x, w)
+        rms = np.sqrt(np.mean(np.square(np.asarray(out)), axis=-1))
+        np.testing.assert_allclose(rms, 1.0, rtol=1e-4)
+
+    def test_bf16(self):
+        x, w = _case(4, (4, 32), jnp.bfloat16)
+        _check(x, w, rtol=2e-2, atol=2e-2)
+
+    def test_scale_shape_validated(self):
+        x, _ = _case(5, (4, 32), jnp.float32)
+        with pytest.raises(ValueError):
+            rms_norm(x, jnp.ones((16,), jnp.float32))
+
+    def test_jit_compatible(self):
+        x, w = _case(6, (4, 32), jnp.float32)
+        out = jax.jit(rms_norm)(x, w)
+        ref = rms_norm_ref(x, w)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=1e-5, atol=1e-5)
+
+    def test_matches_model_rmsnorm(self):
+        # The oracle must agree with the inline implementation in model.py.
+        from compile.model import _rms_norm
+        x, w = _case(7, (4, 32), jnp.float32)
+        a = rms_norm(x, w)
+        b = _rms_norm(x, w, 1e-5)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    rows=st.integers(1, 8),
+    d=st.sampled_from([8, 16, 32, 64, 128, 256]),
+)
+def test_hypothesis_f32(seed, rows, d):
+    x, w = _case(seed, (rows, d), jnp.float32)
+    _check(x, w)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    d=st.sampled_from([16, 64, 128]),
+)
+def test_hypothesis_bf16(seed, d):
+    x, w = _case(seed, (4, d), jnp.bfloat16)
+    _check(x, w, rtol=3e-2, atol=3e-2)

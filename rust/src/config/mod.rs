@@ -1,0 +1,192 @@
+//! Configuration system: simulation, power, and policy parameters with the
+//! paper's calibrated defaults, plus JSON load/save for experiment configs.
+
+use crate::util::json::{num, obj, s, Json};
+use crate::workload::Drift;
+
+/// Simulator configuration (Section 6.2 of the paper).
+#[derive(Clone, Debug)]
+pub struct SimConfig {
+    /// Number of data-parallel decode workers `G`.
+    pub g: usize,
+    /// Per-worker max concurrency (batch size) `B`.
+    pub b: usize,
+    /// Fixed per-step overhead `C` in seconds (paper: 9.775e-3, fitted by
+    /// least squares on real traces).
+    pub c_overhead: f64,
+    /// Per-token latency `t_ℓ` in seconds (paper: 1.005e-7).
+    pub t_token: f64,
+    /// Workload drift model `(δ_k)` (Definition 2); `Unit` = LLM decode.
+    pub drift: Drift,
+    /// Hard step cap (0 = run until the trace drains).
+    pub max_steps: u64,
+    /// Steps to exclude from steady-state metrics (ramp-up).
+    pub warmup_steps: u64,
+    /// RNG seed.
+    pub seed: u64,
+    /// Record per-step time series (loads of sampled workers, power).
+    pub record_series: bool,
+    /// How many workers to include in recorded load trajectories.
+    pub sample_workers: usize,
+}
+
+impl Default for SimConfig {
+    fn default() -> Self {
+        SimConfig {
+            g: 256,
+            b: 72,
+            c_overhead: 9.775e-3,
+            t_token: 1.005e-7,
+            drift: Drift::Unit,
+            max_steps: 0,
+            warmup_steps: 0,
+            seed: 0,
+            record_series: false,
+            sample_workers: 16,
+        }
+    }
+}
+
+impl SimConfig {
+    /// The paper's main experiment scale (Table 1 / Figs 7–9).
+    pub fn paper() -> Self {
+        SimConfig::default()
+    }
+
+    /// A small configuration for fast tests.
+    pub fn small() -> Self {
+        SimConfig { g: 4, b: 8, ..SimConfig::default() }
+    }
+
+    /// Total slot count `G·B`.
+    pub fn slots(&self) -> usize {
+        self.g * self.b
+    }
+
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("g", num(self.g as f64)),
+            ("b", num(self.b as f64)),
+            ("c_overhead", num(self.c_overhead)),
+            ("t_token", num(self.t_token)),
+            ("drift", s(&format!("{:?}", self.drift))),
+            ("max_steps", num(self.max_steps as f64)),
+            ("warmup_steps", num(self.warmup_steps as f64)),
+            ("seed", num(self.seed as f64)),
+        ])
+    }
+}
+
+/// GPU power model parameters (Section 5.2 / Appendix D, from [21]).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct PowerConfig {
+    /// Idle power draw, watts (A100: 100 W).
+    pub p_idle: f64,
+    /// Peak power draw, watts (A100: 400 W).
+    pub p_max: f64,
+    /// Utilization level at which power saturates (0.45).
+    pub mfu_sat: f64,
+    /// Sublinear exponent γ ∈ (0, 1) (0.7).
+    pub gamma: f64,
+}
+
+impl Default for PowerConfig {
+    fn default() -> Self {
+        PowerConfig { p_idle: 100.0, p_max: 400.0, mfu_sat: 0.45, gamma: 0.7 }
+    }
+}
+
+impl PowerConfig {
+    /// A100 defaults (same as `Default`); named for clarity at call sites.
+    pub fn a100() -> Self {
+        PowerConfig::default()
+    }
+
+    /// H100-like variant (used for ablations over hardware constants).
+    pub fn h100() -> Self {
+        PowerConfig { p_idle: 120.0, p_max: 700.0, mfu_sat: 0.5, gamma: 0.7 }
+    }
+}
+
+/// BF-IO policy parameters.
+#[derive(Clone, Debug)]
+pub struct BfIoConfig {
+    /// Lookahead window length `H` (0 = myopic, theoretically analyzed).
+    pub horizon: usize,
+    /// Candidate pool width as a multiple of `U(k)`.  `1` (default)
+    /// admits exactly the oldest `U(k)` waiting requests (FIFO-fair,
+    /// starvation-free) and lets the integer optimization choose only the
+    /// *placement* — the setting of the paper's Lemma 2 analysis.
+    /// Larger values let the solver also choose *which* requests to admit
+    /// from a wider FIFO prefix (the general (IO) form), trading fairness
+    /// for objective value.
+    pub pool_factor: usize,
+    /// Absolute cap on the candidate pool (0 = uncapped).
+    pub pool_cap: usize,
+    /// Local-search sweep limit.
+    pub max_sweeps: usize,
+    /// Use the exact branch-and-bound solver when the instance is tiny.
+    pub exact_below: usize,
+    /// Mean-field refill in the lookahead trajectories: slots predicted
+    /// to complete within the window are refilled at the waiting pool's
+    /// mean prefill (the overloaded-regime reality).  Disable to get the
+    /// naive "completed slots go empty" prediction.
+    pub refill_model: bool,
+}
+
+impl Default for BfIoConfig {
+    fn default() -> Self {
+        BfIoConfig {
+            horizon: 0,
+            pool_factor: 1,
+            pool_cap: 4096,
+            max_sweeps: 8,
+            exact_below: 0,
+            refill_model: true,
+        }
+    }
+}
+
+impl BfIoConfig {
+    pub fn with_horizon(h: usize) -> Self {
+        BfIoConfig { horizon: h, ..Default::default() }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_defaults_match_section_6() {
+        let c = SimConfig::paper();
+        assert_eq!(c.g, 256);
+        assert_eq!(c.b, 72);
+        assert!((c.c_overhead - 9.775e-3).abs() < 1e-12);
+        assert!((c.t_token - 1.005e-7).abs() < 1e-15);
+        assert_eq!(c.slots(), 256 * 72);
+    }
+
+    #[test]
+    fn power_defaults_match_appendix_d() {
+        let p = PowerConfig::a100();
+        assert_eq!(p.p_idle, 100.0);
+        assert_eq!(p.p_max, 400.0);
+        assert_eq!(p.mfu_sat, 0.45);
+        assert_eq!(p.gamma, 0.7);
+    }
+
+    #[test]
+    fn config_to_json_parses() {
+        let c = SimConfig::small();
+        let j = c.to_json().to_string();
+        let v = crate::util::json::Json::parse(&j).unwrap();
+        assert_eq!(v.get("g").unwrap().as_usize().unwrap(), 4);
+    }
+
+    #[test]
+    fn bfio_config_horizon() {
+        assert_eq!(BfIoConfig::with_horizon(40).horizon, 40);
+        assert_eq!(BfIoConfig::default().horizon, 0);
+    }
+}

@@ -1,0 +1,297 @@
+//! GPU power & energy model (Section 5.2, Appendix D of the paper).
+//!
+//! Instantaneous power is sublinear in utilization:
+//! `P(mfu) = P_idle + (P_max − P_idle)·(mfu/mfu_sat)^γ`, γ ∈ (0,1).
+//! During the synchronized attention phase of step `k`, worker `g` is
+//! useful for `κ·L_g(k)` seconds and waits `κ·(L_max − L_g)` seconds, so
+//! its utilization fraction is `u_g = L_g / L_max = mfu_g / mfu_sat`
+//! (Eq. 8–9).  Step energy is `τ_k Σ_g P(u_g)` with `τ_k = t_ℓ·L_max`.
+//!
+//! [`decompose`] implements Theorem 4's exact identity
+//! `E = κ·P_max·W + κ·P_idle·ImbTot + concavity-correction`
+//! with the sandwich `0 ≤ correction ≤ κ·D_γ·ImbTot`, which the energy
+//! theorems (and our property tests) are built on.
+
+use crate::config::PowerConfig;
+
+/// Model FLOPs Utilization for the runtime reporting path (Appendix D):
+/// `mfu ≈ T·6·N_params / FLOPs_peak` for throughput `T` tokens/s.
+pub fn mfu(tokens_per_sec: f64, n_params: f64, flops_peak: f64) -> f64 {
+    (tokens_per_sec * 6.0 * n_params / flops_peak).max(0.0)
+}
+
+/// A100 peak FP16/BF16 throughput used by the paper's MFU computation.
+pub const A100_PEAK_FLOPS: f64 = 312e12;
+
+impl PowerConfig {
+    /// Instantaneous power at utilization fraction `u = mfu/mfu_sat ∈ [0,1]`.
+    pub fn power_at_util(&self, u: f64) -> f64 {
+        let u = u.clamp(0.0, 1.0);
+        self.p_idle + (self.p_max - self.p_idle) * u.powf(self.gamma)
+    }
+
+    /// Instantaneous power at absolute MFU (clips at saturation).
+    pub fn power_at_mfu(&self, mfu: f64) -> f64 {
+        self.power_at_util(mfu / self.mfu_sat)
+    }
+
+    /// Theorem 4's constants `C_γ = (1−γ)P_max + γP_idle` and
+    /// `D_γ = (1−γ)(P_max − P_idle)`.
+    pub fn c_gamma(&self) -> f64 {
+        (1.0 - self.gamma) * self.p_max + self.gamma * self.p_idle
+    }
+
+    pub fn d_gamma(&self) -> f64 {
+        (1.0 - self.gamma) * (self.p_max - self.p_idle)
+    }
+
+    /// Corollary 1's asymptotic energy-saving fraction
+    /// `P_idle / ((1−γ)P_max + γP_idle)` (≈ 52.6 % for A100 constants).
+    pub fn asymptotic_saving(&self) -> f64 {
+        self.p_idle / self.c_gamma()
+    }
+}
+
+/// Per-step synchronized-phase energy accounting.
+#[derive(Clone, Debug, Default)]
+pub struct EnergyAccumulator {
+    /// Total synchronized-phase energy, joules.
+    pub sync_energy_j: f64,
+    /// Energy attributable to the fixed per-step overhead `C` (all
+    /// workers at idle power), joules.
+    pub overhead_energy_j: f64,
+    /// Σ_k τ_k — synchronized-phase makespan, seconds.
+    pub sync_time_s: f64,
+    /// Policy-independent total workload W(I) processed so far.
+    pub total_workload: f64,
+    /// Cumulative imbalance ImbTot (Eq. 12).
+    pub imb_tot: f64,
+    steps: u64,
+}
+
+impl EnergyAccumulator {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Account one decode step given post-admission loads.
+    ///
+    /// Returns the step's average per-GPU power (W) during the
+    /// synchronized phase, for the Fig. 8 power time series.
+    pub fn step(
+        &mut self,
+        loads: &[f64],
+        t_token: f64,
+        c_overhead: f64,
+        power: &PowerConfig,
+    ) -> f64 {
+        let g = loads.len();
+        assert!(g > 0);
+        let l_max = loads.iter().cloned().fold(0.0, f64::max);
+        self.steps += 1;
+        self.overhead_energy_j += c_overhead * g as f64 * power.p_idle;
+
+        if l_max <= 0.0 {
+            return power.p_idle;
+        }
+        let tau = t_token * l_max;
+        let mut step_power = 0.0;
+        let mut sum_loads = 0.0;
+        for &l in loads {
+            let u = l / l_max;
+            step_power += power.power_at_util(u);
+            sum_loads += l;
+        }
+        self.sync_energy_j += tau * step_power;
+        self.sync_time_s += tau;
+        self.total_workload += sum_loads;
+        self.imb_tot += g as f64 * l_max - sum_loads;
+        step_power / g as f64
+    }
+
+    /// Total energy including the fixed-overhead phase.
+    pub fn total_energy_j(&self) -> f64 {
+        self.sync_energy_j + self.overhead_energy_j
+    }
+
+    /// Normalized imbalance level η_sum = ImbTot / W (Eq. 13).
+    pub fn eta_sum(&self) -> f64 {
+        if self.total_workload > 0.0 {
+            self.imb_tot / self.total_workload
+        } else {
+            0.0
+        }
+    }
+}
+
+/// Theorem 4's exact decomposition of synchronized-phase energy for a
+/// single step (summable across steps).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct EnergyDecomposition {
+    /// `κ·P_max·W` — policy-independent useful-work term.
+    pub useful: f64,
+    /// `κ·P_idle·Imb` — idle-at-barrier term.
+    pub idle: f64,
+    /// Nonnegative concavity correction, ≤ `κ·D_γ·Imb`.
+    pub correction: f64,
+}
+
+/// Decompose one step's synchronized-phase energy (Eq. C47).
+pub fn decompose(loads: &[f64], t_token: f64, power: &PowerConfig) -> EnergyDecomposition {
+    let g = loads.len() as f64;
+    let l_max = loads.iter().cloned().fold(0.0, f64::max);
+    if l_max <= 0.0 {
+        return EnergyDecomposition { useful: 0.0, idle: 0.0, correction: 0.0 };
+    }
+    let tau = t_token * l_max;
+    let w: f64 = loads.iter().sum();
+    let imb = g * l_max - w;
+    let mut correction = 0.0;
+    for &l in loads {
+        let u: f64 = l / l_max;
+        correction +=
+            tau * (power.p_max - power.p_idle) * (u.powf(power.gamma) - u);
+    }
+    EnergyDecomposition {
+        useful: t_token * power.p_max * w,
+        idle: t_token * power.p_idle * imb,
+        correction,
+    }
+}
+
+/// Theorem 4's guaranteed energy-saving lower bound (Eq. 16) given the
+/// baseline's normalized imbalance `eta_sum` and an imbalance-improvement
+/// factor `alpha > 1`.
+pub fn energy_saving_lower_bound(power: &PowerConfig, eta_sum: f64, alpha: f64) -> f64 {
+    assert!(alpha > 0.0);
+    let numer = power.p_idle * (1.0 - 1.0 / alpha) - power.d_gamma() / alpha;
+    numer / (power.p_max / eta_sum.max(1e-300) + power.c_gamma())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn a100() -> PowerConfig {
+        PowerConfig::a100()
+    }
+
+    #[test]
+    fn power_endpoints() {
+        let p = a100();
+        assert!((p.power_at_util(0.0) - 100.0).abs() < 1e-9);
+        assert!((p.power_at_util(1.0) - 400.0).abs() < 1e-9);
+        // clipping
+        assert!((p.power_at_util(2.0) - 400.0).abs() < 1e-9);
+        assert!((p.power_at_mfu(0.45) - 400.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn power_sublinear_concave() {
+        let p = a100();
+        // P(u) above the chord between endpoints (concavity).
+        for u in [0.1, 0.3, 0.5, 0.7, 0.9] {
+            let chord = 100.0 + 300.0 * u;
+            assert!(p.power_at_util(u) > chord, "u={u}");
+        }
+    }
+
+    #[test]
+    fn remark_2_constant() {
+        // 100 / (0.3·400 + 0.7·100) = 100/190 ≈ 52.63 %.
+        let p = a100();
+        assert!((p.c_gamma() - 190.0).abs() < 1e-9);
+        assert!((p.asymptotic_saving() - 100.0 / 190.0).abs() < 1e-12);
+        assert!(p.asymptotic_saving() > 0.52);
+    }
+
+    #[test]
+    fn mfu_formula() {
+        // Appendix D: mfu ≈ T·6·N / peak.
+        let m = mfu(1000.0, 7e9, A100_PEAK_FLOPS);
+        assert!((m - 1000.0 * 6.0 * 7e9 / 312e12).abs() < 1e-12);
+    }
+
+    #[test]
+    fn balanced_loads_no_imbalance_energy() {
+        let p = a100();
+        let loads = vec![100.0; 8];
+        let d = decompose(&loads, 1e-7, &p);
+        assert!(d.idle.abs() < 1e-12);
+        assert!(d.correction.abs() < 1e-9);
+        assert!(d.useful > 0.0);
+    }
+
+    #[test]
+    fn decomposition_is_exact() {
+        // useful + idle + correction == direct step energy.
+        let p = a100();
+        let loads = vec![10.0, 250.0, 90.0, 400.0, 0.0];
+        let t_token = 1.005e-7;
+        let d = decompose(&loads, t_token, &p);
+        let mut acc = EnergyAccumulator::new();
+        acc.step(&loads, t_token, 0.0, &p);
+        let direct = acc.sync_energy_j;
+        assert!(
+            (d.useful + d.idle + d.correction - direct).abs() < 1e-9 * direct,
+            "decomposition mismatch: {} vs {}",
+            d.useful + d.idle + d.correction,
+            direct
+        );
+    }
+
+    #[test]
+    fn correction_sandwich_bounds() {
+        // 0 <= correction <= κ·D_γ·Imb (Eq. C48).
+        let p = a100();
+        let t_token = 1.005e-7;
+        let loads = vec![5.0, 100.0, 77.0, 31.0];
+        let d = decompose(&loads, t_token, &p);
+        let l_max: f64 = 100.0;
+        let imb = 4.0 * l_max - loads.iter().sum::<f64>();
+        assert!(d.correction >= 0.0);
+        assert!(d.correction <= t_token * p.d_gamma() * imb + 1e-12);
+    }
+
+    #[test]
+    fn accumulator_tracks_workload_and_imbalance() {
+        let p = a100();
+        let mut acc = EnergyAccumulator::new();
+        acc.step(&[10.0, 20.0], 1e-7, 1e-3, &p);
+        acc.step(&[30.0, 30.0], 1e-7, 1e-3, &p);
+        assert!((acc.total_workload - 90.0).abs() < 1e-12);
+        assert!((acc.imb_tot - 10.0).abs() < 1e-12);
+        assert!((acc.eta_sum() - 10.0 / 90.0).abs() < 1e-12);
+        // overhead: 2 steps × 2 gpus × 100 W × 1e-3 s
+        assert!((acc.overhead_energy_j - 0.4).abs() < 1e-12);
+    }
+
+    #[test]
+    fn zero_load_step_idles() {
+        let p = a100();
+        let mut acc = EnergyAccumulator::new();
+        let avg = acc.step(&[0.0, 0.0], 1e-7, 1e-3, &p);
+        assert_eq!(avg, 100.0);
+        assert_eq!(acc.sync_energy_j, 0.0);
+    }
+
+    #[test]
+    fn saving_bound_positive_for_large_alpha() {
+        let p = a100();
+        // With η_sum ~ 0.4 (the paper's 40% idle) and α -> ∞, the bound
+        // must be positive and below the Corollary-1 limit.
+        let b = energy_saving_lower_bound(&p, 0.4, 1e9);
+        assert!(b > 0.0);
+        assert!(b < p.asymptotic_saving());
+        // And it increases in α.
+        assert!(b > energy_saving_lower_bound(&p, 0.4, 10.0));
+    }
+
+    #[test]
+    fn saving_bound_corollary_limit() {
+        // As η_sum -> ∞ and α -> ∞, bound -> P_idle/C_γ (Corollary 1).
+        let p = a100();
+        let b = energy_saving_lower_bound(&p, 1e12, 1e12);
+        assert!((b - p.asymptotic_saving()).abs() < 1e-6);
+    }
+}

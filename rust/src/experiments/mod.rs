@@ -1,0 +1,585 @@
+//! Experiment drivers: one function per paper table / figure.
+//!
+//! Each driver runs the simulation(s), prints the paper-style rows, and
+//! writes CSV series under `results/` so the exact numbers are
+//! regenerable.  See DESIGN.md §4 for the experiment index.  Paper-scale
+//! parameters (G=256, B=72) are reached with `--full`; defaults are
+//! scaled down so every experiment completes in seconds.
+
+pub mod scaling;
+
+use std::path::Path;
+
+use crate::config::{BfIoConfig, SimConfig};
+use crate::metrics::Report;
+use crate::policies::bfio::BfIo;
+use crate::policies::{by_name, Policy};
+use crate::report::{sparkline, write_csv};
+use crate::sim::{SimResult, Simulator};
+use crate::util::rng::Rng;
+use crate::util::stats;
+use crate::workload::adversarial::{industrial_like, overloaded_trace};
+use crate::workload::longbench::LongBenchLike;
+use crate::workload::{Drift, Request};
+
+/// Shared experiment scale knobs.
+#[derive(Clone, Debug)]
+pub struct ExpScale {
+    pub g: usize,
+    pub b: usize,
+    pub steps: u64,
+    pub seed: u64,
+    /// Divide LongBench-like prefill lengths by this factor to keep
+    /// default runs fast; 1 at paper scale.
+    pub out_dir: String,
+}
+
+impl ExpScale {
+    pub fn quick() -> ExpScale {
+        ExpScale { g: 64, b: 24, steps: 600, seed: 7, out_dir: "results".into() }
+    }
+
+    pub fn full() -> ExpScale {
+        ExpScale { g: 256, b: 72, steps: 2000, seed: 7, out_dir: "results".into() }
+    }
+
+    pub fn sim_config(&self) -> SimConfig {
+        SimConfig {
+            g: self.g,
+            b: self.b,
+            max_steps: self.steps,
+            warmup_steps: self.steps / 5,
+            seed: self.seed,
+            ..SimConfig::default()
+        }
+    }
+
+    pub fn out(&self, name: &str) -> std::path::PathBuf {
+        Path::new(&self.out_dir).join(name)
+    }
+}
+
+/// Build the LongBench-like overloaded trace shared by Table 1 / Figs 4-9.
+pub fn longbench_trace(scale: &ExpScale) -> Vec<Request> {
+    let sampler = LongBenchLike::paper();
+    let mut rng = Rng::new(scale.seed);
+    overloaded_trace(&sampler, scale.g, scale.b, scale.steps, 3.0, &mut rng)
+}
+
+/// Run one policy over a trace with this scale's config.
+pub fn run_policy(
+    scale: &ExpScale,
+    trace: &[Request],
+    policy: &mut dyn Policy,
+    record_series: bool,
+) -> SimResult {
+    let mut cfg = scale.sim_config();
+    cfg.record_series = record_series;
+    Simulator::new(cfg).run(trace, policy)
+}
+
+// ---------------------------------------------------------------------
+// Table 1 (+ Fig 4 / Fig 9 come from the same sweep)
+// ---------------------------------------------------------------------
+
+/// The paper's policy lineup for Table 1.
+pub fn table1_policies() -> Vec<Box<dyn Policy>> {
+    let mut v: Vec<Box<dyn Policy>> = vec![
+        by_name("fcfs").unwrap(),
+        by_name("jsq").unwrap(),
+    ];
+    for h in [0usize, 20, 40, 60, 80, 100] {
+        v.push(Box::new(BfIo::new(BfIoConfig::with_horizon(h))));
+    }
+    v
+}
+
+/// Table 1: performance comparison on the LongBench-like workload.
+pub fn table1(scale: &ExpScale) -> Vec<(String, Report)> {
+    let trace = longbench_trace(scale);
+    let mut rows = Vec::new();
+    println!("{}", Report::table_header());
+    for mut p in table1_policies() {
+        let res = run_policy(scale, &trace, p.as_mut(), false);
+        println!("{}", res.report.table_row(&res.policy));
+        rows.push((res.policy.clone(), res.report));
+    }
+    let csv: Vec<Vec<String>> = rows
+        .iter()
+        .map(|(name, r)| {
+            vec![
+                name.clone(),
+                format!("{:.6e}", r.avg_imbalance),
+                format!("{:.3}", r.throughput_tps),
+                format!("{:.4}", r.tpot_s),
+                format!("{:.4}", r.energy_mj()),
+                format!("{:.4}", r.mean_idle_fraction),
+            ]
+        })
+        .collect();
+    let _ = write_csv(
+        &scale.out("table1.csv"),
+        &["policy", "avg_imbalance", "throughput_tps", "tpot_s", "energy_mj", "idle_frac"],
+        &csv,
+    );
+    rows
+}
+
+/// Fig 9 / Fig 4: metric-vs-horizon curves, extracted from the BF-IO rows.
+pub fn fig9(rows: &[(String, Report)], scale: &ExpScale) {
+    let mut csv = Vec::new();
+    println!("\nFig 9 — effect of lookahead horizon H:");
+    println!("{:>4} {:>14} {:>12} {:>10} {:>10}", "H", "imbalance", "tok/s", "tpot", "MJ");
+    for (name, r) in rows {
+        if let Some(h) = name.strip_prefix("BF-IO(H=").and_then(|s| {
+            s.trim_end_matches(')').parse::<usize>().ok()
+        }) {
+            println!(
+                "{:>4} {:>14.4e} {:>12.1} {:>10.3} {:>10.2}",
+                h, r.avg_imbalance, r.throughput_tps, r.tpot_s, r.energy_mj()
+            );
+            csv.push(vec![
+                h.to_string(),
+                format!("{:.6e}", r.avg_imbalance),
+                format!("{:.3}", r.throughput_tps),
+                format!("{:.4}", r.tpot_s),
+                format!("{:.4}", r.energy_mj()),
+            ]);
+        }
+    }
+    let _ = write_csv(
+        &scale.out("fig9_horizon.csv"),
+        &["h", "avg_imbalance", "throughput_tps", "tpot_s", "energy_mj"],
+        &csv,
+    );
+}
+
+// ---------------------------------------------------------------------
+// Fig 1 / Fig 2: industrial-trace idle time and energy
+// ---------------------------------------------------------------------
+
+/// Fig 1: workload imbalance and per-step idle time under the default
+/// (FCFS) policy on the 32-GPU industrial-like trace.
+pub fn fig1(scale: &ExpScale) -> Report {
+    let trace = industrial_like(500, scale.seed);
+    let cfg = SimConfig {
+        g: 32,
+        b: 72,
+        max_steps: 500,
+        warmup_steps: 64,
+        record_series: true,
+        sample_workers: 32,
+        seed: scale.seed,
+        ..SimConfig::default()
+    };
+    let res = Simulator::new(cfg).run(&trace, &mut *by_name("fcfs").unwrap());
+    let r = &res.report;
+    let s = r.series.as_ref().unwrap();
+    println!("Fig 1 — barrier idle on industrial-like trace (G=32, FCFS):");
+    println!("  mean idle fraction  : {:.1}%", r.mean_idle_fraction * 100.0);
+    println!("  median idle fraction: {:.1}%", stats::median(&s.idle) * 100.0);
+    println!("  idle over time      : {}", sparkline(&s.idle, 60));
+    println!("  max load over time  : {}", sparkline(&s.max_load, 60));
+    let rows: Vec<Vec<String>> = (0..s.time.len())
+        .map(|i| {
+            vec![
+                format!("{:.4}", s.time[i]),
+                format!("{:.1}", s.max_load[i]),
+                format!("{:.1}", s.mean_load[i]),
+                format!("{:.5}", s.idle[i]),
+            ]
+        })
+        .collect();
+    let _ = write_csv(
+        &scale.out("fig1_idle.csv"),
+        &["t", "max_load", "mean_load", "idle_frac"],
+        &rows,
+    );
+    res.report
+}
+
+/// Fig 2: instantaneous power and total energy, FCFS vs BF-IO(H=40), on
+/// the industrial-like trace; plus the energy-reduction-vs-G sweep.
+pub fn fig2(scale: &ExpScale) {
+    let trace = industrial_like(500, scale.seed);
+    let mk_cfg = |g: usize| SimConfig {
+        g,
+        b: 72,
+        max_steps: 500,
+        warmup_steps: 64,
+        record_series: true,
+        sample_workers: 0,
+        seed: scale.seed,
+        ..SimConfig::default()
+    };
+    let f = Simulator::new(mk_cfg(32)).run(&trace, &mut *by_name("fcfs").unwrap());
+    let b = Simulator::new(mk_cfg(32)).run(&trace, &mut BfIo::with_horizon(40));
+    let fe = f.report.total_energy_j / 1e6;
+    let be = b.report.total_energy_j / 1e6;
+    println!("Fig 2 — energy, FCFS vs BF-IO (G=32):");
+    println!("  FCFS  : {:.2} MJ   power {}", fe,
+             sparkline(&f.report.series.as_ref().unwrap().power_w, 50));
+    println!("  BF-IO : {:.2} MJ   power {}", be,
+             sparkline(&b.report.series.as_ref().unwrap().power_w, 50));
+    println!("  reduction: {:.1}%", (1.0 - be / fe) * 100.0);
+
+    let fs = f.report.series.as_ref().unwrap();
+    let bs = b.report.series.as_ref().unwrap();
+    let n = fs.time.len().min(bs.time.len());
+    let rows: Vec<Vec<String>> = (0..n)
+        .map(|i| {
+            vec![
+                format!("{:.4}", fs.time[i]),
+                format!("{:.1}", fs.power_w[i]),
+                format!("{:.4}", bs.time[i]),
+                format!("{:.1}", bs.power_w[i]),
+            ]
+        })
+        .collect();
+    let _ = write_csv(
+        &scale.out("fig2_power.csv"),
+        &["t_fcfs", "p_fcfs_w", "t_bfio", "p_bfio_w"],
+        &rows,
+    );
+}
+
+// ---------------------------------------------------------------------
+// Fig 5 / Fig 6: workload distributions
+// ---------------------------------------------------------------------
+
+/// Fig 6: prefill and decode length histograms of the LongBench-like
+/// sampler (and Fig 5's geometric decode shape).
+pub fn fig6(scale: &ExpScale) {
+    use crate::util::stats::Histogram;
+    let sampler = LongBenchLike::paper();
+    let mut rng = Rng::new(scale.seed);
+    let n = 100_000;
+    let mut pre = Histogram::new(0.0, 33_000.0, 66);
+    let mut dec = Histogram::new(0.0, 1056.0, 66);
+    let mut decs = Vec::with_capacity(n);
+    for _ in 0..n {
+        let (s, o) = crate::workload::LengthSampler::sample(&sampler, &mut rng);
+        pre.add(s);
+        dec.add(o as f64);
+        decs.push(o as f64);
+    }
+    println!("Fig 6 — LongBench-like length distributions ({n} samples):");
+    let pc: Vec<f64> = pre.bins.iter().map(|&c| c as f64).collect();
+    let dc: Vec<f64> = dec.bins.iter().map(|&c| c as f64).collect();
+    println!("  prefill: {}", sparkline(&pc, 66));
+    println!("  decode : {}", sparkline(&dc, 66));
+    println!(
+        "  decode mean {:.0}, median {:.0} (right-skewed, geometric-dominated — Fig 5 shape)",
+        stats::mean(&decs),
+        stats::median(&decs)
+    );
+    let rows: Vec<Vec<String>> = pre
+        .centers()
+        .iter()
+        .zip(&pre.bins)
+        .zip(dec.centers().iter().zip(&dec.bins))
+        .map(|((pc, pb), (dcen, db))| {
+            vec![
+                format!("{:.0}", pc),
+                pb.to_string(),
+                format!("{:.0}", dcen),
+                db.to_string(),
+            ]
+        })
+        .collect();
+    let _ = write_csv(
+        &scale.out("fig6_lengths.csv"),
+        &["prefill_bin", "prefill_count", "decode_bin", "decode_count"],
+        &rows,
+    );
+}
+
+// ---------------------------------------------------------------------
+// Fig 7 / Fig 8: load trajectories and power over time
+// ---------------------------------------------------------------------
+
+/// Fig 7 + Fig 8: per-worker load trajectories and average power under
+/// FCFS, JSQ, BF-IO(0), BF-IO(40).
+pub fn fig7_fig8(scale: &ExpScale) {
+    let trace = longbench_trace(scale);
+    let lineup: Vec<(&str, Box<dyn Policy>)> = vec![
+        ("fcfs", by_name("fcfs").unwrap()),
+        ("jsq", by_name("jsq").unwrap()),
+        ("bfio_h0", Box::new(BfIo::with_horizon(0))),
+        ("bfio_h40", Box::new(BfIo::with_horizon(40))),
+    ];
+    println!("Fig 7 — per-worker load trajectories (sampled workers):");
+    for (tag, mut p) in lineup {
+        let res = run_policy(scale, &trace, p.as_mut(), true);
+        let s = res.report.series.as_ref().unwrap();
+        let spread: Vec<f64> = (0..s.time.len())
+            .map(|i| s.max_load[i] - s.mean_load[i])
+            .collect();
+        println!(
+            "  {:<9} load-spread {}  power {}",
+            tag,
+            sparkline(&spread, 40),
+            sparkline(&s.power_w, 40)
+        );
+        // CSV: time, mean, max, power, then sampled worker loads
+        let mut header: Vec<String> =
+            vec!["t".into(), "mean_load".into(), "max_load".into(), "power_w".into()];
+        for w in &s.sampled_workers {
+            header.push(format!("w{w}"));
+        }
+        let header_refs: Vec<&str> = header.iter().map(|h| h.as_str()).collect();
+        let rows: Vec<Vec<String>> = (0..s.time.len())
+            .map(|i| {
+                let mut row = vec![
+                    format!("{:.4}", s.time[i]),
+                    format!("{:.1}", s.mean_load[i]),
+                    format!("{:.1}", s.max_load[i]),
+                    format!("{:.1}", s.power_w[i]),
+                ];
+                for wl in &s.worker_loads {
+                    row.push(format!("{:.1}", wl[i]));
+                }
+                row
+            })
+            .collect();
+        let _ = write_csv(&scale.out(&format!("fig7_loads_{tag}.csv")), &header_refs, &rows);
+    }
+}
+
+// ---------------------------------------------------------------------
+// Appendix D.2: BurstGPT lighter-load comparison
+// ---------------------------------------------------------------------
+
+/// BurstGPT-like (lighter, bursty) workload comparison.
+pub fn burstgpt(scale: &ExpScale) -> Vec<(String, Report)> {
+    use crate::workload::burstgpt::BurstGptLike;
+    use crate::workload::generate_trace;
+    let sampler = BurstGptLike::default();
+    // Arrival rate tuned below capacity: lighter-load regime.
+    let per_step = (scale.g * scale.b) as f64 / 400.0;
+    let arrivals = BurstGptLike::arrivals(per_step.max(1.0));
+    let mut rng = Rng::new(scale.seed);
+    let trace = generate_trace(&sampler, &arrivals, scale.steps, &mut rng);
+
+    let mut rows = Vec::new();
+    println!("Appendix D.2 — BurstGPT-like lighter load:");
+    println!("{}", Report::table_header());
+    for name in ["fcfs", "jsq", "bfio:0", "bfio:40"] {
+        let mut p = by_name(name).unwrap();
+        let res = run_policy(scale, &trace, p.as_mut(), false);
+        println!("{}", res.report.table_row(&res.policy));
+        rows.push((res.policy.clone(), res.report));
+    }
+    let csv: Vec<Vec<String>> = rows
+        .iter()
+        .map(|(n, r)| {
+            vec![
+                n.clone(),
+                format!("{:.6e}", r.avg_imbalance),
+                format!("{:.3}", r.throughput_tps),
+                format!("{:.4}", r.tpot_s),
+                format!("{:.4}", r.energy_mj()),
+            ]
+        })
+        .collect();
+    let _ = write_csv(
+        &scale.out("burstgpt.csv"),
+        &["policy", "avg_imbalance", "throughput_tps", "tpot_s", "energy_mj"],
+        &csv,
+    );
+    rows
+}
+
+// ---------------------------------------------------------------------
+// Appendix A.1: adversarial baselines
+// ---------------------------------------------------------------------
+
+/// Adversarial killer traces: JSQ and Round-Robin lose Ω(G) while BF-IO
+/// stays balanced.
+pub fn adversarial(scale: &ExpScale) {
+    use crate::workload::adversarial::{jsq_killer, round_robin_killer};
+    let g = scale.g.min(16);
+    let cfg = SimConfig {
+        g,
+        b: 8,
+        max_steps: 400,
+        warmup_steps: 40,
+        seed: scale.seed,
+        ..SimConfig::default()
+    };
+    let sim = Simulator::new(cfg);
+
+    println!("Adversarial arrivals (Appendix A.1), G={g}:");
+    let jk = jsq_killer(g, 200, 5_000.0, 300, 10.0, 3);
+    println!("  JSQ-killer trace:");
+    println!("{}", Report::table_header());
+    for name in ["jsq", "fcfs", "bfio:0"] {
+        let res = sim.run(&jk, &mut *by_name(name).unwrap());
+        println!("{}", res.report.table_row(&res.policy));
+    }
+    let rk = round_robin_killer(g, 300, 5_000.0, 300, 10.0, 3);
+    println!("  RR-killer trace:");
+    println!("{}", Report::table_header());
+    for name in ["rr", "fcfs", "bfio:0"] {
+        let res = sim.run(&rk, &mut *by_name(name).unwrap());
+        println!("{}", res.report.table_row(&res.policy));
+    }
+}
+
+// ---------------------------------------------------------------------
+// Predictor-quality ablation (beyond the paper: H>0 under noise)
+// ---------------------------------------------------------------------
+
+/// Ablation: BF-IO(H=40) under degrading lookahead predictors.
+pub fn predictor_ablation(scale: &ExpScale) -> Vec<(String, Report)> {
+    use crate::sim::predictor::Predictor;
+    let trace = longbench_trace(scale);
+    let preds: Vec<(&str, Predictor)> = vec![
+        ("oracle", Predictor::Oracle),
+        ("window", Predictor::WindowOracle),
+        ("noisy(0.3,0.2)", Predictor::Noisy { sigma_frac: 0.3, miss_prob: 0.2 }),
+        ("noisy(0.5,0.5)", Predictor::Noisy { sigma_frac: 0.5, miss_prob: 0.5 }),
+        ("pessimistic", Predictor::Pessimistic),
+    ];
+    let mut rows = Vec::new();
+    println!("Predictor ablation — BF-IO(H=40) under degraded lookahead:");
+    println!("{}", Report::table_header());
+    for (tag, pred) in preds {
+        let sim = Simulator::new(scale.sim_config()).with_predictor(pred);
+        let res = sim.run(&trace, &mut BfIo::with_horizon(40));
+        let name = format!("H=40/{tag}");
+        println!("{}", res.report.table_row(&name));
+        rows.push((name, res.report));
+    }
+    let csv: Vec<Vec<String>> = rows
+        .iter()
+        .map(|(n, r)| {
+            vec![
+                n.clone(),
+                format!("{:.6e}", r.avg_imbalance),
+                format!("{:.3}", r.throughput_tps),
+                format!("{:.4}", r.energy_mj()),
+            ]
+        })
+        .collect();
+    let _ = write_csv(
+        &scale.out("predictor_ablation.csv"),
+        &["predictor", "avg_imbalance", "throughput_tps", "energy_mj"],
+        &csv,
+    );
+    rows
+}
+
+// ---------------------------------------------------------------------
+// Drift-model ablation (Theorem 3's generality)
+// ---------------------------------------------------------------------
+
+/// Ablation over drift models (Definition 2): unit, zero, fractional,
+/// speculative, cyclic.
+pub fn drift_ablation(scale: &ExpScale) {
+    let drifts: Vec<(&str, Drift)> = vec![
+        ("unit (LLM)", Drift::Unit),
+        ("zero (constant)", Drift::Zero),
+        ("const 0.5 (compressed)", Drift::Const(0.5)),
+        ("speculative x3", Drift::Speculative(3.0)),
+        ("cycle [1,0]", Drift::Cycle(vec![1.0, 0.0])),
+    ];
+    println!("Drift ablation (Definition 2) — IIR of BF-IO(0) over FCFS:");
+    println!("{:<24} {:>14} {:>14} {:>8}", "drift", "fcfs_imb", "bfio_imb", "IIR");
+    let mut csv = Vec::new();
+    for (tag, d) in drifts {
+        let mut cfg = scale.sim_config();
+        cfg.drift = d.clone();
+        let sampler = LongBenchLike::paper();
+        let mut rng = Rng::new(scale.seed);
+        let trace =
+            overloaded_trace(&sampler, scale.g, scale.b, scale.steps, 3.0, &mut rng);
+        let sim = Simulator::new(cfg);
+        let f = sim.run(&trace, &mut *by_name("fcfs").unwrap());
+        let b = sim.run(&trace, &mut BfIo::with_horizon(0));
+        let iir = f.report.avg_imbalance / b.report.avg_imbalance.max(1e-12);
+        println!(
+            "{:<24} {:>14.4e} {:>14.4e} {:>8.2}",
+            tag, f.report.avg_imbalance, b.report.avg_imbalance, iir
+        );
+        csv.push(vec![
+            tag.to_string(),
+            format!("{:.6e}", f.report.avg_imbalance),
+            format!("{:.6e}", b.report.avg_imbalance),
+            format!("{:.4}", iir),
+        ]);
+    }
+    let _ = write_csv(
+        &scale.out("drift_ablation.csv"),
+        &["drift", "fcfs_imbalance", "bfio_imbalance", "iir"],
+        &csv,
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> ExpScale {
+        ExpScale {
+            g: 4,
+            b: 4,
+            steps: 60,
+            seed: 3,
+            out_dir: std::env::temp_dir()
+                .join("bfio_exp_test")
+                .to_string_lossy()
+                .into_owned(),
+        }
+    }
+
+    #[test]
+    fn table1_ordering_holds_at_small_scale() {
+        // Moderate scale: large enough that the imbalance/throughput
+        // ordering is signal, small enough for unit-test budgets.
+        let scale = ExpScale {
+            g: 8,
+            b: 8,
+            steps: 250,
+            seed: 3,
+            out_dir: std::env::temp_dir()
+                .join("bfio_exp_test")
+                .to_string_lossy()
+                .into_owned(),
+        };
+        let rows = table1(&scale);
+        let get = |n: &str| {
+            rows.iter()
+                .find(|(name, _)| name == n)
+                .map(|(_, r)| r.clone())
+                .unwrap()
+        };
+        let fcfs = get("FCFS");
+        let bf0 = get("BF-IO(H=0)");
+        // Core paper ordering: BF-IO(0) < FCFS on imbalance, >= on tput.
+        assert!(bf0.avg_imbalance < fcfs.avg_imbalance);
+        assert!(
+            bf0.throughput_tps >= fcfs.throughput_tps,
+            "bfio {} vs fcfs {}",
+            bf0.throughput_tps,
+            fcfs.throughput_tps
+        );
+        // CSV written
+        assert!(scale.out("table1.csv").exists());
+    }
+
+    #[test]
+    fn fig1_reports_idle() {
+        let scale = tiny();
+        let r = fig1(&scale);
+        assert!(r.mean_idle_fraction > 0.0 && r.mean_idle_fraction < 1.0);
+        assert!(scale.out("fig1_idle.csv").exists());
+    }
+
+    #[test]
+    fn fig6_writes_distributions() {
+        let scale = tiny();
+        fig6(&scale);
+        assert!(scale.out("fig6_lengths.csv").exists());
+    }
+}

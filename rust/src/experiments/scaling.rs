@@ -1,0 +1,280 @@
+//! Scalability experiments: Fig 10 (imbalance & throughput vs G),
+//! Fig 11 (energy vs G), and the theory sweeps validating the
+//! √(B log G) IIR scaling (Theorems 1–3) and the energy bounds
+//! (Theorem 4 / Corollary 1).
+
+use super::ExpScale;
+use crate::config::{PowerConfig, SimConfig};
+use crate::policies::bfio::BfIo;
+use crate::policies::by_name;
+use crate::report::write_csv;
+use crate::sim::Simulator;
+use crate::theory::{fit_iir_scaling, measure_iir, IirPoint};
+use crate::util::rng::Rng;
+use crate::workload::adversarial::overloaded_trace;
+use crate::workload::longbench::LongBenchLike;
+use crate::workload::{Drift, GeometricSampler, HomogeneousSampler, LengthSampler};
+
+/// One row of the G-sweep.
+#[derive(Clone, Debug)]
+pub struct ScaleRow {
+    pub g: usize,
+    pub fcfs_imb: f64,
+    pub bfio_imb: f64,
+    pub fcfs_tps: f64,
+    pub bfio_tps: f64,
+    pub fcfs_mj: f64,
+    pub bfio_mj: f64,
+}
+
+/// Figs 10 & 11: sweep cluster size G with a fixed per-G-proportional
+/// workload; report imbalance, throughput, energy for FCFS vs BF-IO(40).
+pub fn scaling_sweep(scale: &ExpScale, gs: &[usize]) -> Vec<ScaleRow> {
+    let sampler = LongBenchLike::paper();
+    let mut rows = Vec::new();
+    println!("Fig 10/11 — scalability with cluster size G (B={}):", scale.b);
+    println!(
+        "{:>5} {:>14} {:>14} {:>10} {:>10} {:>9} {:>9} {:>7}",
+        "G", "fcfs_imb", "bfio_imb", "fcfs_tps", "bfio_tps", "fcfs_MJ", "bfio_MJ", "ΔE%"
+    );
+    for &g in gs {
+        let cfg = SimConfig {
+            g,
+            b: scale.b,
+            max_steps: scale.steps,
+            warmup_steps: scale.steps / 5,
+            seed: scale.seed,
+            ..SimConfig::default()
+        };
+        let mut rng = Rng::new(scale.seed ^ g as u64);
+        let trace = overloaded_trace(&sampler, g, scale.b, scale.steps, 3.0, &mut rng);
+        let sim = Simulator::new(cfg);
+        let f = sim.run(&trace, &mut *by_name("fcfs").unwrap());
+        let b = sim.run(&trace, &mut BfIo::with_horizon(40));
+        let row = ScaleRow {
+            g,
+            fcfs_imb: f.report.avg_imbalance,
+            bfio_imb: b.report.avg_imbalance,
+            fcfs_tps: f.report.throughput_tps,
+            bfio_tps: b.report.throughput_tps,
+            fcfs_mj: f.report.energy_mj(),
+            bfio_mj: b.report.energy_mj(),
+        };
+        println!(
+            "{:>5} {:>14.4e} {:>14.4e} {:>10.1} {:>10.1} {:>9.2} {:>9.2} {:>6.1}%",
+            g,
+            row.fcfs_imb,
+            row.bfio_imb,
+            row.fcfs_tps,
+            row.bfio_tps,
+            row.fcfs_mj,
+            row.bfio_mj,
+            (1.0 - row.bfio_mj / row.fcfs_mj) * 100.0
+        );
+        rows.push(row);
+    }
+    let csv: Vec<Vec<String>> = rows
+        .iter()
+        .map(|r| {
+            vec![
+                r.g.to_string(),
+                format!("{:.6e}", r.fcfs_imb),
+                format!("{:.6e}", r.bfio_imb),
+                format!("{:.3}", r.fcfs_tps),
+                format!("{:.3}", r.bfio_tps),
+                format!("{:.4}", r.fcfs_mj),
+                format!("{:.4}", r.bfio_mj),
+                format!("{:.4}", 1.0 - r.bfio_mj / r.fcfs_mj),
+            ]
+        })
+        .collect();
+    let _ = write_csv(
+        &scale.out("fig10_fig11_scaling.csv"),
+        &["g", "fcfs_imb", "bfio_imb", "fcfs_tps", "bfio_tps", "fcfs_mj", "bfio_mj", "energy_reduction"],
+        &csv,
+    );
+    rows
+}
+
+/// Theorem 1/2/3 validation: measure IIR over a (B, G) grid for a decode
+/// model and fit against √(B log G).
+pub fn theory_sweep(
+    scale: &ExpScale,
+    model: &str,
+    drift: Drift,
+    bs: &[usize],
+    gs: &[usize],
+) -> (Vec<IirPoint>, (f64, f64, f64)) {
+    let sampler: Box<dyn LengthSampler> = match model {
+        "homogeneous" => Box::new(HomogeneousSampler { s_min: 1, s_max: 500, o: 24 }),
+        _ => Box::new(GeometricSampler::new(1, 500, 0.05)),
+    };
+    let mut points = Vec::new();
+    println!(
+        "Theory sweep [{model}, drift {:?}] — IIR vs √(B log G):",
+        drift
+    );
+    println!(
+        "{:>5} {:>5} {:>12} {:>14} {:>14} {:>8}",
+        "B", "G", "√(BlogG)", "fcfs_imb", "bfio_imb", "IIR"
+    );
+    for &b in bs {
+        for &g in gs {
+            let pt = measure_iir(sampler.as_ref(), drift.clone(), b, g, scale.steps, scale.seed);
+            println!(
+                "{:>5} {:>5} {:>12.2} {:>14.4e} {:>14.4e} {:>8.2}",
+                b, g, pt.shape, pt.fcfs_imbalance, pt.bfio_imbalance, pt.iir
+            );
+            points.push(pt);
+        }
+    }
+    let (slope, intercept, r2) = fit_iir_scaling(&points);
+    println!(
+        "fit: IIR ≈ {intercept:.2} + {slope:.3}·√(B log G)   (r² = {r2:.3})"
+    );
+    let csv: Vec<Vec<String>> = points
+        .iter()
+        .map(|p| {
+            vec![
+                p.b.to_string(),
+                p.g.to_string(),
+                format!("{:.4}", p.shape),
+                format!("{:.6e}", p.fcfs_imbalance),
+                format!("{:.6e}", p.bfio_imbalance),
+                format!("{:.4}", p.iir),
+            ]
+        })
+        .collect();
+    let _ = write_csv(
+        &scale.out(&format!("theory_{model}.csv")),
+        &["b", "g", "sqrt_blogg", "fcfs_imb", "bfio_imb", "iir"],
+        &csv,
+    );
+    (points, (slope, intercept, r2))
+}
+
+/// Theorem 4 / Corollary 1 validation: measured energy saving vs the
+/// guaranteed lower bound, and the G→∞ limit.
+pub fn energy_theory(scale: &ExpScale, gs: &[usize]) {
+    let power = PowerConfig::a100();
+    println!("Theorem 4 / Corollary 1 — energy saving vs guarantee:");
+    println!(
+        "  Corollary 1 asymptotic limit: P_idle/C_γ = {:.1}%",
+        power.asymptotic_saving() * 100.0
+    );
+    println!(
+        "{:>5} {:>10} {:>10} {:>12} {:>12} {:>10}",
+        "G", "η_sum", "IIR", "saving_meas", "saving_bound", "bound_ok"
+    );
+    // Short decode lengths (mean 5 steps) keep the post-arrival drain
+    // tail negligible relative to the overloaded steady state, which is
+    // the regime Theorem 4's K→∞ statement quantifies.
+    let sampler = GeometricSampler::new(1, 500, 0.2);
+    let mut csv = Vec::new();
+    for &g in gs {
+        // Theorem 4 compares the energy to COMPLETE the same instance
+        // under both policies, so the trace must drain: arrivals stop
+        // and the simulator runs until every request finishes
+        // (max_steps = 0 disables the step cap).
+        let cfg = SimConfig {
+            g,
+            b: scale.b,
+            max_steps: 0,
+            warmup_steps: 0,
+            seed: scale.seed,
+            ..SimConfig::default()
+        };
+        let mut rng = Rng::new(scale.seed ^ ((g as u64) << 8));
+        let trace = overloaded_trace(&sampler, g, scale.b, scale.steps, 3.0, &mut rng);
+        let sim = Simulator::new(cfg);
+        let f = sim.run(&trace, &mut *by_name("fcfs").unwrap());
+        let b = sim.run(&trace, &mut BfIo::with_horizon(0));
+        debug_assert_eq!(f.completed, b.completed);
+        // Synchronized-phase energy is the theory object (Eq. 10);
+        // α applies to the cumulative imbalance ImbTot (Eq. 12/14).
+        let saving = 1.0 - b.report.sync_energy_j / f.report.sync_energy_j;
+        let alpha = f.report.imb_tot / b.report.imb_tot.max(1e-12);
+        let eta = f.report.eta_sum;
+        let bound = crate::energy::energy_saving_lower_bound(&power, eta, alpha);
+        let ok = saving >= bound - 1e-9;
+        println!(
+            "{:>5} {:>10.4} {:>10.2} {:>11.2}% {:>11.2}% {:>10}",
+            g,
+            eta,
+            alpha,
+            saving * 100.0,
+            bound * 100.0,
+            ok
+        );
+        csv.push(vec![
+            g.to_string(),
+            format!("{:.6}", eta),
+            format!("{:.4}", alpha),
+            format!("{:.6}", saving),
+            format!("{:.6}", bound),
+            ok.to_string(),
+        ]);
+    }
+    let _ = write_csv(
+        &scale.out("theory_energy.csv"),
+        &["g", "eta_sum", "iir", "saving_measured", "saving_bound", "bound_holds"],
+        &csv,
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> ExpScale {
+        ExpScale {
+            g: 4,
+            b: 16,
+            steps: 200,
+            seed: 5,
+            out_dir: std::env::temp_dir()
+                .join("bfio_scaling_test")
+                .to_string_lossy()
+                .into_owned(),
+        }
+    }
+
+    #[test]
+    fn scaling_sweep_shapes() {
+        // The theory regime needs B comfortably above √G; at unit-test
+        // scale we check BF-IO is never meaningfully worse and wins at
+        // the larger G.
+        let rows = scaling_sweep(&tiny(), &[4, 8]);
+        assert_eq!(rows.len(), 2);
+        for r in &rows {
+            assert!(r.bfio_imb <= r.fcfs_imb * 1.1, "G={}", r.g);
+        }
+        assert!(rows[1].bfio_imb < rows[1].fcfs_imb);
+    }
+
+    #[test]
+    fn theory_sweep_iir_above_one() {
+        let (pts, (_slope, _icept, _r2)) = theory_sweep(
+            &tiny(),
+            "geometric",
+            Drift::Unit,
+            &[16, 48],
+            &[8],
+        );
+        assert!(pts.iter().all(|p| p.iir > 1.0), "{pts:?}");
+        // IIR grows with B (the core scaling claim).
+        assert!(pts[1].iir > pts[0].iir, "{pts:?}");
+    }
+
+    #[test]
+    fn energy_bound_never_violated() {
+        // The Theorem-4 lower bound must hold on measured runs.
+        energy_theory(&tiny(), &[2, 4]);
+        // (assertions are inside via printed bound_ok; re-check from CSV)
+        let path = tiny().out("theory_energy.csv");
+        let text = std::fs::read_to_string(path).unwrap();
+        for line in text.lines().skip(1) {
+            assert!(line.ends_with("true"), "bound violated: {line}");
+        }
+    }
+}

@@ -1,0 +1,45 @@
+//! # bfio-serve — a universal load-balancing principle for LLM serving
+//!
+//! Reproduction of *"A Universal Load Balancing Principle and Its
+//! Application to Large Language Model Serving"* (CS.DC 2026): the **BF-IO**
+//! (Balance Future with Integer Optimization) routing principle for
+//! barrier-synchronized, data-parallel LLM decode with sticky (KV-bound,
+//! non-migratable) request assignments.
+//!
+//! The crate is organized as the Layer-3 coordinator of a three-layer
+//! Rust + JAX + Pallas stack (see `DESIGN.md`):
+//!
+//! * [`workload`] — request/trace substrate: workload profiles
+//!   `W_i = (s_i, s_i + δ_1, …)`, LongBench/BurstGPT-like samplers,
+//!   adversarial and overloaded arrival instances, drift models.
+//! * [`sim`] — discrete-event decode simulator with the paper's time model
+//!   `Δt = C + t_ℓ · max_g L_g(k)` and per-step barrier synchronization.
+//! * [`policies`] — FCFS (Algorithm 2), JSQ, Round-Robin, Power-of-d,
+//!   Min-Min, Max-Min, OLB, Throttled, and BF-IO(H) with its integer
+//!   optimization solver (exact branch-and-bound + greedy/local-search).
+//! * [`metrics`] — AvgImbalance, throughput, TPOT, idle time, trajectories.
+//! * [`energy`] — the GPU power model `P(mfu)` and per-step energy
+//!   integration (Section 5.2 / Appendix D of the paper).
+//! * [`theory`] — closed-form theorem bounds and empirical IIR drivers.
+//! * [`runtime`] — PJRT execution of the AOT-compiled TinyLM artifacts.
+//! * [`coordinator`] — the online serving runtime (leader/worker threads,
+//!   barrier decode loop, real model execution per worker).
+//! * [`util`] — self-built substrates (PRNG + distributions, JSON, CLI,
+//!   bench + property-test harnesses) — the build image has no crates.io
+//!   access beyond `xla`/`anyhow`, so these are implemented from scratch.
+
+pub mod config;
+pub mod coordinator;
+pub mod experiments;
+pub mod energy;
+pub mod metrics;
+pub mod policies;
+pub mod report;
+pub mod runtime;
+pub mod sim;
+pub mod theory;
+pub mod util;
+pub mod workload;
+
+pub use config::SimConfig;
+pub use sim::{SimResult, Simulator};

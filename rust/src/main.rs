@@ -1,0 +1,238 @@
+//! `bfio` — CLI for the BF-IO serving reproduction.
+//!
+//! ```text
+//! bfio sim     --policy bfio:40 --g 64 --b 24 --steps 600   one simulation
+//! bfio repro   <table1|fig1|fig2|fig6|fig7|fig9|fig10|burstgpt|
+//!               adversarial|predictors|drift|all> [--full]  paper artifacts
+//! bfio theory  <thm1|thm2|thm3|energy|all>                  theorem checks
+//! bfio serve   --workers 2 --policy bfio:8 --requests 16    live PJRT serving
+//! bfio trace   --out trace.jsonl --steps 200                dump a trace
+//! ```
+
+use anyhow::{bail, Context, Result};
+
+use bfio_serve::coordinator::{serve, CoordinatorConfig, ServeRequest};
+use bfio_serve::experiments::{self, scaling, ExpScale};
+use bfio_serve::metrics::Report;
+use bfio_serve::policies::by_name;
+use bfio_serve::sim::Simulator;
+use bfio_serve::util::cli::Args;
+use bfio_serve::util::rng::Rng;
+use bfio_serve::workload::adversarial::overloaded_trace;
+use bfio_serve::workload::longbench::LongBenchLike;
+use bfio_serve::workload::{trace as tracefile, Drift};
+
+fn main() {
+    let args = Args::from_env();
+    let code = match run(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn scale_from(args: &Args) -> ExpScale {
+    let mut scale = if args.has("full") { ExpScale::full() } else { ExpScale::quick() };
+    scale.g = args.usize_or("g", scale.g);
+    scale.b = args.usize_or("b", scale.b);
+    scale.steps = args.u64_or("steps", scale.steps);
+    scale.seed = args.u64_or("seed", scale.seed);
+    scale.out_dir = args.get_or("out-dir", &scale.out_dir).to_string();
+    scale
+}
+
+fn run(args: &Args) -> Result<()> {
+    match args.subcommand.as_deref() {
+        Some("sim") => cmd_sim(args),
+        Some("repro") => cmd_repro(args),
+        Some("theory") => cmd_theory(args),
+        Some("serve") => cmd_serve(args),
+        Some("trace") => cmd_trace(args),
+        Some(other) => bail!("unknown subcommand {other}; try sim|repro|theory|serve|trace"),
+        None => {
+            println!(
+                "bfio — BF-IO load-balancing reproduction\n\
+                 subcommands: sim | repro <exp> | theory <thm> | serve | trace\n\
+                 see README.md for details"
+            );
+            Ok(())
+        }
+    }
+}
+
+fn cmd_sim(args: &Args) -> Result<()> {
+    let scale = scale_from(args);
+    let policy_name = args.get_or("policy", "bfio:40");
+    let mut policy =
+        by_name(policy_name).with_context(|| format!("unknown policy {policy_name}"))?;
+    let mut cfg = scale.sim_config();
+    if let Some(d) = args.flag("drift") {
+        cfg.drift = Drift::parse(d).with_context(|| format!("bad drift {d}"))?;
+    }
+    let sampler = LongBenchLike::paper();
+    let mut rng = Rng::new(scale.seed);
+    let trace =
+        overloaded_trace(&sampler, scale.g, scale.b, scale.steps, 3.0, &mut rng);
+    println!(
+        "sim: policy={policy_name} G={} B={} steps={} trace={} requests",
+        scale.g,
+        scale.b,
+        scale.steps,
+        trace.len()
+    );
+    let res = Simulator::new(cfg).run(&trace, policy.as_mut());
+    println!("{}", Report::table_header());
+    println!("{}", res.report.table_row(&res.policy));
+    println!(
+        "steps={} completed={} admitted={} leftover={}",
+        res.steps, res.completed, res.admitted, res.leftover_waiting
+    );
+    Ok(())
+}
+
+fn cmd_repro(args: &Args) -> Result<()> {
+    let scale = scale_from(args);
+    let what = args
+        .positional
+        .first()
+        .map(|s| s.as_str())
+        .unwrap_or("all");
+    let run_one = |w: &str| -> Result<()> {
+        match w {
+            "table1" | "fig4" | "fig9" => {
+                let rows = experiments::table1(&scale);
+                experiments::fig9(&rows, &scale);
+            }
+            "fig1" => {
+                experiments::fig1(&scale);
+            }
+            "fig2" => experiments::fig2(&scale),
+            "fig5" | "fig6" => experiments::fig6(&scale),
+            "fig7" | "fig8" => experiments::fig7_fig8(&scale),
+            "fig10" | "fig11" | "scaling" => {
+                let gs = args.usize_list_or("gs", &[16, 32, 64, 96, 128]);
+                scaling::scaling_sweep(&scale, &gs);
+            }
+            "burstgpt" => {
+                experiments::burstgpt(&scale);
+            }
+            "adversarial" => experiments::adversarial(&scale),
+            "predictors" => {
+                experiments::predictor_ablation(&scale);
+            }
+            "drift" => experiments::drift_ablation(&scale),
+            other => bail!("unknown experiment {other}"),
+        }
+        Ok(())
+    };
+    if what == "all" {
+        for w in [
+            "fig1", "fig2", "fig6", "table1", "fig7", "fig10", "burstgpt",
+            "adversarial", "predictors", "drift",
+        ] {
+            println!("\n=== repro {w} ===");
+            run_one(w)?;
+        }
+        Ok(())
+    } else {
+        run_one(what)
+    }
+}
+
+fn cmd_theory(args: &Args) -> Result<()> {
+    let scale = scale_from(args);
+    let what = args
+        .positional
+        .first()
+        .map(|s| s.as_str())
+        .unwrap_or("all");
+    let bs = args.usize_list_or("bs", &[8, 16, 32, 64]);
+    let gs = args.usize_list_or("gs", &[8, 16, 32]);
+    let run_one = |w: &str| -> Result<()> {
+        match w {
+            "thm1" => {
+                scaling::theory_sweep(&scale, "homogeneous", Drift::Unit, &bs, &gs);
+            }
+            "thm2" => {
+                scaling::theory_sweep(&scale, "geometric", Drift::Unit, &bs, &gs);
+            }
+            "thm3" => {
+                for d in [Drift::Zero, Drift::Const(0.5), Drift::Speculative(2.0)] {
+                    scaling::theory_sweep(&scale, "geometric", d, &bs, &gs);
+                }
+            }
+            "energy" => {
+                let egs = args.usize_list_or("gs", &[4, 8, 16, 32, 64]);
+                scaling::energy_theory(&scale, &egs);
+            }
+            other => bail!("unknown theorem {other}"),
+        }
+        Ok(())
+    };
+    if what == "all" {
+        for w in ["thm1", "thm2", "thm3", "energy"] {
+            println!("\n=== theory {w} ===");
+            run_one(w)?;
+        }
+        Ok(())
+    } else {
+        run_one(what)
+    }
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let cfg = CoordinatorConfig {
+        artifacts_dir: args.get_or("artifacts", "artifacts").into(),
+        workers: args.usize_or("workers", 2),
+        policy: args.get_or("policy", "bfio:8").to_string(),
+        max_steps: args.u64_or("max-steps", 100_000),
+        seed: args.u64_or("seed", 0),
+    };
+    let n = args.usize_or("requests", 16);
+    let mut rng = Rng::new(cfg.seed ^ 0x5E7E);
+    let requests: Vec<ServeRequest> = (0..n)
+        .map(|i| {
+            let plen = 2 + rng.below_usize(10);
+            ServeRequest {
+                id: i as u64,
+                prompt: (0..plen).map(|_| rng.below(256) as i32).collect(),
+                max_new_tokens: 2 + rng.below(24) as u32,
+            }
+        })
+        .collect();
+    println!(
+        "serve: {} requests over {} PJRT workers, policy {}",
+        n, cfg.workers, cfg.policy
+    );
+    let rep = serve(&cfg, &requests)?;
+    println!(
+        "policy={} workers={} slots/worker={} steps={}",
+        rep.policy, rep.workers, rep.slots_per_worker, rep.steps
+    );
+    println!(
+        "wall={:.2}s  tokens/s={:.1}  tpot={:.4}s  idle={:.1}%  imbalance={:.1}  energy={:.1} J",
+        rep.wall_s,
+        rep.tokens_per_s,
+        rep.tpot_s,
+        rep.mean_idle_fraction * 100.0,
+        rep.avg_imbalance,
+        rep.energy_j
+    );
+    println!("served {} requests", rep.served.len());
+    Ok(())
+}
+
+fn cmd_trace(args: &Args) -> Result<()> {
+    let scale = scale_from(args);
+    let out = args.get_or("out", "trace.jsonl");
+    let sampler = LongBenchLike::paper();
+    let mut rng = Rng::new(scale.seed);
+    let trace =
+        overloaded_trace(&sampler, scale.g, scale.b, scale.steps, 3.0, &mut rng);
+    tracefile::save_trace(std::path::Path::new(out), &trace)?;
+    println!("wrote {} requests to {out}", trace.len());
+    Ok(())
+}

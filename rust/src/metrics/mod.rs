@@ -1,0 +1,410 @@
+//! Metrics recorders for the four evaluation metrics of Section 6.3
+//! (AvgImbalance, Throughput, TPOT, Energy) plus idle-time statistics
+//! (Fig. 1) and time series for the load/power trajectory figures.
+
+use crate::config::PowerConfig;
+use crate::energy::EnergyAccumulator;
+use crate::util::stats;
+
+/// Instantaneous imbalance (Eq. 2): `G·max_g L_g − Σ_g L_g`.
+pub fn imbalance(loads: &[f64]) -> f64 {
+    let g = loads.len() as f64;
+    let l_max = loads.iter().cloned().fold(0.0, f64::max);
+    g * l_max - loads.iter().sum::<f64>()
+}
+
+/// Barrier idle fraction of a step: `Σ_g (L_max − L_g) / (G·L_max)`
+/// — the share of aggregate compute wasted waiting (Fig. 1 right).
+pub fn idle_fraction(loads: &[f64]) -> f64 {
+    let l_max = loads.iter().cloned().fold(0.0, f64::max);
+    if l_max <= 0.0 {
+        return 0.0;
+    }
+    imbalance(loads) / (loads.len() as f64 * l_max)
+}
+
+/// Rolling recorder fed once per decode step by the simulator or the
+/// live coordinator.
+#[derive(Clone, Debug)]
+pub struct Recorder {
+    pub power_cfg: PowerConfig,
+    pub t_token: f64,
+    pub c_overhead: f64,
+    pub warmup_steps: u64,
+    /// Record per-step series (can be large).
+    pub record_series: bool,
+    /// Indices of workers whose load trajectory is recorded (Fig. 7).
+    pub sampled_workers: Vec<usize>,
+
+    // accumulators (post-warmup unless noted)
+    steps: u64,
+    imbalance_sum: f64,
+    idle_sum: f64,
+    tokens: f64,
+    wall_time: f64,
+    pub energy: EnergyAccumulator,
+    tpot_sum: f64,
+    tpot_count: u64,
+    tpot_samples: Vec<f64>,
+    queue_wait_sum: f64,
+    completed: u64,
+
+    // time series
+    pub series_time: Vec<f64>,
+    pub series_imbalance: Vec<f64>,
+    pub series_max_load: Vec<f64>,
+    pub series_mean_load: Vec<f64>,
+    pub series_idle: Vec<f64>,
+    pub series_power_w: Vec<f64>,
+    pub series_worker_loads: Vec<Vec<f64>>, // [sampled_worker][step]
+    clock: f64,
+}
+
+impl Recorder {
+    pub fn new(
+        power_cfg: PowerConfig,
+        t_token: f64,
+        c_overhead: f64,
+        warmup_steps: u64,
+    ) -> Recorder {
+        Recorder {
+            power_cfg,
+            t_token,
+            c_overhead,
+            warmup_steps,
+            record_series: false,
+            sampled_workers: Vec::new(),
+            steps: 0,
+            imbalance_sum: 0.0,
+            idle_sum: 0.0,
+            tokens: 0.0,
+            wall_time: 0.0,
+            energy: EnergyAccumulator::new(),
+            tpot_sum: 0.0,
+            tpot_count: 0,
+            tpot_samples: Vec::new(),
+            queue_wait_sum: 0.0,
+            completed: 0,
+            series_time: Vec::new(),
+            series_imbalance: Vec::new(),
+            series_max_load: Vec::new(),
+            series_mean_load: Vec::new(),
+            series_idle: Vec::new(),
+            series_power_w: Vec::new(),
+            series_worker_loads: Vec::new(),
+            clock: 0.0,
+        }
+    }
+
+    pub fn with_series(mut self, sampled_workers: Vec<usize>) -> Recorder {
+        self.record_series = true;
+        self.series_worker_loads = vec![Vec::new(); sampled_workers.len()];
+        self.sampled_workers = sampled_workers;
+        self
+    }
+
+    /// Current wall-clock time (s).
+    pub fn clock(&self) -> f64 {
+        self.clock
+    }
+
+    /// Account one barrier-synchronized step.  `loads` are post-admission
+    /// per-worker workloads, `active` is |A(k)| (tokens generated this
+    /// step).  Returns the step duration Δt (Eq. 19).
+    pub fn step(&mut self, step: u64, loads: &[f64], active: usize) -> f64 {
+        let l_max = loads.iter().cloned().fold(0.0, f64::max);
+        let dt = self.c_overhead + self.t_token * l_max;
+        self.clock += dt;
+        let in_window = step >= self.warmup_steps;
+
+        if in_window {
+            self.steps += 1;
+            self.imbalance_sum += imbalance(loads);
+            self.idle_sum += idle_fraction(loads);
+            self.tokens += active as f64;
+            self.wall_time += dt;
+        }
+        // Energy is integrated over the whole run (matches the paper's
+        // "total energy for the trace" figures).
+        let avg_power =
+            self.energy.step(loads, self.t_token, self.c_overhead, &self.power_cfg);
+
+        if self.record_series {
+            self.series_time.push(self.clock);
+            self.series_imbalance.push(imbalance(loads));
+            self.series_max_load.push(l_max);
+            self.series_mean_load.push(stats::mean(loads));
+            self.series_idle.push(idle_fraction(loads));
+            self.series_power_w.push(avg_power);
+            for (slot, &w) in self.sampled_workers.iter().enumerate() {
+                let v = loads.get(w).copied().unwrap_or(0.0);
+                self.series_worker_loads[slot].push(v);
+            }
+        }
+        dt
+    }
+
+    /// Record one request completion for the TPOT metric (Eq. 22).
+    pub fn complete_request(&mut self, admit_clock: f64, finish_clock: f64, o: u64) {
+        self.complete_request_full(admit_clock, admit_clock, finish_clock, o);
+    }
+
+    /// Completion with queueing delay: `arrival_clock` is when the request
+    /// became visible to the router, `admit_clock` when it was placed.
+    /// Tracks the tail (p99) TPOT production systems alert on.
+    pub fn complete_request_full(
+        &mut self,
+        arrival_clock: f64,
+        admit_clock: f64,
+        finish_clock: f64,
+        o: u64,
+    ) {
+        self.completed += 1;
+        self.queue_wait_sum += (admit_clock - arrival_clock).max(0.0);
+        if o > 0 {
+            let tpot = (finish_clock - admit_clock) / o as f64;
+            self.tpot_sum += tpot;
+            self.tpot_count += 1;
+            self.tpot_samples.push(tpot);
+        }
+    }
+
+    pub fn finish(self) -> Report {
+        Report {
+            steps: self.steps,
+            avg_imbalance: if self.steps > 0 {
+                self.imbalance_sum / self.steps as f64
+            } else {
+                0.0
+            },
+            mean_idle_fraction: if self.steps > 0 {
+                self.idle_sum / self.steps as f64
+            } else {
+                0.0
+            },
+            throughput_tps: if self.wall_time > 0.0 {
+                self.tokens / self.wall_time
+            } else {
+                0.0
+            },
+            tpot_s: if self.tpot_count > 0 {
+                self.tpot_sum / self.tpot_count as f64
+            } else {
+                0.0
+            },
+            tpot_p99_s: if self.tpot_samples.is_empty() {
+                0.0
+            } else {
+                stats::percentile(&self.tpot_samples, 99.0)
+            },
+            mean_queue_wait_s: if self.completed > 0 {
+                self.queue_wait_sum / self.completed as f64
+            } else {
+                0.0
+            },
+            completed: self.completed,
+            total_tokens: self.tokens,
+            wall_time_s: self.wall_time,
+            sync_energy_j: self.energy.sync_energy_j,
+            total_energy_j: self.energy.total_energy_j(),
+            eta_sum: self.energy.eta_sum(),
+            total_workload: self.energy.total_workload,
+            imb_tot: self.energy.imb_tot,
+            series: if self.record_series {
+                Some(Series {
+                    time: self.series_time,
+                    imbalance: self.series_imbalance,
+                    max_load: self.series_max_load,
+                    mean_load: self.series_mean_load,
+                    idle: self.series_idle,
+                    power_w: self.series_power_w,
+                    worker_loads: self.series_worker_loads,
+                    sampled_workers: self.sampled_workers,
+                })
+            } else {
+                None
+            },
+        }
+    }
+}
+
+/// Per-step time series for the trajectory figures.
+#[derive(Clone, Debug)]
+pub struct Series {
+    pub time: Vec<f64>,
+    pub imbalance: Vec<f64>,
+    pub max_load: Vec<f64>,
+    pub mean_load: Vec<f64>,
+    pub idle: Vec<f64>,
+    pub power_w: Vec<f64>,
+    pub worker_loads: Vec<Vec<f64>>,
+    pub sampled_workers: Vec<usize>,
+}
+
+/// Final metrics of one run — the paper's Table-1 row.
+#[derive(Clone, Debug)]
+pub struct Report {
+    pub steps: u64,
+    /// Eq. 20 — time-average imbalance.
+    pub avg_imbalance: f64,
+    /// Fig. 1 right — mean barrier idle fraction.
+    pub mean_idle_fraction: f64,
+    /// Eq. 21 — tokens per second.
+    pub throughput_tps: f64,
+    /// Eq. 22 — mean time per output token, seconds.
+    pub tpot_s: f64,
+    /// p99 time per output token (tail latency), seconds.
+    pub tpot_p99_s: f64,
+    /// Mean router-queueing delay (arrival → admission), seconds.
+    pub mean_queue_wait_s: f64,
+    pub completed: u64,
+    pub total_tokens: f64,
+    pub wall_time_s: f64,
+    /// Synchronized-phase energy (theory object), joules.
+    pub sync_energy_j: f64,
+    /// Sync + fixed-overhead energy (experiment object), joules.
+    pub total_energy_j: f64,
+    /// Normalized imbalance η_sum (Eq. 13).
+    pub eta_sum: f64,
+    pub total_workload: f64,
+    pub imb_tot: f64,
+    pub series: Option<Series>,
+}
+
+impl Report {
+    pub fn energy_mj(&self) -> f64 {
+        self.total_energy_j / 1e6
+    }
+
+    pub fn table_row(&self, name: &str) -> String {
+        format!(
+            "{:<16} {:>14.4e} {:>12.1} {:>10.3} {:>10.2} {:>8.1}%",
+            name,
+            self.avg_imbalance,
+            self.throughput_tps,
+            self.tpot_s,
+            self.energy_mj(),
+            self.mean_idle_fraction * 100.0
+        )
+    }
+
+    pub fn table_header() -> String {
+        format!(
+            "{:<16} {:>14} {:>12} {:>10} {:>10} {:>9}",
+            "policy", "avg_imbalance", "tok/s", "tpot(s)", "energy(MJ)", "idle"
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn imbalance_formula() {
+        // Eq. 2 on a simple instance.
+        assert_eq!(imbalance(&[3.0, 1.0, 2.0]), 3.0 * 3.0 - 6.0);
+        assert_eq!(imbalance(&[5.0, 5.0]), 0.0);
+        assert_eq!(imbalance(&[0.0, 0.0]), 0.0);
+    }
+
+    #[test]
+    fn idle_fraction_bounds() {
+        assert_eq!(idle_fraction(&[1.0, 1.0]), 0.0);
+        // one worker does everything: idle = (G-1)/G
+        let f = idle_fraction(&[10.0, 0.0, 0.0, 0.0]);
+        assert!((f - 0.75).abs() < 1e-12);
+        assert_eq!(idle_fraction(&[0.0, 0.0]), 0.0);
+    }
+
+    #[test]
+    fn recorder_time_model() {
+        // Δt = C + t_ℓ·L_max (Eq. 19).
+        let mut r = Recorder::new(PowerConfig::a100(), 1.005e-7, 9.775e-3, 0);
+        let dt = r.step(0, &[1_000_000.0, 500_000.0], 2);
+        assert!((dt - (9.775e-3 + 1.005e-7 * 1e6)).abs() < 1e-12);
+        assert!((r.clock() - dt).abs() < 1e-15);
+    }
+
+    #[test]
+    fn recorder_warmup_excluded() {
+        let mut r = Recorder::new(PowerConfig::a100(), 1e-7, 1e-3, 2);
+        for k in 0..5 {
+            r.step(k, &[10.0, 0.0], 1);
+        }
+        let rep = r.finish();
+        assert_eq!(rep.steps, 3); // steps 2,3,4
+        assert!((rep.avg_imbalance - 10.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn throughput_counts_active_tokens() {
+        let mut r = Recorder::new(PowerConfig::a100(), 0.0, 1.0, 0);
+        // 3 steps, Δt = 1s each, 4 active each -> 4 tokens/s.
+        for k in 0..3 {
+            r.step(k, &[1.0, 1.0], 4);
+        }
+        let rep = r.finish();
+        assert!((rep.throughput_tps - 4.0).abs() < 1e-12);
+        assert_eq!(rep.total_tokens, 12.0);
+    }
+
+    #[test]
+    fn tpot_p99_and_queue_wait() {
+        let mut r = Recorder::new(PowerConfig::a100(), 1e-7, 1e-3, 0);
+        // 99 fast requests and one straggler
+        for _ in 0..99 {
+            r.complete_request_full(0.0, 1.0, 2.0, 1); // tpot 1, wait 1
+        }
+        r.complete_request_full(0.0, 5.0, 105.0, 1); // tpot 100, wait 5
+        let rep = r.finish();
+        assert!(rep.tpot_p99_s > 1.9, "p99 {}", rep.tpot_p99_s); // interpolated rank 98.01
+        assert!((rep.tpot_s - (99.0 + 100.0) / 100.0).abs() < 1e-9);
+        assert!((rep.mean_queue_wait_s - (99.0 + 5.0) / 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn complete_request_is_zero_wait_shorthand() {
+        let mut r = Recorder::new(PowerConfig::a100(), 1e-7, 1e-3, 0);
+        r.complete_request(2.0, 6.0, 4);
+        let rep = r.finish();
+        assert_eq!(rep.mean_queue_wait_s, 0.0);
+        assert!((rep.tpot_s - 1.0).abs() < 1e-12);
+        assert!((rep.tpot_p99_s - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn tpot_average() {
+        let mut r = Recorder::new(PowerConfig::a100(), 1e-7, 1e-3, 0);
+        r.complete_request(0.0, 10.0, 10); // 1 s/token
+        r.complete_request(5.0, 11.0, 2); // 3 s/token
+        let rep = r.finish();
+        assert!((rep.tpot_s - 2.0).abs() < 1e-12);
+        assert_eq!(rep.completed, 2);
+    }
+
+    #[test]
+    fn series_recording() {
+        let mut r = Recorder::new(PowerConfig::a100(), 1e-7, 1e-3, 0)
+            .with_series(vec![0, 1]);
+        r.step(0, &[5.0, 3.0, 8.0], 3);
+        r.step(1, &[6.0, 4.0, 7.0], 3);
+        let rep = r.finish();
+        let s = rep.series.unwrap();
+        assert_eq!(s.time.len(), 2);
+        assert_eq!(s.worker_loads.len(), 2);
+        assert_eq!(s.worker_loads[0], vec![5.0, 6.0]);
+        assert_eq!(s.worker_loads[1], vec![3.0, 4.0]);
+        assert!(s.power_w.iter().all(|&p| p >= 100.0 && p <= 400.0));
+    }
+
+    #[test]
+    fn balanced_step_draws_peak_power() {
+        let mut r = Recorder::new(PowerConfig::a100(), 1e-7, 0.0, 0)
+            .with_series(vec![]);
+        r.step(0, &[100.0, 100.0], 2);
+        let rep = r.finish();
+        let s = rep.series.unwrap();
+        assert!((s.power_w[0] - 400.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,219 @@
+//! Exact solver for the integer optimization (IO) on small instances:
+//! depth-first branch-and-bound over (candidate → worker) assignments.
+//!
+//! Used to (a) verify the production heuristic's solution quality in
+//! tests and (b) serve tiny clusters where exactness is free.  The
+//! feasible set matches (IO): each candidate to ≤ 1 worker, per-worker
+//! capacity, exactly `U(k)` admissions.
+
+use super::objective::WindowedLoads;
+
+/// Best assignment found: candidate slot -> Some(worker) (admitted) or
+/// None (left waiting).
+#[derive(Clone, Debug)]
+pub struct ExactSolution {
+    pub placement: Vec<Option<usize>>,
+    pub j: f64,
+}
+
+/// Solve (IO) exactly by branch-and-bound.
+///
+/// * `base` — predicted trajectories of the *active* requests.
+/// * `candidates` — prefill sizes of the waiting candidates.
+/// * `caps` — free slots per worker.
+/// * `u` — number of admissions required (`U(k)`).
+///
+/// Complexity is exponential; intended for `candidates.len() <= ~12`.
+pub fn solve_exact(
+    base: &WindowedLoads,
+    candidates: &[f64],
+    caps: &[usize],
+    u: usize,
+) -> ExactSolution {
+    assert_eq!(caps.len(), base.g);
+    assert!(u <= candidates.len());
+    assert!(u <= caps.iter().sum::<usize>());
+
+    // Sort candidates descending so large items are branched early
+    // (better pruning); keep the permutation to undo at the end.
+    let mut order: Vec<usize> = (0..candidates.len()).collect();
+    order.sort_by(|&a, &b| candidates[b].partial_cmp(&candidates[a]).unwrap());
+
+    struct Dfs<'a> {
+        wl: WindowedLoads,
+        candidates: &'a [f64],
+        order: &'a [usize],
+        caps: Vec<usize>,
+        u: usize,
+        best_j: f64,
+        best: Vec<Option<usize>>,
+        cur: Vec<Option<usize>>,
+    }
+
+    impl Dfs<'_> {
+        fn run(&mut self, pos: usize, placed: usize) {
+            if placed == self.u {
+                let j = self.wl.j();
+                if j < self.best_j {
+                    self.best_j = j;
+                    self.best = self.cur.clone();
+                }
+                return;
+            }
+            // not enough candidates left to reach u
+            if self.order.len() - pos < self.u - placed {
+                return;
+            }
+            // Lower bound: J of the current partial state can only grow
+            // in the max term, but admitting more work lowers the −sum
+            // term; bound J_final >= current_max_term − (sum + remaining
+            // maximal possible additions).  Compute cheap optimistic bound.
+            let remaining = self.u - placed;
+            let mut opt = 0.0;
+            // upper bound of addable work per offset: remaining largest
+            // candidates all alive with drift
+            let mut top_sum = 0.0;
+            for i in pos..(pos + remaining).min(self.order.len()) {
+                top_sum += self.candidates[self.order[i]];
+            }
+            for off in 0..=self.wl.h {
+                let gf = self.wl.g as f64;
+                let add = top_sum + remaining as f64 * self.wl.d[off];
+                opt += gf * self.wl.max_at(off) - (self.wl.sum[off] + add);
+            }
+            if opt >= self.best_j {
+                return;
+            }
+
+            let cand = self.order[pos];
+            let s = self.candidates[cand];
+            // Branch: place on each worker with capacity (dedup identical
+            // loads is skipped for clarity; instances are tiny).
+            for g in 0..self.caps.len() {
+                if self.caps[g] == 0 {
+                    continue;
+                }
+                self.caps[g] -= 1;
+                self.cur[cand] = Some(g);
+                self.wl.apply(&[(g, s, 1.0)]);
+                self.run(pos + 1, placed + 1);
+                self.wl.apply(&[(g, -s, -1.0)]);
+                self.cur[cand] = None;
+                self.caps[g] += 1;
+            }
+            // Branch: leave this candidate waiting (only if enough remain).
+            if self.order.len() - pos - 1 >= self.u - placed {
+                self.run(pos + 1, placed);
+            }
+        }
+    }
+
+    let mut dfs = Dfs {
+        wl: base.clone(),
+        candidates,
+        order: &order,
+        caps: caps.to_vec(),
+        u,
+        best_j: f64::INFINITY,
+        best: vec![None; candidates.len()],
+        cur: vec![None; candidates.len()],
+    };
+    dfs.run(0, 0);
+    ExactSolution { placement: dfs.best, j: dfs.best_j }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::policies::{ActiveView, WorkerView};
+
+    fn base(loads: &[f64], horizon: usize) -> WindowedLoads {
+        let views: Vec<WorkerView> = loads
+            .iter()
+            .map(|&l| WorkerView {
+                load: l,
+                free_slots: 4,
+                active: if l > 0.0 {
+                    vec![ActiveView { load: l, pred_remaining: 100 }]
+                } else {
+                    vec![]
+                },
+            })
+            .collect();
+        let d: Vec<f64> = (0..=horizon).map(|h| h as f64).collect();
+        WindowedLoads::from_views(&views, &d, horizon, None)
+    }
+
+    #[test]
+    fn balances_two_workers() {
+        // workers at (10, 0); candidates 10 and 20, both must be admitted.
+        let b = base(&[10.0, 0.0], 0);
+        let sol = solve_exact(&b, &[10.0, 20.0], &[1, 1], 2);
+        // optimal: 20 -> worker 1 (0+20=20), 10 -> worker 0 (10+10=20); J=0
+        assert!((sol.j - 0.0).abs() < 1e-9);
+        assert_eq!(sol.placement[0], Some(0));
+        assert_eq!(sol.placement[1], Some(1));
+    }
+
+    #[test]
+    fn chooses_which_to_admit() {
+        // One slot on worker 1, workers tied at 30.  The admitted request
+        // lands on what becomes the max worker, so ΔJ = (G−1)·s: the
+        // *smaller* candidate is optimal (J: 2·35−65=5 vs 2·55−85=25).
+        let b = base(&[30.0, 30.0], 0);
+        let sol = solve_exact(&b, &[5.0, 25.0], &[0, 1], 1);
+        assert_eq!(sol.placement[0], Some(1));
+        assert_eq!(sol.placement[1], None);
+        assert!((sol.j - 5.0).abs() < 1e-9);
+
+        // Conversely, with a free slot on the *light* worker, admitting
+        // bigger work reduces idle: candidates fill the trough.
+        let b2 = base(&[30.0, 0.0], 0);
+        let sol2 = solve_exact(&b2, &[5.0, 25.0], &[0, 1], 1);
+        assert_eq!(sol2.placement[1], Some(1)); // 25 -> worker 1, J = 2·30−55
+        assert!((sol2.j - 5.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn respects_capacity() {
+        let b = base(&[0.0, 0.0], 0);
+        let sol = solve_exact(&b, &[7.0, 8.0, 9.0], &[2, 1], 3);
+        let w0 = sol.placement.iter().filter(|p| **p == Some(0)).count();
+        let w1 = sol.placement.iter().filter(|p| **p == Some(1)).count();
+        assert_eq!(w0, 2);
+        assert_eq!(w1, 1);
+    }
+
+    #[test]
+    fn exactly_u_admitted() {
+        let b = base(&[5.0, 5.0], 0);
+        let sol = solve_exact(&b, &[1.0, 2.0, 3.0, 4.0], &[2, 2], 2);
+        let admitted = sol.placement.iter().filter(|p| p.is_some()).count();
+        assert_eq!(admitted, 2);
+    }
+
+    #[test]
+    fn windowed_objective_prefers_anticipating_completion() {
+        // Worker 0's active request finishes after this step
+        // (pred_remaining = 1); worker 1's runs forever.  With H=2 the
+        // solver should place the heavy candidate on worker 0, which will
+        // soon be empty — even though both look equal at h=0.
+        let views = vec![
+            WorkerView {
+                load: 50.0,
+                free_slots: 1,
+                active: vec![ActiveView { load: 50.0, pred_remaining: 1 }],
+            },
+            WorkerView {
+                load: 50.0,
+                free_slots: 1,
+                active: vec![ActiveView { load: 50.0, pred_remaining: 100 }],
+            },
+        ];
+        let d = [0.0, 1.0, 2.0];
+        let b = WindowedLoads::from_views(&views, &d, 2, None);
+        let sol = solve_exact(&b, &[40.0, 10.0], &[1, 1], 2);
+        assert_eq!(sol.placement[0], Some(0), "heavy goes to the soon-empty worker");
+        assert_eq!(sol.placement[1], Some(1));
+    }
+}

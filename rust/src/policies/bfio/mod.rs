@@ -1,0 +1,523 @@
+//! BF-IO — Balance Future with Integer Optimization (the paper's
+//! contribution, Section 4).
+//!
+//! At each step `k` the policy solves the integer optimization (IO):
+//! admit `U(k) = min(|R_wait|, Σ_g cap_g)` waiting requests and place them
+//! on workers so as to minimize the accumulated predicted imbalance
+//! `J(S(k)) = Σ_{h=0..H} Imbalance(k+h)`, where predicted trajectories
+//! come from the short-lookahead views `Ŵ_i^H(k)` of the *active*
+//! requests (newly admitted requests are assumed alive through the
+//! window — their completion times are unknown, which is exactly the
+//! paper's "don't predict full jobs" point).
+//!
+//! Solvers:
+//! * exact branch-and-bound ([`exact`]) for tiny instances;
+//! * production path: largest-first greedy seeding (the LPT analogue)
+//!   followed by first-improvement local search over the exchange moves
+//!   (swap / move / replace) — the same exchange steps the paper's
+//!   Lemma 1 / Lemma 5 proofs use, so the H=0 fixed point inherits the
+//!   `s_max`-balance separation property.
+
+pub mod exact;
+pub mod objective;
+
+use objective::WindowedLoads;
+
+use super::{AssignCtx, Assignment, Policy};
+use crate::config::BfIoConfig;
+use crate::util::rng::Rng;
+
+#[derive(Clone, Debug)]
+pub struct BfIo {
+    pub cfg: BfIoConfig,
+    /// Number of heavy/light workers examined per local-search sweep.
+    pub focus: usize,
+    /// Unadmitted candidates sampled per replace scan.
+    pub replace_samples: usize,
+}
+
+impl BfIo {
+    pub fn new(cfg: BfIoConfig) -> BfIo {
+        BfIo { cfg, focus: 8, replace_samples: 64 }
+    }
+
+    pub fn with_horizon(h: usize) -> BfIo {
+        BfIo::new(BfIoConfig::with_horizon(h))
+    }
+}
+
+impl Policy for BfIo {
+    fn name(&self) -> String {
+        format!("BF-IO(H={})", self.cfg.horizon)
+    }
+
+    fn lookahead(&self) -> usize {
+        self.cfg.horizon
+    }
+
+    fn assign(&mut self, ctx: &AssignCtx, rng: &mut Rng) -> Vec<Assignment> {
+        let total_free: usize = ctx.workers.iter().map(|w| w.free_slots).sum();
+        let u = total_free.min(ctx.waiting.len());
+        if u == 0 {
+            return Vec::new();
+        }
+
+        // Candidate pool: the oldest `pool_factor·U` waiting requests.
+        // pool_factor = 1 → the admitted SET is forced (FIFO-fair); the
+        // IO optimizes placement only, as in the paper's Lemma 2.
+        let mut pool_len = u.saturating_mul(self.cfg.pool_factor.max(1));
+        if self.cfg.pool_cap > 0 {
+            pool_len = pool_len.min(self.cfg.pool_cap.max(u));
+        }
+        let pool_len = pool_len.min(ctx.waiting.len());
+        let sizes: Vec<f64> =
+            ctx.waiting[..pool_len].iter().map(|w| w.prefill).collect();
+        let mut free: Vec<usize> =
+            ctx.workers.iter().map(|w| w.free_slots).collect();
+
+        // Mean-field refill: in the overloaded regime, slots predicted to
+        // complete within the window refill immediately with fresh
+        // requests; model them at the waiting pool's mean prefill so the
+        // lookahead doesn't mistake soon-relieved workers for soon-empty
+        // ones (see objective.rs docs).
+        let refill = if self.cfg.refill_model && self.cfg.horizon > 0 && !sizes.is_empty()
+        {
+            Some(sizes.iter().sum::<f64>() / sizes.len() as f64)
+        } else {
+            None
+        };
+        let mut wl = WindowedLoads::from_views(
+            ctx.workers,
+            ctx.cum_drift,
+            self.cfg.horizon,
+            refill,
+        );
+
+        // Tiny instance: solve (IO) exactly.
+        if pool_len <= self.cfg.exact_below && u <= self.cfg.exact_below {
+            let sol = exact::solve_exact(&wl, &sizes, &free, u);
+            return sol
+                .placement
+                .iter()
+                .enumerate()
+                .filter_map(|(c, p)| p.map(|g| (ctx.waiting[c].idx, g)))
+                .collect();
+        }
+
+        // --- Greedy seeding: largest candidate first, argmin-ΔJ worker ---
+        let mut order: Vec<usize> = (0..pool_len).collect();
+        order.sort_by(|&a, &b| sizes[b].partial_cmp(&sizes[a]).unwrap());
+        let mut placement: Vec<Option<usize>> = vec![None; pool_len];
+        let mut per_worker: Vec<Vec<usize>> = vec![Vec::new(); ctx.workers.len()];
+        let mut placed = 0usize;
+        for &c in &order {
+            if placed == u {
+                break;
+            }
+            let s = sizes[c];
+            // Among ΔJ-minimizers prefer the least-loaded target worker:
+            // J is indifferent between below-max placements, but sticky
+            // assignments make concentration a future straggler — the
+            // lexicographic refinement of the paper's Lemma-1 argument.
+            //
+            // Fast path: ΔJ is bounded below by −Σ_h contrib(h), attained
+            // exactly when the placement stays below the running max at
+            // every offset; among those ties the refinement picks the
+            // least-loaded worker.  So if the argmin-load free worker
+            // stays below max everywhere, it is optimal without scanning
+            // all G workers — O(G + H) instead of O(G·H).
+            let mut best: Option<(usize, f64, f64)> = None;
+            let mut argmin: Option<usize> = None;
+            for g in 0..free.len() {
+                if free[g] == 0 {
+                    continue;
+                }
+                if argmin.map(|a| wl.load(g, 0) < wl.load(a, 0)).unwrap_or(true) {
+                    argmin = Some(g);
+                }
+            }
+            if let Some(g) = argmin {
+                let below_max = (0..=wl.h)
+                    .all(|h| wl.load(g, h) + s + wl.d[h] <= wl.max_at(h));
+                if below_max {
+                    best = Some((g, 0.0, 0.0));
+                }
+            }
+            if best.is_none() {
+                for g in 0..free.len() {
+                    if free[g] == 0 {
+                        continue;
+                    }
+                    let dj = wl.eval(&[(g, s, 1.0)]);
+                    let after = wl.load(g, 0) + s;
+                    let better = match best {
+                        None => true,
+                        Some((_, bj, bafter)) => {
+                            dj < bj - 1e-9 || (dj < bj + 1e-9 && after < bafter)
+                        }
+                    };
+                    if better {
+                        best = Some((g, dj, after));
+                    }
+                }
+            }
+            if let Some((g, _, _)) = best {
+                wl.apply(&[(g, s, 1.0)]);
+                free[g] -= 1;
+                placement[c] = Some(g);
+                per_worker[g].push(c);
+                placed += 1;
+            }
+        }
+        debug_assert_eq!(placed, u);
+
+        // --- Local search: swap / move / replace exchange descent ---
+        let eps = 1e-9;
+        for _sweep in 0..self.cfg.max_sweeps {
+            let mut improved = false;
+
+            // Rank workers by current-step predicted load.
+            let mut by_load: Vec<usize> = (0..ctx.workers.len()).collect();
+            by_load.sort_by(|&a, &b| {
+                wl.load(b, 0).partial_cmp(&wl.load(a, 0)).unwrap()
+            });
+            let f = self.focus.min(by_load.len());
+            let heavy: Vec<usize> = by_load[..f].to_vec();
+            let light: Vec<usize> = by_load[by_load.len() - f..].to_vec();
+
+            // Unadmitted sample for replace moves.
+            let unadmitted: Vec<usize> =
+                (0..pool_len).filter(|&c| placement[c].is_none()).collect();
+            let sample: Vec<usize> = if unadmitted.len() <= self.replace_samples {
+                unadmitted.clone()
+            } else {
+                (0..self.replace_samples)
+                    .map(|_| unadmitted[rng.below_usize(unadmitted.len())])
+                    .collect()
+            };
+
+            for &p in &heavy {
+                // iterate over a snapshot: applying moves mutates per_worker
+                let on_p: Vec<usize> = per_worker[p].clone();
+                for x in on_p {
+                    if placement[x] != Some(p) {
+                        continue; // moved by an earlier exchange
+                    }
+                    let sx = sizes[x];
+                    // (worker-delta list, description of move)
+                    let mut best: Option<(f64, Move)> = None;
+                    let consider = |dj: f64, mv: Move, best: &mut Option<(f64, Move)>| {
+                        if dj < -eps && best.as_ref().map(|(bj, _)| dj < *bj).unwrap_or(true)
+                        {
+                            *best = Some((dj, mv));
+                        }
+                    };
+
+                    // move x to a light worker with a free slot
+                    for &q in &light {
+                        if q == p || free[q] == 0 {
+                            continue;
+                        }
+                        let dj = wl.eval(&[(p, -sx, -1.0), (q, sx, 1.0)]);
+                        consider(dj, Move::Transfer { x, p, q }, &mut best);
+                    }
+                    // swap x with an admitted y on a light worker
+                    for &q in &light {
+                        if q == p {
+                            continue;
+                        }
+                        for &y in &per_worker[q] {
+                            let sy = sizes[y];
+                            let dj =
+                                wl.eval(&[(p, sy - sx, 0.0), (q, sx - sy, 0.0)]);
+                            consider(dj, Move::Swap { x, p, y, q }, &mut best);
+                        }
+                    }
+                    // replace x with an unadmitted candidate y (same worker)
+                    for &y in &sample {
+                        if placement[y].is_some() {
+                            continue;
+                        }
+                        let sy = sizes[y];
+                        let dj = wl.eval(&[(p, sy - sx, 0.0)]);
+                        consider(dj, Move::Replace { x, p, y }, &mut best);
+                    }
+
+                    if let Some((_, mv)) = best {
+                        improved = true;
+                        match mv {
+                            Move::Transfer { x, p, q } => {
+                                wl.apply(&[(p, -sizes[x], -1.0), (q, sizes[x], 1.0)]);
+                                per_worker[p].retain(|&c| c != x);
+                                per_worker[q].push(x);
+                                placement[x] = Some(q);
+                                free[p] += 1;
+                                free[q] -= 1;
+                            }
+                            Move::Swap { x, p, y, q } => {
+                                wl.apply(&[
+                                    (p, sizes[y] - sizes[x], 0.0),
+                                    (q, sizes[x] - sizes[y], 0.0),
+                                ]);
+                                per_worker[p].retain(|&c| c != x);
+                                per_worker[q].retain(|&c| c != y);
+                                per_worker[p].push(y);
+                                per_worker[q].push(x);
+                                placement[x] = Some(q);
+                                placement[y] = Some(p);
+                            }
+                            Move::Replace { x, p, y } => {
+                                wl.apply(&[(p, sizes[y] - sizes[x], 0.0)]);
+                                per_worker[p].retain(|&c| c != x);
+                                per_worker[p].push(y);
+                                placement[x] = None;
+                                placement[y] = Some(p);
+                            }
+                        }
+                    }
+                }
+            }
+            if !improved {
+                break;
+            }
+        }
+
+        placement
+            .iter()
+            .enumerate()
+            .filter_map(|(c, p)| p.map(|g| (ctx.waiting[c].idx, g)))
+            .collect()
+    }
+}
+
+#[derive(Clone, Copy, Debug)]
+enum Move {
+    /// Move admitted `x` from worker `p` to a free slot on `q`.
+    Transfer { x: usize, p: usize, q: usize },
+    /// Exchange admitted `x` (on `p`) with admitted `y` (on `q`).
+    Swap { x: usize, p: usize, y: usize, q: usize },
+    /// Un-admit `x` (on `p`) and admit waiting `y` in its place.
+    Replace { x: usize, p: usize, y: usize },
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::policies::{
+        validate_assignments, ActiveView, WaitingView, WorkerView,
+    };
+
+    fn ctx<'a>(
+        workers: &'a [WorkerView],
+        waiting: &'a [WaitingView],
+        drift: &'a [f64],
+        b: usize,
+    ) -> AssignCtx<'a> {
+        AssignCtx { step: 0, batch_cap: b, workers, waiting, cum_drift: drift }
+    }
+
+    fn mk_waiting(sizes: &[f64]) -> Vec<WaitingView> {
+        sizes
+            .iter()
+            .enumerate()
+            .map(|(i, &s)| WaitingView { idx: i, prefill: s, arrival_step: 0 })
+            .collect()
+    }
+
+    #[test]
+    fn admits_exactly_u_and_valid() {
+        let workers = vec![
+            WorkerView { load: 0.0, free_slots: 3, active: vec![] },
+            WorkerView { load: 0.0, free_slots: 2, active: vec![] },
+        ];
+        let waiting = mk_waiting(&[10.0, 20.0, 30.0, 40.0, 50.0, 60.0, 70.0]);
+        let drift = [0.0];
+        let c = ctx(&workers, &waiting, &drift, 3);
+        let mut p = BfIo::with_horizon(0);
+        let a = p.assign(&c, &mut Rng::new(1));
+        validate_assignments(&c, &a).unwrap();
+        assert_eq!(a.len(), 5);
+    }
+
+    #[test]
+    fn h0_balances_fresh_loads() {
+        // Empty cluster, equal capacities: the post-admission max-min gap
+        // of a balanced assignment should be small (Lemma 1: <= s_max for
+        // the optimum; the heuristic should land close).
+        let g = 4;
+        let b = 4;
+        let workers: Vec<WorkerView> = (0..g)
+            .map(|_| WorkerView { load: 0.0, free_slots: b, active: vec![] })
+            .collect();
+        let mut rng = Rng::new(2);
+        let sizes: Vec<f64> =
+            (0..g * b).map(|_| 1.0 + rng.f64() * 99.0).collect();
+        let s_max = sizes.iter().cloned().fold(0.0, f64::max);
+        let waiting = mk_waiting(&sizes);
+        let drift = [0.0];
+        let c = ctx(&workers, &waiting, &drift, b);
+        let mut p = BfIo::with_horizon(0);
+        let a = p.assign(&c, &mut Rng::new(3));
+        assert_eq!(a.len(), g * b);
+        let mut loads = vec![0.0; g];
+        for &(w, gi) in &a {
+            loads[gi] += sizes[w];
+        }
+        let max = loads.iter().cloned().fold(f64::MIN, f64::max);
+        let min = loads.iter().cloned().fold(f64::MAX, f64::min);
+        assert!(
+            max - min <= s_max + 1e-6,
+            "gap {} > s_max {}",
+            max - min,
+            s_max
+        );
+    }
+
+    #[test]
+    fn beats_fcfs_on_imbalance() {
+        // Heterogeneous sizes, empty cluster: BF-IO's post-admission
+        // imbalance must be well below FCFS's.
+        let g = 8;
+        let b = 8;
+        let workers: Vec<WorkerView> = (0..g)
+            .map(|_| WorkerView { load: 0.0, free_slots: b, active: vec![] })
+            .collect();
+        let mut rng = Rng::new(5);
+        let sizes: Vec<f64> = (0..g * b)
+            .map(|_| if rng.bernoulli(0.2) { 1000.0 } else { 10.0 + rng.f64() })
+            .collect();
+        let waiting = mk_waiting(&sizes);
+        let drift = [0.0];
+        let c = ctx(&workers, &waiting, &drift, b);
+
+        let imb = |a: &[Assignment]| {
+            let mut loads = vec![0.0; g];
+            for &(w, gi) in a {
+                loads[gi] += sizes[w];
+            }
+            crate::metrics::imbalance(&loads)
+        };
+        let a_bfio = BfIo::with_horizon(0).assign(&c, &mut Rng::new(7));
+        let a_fcfs =
+            crate::policies::fcfs::Fcfs::new().assign(&c, &mut Rng::new(7));
+        assert!(
+            imb(&a_bfio) < 0.25 * imb(&a_fcfs),
+            "bfio {} vs fcfs {}",
+            imb(&a_bfio),
+            imb(&a_fcfs)
+        );
+    }
+
+    #[test]
+    fn heuristic_close_to_exact_on_small_instances() {
+        use crate::util::prop::Prop;
+        Prop::new(30).check(
+            "bfio-vs-exact",
+            |r| {
+                let g = 2 + r.below_usize(2); // 2..3 workers
+                let n = 4 + r.below_usize(4); // 4..7 candidates
+                let caps: Vec<usize> = (0..g).map(|_| 1 + r.below_usize(2)).collect();
+                let sizes: Vec<f64> =
+                    (0..n).map(|_| (1.0 + r.f64() * 50.0).round()).collect();
+                let base_loads: Vec<f64> =
+                    (0..g).map(|_| (r.f64() * 60.0).round()).collect();
+                (caps, sizes, base_loads)
+            },
+            |(caps, sizes, base_loads)| {
+                let workers: Vec<WorkerView> = base_loads
+                    .iter()
+                    .zip(caps)
+                    .map(|(&l, &c)| WorkerView {
+                        load: l,
+                        free_slots: c,
+                        active: if l > 0.0 {
+                            vec![ActiveView { load: l, pred_remaining: 100 }]
+                        } else {
+                            vec![]
+                        },
+                    })
+                    .collect();
+                let waiting = mk_waiting(sizes);
+                let drift = [0.0];
+                let c = ctx(&workers, &waiting, &drift, 8);
+                let u = c.u_k();
+
+                // heuristic with selection enabled (wide pool), to match
+                // the exact solver's feasible set
+                let mut p = BfIo::new(BfIoConfig {
+                    pool_factor: 64,
+                    ..Default::default()
+                });
+                let a = p.assign(&c, &mut Rng::new(11));
+                let mut loads = base_loads.clone();
+                for &(w, gi) in &a {
+                    loads[gi] += sizes[w];
+                }
+                let j_heur = crate::metrics::imbalance(&loads);
+
+                // exact
+                let wl = WindowedLoads::from_views(&workers, &drift, 0, None);
+                let sol = exact::solve_exact(&wl, sizes, caps, u);
+
+                // Lemma-1-order optimality: the heuristic's fixed point
+                // must be within one s_max of the exact optimum (the
+                // exchange argument's granularity).
+                let s_max = sizes.iter().cloned().fold(0.0, f64::max);
+                if j_heur <= sol.j + s_max + 1e-6 {
+                    Ok(())
+                } else {
+                    Err(format!(
+                        "heuristic J {} vs exact {} (s_max {})",
+                        j_heur, sol.j, s_max
+                    ))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn lookahead_uses_predicted_completions() {
+        // Same situation as the exact-solver test: one worker frees up
+        // next step.  BF-IO(H=2) should prefer it for the heavy request;
+        // BF-IO(H=0) is indifferent (both workers look identical now).
+        let workers = vec![
+            WorkerView {
+                load: 50.0,
+                free_slots: 1,
+                active: vec![ActiveView { load: 50.0, pred_remaining: 1 }],
+            },
+            WorkerView {
+                load: 50.0,
+                free_slots: 1,
+                active: vec![ActiveView { load: 50.0, pred_remaining: 100 }],
+            },
+        ];
+        let waiting = mk_waiting(&[40.0, 10.0]);
+        let drift = [0.0, 1.0, 2.0];
+        let c = ctx(&workers, &waiting, &drift, 2);
+        let mut p = BfIo::with_horizon(2);
+        let a = p.assign(&c, &mut Rng::new(13));
+        let heavy_worker = a.iter().find(|&&(w, _)| w == 0).unwrap().1;
+        assert_eq!(heavy_worker, 0, "heavy request should go to the soon-free worker");
+    }
+
+    #[test]
+    fn empty_wait_queue_no_assignments() {
+        let workers = vec![WorkerView { load: 0.0, free_slots: 2, active: vec![] }];
+        let waiting: Vec<WaitingView> = vec![];
+        let drift = [0.0];
+        let c = ctx(&workers, &waiting, &drift, 2);
+        assert!(BfIo::with_horizon(0).assign(&c, &mut Rng::new(0)).is_empty());
+    }
+
+    #[test]
+    fn pool_cap_still_fills_u() {
+        let workers = vec![WorkerView { load: 0.0, free_slots: 10, active: vec![] }];
+        let waiting = mk_waiting(&(0..50).map(|i| i as f64 + 1.0).collect::<Vec<_>>());
+        let drift = [0.0];
+        let c = ctx(&workers, &waiting, &drift, 10);
+        let mut p = BfIo::new(BfIoConfig { pool_cap: 4, ..Default::default() });
+        let a = p.assign(&c, &mut Rng::new(0));
+        assert_eq!(a.len(), 10, "pool cap must stretch to cover U(k)");
+    }
+}

@@ -1,0 +1,341 @@
+//! Windowed-imbalance objective `J(S(k)) = Σ_{h=0..H} Imbalance(k+h)`
+//! (Section 4 of the paper) with O(H) incremental move evaluation.
+//!
+//! Predicted per-worker load trajectories: an active request with current
+//! workload `w` and predicted remaining steps `r` contributes
+//! `w + D[h]` at offsets `h = 0..min(r, H+1)`, where
+//! `D[h] = Σ_{t=k+1}^{k+h} δ_t` is the cumulative drift.  A newly admitted
+//! request of prefill `s` contributes `s + D[h]` for the whole window
+//! (its completion time is unknown at admission — the paper's point).
+//!
+//! Moves are evaluated against a maintained per-offset top-3 of worker
+//! loads, so ΔJ for add / swap / move / replace costs O(H) instead of
+//! O(G·H); the top-3 is rebuilt in O(G) per offset only when a move that
+//! lowers some load is *applied*.
+
+use crate::policies::WorkerView;
+
+/// Sentinel worker id for empty top-3 slots.
+const NONE_W: usize = usize::MAX;
+
+/// Predicted load trajectories over a window of length `H+1`.
+#[derive(Clone, Debug)]
+pub struct WindowedLoads {
+    /// Number of workers G.
+    pub g: usize,
+    /// Window offsets 0..=h.
+    pub h: usize,
+    /// Cumulative drift D[0..=h].
+    pub d: Vec<f64>,
+    /// Flattened [g * (h+1) + offset] predicted loads.
+    pub loads: Vec<f64>,
+    /// Per-offset Σ_g loads.
+    pub sum: Vec<f64>,
+    /// Per-offset top-3 (load, worker), sorted descending.
+    top3: Vec<[(f64, usize); 3]>,
+}
+
+/// A load change on one worker: `delta(h) = a + b·D[h]` applied at every
+/// offset of the window.
+///   add request s    -> (g, +s, +1)
+///   remove request s -> (g, -s, -1)
+///   swap x (on p) with y (on q) -> (p, y-x, 0), (q, x-y, 0)
+pub type Delta = (usize, f64, f64);
+
+impl WindowedLoads {
+    /// Build from worker views: per-worker histogram of predicted
+    /// remaining steps, then suffix-accumulate — O(G·(B+H)).
+    ///
+    /// `refill` is the mean-field refill model: in the overloaded regime
+    /// a slot that completes at offset `r` is immediately refilled by a
+    /// fresh request (size unknown at prediction time; modeled by the
+    /// waiting pool's mean prefill), contributing `refill + D[h] − D[r]`
+    /// for `h >= r`.  Without this, the lookahead systematically predicts
+    /// soon-completing workers as near-empty and BF-IO "pre-compensates"
+    /// into real imbalance — see EXPERIMENTS.md §Fig 9.
+    pub fn from_views(
+        workers: &[WorkerView],
+        cum_drift: &[f64],
+        horizon: usize,
+        refill: Option<f64>,
+    ) -> Self {
+        let h = horizon.min(cum_drift.len().saturating_sub(1));
+        let g = workers.len();
+        let width = h + 1;
+        let mut loads = vec![0.0; g * width];
+        for (gi, w) in workers.iter().enumerate() {
+            // bucket[r] = (count, sum_w) of requests with min(r, h+1)
+            let mut cnt = vec![0.0f64; width + 1];
+            let mut sw = vec![0.0f64; width + 1];
+            for a in &w.active {
+                let alive = (a.pred_remaining.max(1) as usize).min(width);
+                cnt[alive] += 1.0;
+                sw[alive] += a.load;
+            }
+            // suffix sums: requests alive at offset h are those with
+            // alive > h.
+            let mut c_acc = 0.0;
+            let mut w_acc = 0.0;
+            for off in (0..width).rev() {
+                c_acc += cnt[off + 1];
+                w_acc += sw[off + 1];
+                loads[gi * width + off] = w_acc + c_acc * cum_drift[off];
+            }
+            if let Some(mean_s) = refill {
+                // completions at offset r = requests with alive == r
+                // (they contribute through h = r-1, refill from h = r)
+                let mut n_done = 0.0;
+                let mut d_at_done = 0.0;
+                for off in 0..width {
+                    if off >= 1 && off < width {
+                        n_done += cnt[off];
+                        d_at_done += cnt[off] * cum_drift[off];
+                    }
+                    loads[gi * width + off] +=
+                        n_done * (mean_s + cum_drift[off]) - d_at_done;
+                }
+            }
+        }
+        let mut out = WindowedLoads {
+            g,
+            h,
+            d: cum_drift[..width].to_vec(),
+            loads,
+            sum: vec![0.0; width],
+            top3: vec![[(0.0, NONE_W); 3]; width],
+        };
+        out.rebuild(None);
+        out
+    }
+
+    #[inline]
+    pub fn load(&self, g: usize, off: usize) -> f64 {
+        self.loads[g * (self.h + 1) + off]
+    }
+
+    /// Rebuild per-offset sums and top-3 (all offsets, or one).
+    fn rebuild(&mut self, only_off: Option<usize>) {
+        let width = self.h + 1;
+        let range: Vec<usize> = match only_off {
+            Some(o) => vec![o],
+            None => (0..width).collect(),
+        };
+        for off in range {
+            let mut t = [(f64::NEG_INFINITY, NONE_W); 3];
+            let mut s = 0.0;
+            for g in 0..self.g {
+                let v = self.loads[g * width + off];
+                s += v;
+                if v > t[0].0 {
+                    t = [(v, g), t[0], t[1]];
+                } else if v > t[1].0 {
+                    t = [t[0], (v, g), t[1]];
+                } else if v > t[2].0 {
+                    t[2] = (v, g);
+                }
+            }
+            self.sum[off] = s;
+            self.top3[off] = t;
+        }
+    }
+
+    /// Current maximum load at offset `off`.
+    #[inline]
+    pub fn max_at(&self, off: usize) -> f64 {
+        self.top3[off][0].0
+    }
+
+    /// Objective J = Σ_h (G·max_h − sum_h)  (Eq. 2 summed over the window).
+    pub fn j(&self) -> f64 {
+        let gf = self.g as f64;
+        (0..=self.h)
+            .map(|off| gf * self.max_at(off) - self.sum[off])
+            .sum()
+    }
+
+    /// Max at `off` excluding up to two workers (for move evaluation).
+    #[inline]
+    fn max_excluding(&self, off: usize, e1: usize, e2: usize) -> f64 {
+        for &(v, w) in &self.top3[off] {
+            if w != e1 && w != e2 && w != NONE_W {
+                return v;
+            }
+        }
+        // top-3 exhausted (G <= 2 or pathological): scan.
+        let width = self.h + 1;
+        let mut m = f64::NEG_INFINITY;
+        for g in 0..self.g {
+            if g != e1 && g != e2 {
+                m = m.max(self.loads[g * width + off]);
+            }
+        }
+        if m.is_finite() {
+            m
+        } else {
+            0.0
+        }
+    }
+
+    /// ΔJ of applying the deltas (at most 2 distinct workers), without
+    /// mutating state.  O(H).
+    pub fn eval(&self, deltas: &[Delta]) -> f64 {
+        debug_assert!(deltas.len() <= 2);
+        let gf = self.g as f64;
+        let width = self.h + 1;
+        let (w1, a1, b1) = deltas[0];
+        let (w2, a2, b2) = if deltas.len() > 1 {
+            deltas[1]
+        } else {
+            (NONE_W, 0.0, 0.0)
+        };
+        let mut dj = 0.0;
+        for off in 0..width {
+            let d = self.d[off];
+            let n1 = self.loads[w1 * width + off] + a1 + b1 * d;
+            let mut newmax = self.max_excluding(off, w1, w2).max(n1);
+            let mut dsum = a1 + b1 * d;
+            if w2 != NONE_W {
+                let n2 = self.loads[w2 * width + off] + a2 + b2 * d;
+                newmax = newmax.max(n2);
+                dsum += a2 + b2 * d;
+            }
+            dj += gf * (newmax - self.max_at(off)) - dsum;
+        }
+        dj
+    }
+
+    /// Apply deltas and refresh sums/top-3.
+    pub fn apply(&mut self, deltas: &[Delta]) {
+        let width = self.h + 1;
+        let mut decreased = false;
+        for &(g, a, b) in deltas {
+            for off in 0..width {
+                let delta = a + b * self.d[off];
+                self.loads[g * width + off] += delta;
+                self.sum[off] += delta;
+                if delta < 0.0 {
+                    decreased = true;
+                } else {
+                    // pure increase: maintain top-3 incrementally
+                    let v = self.loads[g * width + off];
+                    let t = &mut self.top3[off];
+                    // remove stale entry for g if present
+                    if let Some(pos) = t.iter().position(|&(_, w)| w == g) {
+                        t[pos] = (v, g);
+                        t.sort_by(|x, y| y.0.partial_cmp(&x.0).unwrap());
+                    } else if v > t[2].0 {
+                        t[2] = (v, g);
+                        t.sort_by(|x, y| y.0.partial_cmp(&x.0).unwrap());
+                    }
+                }
+            }
+        }
+        if decreased {
+            // decrements can promote arbitrary workers into the top-3
+            self.rebuild(None);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::policies::{ActiveView, WorkerView};
+
+    fn views() -> Vec<WorkerView> {
+        vec![
+            WorkerView {
+                load: 30.0,
+                free_slots: 0,
+                active: vec![
+                    ActiveView { load: 10.0, pred_remaining: 1 },
+                    ActiveView { load: 20.0, pred_remaining: 3 },
+                ],
+            },
+            WorkerView {
+                load: 5.0,
+                free_slots: 2,
+                active: vec![ActiveView { load: 5.0, pred_remaining: 10 }],
+            },
+        ]
+    }
+
+    #[test]
+    fn base_trajectories_respect_completions_and_drift() {
+        // unit drift, H=2: D = [0, 1, 2]
+        let wl = WindowedLoads::from_views(&views(), &[0.0, 1.0, 2.0], 2, None);
+        // worker 0, h=0: both active -> 30; h=1: only the r=3 one -> 20+1;
+        // h=2: 20+2.
+        assert_eq!(wl.load(0, 0), 30.0);
+        assert_eq!(wl.load(0, 1), 21.0);
+        assert_eq!(wl.load(0, 2), 22.0);
+        // worker 1 alive throughout: 5, 6, 7.
+        assert_eq!(wl.load(1, 0), 5.0);
+        assert_eq!(wl.load(1, 2), 7.0);
+    }
+
+    #[test]
+    fn j_matches_manual_computation() {
+        let wl = WindowedLoads::from_views(&views(), &[0.0, 1.0, 2.0], 2, None);
+        // offsets: loads (30,5),(21,6),(22,7); G=2
+        let expect = (2.0 * 30.0 - 35.0) + (2.0 * 21.0 - 27.0) + (2.0 * 22.0 - 29.0);
+        assert!((wl.j() - expect).abs() < 1e-9);
+    }
+
+    #[test]
+    fn eval_add_matches_apply() {
+        let mut wl = WindowedLoads::from_views(&views(), &[0.0, 1.0, 2.0], 2, None);
+        let before = wl.j();
+        let dj = wl.eval(&[(1, 12.0, 1.0)]);
+        wl.apply(&[(1, 12.0, 1.0)]);
+        assert!((wl.j() - (before + dj)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn eval_swap_matches_apply() {
+        let mut wl = WindowedLoads::from_views(&views(), &[0.0, 1.0, 2.0], 2, None);
+        // swap x=9 on worker 0 with y=2 on worker 1
+        let deltas = [(0usize, 2.0 - 9.0, 0.0), (1usize, 9.0 - 2.0, 0.0)];
+        let before = wl.j();
+        let dj = wl.eval(&deltas);
+        wl.apply(&deltas);
+        assert!((wl.j() - (before + dj)).abs() < 1e-9);
+        assert!(dj < 0.0, "moving load from heavy to light must reduce J");
+    }
+
+    #[test]
+    fn top3_consistent_after_decrease() {
+        let workers: Vec<WorkerView> = (0..5)
+            .map(|i| WorkerView {
+                load: 10.0 * (i + 1) as f64,
+                free_slots: 1,
+                active: vec![ActiveView {
+                    load: 10.0 * (i + 1) as f64,
+                    pred_remaining: 99,
+                }],
+            })
+            .collect();
+        let mut wl = WindowedLoads::from_views(&workers, &[0.0, 1.0], 1, None);
+        assert_eq!(wl.max_at(0), 50.0);
+        // remove 30 from the max worker (index 4)
+        wl.apply(&[(4, -30.0, 0.0)]);
+        assert_eq!(wl.max_at(0), 40.0);
+        let brute = (0..5).map(|g| wl.load(g, 0)).fold(0.0, f64::max);
+        assert_eq!(wl.max_at(0), brute);
+    }
+
+    #[test]
+    fn eval_with_two_workers_small_g() {
+        // G = 2 so max_excluding must fall back to scanning.
+        let wl = WindowedLoads::from_views(&views(), &[0.0], 0, None);
+        let dj = wl.eval(&[(0, -10.0, 0.0), (1, 10.0, 0.0)]);
+        // loads 30,5 -> 20,15: J from 2*30-35=25 to 2*20-35=5
+        assert!((dj - (5.0 - 25.0)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn horizon_zero_reduces_to_current_imbalance() {
+        let wl = WindowedLoads::from_views(&views(), &[0.0], 0, None);
+        assert!((wl.j() - crate::metrics::imbalance(&[30.0, 5.0])).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,134 @@
+//! First-Come-First-Serve (Algorithm 2 of the paper) — the production
+//! baseline: strict arrival order, each request to the worker with the
+//! most free slots (size-agnostic, deterministic).
+
+use super::{AssignCtx, Assignment, Policy};
+use crate::util::rng::Rng;
+
+#[derive(Clone, Debug, Default)]
+pub struct Fcfs;
+
+impl Fcfs {
+    pub fn new() -> Fcfs {
+        Fcfs
+    }
+}
+
+impl Policy for Fcfs {
+    fn name(&self) -> String {
+        "FCFS".to_string()
+    }
+
+    fn assign(&mut self, ctx: &AssignCtx, _rng: &mut Rng) -> Vec<Assignment> {
+        let mut cap: Vec<usize> = ctx.workers.iter().map(|w| w.free_slots).collect();
+        let u = ctx.u_k();
+        let mut out = Vec::with_capacity(u);
+        // Requests in strict arrival order (waiting is FIFO-ordered).
+        for w in ctx.waiting.iter().take(u) {
+            // argmax cap[g], ties -> lowest index (Algorithm 2).
+            let mut best = 0usize;
+            for g in 1..cap.len() {
+                if cap[g] > cap[best] {
+                    best = g;
+                }
+            }
+            debug_assert!(cap[best] > 0);
+            cap[best] -= 1;
+            out.push((w.idx, best));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::policies::{validate_assignments, WaitingView, WorkerView};
+
+    fn waiting(n: usize) -> Vec<WaitingView> {
+        (0..n)
+            .map(|i| WaitingView {
+                idx: i,
+                prefill: 100.0 - i as f64, // sizes must be ignored
+                arrival_step: i as u64,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn fills_most_free_worker_first() {
+        let workers = vec![
+            WorkerView { load: 0.0, free_slots: 1, active: vec![] },
+            WorkerView { load: 0.0, free_slots: 3, active: vec![] },
+        ];
+        let wait = waiting(4);
+        let drift = [0.0];
+        let ctx = AssignCtx {
+            step: 0,
+            batch_cap: 4,
+            workers: &workers,
+            waiting: &wait,
+            cum_drift: &drift,
+        };
+        let mut p = Fcfs::new();
+        let a = p.assign(&ctx, &mut Rng::new(0));
+        validate_assignments(&ctx, &a).unwrap();
+        assert_eq!(a.len(), 4);
+        // first goes to worker 1 (3 free), then ties resolve deterministically
+        assert_eq!(a[0], (0, 1));
+        // strict arrival order preserved
+        let idxs: Vec<usize> = a.iter().map(|&(i, _)| i).collect();
+        assert_eq!(idxs, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn admits_exactly_u_k() {
+        let workers = vec![WorkerView { load: 0.0, free_slots: 2, active: vec![] }];
+        let wait = waiting(10);
+        let drift = [0.0];
+        let ctx = AssignCtx {
+            step: 0,
+            batch_cap: 2,
+            workers: &workers,
+            waiting: &wait,
+            cum_drift: &drift,
+        };
+        let a = Fcfs::new().assign(&ctx, &mut Rng::new(0));
+        assert_eq!(a.len(), 2);
+    }
+
+    #[test]
+    fn no_capacity_no_assignments() {
+        let workers = vec![WorkerView { load: 5.0, free_slots: 0, active: vec![] }];
+        let wait = waiting(3);
+        let drift = [0.0];
+        let ctx = AssignCtx {
+            step: 0,
+            batch_cap: 1,
+            workers: &workers,
+            waiting: &wait,
+            cum_drift: &drift,
+        };
+        assert!(Fcfs::new().assign(&ctx, &mut Rng::new(0)).is_empty());
+    }
+
+    #[test]
+    fn deterministic() {
+        let workers = vec![
+            WorkerView { load: 1.0, free_slots: 2, active: vec![] },
+            WorkerView { load: 2.0, free_slots: 2, active: vec![] },
+        ];
+        let wait = waiting(4);
+        let drift = [0.0];
+        let ctx = AssignCtx {
+            step: 3,
+            batch_cap: 2,
+            workers: &workers,
+            waiting: &wait,
+            cum_drift: &drift,
+        };
+        let a = Fcfs::new().assign(&ctx, &mut Rng::new(1));
+        let b = Fcfs::new().assign(&ctx, &mut Rng::new(999));
+        assert_eq!(a, b);
+    }
+}

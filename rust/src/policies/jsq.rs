@@ -1,0 +1,124 @@
+//! Join-Shortest-Queue: route each request (in arrival order) to the
+//! worker with the fewest *active requests*.  This is the count-based
+//! policy vLLM/SGLang-style engines deploy; the paper (Appendix A.1)
+//! shows queue length is a poor surrogate for decode-time work because
+//! per-request workloads are unknown and grow with the KV cache.
+
+use super::{AssignCtx, Assignment, Policy};
+use crate::util::rng::Rng;
+
+#[derive(Clone, Debug, Default)]
+pub struct Jsq;
+
+impl Jsq {
+    pub fn new() -> Jsq {
+        Jsq
+    }
+}
+
+impl Policy for Jsq {
+    fn name(&self) -> String {
+        "JSQ".to_string()
+    }
+
+    fn assign(&mut self, ctx: &AssignCtx, _rng: &mut Rng) -> Vec<Assignment> {
+        let mut cap: Vec<usize> = ctx.workers.iter().map(|w| w.free_slots).collect();
+        // active count = B - free (batch_cap is per-worker capacity)
+        let mut count: Vec<usize> =
+            ctx.workers.iter().map(|w| ctx.batch_cap - w.free_slots).collect();
+        let u = ctx.u_k();
+        let mut out = Vec::with_capacity(u);
+        for w in ctx.waiting.iter().take(u) {
+            let mut best: Option<usize> = None;
+            for g in 0..cap.len() {
+                if cap[g] == 0 {
+                    continue;
+                }
+                match best {
+                    None => best = Some(g),
+                    Some(b) if count[g] < count[b] => best = Some(g),
+                    _ => {}
+                }
+            }
+            if let Some(g) = best {
+                cap[g] -= 1;
+                count[g] += 1;
+                out.push((w.idx, g));
+            } else {
+                break;
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::policies::{validate_assignments, WaitingView, WorkerView};
+
+    fn wv(free: usize) -> WorkerView {
+        WorkerView { load: 0.0, free_slots: free, active: vec![] }
+    }
+
+    fn waiting(n: usize) -> Vec<WaitingView> {
+        (0..n)
+            .map(|i| WaitingView { idx: i, prefill: 1.0, arrival_step: 0 })
+            .collect()
+    }
+
+    #[test]
+    fn prefers_fewest_active() {
+        // B=4: worker0 has 3 active (1 free), worker1 has 1 active (3 free).
+        let workers = vec![wv(1), wv(3)];
+        let wait = waiting(2);
+        let drift = [0.0];
+        let ctx = AssignCtx {
+            step: 0,
+            batch_cap: 4,
+            workers: &workers,
+            waiting: &wait,
+            cum_drift: &drift,
+        };
+        let a = Jsq::new().assign(&ctx, &mut Rng::new(0));
+        validate_assignments(&ctx, &a).unwrap();
+        // both land on worker 1 (counts 1 then 2, still < 3)
+        assert_eq!(a, vec![(0, 1), (1, 1)]);
+    }
+
+    #[test]
+    fn balances_counts_not_loads() {
+        // The known JSQ blind spot: worker 0 carries huge load but few
+        // requests; JSQ still routes there.
+        let workers = vec![
+            WorkerView { load: 1e6, free_slots: 3, active: vec![] },
+            WorkerView { load: 10.0, free_slots: 1, active: vec![] },
+        ];
+        let wait = waiting(1);
+        let drift = [0.0];
+        let ctx = AssignCtx {
+            step: 0,
+            batch_cap: 4,
+            workers: &workers,
+            waiting: &wait,
+            cum_drift: &drift,
+        };
+        let a = Jsq::new().assign(&ctx, &mut Rng::new(0));
+        assert_eq!(a, vec![(0, 0)]); // fewest active = worker 0 despite load
+    }
+
+    #[test]
+    fn admits_u_k() {
+        let workers = vec![wv(2), wv(2)];
+        let wait = waiting(10);
+        let drift = [0.0];
+        let ctx = AssignCtx {
+            step: 0,
+            batch_cap: 2,
+            workers: &workers,
+            waiting: &wait,
+            cum_drift: &drift,
+        };
+        assert_eq!(Jsq::new().assign(&ctx, &mut Rng::new(0)).len(), 4);
+    }
+}

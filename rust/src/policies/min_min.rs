@@ -1,0 +1,168 @@
+//! Min-Min and Max-Min schedulers (Appendix A.1), adapted to the decode
+//! router as faithfully as their assumptions allow.
+//!
+//! Classic Min-Min builds an earliest-completion-time matrix
+//! `ECT_{ig} = r_g + p_{ig}` and repeatedly commits the task that can
+//! finish soonest; Max-Min commits the task whose *best* completion is
+//! largest (long-jobs-first).  In decode serving `p_{ig}` is unknowable —
+//! the only size signal at arrival is the prefill length — so the adapted
+//! policies use `ECT_{ig} = L_g + s_i`.  The paper argues (and our
+//! experiments confirm) this remains misaligned with the barrier
+//! objective; both are included as measured baselines.
+
+use super::{AssignCtx, Assignment, Policy};
+use crate::util::rng::Rng;
+
+#[derive(Clone, Debug)]
+pub struct MinMin {
+    /// false = Min-Min, true = Max-Min.
+    pub max_variant: bool,
+}
+
+impl MinMin {
+    pub fn new(max_variant: bool) -> MinMin {
+        MinMin { max_variant }
+    }
+}
+
+impl Policy for MinMin {
+    fn name(&self) -> String {
+        if self.max_variant { "Max-Min" } else { "Min-Min" }.to_string()
+    }
+
+    fn assign(&mut self, ctx: &AssignCtx, _rng: &mut Rng) -> Vec<Assignment> {
+        let mut cap: Vec<usize> = ctx.workers.iter().map(|w| w.free_slots).collect();
+        let mut load: Vec<f64> = ctx.workers.iter().map(|w| w.load).collect();
+        let u = ctx.u_k();
+
+        // Candidate pool: bounded prefix of the wait queue to keep the
+        // O(U·W) selection loop tractable at scale.
+        let pool_cap = (4 * u).max(64).min(ctx.waiting.len());
+        let mut remaining: Vec<bool> = vec![true; pool_cap];
+        let mut out = Vec::with_capacity(u);
+
+        for _ in 0..u {
+            // For each unscheduled task: best worker = argmin load (ECT
+            // = L_g + s_i; the argmin over g doesn't depend on s_i, but
+            // the task selection does).
+            let mut best_g = None;
+            for g in 0..cap.len() {
+                if cap[g] == 0 {
+                    continue;
+                }
+                match best_g {
+                    None => best_g = Some(g),
+                    Some(b) if load[g] < load[b] => best_g = Some(g),
+                    _ => {}
+                }
+            }
+            let Some(g) = best_g else { break };
+
+            // Task choice: min (Min-Min) or max (Max-Min) of ECT = L_g + s_i
+            // over remaining tasks — equivalent to min/max of s_i.
+            let mut pick: Option<usize> = None;
+            for (slot, w) in ctx.waiting.iter().take(pool_cap).enumerate() {
+                if !remaining[slot] {
+                    continue;
+                }
+                let better = match pick {
+                    None => true,
+                    Some(p) => {
+                        let cur = ctx.waiting[p].prefill;
+                        if self.max_variant {
+                            w.prefill > cur
+                        } else {
+                            w.prefill < cur
+                        }
+                    }
+                };
+                if better {
+                    pick = Some(slot);
+                }
+            }
+            let Some(slot) = pick else { break };
+            remaining[slot] = false;
+            cap[g] -= 1;
+            load[g] += ctx.waiting[slot].prefill;
+            out.push((ctx.waiting[slot].idx, g));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::policies::{validate_assignments, WaitingView, WorkerView};
+
+    fn setup() -> (Vec<WorkerView>, Vec<WaitingView>) {
+        let workers = vec![
+            WorkerView { load: 0.0, free_slots: 2, active: vec![] },
+            WorkerView { load: 100.0, free_slots: 2, active: vec![] },
+        ];
+        let waiting = vec![
+            WaitingView { idx: 0, prefill: 50.0, arrival_step: 0 },
+            WaitingView { idx: 1, prefill: 500.0, arrival_step: 0 },
+            WaitingView { idx: 2, prefill: 5.0, arrival_step: 0 },
+        ];
+        (workers, waiting)
+    }
+
+    #[test]
+    fn min_min_commits_smallest_first() {
+        let (workers, waiting) = setup();
+        let drift = [0.0];
+        let ctx = AssignCtx {
+            step: 0,
+            batch_cap: 2,
+            workers: &workers,
+            waiting: &waiting,
+            cum_drift: &drift,
+        };
+        let a = MinMin::new(false).assign(&ctx, &mut Rng::new(0));
+        validate_assignments(&ctx, &a).unwrap();
+        assert_eq!(a.len(), 3);
+        // smallest (idx 2, s=5) first onto empty worker 0
+        assert_eq!(a[0], (2, 0));
+    }
+
+    #[test]
+    fn max_min_commits_largest_first() {
+        let (workers, waiting) = setup();
+        let drift = [0.0];
+        let ctx = AssignCtx {
+            step: 0,
+            batch_cap: 2,
+            workers: &workers,
+            waiting: &waiting,
+            cum_drift: &drift,
+        };
+        let a = MinMin::new(true).assign(&ctx, &mut Rng::new(0));
+        assert_eq!(a[0], (1, 0)); // s=500 first onto empty worker
+    }
+
+    #[test]
+    fn load_tracking_spreads_work() {
+        // Two equal workers, two equal tasks: one each.
+        let workers = vec![
+            WorkerView { load: 0.0, free_slots: 2, active: vec![] },
+            WorkerView { load: 0.0, free_slots: 2, active: vec![] },
+        ];
+        let waiting = vec![
+            WaitingView { idx: 0, prefill: 10.0, arrival_step: 0 },
+            WaitingView { idx: 1, prefill: 10.0, arrival_step: 0 },
+        ];
+        let drift = [0.0];
+        let ctx = AssignCtx {
+            step: 0,
+            batch_cap: 2,
+            workers: &workers,
+            waiting: &waiting,
+            cum_drift: &drift,
+        };
+        let a = MinMin::new(false).assign(&ctx, &mut Rng::new(0));
+        let gs: std::collections::HashSet<usize> =
+            a.iter().map(|&(_, g)| g).collect();
+        assert_eq!(gs.len(), 2);
+    }
+}

@@ -1,0 +1,224 @@
+//! Routing policies: the paper's BF-IO and every baseline it discusses.
+//!
+//! A policy sees, at each step `k`, the per-worker state (current loads,
+//! free slots, lookahead views of active requests) and the waiting pool
+//! (prefill lengths only — decode lengths are unknown at arrival), and
+//! returns a set of `(waiting index, worker)` assignments subject to
+//! capacity.  Assignments are *sticky*: the simulator/coordinator never
+//! migrates a request after placement.
+
+pub mod bfio;
+pub mod fcfs;
+pub mod jsq;
+pub mod least_loaded;
+pub mod min_min;
+pub mod power_of_d;
+pub mod round_robin;
+pub mod throttled;
+
+use crate::util::rng::Rng;
+
+/// Lookahead view of one active request (from the predictor).
+#[derive(Clone, Copy, Debug)]
+pub struct ActiveView {
+    /// Current per-step workload `w_i` (resident KV).
+    pub load: f64,
+    /// Predicted remaining processing steps (>= 1; includes this step).
+    /// This is `Ŵ_i^H(k)` collapsed to its completion offset — in the LLM
+    /// model the profile is determined by (w_i, completion time).
+    pub pred_remaining: u64,
+}
+
+/// One worker's state as visible to the router.
+#[derive(Clone, Debug, Default)]
+pub struct WorkerView {
+    /// Instantaneous workload `L_g(k)` before this step's admissions.
+    pub load: f64,
+    /// Free batch slots `cap[g](k)`.
+    pub free_slots: usize,
+    /// Active-request lookahead views (may be empty if the policy does
+    /// not need per-request detail).
+    pub active: Vec<ActiveView>,
+}
+
+/// One waiting request as visible to the router.
+#[derive(Clone, Copy, Debug)]
+pub struct WaitingView {
+    /// Index into the wait queue (FIFO order: 0 = oldest).
+    pub idx: usize,
+    /// Prefill length `s_i` — the only size signal available at arrival.
+    pub prefill: f64,
+    pub arrival_step: u64,
+}
+
+/// Context handed to a policy at each step.
+#[derive(Clone, Debug)]
+pub struct AssignCtx<'a> {
+    pub step: u64,
+    /// Per-worker batch capacity `B`.
+    pub batch_cap: usize,
+    pub workers: &'a [WorkerView],
+    /// FIFO wait queue views (oldest first).
+    pub waiting: &'a [WaitingView],
+    /// Cumulative future drift `D[h] = Σ_{t=k+1}^{k+h} δ_t`, `h = 0..=H`.
+    /// Always contains at least `[0.0]`.
+    pub cum_drift: &'a [f64],
+}
+
+impl<'a> AssignCtx<'a> {
+    /// `U(k) = min(|R_wait|, Σ_g cap_g)` — the paper's full-utilization
+    /// slot count (Section 4).
+    pub fn u_k(&self) -> usize {
+        let cap: usize = self.workers.iter().map(|w| w.free_slots).sum();
+        cap.min(self.waiting.len())
+    }
+
+    pub fn total_free(&self) -> usize {
+        self.workers.iter().map(|w| w.free_slots).sum()
+    }
+}
+
+/// An admission decision: waiting-queue index → worker index.
+pub type Assignment = (usize, usize);
+
+/// A routing policy.
+pub trait Policy: Send {
+    fn name(&self) -> String;
+
+    /// Decide this step's admissions.  Must respect per-worker capacity
+    /// and assign each waiting index at most once; work-conserving
+    /// policies admit exactly `ctx.u_k()` requests.
+    fn assign(&mut self, ctx: &AssignCtx, rng: &mut Rng) -> Vec<Assignment>;
+
+    /// Lookahead window length `H` this policy wants (0 = none).  The
+    /// simulator sizes the cumulative-drift vector and the per-request
+    /// prediction views accordingly.
+    fn lookahead(&self) -> usize {
+        0
+    }
+}
+
+/// Validate an assignment set against the context.  Returns an error
+/// string describing the first violation (used by the simulator in debug
+/// builds and by the property tests).
+pub fn validate_assignments(ctx: &AssignCtx, assignments: &[Assignment]) -> Result<(), String> {
+    let mut per_worker = vec![0usize; ctx.workers.len()];
+    let mut seen = std::collections::HashSet::new();
+    for &(widx, g) in assignments {
+        if widx >= ctx.waiting.len() {
+            return Err(format!("waiting index {widx} out of range"));
+        }
+        if g >= ctx.workers.len() {
+            return Err(format!("worker index {g} out of range"));
+        }
+        if !seen.insert(widx) {
+            return Err(format!("waiting index {widx} assigned twice"));
+        }
+        per_worker[g] += 1;
+        if per_worker[g] > ctx.workers[g].free_slots {
+            return Err(format!(
+                "worker {g} over capacity: {} > {}",
+                per_worker[g], ctx.workers[g].free_slots
+            ));
+        }
+    }
+    Ok(())
+}
+
+/// Construct a policy by name, e.g. for the CLI:
+/// `fcfs | jsq | rr | pow2 | powd:<d> | least | minmin | maxmin |
+///  throttled:<frac> | bfio | bfio:<H>`.
+pub fn by_name(name: &str) -> Option<Box<dyn Policy>> {
+    match name {
+        "fcfs" => Some(Box::new(fcfs::Fcfs::new())),
+        "jsq" => Some(Box::new(jsq::Jsq::new())),
+        "rr" | "round-robin" => Some(Box::new(round_robin::RoundRobin::new())),
+        "pow2" => Some(Box::new(power_of_d::PowerOfD::new(2))),
+        "least" | "least-loaded" => {
+            Some(Box::new(least_loaded::LeastLoaded::new()))
+        }
+        "minmin" => Some(Box::new(min_min::MinMin::new(false))),
+        "maxmin" => Some(Box::new(min_min::MinMin::new(true))),
+        "bfio" => Some(Box::new(bfio::BfIo::new(
+            crate::config::BfIoConfig::default(),
+        ))),
+        _ => {
+            if let Some(d) = name.strip_prefix("powd:") {
+                d.parse().ok().map(|d| {
+                    Box::new(power_of_d::PowerOfD::new(d)) as Box<dyn Policy>
+                })
+            } else if let Some(f) = name.strip_prefix("throttled:") {
+                f.parse().ok().map(|f| {
+                    Box::new(throttled::Throttled::new(f)) as Box<dyn Policy>
+                })
+            } else if let Some(h) = name.strip_prefix("bfio:") {
+                h.parse().ok().map(|h| {
+                    Box::new(bfio::BfIo::new(
+                        crate::config::BfIoConfig::with_horizon(h),
+                    )) as Box<dyn Policy>
+                })
+            } else {
+                None
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ctx_fixture<'a>(
+        workers: &'a [WorkerView],
+        waiting: &'a [WaitingView],
+        drift: &'a [f64],
+    ) -> AssignCtx<'a> {
+        AssignCtx { step: 0, batch_cap: 4, workers, waiting, cum_drift: drift }
+    }
+
+    fn mk_waiting(n: usize) -> Vec<WaitingView> {
+        (0..n)
+            .map(|i| WaitingView { idx: i, prefill: 10.0 * (i + 1) as f64, arrival_step: 0 })
+            .collect()
+    }
+
+    #[test]
+    fn u_k_min_of_pool_and_capacity() {
+        let workers = vec![
+            WorkerView { load: 0.0, free_slots: 2, active: vec![] },
+            WorkerView { load: 0.0, free_slots: 1, active: vec![] },
+        ];
+        let waiting = mk_waiting(5);
+        let drift = [0.0];
+        let ctx = ctx_fixture(&workers, &waiting, &drift);
+        assert_eq!(ctx.u_k(), 3);
+        let waiting2 = mk_waiting(2);
+        let ctx = ctx_fixture(&workers, &waiting2, &drift);
+        assert_eq!(ctx.u_k(), 2);
+    }
+
+    #[test]
+    fn validation_catches_violations() {
+        let workers = vec![WorkerView { load: 0.0, free_slots: 1, active: vec![] }];
+        let waiting = mk_waiting(3);
+        let drift = [0.0];
+        let ctx = ctx_fixture(&workers, &waiting, &drift);
+        assert!(validate_assignments(&ctx, &[(0, 0)]).is_ok());
+        assert!(validate_assignments(&ctx, &[(0, 0), (1, 0)]).is_err()); // capacity
+        assert!(validate_assignments(&ctx, &[(0, 0), (0, 0)]).is_err()); // dup
+        assert!(validate_assignments(&ctx, &[(9, 0)]).is_err()); // range
+        assert!(validate_assignments(&ctx, &[(0, 5)]).is_err()); // worker range
+    }
+
+    #[test]
+    fn by_name_constructs_all() {
+        for n in [
+            "fcfs", "jsq", "rr", "pow2", "powd:3", "least", "minmin", "maxmin",
+            "throttled:0.8", "bfio", "bfio:40",
+        ] {
+            assert!(by_name(n).is_some(), "policy {n}");
+        }
+        assert!(by_name("nope").is_none());
+        assert_eq!(by_name("bfio:40").unwrap().name(), "BF-IO(H=40)");
+    }
+}

@@ -1,0 +1,118 @@
+//! Round-Robin dispatch: the i-th arriving request goes to worker
+//! `((i-1) mod G) + 1` (Appendix A.1).  Deterministic and size-agnostic;
+//! the `round_robin_killer` trace forces all heavy requests onto one
+//! worker, losing a factor Ω(G) versus balanced placement.
+
+use super::{AssignCtx, Assignment, Policy};
+use crate::util::rng::Rng;
+
+#[derive(Clone, Debug, Default)]
+pub struct RoundRobin {
+    next: usize,
+}
+
+impl RoundRobin {
+    pub fn new() -> RoundRobin {
+        RoundRobin { next: 0 }
+    }
+}
+
+impl Policy for RoundRobin {
+    fn name(&self) -> String {
+        "RoundRobin".to_string()
+    }
+
+    fn assign(&mut self, ctx: &AssignCtx, _rng: &mut Rng) -> Vec<Assignment> {
+        let g_total = ctx.workers.len();
+        let mut cap: Vec<usize> = ctx.workers.iter().map(|w| w.free_slots).collect();
+        let u = ctx.u_k();
+        let mut out = Vec::with_capacity(u);
+        for w in ctx.waiting.iter().take(u) {
+            // advance the cursor to the next worker with a free slot
+            let mut placed = false;
+            for off in 0..g_total {
+                let g = (self.next + off) % g_total;
+                if cap[g] > 0 {
+                    cap[g] -= 1;
+                    out.push((w.idx, g));
+                    self.next = (g + 1) % g_total;
+                    placed = true;
+                    break;
+                }
+            }
+            if !placed {
+                break;
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::policies::{validate_assignments, WaitingView, WorkerView};
+
+    fn wv(free: usize) -> WorkerView {
+        WorkerView { load: 0.0, free_slots: free, active: vec![] }
+    }
+
+    fn waiting(n: usize) -> Vec<WaitingView> {
+        (0..n)
+            .map(|i| WaitingView { idx: i, prefill: 1.0, arrival_step: 0 })
+            .collect()
+    }
+
+    #[test]
+    fn cycles_through_workers() {
+        let workers = vec![wv(2), wv(2), wv(2)];
+        let wait = waiting(6);
+        let drift = [0.0];
+        let ctx = AssignCtx {
+            step: 0,
+            batch_cap: 2,
+            workers: &workers,
+            waiting: &wait,
+            cum_drift: &drift,
+        };
+        let mut p = RoundRobin::new();
+        let a = p.assign(&ctx, &mut Rng::new(0));
+        validate_assignments(&ctx, &a).unwrap();
+        let ws: Vec<usize> = a.iter().map(|&(_, g)| g).collect();
+        assert_eq!(ws, vec![0, 1, 2, 0, 1, 2]);
+    }
+
+    #[test]
+    fn cursor_persists_across_steps() {
+        let workers = vec![wv(4), wv(4)];
+        let drift = [0.0];
+        let mut p = RoundRobin::new();
+        let wait = waiting(1);
+        let ctx = AssignCtx {
+            step: 0,
+            batch_cap: 4,
+            workers: &workers,
+            waiting: &wait,
+            cum_drift: &drift,
+        };
+        assert_eq!(p.assign(&ctx, &mut Rng::new(0)), vec![(0, 0)]);
+        assert_eq!(p.assign(&ctx, &mut Rng::new(0)), vec![(0, 1)]);
+        assert_eq!(p.assign(&ctx, &mut Rng::new(0)), vec![(0, 0)]);
+    }
+
+    #[test]
+    fn skips_full_workers() {
+        let workers = vec![wv(0), wv(2)];
+        let wait = waiting(2);
+        let drift = [0.0];
+        let ctx = AssignCtx {
+            step: 0,
+            batch_cap: 2,
+            workers: &workers,
+            waiting: &wait,
+            cum_drift: &drift,
+        };
+        let a = RoundRobin::new().assign(&ctx, &mut Rng::new(0));
+        assert_eq!(a, vec![(0, 1), (1, 1)]);
+    }
+}

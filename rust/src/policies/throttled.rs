@@ -1,0 +1,99 @@
+//! Throttled Load Balancing (Appendix A.1): enforce a per-worker
+//! concurrency threshold `Θ = ⌈frac·B⌉` and route each request to the
+//! first worker below its threshold.  Demonstrates the paper's point that
+//! capping concurrency is *not* minimizing the per-step maximum: it can
+//! leave slots idle (not work-conserving) while a heavy request still
+//! gates the barrier.
+
+use super::{AssignCtx, Assignment, Policy};
+use crate::util::rng::Rng;
+
+#[derive(Clone, Debug)]
+pub struct Throttled {
+    /// Threshold as a fraction of B (0 < frac <= 1).
+    pub frac: f64,
+}
+
+impl Throttled {
+    pub fn new(frac: f64) -> Throttled {
+        assert!(frac > 0.0 && frac <= 1.0);
+        Throttled { frac }
+    }
+}
+
+impl Policy for Throttled {
+    fn name(&self) -> String {
+        format!("Throttled({:.0}%)", self.frac * 100.0)
+    }
+
+    fn assign(&mut self, ctx: &AssignCtx, _rng: &mut Rng) -> Vec<Assignment> {
+        let theta = ((ctx.batch_cap as f64) * self.frac).ceil() as usize;
+        let mut active: Vec<usize> =
+            ctx.workers.iter().map(|w| ctx.batch_cap - w.free_slots).collect();
+        let mut cap: Vec<usize> = ctx.workers.iter().map(|w| w.free_slots).collect();
+        let mut out = Vec::new();
+        for w in ctx.waiting.iter() {
+            let slot = (0..cap.len()).find(|&g| cap[g] > 0 && active[g] < theta);
+            match slot {
+                Some(g) => {
+                    cap[g] -= 1;
+                    active[g] += 1;
+                    out.push((w.idx, g));
+                }
+                None => break, // all workers at threshold: hold back
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::policies::{validate_assignments, WaitingView, WorkerView};
+
+    fn waiting(n: usize) -> Vec<WaitingView> {
+        (0..n)
+            .map(|i| WaitingView { idx: i, prefill: 1.0, arrival_step: 0 })
+            .collect()
+    }
+
+    #[test]
+    fn respects_threshold_not_capacity() {
+        // B = 10, frac = 0.5 -> Θ = 5; workers empty.
+        let workers = vec![
+            WorkerView { load: 0.0, free_slots: 10, active: vec![] },
+            WorkerView { load: 0.0, free_slots: 10, active: vec![] },
+        ];
+        let wait = waiting(30);
+        let drift = [0.0];
+        let ctx = AssignCtx {
+            step: 0,
+            batch_cap: 10,
+            workers: &workers,
+            waiting: &wait,
+            cum_drift: &drift,
+        };
+        let a = Throttled::new(0.5).assign(&ctx, &mut Rng::new(0));
+        validate_assignments(&ctx, &a).unwrap();
+        // only 2×5 admitted although 20 slots are free: NOT work-conserving
+        assert_eq!(a.len(), 10);
+        assert!(a.len() < ctx.u_k());
+    }
+
+    #[test]
+    fn full_fraction_equals_capacity() {
+        let workers = vec![WorkerView { load: 0.0, free_slots: 4, active: vec![] }];
+        let wait = waiting(10);
+        let drift = [0.0];
+        let ctx = AssignCtx {
+            step: 0,
+            batch_cap: 4,
+            workers: &workers,
+            waiting: &wait,
+            cum_drift: &drift,
+        };
+        let a = Throttled::new(1.0).assign(&ctx, &mut Rng::new(0));
+        assert_eq!(a.len(), 4);
+    }
+}

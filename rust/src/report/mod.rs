@@ -1,0 +1,143 @@
+//! Result emission: CSV files, markdown tables, and ASCII sparkline plots
+//! for terminal-friendly reproduction of the paper's figures.
+
+use std::io::Write;
+use std::path::Path;
+
+/// Write a CSV file: header + rows.
+pub fn write_csv(
+    path: &Path,
+    header: &[&str],
+    rows: &[Vec<String>],
+) -> anyhow::Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    writeln!(f, "{}", header.join(","))?;
+    for row in rows {
+        writeln!(f, "{}", row.join(","))?;
+    }
+    Ok(())
+}
+
+/// Format a markdown table.
+pub fn markdown_table(header: &[&str], rows: &[Vec<String>]) -> String {
+    let mut out = String::new();
+    out.push_str(&format!("| {} |\n", header.join(" | ")));
+    out.push_str(&format!(
+        "|{}\n",
+        header.iter().map(|_| "---|").collect::<String>()
+    ));
+    for row in rows {
+        out.push_str(&format!("| {} |\n", row.join(" | ")));
+    }
+    out
+}
+
+/// Render a series as a unicode sparkline (e.g. power over time).
+pub fn sparkline(values: &[f64], width: usize) -> String {
+    const BARS: [char; 8] = ['▁', '▂', '▃', '▄', '▅', '▆', '▇', '█'];
+    if values.is_empty() || width == 0 {
+        return String::new();
+    }
+    // downsample to `width` buckets by averaging
+    let n = values.len();
+    let mut buckets = Vec::with_capacity(width.min(n));
+    let per = (n as f64 / width.min(n) as f64).max(1.0);
+    let mut i = 0.0;
+    while (i as usize) < n {
+        let lo = i as usize;
+        let hi = ((i + per) as usize).min(n).max(lo + 1);
+        let avg = values[lo..hi].iter().sum::<f64>() / (hi - lo) as f64;
+        buckets.push(avg);
+        i += per;
+    }
+    let lo = buckets.iter().cloned().fold(f64::INFINITY, f64::min);
+    let hi = buckets.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    let span = (hi - lo).max(1e-12);
+    buckets
+        .iter()
+        .map(|&v| {
+            let t = ((v - lo) / span * 7.0).round() as usize;
+            BARS[t.min(7)]
+        })
+        .collect()
+}
+
+/// Render a labeled horizontal bar chart (terminal figure stand-in).
+pub fn bar_chart(labels: &[String], values: &[f64], width: usize) -> String {
+    assert_eq!(labels.len(), values.len());
+    let max = values.iter().cloned().fold(f64::NEG_INFINITY, f64::max).max(1e-12);
+    let label_w = labels.iter().map(|l| l.len()).max().unwrap_or(0);
+    let mut out = String::new();
+    for (l, &v) in labels.iter().zip(values) {
+        let n = ((v / max) * width as f64).round() as usize;
+        out.push_str(&format!(
+            "{:<lw$} | {}{} {:.4e}\n",
+            l,
+            "█".repeat(n),
+            " ".repeat(width - n.min(width)),
+            v,
+            lw = label_w
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn csv_roundtrip() {
+        let dir = std::env::temp_dir().join("bfio_report_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("t.csv");
+        write_csv(
+            &p,
+            &["a", "b"],
+            &[vec!["1".into(), "2".into()], vec!["3".into(), "4".into()]],
+        )
+        .unwrap();
+        let text = std::fs::read_to_string(&p).unwrap();
+        assert_eq!(text, "a,b\n1,2\n3,4\n");
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn markdown_shape() {
+        let md = markdown_table(&["x", "y"], &[vec!["1".into(), "2".into()]]);
+        assert!(md.contains("| x | y |"));
+        assert!(md.contains("| 1 | 2 |"));
+        assert!(md.lines().count() == 3);
+    }
+
+    #[test]
+    fn sparkline_monotone() {
+        let s = sparkline(&[0.0, 1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0], 8);
+        assert_eq!(s.chars().count(), 8);
+        assert!(s.starts_with('▁'));
+        assert!(s.ends_with('█'));
+    }
+
+    #[test]
+    fn sparkline_handles_flat_and_empty() {
+        assert_eq!(sparkline(&[], 10), "");
+        let s = sparkline(&[5.0; 20], 5);
+        assert_eq!(s.chars().count(), 5);
+    }
+
+    #[test]
+    fn bar_chart_scales() {
+        let out = bar_chart(
+            &["a".to_string(), "bb".to_string()],
+            &[1.0, 2.0],
+            10,
+        );
+        let lines: Vec<&str> = out.lines().collect();
+        assert_eq!(lines.len(), 2);
+        assert!(lines[1].matches('█').count() == 10);
+        assert!(lines[0].matches('█').count() == 5);
+    }
+}

@@ -1,0 +1,389 @@
+//! PJRT runtime: loads the AOT-compiled TinyLM artifacts (HLO text) and
+//! executes prefill / decode steps from Rust.  Python never runs here —
+//! `make artifacts` produced everything this module needs:
+//!
+//! * `meta.json` — model config, parameter ABI, artifact index, golden case;
+//! * `params.bin` — flat little-endian f32 parameters;
+//! * `{prefill,decode}_*.hlo.txt` — one executable per (batch, KV-capacity)
+//!   variant.  The coordinator picks the smallest KV variant that covers a
+//!   worker's longest resident sequence, so heavier workers genuinely run
+//!   larger attention computations (the paper's load-dependent
+//!   `T_local^(g)` realized with static XLA shapes).
+//!
+//! Interchange is HLO *text*: jax >= 0.5 serializes protos with 64-bit
+//! instruction ids that xla_extension 0.5.1 rejects; the text parser
+//! reassigns ids (see /opt/xla-example/README.md).
+
+pub mod model;
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// One AOT-compiled executable variant.
+#[derive(Clone, Debug)]
+pub struct ArtifactEntry {
+    pub name: String,
+    pub kind: String, // "prefill" | "decode"
+    pub batch: usize,
+    pub kv_capacity: usize,
+    pub prompt_len: Option<usize>,
+    pub file: String,
+}
+
+/// Parameter ABI entry: name, shape, element offset into params.bin.
+#[derive(Clone, Debug)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub offset: usize,
+}
+
+/// Golden trajectory for cross-language verification.
+#[derive(Clone, Debug)]
+pub struct Golden {
+    pub kv_capacity: usize,
+    pub prompt: Vec<Vec<i32>>,
+    pub next_tokens: Vec<i32>,
+    pub positions: Vec<i32>,
+    pub logits: Vec<f32>,
+    pub rtol: f64,
+    pub atol: f64,
+}
+
+/// Parsed `meta.json`.
+#[derive(Clone, Debug)]
+pub struct Meta {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub head_dim: usize,
+    pub n_layers: usize,
+    pub d_ff: usize,
+    pub n_params: usize,
+    pub params: Vec<ParamSpec>,
+    pub artifacts: Vec<ArtifactEntry>,
+    pub golden: Golden,
+}
+
+impl Meta {
+    pub fn parse(text: &str) -> Result<Meta> {
+        let v = Json::parse(text).map_err(|e| anyhow!("meta.json: {e}"))?;
+        let model = v.get("model").context("meta.json: missing model")?;
+        let gi = |o: &Json, k: &str| -> Result<usize> {
+            o.get(k)
+                .and_then(Json::as_usize)
+                .ok_or_else(|| anyhow!("meta.json: missing {k}"))
+        };
+        let params = v
+            .get("params")
+            .and_then(Json::as_arr)
+            .context("meta.json: missing params")?
+            .iter()
+            .map(|p| -> Result<ParamSpec> {
+                Ok(ParamSpec {
+                    name: p
+                        .get("name")
+                        .and_then(Json::as_str)
+                        .context("param name")?
+                        .to_string(),
+                    shape: p
+                        .get("shape")
+                        .and_then(Json::as_arr)
+                        .context("param shape")?
+                        .iter()
+                        .map(|d| d.as_usize().unwrap_or(0))
+                        .collect(),
+                    offset: p.get("offset").and_then(Json::as_usize).context("offset")?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let artifacts = v
+            .get("artifacts")
+            .and_then(Json::as_arr)
+            .context("meta.json: missing artifacts")?
+            .iter()
+            .map(|a| -> Result<ArtifactEntry> {
+                Ok(ArtifactEntry {
+                    name: a.get("name").and_then(Json::as_str).context("name")?.into(),
+                    kind: a.get("kind").and_then(Json::as_str).context("kind")?.into(),
+                    batch: gi(a, "batch")?,
+                    kv_capacity: gi(a, "kv_capacity")?,
+                    prompt_len: a.get("prompt_len").and_then(Json::as_usize),
+                    file: a.get("file").and_then(Json::as_str).context("file")?.into(),
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let g = v.get("golden").context("meta.json: missing golden")?;
+        let int_mat = |k: &str| -> Result<Vec<Vec<i32>>> {
+            Ok(g.get(k)
+                .and_then(Json::as_arr)
+                .context("golden matrix")?
+                .iter()
+                .map(|row| {
+                    row.as_arr()
+                        .unwrap_or(&[])
+                        .iter()
+                        .map(|x| x.as_f64().unwrap_or(0.0) as i32)
+                        .collect()
+                })
+                .collect())
+        };
+        let int_vec = |k: &str| -> Result<Vec<i32>> {
+            Ok(g.get(k)
+                .and_then(Json::as_arr)
+                .context("golden vector")?
+                .iter()
+                .map(|x| x.as_f64().unwrap_or(0.0) as i32)
+                .collect())
+        };
+        let golden = Golden {
+            kv_capacity: gi(g, "kv_capacity")?,
+            prompt: int_mat("prompt")?,
+            next_tokens: int_vec("next_tokens")?,
+            positions: int_vec("positions")?,
+            logits: Vec::new(), // loaded separately from golden.bin
+            rtol: g.get("rtol").and_then(Json::as_f64).unwrap_or(1e-4),
+            atol: g.get("atol").and_then(Json::as_f64).unwrap_or(1e-4),
+        };
+        Ok(Meta {
+            vocab: gi(model, "vocab")?,
+            d_model: gi(model, "d_model")?,
+            n_heads: gi(model, "n_heads")?,
+            head_dim: gi(model, "head_dim")?,
+            n_layers: gi(model, "n_layers")?,
+            d_ff: gi(model, "d_ff")?,
+            n_params: gi(model, "n_params")?,
+            params,
+            artifacts,
+            golden,
+        })
+    }
+
+    /// Total parameter count (for MFU estimates).
+    pub fn param_count(&self) -> usize {
+        self.n_params
+    }
+
+    /// Sorted list of available decode KV capacities.
+    pub fn decode_capacities(&self) -> Vec<usize> {
+        let mut caps: Vec<usize> = self
+            .artifacts
+            .iter()
+            .filter(|a| a.kind == "decode")
+            .map(|a| a.kv_capacity)
+            .collect();
+        caps.sort_unstable();
+        caps
+    }
+
+    pub fn decode_batch(&self) -> usize {
+        self.artifacts
+            .iter()
+            .find(|a| a.kind == "decode")
+            .map(|a| a.batch)
+            .unwrap_or(0)
+    }
+
+    pub fn artifact(&self, kind: &str, kv_capacity: usize) -> Result<&ArtifactEntry> {
+        self.artifacts
+            .iter()
+            .find(|a| a.kind == kind && a.kv_capacity == kv_capacity)
+            .ok_or_else(|| anyhow!("no {kind} artifact with kv_capacity {kv_capacity}"))
+    }
+}
+
+/// The PJRT runtime: client + compiled executables + host parameters.
+///
+/// Field order matters: Rust drops fields in declaration order, and PJRT
+/// buffers/executables must be freed while the client is still alive, so
+/// `client` is declared last.
+pub struct Runtime {
+    /// Device-resident copies of the parameters, uploaded lazily on the
+    /// first decode step (saves the ~75 % of per-step host→device bytes
+    /// the weights would otherwise cost — see EXPERIMENTS.md §Perf).
+    /// Lazy because TFRT CPU uploads are asynchronous: a buffer must be
+    /// consumed by an execution before it may be dropped safely.
+    pub param_buffers: Vec<xla::PjRtBuffer>,
+    exes: BTreeMap<String, xla::PjRtLoadedExecutable>,
+    pub meta: Meta,
+    dir: PathBuf,
+    /// Parameters as literals, ABI order (kept for the prefill path and
+    /// for tests).
+    pub params: Vec<xla::Literal>,
+    pub client: xla::PjRtClient,
+}
+
+impl Runtime {
+    /// Load artifacts from a directory (does not compile yet; executables
+    /// are compiled lazily per variant and cached).
+    pub fn load(dir: &Path) -> Result<Runtime> {
+        let meta_text = std::fs::read_to_string(dir.join("meta.json")).with_context(
+            || format!("reading {}/meta.json — run `make artifacts`", dir.display()),
+        )?;
+        let mut meta = Meta::parse(&meta_text)?;
+
+        // golden logits
+        let golden_bytes = std::fs::read(dir.join("golden.bin"))?;
+        meta.golden.logits = bytes_to_f32(&golden_bytes);
+
+        // params.bin -> one literal per parameter
+        let bytes = std::fs::read(dir.join("params.bin"))?;
+        let flat = bytes_to_f32(&bytes);
+        if flat.len() != meta.n_params {
+            bail!("params.bin has {} f32s, meta says {}", flat.len(), meta.n_params);
+        }
+        let mut params = Vec::with_capacity(meta.params.len());
+        for spec in &meta.params {
+            let n: usize = spec.shape.iter().product();
+            let slice = &flat[spec.offset..spec.offset + n];
+            let dims: Vec<i64> = spec.shape.iter().map(|&d| d as i64).collect();
+            let lit = xla::Literal::vec1(slice)
+                .reshape(&dims)
+                .with_context(|| format!("reshape param {}", spec.name))?;
+            params.push(lit);
+        }
+
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Runtime {
+            client,
+            meta,
+            dir: dir.to_path_buf(),
+            params,
+            param_buffers: Vec::new(),
+            exes: BTreeMap::new(),
+        })
+    }
+
+    /// Ensure the executable for an artifact variant is compiled; returns
+    /// its cache key.  Split from [`Runtime::executable`] so callers can
+    /// hold `&self` borrows (e.g. parameter literals) while executing.
+    pub fn ensure_compiled(&mut self, kind: &str, kv_capacity: usize) -> Result<String> {
+        let entry = self.meta.artifact(kind, kv_capacity)?.clone();
+        if !self.exes.contains_key(&entry.name) {
+            let path = self.dir.join(&entry.file);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("artifact path not utf-8")?,
+            )?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self.client.compile(&comp)?;
+            self.exes.insert(entry.name.clone(), exe);
+        }
+        Ok(entry.name)
+    }
+
+    /// Fetch a compiled executable by cache key (after `ensure_compiled`).
+    pub fn executable_by_name(&self, name: &str) -> Result<&xla::PjRtLoadedExecutable> {
+        self.exes
+            .get(name)
+            .ok_or_else(|| anyhow!("executable {name} not compiled"))
+    }
+
+    /// Compile (or fetch cached) the executable for an artifact variant.
+    pub fn executable(
+        &mut self,
+        kind: &str,
+        kv_capacity: usize,
+    ) -> Result<&xla::PjRtLoadedExecutable> {
+        let name = self.ensure_compiled(kind, kv_capacity)?;
+        self.executable_by_name(&name)
+    }
+
+    /// Number of compiled executables currently cached.
+    pub fn compiled_count(&self) -> usize {
+        self.exes.len()
+    }
+
+    /// Upload parameters to the device if not already resident.
+    pub fn ensure_param_buffers(&mut self) -> Result<()> {
+        if self.param_buffers.is_empty() {
+            self.param_buffers = self
+                .params
+                .iter()
+                .map(|lit| self.client.buffer_from_host_literal(None, lit))
+                .collect::<Result<Vec<_>, _>>()?;
+        }
+        Ok(())
+    }
+}
+
+/// Reinterpret little-endian bytes as f32s.
+pub fn bytes_to_f32(bytes: &[u8]) -> Vec<f32> {
+    bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const META_SAMPLE: &str = r#"{
+      "fingerprint": "x",
+      "model": {"vocab": 32, "d_model": 16, "n_heads": 2, "head_dim": 8,
+                "n_layers": 1, "d_ff": 32, "n_params": 100},
+      "params": [
+        {"name": "embed", "shape": [32, 16], "offset": 0},
+        {"name": "ln_f", "shape": [16], "offset": 512}
+      ],
+      "artifacts": [
+        {"name": "decode_b2_l16", "kind": "decode", "batch": 2,
+         "kv_capacity": 16, "file": "decode_b2_l16.hlo.txt"},
+        {"name": "decode_b2_l32", "kind": "decode", "batch": 2,
+         "kv_capacity": 32, "file": "decode_b2_l32.hlo.txt"},
+        {"name": "prefill_b2_t4_l16", "kind": "prefill", "batch": 2,
+         "prompt_len": 4, "kv_capacity": 16, "file": "p.hlo.txt"}
+      ],
+      "golden": {"kv_capacity": 16, "prompt": [[1,2],[3,4]],
+                 "next_tokens": [5, 6], "positions": [2, 2],
+                 "logits_file": "golden.bin", "logits_shape": [2, 32],
+                 "rtol": 0.0002, "atol": 0.0002}
+    }"#;
+
+    #[test]
+    fn meta_parses() {
+        let m = Meta::parse(META_SAMPLE).unwrap();
+        assert_eq!(m.vocab, 32);
+        assert_eq!(m.params.len(), 2);
+        assert_eq!(m.params[1].offset, 512);
+        assert_eq!(m.decode_capacities(), vec![16, 32]);
+        assert_eq!(m.decode_batch(), 2);
+        assert_eq!(m.golden.prompt, vec![vec![1, 2], vec![3, 4]]);
+        assert!(m.artifact("decode", 16).is_ok());
+        assert!(m.artifact("decode", 99).is_err());
+    }
+
+    #[test]
+    fn meta_rejects_garbage() {
+        assert!(Meta::parse("{}").is_err());
+        assert!(Meta::parse("not json").is_err());
+    }
+
+    #[test]
+    fn bytes_to_f32_roundtrip() {
+        let xs = [1.5f32, -2.25, 0.0, 1e-7];
+        let bytes: Vec<u8> = xs.iter().flat_map(|x| x.to_le_bytes()).collect();
+        assert_eq!(bytes_to_f32(&bytes), xs);
+    }
+
+    #[test]
+    fn real_artifacts_load_if_present() {
+        let dir = Path::new(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"));
+        if !dir.join("meta.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let rt = Runtime::load(dir).unwrap();
+        assert!(rt.meta.n_params > 0);
+        assert_eq!(rt.params.len(), rt.meta.params.len());
+        assert!(!rt.meta.decode_capacities().is_empty());
+        assert_eq!(
+            rt.meta.golden.logits.len(),
+            rt.meta.golden.next_tokens.len() * rt.meta.vocab
+        );
+    }
+}

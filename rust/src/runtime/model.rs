@@ -1,0 +1,297 @@
+//! TinyLM host-side state and execution: prefill a batch of prompts, then
+//! step the decoder one barrier-synchronized token at a time.
+//!
+//! The KV cache lives in [`ModelState`] between steps and is threaded
+//! through the compiled executable (inputs → outputs) each call.  When a
+//! sequence outgrows the variant's capacity, [`Runtime::grow_state`] pads
+//! the cache on the host and switches to the next KV-capacity variant —
+//! the "one compiled executable per model variant" pattern.
+
+use anyhow::{bail, Context, Result};
+
+use super::Runtime;
+
+/// Host-side decode state for one worker's batch.
+pub struct ModelState {
+    pub batch: usize,
+    pub kv_capacity: usize,
+    /// Next KV write index per sequence (== current resident length).
+    pub positions: Vec<i32>,
+    pub k: xla::Literal,
+    pub v: xla::Literal,
+}
+
+impl ModelState {
+    /// Resident KV length per sequence.
+    pub fn lengths(&self) -> Vec<i32> {
+        self.positions.clone()
+    }
+
+    /// Aggregate resident tokens (the worker's `L_g` in paper terms).
+    pub fn total_load(&self) -> i64 {
+        self.positions.iter().map(|&p| p as i64).sum()
+    }
+
+    /// Longest resident sequence.
+    pub fn max_len(&self) -> i32 {
+        self.positions.iter().copied().max().unwrap_or(0)
+    }
+}
+
+impl Runtime {
+    /// Run the prefill executable on a batch of equal-length prompts.
+    /// Returns (last-token logits [B*vocab], decode state).
+    pub fn prefill_batch(
+        &mut self,
+        prompts: &[Vec<i32>],
+        kv_capacity: usize,
+    ) -> Result<(Vec<f32>, ModelState)> {
+        let entry = self.meta.artifact("prefill", kv_capacity)?.clone();
+        let b = entry.batch;
+        let t = entry.prompt_len.context("prefill artifact missing prompt_len")?;
+        if prompts.len() != b {
+            bail!("prefill batch {} != artifact batch {}", prompts.len(), b);
+        }
+        for p in prompts {
+            if p.len() != t {
+                bail!("prompt length {} != artifact prompt_len {}", p.len(), t);
+            }
+        }
+        let flat: Vec<i32> = prompts.iter().flatten().copied().collect();
+        let tokens = xla::Literal::vec1(&flat).reshape(&[b as i64, t as i64])?;
+
+        let name = self.ensure_compiled("prefill", kv_capacity)?;
+        let mut inputs: Vec<&xla::Literal> = self.params.iter().collect();
+        inputs.push(&tokens);
+
+        let exe = self.executable_by_name(&name)?;
+        let result = exe.execute::<&xla::Literal>(&inputs)?[0][0].to_literal_sync()?;
+        let (logits_l, k, v) = result.to_tuple3()?;
+        let logits = logits_l.to_vec::<f32>()?;
+        Ok((
+            logits,
+            ModelState {
+                batch: b,
+                kv_capacity,
+                positions: vec![t as i32; b],
+                k,
+                v,
+            },
+        ))
+    }
+
+    /// One decode step: feed `tokens` (one per sequence), write KV at the
+    /// current positions, return logits [B*vocab].  Positions advance.
+    pub fn decode_step(
+        &mut self,
+        state: &mut ModelState,
+        tokens: &[i32],
+    ) -> Result<Vec<f32>> {
+        if tokens.len() != state.batch {
+            bail!("decode tokens {} != batch {}", tokens.len(), state.batch);
+        }
+        if state.max_len() as usize >= state.kv_capacity {
+            bail!(
+                "KV capacity {} exhausted (max position {}) — grow_state first",
+                state.kv_capacity,
+                state.max_len()
+            );
+        }
+        let name = self.ensure_compiled("decode", state.kv_capacity)?;
+        self.ensure_param_buffers()?;
+        // Parameters stay device-resident; only the small per-step inputs
+        // (tokens, positions) and the KV state are uploaded.
+        let tok = self.client.buffer_from_host_buffer(
+            tokens,
+            &[state.batch],
+            None,
+        )?;
+        let pos = self.client.buffer_from_host_buffer(
+            &state.positions,
+            &[state.batch],
+            None,
+        )?;
+        let k = self.client.buffer_from_host_literal(None, &state.k)?;
+        let v = self.client.buffer_from_host_literal(None, &state.v)?;
+
+        let mut inputs: Vec<&xla::PjRtBuffer> = self.param_buffers.iter().collect();
+        inputs.push(&tok);
+        inputs.push(&pos);
+        inputs.push(&k);
+        inputs.push(&v);
+
+        let exe = self.executable_by_name(&name)?;
+        let result = exe.execute_b::<&xla::PjRtBuffer>(&inputs)?[0][0].to_literal_sync()?;
+        let (logits_l, k, v) = result.to_tuple3()?;
+        state.k = k;
+        state.v = v;
+        for p in state.positions.iter_mut() {
+            *p += 1;
+        }
+        Ok(logits_l.to_vec::<f32>()?)
+    }
+
+    /// Pad the KV cache to a larger capacity variant (host-side copy).
+    pub fn grow_state(&mut self, state: ModelState, new_capacity: usize) -> Result<ModelState> {
+        if new_capacity <= state.kv_capacity {
+            bail!("grow_state: {} <= current {}", new_capacity, state.kv_capacity);
+        }
+        // Validate the target variant exists before copying.
+        self.meta.artifact("decode", new_capacity)?;
+        let m = &self.meta;
+        let (layers, b, h, dh) = (m.n_layers, state.batch, m.n_heads, m.head_dim);
+        let old_l = state.kv_capacity;
+        let grow = |lit: &xla::Literal| -> Result<xla::Literal> {
+            let data = lit.to_vec::<f32>()?;
+            let mut out = vec![0f32; layers * b * new_capacity * h * dh];
+            let row = h * dh;
+            for layer in 0..layers {
+                for bi in 0..b {
+                    for l in 0..old_l {
+                        let src = ((layer * b + bi) * old_l + l) * row;
+                        let dst = ((layer * b + bi) * new_capacity + l) * row;
+                        out[dst..dst + row].copy_from_slice(&data[src..src + row]);
+                    }
+                }
+            }
+            Ok(xla::Literal::vec1(&out).reshape(&[
+                layers as i64,
+                b as i64,
+                new_capacity as i64,
+                h as i64,
+                dh as i64,
+            ])?)
+        };
+        Ok(ModelState {
+            batch: state.batch,
+            kv_capacity: new_capacity,
+            positions: state.positions,
+            k: grow(&state.k)?,
+            v: grow(&state.v)?,
+        })
+    }
+
+    /// Smallest decode variant whose capacity covers `needed` tokens.
+    pub fn variant_for(&self, needed: usize) -> Option<usize> {
+        self.meta
+            .decode_capacities()
+            .into_iter()
+            .find(|&c| c >= needed)
+    }
+
+    /// Replay the golden trajectory from `meta.json` through the compiled
+    /// artifacts and return the max |Δ| against `golden.bin`.  This is the
+    /// cross-language (jax → HLO text → PJRT-from-Rust) correctness gate.
+    pub fn verify_golden(&mut self) -> Result<f32> {
+        let golden = self.meta.golden.clone();
+        let (_, mut state) = self.prefill_batch(&golden.prompt, golden.kv_capacity)?;
+        if state.positions != golden.positions {
+            bail!(
+                "golden positions mismatch: {:?} vs {:?}",
+                state.positions,
+                golden.positions
+            );
+        }
+        let logits = self.decode_step(&mut state, &golden.next_tokens)?;
+        if logits.len() != golden.logits.len() {
+            bail!("golden logits size {} vs {}", logits.len(), golden.logits.len());
+        }
+        let mut max_err = 0f32;
+        for (a, b) in logits.iter().zip(&golden.logits) {
+            let err = (a - b).abs() / (1.0 + b.abs() * golden.rtol as f32 / golden.atol as f32);
+            max_err = max_err.max((a - b).abs().min(err));
+        }
+        let tol = (golden.atol as f32).max(
+            golden.rtol as f32
+                * golden.logits.iter().fold(0f32, |m, x| m.max(x.abs())),
+        );
+        if max_err > tol {
+            bail!("golden verification failed: max err {} > tol {}", max_err, tol);
+        }
+        Ok(max_err)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::Path;
+
+    fn runtime() -> Option<Runtime> {
+        let dir = Path::new(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"));
+        if !dir.join("meta.json").exists() {
+            eprintln!("skipping: artifacts not built (run `make artifacts`)");
+            return None;
+        }
+        Some(Runtime::load(dir).unwrap())
+    }
+
+    #[test]
+    fn golden_verifies_end_to_end() {
+        let Some(mut rt) = runtime() else { return };
+        let err = rt.verify_golden().expect("golden must verify");
+        eprintln!("golden max err = {err}");
+    }
+
+    #[test]
+    fn decode_chain_advances_positions() {
+        let Some(mut rt) = runtime() else { return };
+        let golden = rt.meta.golden.clone();
+        let (logits, mut state) = rt
+            .prefill_batch(&golden.prompt, golden.kv_capacity)
+            .unwrap();
+        assert_eq!(logits.len(), state.batch * rt.meta.vocab);
+        let t0 = state.positions[0];
+        // Greedy-decode 4 tokens.
+        let mut tokens = golden.next_tokens.clone();
+        for _ in 0..4 {
+            let logits = rt.decode_step(&mut state, &tokens).unwrap();
+            assert!(logits.iter().all(|x| x.is_finite()));
+            tokens = argmax_rows(&logits, rt.meta.vocab);
+        }
+        assert_eq!(state.positions[0], t0 + 4);
+    }
+
+    #[test]
+    fn grow_state_preserves_decode() {
+        let Some(mut rt) = runtime() else { return };
+        let caps = rt.meta.decode_capacities();
+        if caps.len() < 2 {
+            return;
+        }
+        let golden = rt.meta.golden.clone();
+        let (_, state_small) =
+            rt.prefill_batch(&golden.prompt, caps[0]).unwrap();
+        let (_, mut state_ref) =
+            rt.prefill_batch(&golden.prompt, caps[0]).unwrap();
+        let mut grown = rt.grow_state(state_small, caps[1]).unwrap();
+        let a = rt.decode_step(&mut grown, &golden.next_tokens).unwrap();
+        let b = rt.decode_step(&mut state_ref, &golden.next_tokens).unwrap();
+        for (x, y) in a.iter().zip(&b) {
+            assert!((x - y).abs() < 2e-4, "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn variant_selection() {
+        let Some(rt) = runtime() else { return };
+        let caps = rt.meta.decode_capacities();
+        assert_eq!(rt.variant_for(1), Some(caps[0]));
+        assert_eq!(rt.variant_for(caps[0]), Some(caps[0]));
+        assert_eq!(rt.variant_for(caps[0] + 1), caps.get(1).copied());
+        assert_eq!(rt.variant_for(usize::MAX), None);
+    }
+
+    fn argmax_rows(logits: &[f32], vocab: usize) -> Vec<i32> {
+        logits
+            .chunks_exact(vocab)
+            .map(|row| {
+                row.iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .unwrap()
+                    .0 as i32
+            })
+            .collect()
+    }
+}

@@ -1,0 +1,447 @@
+//! Discrete-event simulator of barrier-synchronized, data-parallel LLM
+//! decode (Section 6.2 of the paper).
+//!
+//! Per step `k`:
+//! 1. arrivals with `arrival_step <= k` join the FIFO wait queue;
+//! 2. the routing policy admits waiting requests into free batch slots
+//!    (assignments are sticky — no migration, no preemption);
+//! 3. the step executes: every active request generates one token; the
+//!    wall-clock advances by `Δt = C + t_ℓ·max_g L_g(k)` (Eq. 19) and
+//!    metrics/energy are recorded on the post-admission loads;
+//! 4. requests whose `o_i` steps have elapsed complete and free their
+//!    slot; survivors grow by the drift increment `δ_age` (Definition 2,
+//!    age-indexed so that each request's workload profile `W_i` is fixed
+//!    — which is what makes `W(I)` policy-independent, Eq. 11).
+
+pub mod predictor;
+
+use crate::config::{PowerConfig, SimConfig};
+use crate::metrics::{Recorder, Report};
+use crate::policies::{
+    validate_assignments, ActiveView, AssignCtx, Policy, WaitingView, WorkerView,
+};
+use crate::util::rng::Rng;
+use crate::workload::Request;
+use predictor::Predictor;
+
+/// One active (decoding) request inside a worker's batch.
+#[derive(Clone, Debug)]
+struct Active {
+    /// Request id (kept for trace debugging / future eviction support).
+    #[allow(dead_code)]
+    id: u64,
+    /// Current per-step workload `w_i` (resident KV).
+    w: f64,
+    /// Remaining processing steps, >= 1 while active.
+    remaining: u64,
+    /// Age in completed processing steps (drift index).
+    age: u64,
+    /// Output length `o_i` (for TPOT).
+    o: u64,
+    /// Wall-clock time at arrival (router visibility) and admission.
+    arrival_clock: f64,
+    admit_clock: f64,
+}
+
+/// The simulator: configuration + predictor; traces and policies are
+/// supplied per run so one simulator can sweep both.
+#[derive(Clone, Debug)]
+pub struct Simulator {
+    pub cfg: SimConfig,
+    pub power: PowerConfig,
+    pub predictor: Predictor,
+}
+
+/// Result of one simulated run.
+#[derive(Clone, Debug)]
+pub struct SimResult {
+    pub policy: String,
+    pub report: Report,
+    pub g: usize,
+    pub b: usize,
+    pub seed: u64,
+    /// Steps actually executed.
+    pub steps: u64,
+    /// Requests completed / admitted / left waiting at the end.
+    pub completed: u64,
+    pub admitted: u64,
+    pub leftover_waiting: usize,
+}
+
+impl Simulator {
+    pub fn new(cfg: SimConfig) -> Simulator {
+        Simulator { cfg, power: PowerConfig::a100(), predictor: Predictor::Oracle }
+    }
+
+    pub fn with_power(mut self, power: PowerConfig) -> Simulator {
+        self.power = power;
+        self
+    }
+
+    pub fn with_predictor(mut self, p: Predictor) -> Simulator {
+        self.predictor = p;
+        self
+    }
+
+    /// Run `policy` over `trace` (must be sorted by `arrival_step`).
+    pub fn run(&self, trace: &[Request], policy: &mut dyn Policy) -> SimResult {
+        let g = self.cfg.g;
+        let b = self.cfg.b;
+        let horizon = policy.lookahead();
+        let mut rng = Rng::new(self.cfg.seed ^ 0xB1F0);
+        let mut recorder = Recorder::new(
+            self.power,
+            self.cfg.t_token,
+            self.cfg.c_overhead,
+            self.cfg.warmup_steps,
+        );
+        if self.cfg.record_series {
+            let sampled: Vec<usize> = (0..g.min(self.cfg.sample_workers)).collect();
+            recorder = recorder.with_series(sampled);
+        }
+
+        let mut workers: Vec<Vec<Active>> = vec![Vec::with_capacity(b); g];
+        // FIFO wait queue split into a small `carry` head (leftovers of
+        // previously exposed prefixes) and the untouched `rest`.  Policies
+        // only ever see a bounded prefix, so admission never needs to
+        // rebuild the (potentially millions-deep) backlog — O(view_cap)
+        // per step instead of O(|queue|).
+        let mut carry: Vec<(Request, f64)> = Vec::new();
+        let mut rest: std::collections::VecDeque<(Request, f64)> = Default::default();
+        let mut ptr = 0usize; // next undiscovered trace entry
+        let mut admitted = 0u64;
+        let mut completed = 0u64;
+        let mut step: u64 = 0;
+        let mut views: Vec<WorkerView> = Vec::with_capacity(g);
+        let mut waiting_views: Vec<WaitingView> = Vec::new();
+
+        loop {
+            // 1. arrivals become visible
+            while ptr < trace.len() && trace[ptr].arrival_step <= step {
+                rest.push_back((trace[ptr].clone(), recorder.clock()));
+                ptr += 1;
+            }
+
+            // 2. admission
+            let total_free: usize =
+                workers.iter().map(|a| b - a.len()).sum();
+            let wait_len = carry.len() + rest.len();
+            if total_free > 0 && wait_len > 0 {
+                let cum_drift = self.cfg.drift.cumulative(step, horizon.max(1));
+                views.clear();
+                for acts in &workers {
+                    views.push(WorkerView {
+                        load: acts.iter().map(|a| a.w).sum(),
+                        free_slots: b - acts.len(),
+                        active: acts
+                            .iter()
+                            .map(|a| ActiveView {
+                                load: a.w,
+                                pred_remaining: self
+                                    .predictor
+                                    .predict(a.remaining, horizon as u64, &mut rng),
+                            })
+                            .collect(),
+                    });
+                }
+                // Cap the exposed wait-queue prefix: policies only ever
+                // consider a bounded pool, and building 10^5 views per
+                // step is wasted work.  Must stay >= total_free so that
+                // U(k) is unaffected.
+                let view_cap = wait_len.min((total_free * 4).max(4096));
+                // Pull the prefix into `carry` so it is contiguous.
+                while carry.len() < view_cap {
+                    carry.push(rest.pop_front().expect("wait_len accounting"));
+                }
+                waiting_views.clear();
+                for (i, (r, _)) in carry[..view_cap].iter().enumerate() {
+                    waiting_views.push(WaitingView {
+                        idx: i,
+                        prefill: r.prefill,
+                        arrival_step: r.arrival_step,
+                    });
+                }
+                let ctx = AssignCtx {
+                    step,
+                    batch_cap: b,
+                    workers: &views,
+                    waiting: &waiting_views,
+                    cum_drift: &cum_drift,
+                };
+                let assignments = policy.assign(&ctx, &mut rng);
+                debug_assert!(
+                    validate_assignments(&ctx, &assignments).is_ok(),
+                    "{:?}",
+                    validate_assignments(&ctx, &assignments)
+                );
+                if !assignments.is_empty() {
+                    let mut taken = vec![false; view_cap];
+                    for &(widx, gi) in &assignments {
+                        let (r, arrival_clock) = &carry[widx];
+                        debug_assert!(workers[gi].len() < b);
+                        workers[gi].push(Active {
+                            id: r.id,
+                            w: r.prefill,
+                            remaining: r.decode_len,
+                            age: 0,
+                            o: r.decode_len,
+                            arrival_clock: *arrival_clock,
+                            admit_clock: recorder.clock(),
+                        });
+                        taken[widx] = true;
+                        admitted += 1;
+                    }
+                    let mut kept = Vec::with_capacity(view_cap - assignments.len());
+                    for (i, r) in carry.drain(..).enumerate() {
+                        if i >= view_cap || !taken[i] {
+                            kept.push(r);
+                        }
+                    }
+                    carry = kept;
+                }
+            }
+
+            // 3. execute the barrier-synchronized step
+            let loads: Vec<f64> = workers
+                .iter()
+                .map(|acts| acts.iter().map(|a| a.w).sum())
+                .collect();
+            let active_count: usize = workers.iter().map(|a| a.len()).sum();
+            if active_count == 0 && ptr >= trace.len() && carry.is_empty() && rest.is_empty() {
+                break; // drained
+            }
+            recorder.step(step, &loads, active_count);
+
+            // 4. advance / complete / drift
+            let finish_clock = recorder.clock();
+            let drift = &self.cfg.drift;
+            for acts in workers.iter_mut() {
+                let mut i = 0;
+                while i < acts.len() {
+                    acts[i].remaining -= 1;
+                    acts[i].age += 1;
+                    if acts[i].remaining == 0 {
+                        let a = acts.swap_remove(i);
+                        recorder.complete_request_full(
+                            a.arrival_clock,
+                            a.admit_clock,
+                            finish_clock,
+                            a.o,
+                        );
+                        completed += 1;
+                    } else {
+                        let age = acts[i].age;
+                        acts[i].w += drift.delta(age);
+                        i += 1;
+                    }
+                }
+            }
+
+            step += 1;
+            if self.cfg.max_steps > 0 && step >= self.cfg.max_steps {
+                break;
+            }
+        }
+
+        SimResult {
+            policy: policy.name(),
+            report: recorder.finish(),
+            g,
+            b,
+            seed: self.cfg.seed,
+            steps: step,
+            completed,
+            admitted,
+            leftover_waiting: carry.len() + rest.len(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::policies::fcfs::Fcfs;
+    use crate::policies::jsq::Jsq;
+    use crate::workload::{
+        generate_trace, ArrivalProcess, Drift, GeometricSampler,
+    };
+
+    fn small_cfg() -> SimConfig {
+        SimConfig { g: 4, b: 4, seed: 1, ..SimConfig::default() }
+    }
+
+    fn small_trace(seed: u64) -> Vec<Request> {
+        let sampler = GeometricSampler::new(5, 50, 0.2);
+        let arrivals = ArrivalProcess::Fixed { per_step: 2, initial_backlog: 30 };
+        let mut rng = Rng::new(seed);
+        generate_trace(&sampler, &arrivals, 50, &mut rng)
+    }
+
+    #[test]
+    fn drains_and_completes_everything() {
+        let sim = Simulator::new(small_cfg());
+        let trace = small_trace(1);
+        let res = sim.run(&trace, &mut Fcfs::new());
+        assert_eq!(res.completed as usize, trace.len());
+        assert_eq!(res.admitted as usize, trace.len());
+        assert_eq!(res.leftover_waiting, 0);
+        assert!(res.steps > 0);
+    }
+
+    #[test]
+    fn token_conservation() {
+        // Every request generates exactly o_i tokens.
+        let sim = Simulator::new(small_cfg());
+        let trace = small_trace(2);
+        let expect: f64 = trace.iter().map(|r| r.decode_len as f64).sum();
+        let res = sim.run(&trace, &mut Fcfs::new());
+        assert!(
+            (res.report.total_tokens - expect).abs() < 1e-9,
+            "{} vs {}",
+            res.report.total_tokens,
+            expect
+        );
+    }
+
+    #[test]
+    fn workload_conservation_across_policies() {
+        // W(I) = Σ_i Σ_j w_i^(j) is policy-independent (Eq. 11).
+        let sim = Simulator::new(small_cfg());
+        let trace = small_trace(3);
+        let expect: f64 = trace
+            .iter()
+            .map(|r| r.total_workload(&Drift::Unit))
+            .sum();
+        let a = sim.run(&trace, &mut Fcfs::new());
+        let b = sim.run(&trace, &mut Jsq::new());
+        assert!((a.report.total_workload - expect).abs() < 1e-6);
+        assert!((b.report.total_workload - expect).abs() < 1e-6);
+    }
+
+    #[test]
+    fn capacity_never_exceeded() {
+        // Indirectly: admitted at any time <= G·B; with B=4, G=4 and a
+        // deep backlog, the first step must admit exactly 16.
+        let sim = Simulator::new(small_cfg());
+        let trace = small_trace(4);
+        let res = sim.run(&trace, &mut Fcfs::new());
+        assert!(res.completed as usize == trace.len());
+    }
+
+    #[test]
+    fn zero_drift_constant_workloads() {
+        let mut cfg = small_cfg();
+        cfg.drift = Drift::Zero;
+        let sim = Simulator::new(cfg);
+        let trace = vec![Request {
+            id: 0,
+            arrival_step: 0,
+            prefill: 10.0,
+            decode_len: 5,
+        }];
+        let res = sim.run(&trace, &mut Fcfs::new());
+        // workload = 10 for 5 steps
+        assert!((res.report.total_workload - 50.0).abs() < 1e-9);
+        assert_eq!(res.steps, 5);
+    }
+
+    #[test]
+    fn unit_drift_kv_growth() {
+        let sim = Simulator::new(small_cfg());
+        let trace = vec![Request {
+            id: 0,
+            arrival_step: 0,
+            prefill: 3.0,
+            decode_len: 4,
+        }];
+        let res = sim.run(&trace, &mut Fcfs::new());
+        // W = 3+4+5+6 = 18 (the paper's example profile)
+        assert!((res.report.total_workload - 18.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn time_model_applied_per_step() {
+        let mut cfg = small_cfg();
+        cfg.c_overhead = 1.0;
+        cfg.t_token = 0.5;
+        let sim = Simulator::new(cfg);
+        let trace = vec![Request {
+            id: 0,
+            arrival_step: 0,
+            prefill: 2.0,
+            decode_len: 2,
+        }];
+        let res = sim.run(&trace, &mut Fcfs::new());
+        // steps: L=2 -> dt=2; L=3 -> dt=2.5; total 4.5
+        assert!((res.report.wall_time_s - 4.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn tpot_simple_case() {
+        let mut cfg = small_cfg();
+        cfg.c_overhead = 1.0;
+        cfg.t_token = 0.0;
+        let sim = Simulator::new(cfg);
+        let trace = vec![Request {
+            id: 0,
+            arrival_step: 0,
+            prefill: 1.0,
+            decode_len: 4,
+        }];
+        let res = sim.run(&trace, &mut Fcfs::new());
+        // 4 steps of 1s each, admitted at clock 0 -> tpot = 4/4 = 1
+        assert!((res.report.tpot_s - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn max_steps_caps_run() {
+        let mut cfg = small_cfg();
+        cfg.max_steps = 10;
+        let sim = Simulator::new(cfg);
+        let trace = small_trace(5);
+        let res = sim.run(&trace, &mut Fcfs::new());
+        assert_eq!(res.steps, 10);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let sim = Simulator::new(small_cfg());
+        let trace = small_trace(6);
+        let a = sim.run(&trace, &mut Fcfs::new());
+        let b = sim.run(&trace, &mut Fcfs::new());
+        assert_eq!(a.report.avg_imbalance, b.report.avg_imbalance);
+        assert_eq!(a.report.wall_time_s, b.report.wall_time_s);
+    }
+
+    #[test]
+    fn series_recording_when_enabled() {
+        let mut cfg = small_cfg();
+        cfg.record_series = true;
+        cfg.sample_workers = 2;
+        let sim = Simulator::new(cfg);
+        let trace = small_trace(7);
+        let res = sim.run(&trace, &mut Fcfs::new());
+        let s = res.report.series.unwrap();
+        assert_eq!(s.time.len() as u64, res.steps);
+        assert_eq!(s.worker_loads.len(), 2);
+    }
+
+    #[test]
+    fn bfio_lower_imbalance_than_fcfs_on_heterogeneous_load() {
+        use crate::policies::bfio::BfIo;
+        let cfg = SimConfig { g: 8, b: 8, seed: 9, ..SimConfig::default() };
+        let sampler = GeometricSampler::new(1, 500, 0.1);
+        let arrivals = ArrivalProcess::Fixed { per_step: 8, initial_backlog: 200 };
+        let mut rng = Rng::new(9);
+        let trace = generate_trace(&sampler, &arrivals, 200, &mut rng);
+        let sim = Simulator::new(cfg);
+        let f = sim.run(&trace, &mut Fcfs::new());
+        let b = sim.run(&trace, &mut BfIo::with_horizon(0));
+        assert!(
+            b.report.avg_imbalance < 0.8 * f.report.avg_imbalance,
+            "bfio {} vs fcfs {}",
+            b.report.avg_imbalance,
+            f.report.avg_imbalance
+        );
+    }
+}

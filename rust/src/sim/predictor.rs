@@ -1,0 +1,115 @@
+//! Short-lookahead predictors: the `Ŵ_i^H(k)` interface of Section 4.
+//!
+//! The paper's key informational point: BF-IO does not need full-job
+//! predictions — only whether *ongoing* jobs finish within a small
+//! window, a signal that is realistically obtainable (termination tokens,
+//! "in conclusion" cues, progress counters).  The simulator exposes the
+//! true remaining length to a predictor which degrades it accordingly:
+//!
+//! * [`Predictor::Oracle`] — exact remaining steps (upper bound on
+//!   achievable quality);
+//! * [`Predictor::WindowOracle`] — exact *within the window*, "runs
+//!   forever" beyond it: the minimal interface the paper assumes;
+//! * [`Predictor::Noisy`] — window oracle with multiplicative noise and
+//!   false-negative flips, modeling realistic lightweight classifiers;
+//! * [`Predictor::Pessimistic`] — no signal at all (every job looks
+//!   immortal): BF-IO degrades gracefully to current-step balancing.
+
+use crate::util::rng::Rng;
+
+/// A remaining-steps value that means "beyond the lookahead window".
+pub const FAR_FUTURE: u64 = u64::MAX / 4;
+
+#[derive(Clone, Debug)]
+pub enum Predictor {
+    Oracle,
+    WindowOracle,
+    Noisy {
+        /// Std-dev of multiplicative noise on the remaining estimate.
+        sigma_frac: f64,
+        /// Probability a within-window completion is missed entirely.
+        miss_prob: f64,
+    },
+    Pessimistic,
+}
+
+impl Predictor {
+    /// Predict remaining steps for an active request, given the window
+    /// length `h` the consuming policy uses.
+    pub fn predict(&self, true_remaining: u64, h: u64, rng: &mut Rng) -> u64 {
+        match self {
+            Predictor::Oracle => true_remaining,
+            Predictor::WindowOracle => {
+                if true_remaining <= h {
+                    true_remaining
+                } else {
+                    FAR_FUTURE
+                }
+            }
+            Predictor::Noisy { sigma_frac, miss_prob } => {
+                if true_remaining <= h {
+                    if rng.bernoulli(*miss_prob) {
+                        FAR_FUTURE
+                    } else {
+                        let noise = 1.0 + sigma_frac * rng.normal();
+                        ((true_remaining as f64 * noise).round().max(1.0)) as u64
+                    }
+                } else {
+                    FAR_FUTURE
+                }
+            }
+            Predictor::Pessimistic => FAR_FUTURE,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn oracle_exact() {
+        let mut rng = Rng::new(1);
+        assert_eq!(Predictor::Oracle.predict(7, 0, &mut rng), 7);
+        assert_eq!(Predictor::Oracle.predict(1_000_000, 40, &mut rng), 1_000_000);
+    }
+
+    #[test]
+    fn window_oracle_truncates() {
+        let mut rng = Rng::new(2);
+        let p = Predictor::WindowOracle;
+        assert_eq!(p.predict(5, 40, &mut rng), 5);
+        assert_eq!(p.predict(41, 40, &mut rng), FAR_FUTURE);
+        assert_eq!(p.predict(40, 40, &mut rng), 40);
+    }
+
+    #[test]
+    fn pessimistic_always_far() {
+        let mut rng = Rng::new(3);
+        let p = Predictor::Pessimistic;
+        assert_eq!(p.predict(1, 100, &mut rng), FAR_FUTURE);
+    }
+
+    #[test]
+    fn noisy_in_window_stays_positive_and_close() {
+        let mut rng = Rng::new(4);
+        let p = Predictor::Noisy { sigma_frac: 0.2, miss_prob: 0.0 };
+        let mut sum = 0.0;
+        let n = 10_000;
+        for _ in 0..n {
+            let v = p.predict(10, 40, &mut rng);
+            assert!(v >= 1);
+            assert!(v < FAR_FUTURE);
+            sum += v as f64;
+        }
+        let mean = sum / n as f64;
+        assert!((mean - 10.0).abs() < 0.5, "mean {mean}");
+    }
+
+    #[test]
+    fn noisy_miss_prob_flips_to_far() {
+        let mut rng = Rng::new(5);
+        let p = Predictor::Noisy { sigma_frac: 0.0, miss_prob: 1.0 };
+        assert_eq!(p.predict(3, 40, &mut rng), FAR_FUTURE);
+    }
+}

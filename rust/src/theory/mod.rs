@@ -1,0 +1,165 @@
+//! Theory layer: closed-form theorem bounds and empirical validation
+//! drivers for the paper's guarantees.
+//!
+//! * Theorem 1 (homogeneous decode): `IIR >= c·κ0·√(B log G)·G/(G−1)`.
+//! * Theorem 2 (geometric decode):   `IIR >= c·(p/s_max)·σ_snap·√(B log G)·G/(G−1)`
+//!   with `σ_snap² = σ_s² + (1−p)/p²`.
+//! * Theorem 3 (general drift): same scaling with `σ_s` in place of
+//!   `σ_snap`.
+//! * Theorem 4 / Corollary 1: energy-saving bounds (see [`crate::energy`]).
+//!
+//! [`measure_iir`] estimates the ratio empirically by running FCFS and
+//! BF-IO(H=0) on a common overloaded trace; the `bfio theory` CLI sweeps
+//! (B, G) and reports the fit of measured IIR against `√(B log G)`.
+
+use crate::config::SimConfig;
+use crate::policies::bfio::BfIo;
+use crate::policies::fcfs::Fcfs;
+use crate::sim::Simulator;
+use crate::util::rng::Rng;
+use crate::util::stats::linear_fit;
+use crate::workload::adversarial::overloaded_trace;
+use crate::workload::{Drift, LengthSampler};
+
+/// Snapshot variance σ_snap² = σ_s² + (1−p)/p² (Theorem 2).
+pub fn sigma_snap_sq(sigma_s_sq: f64, p: f64) -> f64 {
+    sigma_s_sq + (1.0 - p) / (p * p)
+}
+
+/// Theorem 1's lower-bound *shape* (up to the universal constant c):
+/// `κ0·√(B log G)·G/(G−1)`.
+pub fn thm1_shape(kappa0: f64, b: usize, g: usize) -> f64 {
+    assert!(g >= 2);
+    kappa0 * ((b as f64) * (g as f64).ln()).sqrt() * g as f64 / (g as f64 - 1.0)
+}
+
+/// Theorem 2's lower-bound shape:
+/// `(p/s_max)·σ_snap·√(B log G)·G/(G−1)`.
+pub fn thm2_shape(p: f64, s_max: f64, sigma_s_sq: f64, b: usize, g: usize) -> f64 {
+    assert!(g >= 2);
+    (p / s_max)
+        * sigma_snap_sq(sigma_s_sq, p).sqrt()
+        * ((b as f64) * (g as f64).ln()).sqrt()
+        * g as f64
+        / (g as f64 - 1.0)
+}
+
+/// Theorem 3's lower-bound shape (general non-decreasing drift):
+/// `(p·σ_s/s_max)·√(B log G)·G/(G−1)`.
+pub fn thm3_shape(p: f64, s_max: f64, sigma_s: f64, b: usize, g: usize) -> f64 {
+    assert!(g >= 2);
+    (p * sigma_s / s_max) * ((b as f64) * (g as f64).ln()).sqrt() * g as f64
+        / (g as f64 - 1.0)
+}
+
+/// One empirical IIR measurement.
+#[derive(Clone, Debug)]
+pub struct IirPoint {
+    pub b: usize,
+    pub g: usize,
+    pub fcfs_imbalance: f64,
+    pub bfio_imbalance: f64,
+    pub iir: f64,
+    /// √(B log G) — the theory's predictor variable.
+    pub shape: f64,
+}
+
+/// Measure IIR = AvgImbalance(FCFS)/AvgImbalance(BF-IO(H=0)) on a common
+/// overloaded trace with the given sampler and drift.
+pub fn measure_iir(
+    sampler: &dyn LengthSampler,
+    drift: Drift,
+    b: usize,
+    g: usize,
+    steps: u64,
+    seed: u64,
+) -> IirPoint {
+    let cfg = SimConfig {
+        g,
+        b,
+        drift,
+        max_steps: steps,
+        warmup_steps: steps / 5,
+        seed,
+        ..SimConfig::default()
+    };
+    let mut rng = Rng::new(seed);
+    let trace = overloaded_trace(sampler, g, b, steps, 3.0, &mut rng);
+    let sim = Simulator::new(cfg);
+    let f = sim.run(&trace, &mut Fcfs::new());
+    let bf = sim.run(&trace, &mut BfIo::with_horizon(0));
+    let iir = f.report.avg_imbalance / bf.report.avg_imbalance.max(1e-12);
+    IirPoint {
+        b,
+        g,
+        fcfs_imbalance: f.report.avg_imbalance,
+        bfio_imbalance: bf.report.avg_imbalance,
+        iir,
+        shape: ((b as f64) * (g as f64).ln()).sqrt(),
+    }
+}
+
+/// Fit measured IIR against the √(B log G) shape; returns (slope,
+/// intercept, r²) of `iir ~ a + c·shape`.  Theorems 1–3 predict a
+/// positive slope with good linearity across the sweep.
+pub fn fit_iir_scaling(points: &[IirPoint]) -> (f64, f64, f64) {
+    let xs: Vec<f64> = points.iter().map(|p| p.shape).collect();
+    let ys: Vec<f64> = points.iter().map(|p| p.iir).collect();
+    let (a, c, r2) = linear_fit(&xs, &ys);
+    (c, a, r2)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::GeometricSampler;
+
+    #[test]
+    fn shapes_grow_with_scale() {
+        assert!(thm1_shape(0.2, 128, 64) > thm1_shape(0.2, 64, 64));
+        assert!(thm1_shape(0.2, 64, 128) > thm1_shape(0.2, 64, 64));
+        assert!(thm2_shape(0.1, 100.0, 25.0, 128, 64)
+            > thm2_shape(0.1, 100.0, 25.0, 64, 64));
+        assert!(thm3_shape(0.1, 100.0, 5.0, 128, 64) > 0.0);
+    }
+
+    #[test]
+    fn sigma_snap_dominated_by_geometric_tail_for_small_p() {
+        // (1-p)/p² >> σ_s² when p is small.
+        let s = sigma_snap_sq(25.0, 0.01);
+        assert!(s > 9_000.0);
+        // p = 1 -> no age variance.
+        assert_eq!(sigma_snap_sq(25.0, 1.0), 25.0);
+    }
+
+    #[test]
+    fn g_over_g_minus_1_factor() {
+        // factor decreases toward 1 as G grows
+        let f2 = thm1_shape(1.0, 1, 2) / (2.0f64.ln()).sqrt();
+        let f100 = thm1_shape(1.0, 1, 100) / (100.0f64.ln()).sqrt();
+        assert!(f2 > f100);
+        assert!((f100 - 100.0 / 99.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empirical_iir_exceeds_one_and_grows() {
+        // Small but real: BF-IO beats FCFS, and IIR grows with B.
+        let sampler = GeometricSampler::new(1, 200, 0.2);
+        let small = measure_iir(&sampler, Drift::Unit, 4, 4, 150, 42);
+        let big = measure_iir(&sampler, Drift::Unit, 16, 4, 150, 42);
+        assert!(small.iir > 1.0, "IIR {}", small.iir);
+        assert!(big.iir > small.iir, "big {} small {}", big.iir, small.iir);
+    }
+
+    #[test]
+    fn fit_recovers_positive_slope() {
+        let pts = vec![
+            IirPoint { b: 4, g: 4, fcfs_imbalance: 0.0, bfio_imbalance: 0.0, iir: 2.0, shape: 2.0 },
+            IirPoint { b: 16, g: 4, fcfs_imbalance: 0.0, bfio_imbalance: 0.0, iir: 4.0, shape: 4.0 },
+            IirPoint { b: 64, g: 4, fcfs_imbalance: 0.0, bfio_imbalance: 0.0, iir: 8.0, shape: 8.0 },
+        ];
+        let (slope, _, r2) = fit_iir_scaling(&pts);
+        assert!(slope > 0.9);
+        assert!(r2 > 0.99);
+    }
+}

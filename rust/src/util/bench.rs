@@ -1,0 +1,135 @@
+//! Micro-benchmark harness (criterion is unavailable offline).
+//!
+//! `benches/*.rs` are plain `main()` binaries (`harness = false`) that use
+//! [`Bench`] for warmup + timed iterations and report mean / p50 / p99 in
+//! a criterion-like one-line format.  Results can also be dumped as JSON
+//! for EXPERIMENTS.md bookkeeping.
+
+use std::time::{Duration, Instant};
+
+use super::stats::Summary;
+
+/// Benchmark configuration.
+#[derive(Clone, Debug)]
+pub struct Bench {
+    pub warmup_iters: usize,
+    pub min_iters: usize,
+    pub max_iters: usize,
+    pub target_time: Duration,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Bench {
+            warmup_iters: 3,
+            min_iters: 10,
+            max_iters: 10_000,
+            target_time: Duration::from_secs(2),
+        }
+    }
+}
+
+/// One benchmark's outcome.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p99_ns: f64,
+    pub min_ns: f64,
+    pub max_ns: f64,
+}
+
+impl BenchResult {
+    pub fn report(&self) -> String {
+        format!(
+            "{:<44} {:>12}  p50 {:>12}  p99 {:>12}  ({} iters)",
+            self.name,
+            fmt_ns(self.mean_ns),
+            fmt_ns(self.p50_ns),
+            fmt_ns(self.p99_ns),
+            self.iters
+        )
+    }
+}
+
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.1} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+impl Bench {
+    pub fn quick() -> Bench {
+        Bench {
+            warmup_iters: 1,
+            min_iters: 3,
+            max_iters: 200,
+            target_time: Duration::from_millis(500),
+        }
+    }
+
+    /// Run `f` repeatedly; measure each call.  A `std::hint::black_box`
+    /// on the closure result prevents the optimizer from deleting work.
+    pub fn run<T, F: FnMut() -> T>(&self, name: &str, mut f: F) -> BenchResult {
+        for _ in 0..self.warmup_iters {
+            std::hint::black_box(f());
+        }
+        let mut samples_ns: Vec<f64> = Vec::new();
+        let started = Instant::now();
+        while samples_ns.len() < self.min_iters
+            || (started.elapsed() < self.target_time
+                && samples_ns.len() < self.max_iters)
+        {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            samples_ns.push(t0.elapsed().as_nanos() as f64);
+        }
+        let s = Summary::of(&samples_ns);
+        let r = BenchResult {
+            name: name.to_string(),
+            iters: s.n,
+            mean_ns: s.mean,
+            p50_ns: s.p50,
+            p99_ns: s.p99,
+            min_ns: s.min,
+            max_ns: s.max,
+        };
+        println!("{}", r.report());
+        r
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runs_and_reports() {
+        let b = Bench {
+            warmup_iters: 1,
+            min_iters: 5,
+            max_iters: 10,
+            target_time: Duration::from_millis(10),
+        };
+        let r = b.run("noop-sum", || (0..1000u64).sum::<u64>());
+        assert!(r.iters >= 5);
+        assert!(r.mean_ns > 0.0);
+        assert!(r.p99_ns >= r.p50_ns * 0.5);
+    }
+
+    #[test]
+    fn fmt_ns_units() {
+        assert!(fmt_ns(12.0).contains("ns"));
+        assert!(fmt_ns(12_000.0).contains("µs"));
+        assert!(fmt_ns(12_000_000.0).contains("ms"));
+        assert!(fmt_ns(2_000_000_000.0).contains(" s"));
+    }
+}

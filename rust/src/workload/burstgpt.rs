@@ -1,0 +1,125 @@
+//! BurstGPT-like workload sampler (Appendix D.2's lighter-load trace).
+//!
+//! BurstGPT [35] is a trace of real ChatGPT/GPT-4 usage: *conversational*
+//! prompts (short — hundreds of tokens, not LongBench's tens of
+//! thousands), short-to-medium responses, and bursty arrival intensity.
+//! The published characteristics we match:
+//!
+//! * prefill: log-normal body with median in the low hundreds of tokens;
+//! * decode: geometric with mean ≈ 100–300 tokens;
+//! * arrivals: bursty (periods of elevated rate), overall *not* saturating
+//!   the cluster — the "lighter load" regime of Appendix D.2.
+
+use super::{ArrivalProcess, LengthSampler};
+use crate::util::rng::Rng;
+
+/// Synthetic BurstGPT-like length sampler.
+#[derive(Clone, Debug)]
+pub struct BurstGptLike {
+    pub s_min: f64,
+    pub s_max: f64,
+    /// (mu, sigma) of the log-normal prompt-length model.
+    pub prefill_mu: f64,
+    pub prefill_sigma: f64,
+    pub decode_p: f64,
+    pub decode_cap: u64,
+}
+
+impl Default for BurstGptLike {
+    fn default() -> Self {
+        BurstGptLike {
+            s_min: 16.0,
+            s_max: 4_096.0,
+            prefill_mu: 5.7, // ln(300)
+            prefill_sigma: 0.9,
+            decode_p: 1.0 / 160.0,
+            decode_cap: 2_048,
+        }
+    }
+}
+
+impl BurstGptLike {
+    /// The bursty arrival process that pairs with this sampler for the
+    /// Appendix-D.2 experiment: below-capacity base rate with periodic
+    /// bursts, no initial backlog.
+    pub fn arrivals(rate: f64) -> ArrivalProcess {
+        ArrivalProcess::Bursty {
+            base: rate,
+            burst: (rate * 20.0) as usize,
+            period: 50,
+            initial_backlog: 0,
+        }
+    }
+}
+
+impl LengthSampler for BurstGptLike {
+    fn sample(&self, rng: &mut Rng) -> (f64, u64) {
+        let s = rng
+            .lognormal(self.prefill_mu, self.prefill_sigma)
+            .clamp(self.s_min, self.s_max)
+            .round();
+        let o = rng.geometric(self.decode_p).clamp(1, self.decode_cap);
+        (s, o)
+    }
+
+    fn name(&self) -> &'static str {
+        "burstgpt-like"
+    }
+
+    fn s_max(&self) -> f64 {
+        self.s_max
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats;
+
+    #[test]
+    fn conversational_scale_prompts() {
+        let s = BurstGptLike::default();
+        let mut rng = Rng::new(1);
+        let pre: Vec<f64> = (0..30_000).map(|_| s.sample(&mut rng).0).collect();
+        let med = stats::median(&pre);
+        assert!(med > 100.0 && med < 900.0, "median {med}");
+        assert!(pre.iter().all(|&p| (16.0..=4096.0).contains(&p)));
+    }
+
+    #[test]
+    fn decode_mean_matches_p() {
+        let s = BurstGptLike::default();
+        let mut rng = Rng::new(2);
+        let dec: Vec<f64> =
+            (0..30_000).map(|_| s.sample(&mut rng).1 as f64).collect();
+        let mean = stats::mean(&dec);
+        assert!((mean - 160.0).abs() < 15.0, "mean {mean}");
+    }
+
+    #[test]
+    fn prompts_much_shorter_than_longbench() {
+        use crate::workload::longbench::LongBenchLike;
+        let bg = BurstGptLike::default();
+        let lb = LongBenchLike::default();
+        let mut rng = Rng::new(3);
+        let bg_mean = stats::mean(
+            &(0..20_000).map(|_| bg.sample(&mut rng).0).collect::<Vec<_>>(),
+        );
+        let lb_mean = stats::mean(
+            &(0..20_000).map(|_| lb.sample(&mut rng).0).collect::<Vec<_>>(),
+        );
+        assert!(lb_mean > 4.0 * bg_mean, "lb {lb_mean} vs bg {bg_mean}");
+    }
+
+    #[test]
+    fn bursty_arrival_process_shape() {
+        let a = BurstGptLike::arrivals(1.0);
+        if let ArrivalProcess::Bursty { base, burst, period, .. } = a {
+            assert_eq!(base, 1.0);
+            assert_eq!(burst, 20);
+            assert_eq!(period, 50);
+        } else {
+            panic!("expected bursty");
+        }
+    }
+}

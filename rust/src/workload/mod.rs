@@ -1,0 +1,393 @@
+//! Workload substrate: requests, workload profiles, drift models, arrival
+//! processes, and trace generation.
+//!
+//! A request `i` is the paper's `(s_i, o_i)` pair: prefill length (initial
+//! KV workload) and decode length (number of processing steps).  Its
+//! workload profile is `W_i = (s_i, s_i + δ_1, s_i + δ_1 + δ_2, …)` under
+//! the general non-decreasing drift model (Definition 2); the LLM decode
+//! model is the special case `δ_k ≡ 1`.
+
+pub mod adversarial;
+pub mod burstgpt;
+pub mod longbench;
+pub mod trace;
+
+use crate::util::rng::Rng;
+
+/// Unique request identifier.
+pub type RequestId = u64;
+
+/// An offline request record (the scheduler does NOT see `decode_len`
+/// at arrival; the simulator keeps it hidden behind the predictor).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Request {
+    pub id: RequestId,
+    /// Step index at which the request becomes visible to the router.
+    pub arrival_step: u64,
+    /// Prefill length `s_i` (initial workload / resident KV after prefill).
+    pub prefill: f64,
+    /// Total processing steps `o_i >= 1`.
+    pub decode_len: u64,
+}
+
+impl Request {
+    /// Total attention workload `Σ_j w_i^(j)` this request contributes over
+    /// its lifetime under drift `D` **assuming it starts at drift offset 0**
+    /// (exact for age-based drifts such as Unit/Zero/Const).
+    pub fn total_workload(&self, drift: &Drift) -> f64 {
+        let mut w = self.prefill;
+        let mut total = 0.0;
+        for j in 1..=self.decode_len {
+            total += w;
+            w += drift.delta(j);
+        }
+        total
+    }
+}
+
+/// The common per-step workload increment sequence `(δ_k)` of Definition 2.
+///
+/// All alive requests gain `δ_k` at (global or age-indexed) step `k`;
+/// increments are non-negative and uniformly bounded by `delta_max()`.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Drift {
+    /// Standard LLM decoding: KV grows one token per step (`δ_k ≡ 1`).
+    Unit,
+    /// Classical constant-workload jobs (`δ_k ≡ 0`).
+    Zero,
+    /// Constant fractional growth (cache compression / sparse attention).
+    Const(f64),
+    /// Speculative decoding: `m >= 1` tokens accepted per step.
+    Speculative(f64),
+    /// Periodic throttling pattern, cycles through the given increments.
+    Cycle(Vec<f64>),
+    /// Exponentially decaying increment `d0 * r^k` (progressive compression).
+    Decay { d0: f64, rate: f64 },
+}
+
+impl Drift {
+    /// Increment applied at step `k >= 1`.
+    pub fn delta(&self, k: u64) -> f64 {
+        match self {
+            Drift::Unit => 1.0,
+            Drift::Zero => 0.0,
+            Drift::Const(c) => *c,
+            Drift::Speculative(m) => *m,
+            Drift::Cycle(xs) => {
+                if xs.is_empty() {
+                    0.0
+                } else {
+                    xs[((k - 1) as usize) % xs.len()]
+                }
+            }
+            Drift::Decay { d0, rate } => d0 * rate.powi((k - 1).min(1_000) as i32),
+        }
+    }
+
+    /// Uniform bound `δ_max` (Definition 2).
+    pub fn delta_max(&self) -> f64 {
+        match self {
+            Drift::Unit => 1.0,
+            Drift::Zero => 0.0,
+            Drift::Const(c) => *c,
+            Drift::Speculative(m) => *m,
+            Drift::Cycle(xs) => xs.iter().cloned().fold(0.0, f64::max),
+            Drift::Decay { d0, .. } => *d0,
+        }
+    }
+
+    /// Cumulative drift `D[h] = Σ_{t=k+1}^{k+h} δ_t` for `h = 0..=horizon`,
+    /// starting after global step `k`.
+    pub fn cumulative(&self, k: u64, horizon: usize) -> Vec<f64> {
+        let mut out = Vec::with_capacity(horizon + 1);
+        let mut acc = 0.0;
+        out.push(0.0);
+        for h in 1..=horizon {
+            acc += self.delta(k + h as u64);
+            out.push(acc);
+        }
+        out
+    }
+
+    pub fn parse(name: &str) -> Option<Drift> {
+        match name {
+            "unit" => Some(Drift::Unit),
+            "zero" => Some(Drift::Zero),
+            _ => {
+                if let Some(v) = name.strip_prefix("const:") {
+                    v.parse().ok().map(Drift::Const)
+                } else if let Some(v) = name.strip_prefix("spec:") {
+                    v.parse().ok().map(Drift::Speculative)
+                } else {
+                    None
+                }
+            }
+        }
+    }
+}
+
+/// Sampler of `(prefill, decode)` length pairs.
+pub trait LengthSampler {
+    fn sample(&self, rng: &mut Rng) -> (f64, u64);
+    fn name(&self) -> &'static str;
+    /// Upper bound on prefill lengths (the paper's `s_max`), used by
+    /// overloaded-instance checks and theory formulas.
+    fn s_max(&self) -> f64;
+}
+
+/// Homogeneous decode lengths (Theorem 1's warm-up model): prefill uniform
+/// on `[s_min, s_max]`, decode fixed at `o`.
+#[derive(Clone, Debug)]
+pub struct HomogeneousSampler {
+    pub s_min: u64,
+    pub s_max: u64,
+    pub o: u64,
+}
+
+impl LengthSampler for HomogeneousSampler {
+    fn sample(&self, rng: &mut Rng) -> (f64, u64) {
+        (rng.range_u64(self.s_min, self.s_max) as f64, self.o)
+    }
+    fn name(&self) -> &'static str {
+        "homogeneous"
+    }
+    fn s_max(&self) -> f64 {
+        self.s_max as f64
+    }
+}
+
+/// Geometric decode lengths (Theorem 2's model): prefill uniform on
+/// `[s_min, s_max]`, decode ~ Geo(p) on {1, 2, ...}.
+#[derive(Clone, Debug)]
+pub struct GeometricSampler {
+    pub s_min: u64,
+    pub s_max: u64,
+    pub p: f64,
+    /// Cap on decode length to bound simulation tails (0 = uncapped).
+    pub o_cap: u64,
+}
+
+impl GeometricSampler {
+    pub fn new(s_min: u64, s_max: u64, p: f64) -> Self {
+        GeometricSampler { s_min, s_max, p, o_cap: 0 }
+    }
+}
+
+impl LengthSampler for GeometricSampler {
+    fn sample(&self, rng: &mut Rng) -> (f64, u64) {
+        let s = rng.range_u64(self.s_min, self.s_max) as f64;
+        let mut o = rng.geometric(self.p);
+        if self.o_cap > 0 {
+            o = o.min(self.o_cap);
+        }
+        (s, o)
+    }
+    fn name(&self) -> &'static str {
+        "geometric"
+    }
+    fn s_max(&self) -> f64 {
+        self.s_max as f64
+    }
+}
+
+/// Arrival process: how many new requests become visible at step `k`.
+#[derive(Clone, Debug)]
+pub enum ArrivalProcess {
+    /// Poisson(rate) per step, plus an initial backlog at step 0.
+    Poisson { rate: f64, initial_backlog: usize },
+    /// Deterministic: exactly `n` per step after a backlog.
+    Fixed { per_step: usize, initial_backlog: usize },
+    /// Bursty: Poisson(base) with bursts of size `burst` every `period`.
+    Bursty { base: f64, burst: usize, period: u64, initial_backlog: usize },
+}
+
+impl ArrivalProcess {
+    pub fn arrivals_at(&self, step: u64, rng: &mut Rng) -> usize {
+        match *self {
+            ArrivalProcess::Poisson { rate, initial_backlog } => {
+                let base = rng.poisson(rate) as usize;
+                if step == 0 {
+                    base + initial_backlog
+                } else {
+                    base
+                }
+            }
+            ArrivalProcess::Fixed { per_step, initial_backlog } => {
+                if step == 0 {
+                    per_step + initial_backlog
+                } else {
+                    per_step
+                }
+            }
+            ArrivalProcess::Bursty { base, burst, period, initial_backlog } => {
+                let mut n = rng.poisson(base) as usize;
+                if period > 0 && step % period == 0 {
+                    n += burst;
+                }
+                if step == 0 {
+                    n += initial_backlog;
+                }
+                n
+            }
+        }
+    }
+}
+
+/// Generate a full offline trace: `steps` worth of arrivals with lengths
+/// drawn from `sampler`.  Returned sorted by `arrival_step` with stable ids.
+pub fn generate_trace(
+    sampler: &dyn LengthSampler,
+    arrivals: &ArrivalProcess,
+    steps: u64,
+    rng: &mut Rng,
+) -> Vec<Request> {
+    let mut out = Vec::new();
+    let mut id: RequestId = 0;
+    for k in 0..steps {
+        let n = arrivals.arrivals_at(k, rng);
+        for _ in 0..n {
+            let (prefill, decode_len) = sampler.sample(rng);
+            out.push(Request { id, arrival_step: k, prefill, decode_len });
+            id += 1;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn drift_values() {
+        assert_eq!(Drift::Unit.delta(1), 1.0);
+        assert_eq!(Drift::Zero.delta(5), 0.0);
+        assert_eq!(Drift::Const(0.25).delta(9), 0.25);
+        assert_eq!(Drift::Speculative(3.0).delta(2), 3.0);
+        let c = Drift::Cycle(vec![1.0, 0.0]);
+        assert_eq!(c.delta(1), 1.0);
+        assert_eq!(c.delta(2), 0.0);
+        assert_eq!(c.delta(3), 1.0);
+        let d = Drift::Decay { d0: 1.0, rate: 0.5 };
+        assert_eq!(d.delta(1), 1.0);
+        assert_eq!(d.delta(2), 0.5);
+    }
+
+    #[test]
+    fn drift_max_bounds_all_values() {
+        for drift in [
+            Drift::Unit,
+            Drift::Zero,
+            Drift::Const(0.3),
+            Drift::Speculative(4.0),
+            Drift::Cycle(vec![0.2, 0.9, 0.1]),
+            Drift::Decay { d0: 2.0, rate: 0.9 },
+        ] {
+            let dm = drift.delta_max();
+            for k in 1..100 {
+                assert!(drift.delta(k) <= dm + 1e-12);
+                assert!(drift.delta(k) >= 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn cumulative_drift_matches_sum() {
+        let d = Drift::Cycle(vec![1.0, 0.5]);
+        let cum = d.cumulative(3, 4);
+        assert_eq!(cum.len(), 5);
+        assert_eq!(cum[0], 0.0);
+        let mut acc = 0.0;
+        for h in 1..=4u64 {
+            acc += d.delta(3 + h);
+            assert!((cum[h as usize] - acc).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn total_workload_llm_profile() {
+        // W_i = (3, 4, 5, 6) per the paper's example: s=3, o=4, unit drift.
+        let r = Request { id: 0, arrival_step: 0, prefill: 3.0, decode_len: 4 };
+        assert_eq!(r.total_workload(&Drift::Unit), 3.0 + 4.0 + 5.0 + 6.0);
+        // Constant workload: W_i = (5, 5, 5).
+        let r = Request { id: 0, arrival_step: 0, prefill: 5.0, decode_len: 3 };
+        assert_eq!(r.total_workload(&Drift::Zero), 15.0);
+    }
+
+    #[test]
+    fn homogeneous_sampler_fixed_decode() {
+        let s = HomogeneousSampler { s_min: 10, s_max: 20, o: 7 };
+        let mut rng = Rng::new(1);
+        for _ in 0..100 {
+            let (p, o) = s.sample(&mut rng);
+            assert!((10.0..=20.0).contains(&p));
+            assert_eq!(o, 7);
+        }
+    }
+
+    #[test]
+    fn geometric_sampler_mean() {
+        let s = GeometricSampler::new(1, 100, 0.1);
+        let mut rng = Rng::new(2);
+        let n = 20_000;
+        let mean =
+            (0..n).map(|_| s.sample(&mut rng).1 as f64).sum::<f64>() / n as f64;
+        assert!((mean - 10.0).abs() < 0.5, "mean {mean}");
+    }
+
+    #[test]
+    fn geometric_sampler_cap() {
+        let mut s = GeometricSampler::new(1, 10, 0.01);
+        s.o_cap = 50;
+        let mut rng = Rng::new(3);
+        assert!((0..1000).all(|_| s.sample(&mut rng).1 <= 50));
+    }
+
+    #[test]
+    fn poisson_arrivals_with_backlog() {
+        let a = ArrivalProcess::Poisson { rate: 2.0, initial_backlog: 100 };
+        let mut rng = Rng::new(4);
+        assert!(a.arrivals_at(0, &mut rng) >= 100);
+        let later: usize = (1..1000).map(|k| a.arrivals_at(k, &mut rng)).sum();
+        let mean = later as f64 / 999.0;
+        assert!((mean - 2.0).abs() < 0.3, "mean {mean}");
+    }
+
+    #[test]
+    fn bursty_arrivals_spike_on_period() {
+        let a = ArrivalProcess::Bursty {
+            base: 0.0,
+            burst: 50,
+            period: 10,
+            initial_backlog: 0,
+        };
+        let mut rng = Rng::new(5);
+        assert_eq!(a.arrivals_at(10, &mut rng), 50);
+        assert_eq!(a.arrivals_at(11, &mut rng), 0);
+    }
+
+    #[test]
+    fn trace_sorted_with_stable_ids() {
+        let s = GeometricSampler::new(1, 50, 0.2);
+        let a = ArrivalProcess::Fixed { per_step: 3, initial_backlog: 10 };
+        let mut rng = Rng::new(6);
+        let trace = generate_trace(&s, &a, 20, &mut rng);
+        assert_eq!(trace.len(), 10 + 3 * 20);
+        for (i, r) in trace.iter().enumerate() {
+            assert_eq!(r.id, i as u64);
+            if i > 0 {
+                assert!(r.arrival_step >= trace[i - 1].arrival_step);
+            }
+            assert!(r.decode_len >= 1);
+        }
+    }
+
+    #[test]
+    fn drift_parse() {
+        assert_eq!(Drift::parse("unit"), Some(Drift::Unit));
+        assert_eq!(Drift::parse("zero"), Some(Drift::Zero));
+        assert_eq!(Drift::parse("const:0.5"), Some(Drift::Const(0.5)));
+        assert_eq!(Drift::parse("spec:2"), Some(Drift::Speculative(2.0)));
+        assert_eq!(Drift::parse("bogus"), None);
+    }
+}

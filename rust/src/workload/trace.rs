@@ -1,0 +1,100 @@
+//! Trace record / replay: JSONL serialization of request traces so
+//! experiments are exactly reproducible and traces can be shared between
+//! the simulator, the coordinator, and the bench harness.
+
+use std::io::{BufRead, BufReader, Write};
+use std::path::Path;
+
+use super::Request;
+use crate::util::json::{num, obj, Json};
+
+/// Serialize one request as a single-line JSON object.
+pub fn request_to_jsonl(r: &Request) -> String {
+    obj(vec![
+        ("id", num(r.id as f64)),
+        ("arrival_step", num(r.arrival_step as f64)),
+        ("prefill", num(r.prefill)),
+        ("decode_len", num(r.decode_len as f64)),
+    ])
+    .to_string()
+}
+
+/// Parse one JSONL line back to a request.
+pub fn request_from_jsonl(line: &str) -> anyhow::Result<Request> {
+    let v = Json::parse(line).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let field = |k: &str| -> anyhow::Result<f64> {
+        v.get(k)
+            .and_then(Json::as_f64)
+            .ok_or_else(|| anyhow::anyhow!("missing field {k}"))
+    };
+    Ok(Request {
+        id: field("id")? as u64,
+        arrival_step: field("arrival_step")? as u64,
+        prefill: field("prefill")?,
+        decode_len: field("decode_len")? as u64,
+    })
+}
+
+/// Write a trace to a JSONL file.
+pub fn save_trace(path: &Path, trace: &[Request]) -> anyhow::Result<()> {
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    for r in trace {
+        writeln!(f, "{}", request_to_jsonl(r))?;
+    }
+    Ok(())
+}
+
+/// Load a trace from a JSONL file (sorted by arrival step on return).
+pub fn load_trace(path: &Path) -> anyhow::Result<Vec<Request>> {
+    let f = BufReader::new(std::fs::File::open(path)?);
+    let mut out = Vec::new();
+    for line in f.lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        out.push(request_from_jsonl(&line)?);
+    }
+    out.sort_by_key(|r| r.arrival_step);
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+    use crate::workload::{generate_trace, ArrivalProcess, GeometricSampler};
+
+    #[test]
+    fn jsonl_roundtrip_single() {
+        let r = Request { id: 7, arrival_step: 3, prefill: 123.0, decode_len: 45 };
+        let line = request_to_jsonl(&r);
+        let back = request_from_jsonl(&line).unwrap();
+        assert_eq!(r, back);
+    }
+
+    #[test]
+    fn jsonl_rejects_garbage() {
+        assert!(request_from_jsonl("not json").is_err());
+        assert!(request_from_jsonl("{\"id\": 1}").is_err());
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let s = GeometricSampler::new(1, 100, 0.2);
+        let a = ArrivalProcess::Fixed { per_step: 5, initial_backlog: 20 };
+        let mut rng = Rng::new(9);
+        let trace = generate_trace(&s, &a, 10, &mut rng);
+
+        let dir = std::env::temp_dir().join("bfio_trace_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.jsonl");
+        save_trace(&path, &trace).unwrap();
+        let back = load_trace(&path).unwrap();
+        assert_eq!(trace.len(), back.len());
+        for (x, y) in trace.iter().zip(&back) {
+            assert_eq!(x, y);
+        }
+        std::fs::remove_file(&path).ok();
+    }
+}

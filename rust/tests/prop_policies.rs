@@ -1,0 +1,309 @@
+//! Property suites over random routing instances: feasibility, work
+//! conservation, the BF-IO balance property, and solver optimality —
+//! the (IO) invariants of Section 4.
+
+use bfio_serve::config::BfIoConfig;
+use bfio_serve::policies::bfio::objective::WindowedLoads;
+use bfio_serve::policies::bfio::{exact::solve_exact, BfIo};
+use bfio_serve::policies::{
+    by_name, validate_assignments, ActiveView, AssignCtx, Policy, WaitingView,
+    WorkerView,
+};
+use bfio_serve::util::prop::Prop;
+use bfio_serve::util::rng::Rng;
+use bfio_serve::workload::Drift;
+
+/// Random decision instance generator shared by the suites.
+#[derive(Debug)]
+struct Instance {
+    b: usize,
+    workers: Vec<WorkerView>,
+    waiting: Vec<WaitingView>,
+    drift: Vec<f64>,
+}
+
+fn gen_instance(r: &mut Rng) -> Instance {
+    let g = 2 + r.below_usize(12);
+    let b = 1 + r.below_usize(12);
+    let workers: Vec<WorkerView> = (0..g)
+        .map(|_| {
+            let occupied = r.below_usize(b + 1);
+            let active: Vec<ActiveView> = (0..occupied)
+                .map(|_| ActiveView {
+                    load: 1.0 + r.f64() * 1000.0,
+                    pred_remaining: 1 + r.below(50),
+                })
+                .collect();
+            WorkerView {
+                load: active.iter().map(|a| a.load).sum(),
+                free_slots: b - occupied,
+                active,
+            }
+        })
+        .collect();
+    let w = r.below_usize(40);
+    let waiting: Vec<WaitingView> = (0..w)
+        .map(|i| WaitingView {
+            idx: i,
+            prefill: 1.0 + r.f64() * 500.0,
+            arrival_step: 0,
+        })
+        .collect();
+    let h = r.below_usize(20);
+    let drift = Drift::Unit.cumulative(0, h.max(1));
+    Instance { b, workers, waiting, drift }
+}
+
+#[test]
+fn prop_all_policies_feasible_and_work_conserving() {
+    let names = [
+        "fcfs", "jsq", "rr", "pow2", "least", "minmin", "maxmin", "bfio:0",
+        "bfio:10",
+    ];
+    Prop::new(200).check("feasible+conserving", gen_instance, |inst| {
+        let ctx = AssignCtx {
+            step: 0,
+            batch_cap: inst.b,
+            workers: &inst.workers,
+            waiting: &inst.waiting,
+            cum_drift: &inst.drift,
+        };
+        let u = ctx.u_k();
+        for name in names {
+            let mut p = by_name(name).unwrap();
+            let a = p.assign(&ctx, &mut Rng::new(5));
+            validate_assignments(&ctx, &a)
+                .map_err(|e| format!("{name}: {e}"))?;
+            // all of these are work-conserving: exactly U(k) admitted
+            if a.len() != u {
+                return Err(format!("{name}: admitted {} != U(k) {}", a.len(), u));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_throttled_feasible_but_bounded() {
+    Prop::new(100).check("throttled", gen_instance, |inst| {
+        let ctx = AssignCtx {
+            step: 0,
+            batch_cap: inst.b,
+            workers: &inst.workers,
+            waiting: &inst.waiting,
+            cum_drift: &inst.drift,
+        };
+        let mut p = by_name("throttled:0.5").unwrap();
+        let a = p.assign(&ctx, &mut Rng::new(5));
+        validate_assignments(&ctx, &a).map_err(|e| e.to_string())?;
+        if a.len() > ctx.u_k() {
+            return Err("throttled admitted more than U(k)".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_bfio_h0_empty_cluster_smax_balanced() {
+    // Lemma 1: on an empty cluster with equal capacities, the fresh
+    // assignment's max-min gap is at most s_max (for the optimum; the
+    // heuristic is allowed one extra s_max of slack).
+    Prop::new(60).check(
+        "s_max-balance",
+        |r| {
+            let g = 2 + r.below_usize(6);
+            let b = 2 + r.below_usize(6);
+            let sizes: Vec<f64> =
+                (0..g * b).map(|_| 1.0 + r.f64() * 999.0).collect();
+            (g, b, sizes)
+        },
+        |(g, b, sizes)| {
+            let workers: Vec<WorkerView> = (0..*g)
+                .map(|_| WorkerView { load: 0.0, free_slots: *b, active: vec![] })
+                .collect();
+            let waiting: Vec<WaitingView> = sizes
+                .iter()
+                .enumerate()
+                .map(|(i, &s)| WaitingView { idx: i, prefill: s, arrival_step: 0 })
+                .collect();
+            let drift = [0.0];
+            let ctx = AssignCtx {
+                step: 0,
+                batch_cap: *b,
+                workers: &workers,
+                waiting: &waiting,
+                cum_drift: &drift,
+            };
+            let mut p = BfIo::with_horizon(0);
+            let a = p.assign(&ctx, &mut Rng::new(3));
+            let mut loads = vec![0.0; *g];
+            for &(w, gi) in &a {
+                loads[gi] += sizes[w];
+            }
+            let max = loads.iter().cloned().fold(f64::MIN, f64::max);
+            let min = loads.iter().cloned().fold(f64::MAX, f64::min);
+            let s_max = sizes.iter().cloned().fold(0.0, f64::max);
+            if max - min <= 2.0 * s_max + 1e-9 {
+                Ok(())
+            } else {
+                Err(format!("gap {} > 2·s_max {}", max - min, s_max))
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_heuristic_within_smax_of_exact() {
+    Prop::new(40).check(
+        "heuristic-vs-exact",
+        |r| {
+            let g = 2 + r.below_usize(2);
+            let n = 3 + r.below_usize(5);
+            let caps: Vec<usize> = (0..g).map(|_| r.below_usize(3)).collect();
+            let sizes: Vec<f64> =
+                (0..n).map(|_| (1.0 + r.f64() * 100.0).round()).collect();
+            let loads: Vec<f64> = (0..g).map(|_| (r.f64() * 100.0).round()).collect();
+            (caps, sizes, loads)
+        },
+        |(caps, sizes, loads)| {
+            let total_cap: usize = caps.iter().sum();
+            let u = total_cap.min(sizes.len());
+            if u == 0 {
+                return Ok(());
+            }
+            let workers: Vec<WorkerView> = loads
+                .iter()
+                .zip(caps)
+                .map(|(&l, &c)| WorkerView {
+                    load: l,
+                    free_slots: c,
+                    active: if l > 0.0 {
+                        vec![ActiveView { load: l, pred_remaining: 100 }]
+                    } else {
+                        vec![]
+                    },
+                })
+                .collect();
+            let waiting: Vec<WaitingView> = sizes
+                .iter()
+                .enumerate()
+                .map(|(i, &s)| WaitingView { idx: i, prefill: s, arrival_step: 0 })
+                .collect();
+            let drift = [0.0];
+            let ctx = AssignCtx {
+                step: 0,
+                batch_cap: 8,
+                workers: &workers,
+                waiting: &waiting,
+                cum_drift: &drift,
+            };
+            let mut p = BfIo::new(BfIoConfig { pool_factor: 64, ..Default::default() });
+            let a = p.assign(&ctx, &mut Rng::new(7));
+            let mut after = loads.clone();
+            for &(w, gi) in &a {
+                after[gi] += sizes[w];
+            }
+            let j_heur = bfio_serve::metrics::imbalance(&after);
+
+            let wl = WindowedLoads::from_views(&workers, &drift, 0, None);
+            let sol = solve_exact(&wl, sizes, caps, u);
+            let s_max = sizes.iter().cloned().fold(0.0, f64::max);
+            if j_heur <= sol.j + s_max + 1e-6 {
+                Ok(())
+            } else {
+                Err(format!("heuristic {} vs exact {} (s_max {})", j_heur, sol.j, s_max))
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_exact_solution_feasible() {
+    Prop::new(60).check(
+        "exact-feasibility",
+        |r| {
+            let g = 2 + r.below_usize(2);
+            let n = 2 + r.below_usize(5);
+            let caps: Vec<usize> = (0..g).map(|_| r.below_usize(3)).collect();
+            let sizes: Vec<f64> = (0..n).map(|_| 1.0 + r.f64() * 50.0).collect();
+            (caps, sizes)
+        },
+        |(caps, sizes)| {
+            let total: usize = caps.iter().sum();
+            let u = total.min(sizes.len());
+            let workers: Vec<WorkerView> = caps
+                .iter()
+                .map(|&c| WorkerView { load: 0.0, free_slots: c, active: vec![] })
+                .collect();
+            let drift = [0.0];
+            let wl = WindowedLoads::from_views(&workers, &drift, 0, None);
+            let sol = solve_exact(&wl, sizes, caps, u);
+            let admitted = sol.placement.iter().filter(|p| p.is_some()).count();
+            if admitted != u {
+                return Err(format!("admitted {admitted} != u {u}"));
+            }
+            let mut used = vec![0usize; caps.len()];
+            for p in sol.placement.iter().flatten() {
+                used[*p] += 1;
+            }
+            for (g, (&usd, &cap)) in used.iter().zip(caps).enumerate() {
+                if usd > cap {
+                    return Err(format!("worker {g} over capacity"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_windowed_objective_eval_apply_consistent() {
+    // eval() must exactly predict apply() for arbitrary move sequences.
+    Prop::new(100).check(
+        "eval-apply-consistency",
+        |r| {
+            let g = 2 + r.below_usize(6);
+            let h = r.below_usize(12);
+            let loads: Vec<(f64, u64)> = (0..g * 3)
+                .map(|_| (1.0 + r.f64() * 100.0, 1 + r.below(20)))
+                .collect();
+            let moves: Vec<(usize, f64, f64)> = (0..8)
+                .map(|_| {
+                    (
+                        r.below_usize(g),
+                        r.f64() * 40.0 - 20.0,
+                        if r.bernoulli(0.5) { 1.0 } else { 0.0 },
+                    )
+                })
+                .collect();
+            (g, h, loads, moves)
+        },
+        |(g, h, loads, moves)| {
+            let workers: Vec<WorkerView> = (0..*g)
+                .map(|gi| WorkerView {
+                    load: 0.0,
+                    free_slots: 1,
+                    active: loads[gi * 3..gi * 3 + 3]
+                        .iter()
+                        .map(|&(l, r)| ActiveView { load: l, pred_remaining: r })
+                        .collect(),
+                })
+                .collect();
+            let drift = Drift::Unit.cumulative(0, (*h).max(1));
+            let mut wl = WindowedLoads::from_views(&workers, &drift, *h, None);
+            for mv in moves {
+                let before = wl.j();
+                let dj = wl.eval(&[*mv]);
+                wl.apply(&[*mv]);
+                let after = wl.j();
+                if (after - (before + dj)).abs() > 1e-6 * after.abs().max(1.0) {
+                    return Err(format!(
+                        "eval {} but J moved {} -> {}",
+                        dj, before, after
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}

@@ -1,0 +1,102 @@
+//! End-to-end runtime integration: the full jax → HLO text → PJRT path,
+//! plus the live coordinator over real model execution.  These tests
+//! skip (with a notice) when `make artifacts` hasn't been run.
+
+use std::path::{Path, PathBuf};
+
+use bfio_serve::coordinator::{serve, CoordinatorConfig, ServeRequest};
+use bfio_serve::runtime::Runtime;
+use bfio_serve::util::rng::Rng;
+
+fn artifacts() -> Option<PathBuf> {
+    let dir = Path::new(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"));
+    if dir.join("meta.json").exists() {
+        Some(dir.to_path_buf())
+    } else {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        None
+    }
+}
+
+#[test]
+fn golden_cross_language_verification() {
+    let Some(dir) = artifacts() else { return };
+    let mut rt = Runtime::load(&dir).unwrap();
+    let err = rt.verify_golden().unwrap();
+    assert!(err.is_finite());
+}
+
+#[test]
+fn greedy_decoding_is_deterministic_across_runtimes() {
+    let Some(dir) = artifacts() else { return };
+    let run = || {
+        let mut rt = Runtime::load(&dir).unwrap();
+        let golden = rt.meta.golden.clone();
+        let (_, mut state) = rt.prefill_batch(&golden.prompt, golden.kv_capacity).unwrap();
+        let mut tokens = golden.next_tokens.clone();
+        let mut out = Vec::new();
+        for _ in 0..6 {
+            let logits = rt.decode_step(&mut state, &tokens).unwrap();
+            tokens = logits
+                .chunks_exact(rt.meta.vocab)
+                .map(|row| {
+                    row.iter()
+                        .enumerate()
+                        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                        .unwrap()
+                        .0 as i32
+                })
+                .collect();
+            out.push(tokens.clone());
+        }
+        out
+    };
+    assert_eq!(run(), run());
+}
+
+#[test]
+fn coordinator_policies_serve_identical_request_sets() {
+    let Some(dir) = artifacts() else { return };
+    let mut rng = Rng::new(41);
+    let requests: Vec<ServeRequest> = (0..8)
+        .map(|i| ServeRequest {
+            id: i,
+            prompt: (0..3 + rng.below_usize(4)).map(|_| rng.below(64) as i32).collect(),
+            max_new_tokens: 1 + rng.below(6) as u32,
+        })
+        .collect();
+    for policy in ["fcfs", "jsq", "bfio:4"] {
+        let cfg = CoordinatorConfig {
+            artifacts_dir: dir.clone(),
+            workers: 2,
+            policy: policy.into(),
+            max_steps: 5_000,
+            seed: 2,
+        };
+        let rep = serve(&cfg, &requests).unwrap();
+        assert_eq!(rep.served.len(), requests.len(), "{policy}");
+        for s in &rep.served {
+            let want = requests.iter().find(|r| r.id == s.id).unwrap();
+            assert_eq!(s.generated, want.max_new_tokens, "{policy} req {}", s.id);
+        }
+        assert!(rep.steps > 0 && rep.wall_s > 0.0);
+    }
+}
+
+#[test]
+fn single_worker_coordinator_works() {
+    let Some(dir) = artifacts() else { return };
+    let cfg = CoordinatorConfig {
+        artifacts_dir: dir,
+        workers: 1,
+        policy: "fcfs".into(),
+        max_steps: 5_000,
+        seed: 3,
+    };
+    let requests = vec![ServeRequest { id: 0, prompt: vec![1, 2], max_new_tokens: 3 }];
+    let rep = serve(&cfg, &requests).unwrap();
+    assert_eq!(rep.served.len(), 1);
+    assert_eq!(rep.served[0].generated, 3);
+    // With one worker there is never barrier idle.
+    assert!(rep.mean_idle_fraction.abs() < 1e-9);
+}
