@@ -28,6 +28,9 @@ pub struct SimConfig {
     pub record_series: bool,
     /// How many workers to include in recorded load trajectories.
     pub sample_workers: usize,
+    /// Record a per-request [`crate::metrics::CompletionRecord`]
+    /// (id, worker, timings) for every completion.
+    pub record_completions: bool,
 }
 
 impl Default for SimConfig {
@@ -43,6 +46,7 @@ impl Default for SimConfig {
             seed: 0,
             record_series: false,
             sample_workers: 16,
+            record_completions: false,
         }
     }
 }

@@ -20,19 +20,30 @@
 //! implementations the simulator uses — FCFS, JSQ, BF-IO(H) — so the
 //! paper's comparison runs against the *real* execution stack here.
 
+#[cfg(feature = "pjrt")]
 pub mod engine;
 
 use std::path::PathBuf;
+#[cfg(feature = "pjrt")]
 use std::sync::mpsc;
+#[cfg(feature = "pjrt")]
 use std::time::Instant;
 
-use anyhow::{Context, Result};
+#[cfg(feature = "pjrt")]
+use anyhow::Context;
+use anyhow::Result;
 
+#[cfg(feature = "pjrt")]
 use crate::config::PowerConfig;
+#[cfg(feature = "pjrt")]
 use crate::policies::{ActiveView, AssignCtx, WaitingView, WorkerView};
+#[cfg(feature = "pjrt")]
 use crate::util::rng::Rng;
+#[cfg(feature = "pjrt")]
 use crate::util::stats;
+#[cfg(feature = "pjrt")]
 use crate::workload::Drift;
+#[cfg(feature = "pjrt")]
 use engine::{Completion, StepCmd, StepDone, WorkerEngine};
 
 /// A request submitted to the live coordinator.
@@ -100,6 +111,19 @@ pub struct ServeReport {
 }
 
 /// Serve `requests` to completion and report.
+///
+/// Without the `pjrt` cargo feature this is a stub that always errors:
+/// the gateway's sim backend and the simulator cover the no-GPU path.
+#[cfg(not(feature = "pjrt"))]
+pub fn serve(_cfg: &CoordinatorConfig, _requests: &[ServeRequest]) -> Result<ServeReport> {
+    anyhow::bail!(
+        "built without the `pjrt` feature; rebuild with `cargo build --features pjrt` \
+         to serve real models (or use the sim backend)"
+    )
+}
+
+/// Serve `requests` to completion and report.
+#[cfg(feature = "pjrt")]
 pub fn serve(cfg: &CoordinatorConfig, requests: &[ServeRequest]) -> Result<ServeReport> {
     let mut policy = crate::policies::by_name(&cfg.policy)
         .with_context(|| format!("unknown policy {}", cfg.policy))?;
@@ -318,7 +342,7 @@ pub fn serve(cfg: &CoordinatorConfig, requests: &[ServeRequest]) -> Result<Serve
     })
 }
 
-#[cfg(test)]
+#[cfg(all(test, feature = "pjrt"))]
 mod tests {
     use super::*;
     use std::path::Path;

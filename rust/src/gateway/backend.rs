@@ -1,0 +1,103 @@
+//! The [`Backend`] abstraction: decouples HTTP request intake from the
+//! execution engine behind it.  Two implementations:
+//!
+//! * [`super::sim::SimBackend`] — drives the discrete-event barrier loop
+//!   in *virtual* time (no GPUs, CI-friendly);
+//! * [`super::pjrt::PjrtBackend`] — wraps the live
+//!   [`crate::coordinator::serve`] leader/worker stack over real PJRT
+//!   model execution (requires the `pjrt` cargo feature + artifacts).
+//!
+//! Both route admissions through the same [`crate::policies::Policy`]
+//! registry, so BF-IO vs JSQ vs FCFS can be compared over real sockets.
+
+use anyhow::Result;
+
+/// One completion request as seen by a backend (already tokenized).
+#[derive(Clone, Debug)]
+pub struct CompletionRequest {
+    /// Gateway-assigned request id (unique per gateway process).
+    pub id: u64,
+    /// Prompt token ids; the length is the prefill workload `s_i`.
+    pub prompt_tokens: Vec<i32>,
+    /// Decode budget `o_i` (every request runs to its budget).
+    pub max_tokens: u32,
+}
+
+/// A finished completion.
+#[derive(Clone, Debug)]
+pub struct Completion {
+    pub id: u64,
+    /// Worker the request was (stickily) routed to.
+    pub worker: usize,
+    /// Generated token ids.  May be empty when the backend does not
+    /// surface token values (the PJRT coordinator reports counts only);
+    /// `n_tokens` is always authoritative.
+    pub tokens: Vec<i32>,
+    /// Number of generated tokens.
+    pub n_tokens: u32,
+    /// Router queueing delay, arrival → admission (backend clock).
+    pub queue_wait_s: f64,
+    /// Time per output token (backend clock: virtual for sim, wall for
+    /// PJRT).
+    pub tpot_s: f64,
+    /// Arrival → completion latency (backend clock).
+    pub latency_s: f64,
+}
+
+/// Per-worker load snapshot (llmlb-style `GET /v0/workers`).
+#[derive(Clone, Debug, Default)]
+pub struct WorkerStatus {
+    pub id: usize,
+    /// Instantaneous workload `L_g` (resident KV tokens).
+    pub load: f64,
+    /// Occupied batch slots.
+    pub active: usize,
+    /// Free batch slots.
+    pub free_slots: usize,
+    /// Requests completed on this worker since startup.
+    pub completed: u64,
+}
+
+/// Aggregate backend counters for `GET /metrics`.
+#[derive(Clone, Debug, Default)]
+pub struct BackendStats {
+    /// Routing policy name (as reported by the policy itself).
+    pub policy: String,
+    /// Barrier steps executed.
+    pub steps: u64,
+    /// Backend clock, seconds (virtual for sim, wall for PJRT).
+    pub clock_s: f64,
+    /// Latest imbalance observation: the most recent step's
+    /// post-admission loads for the sim backend; the most recent
+    /// micro-batch's average for the PJRT backend (which has no
+    /// per-step visibility between `serve` calls).
+    pub imbalance: f64,
+    /// Running mean imbalance over steps.
+    pub avg_imbalance: f64,
+    /// Energy under the paper's power model, joules.
+    pub energy_j: f64,
+    pub completed: u64,
+    pub admitted: u64,
+    /// Tokens generated (decode steps executed across slots).
+    pub total_tokens: u64,
+    /// Requests waiting for a batch slot.
+    pub queue_depth: usize,
+}
+
+/// An execution backend the gateway can route completions to.
+///
+/// `complete` is called concurrently from the gateway's handler threads
+/// and blocks until the request finishes.
+pub trait Backend: Send + Sync {
+    /// Human-readable backend name, e.g. `sim/BF-IO(H=8)`.
+    fn name(&self) -> String;
+
+    /// Run one completion to its decode budget.  Blocking.
+    fn complete(&self, req: CompletionRequest) -> Result<Completion>;
+
+    /// Per-worker snapshot.
+    fn workers(&self) -> Vec<WorkerStatus>;
+
+    /// Aggregate counters.
+    fn stats(&self) -> BackendStats;
+}

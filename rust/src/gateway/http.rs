@@ -1,0 +1,287 @@
+//! Minimal HTTP/1.1 over `std::net` — request parsing, response
+//! emission, and a tiny blocking client (used by `bfio loadgen` and the
+//! integration tests).  Hand-rolled because no HTTP crate is available
+//! offline; implements exactly what the gateway needs: one request per
+//! connection, `Content-Length` bodies, `Connection: close` responses.
+//! No chunked transfer encoding, no keep-alive, no TLS.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::TcpStream;
+use std::time::Duration;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+/// Upper bound on accepted request bodies (1 MiB) — the gateway only
+/// ever receives small JSON payloads.
+pub const MAX_BODY_BYTES: usize = 1 << 20;
+
+/// Upper bound on the request line + headers (64 KiB): a client
+/// streaming bytes with no newline must not grow the head unboundedly.
+pub const MAX_HEAD_BYTES: u64 = 64 * 1024;
+
+/// A parsed HTTP request.
+#[derive(Clone, Debug)]
+pub struct HttpRequest {
+    pub method: String,
+    /// Raw request target, query string included.
+    pub target: String,
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+}
+
+impl HttpRequest {
+    /// Path without the query string.
+    pub fn path(&self) -> &str {
+        self.target.split('?').next().unwrap_or("")
+    }
+
+    /// Case-insensitive header lookup.
+    pub fn header(&self, name: &str) -> Option<&str> {
+        self.headers
+            .iter()
+            .find(|(k, _)| k.eq_ignore_ascii_case(name))
+            .map(|(_, v)| v.as_str())
+    }
+
+    pub fn body_str(&self) -> Result<&str> {
+        std::str::from_utf8(&self.body).context("request body is not utf-8")
+    }
+}
+
+/// Read one request from the stream (blocking, with the stream's
+/// configured read timeout).
+pub fn read_request(stream: &TcpStream) -> Result<HttpRequest> {
+    let reader = BufReader::new(stream.try_clone().context("clone stream")?);
+    // Cap the head: once the limit is consumed, read_line sees EOF and
+    // we bail instead of buffering an attacker's endless request line.
+    let mut head = reader.take(MAX_HEAD_BYTES);
+    let mut line = String::new();
+    head.read_line(&mut line).context("read request line")?;
+    if line.trim().is_empty() {
+        bail!("empty request");
+    }
+    let mut parts = line.split_whitespace();
+    let method = parts
+        .next()
+        .ok_or_else(|| anyhow!("missing method"))?
+        .to_string();
+    let target = parts
+        .next()
+        .ok_or_else(|| anyhow!("missing request target"))?
+        .to_string();
+
+    let mut headers = Vec::new();
+    let mut content_length = 0usize;
+    loop {
+        let mut h = String::new();
+        let n = head.read_line(&mut h).context("read header")?;
+        if n == 0 {
+            bail!("connection closed mid-headers (or head over {MAX_HEAD_BYTES} bytes)");
+        }
+        let h = h.trim_end();
+        if h.is_empty() {
+            break;
+        }
+        if let Some((k, v)) = h.split_once(':') {
+            let k = k.trim().to_string();
+            let v = v.trim().to_string();
+            if k.eq_ignore_ascii_case("content-length") {
+                content_length = v.parse().context("bad content-length")?;
+            }
+            headers.push((k, v));
+        }
+    }
+    if content_length > MAX_BODY_BYTES {
+        bail!("body too large: {content_length} bytes");
+    }
+    let mut reader = head.into_inner();
+    let mut body = vec![0u8; content_length];
+    reader.read_exact(&mut body).context("read body")?;
+    Ok(HttpRequest { method, target, headers, body })
+}
+
+fn reason(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        500 => "Internal Server Error",
+        503 => "Service Unavailable",
+        _ => "Unknown",
+    }
+}
+
+/// Write one response and flush; the connection is then done
+/// (`Connection: close`).
+pub fn respond(
+    stream: &mut TcpStream,
+    status: u16,
+    content_type: &str,
+    body: &[u8],
+) -> Result<()> {
+    let head = format!(
+        "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+        status,
+        reason(status),
+        content_type,
+        body.len()
+    );
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(body)?;
+    stream.flush()?;
+    Ok(())
+}
+
+/// A client-side response.
+#[derive(Clone, Debug)]
+pub struct HttpResponse {
+    pub status: u16,
+    pub body: Vec<u8>,
+}
+
+impl HttpResponse {
+    pub fn body_str(&self) -> Result<&str> {
+        std::str::from_utf8(&self.body).context("response body is not utf-8")
+    }
+}
+
+/// Extract `host:port` from a URL like `http://127.0.0.1:8080/path`;
+/// bare `host:port` passes through.
+pub fn authority_of(url: &str) -> Result<String> {
+    let rest = url.strip_prefix("http://").unwrap_or(url);
+    if rest.starts_with("https://") {
+        bail!("https is not supported; use http://host:port");
+    }
+    let authority = rest.split('/').next().unwrap_or("");
+    if authority.is_empty() {
+        bail!("no host in url {url:?}");
+    }
+    Ok(authority.to_string())
+}
+
+/// One blocking HTTP call: connect, send, read the full response.
+/// `authority` is `host:port`.
+pub fn http_call(
+    authority: &str,
+    method: &str,
+    path: &str,
+    body: Option<&str>,
+) -> Result<HttpResponse> {
+    let stream =
+        TcpStream::connect(authority).with_context(|| format!("connect {authority}"))?;
+    stream.set_nodelay(true).ok();
+    stream
+        .set_read_timeout(Some(Duration::from_secs(60)))
+        .ok();
+    let mut stream = stream;
+    let body_bytes = body.unwrap_or("").as_bytes();
+    let head = format!(
+        "{method} {path} HTTP/1.1\r\nHost: {authority}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+        body_bytes.len()
+    );
+    stream.write_all(head.as_bytes())?;
+    if !body_bytes.is_empty() {
+        stream.write_all(body_bytes)?;
+    }
+    stream.flush()?;
+
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    reader.read_line(&mut line).context("read status line")?;
+    let status: u16 = line
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .ok_or_else(|| anyhow!("bad status line {line:?}"))?;
+    let mut content_length: Option<usize> = None;
+    loop {
+        let mut h = String::new();
+        let n = reader.read_line(&mut h).context("read response header")?;
+        if n == 0 {
+            bail!("eof in response headers");
+        }
+        let t = h.trim_end();
+        if t.is_empty() {
+            break;
+        }
+        if let Some((k, v)) = t.split_once(':') {
+            if k.trim().eq_ignore_ascii_case("content-length") {
+                content_length = v.trim().parse().ok();
+            }
+        }
+    }
+    let mut body = Vec::new();
+    match content_length {
+        Some(n) => {
+            body = vec![0u8; n];
+            reader.read_exact(&mut body).context("read response body")?;
+        }
+        None => {
+            reader
+                .read_to_end(&mut body)
+                .context("read response body to eof")?;
+        }
+    }
+    Ok(HttpResponse { status, body })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::net::TcpListener;
+
+    #[test]
+    fn authority_parsing() {
+        assert_eq!(authority_of("http://127.0.0.1:8080").unwrap(), "127.0.0.1:8080");
+        assert_eq!(
+            authority_of("http://localhost:9000/v1/completions").unwrap(),
+            "localhost:9000"
+        );
+        assert_eq!(authority_of("127.0.0.1:8080").unwrap(), "127.0.0.1:8080");
+        assert!(authority_of("http://").is_err());
+    }
+
+    #[test]
+    fn request_response_roundtrip() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let server = std::thread::spawn(move || {
+            let (mut stream, _) = listener.accept().unwrap();
+            let req = read_request(&stream).unwrap();
+            assert_eq!(req.method, "POST");
+            assert_eq!(req.path(), "/echo");
+            assert_eq!(req.target, "/echo?x=1");
+            assert_eq!(req.header("content-type"), Some("application/json"));
+            let body = req.body.clone();
+            respond(&mut stream, 200, "application/json", &body).unwrap();
+        });
+        let resp = http_call(
+            &addr.to_string(),
+            "POST",
+            "/echo?x=1",
+            Some("{\"a\": 1}"),
+        )
+        .unwrap();
+        assert_eq!(resp.status, 200);
+        assert_eq!(resp.body_str().unwrap(), "{\"a\": 1}");
+        server.join().unwrap();
+    }
+
+    #[test]
+    fn get_without_body() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let server = std::thread::spawn(move || {
+            let (mut stream, _) = listener.accept().unwrap();
+            let req = read_request(&stream).unwrap();
+            assert_eq!(req.method, "GET");
+            assert!(req.body.is_empty());
+            respond(&mut stream, 404, "text/plain", b"nope\n").unwrap();
+        });
+        let resp = http_call(&addr.to_string(), "GET", "/missing", None).unwrap();
+        assert_eq!(resp.status, 404);
+        assert_eq!(resp.body_str().unwrap(), "nope\n");
+        server.join().unwrap();
+    }
+}

@@ -1,0 +1,358 @@
+//! Closed-loop HTTP load generator: `concurrency` client threads each
+//! replay requests against a gateway's `/v1/completions` endpoint as
+//! fast as responses come back, then the per-policy results are folded
+//! into the same [`Report`] table the simulator prints — so `bfio sim`,
+//! `bfio serve`, and a live gateway are comparable line by line.
+//!
+//! Workload shapes come either from a recorded trace (`--trace`, the
+//! JSONL format of [`crate::workload::trace`]) or from a seeded uniform
+//! sampler around `--prompt-tokens` / `--max-tokens`.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::channel;
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::metrics::Report;
+use crate::util::json::{self, Json};
+use crate::util::rng::Rng;
+use crate::util::stats;
+use crate::workload::Request;
+
+use super::http::http_call;
+
+/// Load-generator configuration.
+#[derive(Clone, Debug)]
+pub struct LoadGenConfig {
+    /// Gateway authority, `host:port`.
+    pub authority: String,
+    /// Concurrent closed-loop clients.
+    pub concurrency: usize,
+    /// Total requests to issue.
+    pub requests: usize,
+    /// Mean prompt length (tokens) for the synthetic sampler.
+    pub prompt_tokens: usize,
+    /// Mean decode budget (tokens) for the synthetic sampler.
+    pub max_tokens: u64,
+    pub seed: u64,
+    /// Replay these request shapes instead of sampling (cycled if
+    /// shorter than `requests`).
+    pub trace: Option<Vec<Request>>,
+}
+
+impl Default for LoadGenConfig {
+    fn default() -> Self {
+        LoadGenConfig {
+            authority: "127.0.0.1:8080".to_string(),
+            concurrency: 8,
+            requests: 64,
+            prompt_tokens: 32,
+            max_tokens: 16,
+            seed: 0,
+            trace: None,
+        }
+    }
+}
+
+/// One successful completion as observed by a client thread.
+#[derive(Clone, Debug)]
+struct PerRequest {
+    worker: usize,
+    tokens: u64,
+    /// Client-side wall latency.
+    latency_s: f64,
+    /// Server-reported (backend clock) figures.
+    tpot_s: f64,
+    queue_wait_s: f64,
+}
+
+/// Aggregate outcome of one load-generation run.
+#[derive(Clone, Debug, Default)]
+pub struct LoadGenResult {
+    pub completed: usize,
+    pub errors: usize,
+    /// Client wall time for the whole run.
+    pub wall_s: f64,
+    /// Total generated tokens (server-reported).
+    pub tokens: u64,
+    pub latencies_s: Vec<f64>,
+    pub tpots_s: Vec<f64>,
+    pub queue_waits_s: Vec<f64>,
+    /// Completions per worker id.
+    pub per_worker: BTreeMap<usize, u64>,
+    /// Raw `/metrics` snapshots taken just before and just after the
+    /// run, so [`fetch_report`] can diff server counters and report
+    /// *this run's* steps/energy/imbalance even against a gateway that
+    /// has already served other traffic.
+    pub metrics_before: String,
+    pub metrics_after: String,
+}
+
+/// Issue `cfg.requests` completions over HTTP and gather the results.
+pub fn run(cfg: &LoadGenConfig) -> Result<LoadGenResult> {
+    if cfg.requests == 0 {
+        bail!("--requests must be >= 1");
+    }
+    // (prompt_len, decode_len) per request.
+    let items: Vec<(usize, u64)> = match &cfg.trace {
+        Some(t) => {
+            if t.is_empty() {
+                bail!("trace is empty");
+            }
+            (0..cfg.requests)
+                .map(|i| {
+                    let r = &t[i % t.len()];
+                    (r.prefill.max(1.0) as usize, r.decode_len.max(1))
+                })
+                .collect()
+        }
+        None => {
+            let mut rng = Rng::new(cfg.seed);
+            (0..cfg.requests)
+                .map(|_| {
+                    (
+                        1 + rng.below_usize(cfg.prompt_tokens.max(1) * 2),
+                        1 + rng.below(cfg.max_tokens.max(1) * 2),
+                    )
+                })
+                .collect()
+        }
+    };
+    let items = Arc::new(items);
+    let cursor = Arc::new(AtomicUsize::new(0));
+    let (tx, rx) = channel::<std::result::Result<PerRequest, String>>();
+
+    let metrics_before = scrape_metrics(&cfg.authority);
+    let t0 = Instant::now();
+    let mut handles = Vec::new();
+    for _ in 0..cfg.concurrency.max(1) {
+        let items = Arc::clone(&items);
+        let cursor = Arc::clone(&cursor);
+        let tx = tx.clone();
+        let authority = cfg.authority.clone();
+        handles.push(std::thread::spawn(move || loop {
+            let i = cursor.fetch_add(1, Ordering::SeqCst);
+            if i >= items.len() {
+                break;
+            }
+            let (plen, dec) = items[i];
+            let outcome = one_request(&authority, plen, dec)
+                .map_err(|e| format!("request {i}: {e:#}"));
+            if tx.send(outcome).is_err() {
+                break;
+            }
+        }));
+    }
+    drop(tx);
+
+    let mut res = LoadGenResult::default();
+    for outcome in rx {
+        match outcome {
+            Ok(p) => {
+                res.completed += 1;
+                res.tokens += p.tokens;
+                res.latencies_s.push(p.latency_s);
+                res.tpots_s.push(p.tpot_s);
+                res.queue_waits_s.push(p.queue_wait_s);
+                *res.per_worker.entry(p.worker).or_insert(0) += 1;
+            }
+            Err(e) => {
+                res.errors += 1;
+                eprintln!("loadgen: {e}");
+            }
+        }
+    }
+    for h in handles {
+        let _ = h.join();
+    }
+    res.wall_s = t0.elapsed().as_secs_f64();
+    res.metrics_before = metrics_before;
+    res.metrics_after = scrape_metrics(&cfg.authority);
+    Ok(res)
+}
+
+/// Best-effort `/metrics` scrape (empty string when unreachable —
+/// counter diffs then fall back to zero baselines).
+fn scrape_metrics(authority: &str) -> String {
+    http_call(authority, "GET", "/metrics", None)
+        .ok()
+        .and_then(|r| r.body_str().map(str::to_string).ok())
+        .unwrap_or_default()
+}
+
+fn one_request(authority: &str, plen: usize, dec: u64) -> Result<PerRequest> {
+    let body = json::obj(vec![
+        (
+            "prompt",
+            Json::Arr((0..plen).map(|j| Json::Num((j % 997) as f64)).collect()),
+        ),
+        ("max_tokens", json::num(dec as f64)),
+    ])
+    .to_string();
+    let t0 = Instant::now();
+    let resp = http_call(authority, "POST", "/v1/completions", Some(&body))?;
+    let latency_s = t0.elapsed().as_secs_f64();
+    if resp.status != 200 {
+        bail!("status {}: {}", resp.status, resp.body_str().unwrap_or("<binary>"));
+    }
+    let v = Json::parse(resp.body_str()?).map_err(|e| anyhow!("bad response json: {e}"))?;
+    let bfio = v.get("bfio").context("response missing bfio block")?;
+    let field = |k: &str| -> Result<f64> {
+        bfio.get(k)
+            .and_then(Json::as_f64)
+            .ok_or_else(|| anyhow!("response missing bfio.{k}"))
+    };
+    let tokens = v
+        .get("usage")
+        .and_then(|u| u.get("completion_tokens"))
+        .and_then(Json::as_u64)
+        .context("response missing usage.completion_tokens")?;
+    Ok(PerRequest {
+        worker: field("worker")? as usize,
+        tokens,
+        latency_s,
+        tpot_s: field("tpot_s")?,
+        queue_wait_s: field("queue_wait_s")?,
+    })
+}
+
+/// Extract one sample value from a Prometheus exposition document.
+/// Matches `name 1.5` and `name{labels} 1.5` lines.
+pub fn prom_value(text: &str, name: &str) -> Option<f64> {
+    for line in text.lines() {
+        if line.starts_with('#') {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix(name) {
+            if !(rest.starts_with(' ') || rest.starts_with('{')) {
+                continue; // longer metric name sharing the prefix
+            }
+            if let Some(tok) = rest.rsplit(' ').next() {
+                if let Ok(x) = tok.trim().parse::<f64>() {
+                    return Some(x);
+                }
+            }
+        }
+    }
+    None
+}
+
+/// Combine client-side measurements with the gateway's `/metrics` and
+/// `/v0/workers` into the simulator's [`Report`] shape.  Server-side
+/// counters are *diffed* against the pre-run snapshot, so the report
+/// covers this run only, not the gateway's lifetime.  Returns
+/// `(policy_name, report)`.
+pub fn fetch_report(authority: &str, res: &LoadGenResult) -> Result<(String, Report)> {
+    let workers = http_call(authority, "GET", "/v0/workers", None)?;
+    let wj = Json::parse(workers.body_str()?)
+        .map_err(|e| anyhow!("bad /v0/workers json: {e}"))?;
+    let policy = wj
+        .get("policy")
+        .and_then(Json::as_str)
+        .unwrap_or("unknown")
+        .to_string();
+
+    let before = |name: &str| prom_value(&res.metrics_before, name).unwrap_or(0.0);
+    let after = |name: &str| prom_value(&res.metrics_after, name).unwrap_or(0.0);
+    let steps_b = before("bfio_steps_total");
+    let steps_a = after("bfio_steps_total");
+    let steps_run = (steps_a - steps_b).max(0.0);
+    let steps = steps_run as u64;
+    let energy_j =
+        (after("bfio_energy_joules") - before("bfio_energy_joules")).max(0.0);
+    // avg = imb_sum/steps, so the run's average recovers exactly from
+    // the two (average, steps) pairs.
+    let imb_sum_run =
+        after("bfio_avg_imbalance") * steps_a - before("bfio_avg_imbalance") * steps_b;
+    let avg_imbalance = if steps_run > 0.0 {
+        (imb_sum_run / steps_run).max(0.0)
+    } else {
+        0.0
+    };
+
+    let report = Report {
+        steps,
+        avg_imbalance,
+        mean_idle_fraction: 0.0, // not exposed per-step over HTTP
+        throughput_tps: if res.wall_s > 0.0 {
+            res.tokens as f64 / res.wall_s
+        } else {
+            0.0
+        },
+        tpot_s: stats::mean(&res.tpots_s),
+        tpot_p99_s: if res.tpots_s.is_empty() {
+            0.0
+        } else {
+            stats::percentile(&res.tpots_s, 99.0)
+        },
+        mean_queue_wait_s: stats::mean(&res.queue_waits_s),
+        completed: res.completed as u64,
+        completions: Vec::new(),
+        total_tokens: res.tokens as f64,
+        wall_time_s: res.wall_s,
+        sync_energy_j: 0.0,
+        total_energy_j: energy_j,
+        eta_sum: 0.0,
+        total_workload: 0.0,
+        imb_tot: 0.0,
+        series: None,
+    };
+    Ok((policy, report))
+}
+
+/// Human summary of one run (client-side view + per-worker spread).
+pub fn print_summary(cfg: &LoadGenConfig, res: &LoadGenResult) {
+    println!(
+        "loadgen: {} ok, {} errors over {} clients in {:.3}s  ({:.1} req/s, {:.1} tok/s)",
+        res.completed,
+        res.errors,
+        cfg.concurrency,
+        res.wall_s,
+        res.completed as f64 / res.wall_s.max(1e-9),
+        res.tokens as f64 / res.wall_s.max(1e-9),
+    );
+    if !res.latencies_s.is_empty() {
+        println!(
+            "  wall latency: mean {:.4}s  p99 {:.4}s   server tpot: mean {:.4}s",
+            stats::mean(&res.latencies_s),
+            stats::percentile(&res.latencies_s, 99.0),
+            stats::mean(&res.tpots_s),
+        );
+    }
+    let spread: Vec<String> = res
+        .per_worker
+        .iter()
+        .map(|(w, n)| format!("{w}:{n}"))
+        .collect();
+    println!("  per-worker completions: {}", spread.join(" "));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn prom_value_parses_labelled_and_bare() {
+        let text = "\
+# HELP bfio_imbalance x
+# TYPE bfio_imbalance gauge
+bfio_imbalance 12.5
+bfio_requests_total{policy=\"jsq\"} 7
+bfio_imbalance_extra 99
+";
+        assert_eq!(prom_value(text, "bfio_imbalance"), Some(12.5));
+        assert_eq!(prom_value(text, "bfio_requests_total"), Some(7.0));
+        assert_eq!(prom_value(text, "bfio_missing"), None);
+        // prefix must not match the longer name
+        assert_eq!(prom_value(text, "bfio_imbalance_extra"), Some(99.0));
+    }
+
+    #[test]
+    fn zero_requests_rejected() {
+        let cfg = LoadGenConfig { requests: 0, ..LoadGenConfig::default() };
+        assert!(run(&cfg).is_err());
+    }
+}

@@ -1,0 +1,503 @@
+//! HTTP serving gateway in front of the BF-IO coordinator — the network
+//! surface that turns the reproduction into a servable system.
+//!
+//! A hand-rolled HTTP/1.1 server on `std::net::TcpListener` with a
+//! worker-thread pool (no crates beyond `anyhow`; JSON via
+//! [`crate::util::json`]).  Endpoints:
+//!
+//! | endpoint               | method | purpose                                  |
+//! |------------------------|--------|------------------------------------------|
+//! | `/v1/completions`      | POST   | OpenAI-style completion (prompt → tokens)|
+//! | `/v0/workers`          | GET    | per-worker load / slots / queue depth    |
+//! | `/metrics`             | GET    | Prometheus text exposition               |
+//! | `/healthz`             | GET    | liveness                                 |
+//!
+//! Request intake is decoupled from execution by the [`backend::Backend`]
+//! trait: [`sim::SimBackend`] drives the discrete-event barrier loop in
+//! virtual time (CI-friendly, no GPUs), [`pjrt::PjrtBackend`] wraps the
+//! live [`crate::coordinator::serve`] stack.  Routing in both goes
+//! through the [`crate::policies::Policy`] registry, so BF-IO vs JSQ vs
+//! FCFS is comparable over real sockets; [`loadgen`] closes the loop.
+
+pub mod backend;
+pub mod http;
+pub mod loadgen;
+pub mod pjrt;
+pub mod sim;
+
+use std::net::{IpAddr, Ipv4Addr, Ipv6Addr, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::channel;
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::metrics::prometheus::PromWriter;
+use crate::util::json::{self, Json};
+
+use backend::{Backend, CompletionRequest};
+use http::{read_request, respond, HttpRequest};
+
+/// Gateway server configuration.
+#[derive(Clone, Debug)]
+pub struct GatewayConfig {
+    /// Bind address, e.g. `127.0.0.1:8080` (`:0` for an ephemeral port).
+    pub addr: String,
+    /// Handler thread-pool size.
+    pub threads: usize,
+}
+
+impl Default for GatewayConfig {
+    fn default() -> Self {
+        GatewayConfig { addr: "127.0.0.1:8080".to_string(), threads: 8 }
+    }
+}
+
+/// State shared across handler threads.
+struct Shared {
+    backend: Arc<dyn Backend>,
+    next_id: AtomicU64,
+    http_requests: AtomicU64,
+    bad_requests: AtomicU64,
+    started: Instant,
+}
+
+/// A running gateway.  Dropping it (or calling [`Gateway::shutdown`])
+/// stops the accept loop and joins every handler thread.
+pub struct Gateway {
+    /// The actual bound address (useful with `:0` ephemeral ports).
+    pub addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept_handle: Option<JoinHandle<()>>,
+    worker_handles: Vec<JoinHandle<()>>,
+}
+
+impl Gateway {
+    /// Bind, spawn the accept loop + handler pool, and return.
+    pub fn spawn(cfg: GatewayConfig, backend: Arc<dyn Backend>) -> Result<Gateway> {
+        let listener = TcpListener::bind(&cfg.addr)
+            .with_context(|| format!("bind {}", cfg.addr))?;
+        let addr = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let shared = Arc::new(Shared {
+            backend,
+            next_id: AtomicU64::new(0),
+            http_requests: AtomicU64::new(0),
+            bad_requests: AtomicU64::new(0),
+            started: Instant::now(),
+        });
+
+        let (tx, rx) = channel::<TcpStream>();
+        let rx = Arc::new(Mutex::new(rx));
+        let mut worker_handles = Vec::with_capacity(cfg.threads.max(1));
+        for _ in 0..cfg.threads.max(1) {
+            let rx = Arc::clone(&rx);
+            let shared = Arc::clone(&shared);
+            worker_handles.push(std::thread::spawn(move || loop {
+                // Take the next connection; holding the lock only for
+                // the recv keeps the pool work-stealing.
+                let stream = match rx.lock() {
+                    Ok(guard) => guard.recv(),
+                    Err(_) => break,
+                };
+                match stream {
+                    Ok(mut s) => handle_conn(&mut s, &shared),
+                    Err(_) => break, // accept loop gone
+                }
+            }));
+        }
+
+        let stop2 = Arc::clone(&stop);
+        let accept_handle = std::thread::spawn(move || {
+            for stream in listener.incoming() {
+                if stop2.load(Ordering::SeqCst) {
+                    break;
+                }
+                match stream {
+                    Ok(s) => {
+                        if tx.send(s).is_err() {
+                            break;
+                        }
+                    }
+                    Err(_) => continue,
+                }
+            }
+            // `tx` drops here; handler threads drain and exit.
+        });
+
+        Ok(Gateway {
+            addr,
+            stop,
+            accept_handle: Some(accept_handle),
+            worker_handles,
+        })
+    }
+
+    /// Stop accepting, join all threads.
+    pub fn shutdown(mut self) {
+        self.stop_inner();
+    }
+
+    fn stop_inner(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        // Poke the blocking accept so the loop observes `stop`.  A
+        // 0.0.0.0 / :: bind is not connectable on every platform —
+        // rewrite to loopback, and never block the shutdown path.
+        let mut poke = self.addr;
+        match poke.ip() {
+            IpAddr::V4(ip) if ip.is_unspecified() => {
+                poke.set_ip(IpAddr::V4(Ipv4Addr::LOCALHOST));
+            }
+            IpAddr::V6(ip) if ip.is_unspecified() => {
+                poke.set_ip(IpAddr::V6(Ipv6Addr::LOCALHOST));
+            }
+            _ => {}
+        }
+        let _ = TcpStream::connect_timeout(&poke, Duration::from_millis(250));
+        if let Some(h) = self.accept_handle.take() {
+            let _ = h.join();
+        }
+        for h in self.worker_handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Gateway {
+    fn drop(&mut self) {
+        self.stop_inner();
+    }
+}
+
+fn handle_conn(stream: &mut TcpStream, shared: &Shared) {
+    stream.set_nodelay(true).ok();
+    stream
+        .set_read_timeout(Some(Duration::from_secs(60)))
+        .ok();
+    let req = match read_request(stream) {
+        Ok(r) => r,
+        Err(_) => {
+            // Malformed HTTP (or the shutdown poke's empty connection):
+            // count it so the bad-request family reflects reality.
+            shared.http_requests.fetch_add(1, Ordering::Relaxed);
+            shared.bad_requests.fetch_add(1, Ordering::Relaxed);
+            let _ = respond(stream, 400, "text/plain", b"bad request\n");
+            return;
+        }
+    };
+    shared.http_requests.fetch_add(1, Ordering::Relaxed);
+    match route(&req, shared) {
+        Ok((status, ctype, body)) => {
+            let _ = respond(stream, status, ctype, &body);
+        }
+        Err(e) => {
+            let body = json::obj(vec![("error", json::s(&format!("{e:#}")))]).to_string();
+            let _ = respond(stream, 500, "application/json", body.as_bytes());
+        }
+    }
+}
+
+type Routed = (u16, &'static str, Vec<u8>);
+
+fn route(req: &HttpRequest, shared: &Shared) -> Result<Routed> {
+    match (req.method.as_str(), req.path()) {
+        ("GET", "/healthz") => Ok((200, "text/plain", b"ok\n".to_vec())),
+        ("GET", "/") => Ok((
+            200,
+            "text/plain",
+            b"bfio gateway\nPOST /v1/completions  GET /v0/workers  GET /metrics  GET /healthz\n"
+                .to_vec(),
+        )),
+        ("GET", "/v0/workers") => {
+            Ok((200, "application/json", workers_json(shared).into_bytes()))
+        }
+        ("GET", "/metrics") => Ok((
+            200,
+            "text/plain; version=0.0.4",
+            metrics_text(shared).into_bytes(),
+        )),
+        ("POST", "/v1/completions") => completions(req, shared),
+        ("GET", "/v1/completions") => Ok((
+            405,
+            "application/json",
+            error_body("use POST for /v1/completions"),
+        )),
+        _ => Ok((404, "application/json", error_body("no such endpoint"))),
+    }
+}
+
+fn error_body(msg: &str) -> Vec<u8> {
+    json::obj(vec![("error", json::s(msg))])
+        .to_string()
+        .into_bytes()
+}
+
+/// Toy whitespace tokenizer (FNV-1a per word): the sim backend needs
+/// only a token *count* and stable ids, not a real vocabulary.
+fn tokenize(s: &str) -> Vec<i32> {
+    s.split_whitespace()
+        .map(|w| {
+            let mut h: u32 = 2_166_136_261;
+            for b in w.bytes() {
+                h ^= u32::from(b);
+                h = h.wrapping_mul(16_777_619);
+            }
+            (h % 50_000) as i32
+        })
+        .collect()
+}
+
+fn completions(req: &HttpRequest, shared: &Shared) -> Result<Routed> {
+    let parsed = req
+        .body_str()
+        .ok()
+        .and_then(|s| Json::parse(s).ok())
+        .filter(|v| v.as_obj().is_some());
+    let body = match parsed {
+        Some(v) => v,
+        None => {
+            shared.bad_requests.fetch_add(1, Ordering::Relaxed);
+            return Ok((400, "application/json", error_body("body must be a JSON object")));
+        }
+    };
+    let prompt_tokens: Vec<i32> = match body.get("prompt") {
+        Some(Json::Str(s)) => tokenize(s),
+        Some(Json::Arr(a)) => a
+            .iter()
+            .filter_map(Json::as_f64)
+            .map(|x| x as i32)
+            .collect(),
+        _ => Vec::new(),
+    };
+    if prompt_tokens.is_empty() {
+        shared.bad_requests.fetch_add(1, Ordering::Relaxed);
+        return Ok((
+            400,
+            "application/json",
+            error_body("missing prompt (string or token array)"),
+        ));
+    }
+    let max_tokens = body
+        .get("max_tokens")
+        .and_then(Json::as_u64)
+        .unwrap_or(16)
+        .clamp(1, 4096) as u32;
+
+    let id = shared.next_id.fetch_add(1, Ordering::Relaxed);
+    let prompt_n = prompt_tokens.len() as f64;
+    let t0 = Instant::now();
+    let done = match shared.backend.complete(CompletionRequest {
+        id,
+        prompt_tokens,
+        max_tokens,
+    }) {
+        Ok(c) => c,
+        Err(e) => {
+            return Ok((
+                503,
+                "application/json",
+                error_body(&format!("backend unavailable: {e:#}")),
+            ));
+        }
+    };
+
+    let text = if done.tokens.is_empty() {
+        format!("<{} tokens>", done.n_tokens)
+    } else {
+        done.tokens
+            .iter()
+            .map(|t| format!("t{t}"))
+            .collect::<Vec<_>>()
+            .join(" ")
+    };
+    let resp = json::obj(vec![
+        ("id", json::s(&format!("cmpl-{id}"))),
+        ("object", json::s("text_completion")),
+        ("model", json::s(&shared.backend.name())),
+        (
+            "choices",
+            json::arr(vec![json::obj(vec![
+                ("index", json::num(0.0)),
+                ("text", json::s(&text)),
+                ("finish_reason", json::s("length")),
+            ])]),
+        ),
+        (
+            "usage",
+            json::obj(vec![
+                ("prompt_tokens", json::num(prompt_n)),
+                ("completion_tokens", json::num(f64::from(done.n_tokens))),
+                ("total_tokens", json::num(prompt_n + f64::from(done.n_tokens))),
+            ]),
+        ),
+        (
+            "bfio",
+            json::obj(vec![
+                ("request_id", json::num(id as f64)),
+                ("worker", json::num(done.worker as f64)),
+                ("tpot_s", json::num(done.tpot_s)),
+                ("queue_wait_s", json::num(done.queue_wait_s)),
+                ("latency_s", json::num(done.latency_s)),
+                ("wall_latency_s", json::num(t0.elapsed().as_secs_f64())),
+            ]),
+        ),
+    ]);
+    Ok((200, "application/json", resp.to_string().into_bytes()))
+}
+
+fn workers_json(shared: &Shared) -> String {
+    let ws = shared.backend.workers();
+    let st = shared.backend.stats();
+    json::obj(vec![
+        ("backend", json::s(&shared.backend.name())),
+        ("policy", json::s(&st.policy)),
+        ("steps", json::num(st.steps as f64)),
+        ("clock_s", json::num(st.clock_s)),
+        ("queue_depth", json::num(st.queue_depth as f64)),
+        ("completed", json::num(st.completed as f64)),
+        (
+            "workers",
+            json::arr(ws.iter().map(|w| {
+                json::obj(vec![
+                    ("id", json::num(w.id as f64)),
+                    ("load", json::num(w.load)),
+                    ("active", json::num(w.active as f64)),
+                    ("free_slots", json::num(w.free_slots as f64)),
+                    ("completed", json::num(w.completed as f64)),
+                ])
+            })),
+        ),
+    ])
+    .to_string()
+}
+
+fn metrics_text(shared: &Shared) -> String {
+    let ws = shared.backend.workers();
+    let st = shared.backend.stats();
+    let policy_labels: [(&str, &str); 1] = [("policy", st.policy.as_str())];
+    let mut w = PromWriter::new();
+
+    w.family(
+        "bfio_worker_load",
+        "Instantaneous per-worker workload L_g (resident KV tokens).",
+        "gauge",
+    );
+    for s in &ws {
+        let id = s.id.to_string();
+        w.sample("bfio_worker_load", &[("worker", id.as_str())], s.load);
+    }
+    w.family(
+        "bfio_worker_active",
+        "Occupied batch slots per worker.",
+        "gauge",
+    );
+    for s in &ws {
+        let id = s.id.to_string();
+        w.sample(
+            "bfio_worker_active",
+            &[("worker", id.as_str())],
+            s.active as f64,
+        );
+    }
+    w.family(
+        "bfio_worker_completed_total",
+        "Requests completed per worker.",
+        "counter",
+    );
+    for s in &ws {
+        let id = s.id.to_string();
+        w.sample(
+            "bfio_worker_completed_total",
+            &[("worker", id.as_str())],
+            s.completed as f64,
+        );
+    }
+    w.family(
+        "bfio_queue_depth",
+        "Requests waiting for a batch slot.",
+        "gauge",
+    );
+    w.sample("bfio_queue_depth", &[], st.queue_depth as f64);
+    w.family(
+        "bfio_imbalance",
+        "Latest imbalance (Eq. 2): per-step for sim, per-batch average for pjrt.",
+        "gauge",
+    );
+    w.sample("bfio_imbalance", &[], st.imbalance);
+    w.family(
+        "bfio_avg_imbalance",
+        "Running mean imbalance over steps (Eq. 20).",
+        "gauge",
+    );
+    w.sample("bfio_avg_imbalance", &[], st.avg_imbalance);
+    w.family(
+        "bfio_energy_joules",
+        "Cumulative energy under the paper's power model.",
+        "gauge",
+    );
+    w.sample("bfio_energy_joules", &[], st.energy_j);
+    w.family(
+        "bfio_requests_total",
+        "Completed requests, labelled by routing policy.",
+        "counter",
+    );
+    w.sample("bfio_requests_total", &policy_labels, st.completed as f64);
+    w.family("bfio_tokens_total", "Generated tokens.", "counter");
+    w.sample("bfio_tokens_total", &policy_labels, st.total_tokens as f64);
+    w.family("bfio_steps_total", "Barrier steps executed.", "counter");
+    w.sample("bfio_steps_total", &policy_labels, st.steps as f64);
+    w.family(
+        "bfio_backend_clock_seconds",
+        "Backend clock (virtual for sim, wall for pjrt).",
+        "gauge",
+    );
+    w.sample("bfio_backend_clock_seconds", &[], st.clock_s);
+    w.family(
+        "bfio_http_requests_total",
+        "HTTP requests handled by the gateway.",
+        "counter",
+    );
+    w.sample(
+        "bfio_http_requests_total",
+        &[],
+        shared.http_requests.load(Ordering::Relaxed) as f64,
+    );
+    w.family(
+        "bfio_http_bad_requests_total",
+        "HTTP requests rejected as malformed.",
+        "counter",
+    );
+    w.sample(
+        "bfio_http_bad_requests_total",
+        &[],
+        shared.bad_requests.load(Ordering::Relaxed) as f64,
+    );
+    w.family(
+        "bfio_gateway_uptime_seconds",
+        "Gateway process uptime.",
+        "gauge",
+    );
+    w.sample(
+        "bfio_gateway_uptime_seconds",
+        &[],
+        shared.started.elapsed().as_secs_f64(),
+    );
+    w.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tokenizer_counts_words() {
+        assert_eq!(tokenize("hello brave new world").len(), 4);
+        assert_eq!(tokenize("  spaced   out  ").len(), 2);
+        assert!(tokenize("").is_empty());
+        // stable ids
+        assert_eq!(tokenize("abc abc"), tokenize("abc abc"));
+        assert_eq!(tokenize("abc")[0], tokenize("x abc")[1]);
+    }
+}

@@ -1,0 +1,326 @@
+//! Live-model gateway backend: adapts the gateway's per-request
+//! interface to the batch-oriented [`crate::coordinator::serve`]
+//! leader/worker stack (PJRT workers executing the AOT-compiled TinyLM).
+//!
+//! `serve` runs a fixed request set to completion, so this backend
+//! micro-batches: a dispatcher thread gathers every request that arrives
+//! within `batch_window`, runs one `serve` call over the batch, and
+//! answers each caller from the resulting [`ServedRequest`]s.  Between
+//! batches the PJRT workers are torn down — acceptable for the TinyLM
+//! demo scale this wraps; a persistent-worker coordinator is the obvious
+//! next step (see ROADMAP).
+//!
+//! Without the `pjrt` cargo feature, `serve` is a stub that errors, so
+//! every completion surfaces HTTP 503 — the gateway itself still runs.
+
+use std::collections::BTreeMap;
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::coordinator::{serve, CoordinatorConfig, ServeRequest};
+
+use super::backend::{Backend, BackendStats, Completion, CompletionRequest, WorkerStatus};
+
+/// Configuration for [`PjrtBackend`].
+#[derive(Clone, Debug)]
+pub struct PjrtBackendConfig {
+    pub coordinator: CoordinatorConfig,
+    /// How long the dispatcher gathers arrivals into one `serve` batch.
+    pub batch_window: Duration,
+}
+
+impl Default for PjrtBackendConfig {
+    fn default() -> Self {
+        PjrtBackendConfig {
+            coordinator: CoordinatorConfig::default(),
+            batch_window: Duration::from_millis(20),
+        }
+    }
+}
+
+struct Pending {
+    req: CompletionRequest,
+    /// When the request entered the dispatcher queue — dispatcher wait
+    /// (batch window + any in-flight serve call) counts as queueing.
+    enqueued: Instant,
+    done: Sender<Result<Completion, String>>,
+}
+
+enum Msg {
+    Submit(Pending),
+    Shutdown,
+}
+
+#[derive(Clone, Debug, Default)]
+struct Snapshot {
+    completed_per: Vec<u64>,
+    slots_per_worker: usize,
+    /// Σ over batches of (batch avg imbalance × batch steps), so the
+    /// exported average stays step-weighted across micro-batches.
+    imb_weighted_sum: f64,
+    stats: BackendStats,
+}
+
+/// The PJRT-coordinator-backed [`Backend`].
+pub struct PjrtBackend {
+    policy: String,
+    workers: usize,
+    tx: Mutex<Sender<Msg>>,
+    snap: Arc<Mutex<Snapshot>>,
+    handle: Mutex<Option<JoinHandle<()>>>,
+}
+
+impl PjrtBackend {
+    pub fn new(cfg: PjrtBackendConfig) -> Result<PjrtBackend> {
+        if cfg.coordinator.workers == 0 {
+            anyhow::bail!("pjrt backend needs at least one worker");
+        }
+        let (tx, rx) = channel::<Msg>();
+        // Best-effort capacity probe (the same leader-side meta.json read
+        // serve() does) so /v0/workers shows free slots before the first
+        // batch; stays 0 when artifacts are absent (capacity unknown).
+        let slots_per_worker = std::fs::read_to_string(
+            cfg.coordinator.artifacts_dir.join("meta.json"),
+        )
+        .ok()
+        .and_then(|text| crate::runtime::Meta::parse(&text).ok())
+        .map(|meta| meta.decode_batch())
+        .unwrap_or(0);
+        let snap = Arc::new(Mutex::new(Snapshot {
+            completed_per: vec![0; cfg.coordinator.workers],
+            slots_per_worker,
+            imb_weighted_sum: 0.0,
+            stats: BackendStats {
+                policy: cfg.coordinator.policy.clone(),
+                ..BackendStats::default()
+            },
+        }));
+        let policy = cfg.coordinator.policy.clone();
+        let workers = cfg.coordinator.workers;
+        let snap2 = Arc::clone(&snap);
+        let handle = std::thread::spawn(move || dispatch_loop(cfg, rx, snap2));
+        Ok(PjrtBackend {
+            policy,
+            workers,
+            tx: Mutex::new(tx),
+            snap,
+            handle: Mutex::new(Some(handle)),
+        })
+    }
+}
+
+impl Backend for PjrtBackend {
+    fn name(&self) -> String {
+        format!("pjrt/{}", self.policy)
+    }
+
+    fn complete(&self, req: CompletionRequest) -> Result<Completion> {
+        let (done_tx, done_rx) = channel::<Result<Completion, String>>();
+        {
+            let tx = self.tx.lock().map_err(|_| anyhow!("backend poisoned"))?;
+            tx.send(Msg::Submit(Pending {
+                req,
+                enqueued: Instant::now(),
+                done: done_tx,
+            }))
+            .map_err(|_| anyhow!("pjrt dispatcher is gone"))?;
+        }
+        done_rx
+            .recv()
+            .context("pjrt dispatcher dropped the request")?
+            .map_err(|e| anyhow!(e))
+    }
+
+    fn workers(&self) -> Vec<WorkerStatus> {
+        let snap = match self.snap.lock() {
+            Ok(s) => s.clone(),
+            Err(_) => return Vec::new(),
+        };
+        (0..self.workers)
+            .map(|i| WorkerStatus {
+                id: i,
+                load: 0.0, // not observable between serve() batches
+                active: 0,
+                free_slots: snap.slots_per_worker,
+                completed: snap.completed_per.get(i).copied().unwrap_or(0),
+            })
+            .collect()
+    }
+
+    fn stats(&self) -> BackendStats {
+        self.snap
+            .lock()
+            .map(|s| s.stats.clone())
+            .unwrap_or_default()
+    }
+}
+
+impl Drop for PjrtBackend {
+    fn drop(&mut self) {
+        if let Ok(tx) = self.tx.lock() {
+            let _ = tx.send(Msg::Shutdown);
+        }
+        if let Ok(mut h) = self.handle.lock() {
+            if let Some(h) = h.take() {
+                let _ = h.join();
+            }
+        }
+    }
+}
+
+fn dispatch_loop(cfg: PjrtBackendConfig, rx: Receiver<Msg>, snap: Arc<Mutex<Snapshot>>) {
+    loop {
+        // Block for the first request of the next batch.
+        let first = match rx.recv() {
+            Ok(Msg::Submit(p)) => p,
+            Ok(Msg::Shutdown) | Err(_) => return,
+        };
+        let mut batch = vec![first];
+        let mut shutdown = false;
+        let deadline = Instant::now() + cfg.batch_window;
+        loop {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match rx.recv_timeout(deadline - now) {
+                Ok(Msg::Submit(p)) => batch.push(p),
+                Ok(Msg::Shutdown) => {
+                    shutdown = true;
+                    break;
+                }
+                Err(RecvTimeoutError::Timeout) => break,
+                Err(RecvTimeoutError::Disconnected) => {
+                    shutdown = true;
+                    break;
+                }
+            }
+        }
+
+        let reqs: Vec<ServeRequest> = batch
+            .iter()
+            .map(|p| ServeRequest {
+                id: p.req.id,
+                prompt: p.req.prompt_tokens.clone(),
+                max_new_tokens: p.req.max_tokens.max(1),
+            })
+            .collect();
+        let batch_start = Instant::now();
+        match serve(&cfg.coordinator, &reqs) {
+            Ok(rep) => {
+                if let Ok(mut s) = snap.lock() {
+                    for sr in &rep.served {
+                        if let Some(c) = s.completed_per.get_mut(sr.worker) {
+                            *c += 1;
+                        }
+                    }
+                    s.slots_per_worker = rep.slots_per_worker;
+                    s.imb_weighted_sum += rep.avg_imbalance * rep.steps as f64;
+                    let imb_weighted_sum = s.imb_weighted_sum;
+                    let st = &mut s.stats;
+                    st.policy = rep.policy.clone();
+                    st.steps += rep.steps;
+                    st.clock_s += rep.wall_s;
+                    st.imbalance = rep.avg_imbalance;
+                    st.avg_imbalance = if st.steps > 0 {
+                        imb_weighted_sum / st.steps as f64
+                    } else {
+                        0.0
+                    };
+                    st.energy_j += rep.energy_j;
+                    st.completed += rep.served.len() as u64;
+                    st.admitted += reqs.len() as u64;
+                    // generated tokens only (rep.tokens_per_s also counts
+                    // prompt tokens, which would inflate this family)
+                    st.total_tokens += rep
+                        .served
+                        .iter()
+                        .map(|s| u64::from(s.generated))
+                        .sum::<u64>();
+                }
+                let by_id: BTreeMap<u64, _> =
+                    rep.served.iter().map(|s| (s.id, s)).collect();
+                for p in batch {
+                    // Time spent queued in the dispatcher before this
+                    // batch's serve() began.
+                    let disp_wait = batch_start
+                        .saturating_duration_since(p.enqueued)
+                        .as_secs_f64();
+                    match by_id.get(&p.req.id) {
+                        Some(sr) => {
+                            let tpot = if sr.generated > 0 {
+                                (sr.finish_s - sr.admit_s) / sr.generated as f64
+                            } else {
+                                0.0
+                            };
+                            let _ = p.done.send(Ok(Completion {
+                                id: sr.id,
+                                worker: sr.worker,
+                                // token values are not surfaced by the
+                                // coordinator; counts are authoritative.
+                                tokens: Vec::new(),
+                                n_tokens: sr.generated,
+                                queue_wait_s: disp_wait + sr.admit_s,
+                                tpot_s: tpot,
+                                latency_s: disp_wait + sr.finish_s,
+                            }));
+                        }
+                        None => {
+                            let _ = p.done.send(Err(format!(
+                                "request {} not served (step cap hit?)",
+                                p.req.id
+                            )));
+                        }
+                    }
+                }
+            }
+            Err(e) => {
+                let msg = format!("{e:#}");
+                for p in batch {
+                    let _ = p.done.send(Err(msg.clone()));
+                }
+            }
+        }
+        if shutdown {
+            return;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn surfaces_stub_error_without_feature() {
+        let be = PjrtBackend::new(PjrtBackendConfig {
+            batch_window: Duration::from_millis(1),
+            ..PjrtBackendConfig::default()
+        })
+        .unwrap();
+        let err = be
+            .complete(CompletionRequest {
+                id: 1,
+                prompt_tokens: vec![1, 2],
+                max_tokens: 4,
+            })
+            .unwrap_err();
+        assert!(
+            format!("{err:#}").contains("pjrt"),
+            "error should mention the missing feature: {err:#}"
+        );
+        assert_eq!(be.workers().len(), 2);
+        assert_eq!(be.stats().completed, 0);
+    }
+
+    #[test]
+    fn name_includes_policy() {
+        let be = PjrtBackend::new(PjrtBackendConfig::default()).unwrap();
+        assert_eq!(be.name(), "pjrt/bfio");
+    }
+}

@@ -1,0 +1,548 @@
+//! Simulator-backed gateway backend: an *online* variant of the
+//! discrete-event barrier loop in [`crate::sim`], driven by live HTTP
+//! arrivals instead of a pre-generated trace.
+//!
+//! A single scheduler thread owns the worker state and runs the paper's
+//! per-step cycle in **virtual time** (`Δt = C + t_ℓ·max_g L_g`, Eq. 19):
+//! arrivals → policy admission (sticky) → barrier step → completions.
+//! Requests arrive over a channel from the gateway's handler threads and
+//! are answered through a per-request channel the moment their decode
+//! budget is met.  No GPUs, no sleeping on the virtual clock — the whole
+//! stack is exercisable in CI in milliseconds.
+//!
+//! Two small *real-time* knobs make routing observable under concurrent
+//! load: `step_delay` paces barrier steps, and `batch_window` gathers
+//! arrivals on the idle→busy transition before the first step (the
+//! dynamic-batching window real servers use).  Both default to ~1 ms and
+//! can be zeroed for maximum throughput.
+
+use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::config::{PowerConfig, SimConfig};
+use crate::energy::EnergyAccumulator;
+use crate::metrics::imbalance;
+use crate::policies::{by_name, ActiveView, AssignCtx, Policy, WaitingView, WorkerView};
+use crate::util::rng::Rng;
+use crate::workload::Drift;
+
+use super::backend::{Backend, BackendStats, Completion, CompletionRequest, WorkerStatus};
+
+/// Configuration for [`SimBackend`].
+#[derive(Clone, Debug)]
+pub struct SimBackendConfig {
+    /// Number of simulated decode workers `G`.
+    pub g: usize,
+    /// Per-worker batch capacity `B`.
+    pub b: usize,
+    /// Routing policy name (see [`crate::policies::by_name`]).
+    pub policy: String,
+    /// Fixed per-step overhead `C`, virtual seconds.
+    pub c_overhead: f64,
+    /// Per-token latency `t_ℓ`, virtual seconds.
+    pub t_token: f64,
+    /// Workload drift `(δ_k)`; `Unit` = LLM decode.
+    pub drift: Drift,
+    pub seed: u64,
+    /// Real-time pause per barrier step (lets concurrent requests queue
+    /// so routing decisions are observable).  Zero = free-running.
+    pub step_delay: Duration,
+    /// Real-time dynamic-batching window on the idle→busy transition.
+    pub batch_window: Duration,
+}
+
+impl Default for SimBackendConfig {
+    fn default() -> Self {
+        let sim = SimConfig::default();
+        SimBackendConfig {
+            g: 4,
+            b: 8,
+            policy: "bfio:8".to_string(),
+            c_overhead: sim.c_overhead,
+            t_token: sim.t_token,
+            drift: Drift::Unit,
+            seed: 0,
+            step_delay: Duration::from_millis(1),
+            batch_window: Duration::from_millis(5),
+        }
+    }
+}
+
+/// A submitted request waiting for its answer.
+struct Pending {
+    req: CompletionRequest,
+    done: Sender<Completion>,
+}
+
+enum Msg {
+    Submit(Pending),
+    Shutdown,
+}
+
+/// One occupied batch slot.
+struct ActiveSlot {
+    id: u64,
+    /// Current per-step workload `w_i` (resident KV).
+    w: f64,
+    remaining: u64,
+    age: u64,
+    o: u64,
+    arrival_clock: f64,
+    admit_clock: f64,
+    done: Sender<Completion>,
+}
+
+/// Snapshot the scheduler publishes after every step, read lock-free of
+/// the scheduler by `/v0/workers` and `/metrics`.
+#[derive(Clone, Debug, Default)]
+struct Snapshot {
+    workers: Vec<WorkerStatus>,
+    stats: BackendStats,
+}
+
+/// The simulator-backed [`Backend`].
+pub struct SimBackend {
+    policy_name: String,
+    tx: Mutex<Sender<Msg>>,
+    snap: Arc<Mutex<Snapshot>>,
+    handle: Mutex<Option<JoinHandle<()>>>,
+}
+
+impl SimBackend {
+    pub fn new(cfg: SimBackendConfig) -> Result<SimBackend> {
+        if cfg.g == 0 || cfg.b == 0 {
+            anyhow::bail!("sim backend needs g >= 1 and b >= 1");
+        }
+        let policy = by_name(&cfg.policy)
+            .ok_or_else(|| anyhow!("unknown policy {:?}", cfg.policy))?;
+        let policy_name = policy.name();
+        let (tx, rx) = channel::<Msg>();
+        let snap = Arc::new(Mutex::new(Snapshot::default()));
+        // Publish an initial all-idle snapshot so /v0/workers is
+        // meaningful before the first request.
+        {
+            let mut s = snap.lock().expect("fresh mutex");
+            s.workers = (0..cfg.g)
+                .map(|i| WorkerStatus {
+                    id: i,
+                    load: 0.0,
+                    active: 0,
+                    free_slots: cfg.b,
+                    completed: 0,
+                })
+                .collect();
+            s.stats.policy = policy_name.clone();
+        }
+        let scheduler = Scheduler {
+            cfg: cfg.clone(),
+            rx,
+            snap: Arc::clone(&snap),
+            policy,
+            policy_name: policy_name.clone(),
+        };
+        let handle = std::thread::spawn(move || scheduler.run());
+        Ok(SimBackend {
+            policy_name,
+            tx: Mutex::new(tx),
+            snap,
+            handle: Mutex::new(Some(handle)),
+        })
+    }
+}
+
+impl Backend for SimBackend {
+    fn name(&self) -> String {
+        format!("sim/{}", self.policy_name)
+    }
+
+    fn complete(&self, req: CompletionRequest) -> Result<Completion> {
+        let (done_tx, done_rx) = channel::<Completion>();
+        {
+            let tx = self.tx.lock().map_err(|_| anyhow!("backend poisoned"))?;
+            tx.send(Msg::Submit(Pending { req, done: done_tx }))
+                .map_err(|_| anyhow!("sim scheduler is gone"))?;
+        }
+        done_rx
+            .recv()
+            .context("sim scheduler dropped the request (shutting down?)")
+    }
+
+    fn workers(&self) -> Vec<WorkerStatus> {
+        self.snap.lock().map(|s| s.workers.clone()).unwrap_or_default()
+    }
+
+    fn stats(&self) -> BackendStats {
+        self.snap.lock().map(|s| s.stats.clone()).unwrap_or_default()
+    }
+}
+
+impl Drop for SimBackend {
+    fn drop(&mut self) {
+        if let Ok(tx) = self.tx.lock() {
+            let _ = tx.send(Msg::Shutdown);
+        }
+        if let Ok(mut h) = self.handle.lock() {
+            if let Some(h) = h.take() {
+                let _ = h.join();
+            }
+        }
+    }
+}
+
+/// Deterministic pseudo-tokens for a completed request (the sim backend
+/// has no real model; ids are stable for a given request id).
+fn gen_tokens(id: u64, n: u64) -> Vec<i32> {
+    (0..n)
+        .map(|j| {
+            let h = id
+                .wrapping_mul(6_364_136_223_846_793_005)
+                .wrapping_add(j.wrapping_mul(1_442_695_040_888_963_407));
+            ((h >> 33) % 50_000) as i32
+        })
+        .collect()
+}
+
+struct Scheduler {
+    cfg: SimBackendConfig,
+    rx: Receiver<Msg>,
+    snap: Arc<Mutex<Snapshot>>,
+    policy: Box<dyn Policy>,
+    policy_name: String,
+}
+
+impl Scheduler {
+    fn run(mut self) {
+        let g = self.cfg.g;
+        let b = self.cfg.b;
+        let horizon = self.policy.lookahead();
+        let mut rng = Rng::new(self.cfg.seed ^ 0x6A7E_11AD);
+        let power = PowerConfig::a100();
+        let mut energy = EnergyAccumulator::new();
+
+        let mut workers: Vec<Vec<ActiveSlot>> =
+            (0..g).map(|_| Vec::with_capacity(b)).collect();
+        // FIFO wait queue: (pending, arrival_clock).
+        let mut wait: Vec<(Pending, f64)> = Vec::new();
+
+        let mut clock = 0.0f64;
+        let mut step: u64 = 0;
+        let mut imb_sum = 0.0f64;
+        let mut completed: u64 = 0;
+        let mut admitted: u64 = 0;
+        let mut total_tokens: u64 = 0;
+        let mut completed_per: Vec<u64> = vec![0; g];
+
+        'outer: loop {
+            let busy: usize = workers.iter().map(|a| a.len()).sum();
+
+            // Park while idle: block until the next arrival (or shutdown),
+            // then hold the dynamic-batching window open.
+            if busy == 0 && wait.is_empty() {
+                match self.rx.recv() {
+                    Ok(Msg::Submit(p)) => {
+                        wait.push((p, clock));
+                        if !self.cfg.batch_window.is_zero() {
+                            std::thread::sleep(self.cfg.batch_window);
+                        }
+                    }
+                    Ok(Msg::Shutdown) | Err(_) => break 'outer,
+                }
+            }
+
+            // Drain whatever else has arrived.
+            loop {
+                match self.rx.try_recv() {
+                    Ok(Msg::Submit(p)) => wait.push((p, clock)),
+                    Ok(Msg::Shutdown) => break 'outer,
+                    Err(TryRecvError::Empty) => break,
+                    Err(TryRecvError::Disconnected) => break 'outer,
+                }
+            }
+
+            // --- admission (same Policy machinery as the offline sim) ---
+            let total_free: usize = workers.iter().map(|a| b - a.len()).sum();
+            if total_free > 0 && !wait.is_empty() {
+                let cum_drift = self.cfg.drift.cumulative(step, horizon.max(1));
+                let views: Vec<WorkerView> = workers
+                    .iter()
+                    .map(|acts| WorkerView {
+                        load: acts.iter().map(|a| a.w).sum(),
+                        free_slots: b - acts.len(),
+                        active: acts
+                            .iter()
+                            .map(|a| ActiveView {
+                                load: a.w,
+                                pred_remaining: a.remaining.max(1),
+                            })
+                            .collect(),
+                    })
+                    .collect();
+                let view_cap = wait.len().min((total_free * 4).max(256));
+                let waiting_views: Vec<WaitingView> = wait[..view_cap]
+                    .iter()
+                    .enumerate()
+                    .map(|(i, (p, _))| WaitingView {
+                        idx: i,
+                        prefill: p.req.prompt_tokens.len().max(1) as f64,
+                        arrival_step: step,
+                    })
+                    .collect();
+                let ctx = AssignCtx {
+                    step,
+                    batch_cap: b,
+                    workers: &views,
+                    waiting: &waiting_views,
+                    cum_drift: &cum_drift,
+                };
+                let assignments = self.policy.assign(&ctx, &mut rng);
+                let mut slots_opt: Vec<Option<(Pending, f64)>> =
+                    wait.drain(..).map(Some).collect();
+                for &(widx, gi) in &assignments {
+                    if widx >= slots_opt.len() || gi >= g || workers[gi].len() >= b {
+                        continue; // defensive: policies are validated in sim tests
+                    }
+                    if let Some((p, arrival_clock)) = slots_opt[widx].take() {
+                        let prefill = p.req.prompt_tokens.len().max(1) as f64;
+                        let o = u64::from(p.req.max_tokens.max(1));
+                        workers[gi].push(ActiveSlot {
+                            id: p.req.id,
+                            w: prefill,
+                            remaining: o,
+                            age: 0,
+                            o,
+                            arrival_clock,
+                            admit_clock: clock,
+                            done: p.done,
+                        });
+                        admitted += 1;
+                    }
+                }
+                wait = slots_opt.into_iter().flatten().collect();
+            }
+
+            // --- one barrier-synchronized step in virtual time ---
+            let loads: Vec<f64> = workers
+                .iter()
+                .map(|acts| acts.iter().map(|a| a.w).sum())
+                .collect();
+            let active: usize = workers.iter().map(|a| a.len()).sum();
+            // Responses are sent only *after* the snapshot is published,
+            // so a client that observes its completion then reads
+            // /metrics always sees itself counted.
+            let mut ready: Vec<(usize, ActiveSlot)> = Vec::new();
+            if active > 0 {
+                let l_max = loads.iter().cloned().fold(0.0, f64::max);
+                clock += self.cfg.c_overhead + self.cfg.t_token * l_max;
+                imb_sum += imbalance(&loads);
+                energy.step(&loads, self.cfg.t_token, self.cfg.c_overhead, &power);
+                step += 1;
+                total_tokens += active as u64;
+
+                // advance / complete / drift
+                for (gi, acts) in workers.iter_mut().enumerate() {
+                    let mut i = 0;
+                    while i < acts.len() {
+                        acts[i].remaining -= 1;
+                        acts[i].age += 1;
+                        if acts[i].remaining == 0 {
+                            let slot = acts.swap_remove(i);
+                            completed += 1;
+                            completed_per[gi] += 1;
+                            ready.push((gi, slot));
+                        } else {
+                            let age = acts[i].age;
+                            acts[i].w += self.cfg.drift.delta(age);
+                            i += 1;
+                        }
+                    }
+                }
+            }
+
+            publish(
+                &self.snap,
+                &self.policy_name,
+                &workers,
+                &completed_per,
+                wait.len(),
+                b,
+                step,
+                clock,
+                imb_sum,
+                energy.total_energy_j(),
+                completed,
+                admitted,
+                total_tokens,
+            );
+
+            for (gi, slot) in ready {
+                let tpot = if slot.o > 0 {
+                    (clock - slot.admit_clock) / slot.o as f64
+                } else {
+                    0.0
+                };
+                // The receiver may have hung up (client gone); ignore
+                // send failures.
+                let _ = slot.done.send(Completion {
+                    id: slot.id,
+                    worker: gi,
+                    tokens: gen_tokens(slot.id, slot.o),
+                    n_tokens: slot.o as u32,
+                    queue_wait_s: (slot.admit_clock - slot.arrival_clock).max(0.0),
+                    tpot_s: tpot,
+                    latency_s: clock - slot.arrival_clock,
+                });
+            }
+
+            let still_busy = workers.iter().any(|a| !a.is_empty());
+            if !self.cfg.step_delay.is_zero() && (still_busy || !wait.is_empty()) {
+                std::thread::sleep(self.cfg.step_delay);
+            }
+        }
+        // Dropping `wait` and `workers` here drops their response senders;
+        // blocked `complete()` callers observe RecvError and surface an
+        // error instead of hanging.
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn publish(
+    snap: &Mutex<Snapshot>,
+    policy_name: &str,
+    workers: &[Vec<ActiveSlot>],
+    completed_per: &[u64],
+    queue_depth: usize,
+    b: usize,
+    steps: u64,
+    clock: f64,
+    imb_sum: f64,
+    energy_j: f64,
+    completed: u64,
+    admitted: u64,
+    total_tokens: u64,
+) {
+    let loads: Vec<f64> = workers
+        .iter()
+        .map(|acts| acts.iter().map(|a| a.w).sum())
+        .collect();
+    let ws: Vec<WorkerStatus> = workers
+        .iter()
+        .enumerate()
+        .map(|(i, acts)| WorkerStatus {
+            id: i,
+            load: loads[i],
+            active: acts.len(),
+            free_slots: b - acts.len(),
+            completed: completed_per[i],
+        })
+        .collect();
+    let stats = BackendStats {
+        policy: policy_name.to_string(),
+        steps,
+        clock_s: clock,
+        imbalance: imbalance(&loads),
+        avg_imbalance: if steps > 0 { imb_sum / steps as f64 } else { 0.0 },
+        energy_j,
+        completed,
+        admitted,
+        total_tokens,
+        queue_depth,
+    };
+    if let Ok(mut s) = snap.lock() {
+        s.workers = ws;
+        s.stats = stats;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fast_cfg(policy: &str) -> SimBackendConfig {
+        SimBackendConfig {
+            g: 2,
+            b: 2,
+            policy: policy.to_string(),
+            step_delay: Duration::ZERO,
+            batch_window: Duration::ZERO,
+            ..SimBackendConfig::default()
+        }
+    }
+
+    #[test]
+    fn single_completion_roundtrip() {
+        let be = SimBackend::new(fast_cfg("fcfs")).unwrap();
+        let c = be
+            .complete(CompletionRequest {
+                id: 7,
+                prompt_tokens: vec![1, 2, 3],
+                max_tokens: 4,
+            })
+            .unwrap();
+        assert_eq!(c.id, 7);
+        assert_eq!(c.n_tokens, 4);
+        assert_eq!(c.tokens.len(), 4);
+        assert!(c.worker < 2);
+        assert!(c.tpot_s > 0.0);
+        assert!(c.latency_s >= c.tpot_s);
+        let st = be.stats();
+        assert_eq!(st.completed, 1);
+        assert_eq!(st.admitted, 1);
+        assert!(st.steps >= 4);
+        assert!(st.energy_j > 0.0);
+    }
+
+    #[test]
+    fn tokens_are_deterministic_per_id() {
+        assert_eq!(gen_tokens(7, 4), gen_tokens(7, 4));
+        assert_ne!(gen_tokens(7, 4), gen_tokens(8, 4));
+        assert!(gen_tokens(1, 16).iter().all(|&t| (0..50_000).contains(&t)));
+    }
+
+    #[test]
+    fn concurrent_completions_all_answered() {
+        let be = Arc::new(SimBackend::new(fast_cfg("jsq")).unwrap());
+        let n = 16u64;
+        let handles: Vec<_> = (0..n)
+            .map(|i| {
+                let be = Arc::clone(&be);
+                std::thread::spawn(move || {
+                    be.complete(CompletionRequest {
+                        id: i,
+                        prompt_tokens: vec![0; 4 + i as usize],
+                        max_tokens: 3,
+                    })
+                    .unwrap()
+                })
+            })
+            .collect();
+        let mut ids: Vec<u64> = handles
+            .into_iter()
+            .map(|h| h.join().unwrap().id)
+            .collect();
+        ids.sort_unstable();
+        assert_eq!(ids, (0..n).collect::<Vec<u64>>());
+        let st = be.stats();
+        assert_eq!(st.completed, n);
+        let per: u64 = be.workers().iter().map(|w| w.completed).sum();
+        assert_eq!(per, n);
+        assert_eq!(st.total_tokens, 3 * n);
+    }
+
+    #[test]
+    fn unknown_policy_rejected() {
+        assert!(SimBackend::new(fast_cfg("no-such-policy")).is_err());
+    }
+
+    #[test]
+    fn idle_snapshot_shows_all_free() {
+        let be = SimBackend::new(fast_cfg("fcfs")).unwrap();
+        let ws = be.workers();
+        assert_eq!(ws.len(), 2);
+        assert!(ws.iter().all(|w| w.free_slots == 2 && w.active == 0));
+        assert_eq!(be.name(), "sim/FCFS");
+    }
+}

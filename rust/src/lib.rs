@@ -17,7 +17,13 @@
 //! * [`policies`] — FCFS (Algorithm 2), JSQ, Round-Robin, Power-of-d,
 //!   Min-Min, Max-Min, OLB, Throttled, and BF-IO(H) with its integer
 //!   optimization solver (exact branch-and-bound + greedy/local-search).
-//! * [`metrics`] — AvgImbalance, throughput, TPOT, idle time, trajectories.
+//! * [`metrics`] — AvgImbalance, throughput, TPOT, idle time, trajectories,
+//!   and Prometheus text exposition.
+//! * [`gateway`] — the HTTP serving surface: an OpenAI-style
+//!   `/v1/completions` endpoint, `/v0/workers` status, `/metrics`, and
+//!   `/healthz` on a hand-rolled HTTP/1.1 server, decoupled from
+//!   execution by a `Backend` trait (discrete-event sim in virtual time,
+//!   or the live PJRT coordinator), plus a closed-loop load generator.
 //! * [`energy`] — the GPU power model `P(mfu)` and per-step energy
 //!   integration (Section 5.2 / Appendix D of the paper).
 //! * [`theory`] — closed-form theorem bounds and empirical IIR drivers.
@@ -32,6 +38,7 @@ pub mod config;
 pub mod coordinator;
 pub mod experiments;
 pub mod energy;
+pub mod gateway;
 pub mod metrics;
 pub mod policies;
 pub mod report;

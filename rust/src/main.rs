@@ -6,13 +6,22 @@
 //!               adversarial|predictors|drift|all> [--full]  paper artifacts
 //! bfio theory  <thm1|thm2|thm3|energy|all>                  theorem checks
 //! bfio serve   --workers 2 --policy bfio:8 --requests 16    live PJRT serving
+//! bfio gateway --backend sim --addr 127.0.0.1:8080          HTTP gateway
+//! bfio loadgen --url http://127.0.0.1:8080 --requests 64    drive a gateway
 //! bfio trace   --out trace.jsonl --steps 200                dump a trace
 //! ```
+
+use std::sync::Arc;
+use std::time::Duration;
 
 use anyhow::{bail, Context, Result};
 
 use bfio_serve::coordinator::{serve, CoordinatorConfig, ServeRequest};
 use bfio_serve::experiments::{self, scaling, ExpScale};
+use bfio_serve::gateway::backend::Backend;
+use bfio_serve::gateway::pjrt::{PjrtBackend, PjrtBackendConfig};
+use bfio_serve::gateway::sim::{SimBackend, SimBackendConfig};
+use bfio_serve::gateway::{self, loadgen, Gateway, GatewayConfig};
 use bfio_serve::metrics::Report;
 use bfio_serve::policies::by_name;
 use bfio_serve::sim::Simulator;
@@ -50,12 +59,16 @@ fn run(args: &Args) -> Result<()> {
         Some("repro") => cmd_repro(args),
         Some("theory") => cmd_theory(args),
         Some("serve") => cmd_serve(args),
+        Some("gateway") => cmd_gateway(args),
+        Some("loadgen") => cmd_loadgen(args),
         Some("trace") => cmd_trace(args),
-        Some(other) => bail!("unknown subcommand {other}; try sim|repro|theory|serve|trace"),
+        Some(other) => bail!(
+            "unknown subcommand {other}; try sim|repro|theory|serve|gateway|loadgen|trace"
+        ),
         None => {
             println!(
                 "bfio — BF-IO load-balancing reproduction\n\
-                 subcommands: sim | repro <exp> | theory <thm> | serve | trace\n\
+                 subcommands: sim | repro <exp> | theory <thm> | serve | gateway | loadgen | trace\n\
                  see README.md for details"
             );
             Ok(())
@@ -222,6 +235,73 @@ fn cmd_serve(args: &Args) -> Result<()> {
         rep.energy_j
     );
     println!("served {} requests", rep.served.len());
+    Ok(())
+}
+
+fn cmd_gateway(args: &Args) -> Result<()> {
+    let kind = args.get_or("backend", "sim");
+    let addr = args.get_or("addr", "127.0.0.1:8080").to_string();
+    let threads = args.usize_or("threads", 8);
+    let policy = args.get_or("policy", "bfio:8").to_string();
+    let backend: Arc<dyn Backend> = match kind {
+        "sim" => {
+            let cfg = SimBackendConfig {
+                g: args.usize_or("g", 4),
+                b: args.usize_or("b", 8),
+                policy: policy.clone(),
+                seed: args.u64_or("seed", 0),
+                step_delay: Duration::from_millis(args.u64_or("step-delay-ms", 1)),
+                batch_window: Duration::from_millis(args.u64_or("batch-window-ms", 5)),
+                ..SimBackendConfig::default()
+            };
+            Arc::new(SimBackend::new(cfg)?)
+        }
+        "pjrt" => {
+            let cfg = PjrtBackendConfig {
+                coordinator: CoordinatorConfig {
+                    artifacts_dir: args.get_or("artifacts", "artifacts").into(),
+                    workers: args.usize_or("workers", 2),
+                    policy: policy.clone(),
+                    max_steps: args.u64_or("max-steps", 100_000),
+                    seed: args.u64_or("seed", 0),
+                },
+                batch_window: Duration::from_millis(args.u64_or("batch-window-ms", 20)),
+            };
+            Arc::new(PjrtBackend::new(cfg)?)
+        }
+        other => bail!("unknown backend {other}; try sim|pjrt"),
+    };
+    let name = backend.name();
+    let gw = Gateway::spawn(GatewayConfig { addr, threads }, backend)?;
+    println!("bfio gateway ({name}) listening on http://{}", gw.addr);
+    println!("  POST /v1/completions   GET /v0/workers   GET /metrics   GET /healthz");
+    // Serve until killed.
+    loop {
+        std::thread::sleep(Duration::from_secs(3600));
+    }
+}
+
+fn cmd_loadgen(args: &Args) -> Result<()> {
+    let url = args.get_or("url", "http://127.0.0.1:8080");
+    let authority = gateway::http::authority_of(url)?;
+    let trace = match args.flag("trace") {
+        Some(p) => Some(tracefile::load_trace(std::path::Path::new(p))?),
+        None => None,
+    };
+    let cfg = loadgen::LoadGenConfig {
+        authority,
+        concurrency: args.usize_or("concurrency", 8),
+        requests: args.usize_or("requests", 64),
+        prompt_tokens: args.usize_or("prompt-tokens", 32),
+        max_tokens: args.u64_or("max-tokens", 16),
+        seed: args.u64_or("seed", 0),
+        trace,
+    };
+    let res = loadgen::run(&cfg)?;
+    loadgen::print_summary(&cfg, &res);
+    let (policy, report) = loadgen::fetch_report(&cfg.authority, &res)?;
+    println!("{}", Report::table_header());
+    println!("{}", report.table_row(&policy));
     Ok(())
 }
 

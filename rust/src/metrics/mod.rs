@@ -1,6 +1,9 @@
 //! Metrics recorders for the four evaluation metrics of Section 6.3
 //! (AvgImbalance, Throughput, TPOT, Energy) plus idle-time statistics
-//! (Fig. 1) and time series for the load/power trajectory figures.
+//! (Fig. 1), time series for the load/power trajectory figures, and
+//! Prometheus text exposition for the serving gateway.
+
+pub mod prometheus;
 
 use crate::config::PowerConfig;
 use crate::energy::EnergyAccumulator;
@@ -21,6 +24,25 @@ pub fn idle_fraction(loads: &[f64]) -> f64 {
         return 0.0;
     }
     imbalance(loads) / (loads.len() as f64 * l_max)
+}
+
+/// One completed request with its identity attached — who it was, where
+/// it ran, and when.  Consumed by the gateway's per-request responses and
+/// by trace debugging; recorded only when enabled (can be large).
+#[derive(Clone, Debug, PartialEq)]
+pub struct CompletionRecord {
+    /// Request id, threaded through from the workload trace.
+    pub id: u64,
+    /// Worker the request was (stickily) assigned to.
+    pub worker: usize,
+    /// Wall clock when the request became visible to the router.
+    pub arrival_clock: f64,
+    /// Wall clock at admission into a batch slot.
+    pub admit_clock: f64,
+    /// Wall clock at completion.
+    pub finish_clock: f64,
+    /// Output tokens generated (`o_i`).
+    pub tokens: u64,
 }
 
 /// Rolling recorder fed once per decode step by the simulator or the
@@ -48,6 +70,9 @@ pub struct Recorder {
     tpot_samples: Vec<f64>,
     queue_wait_sum: f64,
     completed: u64,
+    /// Keep per-request [`CompletionRecord`]s (off by default: large).
+    record_completions: bool,
+    completions: Vec<CompletionRecord>,
 
     // time series
     pub series_time: Vec<f64>,
@@ -85,6 +110,8 @@ impl Recorder {
             tpot_samples: Vec::new(),
             queue_wait_sum: 0.0,
             completed: 0,
+            record_completions: false,
+            completions: Vec::new(),
             series_time: Vec::new(),
             series_imbalance: Vec::new(),
             series_max_load: Vec::new(),
@@ -100,6 +127,12 @@ impl Recorder {
         self.record_series = true;
         self.series_worker_loads = vec![Vec::new(); sampled_workers.len()];
         self.sampled_workers = sampled_workers;
+        self
+    }
+
+    /// Keep a [`CompletionRecord`] per completed request.
+    pub fn with_completions(mut self) -> Recorder {
+        self.record_completions = true;
         self
     }
 
@@ -169,6 +202,20 @@ impl Recorder {
         }
     }
 
+    /// Completion with full identity: updates the TPOT/queue-wait
+    /// aggregates and (when enabled) keeps the record itself.
+    pub fn complete_record(&mut self, rec: CompletionRecord) {
+        self.complete_request_full(
+            rec.arrival_clock,
+            rec.admit_clock,
+            rec.finish_clock,
+            rec.tokens,
+        );
+        if self.record_completions {
+            self.completions.push(rec);
+        }
+    }
+
     pub fn finish(self) -> Report {
         Report {
             steps: self.steps,
@@ -203,6 +250,7 @@ impl Recorder {
                 0.0
             },
             completed: self.completed,
+            completions: self.completions,
             total_tokens: self.tokens,
             wall_time_s: self.wall_time,
             sync_energy_j: self.energy.sync_energy_j,
@@ -258,6 +306,8 @@ pub struct Report {
     /// Mean router-queueing delay (arrival → admission), seconds.
     pub mean_queue_wait_s: f64,
     pub completed: u64,
+    /// Per-request records (empty unless `Recorder::with_completions`).
+    pub completions: Vec<CompletionRecord>,
     pub total_tokens: f64,
     pub wall_time_s: f64,
     /// Synchronized-phase energy (theory object), joules.
@@ -381,6 +431,31 @@ mod tests {
         let rep = r.finish();
         assert!((rep.tpot_s - 2.0).abs() < 1e-12);
         assert_eq!(rep.completed, 2);
+    }
+
+    #[test]
+    fn completion_records_kept_only_when_enabled() {
+        let rec = CompletionRecord {
+            id: 42,
+            worker: 3,
+            arrival_clock: 0.5,
+            admit_clock: 1.0,
+            finish_clock: 5.0,
+            tokens: 4,
+        };
+        let mut off = Recorder::new(PowerConfig::a100(), 1e-7, 1e-3, 0);
+        off.complete_record(rec.clone());
+        let rep = off.finish();
+        assert!(rep.completions.is_empty());
+        assert_eq!(rep.completed, 1);
+        assert!((rep.tpot_s - 1.0).abs() < 1e-12);
+
+        let mut on =
+            Recorder::new(PowerConfig::a100(), 1e-7, 1e-3, 0).with_completions();
+        on.complete_record(rec.clone());
+        let rep = on.finish();
+        assert_eq!(rep.completions, vec![rec]);
+        assert!((rep.mean_queue_wait_s - 0.5).abs() < 1e-12);
     }
 
     #[test]

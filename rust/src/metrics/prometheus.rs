@@ -1,0 +1,221 @@
+//! Prometheus text exposition format (version 0.0.4) rendering.
+//!
+//! Hand-rolled because no client library is available offline; emits the
+//! subset the gateway's `GET /metrics` endpoint needs: `# HELP`/`# TYPE`
+//! headers, gauge/counter samples with escaped labels.  Scrapeable by a
+//! stock Prometheus server pointed at the gateway.
+
+use std::fmt::Write as _;
+
+use super::Report;
+
+/// Incremental builder for one exposition document.
+#[derive(Clone, Debug, Default)]
+pub struct PromWriter {
+    out: String,
+}
+
+impl PromWriter {
+    pub fn new() -> PromWriter {
+        PromWriter { out: String::new() }
+    }
+
+    /// Emit the `# HELP` / `# TYPE` headers for a metric family.
+    /// `kind` is `"gauge"` or `"counter"`.
+    pub fn family(&mut self, name: &str, help: &str, kind: &str) {
+        let _ = writeln!(self.out, "# HELP {name} {help}");
+        let _ = writeln!(self.out, "# TYPE {name} {kind}");
+    }
+
+    /// Emit one sample line, with optional labels.
+    pub fn sample(&mut self, name: &str, labels: &[(&str, &str)], value: f64) {
+        self.out.push_str(name);
+        if !labels.is_empty() {
+            self.out.push('{');
+            for (i, (k, v)) in labels.iter().enumerate() {
+                if i > 0 {
+                    self.out.push(',');
+                }
+                let _ = write!(self.out, "{}=\"{}\"", k, escape_label(v));
+            }
+            self.out.push('}');
+        }
+        let _ = writeln!(self.out, " {}", fmt_value(value));
+    }
+
+    pub fn finish(self) -> String {
+        self.out
+    }
+}
+
+/// Escape a label value per the exposition format: backslash, double
+/// quote, and newline.
+fn escape_label(v: &str) -> String {
+    let mut out = String::with_capacity(v.len());
+    for c in v.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Render a value: integers without a decimal point, floats via Rust's
+/// shortest-roundtrip formatting.
+fn fmt_value(v: f64) -> String {
+    if !v.is_finite() {
+        // Prometheus accepts +Inf/-Inf/NaN spellings.
+        if v.is_nan() {
+            return "NaN".to_string();
+        }
+        return if v > 0.0 { "+Inf".to_string() } else { "-Inf".to_string() };
+    }
+    if v == v.trunc() && v.abs() < 1e15 {
+        format!("{}", v as i64)
+    } else {
+        format!("{v}")
+    }
+}
+
+/// Render a finished [`Report`] as Prometheus gauges/counters, labelled
+/// with the policy that produced it.  This is the offline twin of the
+/// gateway's live `/metrics` endpoint: `bfio sim`/`bfio repro` results
+/// can be pushed to a Pushgateway or diffed textually.
+pub fn render_report(report: &Report, policy: &str) -> String {
+    let mut w = PromWriter::new();
+    let l: [(&str, &str); 1] = [("policy", policy)];
+    // Named to match the live gateway's /metrics: `bfio_avg_imbalance`
+    // is the run-average (Eq. 20) there too, while `bfio_imbalance` is
+    // reserved for the instantaneous per-step value.
+    w.family(
+        "bfio_avg_imbalance",
+        "Time-averaged load imbalance AvgImb (Eq. 20).",
+        "gauge",
+    );
+    w.sample("bfio_avg_imbalance", &l, report.avg_imbalance);
+    w.family(
+        "bfio_idle_fraction",
+        "Mean barrier idle fraction per step.",
+        "gauge",
+    );
+    w.sample("bfio_idle_fraction", &l, report.mean_idle_fraction);
+    w.family(
+        "bfio_throughput_tokens_per_second",
+        "Decode throughput (Eq. 21).",
+        "gauge",
+    );
+    w.sample(
+        "bfio_throughput_tokens_per_second",
+        &l,
+        report.throughput_tps,
+    );
+    w.family(
+        "bfio_tpot_seconds",
+        "Mean time per output token (Eq. 22).",
+        "gauge",
+    );
+    w.sample("bfio_tpot_seconds", &l, report.tpot_s);
+    w.family(
+        "bfio_energy_joules",
+        "Total energy under the paper's power model.",
+        "gauge",
+    );
+    w.sample("bfio_energy_joules", &l, report.total_energy_j);
+    w.family("bfio_requests_total", "Completed requests.", "counter");
+    w.sample("bfio_requests_total", &l, report.completed as f64);
+    w.family("bfio_tokens_total", "Generated tokens.", "counter");
+    w.sample("bfio_tokens_total", &l, report.total_tokens);
+    w.family("bfio_steps_total", "Decode steps executed.", "counter");
+    w.sample("bfio_steps_total", &l, report.steps as f64);
+    w.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_report() -> Report {
+        Report {
+            steps: 3,
+            avg_imbalance: 12.5,
+            mean_idle_fraction: 0.25,
+            throughput_tps: 100.0,
+            tpot_s: 0.125,
+            tpot_p99_s: 0.5,
+            mean_queue_wait_s: 0.0,
+            completed: 7,
+            completions: Vec::new(),
+            total_tokens: 42.0,
+            wall_time_s: 1.5,
+            sync_energy_j: 10.0,
+            total_energy_j: 20.0,
+            eta_sum: 0.1,
+            total_workload: 100.0,
+            imb_tot: 10.0,
+            series: None,
+        }
+    }
+
+    #[test]
+    fn exact_exposition_output() {
+        let text = render_report(&tiny_report(), "bfio:8");
+        let want = "\
+# HELP bfio_avg_imbalance Time-averaged load imbalance AvgImb (Eq. 20).
+# TYPE bfio_avg_imbalance gauge
+bfio_avg_imbalance{policy=\"bfio:8\"} 12.5
+# HELP bfio_idle_fraction Mean barrier idle fraction per step.
+# TYPE bfio_idle_fraction gauge
+bfio_idle_fraction{policy=\"bfio:8\"} 0.25
+# HELP bfio_throughput_tokens_per_second Decode throughput (Eq. 21).
+# TYPE bfio_throughput_tokens_per_second gauge
+bfio_throughput_tokens_per_second{policy=\"bfio:8\"} 100
+# HELP bfio_tpot_seconds Mean time per output token (Eq. 22).
+# TYPE bfio_tpot_seconds gauge
+bfio_tpot_seconds{policy=\"bfio:8\"} 0.125
+# HELP bfio_energy_joules Total energy under the paper's power model.
+# TYPE bfio_energy_joules gauge
+bfio_energy_joules{policy=\"bfio:8\"} 20
+# HELP bfio_requests_total Completed requests.
+# TYPE bfio_requests_total counter
+bfio_requests_total{policy=\"bfio:8\"} 7
+# HELP bfio_tokens_total Generated tokens.
+# TYPE bfio_tokens_total counter
+bfio_tokens_total{policy=\"bfio:8\"} 42
+# HELP bfio_steps_total Decode steps executed.
+# TYPE bfio_steps_total counter
+bfio_steps_total{policy=\"bfio:8\"} 3
+";
+        assert_eq!(text, want);
+    }
+
+    #[test]
+    fn label_escaping() {
+        let mut w = PromWriter::new();
+        w.sample("m", &[("p", "a\"b\\c\nd")], 1.0);
+        assert_eq!(w.finish(), "m{p=\"a\\\"b\\\\c\\nd\"} 1\n");
+    }
+
+    #[test]
+    fn value_formatting() {
+        assert_eq!(fmt_value(5.0), "5");
+        assert_eq!(fmt_value(-3.0), "-3");
+        assert_eq!(fmt_value(0.125), "0.125");
+        assert_eq!(fmt_value(f64::INFINITY), "+Inf");
+        assert_eq!(fmt_value(f64::NEG_INFINITY), "-Inf");
+        assert!(fmt_value(f64::NAN) == "NaN");
+    }
+
+    #[test]
+    fn unlabelled_sample() {
+        let mut w = PromWriter::new();
+        w.family("up", "Gateway liveness.", "gauge");
+        w.sample("up", &[], 1.0);
+        assert_eq!(
+            w.finish(),
+            "# HELP up Gateway liveness.\n# TYPE up gauge\nup 1\n"
+        );
+    }
+}

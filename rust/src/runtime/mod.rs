@@ -14,12 +14,17 @@
 //! instruction ids that xla_extension 0.5.1 rejects; the text parser
 //! reassigns ids (see /opt/xla-example/README.md).
 
+#[cfg(feature = "pjrt")]
 pub mod model;
 
+#[cfg(feature = "pjrt")]
 use std::collections::BTreeMap;
+#[cfg(feature = "pjrt")]
 use std::path::{Path, PathBuf};
 
-use anyhow::{anyhow, bail, Context, Result};
+#[cfg(feature = "pjrt")]
+use anyhow::bail;
+use anyhow::{anyhow, Context, Result};
 
 use crate::util::json::Json;
 
@@ -201,6 +206,7 @@ impl Meta {
 /// Field order matters: Rust drops fields in declaration order, and PJRT
 /// buffers/executables must be freed while the client is still alive, so
 /// `client` is declared last.
+#[cfg(feature = "pjrt")]
 pub struct Runtime {
     /// Device-resident copies of the parameters, uploaded lazily on the
     /// first decode step (saves the ~75 % of per-step host→device bytes
@@ -217,6 +223,7 @@ pub struct Runtime {
     pub client: xla::PjRtClient,
 }
 
+#[cfg(feature = "pjrt")]
 impl Runtime {
     /// Load artifacts from a directory (does not compile yet; executables
     /// are compiled lazily per variant and cached).
@@ -370,6 +377,7 @@ mod tests {
         assert_eq!(bytes_to_f32(&bytes), xs);
     }
 
+    #[cfg(feature = "pjrt")]
     #[test]
     fn real_artifacts_load_if_present() {
         let dir = Path::new(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"));

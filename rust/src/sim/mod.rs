@@ -16,7 +16,7 @@
 pub mod predictor;
 
 use crate::config::{PowerConfig, SimConfig};
-use crate::metrics::{Recorder, Report};
+use crate::metrics::{CompletionRecord, Recorder, Report};
 use crate::policies::{
     validate_assignments, ActiveView, AssignCtx, Policy, WaitingView, WorkerView,
 };
@@ -27,8 +27,7 @@ use predictor::Predictor;
 /// One active (decoding) request inside a worker's batch.
 #[derive(Clone, Debug)]
 struct Active {
-    /// Request id (kept for trace debugging / future eviction support).
-    #[allow(dead_code)]
+    /// Request id, threaded into the [`CompletionRecord`] on completion.
     id: u64,
     /// Current per-step workload `w_i` (resident KV).
     w: f64,
@@ -98,6 +97,9 @@ impl Simulator {
         if self.cfg.record_series {
             let sampled: Vec<usize> = (0..g.min(self.cfg.sample_workers)).collect();
             recorder = recorder.with_series(sampled);
+        }
+        if self.cfg.record_completions {
+            recorder = recorder.with_completions();
         }
 
         let mut workers: Vec<Vec<Active>> = vec![Vec::with_capacity(b); g];
@@ -215,19 +217,21 @@ impl Simulator {
             // 4. advance / complete / drift
             let finish_clock = recorder.clock();
             let drift = &self.cfg.drift;
-            for acts in workers.iter_mut() {
+            for (gi, acts) in workers.iter_mut().enumerate() {
                 let mut i = 0;
                 while i < acts.len() {
                     acts[i].remaining -= 1;
                     acts[i].age += 1;
                     if acts[i].remaining == 0 {
                         let a = acts.swap_remove(i);
-                        recorder.complete_request_full(
-                            a.arrival_clock,
-                            a.admit_clock,
+                        recorder.complete_record(CompletionRecord {
+                            id: a.id,
+                            worker: gi,
+                            arrival_clock: a.arrival_clock,
+                            admit_clock: a.admit_clock,
                             finish_clock,
-                            a.o,
-                        );
+                            tokens: a.o,
+                        });
                         completed += 1;
                     } else {
                         let age = acts[i].age;
@@ -424,6 +428,37 @@ mod tests {
         let s = res.report.series.unwrap();
         assert_eq!(s.time.len() as u64, res.steps);
         assert_eq!(s.worker_loads.len(), 2);
+    }
+
+    #[test]
+    fn completion_records_thread_request_ids() {
+        let mut cfg = small_cfg();
+        cfg.record_completions = true;
+        let sim = Simulator::new(cfg);
+        let trace = small_trace(8);
+        let res = sim.run(&trace, &mut Fcfs::new());
+        let recs = &res.report.completions;
+        assert_eq!(recs.len(), trace.len());
+        let mut got: Vec<u64> = recs.iter().map(|r| r.id).collect();
+        got.sort_unstable();
+        let mut want: Vec<u64> = trace.iter().map(|r| r.id).collect();
+        want.sort_unstable();
+        assert_eq!(got, want, "every trace id appears exactly once");
+        for r in recs {
+            assert!(r.worker < 4);
+            assert!(r.finish_clock >= r.admit_clock);
+            assert!(r.admit_clock >= r.arrival_clock);
+            let src = trace.iter().find(|t| t.id == r.id).unwrap();
+            assert_eq!(r.tokens, src.decode_len);
+        }
+    }
+
+    #[test]
+    fn completions_empty_by_default() {
+        let sim = Simulator::new(small_cfg());
+        let trace = small_trace(1);
+        let res = sim.run(&trace, &mut Fcfs::new());
+        assert!(res.report.completions.is_empty());
     }
 
     #[test]

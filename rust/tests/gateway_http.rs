@@ -1,0 +1,235 @@
+//! End-to-end gateway integration: boots the HTTP server on a loopback
+//! port with the discrete-event [`SimBackend`] (no GPUs), issues
+//! completions over raw `TcpStream`s, and checks routing statistics and
+//! the Prometheus `/metrics` exposition.
+
+use std::collections::HashSet;
+use std::sync::Arc;
+use std::time::Duration;
+
+use bfio_serve::gateway::http as ghttp;
+use bfio_serve::gateway::loadgen::{self, LoadGenConfig};
+use bfio_serve::gateway::sim::{SimBackend, SimBackendConfig};
+use bfio_serve::gateway::{Gateway, GatewayConfig};
+use bfio_serve::util::json::Json;
+
+/// Boot a gateway on an ephemeral loopback port.
+fn boot(policy: &str, step_delay_ms: u64, batch_window_ms: u64) -> (Gateway, String) {
+    let backend = SimBackend::new(SimBackendConfig {
+        g: 4,
+        b: 2,
+        policy: policy.to_string(),
+        step_delay: Duration::from_millis(step_delay_ms),
+        batch_window: Duration::from_millis(batch_window_ms),
+        ..SimBackendConfig::default()
+    })
+    .unwrap();
+    let gw = Gateway::spawn(
+        GatewayConfig { addr: "127.0.0.1:0".to_string(), threads: 16 },
+        Arc::new(backend),
+    )
+    .unwrap();
+    let authority = gw.addr.to_string();
+    (gw, authority)
+}
+
+#[test]
+fn healthz_root_and_404() {
+    let (gw, a) = boot("fcfs", 0, 0);
+    let r = ghttp::http_call(&a, "GET", "/healthz", None).unwrap();
+    assert_eq!(r.status, 200);
+    assert_eq!(r.body_str().unwrap(), "ok\n");
+
+    let r = ghttp::http_call(&a, "GET", "/", None).unwrap();
+    assert_eq!(r.status, 200);
+    assert!(r.body_str().unwrap().contains("/v1/completions"));
+
+    let r = ghttp::http_call(&a, "GET", "/no/such/path", None).unwrap();
+    assert_eq!(r.status, 404);
+
+    let r = ghttp::http_call(&a, "GET", "/v1/completions", None).unwrap();
+    assert_eq!(r.status, 405);
+    gw.shutdown();
+}
+
+#[test]
+fn completion_roundtrip_with_string_prompt() {
+    let (gw, a) = boot("fcfs", 0, 0);
+    let r = ghttp::http_call(
+        &a,
+        "POST",
+        "/v1/completions",
+        Some(r#"{"prompt": "hello brave new world", "max_tokens": 5}"#),
+    )
+    .unwrap();
+    assert_eq!(r.status, 200, "body: {}", r.body_str().unwrap_or(""));
+    let v = Json::parse(r.body_str().unwrap()).unwrap();
+    assert_eq!(v.get("object").unwrap().as_str().unwrap(), "text_completion");
+    assert!(v.get("model").unwrap().as_str().unwrap().starts_with("sim/"));
+    let usage = v.get("usage").unwrap();
+    assert_eq!(usage.get("prompt_tokens").unwrap().as_u64().unwrap(), 4);
+    assert_eq!(usage.get("completion_tokens").unwrap().as_u64().unwrap(), 5);
+    assert_eq!(usage.get("total_tokens").unwrap().as_u64().unwrap(), 9);
+    let text = v
+        .get("choices")
+        .unwrap()
+        .idx(0)
+        .unwrap()
+        .get("text")
+        .unwrap()
+        .as_str()
+        .unwrap()
+        .to_string();
+    assert_eq!(text.split_whitespace().count(), 5, "5 generated tokens");
+    let b = v.get("bfio").unwrap();
+    assert!(b.get("worker").unwrap().as_usize().unwrap() < 4);
+    assert!(b.get("tpot_s").unwrap().as_f64().unwrap() > 0.0);
+    assert!(b.get("request_id").is_some());
+    gw.shutdown();
+}
+
+#[test]
+fn rejects_malformed_bodies() {
+    let (gw, a) = boot("fcfs", 0, 0);
+    for bad in [
+        "not json at all",
+        "[1, 2, 3]",
+        "{}",
+        r#"{"prompt": ""}"#,
+        r#"{"prompt": []}"#,
+    ] {
+        let r = ghttp::http_call(&a, "POST", "/v1/completions", Some(bad)).unwrap();
+        assert_eq!(r.status, 400, "body {bad:?} should be rejected");
+    }
+    // and the gateway still serves afterwards
+    let r = ghttp::http_call(
+        &a,
+        "POST",
+        "/v1/completions",
+        Some(r#"{"prompt": [5, 6], "max_tokens": 2}"#),
+    )
+    .unwrap();
+    assert_eq!(r.status, 200);
+    gw.shutdown();
+}
+
+#[test]
+fn concurrent_completions_route_across_workers() {
+    // 12 closed-loop clients against G=4×B=2 slots: the dynamic-batching
+    // window gathers the burst, so any load-aware policy must use >= 2
+    // workers, and every request id must be unique.
+    let (gw, a) = boot("jsq", 2, 40);
+    let n = 12usize;
+    let handles: Vec<_> = (0..n)
+        .map(|i| {
+            let a = a.clone();
+            std::thread::spawn(move || {
+                let body =
+                    format!(r#"{{"prompt": [1, 2, 3, {i}], "max_tokens": 8}}"#);
+                let r =
+                    ghttp::http_call(&a, "POST", "/v1/completions", Some(&body))
+                        .unwrap();
+                assert_eq!(r.status, 200);
+                let v = Json::parse(r.body_str().unwrap()).unwrap();
+                let b = v.get("bfio").unwrap();
+                (
+                    b.get("request_id").unwrap().as_u64().unwrap(),
+                    b.get("worker").unwrap().as_usize().unwrap(),
+                )
+            })
+        })
+        .collect();
+    let results: Vec<(u64, usize)> =
+        handles.into_iter().map(|h| h.join().unwrap()).collect();
+
+    let ids: HashSet<u64> = results.iter().map(|r| r.0).collect();
+    assert_eq!(ids.len(), n, "request ids must be unique: {results:?}");
+    let used: HashSet<usize> = results.iter().map(|r| r.1).collect();
+    assert!(
+        used.len() >= 2,
+        "12 concurrent requests all landed on one worker: {results:?}"
+    );
+
+    // /v0/workers accounting adds up.
+    let r = ghttp::http_call(&a, "GET", "/v0/workers", None).unwrap();
+    assert_eq!(r.status, 200);
+    let v = Json::parse(r.body_str().unwrap()).unwrap();
+    assert_eq!(v.get("policy").unwrap().as_str().unwrap(), "JSQ");
+    let per: u64 = v
+        .get("workers")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|w| w.get("completed").unwrap().as_u64().unwrap())
+        .sum();
+    assert_eq!(per, n as u64);
+    assert_eq!(v.get("workers").unwrap().as_arr().unwrap().len(), 4);
+    gw.shutdown();
+}
+
+#[test]
+fn metrics_exposition_tracks_requests() {
+    let (gw, a) = boot("bfio:8", 0, 0);
+    for i in 0..3 {
+        let body = format!(r#"{{"prompt": [9, 9, {i}], "max_tokens": 4}}"#);
+        let r = ghttp::http_call(&a, "POST", "/v1/completions", Some(&body)).unwrap();
+        assert_eq!(r.status, 200);
+    }
+    let r = ghttp::http_call(&a, "GET", "/metrics", None).unwrap();
+    assert_eq!(r.status, 200);
+    let text = r.body_str().unwrap();
+    assert!(text.contains("# TYPE bfio_worker_load gauge"));
+    assert!(text.contains("# TYPE bfio_requests_total counter"));
+    assert!(text.contains("bfio_requests_total{policy=\"BF-IO(H=8)\"}"));
+    assert!(text.contains("bfio_energy_joules"));
+    assert!(text.contains("bfio_imbalance"));
+    assert_eq!(loadgen::prom_value(text, "bfio_requests_total"), Some(3.0));
+    assert_eq!(loadgen::prom_value(text, "bfio_tokens_total"), Some(12.0));
+    assert!(loadgen::prom_value(text, "bfio_energy_joules").unwrap() > 0.0);
+    assert!(loadgen::prom_value(text, "bfio_http_requests_total").unwrap() >= 3.0);
+    gw.shutdown();
+}
+
+#[test]
+fn loadgen_end_to_end_reports_policy_table() {
+    let (gw, a) = boot("bfio:8", 1, 10);
+    let cfg = LoadGenConfig {
+        authority: a.clone(),
+        concurrency: 4,
+        requests: 16,
+        prompt_tokens: 8,
+        max_tokens: 6,
+        seed: 7,
+        trace: None,
+    };
+    let res = loadgen::run(&cfg).unwrap();
+    assert_eq!(res.completed, 16);
+    assert_eq!(res.errors, 0);
+    assert!(res.tokens >= 16, "every request generates >= 1 token");
+    let per: u64 = res.per_worker.values().sum();
+    assert_eq!(per, 16);
+
+    let (policy, report) = loadgen::fetch_report(&a, &res).unwrap();
+    assert_eq!(policy, "BF-IO(H=8)");
+    assert_eq!(report.completed, 16);
+    assert!(report.steps > 0, "server-side steps via /metrics");
+    assert!(report.total_energy_j > 0.0, "server-side energy via /metrics");
+    assert!(report.avg_imbalance >= 0.0);
+    assert!(report.throughput_tps > 0.0);
+    assert!(report.tpot_s > 0.0);
+    // the row renders without panicking
+    let row = report.table_row(&policy);
+    assert!(row.contains("BF-IO"));
+    gw.shutdown();
+}
+
+#[test]
+fn shutdown_is_idempotent_and_frees_the_port() {
+    let (gw, a) = boot("fcfs", 0, 0);
+    let r = ghttp::http_call(&a, "GET", "/healthz", None).unwrap();
+    assert_eq!(r.status, 200);
+    gw.shutdown();
+    // The port no longer serves the gateway.
+    assert!(ghttp::http_call(&a, "GET", "/healthz", None).is_err());
+}
