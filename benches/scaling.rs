@@ -1,27 +1,141 @@
 //! Figs 10/11 regeneration with timing: the G-sweep that demonstrates
-//! super-linear FCFS imbalance growth vs bounded BF-IO.
+//! super-linear FCFS imbalance growth vs bounded BF-IO — and the perf
+//! trajectory of the barrier-step engine itself.
+//!
+//! For each G the sweep runs FCFS and BF-IO(40) twice: once through the
+//! incremental `sim::engine` (via `Simulator::run`) and once through the
+//! frozen pre-refactor loop (`sim::reference::reference_run`), so the
+//! engine's speedup over the old O(G·B)-per-step cycle is measured
+//! directly, with the two paths' imbalances cross-checked on the spot.
+//!
+//! Emits `BENCH_scaling.json` (per-G wall-clock ms per policy per path,
+//! speedup, imbalance ratios) so the trajectory is machine-readable and
+//! comparable across PRs.  `-- --smoke` runs a small-G sweep for CI
+//! (written to `BENCH_scaling_smoke.json` so the full-sweep evidence is
+//! not clobbered).
 
-use bfio_serve::experiments::scaling::scaling_sweep;
-use bfio_serve::experiments::ExpScale;
+use bfio_serve::config::SimConfig;
+use bfio_serve::policies::by_name;
+use bfio_serve::sim::predictor::Predictor;
+use bfio_serve::sim::reference::reference_run;
+use bfio_serve::sim::Simulator;
+use bfio_serve::util::json::{arr, num, obj, s, Json};
+use bfio_serve::util::rng::Rng;
+use bfio_serve::workload::adversarial::overloaded_trace;
+use bfio_serve::workload::longbench::LongBenchLike;
 use std::time::Instant;
 
+fn ms(t: Instant) -> f64 {
+    t.elapsed().as_secs_f64() * 1e3
+}
+
 fn main() {
-    let scale = ExpScale {
-        g: 0,
-        b: 24,
-        steps: 300,
-        seed: 7,
-        out_dir: "results".into(),
-    };
-    let t0 = Instant::now();
-    let rows = scaling_sweep(&scale, &[16, 32, 64, 96, 128]);
-    let dt = t0.elapsed().as_secs_f64();
-    let first = rows.first().unwrap();
-    let last = rows.last().unwrap();
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let gs: &[usize] = if smoke { &[4, 8] } else { &[16, 32, 64, 96, 128] };
+    let steps: u64 = if smoke { 100 } else { 300 };
+    let b = 24usize;
+    let seed = 7u64;
+    let sampler = LongBenchLike::paper();
+
+    println!("scaling sweep (B={b}, {steps} steps): engine vs pre-refactor reference loop");
     println!(
-        "\nimbalance ratio grows {:.2}x -> {:.2}x across the sweep ({:.2}s total)",
-        first.fcfs_imb / first.bfio_imb,
-        last.fcfs_imb / last.bfio_imb,
-        dt
+        "{:>5} {:>12} {:>12} {:>12} {:>12} {:>9} {:>10}",
+        "G", "eng_fcfs_ms", "eng_bfio_ms", "ref_fcfs_ms", "ref_bfio_ms", "speedup", "imb_ratio"
     );
+
+    let t_all = Instant::now();
+    let mut rows_json = Vec::new();
+    let mut eng_total = 0.0f64;
+    let mut ref_total = 0.0f64;
+    let mut first_ratio = 0.0f64;
+    let mut last_ratio = 0.0f64;
+    for &g in gs {
+        let cfg = SimConfig {
+            g,
+            b,
+            max_steps: steps,
+            warmup_steps: steps / 5,
+            seed,
+            ..SimConfig::default()
+        };
+        let mut rng = Rng::new(seed ^ g as u64);
+        let trace = overloaded_trace(&sampler, g, b, steps, 3.0, &mut rng);
+        let sim = Simulator::new(cfg.clone());
+
+        let t = Instant::now();
+        let ef = sim.run(&trace, &mut *by_name("fcfs").unwrap());
+        let eng_fcfs_ms = ms(t);
+        let t = Instant::now();
+        let eb = sim.run(&trace, &mut *by_name("bfio:40").unwrap());
+        let eng_bfio_ms = ms(t);
+
+        let t = Instant::now();
+        let rf = reference_run(&cfg, &Predictor::Oracle, &trace, &mut *by_name("fcfs").unwrap());
+        let ref_fcfs_ms = ms(t);
+        let t = Instant::now();
+        let rb =
+            reference_run(&cfg, &Predictor::Oracle, &trace, &mut *by_name("bfio:40").unwrap());
+        let ref_bfio_ms = ms(t);
+
+        // the two paths must agree (the full check lives in
+        // rust/tests/engine_parity.rs; this guards the bench itself)
+        let drift = |a: f64, b: f64| (a - b).abs() / a.abs().max(b.abs()).max(1.0);
+        assert!(
+            drift(ef.report.avg_imbalance, rf.report.avg_imbalance) < 1e-9,
+            "fcfs parity broke at G={g}"
+        );
+        assert!(
+            drift(eb.report.avg_imbalance, rb.report.avg_imbalance) < 1e-9,
+            "bfio parity broke at G={g}"
+        );
+
+        let speedup = (ref_fcfs_ms + ref_bfio_ms) / (eng_fcfs_ms + eng_bfio_ms).max(1e-9);
+        let imb_ratio = ef.report.avg_imbalance / eb.report.avg_imbalance;
+        if first_ratio == 0.0 {
+            first_ratio = imb_ratio;
+        }
+        last_ratio = imb_ratio;
+        eng_total += eng_fcfs_ms + eng_bfio_ms;
+        ref_total += ref_fcfs_ms + ref_bfio_ms;
+        println!(
+            "{g:>5} {eng_fcfs_ms:>12.1} {eng_bfio_ms:>12.1} {ref_fcfs_ms:>12.1} \
+             {ref_bfio_ms:>12.1} {speedup:>8.2}x {imb_ratio:>9.2}x"
+        );
+        rows_json.push(obj(vec![
+            ("g", num(g as f64)),
+            ("engine_fcfs_ms", num(eng_fcfs_ms)),
+            ("engine_bfio_ms", num(eng_bfio_ms)),
+            ("reference_fcfs_ms", num(ref_fcfs_ms)),
+            ("reference_bfio_ms", num(ref_bfio_ms)),
+            ("speedup", num(speedup)),
+            ("fcfs_imb", num(ef.report.avg_imbalance)),
+            ("bfio_imb", num(eb.report.avg_imbalance)),
+            ("imb_ratio", num(imb_ratio)),
+        ]));
+    }
+    let total_ms = ms(t_all);
+    let speedup_overall = ref_total / eng_total.max(1e-9);
+    println!(
+        "\nimbalance ratio grows {first_ratio:.2}x -> {last_ratio:.2}x; \
+         engine is {speedup_overall:.2}x faster than the pre-refactor loop \
+         ({eng_total:.0} ms vs {ref_total:.0} ms; {total_ms:.0} ms total)"
+    );
+
+    let json = obj(vec![
+        ("bench", s("scaling")),
+        ("smoke", Json::Bool(smoke)),
+        ("b", num(b as f64)),
+        ("steps", num(steps as f64)),
+        ("seed", num(seed as f64)),
+        ("engine_total_ms", num(eng_total)),
+        ("reference_total_ms", num(ref_total)),
+        ("speedup_overall", num(speedup_overall)),
+        ("total_ms", num(total_ms)),
+        ("rows", arr(rows_json)),
+    ]);
+    let path = if smoke { "BENCH_scaling_smoke.json" } else { "BENCH_scaling.json" };
+    match std::fs::write(path, json.to_string_pretty() + "\n") {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
 }

@@ -25,6 +25,12 @@ pub struct ScaleRow {
     pub bfio_tps: f64,
     pub fcfs_mj: f64,
     pub bfio_mj: f64,
+    /// Wall-clock milliseconds to simulate this G (per policy), shown
+    /// in the sweep's console table and written to the CSV.  (The
+    /// engine-vs-reference speedup evidence in `BENCH_scaling.json`
+    /// comes from `benches/scaling.rs`, which times both paths itself.)
+    pub fcfs_ms: f64,
+    pub bfio_ms: f64,
 }
 
 /// Figs 10 & 11: sweep cluster size G with a fixed per-G-proportional
@@ -34,8 +40,9 @@ pub fn scaling_sweep(scale: &ExpScale, gs: &[usize]) -> Vec<ScaleRow> {
     let mut rows = Vec::new();
     println!("Fig 10/11 — scalability with cluster size G (B={}):", scale.b);
     println!(
-        "{:>5} {:>14} {:>14} {:>10} {:>10} {:>9} {:>9} {:>7}",
-        "G", "fcfs_imb", "bfio_imb", "fcfs_tps", "bfio_tps", "fcfs_MJ", "bfio_MJ", "ΔE%"
+        "{:>5} {:>14} {:>14} {:>10} {:>10} {:>9} {:>9} {:>7} {:>8} {:>8}",
+        "G", "fcfs_imb", "bfio_imb", "fcfs_tps", "bfio_tps", "fcfs_MJ", "bfio_MJ", "ΔE%",
+        "fcfs_ms", "bfio_ms"
     );
     for &g in gs {
         let cfg = SimConfig {
@@ -49,8 +56,12 @@ pub fn scaling_sweep(scale: &ExpScale, gs: &[usize]) -> Vec<ScaleRow> {
         let mut rng = Rng::new(scale.seed ^ g as u64);
         let trace = overloaded_trace(&sampler, g, scale.b, scale.steps, 3.0, &mut rng);
         let sim = Simulator::new(cfg);
+        let t0 = std::time::Instant::now();
         let f = sim.run(&trace, &mut *by_name("fcfs").unwrap());
+        let fcfs_ms = t0.elapsed().as_secs_f64() * 1e3;
+        let t1 = std::time::Instant::now();
         let b = sim.run(&trace, &mut BfIo::with_horizon(40));
+        let bfio_ms = t1.elapsed().as_secs_f64() * 1e3;
         let row = ScaleRow {
             g,
             fcfs_imb: f.report.avg_imbalance,
@@ -59,9 +70,11 @@ pub fn scaling_sweep(scale: &ExpScale, gs: &[usize]) -> Vec<ScaleRow> {
             bfio_tps: b.report.throughput_tps,
             fcfs_mj: f.report.energy_mj(),
             bfio_mj: b.report.energy_mj(),
+            fcfs_ms,
+            bfio_ms,
         };
         println!(
-            "{:>5} {:>14.4e} {:>14.4e} {:>10.1} {:>10.1} {:>9.2} {:>9.2} {:>6.1}%",
+            "{:>5} {:>14.4e} {:>14.4e} {:>10.1} {:>10.1} {:>9.2} {:>9.2} {:>6.1}% {:>8.1} {:>8.1}",
             g,
             row.fcfs_imb,
             row.bfio_imb,
@@ -69,7 +82,9 @@ pub fn scaling_sweep(scale: &ExpScale, gs: &[usize]) -> Vec<ScaleRow> {
             row.bfio_tps,
             row.fcfs_mj,
             row.bfio_mj,
-            (1.0 - row.bfio_mj / row.fcfs_mj) * 100.0
+            (1.0 - row.bfio_mj / row.fcfs_mj) * 100.0,
+            row.fcfs_ms,
+            row.bfio_ms
         );
         rows.push(row);
     }
@@ -85,12 +100,17 @@ pub fn scaling_sweep(scale: &ExpScale, gs: &[usize]) -> Vec<ScaleRow> {
                 format!("{:.4}", r.fcfs_mj),
                 format!("{:.4}", r.bfio_mj),
                 format!("{:.4}", 1.0 - r.bfio_mj / r.fcfs_mj),
+                format!("{:.3}", r.fcfs_ms),
+                format!("{:.3}", r.bfio_ms),
             ]
         })
         .collect();
     let _ = write_csv(
         &scale.out("fig10_fig11_scaling.csv"),
-        &["g", "fcfs_imb", "bfio_imb", "fcfs_tps", "bfio_tps", "fcfs_mj", "bfio_mj", "energy_reduction"],
+        &[
+            "g", "fcfs_imb", "bfio_imb", "fcfs_tps", "bfio_tps", "fcfs_mj", "bfio_mj",
+            "energy_reduction", "fcfs_ms", "bfio_ms",
+        ],
         &csv,
     );
     rows

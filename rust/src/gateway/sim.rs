@@ -1,14 +1,18 @@
-//! Simulator-backed gateway backend: an *online* variant of the
-//! discrete-event barrier loop in [`crate::sim`], driven by live HTTP
+//! Simulator-backed gateway backend: an *online* driver of the shared
+//! barrier-step engine ([`crate::sim::engine`]), fed by live HTTP
 //! arrivals instead of a pre-generated trace.
 //!
-//! A single scheduler thread owns the worker state and runs the paper's
+//! A single scheduler thread owns the engine and runs the paper's
 //! per-step cycle in **virtual time** (`Δt = C + t_ℓ·max_g L_g`, Eq. 19):
 //! arrivals → policy admission (sticky) → barrier step → completions.
-//! Requests arrive over a channel from the gateway's handler threads and
-//! are answered through a per-request channel the moment their decode
-//! budget is met.  No GPUs, no sleeping on the virtual clock — the whole
-//! stack is exercisable in CI in milliseconds.
+//! The cycle semantics (timing, drift, admission, completion buckets)
+//! live in the engine — shared with the offline [`crate::sim::Simulator`]
+//! — so this module only adds the intake side: channel parking while
+//! idle, the dynamic-batching window, and snapshot publication.  Requests
+//! arrive over a channel from the gateway's handler threads and are
+//! answered through a per-request channel the moment their decode budget
+//! is met.  No GPUs, no sleeping on the virtual clock — the whole stack
+//! is exercisable in CI in milliseconds.
 //!
 //! Two small *real-time* knobs make routing observable under concurrent
 //! load: `step_delay` paces barrier steps, and `batch_window` gathers
@@ -24,9 +28,10 @@ use std::time::Duration;
 use anyhow::{anyhow, Context, Result};
 
 use crate::config::{PowerConfig, SimConfig};
-use crate::energy::EnergyAccumulator;
-use crate::metrics::imbalance;
-use crate::policies::{by_name, ActiveView, AssignCtx, Policy, WaitingView, WorkerView};
+use crate::metrics::{imbalance, Recorder};
+use crate::policies::{by_name, Policy};
+use crate::sim::engine::{Engine, EngineConfig, Finished};
+use crate::sim::predictor::Predictor;
 use crate::util::rng::Rng;
 use crate::workload::Drift;
 
@@ -81,19 +86,6 @@ struct Pending {
 enum Msg {
     Submit(Pending),
     Shutdown,
-}
-
-/// One occupied batch slot.
-struct ActiveSlot {
-    id: u64,
-    /// Current per-step workload `w_i` (resident KV).
-    w: f64,
-    remaining: u64,
-    age: u64,
-    o: u64,
-    arrival_clock: f64,
-    admit_clock: f64,
-    done: Sender<Completion>,
 }
 
 /// Snapshot the scheduler publishes after every step, read lock-free of
@@ -217,34 +209,38 @@ struct Scheduler {
 impl Scheduler {
     fn run(mut self) {
         let g = self.cfg.g;
-        let b = self.cfg.b;
-        let horizon = self.policy.lookahead();
+        // The Recorder owns the virtual clock (Eq. 19), imbalance sums,
+        // tokens, and energy — the same metering path the offline
+        // simulator uses, with no warmup window.
+        let mut recorder = Recorder::new(
+            PowerConfig::a100(),
+            self.cfg.t_token,
+            self.cfg.c_overhead,
+            0,
+        );
         let mut rng = Rng::new(self.cfg.seed ^ 0x6A7E_11AD);
-        let power = PowerConfig::a100();
-        let mut energy = EnergyAccumulator::new();
-
-        let mut workers: Vec<Vec<ActiveSlot>> =
-            (0..g).map(|_| Vec::with_capacity(b)).collect();
-        // FIFO wait queue: (pending, arrival_clock).
-        let mut wait: Vec<(Pending, f64)> = Vec::new();
-
-        let mut clock = 0.0f64;
-        let mut step: u64 = 0;
-        let mut imb_sum = 0.0f64;
-        let mut completed: u64 = 0;
-        let mut admitted: u64 = 0;
-        let mut total_tokens: u64 = 0;
+        // Online, the true remaining length *is* the engine's knowledge
+        // of the decode budget, so the oracle predictor is exact here.
+        let mut engine: Engine<Pending, Sender<Completion>> = Engine::new(
+            EngineConfig {
+                g,
+                b: self.cfg.b,
+                drift: self.cfg.drift.clone(),
+                view_cap_floor: 256,
+            },
+            Predictor::Oracle,
+        );
         let mut completed_per: Vec<u64> = vec![0; g];
+        let mut finished: Vec<Finished<Sender<Completion>>> = Vec::new();
 
         'outer: loop {
-            let busy: usize = workers.iter().map(|a| a.len()).sum();
-
             // Park while idle: block until the next arrival (or shutdown),
             // then hold the dynamic-batching window open.
-            if busy == 0 && wait.is_empty() {
+            if engine.is_idle() {
                 match self.rx.recv() {
                     Ok(Msg::Submit(p)) => {
-                        wait.push((p, clock));
+                        let prefill = p.req.prompt_tokens.len().max(1) as f64;
+                        engine.submit(prefill, engine.step_index(), recorder.clock(), p);
                         if !self.cfg.batch_window.is_zero() {
                             std::thread::sleep(self.cfg.batch_window);
                         }
@@ -256,200 +252,102 @@ impl Scheduler {
             // Drain whatever else has arrived.
             loop {
                 match self.rx.try_recv() {
-                    Ok(Msg::Submit(p)) => wait.push((p, clock)),
+                    Ok(Msg::Submit(p)) => {
+                        let prefill = p.req.prompt_tokens.len().max(1) as f64;
+                        engine.submit(prefill, engine.step_index(), recorder.clock(), p);
+                    }
                     Ok(Msg::Shutdown) => break 'outer,
                     Err(TryRecvError::Empty) => break,
                     Err(TryRecvError::Disconnected) => break 'outer,
                 }
             }
 
-            // --- admission (same Policy machinery as the offline sim) ---
-            let total_free: usize = workers.iter().map(|a| b - a.len()).sum();
-            if total_free > 0 && !wait.is_empty() {
-                let cum_drift = self.cfg.drift.cumulative(step, horizon.max(1));
-                let views: Vec<WorkerView> = workers
-                    .iter()
-                    .map(|acts| WorkerView {
-                        load: acts.iter().map(|a| a.w).sum(),
-                        free_slots: b - acts.len(),
-                        active: acts
-                            .iter()
-                            .map(|a| ActiveView {
-                                load: a.w,
-                                pred_remaining: a.remaining.max(1),
-                            })
-                            .collect(),
-                    })
-                    .collect();
-                let view_cap = wait.len().min((total_free * 4).max(256));
-                let waiting_views: Vec<WaitingView> = wait[..view_cap]
-                    .iter()
-                    .enumerate()
-                    .map(|(i, (p, _))| WaitingView {
-                        idx: i,
-                        prefill: p.req.prompt_tokens.len().max(1) as f64,
-                        arrival_step: step,
-                    })
-                    .collect();
-                let ctx = AssignCtx {
-                    step,
-                    batch_cap: b,
-                    workers: &views,
-                    waiting: &waiting_views,
-                    cum_drift: &cum_drift,
-                };
-                let assignments = self.policy.assign(&ctx, &mut rng);
-                let mut slots_opt: Vec<Option<(Pending, f64)>> =
-                    wait.drain(..).map(Some).collect();
-                for &(widx, gi) in &assignments {
-                    if widx >= slots_opt.len() || gi >= g || workers[gi].len() >= b {
-                        continue; // defensive: policies are validated in sim tests
-                    }
-                    if let Some((p, arrival_clock)) = slots_opt[widx].take() {
-                        let prefill = p.req.prompt_tokens.len().max(1) as f64;
-                        let o = u64::from(p.req.max_tokens.max(1));
-                        workers[gi].push(ActiveSlot {
-                            id: p.req.id,
-                            w: prefill,
-                            remaining: o,
-                            age: 0,
-                            o,
-                            arrival_clock,
-                            admit_clock: clock,
-                            done: p.done,
-                        });
-                        admitted += 1;
-                    }
-                }
-                wait = slots_opt.into_iter().flatten().collect();
-            }
+            // --- admission (the shared engine + Policy machinery) ---
+            engine.admit(&mut *self.policy, &mut rng, recorder.clock(), |p| {
+                let o = u64::from(p.req.max_tokens.max(1));
+                (p.req.id, o, p.done)
+            });
 
             // --- one barrier-synchronized step in virtual time ---
-            let loads: Vec<f64> = workers
-                .iter()
-                .map(|acts| acts.iter().map(|a| a.w).sum())
-                .collect();
-            let active: usize = workers.iter().map(|a| a.len()).sum();
+            let active = engine.active_count();
+            if active > 0 {
+                recorder.step(engine.step_index(), engine.loads(), active);
+                engine.advance(&mut finished);
+                for f in &finished {
+                    completed_per[f.worker] += 1;
+                }
+            } else {
+                finished.clear();
+            }
+
             // Responses are sent only *after* the snapshot is published,
             // so a client that observes its completion then reads
             // /metrics always sees itself counted.
-            let mut ready: Vec<(usize, ActiveSlot)> = Vec::new();
-            if active > 0 {
-                let l_max = loads.iter().cloned().fold(0.0, f64::max);
-                clock += self.cfg.c_overhead + self.cfg.t_token * l_max;
-                imb_sum += imbalance(&loads);
-                energy.step(&loads, self.cfg.t_token, self.cfg.c_overhead, &power);
-                step += 1;
-                total_tokens += active as u64;
+            publish(&self.snap, &self.policy_name, &engine, &recorder, &completed_per);
 
-                // advance / complete / drift
-                for (gi, acts) in workers.iter_mut().enumerate() {
-                    let mut i = 0;
-                    while i < acts.len() {
-                        acts[i].remaining -= 1;
-                        acts[i].age += 1;
-                        if acts[i].remaining == 0 {
-                            let slot = acts.swap_remove(i);
-                            completed += 1;
-                            completed_per[gi] += 1;
-                            ready.push((gi, slot));
-                        } else {
-                            let age = acts[i].age;
-                            acts[i].w += self.cfg.drift.delta(age);
-                            i += 1;
-                        }
-                    }
-                }
-            }
-
-            publish(
-                &self.snap,
-                &self.policy_name,
-                &workers,
-                &completed_per,
-                wait.len(),
-                b,
-                step,
-                clock,
-                imb_sum,
-                energy.total_energy_j(),
-                completed,
-                admitted,
-                total_tokens,
-            );
-
-            for (gi, slot) in ready {
-                let tpot = if slot.o > 0 {
-                    (clock - slot.admit_clock) / slot.o as f64
+            let clock = recorder.clock();
+            for f in finished.drain(..) {
+                let tpot = if f.tokens > 0 {
+                    (clock - f.admit_clock) / f.tokens as f64
                 } else {
                     0.0
                 };
                 // The receiver may have hung up (client gone); ignore
                 // send failures.
-                let _ = slot.done.send(Completion {
-                    id: slot.id,
-                    worker: gi,
-                    tokens: gen_tokens(slot.id, slot.o),
-                    n_tokens: slot.o as u32,
-                    queue_wait_s: (slot.admit_clock - slot.arrival_clock).max(0.0),
+                let _ = f.payload.send(Completion {
+                    id: f.id,
+                    worker: f.worker,
+                    tokens: gen_tokens(f.id, f.tokens),
+                    n_tokens: f.tokens as u32,
+                    queue_wait_s: (f.admit_clock - f.arrival_clock).max(0.0),
                     tpot_s: tpot,
-                    latency_s: clock - slot.arrival_clock,
+                    latency_s: clock - f.arrival_clock,
                 });
             }
 
-            let still_busy = workers.iter().any(|a| !a.is_empty());
-            if !self.cfg.step_delay.is_zero() && (still_busy || !wait.is_empty()) {
+            if !self.cfg.step_delay.is_zero() && !engine.is_idle() {
                 std::thread::sleep(self.cfg.step_delay);
             }
         }
-        // Dropping `wait` and `workers` here drops their response senders;
-        // blocked `complete()` callers observe RecvError and surface an
-        // error instead of hanging.
+        // Dropping the engine here drops the queued tickets and admitted
+        // payloads (the response senders); blocked `complete()` callers
+        // observe RecvError and surface an error instead of hanging.
     }
 }
 
-#[allow(clippy::too_many_arguments)]
-fn publish(
+fn publish<T, P>(
     snap: &Mutex<Snapshot>,
     policy_name: &str,
-    workers: &[Vec<ActiveSlot>],
+    engine: &Engine<T, P>,
+    recorder: &Recorder,
     completed_per: &[u64],
-    queue_depth: usize,
-    b: usize,
-    steps: u64,
-    clock: f64,
-    imb_sum: f64,
-    energy_j: f64,
-    completed: u64,
-    admitted: u64,
-    total_tokens: u64,
 ) {
-    let loads: Vec<f64> = workers
-        .iter()
-        .map(|acts| acts.iter().map(|a| a.w).sum())
-        .collect();
-    let ws: Vec<WorkerStatus> = workers
-        .iter()
-        .enumerate()
-        .map(|(i, acts)| WorkerStatus {
+    let loads = engine.loads();
+    let ws: Vec<WorkerStatus> = (0..loads.len())
+        .map(|i| WorkerStatus {
             id: i,
             load: loads[i],
-            active: acts.len(),
-            free_slots: b - acts.len(),
+            active: engine.worker_active(i),
+            free_slots: engine.free_slots(i),
             completed: completed_per[i],
         })
         .collect();
+    let steps = recorder.steps_recorded();
     let stats = BackendStats {
         policy: policy_name.to_string(),
         steps,
-        clock_s: clock,
-        imbalance: imbalance(&loads),
-        avg_imbalance: if steps > 0 { imb_sum / steps as f64 } else { 0.0 },
-        energy_j,
-        completed,
-        admitted,
-        total_tokens,
-        queue_depth,
+        clock_s: recorder.clock(),
+        imbalance: imbalance(loads),
+        avg_imbalance: if steps > 0 {
+            recorder.imbalance_sum() / steps as f64
+        } else {
+            0.0
+        },
+        energy_j: recorder.energy.total_energy_j(),
+        completed: engine.completed(),
+        admitted: engine.admitted(),
+        total_tokens: recorder.tokens_recorded() as u64,
+        queue_depth: engine.waiting_len(),
     };
     if let Ok(mut s) = snap.lock() {
         s.workers = ws;

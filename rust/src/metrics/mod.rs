@@ -141,6 +141,22 @@ impl Recorder {
         self.clock
     }
 
+    /// Post-warmup steps recorded so far (live view for online drivers
+    /// that publish running stats before [`Recorder::finish`]).
+    pub fn steps_recorded(&self) -> u64 {
+        self.steps
+    }
+
+    /// Running post-warmup imbalance sum (the Eq. 20 numerator).
+    pub fn imbalance_sum(&self) -> f64 {
+        self.imbalance_sum
+    }
+
+    /// Tokens generated in the recorded window so far.
+    pub fn tokens_recorded(&self) -> f64 {
+        self.tokens
+    }
+
     /// Account one barrier-synchronized step.  `loads` are post-admission
     /// per-worker workloads, `active` is |A(k)| (tokens generated this
     /// step).  Returns the step duration Δt (Eq. 19).

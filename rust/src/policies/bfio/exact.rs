@@ -37,7 +37,7 @@ pub fn solve_exact(
     // Sort candidates descending so large items are branched early
     // (better pruning); keep the permutation to undo at the end.
     let mut order: Vec<usize> = (0..candidates.len()).collect();
-    order.sort_by(|&a, &b| candidates[b].partial_cmp(&candidates[a]).unwrap());
+    order.sort_by(|&a, &b| candidates[b].total_cmp(&candidates[a]));
 
     struct Dfs<'a> {
         wl: WindowedLoads,

@@ -106,7 +106,8 @@ impl Policy for BfIo {
 
         // --- Greedy seeding: largest candidate first, argmin-ΔJ worker ---
         let mut order: Vec<usize> = (0..pool_len).collect();
-        order.sort_by(|&a, &b| sizes[b].partial_cmp(&sizes[a]).unwrap());
+        // total_cmp: NaN-safe (a NaN prefill must not panic the router).
+        order.sort_by(|&a, &b| sizes[b].total_cmp(&sizes[a]));
         let mut placement: Vec<Option<usize>> = vec![None; pool_len];
         let mut per_worker: Vec<Vec<usize>> = vec![Vec::new(); ctx.workers.len()];
         let mut placed = 0usize;
@@ -178,9 +179,7 @@ impl Policy for BfIo {
 
             // Rank workers by current-step predicted load.
             let mut by_load: Vec<usize> = (0..ctx.workers.len()).collect();
-            by_load.sort_by(|&a, &b| {
-                wl.load(b, 0).partial_cmp(&wl.load(a, 0)).unwrap()
-            });
+            by_load.sort_by(|&a, &b| wl.load(b, 0).total_cmp(&wl.load(a, 0)));
             let f = self.focus.min(by_load.len());
             let heavy: Vec<usize> = by_load[..f].to_vec();
             let light: Vec<usize> = by_load[by_load.len() - f..].to_vec();

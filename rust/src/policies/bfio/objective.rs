@@ -222,10 +222,10 @@ impl WindowedLoads {
                     // remove stale entry for g if present
                     if let Some(pos) = t.iter().position(|&(_, w)| w == g) {
                         t[pos] = (v, g);
-                        t.sort_by(|x, y| y.0.partial_cmp(&x.0).unwrap());
+                        t.sort_by(|x, y| y.0.total_cmp(&x.0));
                     } else if v > t[2].0 {
                         t[2] = (v, g);
-                        t.sort_by(|x, y| y.0.partial_cmp(&x.0).unwrap());
+                        t.sort_by(|x, y| y.0.total_cmp(&x.0));
                     }
                 }
             }

@@ -19,6 +19,10 @@ impl Policy for Fcfs {
         "FCFS".to_string()
     }
 
+    fn wants_active_views(&self) -> bool {
+        false // slot counts only
+    }
+
     fn assign(&mut self, ctx: &AssignCtx, _rng: &mut Rng) -> Vec<Assignment> {
         let mut cap: Vec<usize> = ctx.workers.iter().map(|w| w.free_slots).collect();
         let u = ctx.u_k();

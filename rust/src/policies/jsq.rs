@@ -21,6 +21,10 @@ impl Policy for Jsq {
         "JSQ".to_string()
     }
 
+    fn wants_active_views(&self) -> bool {
+        false // active counts only
+    }
+
     fn assign(&mut self, ctx: &AssignCtx, _rng: &mut Rng) -> Vec<Assignment> {
         let mut cap: Vec<usize> = ctx.workers.iter().map(|w| w.free_slots).collect();
         // active count = B - free (batch_cap is per-worker capacity)

@@ -21,6 +21,10 @@ impl Policy for LeastLoaded {
         "LeastLoaded".to_string()
     }
 
+    fn wants_active_views(&self) -> bool {
+        false // aggregate loads only
+    }
+
     fn assign(&mut self, ctx: &AssignCtx, _rng: &mut Rng) -> Vec<Assignment> {
         let mut cap: Vec<usize> = ctx.workers.iter().map(|w| w.free_slots).collect();
         let mut load: Vec<f64> = ctx.workers.iter().map(|w| w.load).collect();

@@ -30,6 +30,10 @@ impl Policy for MinMin {
         if self.max_variant { "Max-Min" } else { "Min-Min" }.to_string()
     }
 
+    fn wants_active_views(&self) -> bool {
+        false // ECT uses aggregate loads only
+    }
+
     fn assign(&mut self, ctx: &AssignCtx, _rng: &mut Rng) -> Vec<Assignment> {
         let mut cap: Vec<usize> = ctx.workers.iter().map(|w| w.free_slots).collect();
         let mut load: Vec<f64> = ctx.workers.iter().map(|w| w.load).collect();

@@ -96,6 +96,16 @@ pub trait Policy: Send {
     fn lookahead(&self) -> usize {
         0
     }
+
+    /// Whether `assign` reads the per-request [`ActiveView`] lists inside
+    /// [`WorkerView::active`].  Policies that only use aggregate loads and
+    /// slot counts (FCFS, JSQ, …) return `false`, letting the engine skip
+    /// both the per-active view construction and the per-active predictor
+    /// calls — the dominant per-step cost at fleet scale.  Defaults to
+    /// `true` (safe for any custom policy).
+    fn wants_active_views(&self) -> bool {
+        true
+    }
 }
 
 /// Validate an assignment set against the context.  Returns an error

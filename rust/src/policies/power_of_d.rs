@@ -23,6 +23,10 @@ impl Policy for PowerOfD {
         format!("Power-of-{}", self.d)
     }
 
+    fn wants_active_views(&self) -> bool {
+        false // active counts only
+    }
+
     fn assign(&mut self, ctx: &AssignCtx, rng: &mut Rng) -> Vec<Assignment> {
         let g_total = ctx.workers.len();
         let mut cap: Vec<usize> = ctx.workers.iter().map(|w| w.free_slots).collect();

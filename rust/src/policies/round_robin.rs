@@ -22,6 +22,10 @@ impl Policy for RoundRobin {
         "RoundRobin".to_string()
     }
 
+    fn wants_active_views(&self) -> bool {
+        false // size- and load-agnostic
+    }
+
     fn assign(&mut self, ctx: &AssignCtx, _rng: &mut Rng) -> Vec<Assignment> {
         let g_total = ctx.workers.len();
         let mut cap: Vec<usize> = ctx.workers.iter().map(|w| w.free_slots).collect();

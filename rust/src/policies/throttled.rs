@@ -26,6 +26,10 @@ impl Policy for Throttled {
         format!("Throttled({:.0}%)", self.frac * 100.0)
     }
 
+    fn wants_active_views(&self) -> bool {
+        false // concurrency counts only
+    }
+
     fn assign(&mut self, ctx: &AssignCtx, _rng: &mut Rng) -> Vec<Assignment> {
         let theta = ((ctx.batch_cap as f64) * self.frac).ceil() as usize;
         let mut active: Vec<usize> =

@@ -12,35 +12,25 @@
 //!    slot; survivors grow by the drift increment `δ_age` (Definition 2,
 //!    age-indexed so that each request's workload profile `W_i` is fixed
 //!    — which is what makes `W(I)` policy-independent, Eq. 11).
+//!
+//! The cycle itself lives in the shared incremental [`engine`] (also
+//! driven online by [`crate::gateway::sim`]); [`Simulator::run`] is a
+//! thin driver that feeds the trace in, meters each step through a
+//! [`Recorder`], and jumps over idle gaps between arrivals.  Deep
+//! backlogs stay cheap: the wait queue holds `u32` indices into the
+//! borrowed trace, never cloned `Request` structs.
 
+pub mod engine;
 pub mod predictor;
+pub mod reference;
 
 use crate::config::{PowerConfig, SimConfig};
 use crate::metrics::{CompletionRecord, Recorder, Report};
-use crate::policies::{
-    validate_assignments, ActiveView, AssignCtx, Policy, WaitingView, WorkerView,
-};
+use crate::policies::Policy;
 use crate::util::rng::Rng;
 use crate::workload::Request;
+use engine::{Engine, EngineConfig, Finished};
 use predictor::Predictor;
-
-/// One active (decoding) request inside a worker's batch.
-#[derive(Clone, Debug)]
-struct Active {
-    /// Request id, threaded into the [`CompletionRecord`] on completion.
-    id: u64,
-    /// Current per-step workload `w_i` (resident KV).
-    w: f64,
-    /// Remaining processing steps, >= 1 while active.
-    remaining: u64,
-    /// Age in completed processing steps (drift index).
-    age: u64,
-    /// Output length `o_i` (for TPOT).
-    o: u64,
-    /// Wall-clock time at arrival (router visibility) and admission.
-    arrival_clock: f64,
-    admit_clock: f64,
-}
 
 /// The simulator: configuration + predictor; traces and policies are
 /// supplied per run so one simulator can sweep both.
@@ -86,7 +76,6 @@ impl Simulator {
     pub fn run(&self, trace: &[Request], policy: &mut dyn Policy) -> SimResult {
         let g = self.cfg.g;
         let b = self.cfg.b;
-        let horizon = policy.lookahead();
         let mut rng = Rng::new(self.cfg.seed ^ 0xB1F0);
         let mut recorder = Recorder::new(
             self.power,
@@ -102,147 +91,79 @@ impl Simulator {
             recorder = recorder.with_completions();
         }
 
-        let mut workers: Vec<Vec<Active>> = vec![Vec::with_capacity(b); g];
-        // FIFO wait queue split into a small `carry` head (leftovers of
-        // previously exposed prefixes) and the untouched `rest`.  Policies
-        // only ever see a bounded prefix, so admission never needs to
-        // rebuild the (potentially millions-deep) backlog — O(view_cap)
-        // per step instead of O(|queue|).
-        let mut carry: Vec<(Request, f64)> = Vec::new();
-        let mut rest: std::collections::VecDeque<(Request, f64)> = Default::default();
+        // The wait queue holds u32 trace indices; the trace itself is
+        // only read (ids / decode lengths resolved once, at admission).
+        let mut engine: Engine<u32, ()> = Engine::new(
+            EngineConfig {
+                g,
+                b,
+                drift: self.cfg.drift.clone(),
+                view_cap_floor: 4096,
+            },
+            self.predictor.clone(),
+        );
         let mut ptr = 0usize; // next undiscovered trace entry
-        let mut admitted = 0u64;
-        let mut completed = 0u64;
-        let mut step: u64 = 0;
-        let mut views: Vec<WorkerView> = Vec::with_capacity(g);
-        let mut waiting_views: Vec<WaitingView> = Vec::new();
+        let mut executed = 0u64; // barrier steps actually run
+        let mut finished: Vec<Finished<()>> = Vec::new();
 
         loop {
+            // 0. jump over idle gaps: with nothing active and nothing
+            // waiting, no barrier step runs (and no time is charged)
+            // until the next arrival.
+            if engine.is_idle() {
+                if ptr >= trace.len() {
+                    break; // drained
+                }
+                let next = trace[ptr].arrival_step;
+                if next > engine.step_index() {
+                    if self.cfg.max_steps > 0 && next >= self.cfg.max_steps {
+                        break;
+                    }
+                    engine.skip_to(next);
+                }
+            }
+            let step = engine.step_index();
+
             // 1. arrivals become visible
             while ptr < trace.len() && trace[ptr].arrival_step <= step {
-                rest.push_back((trace[ptr].clone(), recorder.clock()));
+                engine.submit(
+                    trace[ptr].prefill,
+                    trace[ptr].arrival_step,
+                    recorder.clock(),
+                    ptr as u32,
+                );
                 ptr += 1;
             }
 
             // 2. admission
-            let total_free: usize =
-                workers.iter().map(|a| b - a.len()).sum();
-            let wait_len = carry.len() + rest.len();
-            if total_free > 0 && wait_len > 0 {
-                let cum_drift = self.cfg.drift.cumulative(step, horizon.max(1));
-                views.clear();
-                for acts in &workers {
-                    views.push(WorkerView {
-                        load: acts.iter().map(|a| a.w).sum(),
-                        free_slots: b - acts.len(),
-                        active: acts
-                            .iter()
-                            .map(|a| ActiveView {
-                                load: a.w,
-                                pred_remaining: self
-                                    .predictor
-                                    .predict(a.remaining, horizon as u64, &mut rng),
-                            })
-                            .collect(),
-                    });
-                }
-                // Cap the exposed wait-queue prefix: policies only ever
-                // consider a bounded pool, and building 10^5 views per
-                // step is wasted work.  Must stay >= total_free so that
-                // U(k) is unaffected.
-                let view_cap = wait_len.min((total_free * 4).max(4096));
-                // Pull the prefix into `carry` so it is contiguous.
-                while carry.len() < view_cap {
-                    carry.push(rest.pop_front().expect("wait_len accounting"));
-                }
-                waiting_views.clear();
-                for (i, (r, _)) in carry[..view_cap].iter().enumerate() {
-                    waiting_views.push(WaitingView {
-                        idx: i,
-                        prefill: r.prefill,
-                        arrival_step: r.arrival_step,
-                    });
-                }
-                let ctx = AssignCtx {
-                    step,
-                    batch_cap: b,
-                    workers: &views,
-                    waiting: &waiting_views,
-                    cum_drift: &cum_drift,
-                };
-                let assignments = policy.assign(&ctx, &mut rng);
-                debug_assert!(
-                    validate_assignments(&ctx, &assignments).is_ok(),
-                    "{:?}",
-                    validate_assignments(&ctx, &assignments)
-                );
-                if !assignments.is_empty() {
-                    let mut taken = vec![false; view_cap];
-                    for &(widx, gi) in &assignments {
-                        let (r, arrival_clock) = &carry[widx];
-                        debug_assert!(workers[gi].len() < b);
-                        workers[gi].push(Active {
-                            id: r.id,
-                            w: r.prefill,
-                            remaining: r.decode_len,
-                            age: 0,
-                            o: r.decode_len,
-                            arrival_clock: *arrival_clock,
-                            admit_clock: recorder.clock(),
-                        });
-                        taken[widx] = true;
-                        admitted += 1;
-                    }
-                    let mut kept = Vec::with_capacity(view_cap - assignments.len());
-                    for (i, r) in carry.drain(..).enumerate() {
-                        if i >= view_cap || !taken[i] {
-                            kept.push(r);
-                        }
-                    }
-                    carry = kept;
-                }
-            }
+            engine.admit(policy, &mut rng, recorder.clock(), |idx| {
+                let r = &trace[idx as usize];
+                (r.id, r.decode_len, ())
+            });
 
             // 3. execute the barrier-synchronized step
-            let loads: Vec<f64> = workers
-                .iter()
-                .map(|acts| acts.iter().map(|a| a.w).sum())
-                .collect();
-            let active_count: usize = workers.iter().map(|a| a.len()).sum();
-            if active_count == 0 && ptr >= trace.len() && carry.is_empty() && rest.is_empty() {
+            let active = engine.active_count();
+            if active == 0 && ptr >= trace.len() && engine.waiting_len() == 0 {
                 break; // drained
             }
-            recorder.step(step, &loads, active_count);
+            recorder.step(step, engine.loads(), active);
+            executed += 1;
 
             // 4. advance / complete / drift
             let finish_clock = recorder.clock();
-            let drift = &self.cfg.drift;
-            for (gi, acts) in workers.iter_mut().enumerate() {
-                let mut i = 0;
-                while i < acts.len() {
-                    acts[i].remaining -= 1;
-                    acts[i].age += 1;
-                    if acts[i].remaining == 0 {
-                        let a = acts.swap_remove(i);
-                        recorder.complete_record(CompletionRecord {
-                            id: a.id,
-                            worker: gi,
-                            arrival_clock: a.arrival_clock,
-                            admit_clock: a.admit_clock,
-                            finish_clock,
-                            tokens: a.o,
-                        });
-                        completed += 1;
-                    } else {
-                        let age = acts[i].age;
-                        acts[i].w += drift.delta(age);
-                        i += 1;
-                    }
-                }
+            engine.advance(&mut finished);
+            for f in &finished {
+                recorder.complete_record(CompletionRecord {
+                    id: f.id,
+                    worker: f.worker,
+                    arrival_clock: f.arrival_clock,
+                    admit_clock: f.admit_clock,
+                    finish_clock,
+                    tokens: f.tokens,
+                });
             }
 
-            step += 1;
-            if self.cfg.max_steps > 0 && step >= self.cfg.max_steps {
+            if self.cfg.max_steps > 0 && engine.step_index() >= self.cfg.max_steps {
                 break;
             }
         }
@@ -253,10 +174,10 @@ impl Simulator {
             g,
             b,
             seed: self.cfg.seed,
-            steps: step,
-            completed,
-            admitted,
-            leftover_waiting: carry.len() + rest.len(),
+            steps: executed,
+            completed: engine.completed(),
+            admitted: engine.admitted(),
+            leftover_waiting: engine.waiting_len(),
         }
     }
 }

@@ -1,0 +1,213 @@
+//! The **frozen pre-refactor step loop** — the naive O(G·B)-per-step
+//! cycle that [`crate::sim::engine`] replaced: loads re-summed from
+//! scratch every step, per-active predictor calls and fresh
+//! `WorkerView`/`ActiveView`/`WaitingView` allocations every admission,
+//! a linear scan of all actives for complete/drift, and idle steps
+//! simulated one by one.
+//!
+//! It is kept verbatim for two jobs and must not be "improved":
+//!
+//! 1. **golden oracle** — `rust/tests/engine_parity.rs` asserts the
+//!    incremental engine reproduces this loop's reports to ≤1e-9;
+//! 2. **perf baseline** — `benches/scaling.rs` times this loop against
+//!    the engine on the Fig 10/11 G-sweep and records the measured
+//!    speedup in `BENCH_scaling.json`.
+//!
+//! Scope: deterministic predictors (Oracle / WindowOracle /
+//! Pessimistic) reproduce exactly.  [`Predictor::Noisy`] draws from the
+//! rng per active view, and the engine both skips those draws for
+//! `wants_active_views() == false` policies and iterates actives in
+//! slot order rather than this loop's swap-remove order — so under
+//! noise the engine yields a *different (equally valid) random
+//! realization*, not a bit-identical one.  Power model is fixed to the
+//! A100 constants, matching `Simulator::new`.
+
+use crate::config::{PowerConfig, SimConfig};
+use crate::metrics::{CompletionRecord, Recorder, Report};
+use crate::policies::{
+    validate_assignments, ActiveView, AssignCtx, Policy, WaitingView, WorkerView,
+};
+use crate::sim::predictor::Predictor;
+use crate::util::rng::Rng;
+use crate::workload::Request;
+
+#[derive(Clone, Debug)]
+struct Active {
+    id: u64,
+    w: f64,
+    remaining: u64,
+    age: u64,
+    o: u64,
+    arrival_clock: f64,
+    admit_clock: f64,
+}
+
+/// Result of one reference run (the pre-refactor `SimResult` fields).
+pub struct RefResult {
+    pub report: Report,
+    /// Final global step index (idle steps included — the reference
+    /// does not skip gaps).
+    pub steps: u64,
+    pub completed: u64,
+    pub admitted: u64,
+    pub leftover_waiting: usize,
+}
+
+/// Run `policy` over `trace` with the pre-refactor per-step cycle.
+pub fn reference_run(
+    cfg: &SimConfig,
+    predictor: &Predictor,
+    trace: &[Request],
+    policy: &mut dyn Policy,
+) -> RefResult {
+    let g = cfg.g;
+    let b = cfg.b;
+    let horizon = policy.lookahead();
+    let mut rng = Rng::new(cfg.seed ^ 0xB1F0);
+    let mut recorder = Recorder::new(
+        PowerConfig::a100(),
+        cfg.t_token,
+        cfg.c_overhead,
+        cfg.warmup_steps,
+    );
+    if cfg.record_completions {
+        recorder = recorder.with_completions();
+    }
+
+    let mut workers: Vec<Vec<Active>> = vec![Vec::with_capacity(b); g];
+    let mut carry: Vec<(Request, f64)> = Vec::new();
+    let mut rest: std::collections::VecDeque<(Request, f64)> = Default::default();
+    let mut ptr = 0usize;
+    let mut admitted = 0u64;
+    let mut completed = 0u64;
+    let mut step: u64 = 0;
+
+    loop {
+        while ptr < trace.len() && trace[ptr].arrival_step <= step {
+            rest.push_back((trace[ptr].clone(), recorder.clock()));
+            ptr += 1;
+        }
+
+        let total_free: usize = workers.iter().map(|a| b - a.len()).sum();
+        let wait_len = carry.len() + rest.len();
+        if total_free > 0 && wait_len > 0 {
+            let cum_drift = cfg.drift.cumulative(step, horizon.max(1));
+            let views: Vec<WorkerView> = workers
+                .iter()
+                .map(|acts| WorkerView {
+                    load: acts.iter().map(|a| a.w).sum(),
+                    free_slots: b - acts.len(),
+                    active: acts
+                        .iter()
+                        .map(|a| ActiveView {
+                            load: a.w,
+                            pred_remaining: predictor.predict(
+                                a.remaining,
+                                horizon as u64,
+                                &mut rng,
+                            ),
+                        })
+                        .collect(),
+                })
+                .collect();
+            let view_cap = wait_len.min((total_free * 4).max(4096));
+            while carry.len() < view_cap {
+                carry.push(rest.pop_front().expect("wait_len accounting"));
+            }
+            let waiting_views: Vec<WaitingView> = carry[..view_cap]
+                .iter()
+                .enumerate()
+                .map(|(i, (r, _))| WaitingView {
+                    idx: i,
+                    prefill: r.prefill,
+                    arrival_step: r.arrival_step,
+                })
+                .collect();
+            let ctx = AssignCtx {
+                step,
+                batch_cap: b,
+                workers: &views,
+                waiting: &waiting_views,
+                cum_drift: &cum_drift,
+            };
+            let assignments = policy.assign(&ctx, &mut rng);
+            debug_assert!(
+                validate_assignments(&ctx, &assignments).is_ok(),
+                "{:?}",
+                validate_assignments(&ctx, &assignments)
+            );
+            if !assignments.is_empty() {
+                let mut taken = vec![false; view_cap];
+                for &(widx, gi) in &assignments {
+                    let (r, arrival_clock) = &carry[widx];
+                    workers[gi].push(Active {
+                        id: r.id,
+                        w: r.prefill,
+                        remaining: r.decode_len,
+                        age: 0,
+                        o: r.decode_len,
+                        arrival_clock: *arrival_clock,
+                        admit_clock: recorder.clock(),
+                    });
+                    taken[widx] = true;
+                    admitted += 1;
+                }
+                let mut kept = Vec::with_capacity(view_cap - assignments.len());
+                for (i, r) in carry.drain(..).enumerate() {
+                    if i >= view_cap || !taken[i] {
+                        kept.push(r);
+                    }
+                }
+                carry = kept;
+            }
+        }
+
+        let loads: Vec<f64> = workers
+            .iter()
+            .map(|acts| acts.iter().map(|a| a.w).sum())
+            .collect();
+        let active_count: usize = workers.iter().map(|a| a.len()).sum();
+        if active_count == 0 && ptr >= trace.len() && carry.is_empty() && rest.is_empty() {
+            break;
+        }
+        recorder.step(step, &loads, active_count);
+
+        let finish_clock = recorder.clock();
+        for (gi, acts) in workers.iter_mut().enumerate() {
+            let mut i = 0;
+            while i < acts.len() {
+                acts[i].remaining -= 1;
+                acts[i].age += 1;
+                if acts[i].remaining == 0 {
+                    let a = acts.swap_remove(i);
+                    recorder.complete_record(CompletionRecord {
+                        id: a.id,
+                        worker: gi,
+                        arrival_clock: a.arrival_clock,
+                        admit_clock: a.admit_clock,
+                        finish_clock,
+                        tokens: a.o,
+                    });
+                    completed += 1;
+                } else {
+                    let age = acts[i].age;
+                    acts[i].w += cfg.drift.delta(age);
+                    i += 1;
+                }
+            }
+        }
+
+        step += 1;
+        if cfg.max_steps > 0 && step >= cfg.max_steps {
+            break;
+        }
+    }
+
+    RefResult {
+        report: recorder.finish(),
+        steps: step,
+        completed,
+        admitted,
+        leftover_waiting: carry.len() + rest.len(),
+    }
+}

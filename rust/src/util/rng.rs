@@ -231,7 +231,7 @@ impl Zipf {
 
     pub fn sample(&self, rng: &mut Rng) -> u64 {
         let u = rng.f64();
-        match self.cdf.binary_search_by(|p| p.partial_cmp(&u).unwrap()) {
+        match self.cdf.binary_search_by(|p| p.total_cmp(&u)) {
             Ok(i) | Err(i) => (i as u64 + 1).min(self.cdf.len() as u64),
         }
     }

@@ -26,7 +26,7 @@ impl Summary {
             0.0
         };
         let mut sorted = xs.to_vec();
-        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        sorted.sort_by(|a, b| a.total_cmp(b));
         Summary {
             n,
             mean,
@@ -57,7 +57,7 @@ pub fn percentile_sorted(sorted: &[f64], p: f64) -> f64 {
 /// Percentile of an unsorted slice.
 pub fn percentile(xs: &[f64], p: f64) -> f64 {
     let mut sorted = xs.to_vec();
-    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    sorted.sort_by(|a, b| a.total_cmp(b));
     percentile_sorted(&sorted, p)
 }
 

@@ -96,6 +96,31 @@ impl Drift {
         }
     }
 
+    /// `Some(c)` when the increment is the same at every index
+    /// (`δ_k ≡ c`), `None` for genuinely age-varying sequences.  The
+    /// barrier-step engine uses this to advance a worker's load sum in
+    /// O(1) per step (`count·c`) instead of walking an age histogram.
+    pub fn constant_delta(&self) -> Option<f64> {
+        match self {
+            Drift::Unit => Some(1.0),
+            Drift::Zero => Some(0.0),
+            Drift::Const(c) => Some(*c),
+            Drift::Speculative(m) => Some(*m),
+            Drift::Cycle(xs) => match xs.first() {
+                None => Some(0.0),
+                Some(&x0) if xs.iter().all(|&x| x == x0) => Some(x0),
+                _ => None,
+            },
+            Drift::Decay { d0, rate } => {
+                if *d0 == 0.0 || *rate == 1.0 {
+                    Some(*d0)
+                } else {
+                    None
+                }
+            }
+        }
+    }
+
     /// Cumulative drift `D[h] = Σ_{t=k+1}^{k+h} δ_t` for `h = 0..=horizon`,
     /// starting after global step `k`.
     pub fn cumulative(&self, k: u64, horizon: usize) -> Vec<f64> {
@@ -287,6 +312,43 @@ mod tests {
             for k in 1..100 {
                 assert!(drift.delta(k) <= dm + 1e-12);
                 assert!(drift.delta(k) >= 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn constant_delta_detection() {
+        assert_eq!(Drift::Unit.constant_delta(), Some(1.0));
+        assert_eq!(Drift::Zero.constant_delta(), Some(0.0));
+        assert_eq!(Drift::Const(0.25).constant_delta(), Some(0.25));
+        assert_eq!(Drift::Speculative(3.0).constant_delta(), Some(3.0));
+        assert_eq!(Drift::Cycle(vec![]).constant_delta(), Some(0.0));
+        assert_eq!(Drift::Cycle(vec![0.5]).constant_delta(), Some(0.5));
+        assert_eq!(Drift::Cycle(vec![0.5, 0.5]).constant_delta(), Some(0.5));
+        assert_eq!(Drift::Cycle(vec![1.0, 0.0]).constant_delta(), None);
+        assert_eq!(
+            Drift::Decay { d0: 2.0, rate: 0.5 }.constant_delta(),
+            None
+        );
+        assert_eq!(
+            Drift::Decay { d0: 2.0, rate: 1.0 }.constant_delta(),
+            Some(2.0)
+        );
+        assert_eq!(
+            Drift::Decay { d0: 0.0, rate: 0.5 }.constant_delta(),
+            Some(0.0)
+        );
+        // detected constants must agree with the per-age values
+        for d in [
+            Drift::Unit,
+            Drift::Zero,
+            Drift::Const(0.3),
+            Drift::Speculative(2.0),
+            Drift::Cycle(vec![0.5, 0.5]),
+        ] {
+            let c = d.constant_delta().unwrap();
+            for k in 1..50 {
+                assert_eq!(d.delta(k), c, "{d:?} at {k}");
             }
         }
     }

@@ -1,0 +1,373 @@
+//! Golden parity suite for the shared incremental barrier-step engine.
+//!
+//! `sim::reference::reference_run` is a frozen, verbatim copy of the
+//! pre-refactor `sim::Simulator::run` loop (the naive O(G·B)-per-step
+//! cycle: re-summed loads, per-active predictor calls, linear
+//! complete/drift scans, fresh view allocations).  It is the golden
+//! oracle: the refactored `Simulator` — a thin driver over
+//! `sim::engine` — must reproduce its reports (avg_imbalance,
+//! wall_time_s, total_workload, energy, TPOT, completion records) to
+//! within 1e-9 relative on fixed seeds, across policies, drift models,
+//! and the deterministic predictors (Oracle / WindowOracle /
+//! Pessimistic).  `Predictor::Noisy` is intentionally out of scope: the
+//! engine reorders/elides its rng draws (slot-order views, predictor
+//! calls skipped for non-lookahead policies), so noisy runs are a
+//! different — equally valid — random realization by design (see
+//! `sim::reference` docs).
+//!
+//! A second suite checks offline-vs-gateway parity: the online
+//! `SimBackend` scheduler (the other driver of the same engine) must
+//! produce identical virtual-time completions for a sequentially
+//! submitted trace.
+
+use bfio_serve::config::SimConfig;
+use bfio_serve::gateway::backend::{Backend, CompletionRequest};
+use bfio_serve::gateway::sim::{SimBackend, SimBackendConfig};
+use bfio_serve::metrics::Report;
+use bfio_serve::sim::predictor::Predictor;
+use bfio_serve::sim::reference::reference_run;
+use bfio_serve::sim::Simulator;
+use bfio_serve::util::rng::Rng;
+use bfio_serve::workload::adversarial::overloaded_trace;
+use bfio_serve::workload::longbench::LongBenchLike;
+use bfio_serve::workload::{
+    generate_trace, ArrivalProcess, Drift, GeometricSampler, Request,
+};
+use std::time::Duration;
+
+// ---------------------------------------------------------------------
+// Comparison helpers
+// ---------------------------------------------------------------------
+
+const TOL: f64 = 1e-9;
+
+fn close(a: f64, b: f64, what: &str) {
+    let scale = 1.0_f64.max(a.abs()).max(b.abs());
+    assert!(
+        (a - b).abs() <= TOL * scale,
+        "{what}: engine {a:.17e} vs reference {b:.17e}"
+    );
+}
+
+fn assert_reports_match(engine: &Report, golden: &Report, label: &str) {
+    assert_eq!(engine.steps, golden.steps, "{label}: recorded steps");
+    assert_eq!(engine.completed, golden.completed, "{label}: completed");
+    close(engine.avg_imbalance, golden.avg_imbalance, "avg_imbalance");
+    close(engine.wall_time_s, golden.wall_time_s, "wall_time_s");
+    close(engine.total_workload, golden.total_workload, "total_workload");
+    close(engine.total_tokens, golden.total_tokens, "total_tokens");
+    close(engine.throughput_tps, golden.throughput_tps, "throughput_tps");
+    close(engine.tpot_s, golden.tpot_s, "tpot_s");
+    close(engine.tpot_p99_s, golden.tpot_p99_s, "tpot_p99_s");
+    close(
+        engine.mean_queue_wait_s,
+        golden.mean_queue_wait_s,
+        "mean_queue_wait_s",
+    );
+    close(
+        engine.mean_idle_fraction,
+        golden.mean_idle_fraction,
+        "mean_idle_fraction",
+    );
+    close(engine.sync_energy_j, golden.sync_energy_j, "sync_energy_j");
+    close(engine.total_energy_j, golden.total_energy_j, "total_energy_j");
+    close(engine.eta_sum, golden.eta_sum, "eta_sum");
+    close(engine.imb_tot, golden.imb_tot, "imb_tot");
+
+    // Completion records: same multiset of requests, same placements and
+    // timings (bucket completion reorders within a step, so sort by id).
+    let mut a = engine.completions.clone();
+    let mut b = golden.completions.clone();
+    assert_eq!(a.len(), b.len(), "{label}: completion record count");
+    a.sort_by_key(|r| r.id);
+    b.sort_by_key(|r| r.id);
+    for (x, y) in a.iter().zip(&b) {
+        assert_eq!(x.id, y.id, "{label}: completion ids");
+        assert_eq!(x.worker, y.worker, "{label}: id {} placed differently", x.id);
+        assert_eq!(x.tokens, y.tokens, "{label}: id {} tokens", x.id);
+        close(x.arrival_clock, y.arrival_clock, "arrival_clock");
+        close(x.admit_clock, y.admit_clock, "admit_clock");
+        close(x.finish_clock, y.finish_clock, "finish_clock");
+    }
+}
+
+fn check_parity(cfg: SimConfig, predictor: Predictor, trace: &[Request], policy: &str) {
+    let golden = reference_run(
+        &cfg,
+        &predictor,
+        trace,
+        &mut *bfio_serve::policies::by_name(policy).unwrap(),
+    );
+    let sim = Simulator::new(cfg).with_predictor(predictor);
+    let got = sim.run(trace, &mut *bfio_serve::policies::by_name(policy).unwrap());
+
+    assert_reports_match(&got.report, &golden.report, policy);
+    assert_eq!(got.completed, golden.completed, "{policy}: completed");
+    assert_eq!(got.admitted, golden.admitted, "{policy}: admitted");
+    assert_eq!(
+        got.leftover_waiting, golden.leftover_waiting,
+        "{policy}: leftover"
+    );
+    assert_eq!(got.steps, golden.steps, "{policy}: executed steps");
+}
+
+fn geometric_trace(seed: u64) -> Vec<Request> {
+    let sampler = GeometricSampler::new(5, 200, 0.2);
+    let mut rng = Rng::new(seed);
+    overloaded_trace(&sampler, 4, 8, 60, 2.0, &mut rng)
+}
+
+fn drain_cfg(drift: Drift) -> SimConfig {
+    SimConfig {
+        g: 4,
+        b: 8,
+        seed: 11,
+        max_steps: 0,
+        warmup_steps: 0,
+        record_completions: true,
+        drift,
+        ..SimConfig::default()
+    }
+}
+
+// ---------------------------------------------------------------------
+// Golden tests: engine vs frozen reference
+// ---------------------------------------------------------------------
+
+#[test]
+fn golden_parity_fcfs_jsq_on_drained_geometric() {
+    let trace = geometric_trace(41);
+    for policy in ["fcfs", "jsq", "rr", "least"] {
+        check_parity(drain_cfg(Drift::Unit), Predictor::Oracle, &trace, policy);
+    }
+}
+
+#[test]
+fn golden_parity_bfio_myopic_and_lookahead() {
+    let trace = geometric_trace(42);
+    for policy in ["bfio:0", "bfio:20"] {
+        check_parity(drain_cfg(Drift::Unit), Predictor::Oracle, &trace, policy);
+    }
+}
+
+#[test]
+fn golden_parity_longbench_capped_with_warmup() {
+    let sampler = LongBenchLike::paper();
+    let mut rng = Rng::new(7);
+    let trace = overloaded_trace(&sampler, 8, 12, 150, 3.0, &mut rng);
+    let cfg = SimConfig {
+        g: 8,
+        b: 12,
+        seed: 7,
+        max_steps: 150,
+        warmup_steps: 30,
+        record_completions: true,
+        ..SimConfig::default()
+    };
+    for policy in ["fcfs", "bfio:40"] {
+        check_parity(cfg.clone(), Predictor::Oracle, &trace, policy);
+    }
+}
+
+#[test]
+fn golden_parity_window_oracle_and_pessimistic_predictors() {
+    // Neither predictor draws randomness, so the rng streams stay
+    // aligned even though the engine skips predictor calls for
+    // non-lookahead policies.  (Noisy is out of scope — see the module
+    // docs.)
+    let trace = geometric_trace(43);
+    check_parity(
+        drain_cfg(Drift::Unit),
+        Predictor::WindowOracle,
+        &trace,
+        "bfio:12",
+    );
+    check_parity(
+        drain_cfg(Drift::Unit),
+        Predictor::Pessimistic,
+        &trace,
+        "bfio:12",
+    );
+}
+
+#[test]
+fn golden_parity_zero_and_const_drift() {
+    let trace = geometric_trace(44);
+    check_parity(drain_cfg(Drift::Zero), Predictor::Oracle, &trace, "fcfs");
+    check_parity(
+        drain_cfg(Drift::Const(0.5)),
+        Predictor::Oracle,
+        &trace,
+        "bfio:0",
+    );
+}
+
+#[test]
+fn golden_parity_age_varying_cycle_drift() {
+    // Cycle drift is not a constant increment: this exercises the
+    // engine's per-worker age histograms.
+    let trace = geometric_trace(45);
+    check_parity(
+        drain_cfg(Drift::Cycle(vec![1.0, 0.0])),
+        Predictor::Oracle,
+        &trace,
+        "bfio:8",
+    );
+    check_parity(
+        drain_cfg(Drift::Cycle(vec![2.0, 0.5, 1.0])),
+        Predictor::Oracle,
+        &trace,
+        "jsq",
+    );
+}
+
+#[test]
+fn idle_gaps_skipped_without_changing_outcomes() {
+    // A trace with a dead period: the engine jumps the gap (no empty
+    // barrier steps, no wall-clock charged) while the reference
+    // simulates it.  Scheduling outcomes — completions, placements,
+    // policy-independent workload — must still agree exactly; only the
+    // idle-step accounting differs.
+    let sampler = GeometricSampler::new(5, 50, 0.5);
+    let arrivals = ArrivalProcess::Fixed { per_step: 2, initial_backlog: 6 };
+    let mut rng = Rng::new(9);
+    let mut trace = generate_trace(&sampler, &arrivals, 10, &mut rng);
+    let burst = generate_trace(&sampler, &arrivals, 5, &mut rng);
+    let base = 500u64; // far beyond the first batch's drain time
+    let next_id = trace.len() as u64;
+    for (i, r) in burst.into_iter().enumerate() {
+        trace.push(Request {
+            id: next_id + i as u64,
+            arrival_step: base + r.arrival_step,
+            ..r
+        });
+    }
+
+    let cfg = drain_cfg(Drift::Unit);
+    let golden = reference_run(
+        &cfg,
+        &Predictor::Oracle,
+        &trace,
+        &mut *bfio_serve::policies::by_name("fcfs").unwrap(),
+    );
+    let got = Simulator::new(cfg)
+        .run(&trace, &mut *bfio_serve::policies::by_name("fcfs").unwrap());
+
+    assert_eq!(got.completed, golden.completed);
+    assert_eq!(got.completed as usize, trace.len());
+    close(
+        got.report.total_workload,
+        golden.report.total_workload,
+        "total_workload",
+    );
+    // the reference executed the idle gap; the engine skipped it
+    assert!(golden.steps >= base, "reference walks the gap: {}", golden.steps);
+    assert!(got.steps < base, "engine skips the gap: {}", got.steps);
+    assert!(got.report.wall_time_s < golden.report.wall_time_s);
+    // identical placements and timings for every request
+    let mut a = got.report.completions.clone();
+    let mut b = golden.report.completions.clone();
+    a.sort_by_key(|r| r.id);
+    b.sort_by_key(|r| r.id);
+    for (x, y) in a.iter().zip(&b) {
+        assert_eq!((x.id, x.worker, x.tokens), (y.id, y.worker, y.tokens));
+    }
+}
+
+// ---------------------------------------------------------------------
+// Offline simulator vs online gateway scheduler on the same trace
+// ---------------------------------------------------------------------
+
+/// Sequentially round-tripped requests through the live `SimBackend`
+/// must reproduce the offline simulator's virtual-time records exactly:
+/// both are thin drivers over the same engine, and with one request in
+/// flight at a time there is no intake nondeterminism.
+fn gateway_offline_parity(policy: &str) {
+    let g = 3;
+    let b = 2;
+    let n = 12u64;
+    // varied sizes; arrival i lands exactly when request i-1 completes
+    let spec: Vec<(usize, u32)> = (0..n)
+        .map(|i| ((3 + (7 * i) % 11) as usize, (1 + (3 * i) % 5) as u32))
+        .collect();
+    let mut arrival = 0u64;
+    let trace: Vec<Request> = spec
+        .iter()
+        .enumerate()
+        .map(|(i, &(prefill, o))| {
+            let r = Request {
+                id: i as u64,
+                arrival_step: arrival,
+                prefill: prefill as f64,
+                decode_len: u64::from(o),
+            };
+            arrival += u64::from(o);
+            r
+        })
+        .collect();
+
+    let sim_cfg = SimConfig {
+        g,
+        b,
+        seed: 0,
+        max_steps: 0,
+        warmup_steps: 0,
+        record_completions: true,
+        ..SimConfig::default()
+    };
+    let offline = Simulator::new(sim_cfg.clone())
+        .run(&trace, &mut *bfio_serve::policies::by_name(policy).unwrap());
+    let mut records = offline.report.completions.clone();
+    records.sort_by_key(|r| r.id);
+    assert_eq!(records.len(), n as usize);
+
+    let be = SimBackend::new(SimBackendConfig {
+        g,
+        b,
+        policy: policy.to_string(),
+        step_delay: Duration::ZERO,
+        batch_window: Duration::ZERO,
+        ..SimBackendConfig::default()
+    })
+    .unwrap();
+    for (i, &(prefill, o)) in spec.iter().enumerate() {
+        let c = be
+            .complete(CompletionRequest {
+                id: i as u64,
+                prompt_tokens: vec![1; prefill],
+                max_tokens: o,
+            })
+            .unwrap();
+        let r = &records[i];
+        assert_eq!(c.worker, r.worker, "{policy}: id {i} placed differently");
+        assert_eq!(u64::from(c.n_tokens), r.tokens);
+        let tpot_off = (r.finish_clock - r.admit_clock) / r.tokens as f64;
+        close(c.tpot_s, tpot_off, "tpot_s");
+        close(c.latency_s, r.finish_clock - r.arrival_clock, "latency_s");
+        close(
+            c.queue_wait_s,
+            (r.admit_clock - r.arrival_clock).max(0.0),
+            "queue_wait_s",
+        );
+    }
+
+    // aggregate stats line up with the offline report (warmup 0)
+    let st = be.stats();
+    assert_eq!(st.completed, n);
+    assert_eq!(st.admitted, n);
+    assert_eq!(st.steps, offline.steps);
+    assert_eq!(st.total_tokens as f64, offline.report.total_tokens);
+    close(st.clock_s, offline.report.wall_time_s, "clock vs wall_time");
+    close(st.avg_imbalance, offline.report.avg_imbalance, "avg_imbalance");
+    close(st.energy_j, offline.report.total_energy_j, "energy");
+}
+
+#[test]
+fn gateway_matches_offline_round_robin() {
+    gateway_offline_parity("rr");
+}
+
+#[test]
+fn gateway_matches_offline_least_loaded() {
+    gateway_offline_parity("least");
+}
