@@ -1,0 +1,67 @@
+//! Fleet sweep: R×G replicas under every tier-1 router versus the
+//! monolithic R·G-worker group on the same overloaded trace, across a
+//! range of replica counts — the machine-readable evidence for the
+//! two-level routing tier.
+//!
+//! Emits `BENCH_fleet.json` (per-(R, router) imbalance, cross-replica
+//! clock ratio, TPOT, throughput, energy, plus ratios against the
+//! monolith).  `-- --smoke` runs a small sweep for CI; `-- --out PATH`
+//! overrides the output file (CI uses it to regenerate the canonical
+//! file with measured numbers).
+
+use bfio_serve::experiments::fleet::{
+    bench_json, rows_to_json, run_fleet_rows, FleetScale,
+};
+use std::time::Instant;
+
+fn main() {
+    let argv: Vec<String> = std::env::args().collect();
+    let smoke = argv.iter().any(|a| a == "--smoke");
+    let out_override = argv
+        .iter()
+        .position(|a| a == "--out")
+        .and_then(|i| argv.get(i + 1))
+        .cloned();
+    let rs: &[usize] = if smoke { &[2] } else { &[2, 4, 8] };
+    let g = 16usize;
+    let b = 8usize;
+    let steps: u64 = if smoke { 60 } else { 200 };
+    let routers: Vec<String> = ["wrr", "low", "powd:2", "bfio2"]
+        .iter()
+        .map(|r| r.to_string())
+        .collect();
+
+    println!(
+        "fleet sweep (G={g}, B={b}, {steps} steps): R replicas vs monolithic R·G workers"
+    );
+    let t_all = Instant::now();
+    let mut sweep = Vec::new();
+    for &r in rs {
+        let scale = FleetScale::new(r, g, b, steps);
+        let (rows, mono) =
+            run_fleet_rows(&scale, &routers, &[]).expect("fleet run");
+        println!(
+            "R={r}: monolith imb {:.3e}; per router (imb, clk, tok/s):",
+            mono.avg_imbalance
+        );
+        for row in &rows {
+            println!(
+                "  {:<16} {:>12.3e} {:>6.3} {:>10.1}",
+                row.router, row.avg_imbalance, row.clock_ratio, row.throughput_tps
+            );
+        }
+        sweep.push(rows_to_json(&scale, &rows, &mono));
+    }
+    let total_ms = t_all.elapsed().as_secs_f64() * 1e3;
+    println!("total {total_ms:.0} ms");
+
+    // Same document shape as `bfio fleet` (per-scale g/b/steps live in
+    // each sweep entry).
+    let json = bench_json(smoke, false, total_ms, sweep);
+    let default_path = if smoke { "BENCH_fleet_smoke.json" } else { "BENCH_fleet.json" };
+    let path = out_override.as_deref().unwrap_or(default_path);
+    match std::fs::write(path, json.to_string_pretty() + "\n") {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+}

@@ -12,7 +12,9 @@
 //! speedup, imbalance ratios) so the trajectory is machine-readable and
 //! comparable across PRs.  `-- --smoke` runs a small-G sweep for CI
 //! (written to `BENCH_scaling_smoke.json` so the full-sweep evidence is
-//! not clobbered).
+//! not clobbered); `-- --out PATH` overrides the output file — CI uses
+//! `--smoke --out BENCH_scaling.json` to replace the checked-in schema
+//! placeholder with measured (smoke-scale) timings.
 
 use bfio_serve::config::SimConfig;
 use bfio_serve::policies::by_name;
@@ -30,7 +32,13 @@ fn ms(t: Instant) -> f64 {
 }
 
 fn main() {
-    let smoke = std::env::args().any(|a| a == "--smoke");
+    let argv: Vec<String> = std::env::args().collect();
+    let smoke = argv.iter().any(|a| a == "--smoke");
+    let out_override = argv
+        .iter()
+        .position(|a| a == "--out")
+        .and_then(|i| argv.get(i + 1))
+        .cloned();
     let gs: &[usize] = if smoke { &[4, 8] } else { &[16, 32, 64, 96, 128] };
     let steps: u64 = if smoke { 100 } else { 300 };
     let b = 24usize;
@@ -133,7 +141,9 @@ fn main() {
         ("total_ms", num(total_ms)),
         ("rows", arr(rows_json)),
     ]);
-    let path = if smoke { "BENCH_scaling_smoke.json" } else { "BENCH_scaling.json" };
+    let default_path =
+        if smoke { "BENCH_scaling_smoke.json" } else { "BENCH_scaling.json" };
+    let path = out_override.as_deref().unwrap_or(default_path);
     match std::fs::write(path, json.to_string_pretty() + "\n") {
         Ok(()) => println!("wrote {path}"),
         Err(e) => eprintln!("could not write {path}: {e}"),

@@ -24,9 +24,8 @@ fn instance(
             let free = if rng.f64() < free_frac { 1 } else { 0 };
             let n = b - free;
             let active: Vec<ActiveView> = (0..n)
-                .map(|_| ActiveView {
-                    load: 500.0 + rng.f64() * 3000.0,
-                    pred_remaining: 1 + rng.below(200),
+                .map(|_| {
+                    ActiveView::fresh(500.0 + rng.f64() * 3000.0, 1 + rng.below(200))
                 })
                 .collect();
             WorkerView {

@@ -174,6 +174,10 @@ pub fn serve(cfg: &CoordinatorConfig, requests: &[ServeRequest]) -> Result<Serve
     let mut tokens_done: u64 = 0;
     let mut energy_j = 0.0;
     let drift = Drift::Unit;
+    // Persistent age-indexed cumulative-drift table (see
+    // AssignCtx::cum_drift), grown on demand instead of reallocated
+    // per step.
+    let mut cum_all: Vec<f64> = vec![0.0];
 
     loop {
         let busy: usize = slots.iter().flatten().filter(|s| s.is_some()).count();
@@ -191,6 +195,21 @@ pub fn serve(cfg: &CoordinatorConfig, requests: &[ServeRequest]) -> Result<Serve
             .map(|ws| ws.iter().filter(|s| s.is_none()).count())
             .sum();
         if total_free > 0 && !wait.is_empty() {
+            // Age-indexed cumulative drift covering every active's age
+            // plus the policy's window (see AssignCtx::cum_drift).
+            let max_age = slots
+                .iter()
+                .flat_map(|ws| ws.iter().flatten())
+                .map(|s| s.done_steps as usize)
+                .max()
+                .unwrap_or(0);
+            let need = max_age + policy.lookahead().max(1);
+            while cum_all.len() <= need {
+                let j = cum_all.len() as u64;
+                let last = *cum_all.last().expect("cum_all starts as [0.0]");
+                cum_all.push(last + drift.delta(j));
+            }
+            let cum: &[f64] = &cum_all;
             let views: Vec<WorkerView> = slots
                 .iter()
                 .map(|ws| {
@@ -201,6 +220,8 @@ pub fn serve(cfg: &CoordinatorConfig, requests: &[ServeRequest]) -> Result<Serve
                             load: (s.done_steps + 1) as f64,
                             pred_remaining: (s.total_len.saturating_sub(s.done_steps))
                                 .max(1) as u64,
+                            age: u64::from(s.done_steps),
+                            drift_offset: cum[s.done_steps as usize],
                         })
                         .collect();
                     WorkerView {
@@ -221,13 +242,12 @@ pub fn serve(cfg: &CoordinatorConfig, requests: &[ServeRequest]) -> Result<Serve
                     arrival_step: 0,
                 })
                 .collect();
-            let cum = drift.cumulative(steps, policy.lookahead().max(1));
             let ctx = AssignCtx {
                 step: steps,
                 batch_cap: b,
                 workers: &views,
                 waiting: &waiting_views,
-                cum_drift: &cum,
+                cum_drift: cum,
             };
             let assignments = policy.assign(&ctx, &mut rng);
             let mut taken = vec![false; wait.len()];

@@ -1,0 +1,318 @@
+//! Fleet experiment: R×G replicas under each tier-1 router versus a
+//! single monolithic barrier group of R·G workers on the same trace —
+//! the evidence behind the `bfio fleet` subcommand and
+//! `benches/fleet.rs`, emitted as `BENCH_fleet.json`.
+//!
+//! The monolithic group is the idealized baseline: one barrier over all
+//! R·G workers gives the admission policy a global view (structurally
+//! the lowest imbalance) but would require a fleet-wide barrier no real
+//! deployment can afford.  The fleet rows quantify what each tier-1
+//! router gives back of that gap — within-replica imbalance, energy,
+//! TPOT, throughput, and the cross-replica clock spread the router
+//! alone is responsible for.
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::config::SimConfig;
+use crate::fleet::{run_fleet, FleetConfig, FleetEvent};
+use crate::sim::Simulator;
+use crate::util::json::{arr, num, obj, s, Json};
+use crate::util::rng::Rng;
+use crate::workload::adversarial::overloaded_trace;
+use crate::workload::longbench::LongBenchLike;
+use crate::workload::Request;
+
+/// Scale knobs for one fleet comparison.
+#[derive(Clone, Debug)]
+pub struct FleetScale {
+    /// Replicas `R`.
+    pub replicas: usize,
+    /// Workers `G` per replica.
+    pub g: usize,
+    /// Per-worker batch capacity `B`.
+    pub b: usize,
+    pub steps: u64,
+    pub seed: u64,
+    /// Tier-2 admission policy per replica (and for the monolith).
+    pub policy: String,
+    /// Replica speed factors (len == replicas).
+    pub speeds: Vec<f64>,
+}
+
+impl FleetScale {
+    pub fn new(replicas: usize, g: usize, b: usize, steps: u64) -> FleetScale {
+        FleetScale {
+            replicas,
+            g,
+            b,
+            steps,
+            seed: 7,
+            policy: "bfio:8".to_string(),
+            speeds: vec![1.0; replicas],
+        }
+    }
+
+    fn fleet_config(&self) -> FleetConfig {
+        FleetConfig {
+            g: self.g,
+            b: self.b,
+            policy: self.policy.clone(),
+            speeds: self.speeds.clone(),
+            seed: self.seed,
+            max_rounds: self.steps,
+            warmup_rounds: self.steps / 5,
+            ..FleetConfig::uniform(self.replicas, self.g, self.b, &self.policy)
+        }
+    }
+
+    /// The shared trace: an overloaded instance sized for R·G workers.
+    pub fn trace(&self) -> Vec<Request> {
+        let sampler = LongBenchLike::paper();
+        let mut rng = Rng::new(self.seed);
+        overloaded_trace(
+            &sampler,
+            self.replicas * self.g,
+            self.b,
+            self.steps,
+            3.0,
+            &mut rng,
+        )
+    }
+}
+
+/// One comparison row (a fleet router, or the monolithic baseline).
+#[derive(Clone, Debug)]
+pub struct FleetBenchRow {
+    pub router: String,
+    pub avg_imbalance: f64,
+    /// Max/mean replica clock (1.0 for the monolith by construction).
+    pub clock_ratio: f64,
+    pub tpot_s: f64,
+    pub throughput_tps: f64,
+    pub energy_mj: f64,
+    pub completed: u64,
+    /// Post-warmup metered window (max across replicas), so the fleet
+    /// and monolith rows measure the same thing (`Report::wall_time_s`
+    /// excludes warmup on both sides).
+    pub makespan_s: f64,
+    /// Wall-clock milliseconds this row took to simulate.
+    pub run_ms: f64,
+}
+
+fn row_json(r: &FleetBenchRow, mono: &FleetBenchRow) -> Json {
+    let ratio = |a: f64, b: f64| if b != 0.0 { a / b } else { 0.0 };
+    obj(vec![
+        ("router", s(&r.router)),
+        ("avg_imbalance", num(r.avg_imbalance)),
+        ("clock_ratio", num(r.clock_ratio)),
+        ("tpot_s", num(r.tpot_s)),
+        ("throughput_tps", num(r.throughput_tps)),
+        ("energy_mj", num(r.energy_mj)),
+        ("completed", num(r.completed as f64)),
+        ("makespan_s", num(r.makespan_s)),
+        ("run_ms", num(r.run_ms)),
+        ("imb_vs_monolithic", num(ratio(r.avg_imbalance, mono.avg_imbalance))),
+        ("energy_vs_monolithic", num(ratio(r.energy_mj, mono.energy_mj))),
+        ("tpot_vs_monolithic", num(ratio(r.tpot_s, mono.tpot_s))),
+        ("tps_vs_monolithic", num(ratio(r.throughput_tps, mono.throughput_tps))),
+    ])
+}
+
+/// Run every fleet router plus the monolithic R·G baseline over the
+/// shared trace.  Returns `(fleet_rows, monolithic_row)`.
+pub fn run_fleet_rows(
+    scale: &FleetScale,
+    routers: &[String],
+    events: &[FleetEvent],
+) -> Result<(Vec<FleetBenchRow>, FleetBenchRow)> {
+    let trace = scale.trace();
+    let cfg = scale.fleet_config();
+    let mut rows = Vec::with_capacity(routers.len());
+    for router in routers {
+        let t0 = std::time::Instant::now();
+        let res = run_fleet(&cfg, router, &trace, events)?;
+        let window_s = res
+            .per_replica
+            .iter()
+            .map(|r| r.report.wall_time_s)
+            .fold(0.0, f64::max);
+        rows.push(FleetBenchRow {
+            router: res.router,
+            avg_imbalance: res.avg_imbalance,
+            clock_ratio: res.clock_ratio,
+            tpot_s: res.tpot_s,
+            throughput_tps: res.throughput_tps,
+            energy_mj: res.energy_j / 1e6,
+            completed: res.completed,
+            makespan_s: window_s,
+            run_ms: t0.elapsed().as_secs_f64() * 1e3,
+        });
+    }
+
+    // Monolithic baseline: one barrier group of R·G workers.
+    let mono_cfg = SimConfig {
+        g: scale.replicas * scale.g,
+        b: scale.b,
+        max_steps: scale.steps,
+        warmup_steps: scale.steps / 5,
+        seed: scale.seed,
+        ..SimConfig::default()
+    };
+    let mut policy = crate::policies::by_name(&scale.policy)
+        .ok_or_else(|| anyhow::anyhow!("unknown policy {:?}", scale.policy))?;
+    let t0 = std::time::Instant::now();
+    let res = Simulator::new(mono_cfg).run(&trace, policy.as_mut());
+    let mono = FleetBenchRow {
+        router: format!("monolithic({}w)", scale.replicas * scale.g),
+        avg_imbalance: res.report.avg_imbalance,
+        clock_ratio: 1.0,
+        tpot_s: res.report.tpot_s,
+        throughput_tps: res.report.throughput_tps,
+        energy_mj: res.report.energy_mj(),
+        completed: res.completed,
+        makespan_s: res.report.wall_time_s,
+        run_ms: t0.elapsed().as_secs_f64() * 1e3,
+    };
+    Ok((rows, mono))
+}
+
+/// JSON document for one scale's comparison.
+pub fn rows_to_json(
+    scale: &FleetScale,
+    rows: &[FleetBenchRow],
+    mono: &FleetBenchRow,
+) -> Json {
+    obj(vec![
+        ("replicas", num(scale.replicas as f64)),
+        ("g", num(scale.g as f64)),
+        ("b", num(scale.b as f64)),
+        ("steps", num(scale.steps as f64)),
+        ("seed", num(scale.seed as f64)),
+        ("policy", s(&scale.policy)),
+        (
+            "speeds",
+            arr(scale.speeds.iter().map(|&x| num(x))),
+        ),
+        ("monolithic", row_json(mono, mono)),
+        ("rows", arr(rows.iter().map(|r| row_json(r, mono)))),
+    ])
+}
+
+fn print_row(r: &FleetBenchRow) {
+    println!(
+        "{:<20} {:>14.4e} {:>7.3} {:>10.4} {:>10.1} {:>9.3} {:>9} {:>8.1}",
+        r.router,
+        r.avg_imbalance,
+        r.clock_ratio,
+        r.tpot_s,
+        r.throughput_tps,
+        r.energy_mj,
+        r.completed,
+        r.run_ms
+    );
+}
+
+/// The shared `BENCH_fleet.json` document shape — one schema whether
+/// the file was written by `bfio fleet` or `benches/fleet.rs`.
+pub fn bench_json(smoke: bool, churn: bool, total_ms: f64, sweep: Vec<Json>) -> Json {
+    obj(vec![
+        ("bench", s("fleet")),
+        ("smoke", Json::Bool(smoke)),
+        ("churn", Json::Bool(churn)),
+        ("total_ms", num(total_ms)),
+        ("sweep", arr(sweep)),
+    ])
+}
+
+/// The `bfio fleet` driver: run the comparison, print the table, and
+/// write `out` (default `BENCH_fleet.json`).
+pub fn fleet_sweep(
+    scale: &FleetScale,
+    routers: &[String],
+    out: &Path,
+    churn: bool,
+) -> Result<()> {
+    let events = if churn {
+        vec![
+            FleetEvent::Drain { round: scale.steps / 3, replica: 0 },
+            FleetEvent::Add { round: scale.steps / 2, speed: 1.0 },
+            FleetEvent::Remove {
+                round: 2 * scale.steps / 3,
+                replica: 1.min(scale.replicas - 1),
+            },
+        ]
+    } else {
+        Vec::new()
+    };
+    println!(
+        "fleet: {}x({}x{}) slots, {} steps, policy {}, routers {:?}{}",
+        scale.replicas,
+        scale.g,
+        scale.b,
+        scale.steps,
+        scale.policy,
+        routers,
+        if churn { ", churn on" } else { "" }
+    );
+    let t0 = std::time::Instant::now();
+    let (rows, mono) = run_fleet_rows(scale, routers, &events)?;
+    println!(
+        "{:<20} {:>14} {:>7} {:>10} {:>10} {:>9} {:>9} {:>8}",
+        "router", "avg_imbalance", "clk", "tpot(s)", "tok/s", "MJ", "done", "ms"
+    );
+    for r in &rows {
+        print_row(r);
+    }
+    print_row(&mono);
+    let total_ms = t0.elapsed().as_secs_f64() * 1e3;
+    let json = bench_json(false, churn, total_ms, vec![rows_to_json(scale, &rows, &mono)]);
+    std::fs::write(out, json.to_string_pretty() + "\n")?;
+    println!("wrote {}", out.display());
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> FleetScale {
+        FleetScale {
+            policy: "bfio:0".to_string(),
+            ..FleetScale::new(2, 2, 4, 60)
+        }
+    }
+
+    #[test]
+    fn rows_cover_routers_and_monolith() {
+        let routers: Vec<String> =
+            ["wrr", "low", "bfio2"].iter().map(|s| s.to_string()).collect();
+        let (rows, mono) = run_fleet_rows(&tiny(), &routers, &[]).unwrap();
+        assert_eq!(rows.len(), 3);
+        assert!(mono.router.starts_with("monolithic(4w)"));
+        for r in &rows {
+            assert!(r.completed > 0, "{}: nothing completed", r.router);
+            assert!(r.throughput_tps > 0.0);
+            assert!(r.energy_mj > 0.0);
+            assert!(r.clock_ratio >= 1.0 - 1e-12);
+        }
+        let j = rows_to_json(&tiny(), &rows, &mono).to_string();
+        let parsed = crate::util::json::Json::parse(&j).unwrap();
+        assert_eq!(
+            parsed.get("rows").unwrap().as_arr().unwrap().len(),
+            3
+        );
+    }
+
+    #[test]
+    fn sweep_writes_json_file() {
+        let out = std::env::temp_dir().join("bfio_fleet_test.json");
+        let routers = vec!["low".to_string()];
+        fleet_sweep(&tiny(), &routers, &out, true).unwrap();
+        let text = std::fs::read_to_string(&out).unwrap();
+        let v = crate::util::json::Json::parse(&text).unwrap();
+        assert_eq!(v.get("bench").unwrap().as_str().unwrap(), "fleet");
+        assert_eq!(v.get("churn").unwrap().as_bool().unwrap(), true);
+    }
+}

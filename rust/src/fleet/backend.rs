@@ -1,0 +1,442 @@
+//! Fleet-backed gateway backend: the online driver of the
+//! round-synchronized [`FleetCore`], fed by live HTTP arrivals — the
+//! multi-replica sibling of [`crate::gateway::sim::SimBackend`].
+//!
+//! A single scheduler thread owns the core: requests arriving over the
+//! channel are routed to a replica immediately (tier 1), admitted
+//! within it by the replica's own [`crate::policies::Policy`] (tier 2),
+//! and answered the moment their decode budget is met, all in virtual
+//! time.  `/v0/workers` reports every worker of every replica (global
+//! worker id `replica·G + worker`, with a `replica` field), `/metrics`
+//! adds per-replica series, and `stats` aggregates across the fleet.
+
+use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::config::SimConfig;
+use crate::gateway::backend::{
+    Backend, BackendStats, Completion, CompletionRequest, ReplicaStatus,
+    WorkerStatus,
+};
+use crate::gateway::sim::gen_tokens;
+use crate::metrics::imbalance;
+use crate::sim::predictor::Predictor;
+use crate::workload::Drift;
+
+use super::core::{FleetCore, FleetFinished, ReplicaSnapshot, ReplicaState};
+use super::FleetConfig;
+
+/// Configuration for [`FleetBackend`].
+#[derive(Clone, Debug)]
+pub struct FleetBackendConfig {
+    /// Number of replicas `R` (ignored when `speeds` is set).
+    pub replicas: usize,
+    /// Workers `G` per replica.
+    pub g: usize,
+    /// Per-worker batch capacity `B`.
+    pub b: usize,
+    /// Tier-2 admission policy per replica.
+    pub policy: String,
+    /// Tier-1 router (see [`crate::fleet::router_by_name`]).
+    pub router: String,
+    /// Heterogeneous speed factors; `None` = all 1.0.
+    pub speeds: Option<Vec<f64>>,
+    pub drift: Drift,
+    pub c_overhead: f64,
+    pub t_token: f64,
+    pub seed: u64,
+    /// Real-time pause per round (lets concurrent requests queue so
+    /// routing decisions are observable).  Zero = free-running.
+    pub step_delay: Duration,
+    /// Real-time dynamic-batching window on the idle→busy transition.
+    pub batch_window: Duration,
+}
+
+impl Default for FleetBackendConfig {
+    fn default() -> Self {
+        let sim = SimConfig::default();
+        FleetBackendConfig {
+            replicas: 2,
+            g: 4,
+            b: 8,
+            policy: "bfio:8".to_string(),
+            router: "bfio2".to_string(),
+            speeds: None,
+            drift: Drift::Unit,
+            c_overhead: sim.c_overhead,
+            t_token: sim.t_token,
+            seed: 0,
+            step_delay: Duration::from_millis(1),
+            batch_window: Duration::from_millis(5),
+        }
+    }
+}
+
+impl FleetBackendConfig {
+    fn fleet_config(&self) -> FleetConfig {
+        let speeds = match &self.speeds {
+            Some(s) => s.clone(),
+            None => vec![1.0; self.replicas.max(1)],
+        };
+        FleetConfig {
+            g: self.g,
+            b: self.b,
+            policy: self.policy.clone(),
+            drift: self.drift.clone(),
+            c_overhead: self.c_overhead,
+            t_token: self.t_token,
+            speeds,
+            seed: self.seed,
+            max_rounds: 0,
+            warmup_rounds: 0,
+            record_completions: false,
+            predictor: Predictor::Oracle,
+        }
+    }
+}
+
+/// A submitted request waiting for its answer.
+struct Pending {
+    req: CompletionRequest,
+    done: Sender<Completion>,
+}
+
+enum Msg {
+    Submit(Pending),
+    Shutdown,
+}
+
+#[derive(Clone, Debug, Default)]
+struct Snapshot {
+    workers: Vec<WorkerStatus>,
+    replicas: Vec<ReplicaStatus>,
+    stats: BackendStats,
+}
+
+/// The fleet-backed [`Backend`].
+pub struct FleetBackend {
+    label: String,
+    tx: Mutex<Sender<Msg>>,
+    snap: Arc<Mutex<Snapshot>>,
+    handle: Mutex<Option<JoinHandle<()>>>,
+}
+
+impl FleetBackend {
+    pub fn new(cfg: FleetBackendConfig) -> Result<FleetBackend> {
+        let fleet_cfg = cfg.fleet_config();
+        let router = fleet_cfg
+            .router(&cfg.router)
+            .ok_or_else(|| anyhow!("unknown fleet router {:?}", cfg.router))?;
+        let router_label = router.name();
+        let core: FleetCore<Pending, Sender<Completion>> =
+            FleetCore::new(fleet_cfg.clone(), router)?;
+        let policy_label = crate::policies::by_name(&cfg.policy)
+            .ok_or_else(|| anyhow!("unknown policy {:?}", cfg.policy))?
+            .name();
+        let label = format!(
+            "fleet({}x{})/{}/{}",
+            fleet_cfg.speeds.len(),
+            cfg.g,
+            router_label,
+            policy_label
+        );
+
+        let (tx, rx) = channel::<Msg>();
+        let snap = Arc::new(Mutex::new(Snapshot::default()));
+        {
+            // Initial all-idle snapshot so /v0/workers is meaningful
+            // before the first request.
+            let mut s = snap.lock().expect("fresh mutex");
+            *s = build_snapshot(&label, &core.snapshot(), cfg.g);
+        }
+        let scheduler = Scheduler {
+            cfg: cfg.clone(),
+            label: label.clone(),
+            rx,
+            snap: Arc::clone(&snap),
+            core,
+        };
+        let handle = std::thread::spawn(move || scheduler.run());
+        Ok(FleetBackend {
+            label,
+            tx: Mutex::new(tx),
+            snap,
+            handle: Mutex::new(Some(handle)),
+        })
+    }
+}
+
+impl Backend for FleetBackend {
+    fn name(&self) -> String {
+        self.label.clone()
+    }
+
+    fn complete(&self, req: CompletionRequest) -> Result<Completion> {
+        let (done_tx, done_rx) = channel::<Completion>();
+        {
+            let tx = self.tx.lock().map_err(|_| anyhow!("backend poisoned"))?;
+            tx.send(Msg::Submit(Pending { req, done: done_tx }))
+                .map_err(|_| anyhow!("fleet scheduler is gone"))?;
+        }
+        done_rx
+            .recv()
+            .context("fleet scheduler dropped the request (shutting down?)")
+    }
+
+    fn workers(&self) -> Vec<WorkerStatus> {
+        self.snap.lock().map(|s| s.workers.clone()).unwrap_or_default()
+    }
+
+    fn stats(&self) -> BackendStats {
+        self.snap.lock().map(|s| s.stats.clone()).unwrap_or_default()
+    }
+
+    fn replicas(&self) -> Vec<ReplicaStatus> {
+        self.snap.lock().map(|s| s.replicas.clone()).unwrap_or_default()
+    }
+}
+
+impl Drop for FleetBackend {
+    fn drop(&mut self) {
+        if let Ok(tx) = self.tx.lock() {
+            let _ = tx.send(Msg::Shutdown);
+        }
+        if let Ok(mut h) = self.handle.lock() {
+            if let Some(h) = h.take() {
+                let _ = h.join();
+            }
+        }
+    }
+}
+
+struct Scheduler {
+    cfg: FleetBackendConfig,
+    label: String,
+    rx: Receiver<Msg>,
+    snap: Arc<Mutex<Snapshot>>,
+    core: FleetCore<Pending, Sender<Completion>>,
+}
+
+impl Scheduler {
+    fn submit(&mut self, p: Pending) {
+        let prefill = p.req.prompt_tokens.len().max(1) as f64;
+        let round = self.core.round();
+        self.core.submit(prefill, round, p);
+    }
+
+    fn run(mut self) {
+        let g = self.cfg.g;
+        let mut out: Vec<FleetFinished<Sender<Completion>>> = Vec::new();
+        'outer: loop {
+            // Park while idle, then hold the batching window open.
+            if self.core.is_idle() {
+                match self.rx.recv() {
+                    Ok(Msg::Submit(p)) => {
+                        self.submit(p);
+                        if !self.cfg.batch_window.is_zero() {
+                            std::thread::sleep(self.cfg.batch_window);
+                        }
+                    }
+                    Ok(Msg::Shutdown) | Err(_) => break 'outer,
+                }
+            }
+            loop {
+                match self.rx.try_recv() {
+                    Ok(Msg::Submit(p)) => self.submit(p),
+                    Ok(Msg::Shutdown) => break 'outer,
+                    Err(TryRecvError::Empty) => break,
+                    Err(TryRecvError::Disconnected) => break 'outer,
+                }
+            }
+
+            self.core.run_round(
+                &mut |_, p: Pending| {
+                    let o = u64::from(p.req.max_tokens.max(1));
+                    (p.req.id, o, p.done)
+                },
+                &mut out,
+            );
+
+            // Publish before answering so a client that sees its
+            // completion then reads /metrics sees itself counted.
+            {
+                let snapshot =
+                    build_snapshot(&self.label, &self.core.snapshot(), g);
+                if let Ok(mut s) = self.snap.lock() {
+                    *s = snapshot;
+                }
+            }
+
+            for f in out.drain(..) {
+                let tpot = if f.tokens > 0 {
+                    (f.finish_clock - f.admit_clock) / f.tokens as f64
+                } else {
+                    0.0
+                };
+                let _ = f.payload.send(Completion {
+                    id: f.id,
+                    worker: f.replica * g + f.worker,
+                    tokens: gen_tokens(f.id, f.tokens),
+                    n_tokens: f.tokens as u32,
+                    queue_wait_s: (f.admit_clock - f.arrival_clock).max(0.0),
+                    tpot_s: tpot,
+                    latency_s: f.finish_clock - f.arrival_clock,
+                });
+            }
+
+            if !self.cfg.step_delay.is_zero() && !self.core.is_idle() {
+                std::thread::sleep(self.cfg.step_delay);
+            }
+        }
+        // Dropping the core drops queued tickets and response senders;
+        // blocked `complete()` callers observe RecvError.
+    }
+}
+
+fn build_snapshot(label: &str, snaps: &[ReplicaSnapshot], g: usize) -> Snapshot {
+    let mut workers = Vec::with_capacity(snaps.len() * g);
+    let mut replicas = Vec::with_capacity(snaps.len());
+    let mut all_loads: Vec<f64> = Vec::new();
+    let mut stats = BackendStats { policy: label.to_string(), ..Default::default() };
+    let mut imbalance_sum = 0.0;
+    let mut metered_steps = 0u64;
+    for r in snaps {
+        for gi in 0..g {
+            workers.push(WorkerStatus {
+                id: r.id * g + gi,
+                replica: r.id,
+                load: r.loads[gi],
+                active: r.active_per_worker[gi],
+                free_slots: r.free_per_worker[gi],
+                completed: r.completed_per_worker[gi],
+            });
+        }
+        if r.state != ReplicaState::Removed {
+            all_loads.extend_from_slice(&r.loads);
+        }
+        replicas.push(ReplicaStatus {
+            id: r.id,
+            speed: r.speed,
+            state: r.state.label().to_string(),
+            load: r.loads.iter().sum(),
+            active: r.active_per_worker.iter().sum(),
+            free_slots: r.free_per_worker.iter().sum(),
+            queue_depth: r.queue_depth,
+            completed: r.completed,
+            steps: r.executed,
+            clock_s: r.clock_s,
+            energy_j: r.energy_j,
+        });
+        stats.steps += r.executed;
+        stats.clock_s = stats.clock_s.max(r.clock_s);
+        stats.energy_j += r.energy_j;
+        stats.completed += r.completed;
+        stats.admitted += r.admitted;
+        stats.total_tokens += r.tokens as u64;
+        stats.queue_depth += r.queue_depth;
+        imbalance_sum += r.imbalance_sum;
+        metered_steps += r.steps;
+    }
+    // Fleet-level snapshot imbalance: Eq. 2 over the concatenated
+    // worker loads of every live replica (captures cross-replica skew
+    // on top of within-replica skew).
+    stats.imbalance = imbalance(&all_loads);
+    stats.avg_imbalance = if metered_steps > 0 {
+        imbalance_sum / metered_steps as f64
+    } else {
+        0.0
+    };
+    Snapshot { workers, replicas, stats }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fast_cfg(router: &str, policy: &str) -> FleetBackendConfig {
+        FleetBackendConfig {
+            replicas: 2,
+            g: 2,
+            b: 2,
+            policy: policy.to_string(),
+            router: router.to_string(),
+            step_delay: Duration::ZERO,
+            batch_window: Duration::ZERO,
+            ..FleetBackendConfig::default()
+        }
+    }
+
+    #[test]
+    fn single_completion_roundtrip() {
+        let be = FleetBackend::new(fast_cfg("low", "jsq")).unwrap();
+        let c = be
+            .complete(CompletionRequest {
+                id: 7,
+                prompt_tokens: vec![1, 2, 3],
+                max_tokens: 4,
+            })
+            .unwrap();
+        assert_eq!(c.id, 7);
+        assert_eq!(c.n_tokens, 4);
+        assert!(c.worker < 4, "global worker id across 2x2 workers");
+        assert!(c.tpot_s > 0.0);
+        let st = be.stats();
+        assert_eq!(st.completed, 1);
+        assert!(st.steps >= 4);
+        assert!(st.energy_j > 0.0);
+        let reps = be.replicas();
+        assert_eq!(reps.len(), 2);
+        assert_eq!(reps.iter().map(|r| r.completed).sum::<u64>(), 1);
+    }
+
+    #[test]
+    fn concurrent_completions_all_answered_across_replicas() {
+        let be = Arc::new(FleetBackend::new(fast_cfg("wrr", "jsq")).unwrap());
+        let n = 16u64;
+        let handles: Vec<_> = (0..n)
+            .map(|i| {
+                let be = Arc::clone(&be);
+                std::thread::spawn(move || {
+                    be.complete(CompletionRequest {
+                        id: i,
+                        prompt_tokens: vec![0; 4 + i as usize],
+                        max_tokens: 3,
+                    })
+                    .unwrap()
+                })
+            })
+            .collect();
+        let mut ids: Vec<u64> = handles
+            .into_iter()
+            .map(|h| h.join().unwrap().id)
+            .collect();
+        ids.sort_unstable();
+        assert_eq!(ids, (0..n).collect::<Vec<u64>>());
+        let st = be.stats();
+        assert_eq!(st.completed, n);
+        let per: u64 = be.workers().iter().map(|w| w.completed).sum();
+        assert_eq!(per, n);
+        assert_eq!(st.total_tokens, 3 * n);
+    }
+
+    #[test]
+    fn workers_carry_replica_ids() {
+        let be = FleetBackend::new(fast_cfg("low", "fcfs")).unwrap();
+        let ws = be.workers();
+        assert_eq!(ws.len(), 4);
+        assert_eq!(ws.iter().filter(|w| w.replica == 0).count(), 2);
+        assert_eq!(ws.iter().filter(|w| w.replica == 1).count(), 2);
+        assert!(ws.iter().all(|w| w.free_slots == 2 && w.active == 0));
+        assert!(be.name().starts_with("fleet(2x2)/"));
+    }
+
+    #[test]
+    fn unknown_router_or_policy_rejected() {
+        assert!(FleetBackend::new(fast_cfg("no-such-router", "jsq")).is_err());
+        assert!(FleetBackend::new(fast_cfg("low", "no-such-policy")).is_err());
+    }
+}

@@ -1,0 +1,653 @@
+//! The round-synchronized multi-replica core shared by the offline
+//! fleet driver ([`super::run_fleet`]) and the online gateway backend
+//! ([`super::backend::FleetBackend`]) — the fleet analogue of
+//! [`crate::sim::engine::Engine`], generic over the same ticket/payload
+//! pair.
+//!
+//! Each replica is an independent instance of the incremental barrier
+//! engine with its own tier-2 [`Policy`], [`Recorder`] (virtual clock,
+//! imbalance, energy), rng, and speed factor.  There is **no barrier
+//! across replicas**: per global round, every non-idle replica runs one
+//! admission + barrier step of its own, and its clock advances by its
+//! own `Δt_r = (C + t_ℓ·max_g L_g) / f_r` — a faster replica simply
+//! accumulates less virtual time per step.  Arrivals are routed to a
+//! replica the moment they are submitted (tier-1, [`FleetRouter`]);
+//! once routed, a request's queueing and eventual KV state are sticky
+//! to that replica.
+//!
+//! Lifecycle churn exercises the non-migratable-state constraint:
+//! draining a replica stops new routing and re-routes only its *queued*
+//! requests (admitted ones hold KV and must finish in place); removal
+//! takes effect once the replica has fully drained; added replicas join
+//! the rotation empty.
+
+use anyhow::{anyhow, ensure, Result};
+
+use crate::config::PowerConfig;
+use crate::metrics::{CompletionRecord, Recorder};
+use crate::policies::{by_name, Policy};
+use crate::sim::engine::{Engine, EngineConfig, Finished};
+use crate::util::rng::Rng;
+
+use super::router::{least_outstanding_of, FleetRouter, ReplicaView};
+use super::FleetConfig;
+
+/// Replica lifecycle state.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ReplicaState {
+    /// In the routing rotation.
+    Accepting,
+    /// No new requests; actives run to completion in place.  With
+    /// `remove`, the replica is retired once idle.
+    Draining { remove: bool },
+    /// Retired: excluded from views and rounds (kept for reporting).
+    Removed,
+}
+
+impl ReplicaState {
+    pub fn label(&self) -> &'static str {
+        match self {
+            ReplicaState::Accepting => "accepting",
+            ReplicaState::Draining { .. } => "draining",
+            ReplicaState::Removed => "removed",
+        }
+    }
+}
+
+/// A request that completed during [`FleetCore::run_round`].
+#[derive(Debug)]
+pub struct FleetFinished<P> {
+    pub replica: usize,
+    /// Worker index *within* the replica.
+    pub worker: usize,
+    pub id: u64,
+    pub tokens: u64,
+    pub arrival_clock: f64,
+    pub admit_clock: f64,
+    /// Replica-local virtual clock at completion.
+    pub finish_clock: f64,
+    pub payload: P,
+}
+
+struct ReplicaSlot<T, P> {
+    id: usize,
+    speed: f64,
+    state: ReplicaState,
+    engine: Engine<T, P>,
+    policy: Box<dyn Policy>,
+    recorder: Recorder,
+    rng: Rng,
+    completed_per_worker: Vec<u64>,
+    routed: u64,
+    /// Barrier steps actually executed.
+    executed: u64,
+}
+
+/// Read-only per-replica snapshot (for `/v0/workers`, `/metrics`, and
+/// the offline driver's progress view).
+#[derive(Clone, Debug)]
+pub struct ReplicaSnapshot {
+    pub id: usize,
+    pub speed: f64,
+    pub state: ReplicaState,
+    /// Per-worker loads `L_g`.
+    pub loads: Vec<f64>,
+    pub active_per_worker: Vec<usize>,
+    pub free_per_worker: Vec<usize>,
+    pub completed_per_worker: Vec<u64>,
+    pub queue_depth: usize,
+    pub clock_s: f64,
+    /// Post-warmup steps the recorder has metered.
+    pub steps: u64,
+    pub imbalance_sum: f64,
+    pub tokens: f64,
+    pub energy_j: f64,
+    pub completed: u64,
+    pub admitted: u64,
+    pub routed: u64,
+    pub executed: u64,
+}
+
+/// Final per-replica outcome (consumes the recorder).
+#[derive(Clone, Debug)]
+pub struct ReplicaOutcome {
+    pub id: usize,
+    pub speed: f64,
+    pub state: ReplicaState,
+    pub report: crate::metrics::Report,
+    /// Full virtual clock, warmup included (`Report::wall_time_s` is
+    /// the post-warmup window only).
+    pub clock_s: f64,
+    pub routed: u64,
+    pub admitted: u64,
+    pub completed: u64,
+    pub executed: u64,
+    pub leftover_waiting: usize,
+}
+
+/// The multi-replica core.  See the module docs for the round model.
+pub struct FleetCore<T, P> {
+    cfg: FleetConfig,
+    slots: Vec<ReplicaSlot<T, P>>,
+    router: Box<dyn FleetRouter>,
+    route_rng: Rng,
+    round: u64,
+    /// Requests that arrived while no replica was accepting —
+    /// `(prefill, arrival_step, queue wait already accrued, ticket)` —
+    /// retried before any newer submission and every round (lifecycle
+    /// churn can starve the rotation briefly).  Time spent *parked* is
+    /// not metered: with zero accepting replicas there is no live
+    /// replica clock to charge it to.
+    overflow: Vec<(f64, u64, f64, T)>,
+    submitted: u64,
+    // reused buffers
+    views: Vec<ReplicaView>,
+    /// Cached views go stale only when engines step or the replica set
+    /// changes; per-arrival routing just patches the chosen replica's
+    /// queue fields instead of re-scanning every worker (O(R) per
+    /// arrival, not O(R·G)).
+    views_dirty: bool,
+    fin: Vec<Finished<P>>,
+}
+
+impl<T, P> FleetCore<T, P> {
+    pub fn new(cfg: FleetConfig, router: Box<dyn FleetRouter>) -> Result<FleetCore<T, P>> {
+        ensure!(cfg.g > 0 && cfg.b > 0, "fleet needs g >= 1 and b >= 1");
+        ensure!(!cfg.speeds.is_empty(), "fleet needs at least one replica");
+        let speeds = cfg.speeds.clone();
+        let mut core = FleetCore {
+            route_rng: Rng::new(cfg.seed ^ 0xF1EE7),
+            cfg,
+            slots: Vec::new(),
+            router,
+            round: 0,
+            overflow: Vec::new(),
+            submitted: 0,
+            views: Vec::new(),
+            views_dirty: true,
+            fin: Vec::new(),
+        };
+        for s in speeds {
+            core.add_replica(s)?;
+        }
+        Ok(core)
+    }
+
+    /// Bring up a fresh, empty replica; returns its id.
+    pub fn add_replica(&mut self, speed: f64) -> Result<usize> {
+        ensure!(speed > 0.0, "replica speed must be positive");
+        let id = self.slots.len();
+        let policy = by_name(&self.cfg.policy)
+            .ok_or_else(|| anyhow!("unknown policy {:?}", self.cfg.policy))?;
+        let engine = Engine::new(
+            EngineConfig {
+                g: self.cfg.g,
+                b: self.cfg.b,
+                drift: self.cfg.drift.clone(),
+                view_cap_floor: 4096,
+            },
+            self.cfg.predictor.clone(),
+        );
+        // The speed factor scales Eq. 19 by scaling the recorder's time
+        // constants; a 1.0-speed replica meters exactly like the
+        // single-group Simulator with seed `cfg.seed + id`.
+        let mut recorder = Recorder::new(
+            PowerConfig::a100(),
+            self.cfg.t_token / speed,
+            self.cfg.c_overhead / speed,
+            self.cfg.warmup_rounds,
+        );
+        if self.cfg.record_completions {
+            recorder = recorder.with_completions();
+        }
+        self.slots.push(ReplicaSlot {
+            id,
+            speed,
+            state: ReplicaState::Accepting,
+            engine,
+            policy,
+            recorder,
+            rng: Rng::new((self.cfg.seed + id as u64) ^ 0xB1F0),
+            completed_per_worker: vec![0; self.cfg.g],
+            routed: 0,
+            executed: 0,
+        });
+        self.views_dirty = true;
+        Ok(id)
+    }
+
+    /// Stop routing to a replica; its queued (not yet admitted)
+    /// requests are re-routed through the tier-1 router, its actives
+    /// finish in place (non-migratable KV).  With `remove`, the replica
+    /// is retired once it goes idle.
+    pub fn drain_replica(&mut self, id: usize, remove: bool) {
+        let Some(slot) = self.slots.get_mut(id) else { return };
+        match slot.state {
+            ReplicaState::Removed => return,
+            ReplicaState::Draining { remove: already } => {
+                slot.state = ReplicaState::Draining { remove: remove || already };
+                self.retire_if_drained(id);
+                return;
+            }
+            ReplicaState::Accepting => {
+                slot.state = ReplicaState::Draining { remove };
+            }
+        }
+        let src_clock = slot.recorder.clock();
+        let moved = slot.engine.take_waiting();
+        self.views_dirty = true;
+        for (prefill, arrival_step, clock, ticket) in moved {
+            // Replica clocks are independent timelines, so the source
+            // timestamp itself is meaningless on the destination.  What
+            // *is* transferable is the queue wait already accrued: carry
+            // it as a duration and re-anchor it on the destination's
+            // clock, so pre-drain waiting is preserved without
+            // cross-clock skew.
+            let waited = (src_clock - clock).max(0.0);
+            self.route_in(prefill, arrival_step, waited, ticket);
+        }
+        self.retire_if_drained(id);
+    }
+
+    /// Flip an idle remove-draining replica to `Removed`.
+    fn retire_if_drained(&mut self, id: usize) {
+        let Some(slot) = self.slots.get_mut(id) else { return };
+        if slot.state == (ReplicaState::Draining { remove: true })
+            && slot.engine.is_idle()
+        {
+            slot.state = ReplicaState::Removed;
+            self.views_dirty = true;
+        }
+    }
+
+    pub fn round(&self) -> u64 {
+        self.round
+    }
+
+    pub fn submitted(&self) -> u64 {
+        self.submitted
+    }
+
+    /// At least one replica is accepting new requests.
+    pub fn has_accepting(&self) -> bool {
+        self.slots
+            .iter()
+            .any(|s| s.state == ReplicaState::Accepting)
+    }
+
+    /// Requests parked because no replica was accepting.
+    pub fn overflow_len(&self) -> usize {
+        self.overflow.len()
+    }
+
+    /// All live replicas idle and nothing parked in overflow.
+    pub fn is_idle(&self) -> bool {
+        self.overflow.is_empty()
+            && self.slots.iter().all(|s| {
+                s.state == ReplicaState::Removed || s.engine.is_idle()
+            })
+    }
+
+    /// Jump the round counter over a fleet-wide idle gap (engines skip
+    /// lazily when their next arrival is routed).
+    pub fn skip_to_round(&mut self, round: u64) {
+        debug_assert!(self.is_idle(), "skip_to_round with live requests");
+        debug_assert!(round >= self.round, "skip_to_round must move forward");
+        self.round = round;
+    }
+
+    /// Route and queue one request; returns the chosen replica id, or
+    /// `None` if no replica was accepting (parked in overflow and
+    /// retried each round).  Anything already parked is retried first,
+    /// so overflow survivors keep their arrival-order precedence over
+    /// newer requests.
+    pub fn submit(&mut self, prefill: f64, arrival_step: u64, ticket: T) -> Option<usize> {
+        self.submitted += 1;
+        self.flush_overflow();
+        self.route_in(prefill, arrival_step, 0.0, ticket)
+    }
+
+    /// Retry every parked request, in FIFO order; entries that still
+    /// find no accepting replica return to overflow in the same order.
+    fn flush_overflow(&mut self) {
+        if self.overflow.is_empty() {
+            return;
+        }
+        let pending = std::mem::take(&mut self.overflow);
+        for (prefill, arrival_step, waited, ticket) in pending {
+            self.route_in(prefill, arrival_step, waited, ticket);
+        }
+    }
+
+    /// `waited`: queue wait (virtual seconds) the request has already
+    /// accrued elsewhere (0.0 for fresh arrivals).  It is re-anchored
+    /// on the destination replica's clock — durations transfer across
+    /// the independent per-replica timelines, timestamps do not.
+    fn route_in(
+        &mut self,
+        prefill: f64,
+        arrival_step: u64,
+        waited: f64,
+        ticket: T,
+    ) -> Option<usize> {
+        if self.views_dirty {
+            self.build_views();
+            self.views_dirty = false;
+        }
+        let choice = self.router.route(prefill, &self.views, &mut self.route_rng);
+        let target = match choice {
+            Some(id)
+                if id < self.slots.len()
+                    && self.slots[id].state == ReplicaState::Accepting =>
+            {
+                Some(id)
+            }
+            // Defensive fallback: a router pick that is out of range or
+            // not accepting degrades to least-outstanding.
+            _ => least_outstanding_of(&self.views),
+        };
+        let Some(id) = target else {
+            self.overflow.push((prefill, arrival_step, waited, ticket));
+            return None;
+        };
+        let slot = &mut self.slots[id];
+        if slot.engine.is_idle() && slot.engine.step_index() < arrival_step {
+            slot.engine.skip_to(arrival_step);
+        }
+        let clock = slot.recorder.clock() - waited;
+        slot.engine.submit(prefill, arrival_step, clock, ticket);
+        slot.routed += 1;
+        // Patch the cached view so later arrivals this round see the
+        // new queue state without an O(R·G) rebuild.
+        if let Some(v) = self.views.iter_mut().find(|v| v.id == id) {
+            v.queue_depth += 1;
+            v.queued_prefill += prefill;
+        }
+        Some(id)
+    }
+
+    fn build_views(&mut self) {
+        self.views.clear();
+        for s in &self.slots {
+            if s.state == ReplicaState::Removed {
+                continue;
+            }
+            let loads = s.engine.loads();
+            let max_load = loads.iter().cloned().fold(0.0, f64::max);
+            let min_load = loads.iter().cloned().fold(f64::INFINITY, f64::min);
+            let active = s.engine.active_count();
+            self.views.push(ReplicaView {
+                id: s.id,
+                speed: s.speed,
+                accepting: s.state == ReplicaState::Accepting,
+                workers: self.cfg.g,
+                slots: self.cfg.g * self.cfg.b,
+                free_slots: self.cfg.g * self.cfg.b - active,
+                active,
+                queue_depth: s.engine.waiting_len(),
+                load_sum: loads.iter().sum(),
+                max_load,
+                min_load: if min_load.is_finite() { min_load } else { 0.0 },
+                queued_prefill: s.engine.waiting_prefill(),
+                clock_s: s.recorder.clock(),
+            });
+        }
+    }
+
+    /// Run one global round: every non-idle replica performs one
+    /// admission + barrier step + completion pass on its own clock.
+    /// `open(replica, ticket)` materializes an admitted ticket into
+    /// `(request id, decode length, payload)`.  Completions are
+    /// appended to `out` (cleared first).  Returns the number of
+    /// replicas that executed a step.
+    pub fn run_round<F>(&mut self, open: &mut F, out: &mut Vec<FleetFinished<P>>) -> usize
+    where
+        F: FnMut(usize, T) -> (u64, u64, P),
+    {
+        out.clear();
+        self.flush_overflow();
+        let mut executed_replicas = 0usize;
+        let Self { slots, fin, .. } = self;
+        for slot in slots.iter_mut() {
+            if slot.state == ReplicaState::Removed {
+                continue;
+            }
+            if slot.engine.is_idle() {
+                if slot.state == (ReplicaState::Draining { remove: true }) {
+                    slot.state = ReplicaState::Removed;
+                }
+                continue;
+            }
+            let draining_remove =
+                slot.state == (ReplicaState::Draining { remove: true });
+            let r = slot.id;
+            slot.engine.admit(
+                slot.policy.as_mut(),
+                &mut slot.rng,
+                slot.recorder.clock(),
+                |t| open(r, t),
+            );
+            let active = slot.engine.active_count();
+            if active == 0 {
+                continue; // non-work-conserving policy held everything
+            }
+            slot.recorder
+                .step(slot.engine.step_index(), slot.engine.loads(), active);
+            slot.executed += 1;
+            executed_replicas += 1;
+            slot.engine.advance(fin);
+            let finish_clock = slot.recorder.clock();
+            for f in fin.drain(..) {
+                slot.completed_per_worker[f.worker] += 1;
+                slot.recorder.complete_record(CompletionRecord {
+                    id: f.id,
+                    worker: f.worker,
+                    arrival_clock: f.arrival_clock,
+                    admit_clock: f.admit_clock,
+                    finish_clock,
+                    tokens: f.tokens,
+                });
+                out.push(FleetFinished {
+                    replica: r,
+                    worker: f.worker,
+                    id: f.id,
+                    tokens: f.tokens,
+                    arrival_clock: f.arrival_clock,
+                    admit_clock: f.admit_clock,
+                    finish_clock,
+                    payload: f.payload,
+                });
+            }
+            // Retire in the same round the last active drains, so a
+            // remove-drained replica never ends a run still "draining".
+            if draining_remove && slot.engine.is_idle() {
+                slot.state = ReplicaState::Removed;
+            }
+        }
+        self.round += 1;
+        self.views_dirty = true;
+        executed_replicas
+    }
+
+    /// Per-replica snapshots (includes removed replicas, for totals).
+    pub fn snapshot(&self) -> Vec<ReplicaSnapshot> {
+        self.slots
+            .iter()
+            .map(|s| ReplicaSnapshot {
+                id: s.id,
+                speed: s.speed,
+                state: s.state,
+                loads: s.engine.loads().to_vec(),
+                active_per_worker: (0..self.cfg.g)
+                    .map(|g| s.engine.worker_active(g))
+                    .collect(),
+                free_per_worker: (0..self.cfg.g)
+                    .map(|g| s.engine.free_slots(g))
+                    .collect(),
+                completed_per_worker: s.completed_per_worker.clone(),
+                queue_depth: s.engine.waiting_len(),
+                clock_s: s.recorder.clock(),
+                steps: s.recorder.steps_recorded(),
+                imbalance_sum: s.recorder.imbalance_sum(),
+                tokens: s.recorder.tokens_recorded(),
+                energy_j: s.recorder.energy.total_energy_j(),
+                completed: s.engine.completed(),
+                admitted: s.engine.admitted(),
+                routed: s.routed,
+                executed: s.executed,
+            })
+            .collect()
+    }
+
+    /// Finish every replica's recorder and return the outcomes.
+    pub fn into_results(self) -> Vec<ReplicaOutcome> {
+        self.slots
+            .into_iter()
+            .map(|s| ReplicaOutcome {
+                id: s.id,
+                speed: s.speed,
+                state: s.state,
+                clock_s: s.recorder.clock(),
+                routed: s.routed,
+                admitted: s.engine.admitted(),
+                completed: s.engine.completed(),
+                executed: s.executed,
+                leftover_waiting: s.engine.waiting_len(),
+                report: s.recorder.finish(),
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fleet::router::WeightedRoundRobin;
+    use crate::fleet::FleetConfig;
+
+    fn core(replicas: usize) -> FleetCore<u64, ()> {
+        FleetCore::new(
+            FleetConfig::uniform(replicas, 2, 2, "fcfs"),
+            Box::new(WeightedRoundRobin::new()),
+        )
+        .unwrap()
+    }
+
+    /// `open` for tests: ticket encodes (id, decode_len) as id*1000+o.
+    fn open_ticket(_r: usize, t: u64) -> (u64, u64, ()) {
+        (t / 1000, t % 1000, ())
+    }
+
+    #[test]
+    fn routes_and_completes_across_replicas() {
+        let mut c = core(2);
+        assert!(c.is_idle());
+        for i in 0..4u64 {
+            let picked = c.submit(10.0, 0, i * 1000 + 2).unwrap();
+            assert!(picked < 2);
+        }
+        let mut out = Vec::new();
+        c.run_round(&mut open_ticket, &mut out); // step 0: all survive
+        assert!(out.is_empty());
+        c.run_round(&mut open_ticket, &mut out); // step 1: o=2 completes
+        assert_eq!(out.len(), 4);
+        assert!(c.is_idle());
+        let snaps = c.snapshot();
+        assert_eq!(snaps.len(), 2);
+        // WRR with equal speeds alternates: two requests per replica
+        for s in &snaps {
+            assert_eq!(s.completed, 2, "replica {}", s.id);
+            assert_eq!(s.routed, 2);
+        }
+    }
+
+    #[test]
+    fn drain_reroutes_waiting_but_not_actives() {
+        let mut c = core(2);
+        // fill replica capacities (2 workers × 2 slots each = 4/replica)
+        for i in 0..10u64 {
+            c.submit(5.0, 0, i * 1000 + 5);
+        }
+        let mut out = Vec::new();
+        c.run_round(&mut open_ticket, &mut out);
+        let before = c.snapshot();
+        let waiting0 = before[0].queue_depth;
+        assert!(waiting0 > 0, "replica 0 should have a backlog");
+        let active0 = 4 - before[0].free_per_worker.iter().sum::<usize>();
+        assert_eq!(active0, 4);
+
+        c.drain_replica(0, false);
+        let after = c.snapshot();
+        assert_eq!(after[0].queue_depth, 0, "waiting re-routed away");
+        assert_eq!(
+            4 - after[0].free_per_worker.iter().sum::<usize>(),
+            4,
+            "actives stay in place (non-migratable)"
+        );
+        assert_eq!(after[1].queue_depth, before[1].queue_depth + waiting0);
+
+        // everything still completes; drained replica gets nothing new
+        let mut rounds = 0;
+        while !c.is_idle() && rounds < 100 {
+            c.run_round(&mut open_ticket, &mut out);
+            rounds += 1;
+        }
+        let fin = c.snapshot();
+        assert_eq!(fin[0].completed + fin[1].completed, 10);
+        assert_eq!(fin[0].state, ReplicaState::Draining { remove: false });
+    }
+
+    #[test]
+    fn remove_retires_once_idle_and_overflow_waits_for_add() {
+        let mut c = core(1);
+        c.drain_replica(0, true);
+        // no accepting replica: the request parks in overflow
+        assert!(c.submit(3.0, 0, 1001).is_none());
+        assert!(!c.is_idle());
+        let mut out = Vec::new();
+        c.run_round(&mut open_ticket, &mut out);
+        assert_eq!(c.snapshot()[0].state, ReplicaState::Removed);
+        assert!(out.is_empty());
+        // a fresh replica picks the overflow up on the next round
+        let id = c.add_replica(1.0).unwrap();
+        assert_eq!(id, 1);
+        let mut rounds = 0;
+        while !c.is_idle() && rounds < 10 {
+            c.run_round(&mut open_ticket, &mut out);
+            rounds += 1;
+        }
+        let snaps = c.snapshot();
+        assert_eq!(snaps[1].completed, 1);
+        assert_eq!(c.submitted(), 1);
+    }
+
+    #[test]
+    fn speed_scales_the_replica_clock() {
+        let cfg = FleetConfig {
+            speeds: vec![1.0, 2.0],
+            ..FleetConfig::uniform(2, 1, 1, "fcfs")
+        };
+        let mut c: FleetCore<u64, ()> =
+            FleetCore::new(cfg, Box::new(WeightedRoundRobin::new())).unwrap();
+        // one identical request per replica
+        c.submit(10.0, 0, 1003);
+        c.submit(10.0, 0, 2003);
+        let mut out = Vec::new();
+        let mut rounds = 0;
+        while !c.is_idle() && rounds < 10 {
+            c.run_round(&mut open_ticket, &mut out);
+            rounds += 1;
+        }
+        let snaps = c.snapshot();
+        assert_eq!(snaps[0].completed, 1);
+        assert_eq!(snaps[1].completed, 1);
+        let slow = snaps.iter().find(|s| s.speed == 1.0).unwrap();
+        let fast = snaps.iter().find(|s| s.speed == 2.0).unwrap();
+        assert!(
+            (slow.clock_s - 2.0 * fast.clock_s).abs() < 1e-9 * slow.clock_s,
+            "2x speed halves the virtual clock: {} vs {}",
+            slow.clock_s,
+            fast.clock_s
+        );
+    }
+}

@@ -1,0 +1,449 @@
+//! Fleet subsystem: two-level routing across data-parallel barrier-group
+//! replicas — the step from "one group of G workers" to "a serving
+//! fleet of R groups".
+//!
+//! ```text
+//!                        ┌──────────────────────────────┐
+//!        arrivals ──────►│  tier 1: FleetRouter          │
+//!                        │  wrr | low | powd:<d> | bfio2 │
+//!                        └──────┬───────┬───────┬───────┘
+//!                        sticky │       │       │ routing
+//!                     ┌─────────┘       │       └─────────┐
+//!                     ▼                 ▼                 ▼
+//!              ┌─────────────┐   ┌─────────────┐   ┌─────────────┐
+//!              │ replica 0   │   │ replica 1   │   │ replica R−1 │
+//!              │ speed f_0   │   │ speed f_1   │   │ speed f_R−1 │
+//!              │ sim::Engine │   │ sim::Engine │   │ sim::Engine │
+//!              │ tier 2:     │   │ (own Policy,│   │  (drain /   │
+//!              │ Policy      │   │  clock, rng)│   │  add / rm)  │
+//!              │ G workers×B │   │ G workers×B │   │ G workers×B │
+//!              └─────────────┘   └─────────────┘   └─────────────┘
+//! ```
+//!
+//! Each replica is an independent instance of the shared incremental
+//! barrier engine ([`crate::sim::engine`]) with its own tier-2
+//! admission [`crate::policies::Policy`], virtual clock (Eq. 19 scaled
+//! by a heterogeneous speed factor), and energy/imbalance recorder.
+//! The cross-replica tier is its own load-balancing problem: requests
+//! are routed exactly once, at arrival, by a [`router::FleetRouter`],
+//! and are sticky to their replica thereafter (KV state does not
+//! migrate).  Replica lifecycle events — drain, add, remove mid-trace
+//! — exercise that stickiness under churn: draining re-routes only
+//! *queued* requests, actives finish in place.
+//!
+//! Entry points:
+//! * [`run_fleet`] — offline driver over a trace (the `bfio fleet`
+//!   experiment and `benches/fleet.rs` build on it);
+//! * [`backend::FleetBackend`] — online [`crate::gateway`] backend, so
+//!   the HTTP gateway serves over a fleet with per-replica
+//!   `/v0/workers` entries and Prometheus series.
+
+pub mod backend;
+pub mod core;
+pub mod router;
+
+pub use self::backend::{FleetBackend, FleetBackendConfig};
+pub use self::core::{
+    FleetCore, FleetFinished, ReplicaOutcome, ReplicaSnapshot, ReplicaState,
+};
+pub use self::router::{router_by_name, FleetRouter, ReplicaView};
+
+use anyhow::{anyhow, Result};
+
+use crate::config::SimConfig;
+use crate::metrics::Report;
+use crate::sim::predictor::Predictor;
+use crate::workload::{Drift, Request};
+
+/// Fleet shape and per-replica engine parameters.
+#[derive(Clone, Debug)]
+pub struct FleetConfig {
+    /// Workers `G` per replica.
+    pub g: usize,
+    /// Per-worker batch capacity `B`.
+    pub b: usize,
+    /// Tier-2 admission policy per replica (see
+    /// [`crate::policies::by_name`]); each replica holds its own
+    /// stateful instance.
+    pub policy: String,
+    /// Workload drift `(δ_k)`, age-indexed.
+    pub drift: Drift,
+    /// Fixed per-step overhead `C` (seconds) before speed scaling.
+    pub c_overhead: f64,
+    /// Per-token latency `t_ℓ` (seconds) before speed scaling.
+    pub t_token: f64,
+    /// Initial replica speed factors; length = initial replica count.
+    /// Replica `r` runs its barrier steps in `Δt / speeds[r]`.
+    pub speeds: Vec<f64>,
+    pub seed: u64,
+    /// Hard cap on global rounds (0 = run until the trace drains).
+    pub max_rounds: u64,
+    /// Rounds excluded from steady-state metrics.
+    pub warmup_rounds: u64,
+    /// Keep per-request completion records in each replica's report.
+    pub record_completions: bool,
+    pub predictor: Predictor,
+}
+
+impl FleetConfig {
+    /// A homogeneous fleet: `replicas` × (`g` workers × `b` slots) at
+    /// speed 1.0, paper-calibrated time constants.
+    pub fn uniform(replicas: usize, g: usize, b: usize, policy: &str) -> FleetConfig {
+        let sim = SimConfig::default();
+        FleetConfig {
+            g,
+            b,
+            policy: policy.to_string(),
+            drift: Drift::Unit,
+            c_overhead: sim.c_overhead,
+            t_token: sim.t_token,
+            speeds: vec![1.0; replicas],
+            seed: 0,
+            max_rounds: 0,
+            warmup_rounds: 0,
+            record_completions: false,
+            predictor: Predictor::Oracle,
+        }
+    }
+
+    /// Total batch slots across the initial fleet.
+    pub fn slots(&self) -> usize {
+        self.speeds.len() * self.g * self.b
+    }
+
+    /// Construct a tier-1 router parameterized by this config's Eq. 19
+    /// constants.
+    pub fn router(&self, name: &str) -> Option<Box<dyn FleetRouter>> {
+        router_by_name(name, self.c_overhead, self.t_token)
+    }
+}
+
+/// A replica lifecycle event, applied when the global round reaches
+/// `round`.
+#[derive(Clone, Debug)]
+pub enum FleetEvent {
+    /// Bring up a fresh replica at the given speed.
+    Add { round: u64, speed: f64 },
+    /// Stop routing to `replica`; queued requests re-route, actives
+    /// finish in place.
+    Drain { round: u64, replica: usize },
+    /// Drain `replica` and retire it once idle.
+    Remove { round: u64, replica: usize },
+}
+
+impl FleetEvent {
+    pub fn round(&self) -> u64 {
+        match *self {
+            FleetEvent::Add { round, .. }
+            | FleetEvent::Drain { round, .. }
+            | FleetEvent::Remove { round, .. } => round,
+        }
+    }
+}
+
+/// Aggregate outcome of one offline fleet run.
+#[derive(Clone, Debug)]
+pub struct FleetResult {
+    /// Router display name (e.g. `BF-IO-2L`).
+    pub router: String,
+    /// Tier-2 policy display name.
+    pub policy: String,
+    /// Global rounds elapsed (idle gaps skipped).
+    pub rounds: u64,
+    /// Σ barrier steps actually executed across replicas.
+    pub steps: u64,
+    pub per_replica: Vec<ReplicaOutcome>,
+    pub submitted: u64,
+    pub completed: u64,
+    /// Post-warmup tokens across replicas.
+    pub total_tokens: f64,
+    /// Max replica virtual clock — the fleet's completion makespan.
+    pub makespan_s: f64,
+    /// Max/mean replica clock: the cross-replica slack the tier-1
+    /// router is responsible for (1.0 = perfectly even).
+    pub clock_ratio: f64,
+    pub energy_j: f64,
+    /// Step-weighted mean of the within-replica AvgImb (Eq. 20).
+    pub avg_imbalance: f64,
+    /// Completion-weighted mean TPOT (Eq. 22).
+    pub tpot_s: f64,
+    pub mean_queue_wait_s: f64,
+    /// Post-warmup tokens over the slowest replica's metered window.
+    pub throughput_tps: f64,
+    pub leftover_waiting: usize,
+}
+
+/// Run `trace` (sorted by `arrival_step`) through an R-replica fleet
+/// under the named tier-1 router, applying `events` (sorted or not) at
+/// their rounds.  Arrival steps index global rounds; each request is
+/// routed once, at arrival.
+pub fn run_fleet(
+    cfg: &FleetConfig,
+    router_name: &str,
+    trace: &[Request],
+    events: &[FleetEvent],
+) -> Result<FleetResult> {
+    let router = cfg
+        .router(router_name)
+        .ok_or_else(|| anyhow!("unknown fleet router {router_name:?}"))?;
+    let router_label = router.name();
+    let policy_label = crate::policies::by_name(&cfg.policy)
+        .ok_or_else(|| anyhow!("unknown policy {:?}", cfg.policy))?
+        .name();
+    let mut core: FleetCore<u32, ()> = FleetCore::new(cfg.clone(), router)?;
+
+    let mut events: Vec<FleetEvent> = events.to_vec();
+    events.sort_by_key(FleetEvent::round);
+    let mut ev = 0usize;
+    let mut ptr = 0usize;
+    let mut out: Vec<FleetFinished<()>> = Vec::new();
+
+    let apply_due = |core: &mut FleetCore<u32, ()>, ev: &mut usize| {
+        while *ev < events.len() && events[*ev].round() <= core.round() {
+            match events[*ev] {
+                FleetEvent::Add { speed, .. } => {
+                    let _ = core.add_replica(speed);
+                }
+                FleetEvent::Drain { replica, .. } => {
+                    core.drain_replica(replica, false);
+                }
+                FleetEvent::Remove { replica, .. } => {
+                    core.drain_replica(replica, true);
+                }
+            }
+            *ev += 1;
+        }
+    };
+
+    loop {
+        apply_due(&mut core, &mut ev);
+
+        // Fleet-wide idle gap: jump straight to the next arrival or
+        // lifecycle event (no replica charges time for empty rounds).
+        if core.is_idle() {
+            let next_arr = trace.get(ptr).map(|r| r.arrival_step);
+            let next_ev = events.get(ev).map(FleetEvent::round);
+            let next = match (next_arr, next_ev) {
+                (None, None) => break,
+                (Some(a), None) => a,
+                (None, Some(e)) => e,
+                (Some(a), Some(e)) => a.min(e),
+            };
+            if cfg.max_rounds > 0 && next >= cfg.max_rounds {
+                break;
+            }
+            if next > core.round() {
+                core.skip_to_round(next);
+                apply_due(&mut core, &mut ev);
+            }
+        }
+
+        while ptr < trace.len() && trace[ptr].arrival_step <= core.round() {
+            core.submit(trace[ptr].prefill, trace[ptr].arrival_step, ptr as u32);
+            ptr += 1;
+        }
+
+        if core.is_idle() && ptr >= trace.len() && ev >= events.len() {
+            break; // drained
+        }
+
+        let stepped = core.run_round(
+            &mut |_, idx| {
+                let r = &trace[idx as usize];
+                (r.id, r.decode_len, ())
+            },
+            &mut out,
+        );
+
+        if cfg.max_rounds > 0 && core.round() >= cfg.max_rounds {
+            break;
+        }
+        // Wedged: requests parked in overflow, every replica drained,
+        // and no lifecycle event is coming to unwedge it.
+        if stepped == 0
+            && !core.is_idle()
+            && !core.has_accepting()
+            && ptr >= trace.len()
+            && ev >= events.len()
+        {
+            break;
+        }
+    }
+
+    let rounds = core.round();
+    let submitted = core.submitted();
+    let overflow = core.overflow_len();
+    let per_replica = core.into_results();
+    let mut res = aggregate(
+        router_label,
+        policy_label,
+        rounds,
+        submitted,
+        per_replica,
+    );
+    res.leftover_waiting += overflow;
+    Ok(res)
+}
+
+fn aggregate(
+    router: String,
+    policy: String,
+    rounds: u64,
+    submitted: u64,
+    per_replica: Vec<ReplicaOutcome>,
+) -> FleetResult {
+    let completed: u64 = per_replica.iter().map(|r| r.completed).sum();
+    let steps: u64 = per_replica.iter().map(|r| r.executed).sum();
+    let leftover: usize = per_replica.iter().map(|r| r.leftover_waiting).sum();
+    let total_tokens: f64 =
+        per_replica.iter().map(|r| r.report.total_tokens).sum();
+    let energy_j: f64 =
+        per_replica.iter().map(|r| r.report.total_energy_j).sum();
+    let makespan_s = per_replica
+        .iter()
+        .map(|r| r.clock_s)
+        .fold(0.0, f64::max);
+    let mean_clock = if per_replica.is_empty() {
+        0.0
+    } else {
+        per_replica.iter().map(|r| r.clock_s).sum::<f64>() / per_replica.len() as f64
+    };
+    let clock_ratio = if mean_clock > 0.0 { makespan_s / mean_clock } else { 1.0 };
+    let metered: u64 = per_replica.iter().map(|r| r.report.steps).sum();
+    let avg_imbalance = if metered > 0 {
+        per_replica
+            .iter()
+            .map(|r| r.report.avg_imbalance * r.report.steps as f64)
+            .sum::<f64>()
+            / metered as f64
+    } else {
+        0.0
+    };
+    let tpot_s = weighted_by_completed(&per_replica, |r| r.tpot_s);
+    let mean_queue_wait_s =
+        weighted_by_completed(&per_replica, |r| r.mean_queue_wait_s);
+    let window = per_replica
+        .iter()
+        .map(|r| r.report.wall_time_s)
+        .fold(0.0, f64::max);
+    let throughput_tps = if window > 0.0 { total_tokens / window } else { 0.0 };
+    FleetResult {
+        router,
+        policy,
+        rounds,
+        steps,
+        per_replica,
+        submitted,
+        completed,
+        total_tokens,
+        makespan_s,
+        clock_ratio,
+        energy_j,
+        avg_imbalance,
+        tpot_s,
+        mean_queue_wait_s,
+        throughput_tps,
+        leftover_waiting: leftover,
+    }
+}
+
+fn weighted_by_completed<F: Fn(&Report) -> f64>(
+    per_replica: &[ReplicaOutcome],
+    f: F,
+) -> f64 {
+    let n: u64 = per_replica.iter().map(|r| r.completed).sum();
+    if n == 0 {
+        return 0.0;
+    }
+    per_replica
+        .iter()
+        .map(|r| f(&r.report) * r.completed as f64)
+        .sum::<f64>()
+        / n as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+    use crate::workload::{generate_trace, ArrivalProcess, GeometricSampler};
+
+    fn small_trace(seed: u64, steps: u64) -> Vec<Request> {
+        let sampler = GeometricSampler::new(5, 50, 0.3);
+        let arrivals = ArrivalProcess::Fixed { per_step: 3, initial_backlog: 12 };
+        let mut rng = Rng::new(seed);
+        generate_trace(&sampler, &arrivals, steps, &mut rng)
+    }
+
+    #[test]
+    fn drains_and_completes_under_every_router() {
+        let trace = small_trace(1, 20);
+        for router in ["wrr", "low", "powd:2", "bfio2"] {
+            let cfg = FleetConfig::uniform(3, 2, 2, "jsq");
+            let res = run_fleet(&cfg, router, &trace, &[]).unwrap();
+            assert_eq!(res.completed as usize, trace.len(), "router {router}");
+            assert_eq!(res.submitted as usize, trace.len());
+            assert_eq!(res.leftover_waiting, 0);
+            assert!(res.makespan_s > 0.0);
+            assert!(res.clock_ratio >= 1.0 - 1e-12);
+            assert!(res.energy_j > 0.0);
+            let routed: u64 = res.per_replica.iter().map(|r| r.routed).sum();
+            assert_eq!(routed as usize, trace.len());
+        }
+    }
+
+    #[test]
+    fn unknown_router_and_policy_rejected() {
+        let trace = small_trace(2, 5);
+        let cfg = FleetConfig::uniform(2, 2, 2, "jsq");
+        assert!(run_fleet(&cfg, "nope", &trace, &[]).is_err());
+        let bad = FleetConfig { policy: "nope".into(), ..cfg };
+        assert!(run_fleet(&bad, "wrr", &trace, &[]).is_err());
+    }
+
+    #[test]
+    fn idle_gaps_skipped_fleet_wide() {
+        // Burst at step 0, silence, burst at step 500: rounds stay far
+        // below 500 in executed steps, and everything completes.
+        let mut trace = small_trace(3, 1);
+        let burst = small_trace(4, 1);
+        let base_id = trace.len() as u64;
+        for (i, r) in burst.into_iter().enumerate() {
+            trace.push(Request {
+                id: base_id + i as u64,
+                arrival_step: 500,
+                ..r
+            });
+        }
+        let cfg = FleetConfig::uniform(2, 2, 4, "least");
+        let res = run_fleet(&cfg, "low", &trace, &[]).unwrap();
+        assert_eq!(res.completed as usize, trace.len());
+        assert!(res.rounds >= 500, "round counter reaches the burst");
+        assert!(res.steps < 200, "idle gap not simulated: {}", res.steps);
+    }
+
+    #[test]
+    fn max_rounds_caps_run() {
+        let trace = small_trace(5, 50);
+        let cfg = FleetConfig {
+            max_rounds: 10,
+            ..FleetConfig::uniform(2, 2, 2, "fcfs")
+        };
+        let res = run_fleet(&cfg, "wrr", &trace, &[]).unwrap();
+        assert_eq!(res.rounds, 10);
+        assert!(res.completed < trace.len() as u64);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let trace = small_trace(6, 20);
+        let cfg = FleetConfig::uniform(3, 2, 2, "jsq");
+        let a = run_fleet(&cfg, "powd:2", &trace, &[]).unwrap();
+        let b = run_fleet(&cfg, "powd:2", &trace, &[]).unwrap();
+        assert_eq!(a.makespan_s, b.makespan_s);
+        assert_eq!(a.avg_imbalance, b.avg_imbalance);
+        let ra: Vec<u64> = a.per_replica.iter().map(|r| r.routed).collect();
+        let rb: Vec<u64> = b.per_replica.iter().map(|r| r.routed).collect();
+        assert_eq!(ra, rb);
+    }
+}

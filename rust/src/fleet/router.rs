@@ -1,0 +1,416 @@
+//! Tier-1 (cross-replica) routing: pick the barrier group an arriving
+//! request joins.  Assignments at this tier are as sticky as at the
+//! worker tier — once a request is queued on a replica its eventual KV
+//! state lives there — so the router sees only aggregate per-replica
+//! signals (outstanding work, queue depth, speed), never per-request
+//! detail inside a replica.  Within the chosen replica, admission is
+//! tier-2: the existing [`crate::policies::Policy`] registry.
+//!
+//! Routers provided (the cross-replica analogues of the worker-tier
+//! baselines, per the data-parallel routing literature):
+//!
+//! * [`WeightedRoundRobin`] — smooth WRR, weights = speed factors;
+//! * [`LeastOutstanding`] — least outstanding work (resident KV +
+//!   queued prefill) normalized by replica speed;
+//! * [`PowerOfDReplicas`] — sample `d` replicas, pick the least
+//!   outstanding of the sample;
+//! * [`TwoLevelBfIo`] — the BF-IO principle lifted to tier 1: route to
+//!   the replica whose *marginal Eq. 19 step time* after greedily
+//!   placing the request on its least-loaded worker is lowest
+//!   (speed-normalized, with a queueing penalty when the replica has no
+//!   free slot).
+
+use crate::util::rng::Rng;
+
+/// One replica's state as visible to the tier-1 router.
+#[derive(Clone, Debug, Default)]
+pub struct ReplicaView {
+    pub id: usize,
+    /// Relative execution speed factor `f_r` (step time divided by it).
+    pub speed: f64,
+    /// Draining/removed replicas accept no new requests.
+    pub accepting: bool,
+    /// Workers `G` in this replica.
+    pub workers: usize,
+    /// Total batch slots `G·B`.
+    pub slots: usize,
+    pub free_slots: usize,
+    pub active: usize,
+    /// Requests queued (routed here, not yet admitted).
+    pub queue_depth: usize,
+    /// Σ_g L_g — resident KV across the replica's workers.
+    pub load_sum: f64,
+    pub max_load: f64,
+    pub min_load: f64,
+    /// Σ prefill of queued (not yet admitted) requests.
+    pub queued_prefill: f64,
+    /// Replica-local virtual clock, seconds.
+    pub clock_s: f64,
+}
+
+impl ReplicaView {
+    /// Outstanding work normalized by speed: resident KV plus queued
+    /// prefill, divided by the speed factor.
+    pub fn outstanding(&self) -> f64 {
+        (self.load_sum + self.queued_prefill) / self.speed.max(1e-12)
+    }
+}
+
+/// A tier-1 routing policy.  `route` returns a [`ReplicaView::id`];
+/// returning `None`, an unknown id, or a non-accepting id makes the
+/// fleet core fall back to the accepting replica with the least
+/// outstanding work (so a buggy router degrades, never drops).
+pub trait FleetRouter: Send {
+    fn name(&self) -> String;
+
+    fn route(
+        &mut self,
+        prefill: f64,
+        replicas: &[ReplicaView],
+        rng: &mut Rng,
+    ) -> Option<usize>;
+}
+
+/// Accepting replica with the least speed-normalized outstanding work
+/// (ties broken by lower id) — also the core's fallback rule.
+pub fn least_outstanding_of(replicas: &[ReplicaView]) -> Option<usize> {
+    replicas
+        .iter()
+        .filter(|v| v.accepting)
+        .min_by(|a, b| a.outstanding().total_cmp(&b.outstanding()))
+        .map(|v| v.id)
+}
+
+/// Smooth weighted round-robin (the nginx algorithm) with replica speed
+/// factors as weights: over any window, replica `r` receives a share of
+/// requests proportional to `f_r`, without bursts.
+#[derive(Debug, Default)]
+pub struct WeightedRoundRobin {
+    /// Current (smoothed) weight per replica id; grown on demand so
+    /// lifecycle-added replicas join the rotation.
+    current: Vec<f64>,
+}
+
+impl WeightedRoundRobin {
+    pub fn new() -> WeightedRoundRobin {
+        WeightedRoundRobin::default()
+    }
+}
+
+impl FleetRouter for WeightedRoundRobin {
+    fn name(&self) -> String {
+        "WRR".to_string()
+    }
+
+    fn route(
+        &mut self,
+        _prefill: f64,
+        replicas: &[ReplicaView],
+        _rng: &mut Rng,
+    ) -> Option<usize> {
+        let max_id = replicas.iter().map(|v| v.id).max()?;
+        if self.current.len() <= max_id {
+            self.current.resize(max_id + 1, 0.0);
+        }
+        let mut total = 0.0;
+        let mut best: Option<usize> = None;
+        for v in replicas.iter().filter(|v| v.accepting) {
+            total += v.speed;
+            self.current[v.id] += v.speed;
+            let better = match best {
+                None => true,
+                Some(b) => self.current[v.id] > self.current[b],
+            };
+            if better {
+                best = Some(v.id);
+            }
+        }
+        let picked = best?;
+        self.current[picked] -= total;
+        Some(picked)
+    }
+}
+
+/// Least-outstanding-work routing: the tier-1 analogue of the
+/// worker-tier LeastLoaded baseline, but speed-aware — a 2× replica
+/// holding 2× the work is as attractive as a 1× replica holding 1×.
+#[derive(Clone, Debug, Default)]
+pub struct LeastOutstanding;
+
+impl FleetRouter for LeastOutstanding {
+    fn name(&self) -> String {
+        "LeastOutstanding".to_string()
+    }
+
+    fn route(
+        &mut self,
+        prefill: f64,
+        replicas: &[ReplicaView],
+        _rng: &mut Rng,
+    ) -> Option<usize> {
+        replicas
+            .iter()
+            .filter(|v| v.accepting)
+            .min_by(|a, b| {
+                let ka = a.outstanding() + prefill / a.speed.max(1e-12);
+                let kb = b.outstanding() + prefill / b.speed.max(1e-12);
+                ka.total_cmp(&kb)
+            })
+            .map(|v| v.id)
+    }
+}
+
+/// Power-of-d replicas: sample `d` accepting replicas uniformly, route
+/// to the least outstanding of the sample — O(d) state reads per
+/// request, the classic coordination/quality trade at fleet scale.
+#[derive(Clone, Debug)]
+pub struct PowerOfDReplicas {
+    pub d: usize,
+}
+
+impl PowerOfDReplicas {
+    pub fn new(d: usize) -> PowerOfDReplicas {
+        assert!(d >= 1);
+        PowerOfDReplicas { d }
+    }
+}
+
+impl FleetRouter for PowerOfDReplicas {
+    fn name(&self) -> String {
+        format!("Pow{}Replicas", self.d)
+    }
+
+    fn route(
+        &mut self,
+        _prefill: f64,
+        replicas: &[ReplicaView],
+        rng: &mut Rng,
+    ) -> Option<usize> {
+        let accepting: Vec<&ReplicaView> =
+            replicas.iter().filter(|v| v.accepting).collect();
+        if accepting.is_empty() {
+            return None;
+        }
+        let picks = rng.sample_distinct(accepting.len(), self.d.min(accepting.len()));
+        picks
+            .iter()
+            .map(|&i| accepting[i])
+            .min_by(|a, b| a.outstanding().total_cmp(&b.outstanding()))
+            .map(|v| v.id)
+    }
+}
+
+/// Two-level BF-IO, tier 1: minimize the *marginal Eq. 19 objective*.
+/// The replica's next step costs `Δt_r = (C + t_ℓ·max_g L_g) / f_r`
+/// (Eq. 19 scaled by the speed factor); routing this request to `r` and
+/// greedily seeding it on the least-loaded worker makes that
+/// `(C + t_ℓ·max(L_max, L_min + s)) / f_r`.  When `r` has no free slot
+/// the request must wait, so an expected queueing penalty of the current
+/// step time times the queue-per-slot backlog is added.  Ties (the
+/// common "fits below the max everywhere" case) break on least
+/// outstanding work — the same lexicographic refinement the worker-tier
+/// BF-IO greedy uses.  Tier-2 placement inside the replica is then the
+/// replica's own `Policy` (typically BF-IO(H)).
+#[derive(Clone, Debug)]
+pub struct TwoLevelBfIo {
+    pub c_overhead: f64,
+    pub t_token: f64,
+}
+
+impl TwoLevelBfIo {
+    pub fn new(c_overhead: f64, t_token: f64) -> TwoLevelBfIo {
+        TwoLevelBfIo { c_overhead, t_token }
+    }
+
+    /// Marginal Eq. 19 step time of routing a prefill-`s` request here.
+    fn marginal(&self, v: &ReplicaView, s: f64) -> f64 {
+        let speed = v.speed.max(1e-12);
+        let projected = v.max_load.max(v.min_load + s);
+        let dt = (self.c_overhead + self.t_token * projected) / speed;
+        if v.free_slots == 0 {
+            let cur = (self.c_overhead + self.t_token * v.max_load) / speed;
+            let backlog_rounds = 1.0 + v.queue_depth as f64 / v.slots.max(1) as f64;
+            dt + cur * backlog_rounds
+        } else {
+            dt
+        }
+    }
+}
+
+impl FleetRouter for TwoLevelBfIo {
+    fn name(&self) -> String {
+        "BF-IO-2L".to_string()
+    }
+
+    fn route(
+        &mut self,
+        prefill: f64,
+        replicas: &[ReplicaView],
+        _rng: &mut Rng,
+    ) -> Option<usize> {
+        let eps = 1e-12;
+        let mut best: Option<(&ReplicaView, f64)> = None;
+        for v in replicas.iter().filter(|v| v.accepting) {
+            let m = self.marginal(v, prefill);
+            let better = match best {
+                None => true,
+                Some((bv, bm)) => {
+                    m < bm - eps
+                        || (m < bm + eps && v.outstanding() < bv.outstanding())
+                }
+            };
+            if better {
+                best = Some((v, m));
+            }
+        }
+        best.map(|(v, _)| v.id)
+    }
+}
+
+/// Construct a fleet router by name:
+/// `wrr | low | powd:<d> | bfio2`.  `c_overhead`/`t_token` parameterize
+/// the Eq. 19 objective of `bfio2`.
+pub fn router_by_name(
+    name: &str,
+    c_overhead: f64,
+    t_token: f64,
+) -> Option<Box<dyn FleetRouter>> {
+    match name {
+        "wrr" | "weighted-rr" => Some(Box::new(WeightedRoundRobin::new())),
+        "low" | "least-outstanding" => Some(Box::new(LeastOutstanding)),
+        "bfio2" | "two-level-bfio" => {
+            Some(Box::new(TwoLevelBfIo::new(c_overhead, t_token)))
+        }
+        _ => name.strip_prefix("powd:").and_then(|d| {
+            d.parse()
+                .ok()
+                .filter(|&d| d >= 1) // powd:0 is rejected, not a panic
+                .map(|d| {
+                    Box::new(PowerOfDReplicas::new(d)) as Box<dyn FleetRouter>
+                })
+        }),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn view(id: usize, speed: f64, load_sum: f64) -> ReplicaView {
+        ReplicaView {
+            id,
+            speed,
+            accepting: true,
+            workers: 2,
+            slots: 4,
+            free_slots: 4,
+            active: 0,
+            queue_depth: 0,
+            load_sum,
+            max_load: load_sum / 2.0,
+            min_load: load_sum / 2.0,
+            queued_prefill: 0.0,
+            clock_s: 0.0,
+        }
+    }
+
+    #[test]
+    fn registry_constructs_all() {
+        for n in ["wrr", "low", "powd:2", "bfio2"] {
+            assert!(router_by_name(n, 1.0, 1.0).is_some(), "router {n}");
+        }
+        assert!(router_by_name("nope", 1.0, 1.0).is_none());
+        assert!(router_by_name("powd:0", 1.0, 1.0).is_none());
+        assert!(router_by_name("powd:x", 1.0, 1.0).is_none());
+        assert_eq!(router_by_name("powd:3", 1.0, 1.0).unwrap().name(), "Pow3Replicas");
+    }
+
+    #[test]
+    fn wrr_shares_proportional_to_speed() {
+        let mut r = WeightedRoundRobin::new();
+        let views = vec![view(0, 1.0, 0.0), view(1, 2.0, 0.0)];
+        let mut rng = Rng::new(1);
+        let mut counts = [0usize; 2];
+        for _ in 0..300 {
+            counts[r.route(1.0, &views, &mut rng).unwrap()] += 1;
+        }
+        assert_eq!(counts[0], 100);
+        assert_eq!(counts[1], 200);
+    }
+
+    #[test]
+    fn wrr_skips_non_accepting() {
+        let mut r = WeightedRoundRobin::new();
+        let mut views = vec![view(0, 1.0, 0.0), view(1, 1.0, 0.0)];
+        views[0].accepting = false;
+        let mut rng = Rng::new(1);
+        for _ in 0..10 {
+            assert_eq!(r.route(1.0, &views, &mut rng), Some(1));
+        }
+        views[1].accepting = false;
+        assert_eq!(r.route(1.0, &views, &mut rng), None);
+    }
+
+    #[test]
+    fn least_outstanding_normalizes_by_speed() {
+        // replica 1 holds 2x the work but runs 4x as fast.
+        let mut r = LeastOutstanding;
+        let views = vec![view(0, 1.0, 100.0), view(1, 4.0, 200.0)];
+        let mut rng = Rng::new(1);
+        assert_eq!(r.route(10.0, &views, &mut rng), Some(1));
+    }
+
+    #[test]
+    fn least_outstanding_counts_queued_prefill() {
+        let mut r = LeastOutstanding;
+        let mut views = vec![view(0, 1.0, 50.0), view(1, 1.0, 50.0)];
+        views[0].queued_prefill = 500.0;
+        let mut rng = Rng::new(1);
+        assert_eq!(r.route(10.0, &views, &mut rng), Some(1));
+    }
+
+    #[test]
+    fn powd_routes_within_sample_and_never_to_draining() {
+        let mut r = PowerOfDReplicas::new(2);
+        let mut views =
+            vec![view(0, 1.0, 0.0), view(1, 1.0, 0.0), view(2, 1.0, 0.0)];
+        views[1].accepting = false;
+        let mut rng = Rng::new(7);
+        for _ in 0..50 {
+            let picked = r.route(1.0, &views, &mut rng).unwrap();
+            assert_ne!(picked, 1);
+        }
+    }
+
+    #[test]
+    fn bfio2_prefers_fit_below_max_then_speed() {
+        let mut r = TwoLevelBfIo::new(0.0, 1.0);
+        // replica 0: max 100 / min 10 — a size-50 request fits below the
+        // max (marginal step time 100); replica 1: balanced at 80 — the
+        // same request pushes the max to 130.
+        let mut a = view(0, 1.0, 110.0);
+        a.max_load = 100.0;
+        a.min_load = 10.0;
+        let mut b = view(1, 1.0, 160.0);
+        b.max_load = 80.0;
+        b.min_load = 80.0;
+        let mut rng = Rng::new(1);
+        assert_eq!(r.route(50.0, &[a.clone(), b.clone()], &mut rng), Some(0));
+        // a faster replica shrinks the marginal step time
+        let mut fast = b.clone();
+        fast.id = 2;
+        fast.speed = 4.0;
+        assert_eq!(r.route(50.0, &[a, b, fast], &mut rng), Some(2));
+    }
+
+    #[test]
+    fn bfio2_penalizes_full_replicas() {
+        let mut r = TwoLevelBfIo::new(0.0, 1.0);
+        let mut full = view(0, 1.0, 100.0);
+        full.free_slots = 0;
+        full.queue_depth = 8;
+        let open = view(1, 1.0, 100.0);
+        let mut rng = Rng::new(1);
+        assert_eq!(r.route(10.0, &[full, open], &mut rng), Some(1));
+    }
+}

@@ -48,6 +48,9 @@ pub struct Completion {
 #[derive(Clone, Debug, Default)]
 pub struct WorkerStatus {
     pub id: usize,
+    /// Barrier-group replica this worker belongs to (0 for single-group
+    /// backends; meaningful behind [`crate::fleet::FleetBackend`]).
+    pub replica: usize,
     /// Instantaneous workload `L_g` (resident KV tokens).
     pub load: f64,
     /// Occupied batch slots.
@@ -56,6 +59,29 @@ pub struct WorkerStatus {
     pub free_slots: usize,
     /// Requests completed on this worker since startup.
     pub completed: u64,
+}
+
+/// Per-replica snapshot for multi-group backends (`GET /v0/workers`
+/// `replicas` array and the `bfio_replica_*` Prometheus series).
+#[derive(Clone, Debug, Default)]
+pub struct ReplicaStatus {
+    pub id: usize,
+    /// Relative execution speed factor.
+    pub speed: f64,
+    /// `accepting` | `draining` | `removed`.
+    pub state: String,
+    /// Σ_g L_g across the replica's workers.
+    pub load: f64,
+    pub active: usize,
+    pub free_slots: usize,
+    /// Requests routed here but not yet admitted.
+    pub queue_depth: usize,
+    pub completed: u64,
+    /// Barrier steps this replica executed.
+    pub steps: u64,
+    /// Replica-local virtual clock, seconds.
+    pub clock_s: f64,
+    pub energy_j: f64,
 }
 
 /// Aggregate backend counters for `GET /metrics`.
@@ -100,4 +126,10 @@ pub trait Backend: Send + Sync {
 
     /// Aggregate counters.
     fn stats(&self) -> BackendStats;
+
+    /// Per-replica snapshot; empty for single-group backends (the
+    /// default), populated by [`crate::fleet::FleetBackend`].
+    fn replicas(&self) -> Vec<ReplicaStatus> {
+        Vec::new()
+    }
 }

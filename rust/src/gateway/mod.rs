@@ -350,7 +350,8 @@ fn completions(req: &HttpRequest, shared: &Shared) -> Result<Routed> {
 fn workers_json(shared: &Shared) -> String {
     let ws = shared.backend.workers();
     let st = shared.backend.stats();
-    json::obj(vec![
+    let reps = shared.backend.replicas();
+    let mut fields = vec![
         ("backend", json::s(&shared.backend.name())),
         ("policy", json::s(&st.policy)),
         ("steps", json::num(st.steps as f64)),
@@ -362,6 +363,7 @@ fn workers_json(shared: &Shared) -> String {
             json::arr(ws.iter().map(|w| {
                 json::obj(vec![
                     ("id", json::num(w.id as f64)),
+                    ("replica", json::num(w.replica as f64)),
                     ("load", json::num(w.load)),
                     ("active", json::num(w.active as f64)),
                     ("free_slots", json::num(w.free_slots as f64)),
@@ -369,8 +371,27 @@ fn workers_json(shared: &Shared) -> String {
                 ])
             })),
         ),
-    ])
-    .to_string()
+    ];
+    if !reps.is_empty() {
+        fields.push((
+            "replicas",
+            json::arr(reps.iter().map(|r| {
+                json::obj(vec![
+                    ("id", json::num(r.id as f64)),
+                    ("speed", json::num(r.speed)),
+                    ("state", json::s(&r.state)),
+                    ("load", json::num(r.load)),
+                    ("active", json::num(r.active as f64)),
+                    ("free_slots", json::num(r.free_slots as f64)),
+                    ("queue_depth", json::num(r.queue_depth as f64)),
+                    ("completed", json::num(r.completed as f64)),
+                    ("steps", json::num(r.steps as f64)),
+                    ("clock_s", json::num(r.clock_s)),
+                ])
+            })),
+        ));
+    }
+    json::obj(fields).to_string()
 }
 
 fn metrics_text(shared: &Shared) -> String {
@@ -386,7 +407,12 @@ fn metrics_text(shared: &Shared) -> String {
     );
     for s in &ws {
         let id = s.id.to_string();
-        w.sample("bfio_worker_load", &[("worker", id.as_str())], s.load);
+        let rep = s.replica.to_string();
+        w.sample(
+            "bfio_worker_load",
+            &[("replica", rep.as_str()), ("worker", id.as_str())],
+            s.load,
+        );
     }
     w.family(
         "bfio_worker_active",
@@ -395,9 +421,10 @@ fn metrics_text(shared: &Shared) -> String {
     );
     for s in &ws {
         let id = s.id.to_string();
+        let rep = s.replica.to_string();
         w.sample(
             "bfio_worker_active",
-            &[("worker", id.as_str())],
+            &[("replica", rep.as_str()), ("worker", id.as_str())],
             s.active as f64,
         );
     }
@@ -408,11 +435,75 @@ fn metrics_text(shared: &Shared) -> String {
     );
     for s in &ws {
         let id = s.id.to_string();
+        let rep = s.replica.to_string();
         w.sample(
             "bfio_worker_completed_total",
-            &[("worker", id.as_str())],
+            &[("replica", rep.as_str()), ("worker", id.as_str())],
             s.completed as f64,
         );
+    }
+    let reps = shared.backend.replicas();
+    if !reps.is_empty() {
+        // Uniform per-replica families: (name, help, kind, value).
+        type RepVal = fn(&backend::ReplicaStatus) -> f64;
+        let families: [(&str, &str, &str, RepVal); 6] = [
+            (
+                "bfio_replica_load",
+                "Σ_g L_g per barrier-group replica.",
+                "gauge",
+                |r| r.load,
+            ),
+            (
+                "bfio_replica_queue_depth",
+                "Requests routed to a replica but not yet admitted.",
+                "gauge",
+                |r| r.queue_depth as f64,
+            ),
+            (
+                "bfio_replica_completed_total",
+                "Requests completed per replica.",
+                "counter",
+                |r| r.completed as f64,
+            ),
+            (
+                "bfio_replica_steps_total",
+                "Barrier steps executed per replica.",
+                "counter",
+                |r| r.steps as f64,
+            ),
+            (
+                "bfio_replica_clock_seconds",
+                "Replica-local virtual clock.",
+                "gauge",
+                |r| r.clock_s,
+            ),
+            (
+                "bfio_replica_energy_joules",
+                "Cumulative energy per replica under the paper's power model.",
+                "gauge",
+                |r| r.energy_j,
+            ),
+        ];
+        for (name, help, kind, value) in families {
+            w.family(name, help, kind);
+            for r in &reps {
+                let id = r.id.to_string();
+                w.sample(name, &[("replica", id.as_str())], value(r));
+            }
+        }
+        w.family(
+            "bfio_replica_speed",
+            "Replica speed factor, labelled with its lifecycle state.",
+            "gauge",
+        );
+        for r in &reps {
+            let id = r.id.to_string();
+            w.sample(
+                "bfio_replica_speed",
+                &[("replica", id.as_str()), ("state", r.state.as_str())],
+                r.speed,
+            );
+        }
     }
     w.family(
         "bfio_queue_depth",

@@ -143,6 +143,7 @@ impl Backend for PjrtBackend {
         (0..self.workers)
             .map(|i| WorkerStatus {
                 id: i,
+                replica: 0,
                 load: 0.0, // not observable between serve() batches
                 active: 0,
                 free_slots: snap.slots_per_worker,

@@ -121,6 +121,7 @@ impl SimBackend {
             s.workers = (0..cfg.g)
                 .map(|i| WorkerStatus {
                     id: i,
+                    replica: 0,
                     load: 0.0,
                     active: 0,
                     free_slots: cfg.b,
@@ -185,9 +186,10 @@ impl Drop for SimBackend {
     }
 }
 
-/// Deterministic pseudo-tokens for a completed request (the sim backend
-/// has no real model; ids are stable for a given request id).
-fn gen_tokens(id: u64, n: u64) -> Vec<i32> {
+/// Deterministic pseudo-tokens for a completed request (the sim and
+/// fleet backends have no real model; ids are stable for a given
+/// request id).
+pub(crate) fn gen_tokens(id: u64, n: u64) -> Vec<i32> {
     (0..n)
         .map(|j| {
             let h = id
@@ -326,6 +328,7 @@ fn publish<T, P>(
     let ws: Vec<WorkerStatus> = (0..loads.len())
         .map(|i| WorkerStatus {
             id: i,
+            replica: 0,
             load: loads[i],
             active: engine.worker_active(i),
             free_slots: engine.free_slots(i),

@@ -23,7 +23,12 @@
 //!   `/v1/completions` endpoint, `/v0/workers` status, `/metrics`, and
 //!   `/healthz` on a hand-rolled HTTP/1.1 server, decoupled from
 //!   execution by a `Backend` trait (discrete-event sim in virtual time,
-//!   or the live PJRT coordinator), plus a closed-loop load generator.
+//!   the multi-replica fleet, or the live PJRT coordinator), plus a
+//!   closed-loop load generator.
+//! * [`fleet`] — two-level routing across R data-parallel barrier-group
+//!   replicas: a tier-1 `FleetRouter` (weighted-RR, least-outstanding,
+//!   power-of-d, two-level BF-IO) in front of per-replica engines with
+//!   heterogeneous speeds and lifecycle churn (drain/add/remove).
 //! * [`energy`] — the GPU power model `P(mfu)` and per-step energy
 //!   integration (Section 5.2 / Appendix D of the paper).
 //! * [`theory`] — closed-form theorem bounds and empirical IIR drivers.
@@ -38,6 +43,7 @@ pub mod config;
 pub mod coordinator;
 pub mod experiments;
 pub mod energy;
+pub mod fleet;
 pub mod gateway;
 pub mod metrics;
 pub mod policies;

@@ -2,11 +2,13 @@
 //!
 //! ```text
 //! bfio sim     --policy bfio:40 --g 64 --b 24 --steps 600   one simulation
+//! bfio fleet   --replicas 8 --workers 16 --routers wrr,low,powd:2,bfio2
+//!                                                           fleet vs monolith
 //! bfio repro   <table1|fig1|fig2|fig6|fig7|fig9|fig10|burstgpt|
 //!               adversarial|predictors|drift|all> [--full]  paper artifacts
 //! bfio theory  <thm1|thm2|thm3|energy|all>                  theorem checks
 //! bfio serve   --workers 2 --policy bfio:8 --requests 16    live PJRT serving
-//! bfio gateway --backend sim --addr 127.0.0.1:8080          HTTP gateway
+//! bfio gateway --backend sim|fleet --addr 127.0.0.1:8080    HTTP gateway
 //! bfio loadgen --url http://127.0.0.1:8080 --requests 64    drive a gateway
 //! bfio trace   --out trace.jsonl --steps 200                dump a trace
 //! ```
@@ -18,6 +20,8 @@ use anyhow::{bail, Context, Result};
 
 use bfio_serve::coordinator::{serve, CoordinatorConfig, ServeRequest};
 use bfio_serve::experiments::{self, scaling, ExpScale};
+use bfio_serve::experiments::fleet::{fleet_sweep, FleetScale};
+use bfio_serve::fleet::{FleetBackend, FleetBackendConfig};
 use bfio_serve::gateway::backend::Backend;
 use bfio_serve::gateway::pjrt::{PjrtBackend, PjrtBackendConfig};
 use bfio_serve::gateway::sim::{SimBackend, SimBackendConfig};
@@ -56,6 +60,7 @@ fn scale_from(args: &Args) -> ExpScale {
 fn run(args: &Args) -> Result<()> {
     match args.subcommand.as_deref() {
         Some("sim") => cmd_sim(args),
+        Some("fleet") => cmd_fleet(args),
         Some("repro") => cmd_repro(args),
         Some("theory") => cmd_theory(args),
         Some("serve") => cmd_serve(args),
@@ -63,12 +68,13 @@ fn run(args: &Args) -> Result<()> {
         Some("loadgen") => cmd_loadgen(args),
         Some("trace") => cmd_trace(args),
         Some(other) => bail!(
-            "unknown subcommand {other}; try sim|repro|theory|serve|gateway|loadgen|trace"
+            "unknown subcommand {other}; try sim|fleet|repro|theory|serve|gateway|loadgen|trace"
         ),
         None => {
             println!(
                 "bfio — BF-IO load-balancing reproduction\n\
-                 subcommands: sim | repro <exp> | theory <thm> | serve | gateway | loadgen | trace\n\
+                 subcommands: sim | fleet | repro <exp> | theory <thm> | serve | gateway | \
+                 loadgen | trace\n\
                  see README.md for details"
             );
             Ok(())
@@ -104,6 +110,51 @@ fn cmd_sim(args: &Args) -> Result<()> {
         res.steps, res.completed, res.admitted, res.leftover_waiting
     );
     Ok(())
+}
+
+/// Parse `--speeds 1,1.5,2` and validate the entry count against
+/// `--replicas` (shared by `bfio fleet` and `bfio gateway --backend
+/// fleet`, which would otherwise silently resize the fleet).
+fn parse_speeds(v: &str, replicas: usize) -> Result<Vec<f64>> {
+    let speeds: Vec<f64> = v
+        .split(',')
+        .filter(|t| !t.is_empty())
+        .map(|t| t.trim().parse())
+        .collect::<Result<Vec<f64>, _>>()
+        .with_context(|| format!("bad --speeds {v:?}"))?;
+    if speeds.len() != replicas {
+        bail!("--speeds needs {replicas} entries, got {}", speeds.len());
+    }
+    Ok(speeds)
+}
+
+fn cmd_fleet(args: &Args) -> Result<()> {
+    let replicas = args.usize_or("replicas", 8);
+    let g = args.usize_or("workers", args.usize_or("g", 16));
+    let mut scale = FleetScale::new(
+        replicas,
+        g,
+        args.usize_or("b", 8),
+        args.u64_or("steps", 200),
+    );
+    scale.seed = args.u64_or("seed", scale.seed);
+    scale.policy = args.get_or("policy", "bfio:8").to_string();
+    if let Some(v) = args.flag("speeds") {
+        scale.speeds = parse_speeds(v, replicas)?;
+    }
+    let routers: Vec<String> = args
+        .get_or("routers", "wrr,low,powd:2,bfio2")
+        .split(',')
+        .filter(|t| !t.is_empty())
+        .map(|t| t.trim().to_string())
+        .collect();
+    let out = args.get_or("out", "BENCH_fleet.json");
+    fleet_sweep(
+        &scale,
+        &routers,
+        std::path::Path::new(out),
+        args.has("churn"),
+    )
 }
 
 fn cmd_repro(args: &Args) -> Result<()> {
@@ -256,6 +307,26 @@ fn cmd_gateway(args: &Args) -> Result<()> {
             };
             Arc::new(SimBackend::new(cfg)?)
         }
+        "fleet" => {
+            let replicas = args.usize_or("replicas", 2);
+            let speeds = match args.flag("speeds") {
+                Some(v) => Some(parse_speeds(v, replicas)?),
+                None => None,
+            };
+            let cfg = FleetBackendConfig {
+                replicas,
+                g: args.usize_or("g", 4),
+                b: args.usize_or("b", 8),
+                policy: policy.clone(),
+                router: args.get_or("router", "bfio2").to_string(),
+                speeds,
+                seed: args.u64_or("seed", 0),
+                step_delay: Duration::from_millis(args.u64_or("step-delay-ms", 1)),
+                batch_window: Duration::from_millis(args.u64_or("batch-window-ms", 5)),
+                ..FleetBackendConfig::default()
+            };
+            Arc::new(FleetBackend::new(cfg)?)
+        }
         "pjrt" => {
             let cfg = PjrtBackendConfig {
                 coordinator: CoordinatorConfig {
@@ -269,7 +340,7 @@ fn cmd_gateway(args: &Args) -> Result<()> {
             };
             Arc::new(PjrtBackend::new(cfg)?)
         }
-        other => bail!("unknown backend {other}; try sim|pjrt"),
+        other => bail!("unknown backend {other}; try sim|fleet|pjrt"),
     };
     let name = backend.name();
     let gw = Gateway::spawn(GatewayConfig { addr, threads }, backend)?;

@@ -134,7 +134,7 @@ mod tests {
                 load: l,
                 free_slots: 4,
                 active: if l > 0.0 {
-                    vec![ActiveView { load: l, pred_remaining: 100 }]
+                    vec![ActiveView::fresh(l, 100)]
                 } else {
                     vec![]
                 },
@@ -202,12 +202,12 @@ mod tests {
             WorkerView {
                 load: 50.0,
                 free_slots: 1,
-                active: vec![ActiveView { load: 50.0, pred_remaining: 1 }],
+                active: vec![ActiveView::fresh(50.0, 1)],
             },
             WorkerView {
                 load: 50.0,
                 free_slots: 1,
-                active: vec![ActiveView { load: 50.0, pred_remaining: 100 }],
+                active: vec![ActiveView::fresh(50.0, 100)],
             },
         ];
         let d = [0.0, 1.0, 2.0];

@@ -430,7 +430,7 @@ mod tests {
                         load: l,
                         free_slots: c,
                         active: if l > 0.0 {
-                            vec![ActiveView { load: l, pred_remaining: 100 }]
+                            vec![ActiveView::fresh(l, 100)]
                         } else {
                             vec![]
                         },
@@ -483,12 +483,12 @@ mod tests {
             WorkerView {
                 load: 50.0,
                 free_slots: 1,
-                active: vec![ActiveView { load: 50.0, pred_remaining: 1 }],
+                active: vec![ActiveView::fresh(50.0, 1)],
             },
             WorkerView {
                 load: 50.0,
                 free_slots: 1,
-                active: vec![ActiveView { load: 50.0, pred_remaining: 100 }],
+                active: vec![ActiveView::fresh(50.0, 100)],
             },
         ];
         let waiting = mk_waiting(&[40.0, 10.0]);

@@ -1,11 +1,14 @@
 //! Windowed-imbalance objective `J(S(k)) = Σ_{h=0..H} Imbalance(k+h)`
 //! (Section 4 of the paper) with O(H) incremental move evaluation.
 //!
-//! Predicted per-worker load trajectories: an active request with current
-//! workload `w` and predicted remaining steps `r` contributes
-//! `w + D[h]` at offsets `h = 0..min(r, H+1)`, where
-//! `D[h] = Σ_{t=k+1}^{k+h} δ_t` is the cumulative drift.  A newly admitted
-//! request of prefill `s` contributes `s + D[h]` for the whole window
+//! Predicted per-worker load trajectories: an active request at age `a`
+//! with current workload `w` and predicted remaining steps `r`
+//! contributes `w + (cum[a+h] − cum[a])` at offsets `h = 0..min(r, H+1)`,
+//! where `cum` is the *age-indexed* cumulative drift table
+//! `cum[j] = Σ_{i=1..j} δ_i` — exactly the Definition-2 profile the
+//! simulator applies, so the forecast is exact for age-varying drifts
+//! (Cycle/Decay) too, not just constant-δ ones.  A newly admitted
+//! request of prefill `s` contributes `s + cum[h]` for the whole window
 //! (its completion time is unknown at admission — the paper's point).
 //!
 //! Moves are evaluated against a maintained per-offset top-3 of worker
@@ -25,7 +28,10 @@ pub struct WindowedLoads {
     pub g: usize,
     /// Window offsets 0..=h.
     pub h: usize,
-    /// Cumulative drift D[0..=h].
+    /// Age-indexed cumulative drift `cum[0..=h]` — the drift a *newly
+    /// admitted* (age-0) request gains by each offset, used by the move
+    /// deltas.  Actives' own trajectories are baked into `loads` from
+    /// their individual ages at construction.
     pub d: Vec<f64>,
     /// Flattened [g * (h+1) + offset] predicted loads.
     pub loads: Vec<f64>,
@@ -43,16 +49,18 @@ pub struct WindowedLoads {
 pub type Delta = (usize, f64, f64);
 
 impl WindowedLoads {
-    /// Build from worker views: per-worker histogram of predicted
-    /// remaining steps, then suffix-accumulate — O(G·(B+H)).
+    /// Build from worker views — O(G·B·H): each active's trajectory is
+    /// accumulated from *its own age* in the age-indexed `cum_drift`
+    /// table (see [`crate::policies::AssignCtx::cum_drift`]).
     ///
     /// `refill` is the mean-field refill model: in the overloaded regime
     /// a slot that completes at offset `r` is immediately refilled by a
-    /// fresh request (size unknown at prediction time; modeled by the
-    /// waiting pool's mean prefill), contributing `refill + D[h] − D[r]`
-    /// for `h >= r`.  Without this, the lookahead systematically predicts
-    /// soon-completing workers as near-empty and BF-IO "pre-compensates"
-    /// into real imbalance — see EXPERIMENTS.md §Fig 9.
+    /// fresh age-0 request (size unknown at prediction time; modeled by
+    /// the waiting pool's mean prefill), contributing
+    /// `refill + cum[h − r]` for `h >= r`.  Without this, the lookahead
+    /// systematically predicts soon-completing workers as near-empty and
+    /// BF-IO "pre-compensates" into real imbalance — see EXPERIMENTS.md
+    /// §Fig 9.
     pub fn from_views(
         workers: &[WorkerView],
         cum_drift: &[f64],
@@ -62,44 +70,99 @@ impl WindowedLoads {
         let h = horizon.min(cum_drift.len().saturating_sub(1));
         let g = workers.len();
         let width = h + 1;
+        // Clamp to the table tail: callers size the table to cover every
+        // active's age + H, so the clamp only guards foreign views.
+        let last = cum_drift.len().saturating_sub(1);
+        let cum = |j: usize| cum_drift.get(j.min(last)).copied().unwrap_or(0.0);
+        // Constant-δ tables (Unit/Zero/Const/Speculative — the common
+        // case) are arithmetic, so `cum[a+h] − cum[a] == cum[h]` (up to
+        // summation rounding) and every age shares one trajectory: the
+        // O(G·(B+H)) histogram + suffix-sum build applies.  Genuinely
+        // age-varying tables (Cycle/Decay) take the per-active O(B·H)
+        // path below.  The tolerance absorbs non-dyadic constants
+        // (Const(0.1) accumulates ulp noise) without ever accepting a
+        // real Cycle/Decay table; both the engine and the frozen
+        // reference oracle call this code on identical tables and
+        // identical views, so the branch — and therefore parity — is
+        // the same on both sides.  The fast path only reads indices up
+        // to (oldest current active age + H), so the sniff is bounded
+        // to that prefix — O(current oldest age), not O(historical
+        // table length), and it early-exits on the first mismatch for
+        // genuinely age-varying tables.
+        let max_age_used = workers
+            .iter()
+            .flat_map(|w| w.active.iter())
+            .map(|a| a.age as usize)
+            .max()
+            .unwrap_or(0);
+        let used = (max_age_used + width).min(cum_drift.len());
+        let inc = if cum_drift.len() >= 2 { cum_drift[1] - cum_drift[0] } else { 0.0 };
+        let tol = 1e-9 * inc.abs().max(1e-12);
+        let linear = cum_drift[..used]
+            .windows(2)
+            .all(|p| (p[1] - p[0] - inc).abs() <= tol);
         let mut loads = vec![0.0; g * width];
         for (gi, w) in workers.iter().enumerate() {
-            // bucket[r] = (count, sum_w) of requests with min(r, h+1)
-            let mut cnt = vec![0.0f64; width + 1];
-            let mut sw = vec![0.0f64; width + 1];
-            for a in &w.active {
-                let alive = (a.pred_remaining.max(1) as usize).min(width);
-                cnt[alive] += 1.0;
-                sw[alive] += a.load;
-            }
-            // suffix sums: requests alive at offset h are those with
-            // alive > h.
-            let mut c_acc = 0.0;
-            let mut w_acc = 0.0;
-            for off in (0..width).rev() {
-                c_acc += cnt[off + 1];
-                w_acc += sw[off + 1];
-                loads[gi * width + off] = w_acc + c_acc * cum_drift[off];
-            }
-            if let Some(mean_s) = refill {
-                // completions at offset r = requests with alive == r
-                // (they contribute through h = r-1, refill from h = r)
-                let mut n_done = 0.0;
-                let mut d_at_done = 0.0;
-                for off in 0..width {
-                    if off >= 1 && off < width {
-                        n_done += cnt[off];
-                        d_at_done += cnt[off] * cum_drift[off];
+            let row = &mut loads[gi * width..(gi + 1) * width];
+            if linear {
+                // bucket[r] = (count, sum_w) of requests with
+                // min(pred_remaining, h+1) == r
+                let mut cnt = vec![0.0f64; width + 1];
+                let mut sw = vec![0.0f64; width + 1];
+                for a in &w.active {
+                    let alive = (a.pred_remaining.max(1) as usize).min(width);
+                    cnt[alive] += 1.0;
+                    sw[alive] += a.load;
+                }
+                // suffix sums: requests alive at offset `off` are those
+                // with alive > off
+                let mut c_acc = 0.0;
+                let mut w_acc = 0.0;
+                for off in (0..width).rev() {
+                    c_acc += cnt[off + 1];
+                    w_acc += sw[off + 1];
+                    row[off] = w_acc + c_acc * cum(off);
+                }
+                if let Some(mean_s) = refill {
+                    // completions at offset r refill with fresh age-0
+                    // requests: mean_s + cum[off − r] == mean_s +
+                    // cum[off] − cum[r] on an arithmetic table
+                    let mut n_done = 0.0;
+                    let mut d_at_done = 0.0;
+                    for (off, slot) in row.iter_mut().enumerate() {
+                        if off >= 1 {
+                            n_done += cnt[off];
+                            d_at_done += cnt[off] * cum(off);
+                        }
+                        *slot += n_done * (mean_s + cum(off)) - d_at_done;
                     }
-                    loads[gi * width + off] +=
-                        n_done * (mean_s + cum_drift[off]) - d_at_done;
+                }
+            } else {
+                for a in &w.active {
+                    let alive = (a.pred_remaining.max(1) as usize).min(width);
+                    let base = a.age as usize;
+                    // Alive at offsets 0..alive with its age-indexed
+                    // drift: by offset `off` it has gained
+                    // cum[age+off] − cum[age] on top of its load.
+                    for (off, slot) in row.iter_mut().enumerate().take(alive) {
+                        *slot += a.load + (cum(base + off) - a.drift_offset);
+                    }
+                    if let Some(mean_s) = refill {
+                        // The slot frees at offset `alive` and refills
+                        // with a fresh age-0 request drifting from 0.
+                        for (off, slot) in
+                            row.iter_mut().enumerate().skip(alive)
+                        {
+                            *slot += mean_s + cum(off - alive);
+                        }
+                    }
                 }
             }
         }
         let mut out = WindowedLoads {
             g,
             h,
-            d: cum_drift[..width].to_vec(),
+            d: (0..width).map(cum).collect(),
             loads,
             sum: vec![0.0; width],
             top3: vec![[(0.0, NONE_W); 3]; width],
@@ -248,14 +311,14 @@ mod tests {
                 load: 30.0,
                 free_slots: 0,
                 active: vec![
-                    ActiveView { load: 10.0, pred_remaining: 1 },
-                    ActiveView { load: 20.0, pred_remaining: 3 },
+                    ActiveView::fresh(10.0, 1),
+                    ActiveView::fresh(20.0, 3),
                 ],
             },
             WorkerView {
                 load: 5.0,
                 free_slots: 2,
-                active: vec![ActiveView { load: 5.0, pred_remaining: 10 }],
+                active: vec![ActiveView::fresh(5.0, 10)],
             },
         ]
     }
@@ -304,15 +367,54 @@ mod tests {
     }
 
     #[test]
+    fn age_indexed_drift_for_older_actives() {
+        // Cycle drift [2, 0]: cum = [0, 2, 2, 4, 4].  An active at age 1
+        // gains δ(2)=0 then δ(3)=2 → trajectory w, w, w+2, while a fresh
+        // request would gain δ(1)=2 immediately.  Before the age-indexed
+        // fix both were forecast from the global step parity.
+        let cum = [0.0, 2.0, 2.0, 4.0, 4.0];
+        let workers = vec![WorkerView {
+            load: 10.0,
+            free_slots: 1,
+            active: vec![ActiveView {
+                load: 10.0,
+                pred_remaining: 100,
+                age: 1,
+                drift_offset: 2.0,
+            }],
+        }];
+        let wl = WindowedLoads::from_views(&workers, &cum, 2, None);
+        assert_eq!(wl.load(0, 0), 10.0); // cum[1] − 2 = 0
+        assert_eq!(wl.load(0, 1), 10.0); // cum[2] − 2 = 0
+        assert_eq!(wl.load(0, 2), 12.0); // cum[3] − 2 = 2
+        // a new admission still uses the age-0 prefix
+        assert_eq!(wl.d, vec![0.0, 2.0, 2.0]);
+    }
+
+    #[test]
+    fn refill_is_age_zero_indexed() {
+        // One active completing at offset 1 under Cycle [2, 0]: the
+        // refill request admitted at offset 1 is age 0 there, so at
+        // offset 2 it has gained cum[1] = 2 (not cum[2] − cum[1] = 0).
+        let cum = [0.0, 2.0, 2.0, 4.0];
+        let workers = vec![WorkerView {
+            load: 10.0,
+            free_slots: 0,
+            active: vec![ActiveView::fresh(10.0, 1)],
+        }];
+        let wl = WindowedLoads::from_views(&workers, &cum, 2, Some(7.0));
+        assert_eq!(wl.load(0, 0), 10.0);
+        assert_eq!(wl.load(0, 1), 7.0); // fresh refill, age 0
+        assert_eq!(wl.load(0, 2), 9.0); // refill gained δ(1) = 2
+    }
+
+    #[test]
     fn top3_consistent_after_decrease() {
         let workers: Vec<WorkerView> = (0..5)
             .map(|i| WorkerView {
                 load: 10.0 * (i + 1) as f64,
                 free_slots: 1,
-                active: vec![ActiveView {
-                    load: 10.0 * (i + 1) as f64,
-                    pred_remaining: 99,
-                }],
+                active: vec![ActiveView::fresh(10.0 * (i + 1) as f64, 99)],
             })
             .collect();
         let mut wl = WindowedLoads::from_views(&workers, &[0.0, 1.0], 1, None);

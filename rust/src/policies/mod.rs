@@ -27,6 +27,20 @@ pub struct ActiveView {
     /// This is `Ŵ_i^H(k)` collapsed to its completion offset — in the LLM
     /// model the profile is determined by (w_i, completion time).
     pub pred_remaining: u64,
+    /// Steps since admission (the request's age `a`); its next drift
+    /// increment is `δ(a+1)` (Definition 2 is age-indexed).
+    pub age: u64,
+    /// Drift already realized, `Σ_{j=1..a} δ_j == ctx.cum_drift[a]`.
+    /// Policies forecast this request's future drift at offset `h` as
+    /// `ctx.cum_drift[a + h] − drift_offset`.
+    pub drift_offset: f64,
+}
+
+impl ActiveView {
+    /// View of a freshly admitted request: age 0, no realized drift.
+    pub fn fresh(load: f64, pred_remaining: u64) -> ActiveView {
+        ActiveView { load, pred_remaining, age: 0, drift_offset: 0.0 }
+    }
 }
 
 /// One worker's state as visible to the router.
@@ -60,8 +74,14 @@ pub struct AssignCtx<'a> {
     pub workers: &'a [WorkerView],
     /// FIFO wait queue views (oldest first).
     pub waiting: &'a [WaitingView],
-    /// Cumulative future drift `D[h] = Σ_{t=k+1}^{k+h} δ_t`, `h = 0..=H`.
-    /// Always contains at least `[0.0]`.
+    /// *Age-indexed* cumulative drift table `cum[j] = Σ_{i=1..j} δ_i`
+    /// (Definition 2), starting at `cum[0] = 0`.  Always contains at
+    /// least `[0.0]`; when active views are built it covers every
+    /// active's `age + H`.  A waiting request admitted this step gains
+    /// `cum[h]` by offset `h`; an active at age `a` gains
+    /// `cum[a + h] − cum[a]` (its [`ActiveView::drift_offset`]) — the
+    /// same age-indexed profile the simulator applies, so lookahead
+    /// forecasts are exact for every drift model, not just constant-δ.
     pub cum_drift: &'a [f64],
 }
 

@@ -167,10 +167,12 @@ pub struct Engine<T, P> {
     /// the untouched tail (`rest`), exactly as the pre-refactor loop.
     carry: Vec<WaitEntry<T>>,
     rest: VecDeque<WaitEntry<T>>,
+    /// Σ prefill over the wait queue (incrementally maintained) — the
+    /// outstanding-work signal fleet routers read.
+    waiting_prefill: f64,
     // --- reusable per-step buffers (zero-alloc steady state) ---
     views: Vec<WorkerView>,
     waiting_views: Vec<WaitingView>,
-    drift_buf: Vec<f64>,
     /// Destination worker per exposed waiting index (`usize::MAX` =
     /// stays waiting).
     dest: Vec<usize>,
@@ -214,9 +216,9 @@ impl<T, P> Engine<T, P> {
             bucket_pool: Vec::new(),
             carry: Vec::new(),
             rest: VecDeque::new(),
+            waiting_prefill: 0.0,
             views: (0..g).map(|_| WorkerView::default()).collect(),
             waiting_views: Vec::new(),
-            drift_buf: Vec::new(),
             dest: Vec::new(),
             kept: Vec::new(),
             admitted: 0,
@@ -258,6 +260,12 @@ impl<T, P> Engine<T, P> {
         self.carry.len() + self.rest.len()
     }
 
+    /// Σ prefill of queued (not yet admitted) requests — the
+    /// outstanding-work signal cross-replica routers use.
+    pub fn waiting_prefill(&self) -> f64 {
+        self.waiting_prefill
+    }
+
     /// Nothing active and nothing waiting.
     pub fn is_idle(&self) -> bool {
         self.total_active == 0 && self.carry.is_empty() && self.rest.is_empty()
@@ -277,7 +285,22 @@ impl<T, P> Engine<T, P> {
 
     /// Queue a request (visible to the router from the next admission).
     pub fn submit(&mut self, prefill: f64, arrival_step: u64, arrival_clock: f64, ticket: T) {
+        self.waiting_prefill += prefill;
         self.rest.push_back(WaitEntry { prefill, arrival_step, arrival_clock, ticket });
+    }
+
+    /// Remove and return every queued (not yet admitted) request as
+    /// `(prefill, arrival_step, arrival_clock, ticket)` in FIFO order.
+    /// Admitted requests are untouched: their KV state is sticky and
+    /// non-migratable — this is the drain path for replica lifecycle
+    /// churn, where only *waiting* requests may be re-routed.
+    pub fn take_waiting(&mut self) -> Vec<(f64, u64, f64, T)> {
+        self.waiting_prefill = 0.0;
+        self.carry
+            .drain(..)
+            .chain(self.rest.drain(..))
+            .map(|e| (e.prefill, e.arrival_step, e.arrival_clock, e.ticket))
+            .collect()
     }
 
     /// Jump the step counter over an idle gap (no actives, empty queue).
@@ -314,23 +337,17 @@ impl<T, P> Engine<T, P> {
         let step = self.step;
         let horizon = policy.lookahead();
 
-        // Cumulative future drift D[h] = Σ_{t=k+1}^{k+h} δ_t, h=0..=H
-        // (always at least [0.0, D[1]]), into the reused buffer.
-        //
-        // NOTE: this forecast is *global-step*-indexed (δ(k+h)) while the
-        // engine applies drift *age*-indexed (δ(age), Definition 2) — an
-        // inconsistency inherited verbatim from the pre-refactor loop and
-        // kept for parity (rust/tests/engine_parity.rs).  The two agree
-        // for every constant-δ drift (Unit/Zero/Const/Speculative); for
-        // age-varying drifts (Cycle/Decay) lookahead policies see a
-        // step-parity-shifted forecast.  Tracked in ROADMAP.md.
-        self.drift_buf.clear();
-        self.drift_buf.push(0.0);
-        let mut acc = 0.0;
-        for h in 1..=horizon.max(1) as u64 {
-            acc += self.cfg.drift.delta(step + h);
-            self.drift_buf.push(acc);
-        }
+        // The policy-facing drift forecast is *age-indexed*, matching
+        // exactly how the engine applies drift (Definition 2): the
+        // shared cumulative table `cum_drift[j] = Σ_{i=1..j} δ_i` is
+        // grown to cover every active's `age + H`, each active view
+        // carries its age and realized-drift offset, and `ctx.cum_drift`
+        // exposes the whole table.  (The pre-PR-3 forecast was
+        // global-step-indexed `δ(k+h)` — fine for constant-δ drifts but
+        // a parity-shifted mis-forecast under Cycle/Decay; the frozen
+        // oracle in `sim::reference` was updated in the same change.)
+        let h_fwd = horizon.max(1) as u64;
+        ensure_cum(&mut self.cum_drift, &self.cfg.drift, h_fwd);
 
         // Worker views: headers are O(G); the per-active lookahead lists
         // (with their predictor calls) are built only for policies that
@@ -345,12 +362,15 @@ impl<T, P> Engine<T, P> {
                 for slot in &self.workers[gi].slots {
                     let Some(e) = slot else { continue };
                     let age = step - e.admit_step;
-                    ensure_cum(&mut self.cum_drift, &self.cfg.drift, age);
-                    let w = e.prefill + self.cum_drift[age as usize];
+                    ensure_cum(&mut self.cum_drift, &self.cfg.drift, age + h_fwd);
+                    let drift_offset = self.cum_drift[age as usize];
+                    let w = e.prefill + drift_offset;
                     let remaining = e.o - age; // >= 1 while active
                     view.active.push(ActiveView {
                         load: w,
                         pred_remaining: self.predictor.predict(remaining, horizon as u64, rng),
+                        age,
+                        drift_offset,
                     });
                 }
             }
@@ -377,7 +397,7 @@ impl<T, P> Engine<T, P> {
                 batch_cap: b,
                 workers: &self.views,
                 waiting: &self.waiting_views,
-                cum_drift: &self.drift_buf,
+                cum_drift: &self.cum_drift,
             };
             let assignments = policy.assign(&ctx, rng);
             debug_assert!(
@@ -417,6 +437,7 @@ impl<T, P> Engine<T, P> {
                 kept.push(e);
                 continue;
             }
+            self.waiting_prefill -= e.prefill;
             let (id, o, payload) = open(e.ticket);
             let o = o.max(1);
             let w = &mut self.workers[gi];
@@ -449,6 +470,9 @@ impl<T, P> Engine<T, P> {
         }
         std::mem::swap(&mut self.carry, &mut kept);
         self.kept = kept; // drained buffer, capacity retained
+        if self.carry.is_empty() && self.rest.is_empty() {
+            self.waiting_prefill = 0.0; // clear any fp residue exactly
+        }
         admitted_now
     }
 
@@ -676,6 +700,29 @@ mod tests {
         }
         assert_eq!(done.len(), 1);
         assert_eq!(e.loads()[0], 0.0);
+    }
+
+    #[test]
+    fn waiting_prefill_tracks_queue_and_take_waiting_drains_it() {
+        let mut e = engine(1, 1, Drift::Unit);
+        e.submit(10.0, 0, 0.0, 1003);
+        e.submit(7.0, 0, 0.25, 2002);
+        e.submit(3.0, 1, 0.5, 3001);
+        assert_eq!(e.waiting_prefill(), 20.0);
+        // one slot: the first request is admitted, the rest stay queued
+        e.admit(&mut Fcfs::new(), &mut Rng::new(1), 0.0, open_ticket);
+        assert_eq!(e.waiting_prefill(), 10.0);
+        assert_eq!(e.waiting_len(), 2);
+        // drain the queue (lifecycle churn): actives are untouched
+        let moved = e.take_waiting();
+        assert_eq!(e.waiting_prefill(), 0.0);
+        assert_eq!(e.waiting_len(), 0);
+        assert_eq!(e.active_count(), 1);
+        assert_eq!(
+            moved,
+            vec![(7.0, 0, 0.25, 2002), (3.0, 1, 0.5, 3001)],
+            "FIFO order with original arrival metadata"
+        );
     }
 
     #[test]

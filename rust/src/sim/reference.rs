@@ -13,6 +13,13 @@
 //!    the engine on the Fig 10/11 G-sweep and records the measured
 //!    speedup in `BENCH_scaling.json`.
 //!
+//! One deliberate exception to "verbatim" (PR 3, tracked in ROADMAP):
+//! the policy-facing drift forecast handed to `AssignCtx::cum_drift`
+//! was switched from global-step-indexed (`δ(k+h)`) to *age-indexed*
+//! (`δ(age)`, matching how both loops apply drift), in lockstep with
+//! the engine — identical for constant-δ drifts, a bug fix for
+//! Cycle/Decay lookahead.  Everything else is the frozen loop.
+//!
 //! Scope: deterministic predictors (Oracle / WindowOracle /
 //! Pessimistic) reproduce exactly.  [`Predictor::Noisy`] draws from the
 //! rng per active view, and the engine both skips those draws for
@@ -75,6 +82,13 @@ pub fn reference_run(
     }
 
     let mut workers: Vec<Vec<Active>> = vec![Vec::with_capacity(b); g];
+    // Persistent age-indexed cumulative-drift table `cum_all[j] =
+    // Σ_{i=1..j} δ_i`, grown on demand (same recurrence as
+    // `Drift::cumulative(0, ·)`, so values are bitwise identical) —
+    // one growing buffer instead of an O(max_age + H) allocation per
+    // step, keeping this loop an honest perf baseline for
+    // `benches/scaling.rs`.
+    let mut cum_all: Vec<f64> = vec![0.0];
     let mut carry: Vec<(Request, f64)> = Vec::new();
     let mut rest: std::collections::VecDeque<(Request, f64)> = Default::default();
     let mut ptr = 0usize;
@@ -91,7 +105,24 @@ pub fn reference_run(
         let total_free: usize = workers.iter().map(|a| b - a.len()).sum();
         let wait_len = carry.len() + rest.len();
         if total_free > 0 && wait_len > 0 {
-            let cum_drift = cfg.drift.cumulative(step, horizon.max(1));
+            // Age-indexed forecast (the one deliberate post-freeze change,
+            // applied in lockstep with the engine): the cumulative-drift
+            // table starts at age 0 and covers every active's age + H,
+            // so policies forecast each request from *its own* age —
+            // exactly how the completion/drift pass below applies it.
+            let max_age = workers
+                .iter()
+                .flatten()
+                .map(|a| a.age)
+                .max()
+                .unwrap_or(0);
+            let need = max_age as usize + horizon.max(1);
+            while cum_all.len() <= need {
+                let j = cum_all.len() as u64;
+                let last = *cum_all.last().expect("cum_all starts as [0.0]");
+                cum_all.push(last + cfg.drift.delta(j));
+            }
+            let cum_drift: &[f64] = &cum_all;
             let views: Vec<WorkerView> = workers
                 .iter()
                 .map(|acts| WorkerView {
@@ -106,6 +137,8 @@ pub fn reference_run(
                                 horizon as u64,
                                 &mut rng,
                             ),
+                            age: a.age,
+                            drift_offset: cum_drift[a.age as usize],
                         })
                         .collect(),
                 })
@@ -128,7 +161,7 @@ pub fn reference_run(
                 batch_cap: b,
                 workers: &views,
                 waiting: &waiting_views,
-                cum_drift: &cum_drift,
+                cum_drift,
             };
             let assignments = policy.assign(&ctx, &mut rng);
             debug_assert!(

@@ -1,10 +1,12 @@
 //! Golden parity suite for the shared incremental barrier-step engine.
 //!
-//! `sim::reference::reference_run` is a frozen, verbatim copy of the
-//! pre-refactor `sim::Simulator::run` loop (the naive O(G·B)-per-step
-//! cycle: re-summed loads, per-active predictor calls, linear
-//! complete/drift scans, fresh view allocations).  It is the golden
-//! oracle: the refactored `Simulator` — a thin driver over
+//! `sim::reference::reference_run` is a frozen copy of the pre-refactor
+//! `sim::Simulator::run` loop (the naive O(G·B)-per-step cycle:
+//! re-summed loads, per-active predictor calls, linear complete/drift
+//! scans, fresh view allocations), with one deliberate amendment made
+//! in lockstep with the engine (PR 3): the policy-facing drift
+//! forecast is age-indexed (see `sim::reference` docs).  It is the
+//! golden oracle: the refactored `Simulator` — a thin driver over
 //! `sim::engine` — must reproduce its reports (avg_imbalance,
 //! wall_time_s, total_workload, energy, TPOT, completion records) to
 //! within 1e-9 relative on fixed seeds, across policies, drift models,
@@ -205,7 +207,10 @@ fn golden_parity_zero_and_const_drift() {
 #[test]
 fn golden_parity_age_varying_cycle_drift() {
     // Cycle drift is not a constant increment: this exercises the
-    // engine's per-worker age histograms.
+    // engine's per-worker age histograms AND the age-indexed lookahead
+    // forecast (PR 3) — both the engine and the oracle forecast each
+    // active from its own age, so parity holds for lookahead policies
+    // under age-varying drift too.
     let trace = geometric_trace(45);
     check_parity(
         drain_cfg(Drift::Cycle(vec![1.0, 0.0])),
@@ -218,6 +223,26 @@ fn golden_parity_age_varying_cycle_drift() {
         Predictor::Oracle,
         &trace,
         "jsq",
+    );
+}
+
+#[test]
+fn golden_parity_age_varying_decay_drift_with_lookahead() {
+    // Decay drift under a lookahead policy: every request's forecast
+    // depends on its individual age, the regime the age-indexed fix is
+    // for.
+    let trace = geometric_trace(46);
+    check_parity(
+        drain_cfg(Drift::Decay { d0: 2.0, rate: 0.8 }),
+        Predictor::Oracle,
+        &trace,
+        "bfio:12",
+    );
+    check_parity(
+        drain_cfg(Drift::Decay { d0: 1.0, rate: 0.5 }),
+        Predictor::WindowOracle,
+        &trace,
+        "bfio:6",
     );
 }
 

@@ -1,0 +1,388 @@
+//! Fleet invariants and end-to-end coverage for the two-level routing
+//! subsystem:
+//!
+//! * property suites (in the style of `prop_policies.rs`): every
+//!   submitted request is admitted to exactly one replica and completes
+//!   exactly once, with sticky worker placement inside that replica;
+//! * the decomposition theorem of the round model: a fleet of R
+//!   1.0-speed replicas under a work-conserving router is *exactly* R
+//!   independent single-group simulations of the partitioned trace;
+//! * lifecycle churn (drain / add / remove mid-trace) respects
+//!   non-migratable state and loses nothing;
+//! * the HTTP gateway serves `/v1/completions`, `/v0/workers`, and
+//!   `/metrics` over a `FleetBackend` with R >= 2.
+
+use std::collections::{BTreeMap, HashMap};
+use std::sync::Arc;
+use std::time::Duration;
+
+use bfio_serve::config::SimConfig;
+use bfio_serve::fleet::{
+    run_fleet, FleetBackend, FleetBackendConfig, FleetConfig, FleetEvent,
+    ReplicaState,
+};
+use bfio_serve::gateway::http as ghttp;
+use bfio_serve::gateway::loadgen;
+use bfio_serve::gateway::{Gateway, GatewayConfig};
+use bfio_serve::sim::Simulator;
+use bfio_serve::util::json::Json;
+use bfio_serve::util::prop::Prop;
+use bfio_serve::util::rng::Rng;
+use bfio_serve::workload::{
+    generate_trace, ArrivalProcess, GeometricSampler, Request,
+};
+
+fn trace_of(seed: u64, per_step: usize, backlog: usize, steps: u64) -> Vec<Request> {
+    // decode capped so churn timing (drain → idle → removal) is certain
+    let mut sampler = GeometricSampler::new(5, 80, 0.25);
+    sampler.o_cap = 12;
+    let arrivals = ArrivalProcess::Fixed { per_step, initial_backlog: backlog };
+    let mut rng = Rng::new(seed);
+    generate_trace(&sampler, &arrivals, steps, &mut rng)
+}
+
+fn recording(cfg: FleetConfig) -> FleetConfig {
+    FleetConfig { record_completions: true, ..cfg }
+}
+
+// ---------------------------------------------------------------------
+// Property: exactly-one-replica admission + sticky workers
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_every_request_admitted_to_exactly_one_replica() {
+    let routers = ["wrr", "low", "powd:2", "bfio2"];
+    Prop::new(25).check(
+        "one-replica-admission",
+        |r| {
+            let replicas = 2 + r.below_usize(3);
+            let g = 1 + r.below_usize(3);
+            let b = 1 + r.below_usize(3);
+            let seed = r.next_u64();
+            let router = routers[r.below_usize(routers.len())];
+            (replicas, g, b, seed, router)
+        },
+        |&(replicas, g, b, seed, router)| {
+            let trace = trace_of(seed, 2, 10, 15);
+            let cfg = recording(FleetConfig {
+                seed,
+                ..FleetConfig::uniform(replicas, g, b, "jsq")
+            });
+            let res = run_fleet(&cfg, router, &trace, &[])
+                .map_err(|e| e.to_string())?;
+            if res.completed as usize != trace.len() {
+                return Err(format!(
+                    "{router}: completed {} of {}",
+                    res.completed,
+                    trace.len()
+                ));
+            }
+            let routed: u64 = res.per_replica.iter().map(|r| r.routed).sum();
+            if routed as usize != trace.len() {
+                return Err(format!("{router}: routed {routed}"));
+            }
+            // every trace id completes exactly once, on exactly one
+            // replica, on a worker inside that replica's range
+            let mut seen: HashMap<u64, (usize, usize)> = HashMap::new();
+            for rep in &res.per_replica {
+                if rep.admitted != rep.completed {
+                    return Err(format!(
+                        "replica {}: admitted {} != completed {}",
+                        rep.id, rep.admitted, rep.completed
+                    ));
+                }
+                for c in &rep.report.completions {
+                    if c.worker >= g {
+                        return Err(format!(
+                            "worker {} out of range (g={g})",
+                            c.worker
+                        ));
+                    }
+                    if seen.insert(c.id, (rep.id, c.worker)).is_some() {
+                        return Err(format!("id {} completed twice", c.id));
+                    }
+                }
+            }
+            if seen.len() != trace.len() {
+                return Err(format!(
+                    "{} distinct completions for {} requests",
+                    seen.len(),
+                    trace.len()
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+// ---------------------------------------------------------------------
+// Decomposition: uniform fleet == R independent single-group runs
+// ---------------------------------------------------------------------
+
+/// A fleet of R speed-1.0 replicas with a work-conserving router must
+/// produce, per replica, exactly the run the offline `Simulator` (seed
+/// `base + r`) produces on that replica's share of the trace: same
+/// placements, clocks, imbalance, energy.  This pins the round model to
+/// the single-group semantics — the fleet adds routing, nothing else.
+#[test]
+fn uniform_fleet_matches_independent_single_group_runs() {
+    let base_seed = 11u64;
+    let g = 2;
+    let b = 3;
+    let replicas = 3;
+    let trace = trace_of(21, 3, 20, 25);
+    let cfg = recording(FleetConfig {
+        seed: base_seed,
+        ..FleetConfig::uniform(replicas, g, b, "least")
+    });
+    let res = run_fleet(&cfg, "wrr", &trace, &[]).unwrap();
+    assert_eq!(res.completed as usize, trace.len());
+
+    let by_id: BTreeMap<u64, &Request> =
+        trace.iter().map(|r| (r.id, r)).collect();
+    for rep in &res.per_replica {
+        // the replica's share, in original trace order
+        let mut ids: Vec<u64> =
+            rep.report.completions.iter().map(|c| c.id).collect();
+        ids.sort_unstable();
+        let sub: Vec<Request> =
+            ids.iter().map(|id| by_id[id].clone()).collect();
+        assert_eq!(sub.len() as u64, rep.completed);
+
+        let sim_cfg = SimConfig {
+            g,
+            b,
+            seed: base_seed + rep.id as u64,
+            max_steps: 0,
+            warmup_steps: 0,
+            record_completions: true,
+            ..SimConfig::default()
+        };
+        let solo = Simulator::new(sim_cfg)
+            .run(&sub, &mut *bfio_serve::policies::by_name("least").unwrap());
+
+        assert_eq!(solo.completed, rep.completed, "replica {}", rep.id);
+        assert_eq!(solo.steps, rep.executed, "replica {}: steps", rep.id);
+        let close = |a: f64, b: f64, what: &str| {
+            let scale = 1.0_f64.max(a.abs()).max(b.abs());
+            assert!(
+                (a - b).abs() <= 1e-9 * scale,
+                "replica {}: {what}: fleet {a:.17e} vs solo {b:.17e}",
+                rep.id
+            );
+        };
+        close(rep.clock_s, solo.report.wall_time_s, "clock");
+        close(rep.report.avg_imbalance, solo.report.avg_imbalance, "imb");
+        close(rep.report.total_energy_j, solo.report.total_energy_j, "energy");
+        close(rep.report.tpot_s, solo.report.tpot_s, "tpot");
+
+        let mut a = rep.report.completions.clone();
+        let mut b2 = solo.report.completions.clone();
+        a.sort_by_key(|c| c.id);
+        b2.sort_by_key(|c| c.id);
+        for (x, y) in a.iter().zip(&b2) {
+            assert_eq!(x.id, y.id);
+            assert_eq!(x.worker, y.worker, "id {} placed differently", x.id);
+            assert_eq!(x.tokens, y.tokens);
+            close(x.arrival_clock, y.arrival_clock, "arrival_clock");
+            close(x.admit_clock, y.admit_clock, "admit_clock");
+            close(x.finish_clock, y.finish_clock, "finish_clock");
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Lifecycle churn
+// ---------------------------------------------------------------------
+
+#[test]
+fn churn_drain_add_remove_loses_nothing() {
+    let trace = trace_of(31, 2, 8, 40);
+    let cfg = recording(FleetConfig {
+        seed: 5,
+        ..FleetConfig::uniform(3, 2, 2, "jsq")
+    });
+    let events = vec![
+        FleetEvent::Drain { round: 10, replica: 0 },
+        FleetEvent::Add { round: 15, speed: 1.5 },
+        FleetEvent::Remove { round: 20, replica: 1 },
+    ];
+    let res = run_fleet(&cfg, "low", &trace, &events).unwrap();
+    assert_eq!(res.completed as usize, trace.len(), "churn loses nothing");
+    assert_eq!(res.leftover_waiting, 0);
+    assert_eq!(res.per_replica.len(), 4, "added replica reported");
+
+    // drained replica 0: nothing routed after round 10 — every one of
+    // its completions arrived at or before the drain round
+    let r0 = &res.per_replica[0];
+    assert_eq!(r0.state, ReplicaState::Draining { remove: false });
+    for c in &r0.report.completions {
+        let arrival = trace.iter().find(|t| t.id == c.id).unwrap().arrival_step;
+        assert!(arrival <= 10, "id {} arrived at {arrival} > drain", c.id);
+    }
+    // removed replica 1 retired after finishing in place
+    assert_eq!(res.per_replica[1].state, ReplicaState::Removed);
+    for c in &res.per_replica[1].report.completions {
+        let arrival = trace.iter().find(|t| t.id == c.id).unwrap().arrival_step;
+        assert!(arrival <= 20, "id {} arrived past removal", c.id);
+    }
+    // the late-added replica (id 3, speed 1.5) picked up real work
+    let added = &res.per_replica[3];
+    assert_eq!(added.speed, 1.5);
+    assert!(added.completed > 0, "added replica never used");
+}
+
+#[test]
+fn heterogeneous_speeds_shift_work_to_fast_replicas() {
+    let trace = trace_of(41, 4, 40, 30);
+    let cfg = FleetConfig {
+        seed: 9,
+        speeds: vec![1.0, 4.0],
+        ..FleetConfig::uniform(2, 2, 4, "least")
+    };
+    let res = run_fleet(&cfg, "low", &trace, &[]).unwrap();
+    assert_eq!(res.completed as usize, trace.len());
+    let slow = &res.per_replica[0];
+    let fast = &res.per_replica[1];
+    assert!(
+        fast.routed > slow.routed,
+        "least-outstanding should favor the 4x replica: {} vs {}",
+        fast.routed,
+        slow.routed
+    );
+    // speed-aware routing keeps the virtual clocks far closer than the
+    // 4x raw speed gap
+    assert!(res.clock_ratio < 2.0, "clock ratio {}", res.clock_ratio);
+}
+
+// ---------------------------------------------------------------------
+// Gateway over a fleet
+// ---------------------------------------------------------------------
+
+fn boot_fleet(router: &str, policy: &str) -> (Gateway, String) {
+    let backend = FleetBackend::new(FleetBackendConfig {
+        replicas: 2,
+        g: 2,
+        b: 2,
+        policy: policy.to_string(),
+        router: router.to_string(),
+        step_delay: Duration::ZERO,
+        batch_window: Duration::ZERO,
+        ..FleetBackendConfig::default()
+    })
+    .unwrap();
+    let gw = Gateway::spawn(
+        GatewayConfig { addr: "127.0.0.1:0".to_string(), threads: 8 },
+        Arc::new(backend),
+    )
+    .unwrap();
+    let authority = gw.addr.to_string();
+    (gw, authority)
+}
+
+#[test]
+fn gateway_serves_completions_over_a_fleet() {
+    let (gw, a) = boot_fleet("low", "bfio:8");
+    for i in 0..6 {
+        let body = format!(r#"{{"prompt": [7, 8, {i}], "max_tokens": 4}}"#);
+        let r = ghttp::http_call(&a, "POST", "/v1/completions", Some(&body))
+            .unwrap();
+        assert_eq!(r.status, 200, "body: {}", r.body_str().unwrap_or(""));
+        let v = Json::parse(r.body_str().unwrap()).unwrap();
+        assert!(v
+            .get("model")
+            .unwrap()
+            .as_str()
+            .unwrap()
+            .starts_with("fleet(2x2)/"));
+        let worker = v
+            .get("bfio")
+            .unwrap()
+            .get("worker")
+            .unwrap()
+            .as_usize()
+            .unwrap();
+        assert!(worker < 4, "global worker id over 2 replicas x 2 workers");
+    }
+
+    // /v0/workers: R·G workers with replica fields + a replicas array
+    let r = ghttp::http_call(&a, "GET", "/v0/workers", None).unwrap();
+    assert_eq!(r.status, 200);
+    let v = Json::parse(r.body_str().unwrap()).unwrap();
+    let workers = v.get("workers").unwrap().as_arr().unwrap();
+    assert_eq!(workers.len(), 4);
+    for w in workers {
+        assert!(w.get("replica").unwrap().as_usize().unwrap() < 2);
+    }
+    let replicas = v.get("replicas").unwrap().as_arr().unwrap();
+    assert_eq!(replicas.len(), 2);
+    let done: u64 = replicas
+        .iter()
+        .map(|r| r.get("completed").unwrap().as_u64().unwrap())
+        .sum();
+    assert_eq!(done, 6);
+    assert!(replicas
+        .iter()
+        .all(|r| r.get("state").unwrap().as_str().unwrap() == "accepting"));
+
+    // /metrics: per-replica labels on worker series + replica families
+    let r = ghttp::http_call(&a, "GET", "/metrics", None).unwrap();
+    assert_eq!(r.status, 200);
+    let text = r.body_str().unwrap();
+    assert!(text.contains("bfio_worker_load{replica=\"0\",worker=\"0\"}"));
+    assert!(text.contains("bfio_worker_load{replica=\"1\",worker=\"2\"}"));
+    assert!(text.contains("# TYPE bfio_replica_load gauge"));
+    assert!(text.contains("bfio_replica_completed_total{replica=\"0\"}"));
+    assert!(text.contains("bfio_replica_speed{replica=\"1\",state=\"accepting\"}"));
+    assert_eq!(
+        loadgen::prom_value(text, "bfio_requests_total"),
+        Some(6.0)
+    );
+    assert_eq!(loadgen::prom_value(text, "bfio_tokens_total"), Some(24.0));
+    assert!(loadgen::prom_value(text, "bfio_energy_joules").unwrap() > 0.0);
+    gw.shutdown();
+}
+
+#[test]
+fn concurrent_gateway_fleet_requests_spread_over_replicas() {
+    let (gw, a) = boot_fleet("wrr", "jsq");
+    let n = 10usize;
+    let handles: Vec<_> = (0..n)
+        .map(|i| {
+            let a = a.clone();
+            std::thread::spawn(move || {
+                let body =
+                    format!(r#"{{"prompt": [1, 2, {i}], "max_tokens": 3}}"#);
+                let r =
+                    ghttp::http_call(&a, "POST", "/v1/completions", Some(&body))
+                        .unwrap();
+                assert_eq!(r.status, 200);
+                let v = Json::parse(r.body_str().unwrap()).unwrap();
+                v.get("bfio")
+                    .unwrap()
+                    .get("request_id")
+                    .unwrap()
+                    .as_u64()
+                    .unwrap()
+            })
+        })
+        .collect();
+    let mut ids: Vec<u64> =
+        handles.into_iter().map(|h| h.join().unwrap()).collect();
+    ids.sort_unstable();
+    ids.dedup();
+    assert_eq!(ids.len(), n, "request ids unique");
+
+    let r = ghttp::http_call(&a, "GET", "/v0/workers", None).unwrap();
+    let v = Json::parse(r.body_str().unwrap()).unwrap();
+    let per: u64 = v
+        .get("workers")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|w| w.get("completed").unwrap().as_u64().unwrap())
+        .sum();
+    assert_eq!(per, n as u64);
+    gw.shutdown();
+}

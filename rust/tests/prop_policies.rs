@@ -29,10 +29,7 @@ fn gen_instance(r: &mut Rng) -> Instance {
         .map(|_| {
             let occupied = r.below_usize(b + 1);
             let active: Vec<ActiveView> = (0..occupied)
-                .map(|_| ActiveView {
-                    load: 1.0 + r.f64() * 1000.0,
-                    pred_remaining: 1 + r.below(50),
-                })
+                .map(|_| ActiveView::fresh(1.0 + r.f64() * 1000.0, 1 + r.below(50)))
                 .collect();
             WorkerView {
                 load: active.iter().map(|a| a.load).sum(),
@@ -178,7 +175,7 @@ fn prop_heuristic_within_smax_of_exact() {
                     load: l,
                     free_slots: c,
                     active: if l > 0.0 {
-                        vec![ActiveView { load: l, pred_remaining: 100 }]
+                        vec![ActiveView::fresh(l, 100)]
                     } else {
                         vec![]
                     },
@@ -285,7 +282,7 @@ fn prop_windowed_objective_eval_apply_consistent() {
                     free_slots: 1,
                     active: loads[gi * 3..gi * 3 + 3]
                         .iter()
-                        .map(|&(l, r)| ActiveView { load: l, pred_remaining: r })
+                        .map(|&(l, r)| ActiveView::fresh(l, r))
                         .collect(),
                 })
                 .collect();
