@@ -1,0 +1,79 @@
+//! Autoscale sweep: the same diurnal BurstGPT-like trace served by the
+//! fleet under {static-R, target-tracking, energy-marginal} scale
+//! policies — the machine-readable evidence that closing the loop from
+//! the power model to fleet lifecycle lowers energy per token.
+//!
+//! Emits `BENCH_autoscale.json` (per-policy energy/token, Theorem-4
+//! energy decomposition, TPOT, replica-rounds used, action counts, and
+//! ratios against the static baseline).  `-- --smoke` runs the CI-size
+//! sweep; `-- --out PATH` overrides the output file (CI uses it to
+//! regenerate the canonical file with measured numbers).
+
+use bfio_serve::experiments::autoscale::{
+    bench_json, rows_to_json, run_autoscale_rows, AutoscaleScale,
+};
+use std::time::Instant;
+
+fn main() {
+    let argv: Vec<String> = std::env::args().collect();
+    let smoke = argv.iter().any(|a| a == "--smoke");
+    let out_override = argv
+        .iter()
+        .position(|a| a == "--out")
+        .and_then(|i| argv.get(i + 1))
+        .cloned();
+    let scales: Vec<AutoscaleScale> = if smoke {
+        vec![AutoscaleScale::smoke()]
+    } else {
+        vec![AutoscaleScale::smoke(), AutoscaleScale::full()]
+    };
+    let policies: Vec<String> = ["static", "target", "energy"]
+        .iter()
+        .map(|p| p.to_string())
+        .collect();
+
+    let t_all = Instant::now();
+    let mut sweep = Vec::new();
+    for scale in &scales {
+        println!(
+            "autoscale sweep: {}x({}x{}), {} rounds, diurnal {:.2}..{:.2}/{}",
+            scale.replicas,
+            scale.g,
+            scale.b,
+            scale.rounds,
+            scale.valley,
+            scale.peak,
+            scale.period
+        );
+        let rows = run_autoscale_rows(scale, &policies).expect("autoscale run");
+        for r in &rows {
+            println!(
+                "  {:<16} {:>10.4} J/tok {:>9.4} tpot {:>9} r-rounds \
+                 (drn {} rea {} add {})",
+                r.policy,
+                r.energy_per_token_j,
+                r.tpot_s,
+                r.replica_rounds,
+                r.drains,
+                r.reactivations,
+                r.adds
+            );
+        }
+        sweep.push(rows_to_json(scale, &rows));
+    }
+    let total_ms = t_all.elapsed().as_secs_f64() * 1e3;
+    println!("total {total_ms:.0} ms");
+
+    // Same document shape as `bfio autoscale`.
+    let json = bench_json(smoke, total_ms, sweep);
+    let default_path = if smoke {
+        "BENCH_autoscale_smoke.json"
+    } else {
+        "BENCH_autoscale.json"
+    };
+    let path = out_override.as_deref().unwrap_or(default_path);
+    match std::fs::write(path, json.to_string_pretty() + "\n") {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+}

@@ -1,0 +1,327 @@
+//! The actuator: turns [`ScaleDecision`]s into replica lifecycle
+//! actions on a live [`FleetCore`], with the anti-flap machinery every
+//! policy shares:
+//!
+//! * **dwell** — a non-Hold decision must persist for `dwell_rounds`
+//!   consecutive ticks before anything happens (one noisy round never
+//!   moves the fleet);
+//! * **cooldown** — at least `cooldown_rounds` rounds between actions,
+//!   so a scale move's effect is observed before the next one;
+//! * **bounds** — never below `min_replicas` accepting, never above
+//!   `max_replicas` live.
+//!
+//! Scale-up prefers the **warm pool**: a draining (not removed) replica
+//! is reactivated in place — its engine, actives, and KV state are
+//! already resident — before a cold replica is added.  Scale-down
+//! drains warm (`remove: false`): the replica finishes its actives,
+//! stops costing rounds once idle, and stays reactivatable.
+
+use crate::fleet::FleetCore;
+
+use super::policy::ScaleDecision;
+use super::signal::FleetSignal;
+
+/// Actuator bounds and hysteresis knobs.
+#[derive(Clone, Debug)]
+pub struct ActuatorConfig {
+    /// Floor on accepting replicas (scale-down stops here).
+    pub min_replicas: usize,
+    /// Cap on live (non-removed) replicas (scale-up stops here).
+    pub max_replicas: usize,
+    /// Rounds between actions.
+    pub cooldown_rounds: u64,
+    /// Consecutive same-direction decisions required before acting.
+    pub dwell_rounds: u64,
+    /// Speed factor for cold-added replicas.
+    pub add_speed: f64,
+}
+
+impl Default for ActuatorConfig {
+    fn default() -> Self {
+        ActuatorConfig {
+            min_replicas: 1,
+            max_replicas: 8,
+            cooldown_rounds: 20,
+            dwell_rounds: 5,
+            add_speed: 1.0,
+        }
+    }
+}
+
+/// One action the actuator applied to the core.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AppliedAction {
+    /// Cold add of a fresh replica.
+    Added { round: u64, replica: usize },
+    /// Warm add: a draining replica returned to the rotation.
+    Reactivated { round: u64, replica: usize },
+    /// Warm drain: queued work re-routed, actives finish in place.
+    Drained { round: u64, replica: usize },
+}
+
+impl AppliedAction {
+    pub fn round(&self) -> u64 {
+        match *self {
+            AppliedAction::Added { round, .. }
+            | AppliedAction::Reactivated { round, .. }
+            | AppliedAction::Drained { round, .. } => round,
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            AppliedAction::Added { .. } => "add",
+            AppliedAction::Reactivated { .. } => "reactivate",
+            AppliedAction::Drained { .. } => "drain",
+        }
+    }
+}
+
+/// Sequencer state.  See the module docs for the hysteresis rules.
+#[derive(Clone, Debug)]
+pub struct Actuator {
+    pub cfg: ActuatorConfig,
+    last_action_round: Option<u64>,
+    up_streak: u64,
+    down_streak: u64,
+}
+
+impl Actuator {
+    pub fn new(cfg: ActuatorConfig) -> Actuator {
+        Actuator {
+            cfg,
+            last_action_round: None,
+            up_streak: 0,
+            down_streak: 0,
+        }
+    }
+
+    pub fn last_action_round(&self) -> Option<u64> {
+        self.last_action_round
+    }
+
+    /// Rounds left before the next action is allowed (0 = ready).
+    pub fn cooldown_remaining(&self, round: u64) -> u64 {
+        match self.last_action_round {
+            None => 0,
+            Some(last) => self
+                .cfg
+                .cooldown_rounds
+                .saturating_sub(round.saturating_sub(last)),
+        }
+    }
+
+    /// Apply one decision against the core (or don't — dwell, cooldown,
+    /// and bounds all gate it).  Returns the action actually taken.
+    pub fn act<T, P>(
+        &mut self,
+        decision: ScaleDecision,
+        sig: &FleetSignal,
+        core: &mut FleetCore<T, P>,
+        round: u64,
+    ) -> Option<AppliedAction> {
+        match decision {
+            ScaleDecision::Hold => {
+                self.up_streak = 0;
+                self.down_streak = 0;
+                None
+            }
+            ScaleDecision::Up => {
+                self.down_streak = 0;
+                self.up_streak = self.up_streak.saturating_add(1);
+                if self.up_streak < self.cfg.dwell_rounds
+                    || self.cooldown_remaining(round) > 0
+                {
+                    return None;
+                }
+                let acted = self.scale_up(sig, core, round);
+                if acted.is_some() {
+                    self.note_acted(round);
+                }
+                acted
+            }
+            ScaleDecision::Down { replica } => {
+                self.up_streak = 0;
+                self.down_streak = self.down_streak.saturating_add(1);
+                if self.down_streak < self.cfg.dwell_rounds
+                    || self.cooldown_remaining(round) > 0
+                {
+                    return None;
+                }
+                if sig.accepting <= self.cfg.min_replicas {
+                    return None;
+                }
+                let is_accepting = sig
+                    .replicas
+                    .iter()
+                    .any(|r| r.id == replica && r.accepting);
+                if !is_accepting {
+                    return None;
+                }
+                core.drain_replica(replica, false);
+                self.note_acted(round);
+                Some(AppliedAction::Drained { round, replica })
+            }
+        }
+    }
+
+    fn note_acted(&mut self, round: u64) {
+        self.last_action_round = Some(round);
+        self.up_streak = 0;
+        self.down_streak = 0;
+    }
+
+    fn scale_up<T, P>(
+        &mut self,
+        sig: &FleetSignal,
+        core: &mut FleetCore<T, P>,
+        round: u64,
+    ) -> Option<AppliedAction> {
+        // Warm pool first: lowest-id draining replica (deterministic).
+        // Remove-pending drains are explicit decommissions (admin
+        // `remove`), not capacity in reserve — never resurrect them.
+        let warm = sig
+            .replicas
+            .iter()
+            .filter(|r| r.draining && !r.remove_pending)
+            .map(|r| r.id)
+            .min();
+        if let Some(id) = warm {
+            if core.reactivate_replica(id) {
+                return Some(AppliedAction::Reactivated { round, replica: id });
+            }
+        }
+        if sig.live >= self.cfg.max_replicas {
+            return None;
+        }
+        match core.add_replica(self.cfg.add_speed) {
+            Ok(id) => Some(AppliedAction::Added { round, replica: id }),
+            Err(_) => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::autoscale::signal;
+    use crate::config::PowerConfig;
+    use crate::fleet::router::WeightedRoundRobin;
+    use crate::fleet::FleetConfig;
+
+    fn core(replicas: usize) -> FleetCore<u64, ()> {
+        FleetCore::new(
+            FleetConfig::uniform(replicas, 2, 2, "fcfs"),
+            Box::new(WeightedRoundRobin::new()),
+        )
+        .unwrap()
+    }
+
+    fn sig_of(core: &FleetCore<u64, ()>) -> signal::FleetSignal {
+        let sim = crate::config::SimConfig::default();
+        signal::sample(
+            core.round(),
+            core.overflow_len(),
+            &core.snapshot(),
+            sim.t_token,
+            sim.c_overhead,
+            &PowerConfig::a100(),
+        )
+    }
+
+    fn actuator(dwell: u64, cooldown: u64) -> Actuator {
+        Actuator::new(ActuatorConfig {
+            min_replicas: 1,
+            max_replicas: 3,
+            cooldown_rounds: cooldown,
+            dwell_rounds: dwell,
+            add_speed: 1.0,
+        })
+    }
+
+    #[test]
+    fn dwell_gates_single_round_blips() {
+        let mut c = core(2);
+        let mut a = actuator(3, 0);
+        let sig = sig_of(&c);
+        // two Down ticks: nothing; a Hold resets; three more: acts
+        assert!(a.act(ScaleDecision::Down { replica: 0 }, &sig, &mut c, 0).is_none());
+        assert!(a.act(ScaleDecision::Down { replica: 0 }, &sig, &mut c, 1).is_none());
+        assert!(a.act(ScaleDecision::Hold, &sig, &mut c, 2).is_none());
+        assert!(a.act(ScaleDecision::Down { replica: 0 }, &sig, &mut c, 3).is_none());
+        assert!(a.act(ScaleDecision::Down { replica: 0 }, &sig, &mut c, 4).is_none());
+        let acted = a.act(ScaleDecision::Down { replica: 0 }, &sig, &mut c, 5);
+        assert_eq!(
+            acted,
+            Some(AppliedAction::Drained { round: 5, replica: 0 })
+        );
+    }
+
+    #[test]
+    fn cooldown_spaces_actions_and_up_prefers_warm_pool() {
+        let mut c = core(2);
+        let mut a = actuator(1, 10);
+        let sig = sig_of(&c);
+        let acted = a.act(ScaleDecision::Down { replica: 1 }, &sig, &mut c, 0);
+        assert_eq!(acted, Some(AppliedAction::Drained { round: 0, replica: 1 }));
+        // immediately wants up again: cooldown blocks
+        let sig = sig_of(&c);
+        assert!(a.act(ScaleDecision::Up, &sig, &mut c, 1).is_none());
+        assert_eq!(a.cooldown_remaining(1), 9);
+        // after the cooldown, up reactivates the drained replica
+        let acted = a.act(ScaleDecision::Up, &sig, &mut c, 10);
+        assert_eq!(
+            acted,
+            Some(AppliedAction::Reactivated { round: 10, replica: 1 })
+        );
+        // no warm replica left: a further up cold-adds (max 3)
+        let sig = sig_of(&c);
+        let acted = a.act(ScaleDecision::Up, &sig, &mut c, 20);
+        assert_eq!(acted, Some(AppliedAction::Added { round: 20, replica: 2 }));
+        // at max_replicas: up is a no-op and does not reset cooldown
+        let sig = sig_of(&c);
+        assert!(a.act(ScaleDecision::Up, &sig, &mut c, 30).is_none());
+        assert_eq!(c.snapshot().len(), 3);
+    }
+
+    #[test]
+    fn scale_up_never_resurrects_a_remove_pending_drain() {
+        // Replica 1 is draining toward removal (operator decommission)
+        // but still busy, so it has not retired yet: scale-up must
+        // cold-add instead of reactivating it.
+        let mut c = core(2);
+        for i in 0..10u64 {
+            c.submit(5.0, 0, i * 1000 + 9);
+        }
+        let mut out = Vec::new();
+        c.run_round(
+            &mut |_r: usize, t: u64| (t / 1000, t % 1000, ()),
+            &mut out,
+        );
+        c.drain_replica(1, true);
+        let sig = sig_of(&c);
+        assert!(sig.replicas.iter().any(|r| r.remove_pending));
+        let mut a = actuator(1, 0);
+        let acted = a.act(ScaleDecision::Up, &sig, &mut c, 0);
+        assert_eq!(acted, Some(AppliedAction::Added { round: 0, replica: 2 }));
+        let snaps = c.snapshot();
+        assert_ne!(
+            snaps[1].state,
+            crate::fleet::ReplicaState::Accepting,
+            "decommission stands"
+        );
+    }
+
+    #[test]
+    fn min_replicas_floor_holds() {
+        let mut c = core(1);
+        let mut a = actuator(1, 0);
+        let sig = sig_of(&c);
+        assert!(a.act(ScaleDecision::Down { replica: 0 }, &sig, &mut c, 0).is_none());
+        // and a down against a non-accepting target is a no-op
+        let mut c2 = core(2);
+        c2.drain_replica(1, false);
+        let sig = sig_of(&c2);
+        assert!(a.act(ScaleDecision::Down { replica: 1 }, &sig, &mut c2, 0).is_none());
+    }
+}

@@ -1,0 +1,410 @@
+//! Energy-aware elastic autoscaler: the control plane that closes the
+//! loop from the paper's power model (Section 5.2 / Theorem 4) to fleet
+//! lifecycle (drain / add / reactivate on a live fleet).
+//!
+//! ```text
+//!             ┌────────────────────────── controller ─────────────────────────┐
+//!             │  signal::sample          policy::decide        actuator::act  │
+//!  FleetCore ─┼─► ReplicaSignal per r ─► Hold | Up | Down ──► dwell+cooldown ─┼─► FleetCore
+//!   snapshot  │  outstanding, Eq. 19 Δt,  static | target |    min/max bounds │   drain /
+//!             │  completion horizon,      energy-marginal      warm pool      │   add /
+//!             │  P(u), Theorem-4 rates                                        │   reactivate
+//!             └───────────────────────────────────────────────────────────────┘
+//! ```
+//!
+//! Per round the [`Controller`] samples every replica (outstanding
+//! work, Eq. 19 predicted step time, predicted completion horizon,
+//! instantaneous power and the Theorem-4 energy decomposition rates),
+//! asks its [`ScalePolicy`] for a decision, and lets the [`Actuator`]
+//! apply it under hysteresis (dwell + cooldown) and replica bounds —
+//! steady load never flaps.  Scale-down is a *graceful drain*:
+//! non-migratable actives finish in place, queued work re-routes
+//! through the tier-1 router; scale-up prefers the warm pool
+//! (reactivating a draining replica) before cold-adding.
+//!
+//! Why this saves energy: with `C ≫ t_ℓ·L_max` every stepping replica
+//! pays a fixed `C·G·P_idle` per round plus the idle-at-barrier term of
+//! Theorem 4, so a lightly-loaded fleet spread over R replicas burns
+//! R× the overhead for the same tokens.  Consolidating the valley load
+//! onto fewer replicas recovers exactly the waste the decomposition
+//! exposes — up to Corollary 1's `P_idle/C_γ` (≈ 52.6 % on A100
+//! constants) of the synchronized-phase energy.
+//!
+//! Entry points: [`run_autoscaled`] (offline driver over a trace — the
+//! `bfio autoscale` sweep and `benches/autoscale.rs` build on it) and
+//! [`Controller::tick`] (the per-round hook the gateway's
+//! [`crate::fleet::FleetBackend`] drives online).
+
+pub mod actuator;
+pub mod policy;
+pub mod signal;
+
+pub use actuator::{Actuator, ActuatorConfig, AppliedAction};
+pub use policy::{
+    scale_policy_by_name, EnergyMarginal, ScaleDecision, ScalePolicy,
+    StaticPolicy, TargetTracking,
+};
+pub use signal::{FleetSignal, ReplicaSignal};
+
+use anyhow::{anyhow, ensure, Result};
+
+use crate::config::PowerConfig;
+use crate::fleet::{
+    run_fleet_hooked, FleetConfig, FleetCore, FleetEvent, FleetResult, RoundHook,
+};
+use crate::workload::Request;
+
+/// Controller configuration.
+#[derive(Clone, Debug)]
+pub struct AutoscaleConfig {
+    /// Scale policy: `static | target[:<lo>,<hi>] | energy[:<waste>]`
+    /// (see [`scale_policy_by_name`]).
+    pub policy: String,
+    /// Floor on accepting replicas.
+    pub min_replicas: usize,
+    /// Cap on live (non-removed) replicas.
+    pub max_replicas: usize,
+    /// Rounds between actions.
+    pub cooldown_rounds: u64,
+    /// Consecutive same-direction decisions before acting.
+    pub dwell_rounds: u64,
+    /// Speed factor for cold-added replicas.
+    pub add_speed: f64,
+}
+
+impl Default for AutoscaleConfig {
+    fn default() -> Self {
+        AutoscaleConfig {
+            policy: "energy".to_string(),
+            min_replicas: 1,
+            max_replicas: 8,
+            cooldown_rounds: 20,
+            dwell_rounds: 5,
+            add_speed: 1.0,
+        }
+    }
+}
+
+/// Controller state, for `/v0/admin/replicas` and the
+/// `bfio_autoscale_*` Prometheus families.
+#[derive(Clone, Debug, Default)]
+pub struct ControllerState {
+    pub policy: String,
+    pub paused: bool,
+    pub min_replicas: usize,
+    pub max_replicas: usize,
+    /// Latest observation: accepting / live replica counts and
+    /// demand-over-capacity utilization.
+    pub accepting: usize,
+    pub live: usize,
+    pub utilization: f64,
+    /// Actions taken so far.
+    pub adds: u64,
+    pub drains: u64,
+    pub reactivations: u64,
+    pub last_action_round: Option<u64>,
+    pub cooldown_remaining: u64,
+    /// Latest decision label (`hold | up | down | paused`).
+    pub last_decision: String,
+    pub ticks: u64,
+}
+
+/// The per-round autoscale controller.  Generic over the core's
+/// ticket/payload pair, so the same controller drives the offline
+/// driver and the online [`crate::fleet::FleetBackend`].
+pub struct Controller {
+    policy: Box<dyn ScalePolicy>,
+    actuator: Actuator,
+    power: PowerConfig,
+    t_token: f64,
+    c_overhead: f64,
+    paused: bool,
+    /// Recent actions, newest last (bounded; counters below are the
+    /// full-lifetime totals).
+    history: Vec<AppliedAction>,
+    adds: u64,
+    drains: u64,
+    reactivations: u64,
+    // latest-observation mirror for `state()`
+    accepting: usize,
+    live: usize,
+    utilization: f64,
+    last_decision: String,
+    last_round: u64,
+    ticks: u64,
+}
+
+impl Controller {
+    /// Build a controller for a fleet with `fleet`'s Eq. 19 constants
+    /// (the power model is the paper's A100 configuration, matching the
+    /// per-replica recorders).
+    pub fn new(cfg: &AutoscaleConfig, fleet: &FleetConfig) -> Result<Controller> {
+        ensure!(cfg.min_replicas >= 1, "autoscaler needs min_replicas >= 1");
+        ensure!(
+            cfg.max_replicas >= cfg.min_replicas,
+            "autoscaler needs max_replicas >= min_replicas"
+        );
+        ensure!(cfg.dwell_rounds >= 1, "autoscaler needs dwell_rounds >= 1");
+        let power = PowerConfig::a100();
+        let policy = scale_policy_by_name(&cfg.policy, &power)
+            .ok_or_else(|| anyhow!("unknown scale policy {:?}", cfg.policy))?;
+        Ok(Controller {
+            policy,
+            actuator: Actuator::new(ActuatorConfig {
+                min_replicas: cfg.min_replicas,
+                max_replicas: cfg.max_replicas,
+                cooldown_rounds: cfg.cooldown_rounds,
+                dwell_rounds: cfg.dwell_rounds,
+                add_speed: cfg.add_speed,
+            }),
+            power,
+            t_token: fleet.t_token,
+            c_overhead: fleet.c_overhead,
+            paused: false,
+            history: Vec::new(),
+            adds: 0,
+            drains: 0,
+            reactivations: 0,
+            accepting: fleet.speeds.len(),
+            live: fleet.speeds.len(),
+            utilization: 0.0,
+            last_decision: "hold".to_string(),
+            last_round: 0,
+            ticks: 0,
+        })
+    }
+
+    pub fn policy_name(&self) -> String {
+        self.policy.name()
+    }
+
+    pub fn paused(&self) -> bool {
+        self.paused
+    }
+
+    /// Pause / resume the control loop (admin override; manual
+    /// lifecycle commands keep working while paused).
+    pub fn set_paused(&mut self, paused: bool) {
+        self.paused = paused;
+    }
+
+    /// Applied actions in order, newest last (bounded to the most
+    /// recent 1024; `state()` carries the lifetime totals).
+    pub fn history(&self) -> &[AppliedAction] {
+        &self.history
+    }
+
+    /// One control-loop iteration: sample → decide → (maybe) act.
+    pub fn tick<T, P>(&mut self, core: &mut FleetCore<T, P>) -> Option<AppliedAction> {
+        self.ticks += 1;
+        self.last_round = core.round();
+        let snaps = core.snapshot();
+        let sig = signal::sample(
+            core.round(),
+            core.overflow_len(),
+            &snaps,
+            self.t_token,
+            self.c_overhead,
+            &self.power,
+        );
+        self.accepting = sig.accepting;
+        self.live = sig.live;
+        self.utilization = sig.utilization;
+        if self.paused {
+            self.last_decision = "paused".to_string();
+            return None;
+        }
+        let decision = self.policy.decide(&sig);
+        self.last_decision = decision.label().to_string();
+        let acted = self.actuator.act(decision, &sig, core, sig.round);
+        if let Some(a) = acted {
+            match a {
+                AppliedAction::Added { .. } => self.adds += 1,
+                AppliedAction::Drained { .. } => self.drains += 1,
+                AppliedAction::Reactivated { .. } => self.reactivations += 1,
+            }
+            // Bound the in-memory trail: a long-lived gateway scaling
+            // forever must not grow without limit (the counters keep
+            // the lifetime totals).
+            const HISTORY_CAP: usize = 1024;
+            if self.history.len() == HISTORY_CAP {
+                self.history.remove(0);
+            }
+            self.history.push(a);
+        }
+        acted
+    }
+
+    pub fn state(&self) -> ControllerState {
+        ControllerState {
+            policy: self.policy.name(),
+            paused: self.paused,
+            min_replicas: self.actuator.cfg.min_replicas,
+            max_replicas: self.actuator.cfg.max_replicas,
+            accepting: self.accepting,
+            live: self.live,
+            utilization: self.utilization,
+            adds: self.adds,
+            drains: self.drains,
+            reactivations: self.reactivations,
+            last_action_round: self.actuator.last_action_round(),
+            cooldown_remaining: self.actuator.cooldown_remaining(self.last_round),
+            last_decision: self.last_decision.clone(),
+            ticks: self.ticks,
+        }
+    }
+}
+
+impl RoundHook for Controller {
+    fn on_round(&mut self, core: &mut FleetCore<u32, ()>) {
+        let _ = self.tick(core);
+    }
+
+    fn can_unwedge(&self) -> bool {
+        !self.paused
+    }
+}
+
+/// Outcome of one autoscaled offline run.
+#[derive(Clone, Debug)]
+pub struct AutoscaleResult {
+    pub fleet: FleetResult,
+    pub controller: ControllerState,
+    pub actions: Vec<AppliedAction>,
+    /// Σ barrier steps actually executed across replicas — the
+    /// "replica-rounds used" a static fleet pays and an elastic one
+    /// saves.
+    pub replica_rounds: u64,
+    /// Total energy over total generated tokens, J/token.
+    pub energy_per_token_j: f64,
+}
+
+/// [`crate::fleet::run_fleet`] with the controller in the loop: the
+/// offline closed-loop driver.  With the `static` policy this is
+/// bit-identical to the open-loop `run_fleet` (locked by
+/// `rust/tests/autoscale.rs`).
+pub fn run_autoscaled(
+    cfg: &FleetConfig,
+    router_name: &str,
+    auto: &AutoscaleConfig,
+    trace: &[Request],
+    events: &[FleetEvent],
+) -> Result<AutoscaleResult> {
+    let mut controller = Controller::new(auto, cfg)?;
+    let fleet =
+        run_fleet_hooked(cfg, router_name, trace, events, Some(&mut controller))?;
+    let replica_rounds = fleet.steps;
+    let energy_per_token_j = if fleet.total_tokens > 0.0 {
+        fleet.energy_j / fleet.total_tokens
+    } else {
+        0.0
+    };
+    Ok(AutoscaleResult {
+        controller: controller.state(),
+        actions: controller.history().to_vec(),
+        fleet,
+        replica_rounds,
+        energy_per_token_j,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+    use crate::workload::{generate_trace, ArrivalProcess, GeometricSampler};
+
+    fn trace_of(seed: u64, per_step: usize, steps: u64) -> Vec<Request> {
+        let mut sampler = GeometricSampler::new(5, 50, 0.25);
+        sampler.o_cap = 12;
+        let arrivals =
+            ArrivalProcess::Fixed { per_step, initial_backlog: 8 };
+        let mut rng = Rng::new(seed);
+        generate_trace(&sampler, &arrivals, steps, &mut rng)
+    }
+
+    #[test]
+    fn unknown_policy_and_bad_bounds_rejected() {
+        let fleet = FleetConfig::uniform(2, 2, 2, "jsq");
+        let bad = AutoscaleConfig {
+            policy: "nope".into(),
+            ..AutoscaleConfig::default()
+        };
+        assert!(Controller::new(&bad, &fleet).is_err());
+        let bad = AutoscaleConfig { min_replicas: 0, ..AutoscaleConfig::default() };
+        assert!(Controller::new(&bad, &fleet).is_err());
+        let bad = AutoscaleConfig {
+            min_replicas: 4,
+            max_replicas: 2,
+            ..AutoscaleConfig::default()
+        };
+        assert!(Controller::new(&bad, &fleet).is_err());
+    }
+
+    #[test]
+    fn static_run_completes_and_records_no_actions() {
+        let trace = trace_of(1, 2, 30);
+        let cfg = FleetConfig::uniform(2, 2, 2, "jsq");
+        let auto = AutoscaleConfig {
+            policy: "static".into(),
+            ..AutoscaleConfig::default()
+        };
+        let res = run_autoscaled(&cfg, "low", &auto, &trace, &[]).unwrap();
+        assert_eq!(res.fleet.completed as usize, trace.len());
+        assert!(res.actions.is_empty());
+        assert_eq!(res.controller.drains + res.controller.adds, 0);
+        assert_eq!(res.replica_rounds, res.fleet.steps);
+        assert!(res.energy_per_token_j > 0.0);
+        assert!(res.controller.ticks > 0);
+    }
+
+    #[test]
+    fn energy_policy_consolidates_a_thin_fleet() {
+        // 4 replicas for a trickle of work: the controller must drain
+        // down toward min_replicas and everything still completes.
+        let trace = trace_of(2, 1, 60);
+        let cfg = FleetConfig::uniform(4, 2, 4, "jsq");
+        let auto = AutoscaleConfig {
+            policy: "energy".into(),
+            min_replicas: 1,
+            max_replicas: 4,
+            cooldown_rounds: 5,
+            dwell_rounds: 2,
+            ..AutoscaleConfig::default()
+        };
+        let res = run_autoscaled(&cfg, "low", &auto, &trace, &[]).unwrap();
+        assert_eq!(res.fleet.completed as usize, trace.len(), "nothing lost");
+        assert_eq!(res.fleet.leftover_waiting, 0);
+        assert!(
+            res.controller.drains >= 1,
+            "thin fleet never consolidated: {:?}",
+            res.controller
+        );
+        assert!(res.controller.accepting >= 1);
+    }
+
+    #[test]
+    fn paused_controller_never_acts() {
+        let trace = trace_of(3, 1, 40);
+        let cfg = FleetConfig::uniform(3, 2, 4, "jsq");
+        let auto = AutoscaleConfig {
+            policy: "energy".into(),
+            cooldown_rounds: 2,
+            dwell_rounds: 1,
+            ..AutoscaleConfig::default()
+        };
+        let mut controller = Controller::new(&auto, &cfg).unwrap();
+        controller.set_paused(true);
+        let fleet = crate::fleet::run_fleet_hooked(
+            &cfg,
+            "low",
+            &trace,
+            &[],
+            Some(&mut controller),
+        )
+        .unwrap();
+        assert_eq!(fleet.completed as usize, trace.len());
+        assert!(controller.history().is_empty());
+        assert_eq!(controller.state().last_decision, "paused");
+    }
+}

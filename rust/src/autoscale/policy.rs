@@ -1,0 +1,388 @@
+//! Scale policies: map one [`FleetSignal`] to a [`ScaleDecision`].
+//!
+//! Three policies, in increasing awareness of the paper's energy model:
+//!
+//! * [`StaticPolicy`] — never scales (the fixed-fleet baseline every
+//!   sweep compares against);
+//! * [`TargetTracking`] — classic utilization-band target tracking:
+//!   scale up above `hi` (or on overflow), scale down below `lo` when
+//!   the post-drain fleet would still sit under `hi`;
+//! * [`EnergyMarginal`] — Theorem-4-driven consolidation: scale down
+//!   when the cheapest-to-drain replica's *waste fraction* (the share
+//!   of its step energy that is idle-at-barrier + concavity + fixed
+//!   overhead, i.e. everything except `κ·P_max·W`) exceeds the
+//!   Corollary-1 recoverable bound `P_idle / C_γ` — beyond that point
+//!   the energy its tokens would cost on a consolidated fleet is
+//!   provably below what they cost in place — and the survivors can
+//!   absorb the demand; scale up on overflow or when demand approaches
+//!   the accepting capacity.
+//!
+//! Deciding is separated from acting: hysteresis (dwell + cooldown) and
+//! min/max clamps live in [`super::actuator::Actuator`], so every policy
+//! gets the same anti-flap machinery.
+
+use crate::config::PowerConfig;
+
+use super::signal::FleetSignal;
+
+/// What the policy wants to happen this round.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ScaleDecision {
+    Hold,
+    /// Grow capacity: reactivate a warm draining replica, else add.
+    Up,
+    /// Drain `replica` (warm): queued work re-routes, actives finish in
+    /// place, the empty replica stops costing rounds.
+    Down { replica: usize },
+}
+
+impl ScaleDecision {
+    pub fn label(&self) -> &'static str {
+        match self {
+            ScaleDecision::Hold => "hold",
+            ScaleDecision::Up => "up",
+            ScaleDecision::Down { .. } => "down",
+        }
+    }
+}
+
+/// A scale policy.  Stateless decisions are encouraged — persistence
+/// (dwell counting, cooldown) belongs to the actuator.
+pub trait ScalePolicy: Send {
+    fn name(&self) -> String;
+
+    fn decide(&mut self, sig: &FleetSignal) -> ScaleDecision;
+}
+
+/// Pick the consolidation victim: the accepting replica with the least
+/// speed-normalized outstanding work (ties: lower id) — cheapest to
+/// drain, since its actives finish fastest and its queue is shallowest.
+/// Returns `None` unless the post-drain fleet can absorb the demand:
+/// remaining accepting capacity must hold everything at ≤ `ceiling`
+/// utilization, and the survivors need enough free slots for the
+/// victim's queued requests.
+pub fn consolidation_victim(sig: &FleetSignal, ceiling: f64) -> Option<usize> {
+    let victim = sig
+        .replicas
+        .iter()
+        .filter(|r| r.accepting)
+        .min_by(|a, b| {
+            a.outstanding
+                .total_cmp(&b.outstanding)
+                .then(a.id.cmp(&b.id))
+        })?;
+    let remaining_slots = sig.accepting_slots.saturating_sub(victim.slots);
+    if remaining_slots == 0 {
+        return None;
+    }
+    let demand = sig.total_active + sig.total_queued + sig.overflow;
+    if demand as f64 > ceiling * remaining_slots as f64 {
+        return None;
+    }
+    let others_free: usize = sig
+        .replicas
+        .iter()
+        .filter(|r| r.accepting && r.id != victim.id)
+        .map(|r| r.free_slots)
+        .sum();
+    if others_free < victim.queue_depth {
+        return None;
+    }
+    Some(victim.id)
+}
+
+/// The fixed-fleet baseline: never scales.
+#[derive(Clone, Debug, Default)]
+pub struct StaticPolicy;
+
+impl ScalePolicy for StaticPolicy {
+    fn name(&self) -> String {
+        "static".to_string()
+    }
+
+    fn decide(&mut self, _sig: &FleetSignal) -> ScaleDecision {
+        ScaleDecision::Hold
+    }
+}
+
+/// Utilization-band target tracking.
+#[derive(Clone, Debug)]
+pub struct TargetTracking {
+    /// Scale down below this demand/capacity ratio.
+    pub lo: f64,
+    /// Scale up above this ratio (and on overflow).
+    pub hi: f64,
+}
+
+impl Default for TargetTracking {
+    fn default() -> Self {
+        TargetTracking { lo: 0.35, hi: 0.9 }
+    }
+}
+
+impl ScalePolicy for TargetTracking {
+    fn name(&self) -> String {
+        format!("target({:.2},{:.2})", self.lo, self.hi)
+    }
+
+    fn decide(&mut self, sig: &FleetSignal) -> ScaleDecision {
+        if sig.accepting == 0 {
+            return ScaleDecision::Up;
+        }
+        if sig.overflow > 0 || sig.utilization > self.hi {
+            return ScaleDecision::Up;
+        }
+        if sig.utilization < self.lo && sig.accepting > 1 {
+            if let Some(victim) = consolidation_victim(sig, self.hi) {
+                return ScaleDecision::Down { replica: victim };
+            }
+        }
+        ScaleDecision::Hold
+    }
+}
+
+/// Theorem-4 energy-marginal consolidation (see the module docs).
+#[derive(Clone, Debug)]
+pub struct EnergyMarginal {
+    /// Drain the victim when its waste fraction is at least this.
+    /// Default: Corollary 1's recoverable bound `P_idle / C_γ`
+    /// (≈ 0.526 for A100 constants).
+    pub waste_down: f64,
+    /// Post-drain demand/capacity ceiling for a down move.  Kept well
+    /// below `up_util` so consolidation never immediately re-triggers a
+    /// scale-up (hysteresis by construction).
+    pub down_ceiling: f64,
+    /// Scale up at this demand/capacity ratio (and on overflow).
+    pub up_util: f64,
+}
+
+impl EnergyMarginal {
+    pub fn for_power(power: &PowerConfig) -> EnergyMarginal {
+        EnergyMarginal {
+            waste_down: power.asymptotic_saving(),
+            down_ceiling: 0.7,
+            up_util: 0.92,
+        }
+    }
+}
+
+impl ScalePolicy for EnergyMarginal {
+    fn name(&self) -> String {
+        format!("energy({:.3})", self.waste_down)
+    }
+
+    fn decide(&mut self, sig: &FleetSignal) -> ScaleDecision {
+        if sig.accepting == 0 {
+            return ScaleDecision::Up;
+        }
+        if sig.overflow > 0 || sig.utilization > self.up_util {
+            return ScaleDecision::Up;
+        }
+        if sig.accepting > 1 {
+            if let Some(id) = consolidation_victim(sig, self.down_ceiling) {
+                let v = sig
+                    .replicas
+                    .iter()
+                    .find(|r| r.id == id)
+                    .expect("victim came from this signal");
+                // An empty accepting replica costs nothing *now* but
+                // fragments future arrivals — always consolidate it.
+                // A stepping one is drained only when Theorem 4 says
+                // most of its energy is recoverable imbalance/overhead.
+                let wasteful =
+                    v.active == 0 || v.waste_fraction >= self.waste_down;
+                if wasteful {
+                    return ScaleDecision::Down { replica: id };
+                }
+            }
+        }
+        ScaleDecision::Hold
+    }
+}
+
+/// Construct a scale policy by name:
+/// `static | target[:<lo>,<hi>] | energy[:<waste_down>]`.
+/// `energy` defaults its threshold to the power model's Corollary-1
+/// recoverable fraction.
+pub fn scale_policy_by_name(
+    name: &str,
+    power: &PowerConfig,
+) -> Option<Box<dyn ScalePolicy>> {
+    match name {
+        "static" | "none" => Some(Box::new(StaticPolicy)),
+        "target" => Some(Box::new(TargetTracking::default())),
+        "energy" => Some(Box::new(EnergyMarginal::for_power(power))),
+        _ => {
+            if let Some(rest) = name.strip_prefix("target:") {
+                let (lo, hi) = rest.split_once(',')?;
+                let lo: f64 = lo.trim().parse().ok()?;
+                let hi: f64 = hi.trim().parse().ok()?;
+                if !(0.0..=1.0).contains(&lo) || hi <= lo {
+                    return None;
+                }
+                Some(Box::new(TargetTracking { lo, hi }))
+            } else if let Some(rest) = name.strip_prefix("energy:") {
+                let waste: f64 = rest.trim().parse().ok()?;
+                if !(0.0..=1.0).contains(&waste) {
+                    return None;
+                }
+                Some(Box::new(EnergyMarginal {
+                    waste_down: waste,
+                    ..EnergyMarginal::for_power(power)
+                }))
+            } else {
+                None
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::autoscale::signal::ReplicaSignal;
+
+    fn rsig(id: usize, slots: usize, active: usize, queue: usize) -> ReplicaSignal {
+        ReplicaSignal {
+            id,
+            accepting: true,
+            draining: false,
+            remove_pending: false,
+            speed: 1.0,
+            workers: 2,
+            slots,
+            active,
+            free_slots: slots - active,
+            queue_depth: queue,
+            queued_prefill: queue as f64 * 10.0,
+            outstanding: active as f64 * 10.0 + queue as f64 * 10.0,
+            step_time_s: 0.01,
+            completion_horizon: active as u64,
+            power_w: 200.0,
+            energy_rate_j: if active > 0 { 1.0 } else { 0.0 },
+            useful_rate_j: if active > 0 { 0.2 } else { 0.0 },
+            marginal_j_per_token: if active > 0 {
+                1.0 / active as f64
+            } else {
+                f64::INFINITY
+            },
+            waste_fraction: if active > 0 { 0.8 } else { 0.0 },
+        }
+    }
+
+    fn fsig(replicas: Vec<ReplicaSignal>, overflow: usize) -> FleetSignal {
+        let accepting = replicas.iter().filter(|r| r.accepting).count();
+        let accepting_slots: usize = replicas
+            .iter()
+            .filter(|r| r.accepting)
+            .map(|r| r.slots)
+            .sum();
+        let total_active: usize = replicas.iter().map(|r| r.active).sum();
+        let total_queued: usize = replicas.iter().map(|r| r.queue_depth).sum();
+        let demand = total_active + total_queued + overflow;
+        FleetSignal {
+            round: 0,
+            overflow,
+            accepting,
+            live: replicas.len(),
+            accepting_slots,
+            total_active,
+            total_queued,
+            utilization: if accepting_slots > 0 {
+                demand as f64 / accepting_slots as f64
+            } else {
+                f64::INFINITY
+            },
+            max_completion_horizon: 0,
+            replicas,
+        }
+    }
+
+    #[test]
+    fn registry_constructs_all() {
+        let p = PowerConfig::a100();
+        for n in ["static", "target", "target:0.2,0.8", "energy", "energy:0.4"] {
+            assert!(scale_policy_by_name(n, &p).is_some(), "policy {n}");
+        }
+        for n in ["nope", "target:0.9,0.2", "target:x,y", "energy:2.0"] {
+            assert!(scale_policy_by_name(n, &p).is_none(), "policy {n}");
+        }
+        assert_eq!(
+            scale_policy_by_name("energy", &p).unwrap().name(),
+            format!("energy({:.3})", p.asymptotic_saving())
+        );
+    }
+
+    #[test]
+    fn static_always_holds() {
+        let mut s = StaticPolicy;
+        let sig = fsig(vec![rsig(0, 8, 8, 20)], 5);
+        assert_eq!(s.decide(&sig), ScaleDecision::Hold);
+    }
+
+    #[test]
+    fn target_tracking_band() {
+        let mut t = TargetTracking { lo: 0.3, hi: 0.8 };
+        // mid band: hold
+        let sig = fsig(vec![rsig(0, 8, 4, 0), rsig(1, 8, 4, 0)], 0);
+        assert_eq!(t.decide(&sig), ScaleDecision::Hold);
+        // hot: up
+        let sig = fsig(vec![rsig(0, 8, 8, 4), rsig(1, 8, 8, 2)], 0);
+        assert_eq!(t.decide(&sig), ScaleDecision::Up);
+        // overflow: up, regardless of utilization
+        let sig = fsig(vec![rsig(0, 8, 0, 0), rsig(1, 8, 0, 0)], 1);
+        assert_eq!(t.decide(&sig), ScaleDecision::Up);
+        // cold: down, least-outstanding victim (id 1)
+        let sig = fsig(vec![rsig(0, 8, 2, 0), rsig(1, 8, 1, 0)], 0);
+        assert_eq!(t.decide(&sig), ScaleDecision::Down { replica: 1 });
+        // outstanding tie breaks on the lower id
+        let sig = fsig(vec![rsig(0, 2, 1, 0), rsig(1, 8, 1, 0)], 0);
+        assert_eq!(t.decide(&sig), ScaleDecision::Down { replica: 0 });
+        // below the band, but demand 9 exceeds the ceiling on the 8
+        // post-drain slots: infeasible, hold
+        let mut t2 = TargetTracking { lo: 0.9, hi: 0.95 };
+        let sig = fsig(vec![rsig(0, 8, 8, 0), rsig(1, 8, 0, 1)], 0);
+        assert_eq!(t2.decide(&sig), ScaleDecision::Hold);
+        // survivors lack free slots for the victim's queued request
+        let mut t3 = TargetTracking { lo: 0.9, hi: 2.0 };
+        assert_eq!(t3.decide(&sig), ScaleDecision::Hold);
+    }
+
+    #[test]
+    fn energy_marginal_drains_wasteful_and_respects_feasibility() {
+        let p = PowerConfig::a100();
+        let mut e = EnergyMarginal::for_power(&p);
+        // two thin replicas (waste 0.8 > 0.526), plenty of headroom
+        let sig = fsig(vec![rsig(0, 8, 1, 0), rsig(1, 8, 1, 0)], 0);
+        assert_eq!(e.decide(&sig), ScaleDecision::Down { replica: 0 });
+        // efficient replicas (waste below threshold) are left alone
+        let mut a = rsig(0, 8, 4, 0);
+        let mut b = rsig(1, 8, 4, 0);
+        a.waste_fraction = 0.2;
+        b.waste_fraction = 0.2;
+        let sig = fsig(vec![a, b], 0);
+        assert_eq!(e.decide(&sig), ScaleDecision::Hold);
+        // saturated: up
+        let sig = fsig(vec![rsig(0, 8, 8, 3), rsig(1, 8, 8, 3)], 0);
+        assert_eq!(e.decide(&sig), ScaleDecision::Up);
+        // no accepting capacity at all: up
+        let mut d = rsig(0, 8, 2, 0);
+        d.accepting = false;
+        d.draining = true;
+        let sig = fsig(vec![d], 1);
+        assert_eq!(e.decide(&sig), ScaleDecision::Up);
+        // an empty accepting replica is consolidated even with rate 0
+        let sig = fsig(vec![rsig(0, 8, 2, 0), rsig(1, 8, 0, 0)], 0);
+        assert_eq!(e.decide(&sig), ScaleDecision::Down { replica: 1 });
+    }
+
+    #[test]
+    fn never_drains_the_last_accepting_replica() {
+        let p = PowerConfig::a100();
+        let mut e = EnergyMarginal::for_power(&p);
+        let mut t = TargetTracking { lo: 0.5, hi: 0.9 };
+        let sig = fsig(vec![rsig(0, 8, 1, 0)], 0);
+        assert_eq!(e.decide(&sig), ScaleDecision::Hold);
+        assert_eq!(t.decide(&sig), ScaleDecision::Hold);
+    }
+}

@@ -1,0 +1,316 @@
+//! Signal sampling: the per-round observation the scale policies decide
+//! on, derived from [`ReplicaSnapshot`]s plus the fleet's Eq. 19 / power
+//! constants.
+//!
+//! Per replica the sampler derives:
+//!
+//! * **outstanding work** — resident KV plus queued prefill, normalized
+//!   by the replica speed (the same quantity tier-1 routers balance);
+//! * **Eq. 19 predicted step time** — `(C + t_ℓ·max_g L_g) / f_r`;
+//! * **predicted completion horizon** — rounds until the last admitted
+//!   request completes (exact: completion steps are known at admission,
+//!   the Block-style lookahead signal);
+//! * **instantaneous power** — `Σ_g P(u_g)` under the paper's
+//!   [`PowerConfig`] model;
+//! * **Theorem-4 energy rates** — one step's energy split into the
+//!   useful term `κ·P_max·W` and everything else (idle-at-barrier,
+//!   concavity correction, fixed overhead `C·G·P_idle`), giving the
+//!   *marginal energy per token* and *waste fraction* the
+//!   energy-marginal policy thresholds on.
+
+use crate::config::PowerConfig;
+use crate::energy::decompose;
+use crate::fleet::{ReplicaSnapshot, ReplicaState};
+
+/// One replica's controller-facing observation.
+#[derive(Clone, Debug)]
+pub struct ReplicaSignal {
+    pub id: usize,
+    pub accepting: bool,
+    /// Draining (warm — reactivatable), not yet removed.
+    pub draining: bool,
+    /// Draining toward *removal* (an explicit decommission): the
+    /// controller's warm pool must not resurrect it.
+    pub remove_pending: bool,
+    pub speed: f64,
+    pub workers: usize,
+    /// Total batch slots `G·B`.
+    pub slots: usize,
+    pub active: usize,
+    pub free_slots: usize,
+    pub queue_depth: usize,
+    pub queued_prefill: f64,
+    /// Speed-normalized outstanding work (resident KV + queued prefill).
+    pub outstanding: f64,
+    /// Eq. 19 step time at the current loads, seconds.
+    pub step_time_s: f64,
+    /// Rounds until the last admitted request completes (0 when idle).
+    pub completion_horizon: u64,
+    /// Instantaneous synchronized-phase power `Σ_g P(u_g)`, watts.
+    pub power_w: f64,
+    /// Energy one barrier step costs at the current loads (sync +
+    /// fixed overhead), joules.  0 when the replica would not step.
+    pub energy_rate_j: f64,
+    /// Theorem 4's useful-work share of that step, joules.
+    pub useful_rate_j: f64,
+    /// `energy_rate_j / active` — what one generated token costs here
+    /// right now.  `+inf` when nothing is active.
+    pub marginal_j_per_token: f64,
+    /// `1 − useful/energy`: the share of the step's energy that is
+    /// idle-at-barrier, concavity, or fixed overhead — the Theorem-4
+    /// recoverable part.
+    pub waste_fraction: f64,
+}
+
+/// The fleet-wide observation for one controller tick.
+#[derive(Clone, Debug)]
+pub struct FleetSignal {
+    pub round: u64,
+    /// Requests parked because no replica was accepting.
+    pub overflow: usize,
+    /// Accepting replicas.
+    pub accepting: usize,
+    /// Non-removed replicas (accepting + draining).
+    pub live: usize,
+    /// Batch slots across accepting replicas.
+    pub accepting_slots: usize,
+    /// Active requests across live replicas.
+    pub total_active: usize,
+    /// Queued (routed, not admitted) requests across live replicas.
+    pub total_queued: usize,
+    /// Demand over accepting capacity:
+    /// `(active + queued + overflow) / accepting_slots`.
+    pub utilization: f64,
+    pub max_completion_horizon: u64,
+    /// Live replicas only (removed replicas are dropped).
+    pub replicas: Vec<ReplicaSignal>,
+}
+
+/// Sample one controller tick from the core's replica snapshots.
+/// `t_token`/`c_overhead` are the *unscaled* fleet constants; per-replica
+/// speed scaling (κ_r = t_ℓ / f_r) is applied here, matching each
+/// replica's recorder.
+pub fn sample(
+    round: u64,
+    overflow: usize,
+    snaps: &[ReplicaSnapshot],
+    t_token: f64,
+    c_overhead: f64,
+    power: &PowerConfig,
+) -> FleetSignal {
+    let mut replicas = Vec::with_capacity(snaps.len());
+    let mut accepting = 0usize;
+    let mut accepting_slots = 0usize;
+    let mut total_active = 0usize;
+    let mut total_queued = 0usize;
+    let mut max_horizon = 0u64;
+    for s in snaps {
+        if s.state == ReplicaState::Removed {
+            continue;
+        }
+        let is_accepting = s.state == ReplicaState::Accepting;
+        let slots = s.g * s.b;
+        let active: usize = s.active_per_worker.iter().sum();
+        let speed = s.speed.max(1e-12);
+        let l_max = s.loads.iter().cloned().fold(0.0, f64::max);
+        let load_sum: f64 = s.loads.iter().sum();
+        let kappa = t_token / speed;
+        // One step's energy at the current loads, split per Theorem 4.
+        // A replica with nothing active does not step: its rates are 0.
+        let (energy_rate, useful_rate) = if active > 0 {
+            let d = decompose(&s.loads, kappa, power);
+            let overhead = c_overhead / speed * s.g as f64 * power.p_idle;
+            (d.useful + d.idle + d.correction + overhead, d.useful)
+        } else {
+            (0.0, 0.0)
+        };
+        let marginal = if active > 0 {
+            energy_rate / active as f64
+        } else {
+            f64::INFINITY
+        };
+        let waste = if energy_rate > 0.0 {
+            1.0 - useful_rate / energy_rate
+        } else {
+            0.0
+        };
+        let power_w: f64 = s
+            .loads
+            .iter()
+            .map(|&l| {
+                power.power_at_util(if l_max > 0.0 { l / l_max } else { 0.0 })
+            })
+            .sum();
+        if is_accepting {
+            accepting += 1;
+            accepting_slots += slots;
+        }
+        total_active += active;
+        total_queued += s.queue_depth;
+        max_horizon = max_horizon.max(s.completion_horizon);
+        replicas.push(ReplicaSignal {
+            id: s.id,
+            accepting: is_accepting,
+            draining: !is_accepting,
+            remove_pending: s.state == (ReplicaState::Draining { remove: true }),
+            speed: s.speed,
+            workers: s.g,
+            slots,
+            active,
+            free_slots: slots - active,
+            queue_depth: s.queue_depth,
+            queued_prefill: s.queued_prefill,
+            outstanding: (load_sum + s.queued_prefill) / speed,
+            step_time_s: (c_overhead + t_token * l_max) / speed,
+            completion_horizon: s.completion_horizon,
+            power_w,
+            energy_rate_j: energy_rate,
+            useful_rate_j: useful_rate,
+            marginal_j_per_token: marginal,
+            waste_fraction: waste,
+        });
+    }
+    let demand = total_active + total_queued + overflow;
+    FleetSignal {
+        round,
+        overflow,
+        accepting,
+        live: replicas.len(),
+        accepting_slots,
+        total_active,
+        total_queued,
+        utilization: if accepting_slots > 0 {
+            demand as f64 / accepting_slots as f64
+        } else if demand > 0 {
+            f64::INFINITY
+        } else {
+            0.0
+        },
+        max_completion_horizon: max_horizon,
+        replicas,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn snap(id: usize, state: ReplicaState, loads: Vec<f64>, active: Vec<usize>) -> ReplicaSnapshot {
+        let g = loads.len();
+        let b = 2usize;
+        ReplicaSnapshot {
+            id,
+            speed: 1.0,
+            state,
+            g,
+            b,
+            free_per_worker: active.iter().map(|&a| b - a).collect(),
+            active_per_worker: active,
+            completed_per_worker: vec![0; g],
+            loads,
+            queue_depth: 0,
+            queued_prefill: 0.0,
+            completion_horizon: 0,
+            clock_s: 0.0,
+            steps: 0,
+            imbalance_sum: 0.0,
+            tokens: 0.0,
+            energy_j: 0.0,
+            energy_useful_j: 0.0,
+            energy_idle_j: 0.0,
+            energy_correction_j: 0.0,
+            completed: 0,
+            admitted: 0,
+            routed: 0,
+            executed: 0,
+        }
+    }
+
+    #[test]
+    fn removed_replicas_are_dropped_and_totals_add_up() {
+        let snaps = vec![
+            snap(0, ReplicaState::Accepting, vec![10.0, 0.0], vec![1, 0]),
+            snap(1, ReplicaState::Draining { remove: false }, vec![5.0, 5.0], vec![1, 1]),
+            snap(2, ReplicaState::Removed, vec![0.0, 0.0], vec![0, 0]),
+        ];
+        let p = PowerConfig::a100();
+        let sig = sample(7, 3, &snaps, 1e-7, 1e-3, &p);
+        assert_eq!(sig.round, 7);
+        assert_eq!(sig.live, 2);
+        assert_eq!(sig.accepting, 1);
+        assert_eq!(sig.accepting_slots, 4);
+        assert_eq!(sig.total_active, 3);
+        assert_eq!(sig.overflow, 3);
+        // demand = 3 active + 0 queued + 3 overflow over 4 slots
+        assert!((sig.utilization - 6.0 / 4.0).abs() < 1e-12);
+        assert!(sig.replicas[1].draining);
+        assert!(!sig.replicas[1].remove_pending, "warm drain");
+    }
+
+    #[test]
+    fn remove_pending_drain_is_flagged() {
+        let snaps = vec![
+            snap(0, ReplicaState::Accepting, vec![1.0], vec![1]),
+            snap(1, ReplicaState::Draining { remove: true }, vec![2.0], vec![1]),
+        ];
+        let sig = sample(0, 0, &snaps, 1e-7, 1e-3, &PowerConfig::a100());
+        assert!(!sig.replicas[0].remove_pending);
+        assert!(sig.replicas[1].draining);
+        assert!(sig.replicas[1].remove_pending);
+    }
+
+    #[test]
+    fn idle_replica_has_zero_rates_and_infinite_marginal() {
+        let snaps =
+            vec![snap(0, ReplicaState::Accepting, vec![0.0, 0.0], vec![0, 0])];
+        let p = PowerConfig::a100();
+        let sig = sample(0, 0, &snaps, 1e-7, 1e-3, &p);
+        let r = &sig.replicas[0];
+        assert_eq!(r.energy_rate_j, 0.0);
+        assert_eq!(r.waste_fraction, 0.0);
+        assert!(r.marginal_j_per_token.is_infinite());
+        // all-idle workers draw idle power in the instantaneous reading
+        assert!((r.power_w - 2.0 * p.p_idle).abs() < 1e-9);
+    }
+
+    #[test]
+    fn waste_fraction_grows_as_load_thins() {
+        // One active token on one of two workers wastes more of the
+        // step than a full balanced batch — the consolidation signal.
+        let p = PowerConfig::a100();
+        let thin = sample(
+            0,
+            0,
+            &[snap(0, ReplicaState::Accepting, vec![10.0, 0.0], vec![1, 0])],
+            1e-7,
+            1e-3,
+            &p,
+        );
+        let full = sample(
+            0,
+            0,
+            &[snap(0, ReplicaState::Accepting, vec![5000.0, 5000.0], vec![2, 2])],
+            1e-7,
+            1e-3,
+            &p,
+        );
+        let wt = thin.replicas[0].waste_fraction;
+        let wf = full.replicas[0].waste_fraction;
+        assert!(wt > wf, "thin {wt} vs full {wf}");
+        assert!(wt > 0.9, "overhead-dominated: {wt}");
+        assert!(
+            thin.replicas[0].marginal_j_per_token
+                > full.replicas[0].marginal_j_per_token
+        );
+    }
+
+    #[test]
+    fn step_time_is_speed_scaled_eq19() {
+        let mut s = snap(0, ReplicaState::Accepting, vec![100.0, 50.0], vec![1, 1]);
+        s.speed = 2.0;
+        let p = PowerConfig::a100();
+        let sig = sample(0, 0, &[s], 1e-4, 1e-2, &p);
+        let want = (1e-2 + 1e-4 * 100.0) / 2.0;
+        assert!((sig.replicas[0].step_time_s - want).abs() < 1e-15);
+    }
+}

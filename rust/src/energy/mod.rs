@@ -60,6 +60,14 @@ pub struct EnergyAccumulator {
     /// Energy attributable to the fixed per-step overhead `C` (all
     /// workers at idle power), joules.
     pub overhead_energy_j: f64,
+    /// Theorem 4's useful-work term `κ·P_max·W`, accumulated, joules.
+    pub useful_j: f64,
+    /// Theorem 4's idle-at-barrier term `κ·P_idle·ImbTot`, joules.
+    pub idle_j: f64,
+    /// Theorem 4's concavity correction, accumulated, joules.  The
+    /// sandwich `0 ≤ correction ≤ κ·D_γ·ImbTot` holds cumulatively, and
+    /// `useful + idle + correction == sync_energy_j` exactly.
+    pub correction_j: f64,
     /// Σ_k τ_k — synchronized-phase makespan, seconds.
     pub sync_time_s: f64,
     /// Policy-independent total workload W(I) processed so far.
@@ -97,15 +105,26 @@ impl EnergyAccumulator {
         let tau = t_token * l_max;
         let mut step_power = 0.0;
         let mut sum_loads = 0.0;
+        let mut corr = 0.0;
         for &l in loads {
             let u = l / l_max;
-            step_power += power.power_at_util(u);
+            // Inline of `power_at_util` (u ∈ [0,1] by construction) so
+            // the concavity-correction term reuses the same `u^γ`.
+            let ug = u.powf(power.gamma);
+            step_power += power.p_idle + (power.p_max - power.p_idle) * ug;
+            corr += ug - u;
             sum_loads += l;
         }
+        let imb = g as f64 * l_max - sum_loads;
         self.sync_energy_j += tau * step_power;
         self.sync_time_s += tau;
         self.total_workload += sum_loads;
-        self.imb_tot += g as f64 * l_max - sum_loads;
+        self.imb_tot += imb;
+        // Theorem 4 (Eq. C47), accumulated exactly: the three terms sum
+        // to this step's `τ_k Σ_g P(u_g)` by the identity in `decompose`.
+        self.useful_j += t_token * power.p_max * sum_loads;
+        self.idle_j += t_token * power.p_idle * imb;
+        self.correction_j += tau * (power.p_max - power.p_idle) * corr;
         step_power / g as f64
     }
 
@@ -251,6 +270,41 @@ mod tests {
         let imb = 4.0 * l_max - loads.iter().sum::<f64>();
         assert!(d.correction >= 0.0);
         assert!(d.correction <= t_token * p.d_gamma() * imb + 1e-12);
+    }
+
+    #[test]
+    fn accumulator_decomposition_matches_theorem_4() {
+        // The running useful/idle/correction terms are the summed
+        // per-step decomposition: exact identity + the sandwich bound.
+        let p = a100();
+        let t_token = 1.005e-7;
+        let mut acc = EnergyAccumulator::new();
+        let steps = [
+            vec![10.0, 250.0, 90.0, 400.0, 0.0],
+            vec![5.0, 100.0, 77.0, 31.0, 12.0],
+            vec![50.0, 50.0, 50.0, 50.0, 50.0],
+        ];
+        let mut useful = 0.0;
+        let mut idle = 0.0;
+        let mut corr = 0.0;
+        for loads in &steps {
+            let d = decompose(loads, t_token, &p);
+            useful += d.useful;
+            idle += d.idle;
+            corr += d.correction;
+            acc.step(loads, t_token, 1e-3, &p);
+        }
+        assert!((acc.useful_j - useful).abs() < 1e-12 * useful.max(1.0));
+        assert!((acc.idle_j - idle).abs() < 1e-12 * idle.max(1.0));
+        assert!((acc.correction_j - corr).abs() < 1e-12 * corr.max(1.0));
+        let total = acc.useful_j + acc.idle_j + acc.correction_j;
+        assert!(
+            (total - acc.sync_energy_j).abs() < 1e-9 * acc.sync_energy_j,
+            "decomposition identity: {total} vs {}",
+            acc.sync_energy_j
+        );
+        assert!(acc.correction_j >= 0.0);
+        assert!(acc.correction_j <= t_token * p.d_gamma() * acc.imb_tot + 1e-12);
     }
 
     #[test]

@@ -1,0 +1,425 @@
+//! Autoscale experiment: a diurnal BurstGPT-like trace served by the
+//! same R-replica fleet under {static-R, target-tracking,
+//! energy-marginal} scale policies — the evidence behind `bfio
+//! autoscale` and `benches/autoscale.rs`, emitted as
+//! `BENCH_autoscale.json`.
+//!
+//! The static row is the PR-3 open-loop fleet: all R replicas stay in
+//! rotation, so every round the load-aware router spreads the valley
+//! trickle across R stepping replicas and each pays the fixed
+//! `C·G·P_idle` overhead plus Theorem 4's idle-at-barrier term.  The
+//! elastic rows close the loop: the controller drains replicas through
+//! the valleys (actives finish in place, queues re-route) and
+//! reactivates them into the peaks.  Reported per row: energy per
+//! token, the Theorem-4 energy decomposition (useful / idle /
+//! correction / overhead), TPOT, replica-rounds used, and ratios
+//! against the static baseline.
+
+use std::path::Path;
+
+use anyhow::{ensure, Result};
+
+use crate::autoscale::{run_autoscaled, AutoscaleConfig, AutoscaleResult};
+use crate::fleet::FleetConfig;
+use crate::util::json::{arr, num, obj, s, Json};
+use crate::util::rng::Rng;
+use crate::workload::burstgpt::BurstGptLike;
+use crate::workload::{generate_trace, Request};
+
+/// Scale knobs for one autoscale comparison.
+#[derive(Clone, Debug)]
+pub struct AutoscaleScale {
+    /// Initial (and maximum) replicas `R`.
+    pub replicas: usize,
+    /// Workers `G` per replica.
+    pub g: usize,
+    /// Per-worker batch capacity `B`.
+    pub b: usize,
+    /// Rounds of arrivals (the run continues until the tail drains).
+    pub rounds: u64,
+    pub seed: u64,
+    /// Tier-2 admission policy per replica.
+    pub policy: String,
+    /// Tier-1 router.
+    pub router: String,
+    /// Diurnal cycle length, rounds.
+    pub period: u64,
+    /// Valley / peak arrival rates, requests per round.
+    pub valley: f64,
+    pub peak: f64,
+    /// Mean decode length of the scaled BurstGPT sampler.
+    pub decode_mean: f64,
+    /// Controller knobs shared by the elastic rows.
+    pub min_replicas: usize,
+    pub cooldown_rounds: u64,
+    pub dwell_rounds: u64,
+}
+
+impl AutoscaleScale {
+    /// CI-size: 3×(2×6) slots, four diurnal cycles, seconds to run.
+    pub fn smoke() -> AutoscaleScale {
+        AutoscaleScale {
+            replicas: 3,
+            g: 2,
+            b: 6,
+            rounds: 480,
+            seed: 7,
+            policy: "bfio:8".to_string(),
+            router: "bfio2".to_string(),
+            period: 120,
+            valley: 0.25,
+            peak: 1.2,
+            decode_mean: 24.0,
+            min_replicas: 1,
+            cooldown_rounds: 10,
+            dwell_rounds: 3,
+        }
+    }
+
+    /// Paper-leaning scale (still minutes, not hours).
+    pub fn full() -> AutoscaleScale {
+        AutoscaleScale {
+            replicas: 4,
+            g: 4,
+            b: 8,
+            rounds: 2000,
+            period: 400,
+            valley: 0.5,
+            peak: 4.0,
+            ..AutoscaleScale::smoke()
+        }
+    }
+
+    pub fn fleet_config(&self) -> FleetConfig {
+        FleetConfig {
+            seed: self.seed,
+            ..FleetConfig::uniform(self.replicas, self.g, self.b, &self.policy)
+        }
+    }
+
+    pub fn autoscale_config(&self, policy: &str) -> AutoscaleConfig {
+        AutoscaleConfig {
+            policy: policy.to_string(),
+            min_replicas: self.min_replicas,
+            max_replicas: self.replicas,
+            cooldown_rounds: self.cooldown_rounds,
+            dwell_rounds: self.dwell_rounds,
+            add_speed: 1.0,
+        }
+    }
+
+    /// The shared diurnal BurstGPT-like trace.
+    pub fn trace(&self) -> Vec<Request> {
+        let sampler = BurstGptLike::scaled(self.decode_mean);
+        let arrivals = BurstGptLike::diurnal(self.valley, self.peak, self.period);
+        let mut rng = Rng::new(self.seed);
+        generate_trace(&sampler, &arrivals, self.rounds, &mut rng)
+    }
+}
+
+/// One comparison row (a scale policy over the shared trace).
+#[derive(Clone, Debug)]
+pub struct AutoscaleBenchRow {
+    pub policy: String,
+    pub completed: u64,
+    pub tokens: f64,
+    pub energy_j: f64,
+    pub energy_per_token_j: f64,
+    /// Theorem 4 decomposition (fleet-wide sums), joules.
+    pub useful_j: f64,
+    pub idle_j: f64,
+    pub correction_j: f64,
+    /// Fixed-overhead share: `total − (useful + idle + correction)`.
+    pub overhead_j: f64,
+    pub tpot_s: f64,
+    pub mean_queue_wait_s: f64,
+    /// Σ barrier steps executed across replicas.
+    pub replica_rounds: u64,
+    pub makespan_s: f64,
+    pub adds: u64,
+    pub drains: u64,
+    pub reactivations: u64,
+    pub run_ms: f64,
+}
+
+fn row_of(policy: &str, res: &AutoscaleResult, run_ms: f64) -> AutoscaleBenchRow {
+    let useful_j: f64 = res
+        .fleet
+        .per_replica
+        .iter()
+        .map(|r| r.report.energy_useful_j)
+        .sum();
+    let idle_j: f64 = res
+        .fleet
+        .per_replica
+        .iter()
+        .map(|r| r.report.energy_idle_j)
+        .sum();
+    let correction_j: f64 = res
+        .fleet
+        .per_replica
+        .iter()
+        .map(|r| r.report.energy_correction_j)
+        .sum();
+    AutoscaleBenchRow {
+        policy: policy.to_string(),
+        completed: res.fleet.completed,
+        tokens: res.fleet.total_tokens,
+        energy_j: res.fleet.energy_j,
+        energy_per_token_j: res.energy_per_token_j,
+        useful_j,
+        idle_j,
+        correction_j,
+        overhead_j: (res.fleet.energy_j - useful_j - idle_j - correction_j)
+            .max(0.0),
+        tpot_s: res.fleet.tpot_s,
+        mean_queue_wait_s: res.fleet.mean_queue_wait_s,
+        replica_rounds: res.replica_rounds,
+        makespan_s: res.fleet.makespan_s,
+        adds: res.controller.adds,
+        drains: res.controller.drains,
+        reactivations: res.controller.reactivations,
+        run_ms,
+    }
+}
+
+/// Run the three scale policies over the shared trace.  Returns the
+/// rows in `policies` order; the first entry of `policies` is treated
+/// as the baseline for the `*_vs_static` ratios in the JSON.
+pub fn run_autoscale_rows(
+    scale: &AutoscaleScale,
+    policies: &[String],
+) -> Result<Vec<AutoscaleBenchRow>> {
+    ensure!(
+        !policies.is_empty(),
+        "autoscale sweep needs at least one scale policy"
+    );
+    let trace = scale.trace();
+    let cfg = scale.fleet_config();
+    let mut rows = Vec::with_capacity(policies.len());
+    for policy in policies {
+        let auto = scale.autoscale_config(policy);
+        let t0 = std::time::Instant::now();
+        let res = run_autoscaled(&cfg, &scale.router, &auto, &trace, &[])?;
+        rows.push(row_of(policy, &res, t0.elapsed().as_secs_f64() * 1e3));
+    }
+    Ok(rows)
+}
+
+fn row_json(r: &AutoscaleBenchRow, base: &AutoscaleBenchRow) -> Json {
+    let ratio = |a: f64, b: f64| if b != 0.0 { a / b } else { 0.0 };
+    obj(vec![
+        ("policy", s(&r.policy)),
+        ("completed", num(r.completed as f64)),
+        ("tokens", num(r.tokens)),
+        ("energy_j", num(r.energy_j)),
+        ("energy_per_token_j", num(r.energy_per_token_j)),
+        ("useful_j", num(r.useful_j)),
+        ("idle_j", num(r.idle_j)),
+        ("correction_j", num(r.correction_j)),
+        ("overhead_j", num(r.overhead_j)),
+        ("tpot_s", num(r.tpot_s)),
+        ("mean_queue_wait_s", num(r.mean_queue_wait_s)),
+        ("replica_rounds", num(r.replica_rounds as f64)),
+        ("makespan_s", num(r.makespan_s)),
+        ("adds", num(r.adds as f64)),
+        ("drains", num(r.drains as f64)),
+        ("reactivations", num(r.reactivations as f64)),
+        ("run_ms", num(r.run_ms)),
+        (
+            "energy_per_token_vs_static",
+            num(ratio(r.energy_per_token_j, base.energy_per_token_j)),
+        ),
+        ("tpot_vs_static", num(ratio(r.tpot_s, base.tpot_s))),
+        (
+            "replica_rounds_vs_static",
+            num(ratio(r.replica_rounds as f64, base.replica_rounds as f64)),
+        ),
+    ])
+}
+
+/// JSON document for one scale's comparison.
+pub fn rows_to_json(scale: &AutoscaleScale, rows: &[AutoscaleBenchRow]) -> Json {
+    let base = &rows[0];
+    obj(vec![
+        ("replicas", num(scale.replicas as f64)),
+        ("g", num(scale.g as f64)),
+        ("b", num(scale.b as f64)),
+        ("rounds", num(scale.rounds as f64)),
+        ("seed", num(scale.seed as f64)),
+        ("policy", s(&scale.policy)),
+        ("router", s(&scale.router)),
+        ("period", num(scale.period as f64)),
+        ("valley", num(scale.valley)),
+        ("peak", num(scale.peak)),
+        ("decode_mean", num(scale.decode_mean)),
+        ("min_replicas", num(scale.min_replicas as f64)),
+        ("cooldown_rounds", num(scale.cooldown_rounds as f64)),
+        ("dwell_rounds", num(scale.dwell_rounds as f64)),
+        ("rows", arr(rows.iter().map(|r| row_json(r, base)))),
+    ])
+}
+
+/// The shared `BENCH_autoscale.json` document shape — one schema
+/// whether written by `bfio autoscale` or `benches/autoscale.rs`.
+pub fn bench_json(smoke: bool, total_ms: f64, sweep: Vec<Json>) -> Json {
+    obj(vec![
+        ("bench", s("autoscale")),
+        ("smoke", Json::Bool(smoke)),
+        ("total_ms", num(total_ms)),
+        ("sweep", arr(sweep)),
+    ])
+}
+
+fn print_row(r: &AutoscaleBenchRow) {
+    println!(
+        "{:<16} {:>11.4} {:>9.4} {:>9.1} {:>8} {:>9} {:>4} {:>4} {:>4} {:>8.1}",
+        r.policy,
+        r.energy_per_token_j,
+        r.tpot_s,
+        r.energy_j / 1e3,
+        r.completed,
+        r.replica_rounds,
+        r.drains,
+        r.reactivations,
+        r.adds,
+        r.run_ms
+    );
+}
+
+/// The `bfio autoscale` driver: run the comparison, print the table,
+/// write `out`.
+pub fn autoscale_sweep(
+    scale: &AutoscaleScale,
+    policies: &[String],
+    out: &Path,
+    smoke: bool,
+) -> Result<()> {
+    println!(
+        "autoscale: {}x({}x{}) slots, {} rounds, diurnal {:.2}..{:.2}/round over {} rounds, \
+         router {}, tier-2 {}",
+        scale.replicas,
+        scale.g,
+        scale.b,
+        scale.rounds,
+        scale.valley,
+        scale.peak,
+        scale.period,
+        scale.router,
+        scale.policy
+    );
+    let t0 = std::time::Instant::now();
+    let rows = run_autoscale_rows(scale, policies)?;
+    println!(
+        "{:<16} {:>11} {:>9} {:>9} {:>8} {:>9} {:>4} {:>4} {:>4} {:>8}",
+        "scale policy", "J/token", "tpot(s)", "kJ", "done", "r-rounds", "drn", "rea", "add", "ms"
+    );
+    for r in &rows {
+        print_row(r);
+    }
+    let total_ms = t0.elapsed().as_secs_f64() * 1e3;
+    let json = bench_json(smoke, total_ms, vec![rows_to_json(scale, &rows)]);
+    std::fs::write(out, json.to_string_pretty() + "\n")?;
+    println!("wrote {}", out.display());
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> AutoscaleScale {
+        AutoscaleScale {
+            rounds: 240,
+            policy: "bfio:0".to_string(),
+            ..AutoscaleScale::smoke()
+        }
+    }
+
+    fn names(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn energy_marginal_beats_static_on_the_diurnal_trace() {
+        // The acceptance claim at smoke scale: consolidating the
+        // valleys strictly lowers energy per token, with bounded TPOT
+        // degradation and fewer replica-rounds, losing nothing.
+        let scale = tiny();
+        let rows =
+            run_autoscale_rows(&scale, &names(&["static", "energy"])).unwrap();
+        let stat = &rows[0];
+        let energy = &rows[1];
+        assert_eq!(stat.completed, energy.completed, "nothing lost");
+        assert!(stat.completed > 0);
+        assert!(
+            energy.drains + energy.reactivations >= 1,
+            "controller never acted on a diurnal trace: {energy:?}"
+        );
+        assert!(
+            energy.energy_per_token_j < stat.energy_per_token_j,
+            "energy-marginal {:.4} J/tok vs static {:.4} J/tok",
+            energy.energy_per_token_j,
+            stat.energy_per_token_j
+        );
+        assert!(
+            energy.replica_rounds < stat.replica_rounds,
+            "elastic fleet must use fewer replica-rounds: {} vs {}",
+            energy.replica_rounds,
+            stat.replica_rounds
+        );
+        assert!(
+            energy.tpot_s < 2.0 * stat.tpot_s,
+            "TPOT degradation unbounded: {} vs {}",
+            energy.tpot_s,
+            stat.tpot_s
+        );
+        // static means static
+        assert_eq!(stat.drains + stat.adds + stat.reactivations, 0);
+    }
+
+    #[test]
+    fn sweep_writes_json_with_ratios() {
+        let out = std::env::temp_dir().join("bfio_autoscale_test.json");
+        let scale = tiny();
+        autoscale_sweep(
+            &scale,
+            &names(&["static", "target", "energy"]),
+            &out,
+            true,
+        )
+        .unwrap();
+        let text = std::fs::read_to_string(&out).unwrap();
+        let v = crate::util::json::Json::parse(&text).unwrap();
+        assert_eq!(v.get("bench").unwrap().as_str().unwrap(), "autoscale");
+        assert_eq!(v.get("smoke").unwrap().as_bool().unwrap(), true);
+        let sweep = v.get("sweep").unwrap().as_arr().unwrap();
+        let rows = sweep[0].get("rows").unwrap().as_arr().unwrap();
+        assert_eq!(rows.len(), 3);
+        assert_eq!(
+            rows[0].get("policy").unwrap().as_str().unwrap(),
+            "static"
+        );
+        assert!(
+            (rows[0]
+                .get("energy_per_token_vs_static")
+                .unwrap()
+                .as_f64()
+                .unwrap()
+                - 1.0)
+                .abs()
+                < 1e-12
+        );
+        for r in rows {
+            let total = r.get("useful_j").unwrap().as_f64().unwrap()
+                + r.get("idle_j").unwrap().as_f64().unwrap()
+                + r.get("correction_j").unwrap().as_f64().unwrap()
+                + r.get("overhead_j").unwrap().as_f64().unwrap();
+            let energy = r.get("energy_j").unwrap().as_f64().unwrap();
+            assert!(
+                (total - energy).abs() < 1e-6 * energy.max(1.0),
+                "decomposition covers the total: {total} vs {energy}"
+            );
+        }
+    }
+}

@@ -39,6 +39,9 @@ pub struct FleetScale {
     pub policy: String,
     /// Replica speed factors (len == replicas).
     pub speeds: Vec<f64>,
+    /// Per-replica heterogeneous `(G, B)` shapes (`--shapes 8x16,4x32`);
+    /// `None` = uniform `g`×`b`.
+    pub shapes: Option<Vec<(usize, usize)>>,
 }
 
 impl FleetScale {
@@ -51,6 +54,15 @@ impl FleetScale {
             seed: 7,
             policy: "bfio:8".to_string(),
             speeds: vec![1.0; replicas],
+            shapes: None,
+        }
+    }
+
+    /// Total workers across the fleet (shape-aware).
+    pub fn total_workers(&self) -> usize {
+        match &self.shapes {
+            Some(shapes) => shapes.iter().map(|&(g, _)| g).sum(),
+            None => self.replicas * self.g,
         }
     }
 
@@ -60,6 +72,7 @@ impl FleetScale {
             b: self.b,
             policy: self.policy.clone(),
             speeds: self.speeds.clone(),
+            shapes: self.shapes.clone(),
             seed: self.seed,
             max_rounds: self.steps,
             warmup_rounds: self.steps / 5,
@@ -67,13 +80,14 @@ impl FleetScale {
         }
     }
 
-    /// The shared trace: an overloaded instance sized for R·G workers.
+    /// The shared trace: an overloaded instance sized for the fleet's
+    /// total worker count.
     pub fn trace(&self) -> Vec<Request> {
         let sampler = LongBenchLike::paper();
         let mut rng = Rng::new(self.seed);
         overloaded_trace(
             &sampler,
-            self.replicas * self.g,
+            self.total_workers(),
             self.b,
             self.steps,
             3.0,
@@ -151,9 +165,9 @@ pub fn run_fleet_rows(
         });
     }
 
-    // Monolithic baseline: one barrier group of R·G workers.
+    // Monolithic baseline: one barrier group over the fleet's workers.
     let mono_cfg = SimConfig {
-        g: scale.replicas * scale.g,
+        g: scale.total_workers(),
         b: scale.b,
         max_steps: scale.steps,
         warmup_steps: scale.steps / 5,
@@ -165,7 +179,7 @@ pub fn run_fleet_rows(
     let t0 = std::time::Instant::now();
     let res = Simulator::new(mono_cfg).run(&trace, policy.as_mut());
     let mono = FleetBenchRow {
-        router: format!("monolithic({}w)", scale.replicas * scale.g),
+        router: format!("monolithic({}w)", scale.total_workers()),
         avg_imbalance: res.report.avg_imbalance,
         clock_ratio: 1.0,
         tpot_s: res.report.tpot_s,
@@ -194,6 +208,15 @@ pub fn rows_to_json(
         (
             "speeds",
             arr(scale.speeds.iter().map(|&x| num(x))),
+        ),
+        (
+            "shapes",
+            match &scale.shapes {
+                Some(sh) => {
+                    arr(sh.iter().map(|&(g, b)| s(&format!("{g}x{b}"))))
+                }
+                None => Json::Null,
+            },
         ),
         ("monolithic", row_json(mono, mono)),
         ("rows", arr(rows.iter().map(|r| row_json(r, mono)))),

@@ -6,6 +6,7 @@
 //! parameters (G=256, B=72) are reached with `--full`; defaults are
 //! scaled down so every experiment completes in seconds.
 
+pub mod autoscale;
 pub mod fleet;
 pub mod scaling;
 

@@ -17,10 +17,11 @@ use std::time::Duration;
 
 use anyhow::{anyhow, Context, Result};
 
+use crate::autoscale::{AutoscaleConfig, Controller, ControllerState};
 use crate::config::SimConfig;
 use crate::gateway::backend::{
-    Backend, BackendStats, Completion, CompletionRequest, ReplicaStatus,
-    WorkerStatus,
+    AdminCmd, AdminOutcome, Backend, BackendStats, Completion,
+    CompletionRequest, ReplicaStatus, WorkerStatus,
 };
 use crate::gateway::sim::gen_tokens;
 use crate::metrics::imbalance;
@@ -54,6 +55,9 @@ pub struct FleetBackendConfig {
     pub step_delay: Duration,
     /// Real-time dynamic-batching window on the idle→busy transition.
     pub batch_window: Duration,
+    /// Attach an autoscale controller that drains/adds replicas live
+    /// (`None` = fixed fleet, PR-3 behavior).
+    pub autoscale: Option<AutoscaleConfig>,
 }
 
 impl Default for FleetBackendConfig {
@@ -72,6 +76,7 @@ impl Default for FleetBackendConfig {
             seed: 0,
             step_delay: Duration::from_millis(1),
             batch_window: Duration::from_millis(5),
+            autoscale: None,
         }
     }
 }
@@ -90,6 +95,7 @@ impl FleetBackendConfig {
             c_overhead: self.c_overhead,
             t_token: self.t_token,
             speeds,
+            shapes: None,
             seed: self.seed,
             max_rounds: 0,
             warmup_rounds: 0,
@@ -107,6 +113,7 @@ struct Pending {
 
 enum Msg {
     Submit(Pending),
+    Admin(AdminCmd, Sender<AdminOutcome>),
     Shutdown,
 }
 
@@ -115,6 +122,7 @@ struct Snapshot {
     workers: Vec<WorkerStatus>,
     replicas: Vec<ReplicaStatus>,
     stats: BackendStats,
+    autoscaler: Option<ControllerState>,
 }
 
 /// The fleet-backed [`Backend`].
@@ -134,6 +142,10 @@ impl FleetBackend {
         let router_label = router.name();
         let core: FleetCore<Pending, Sender<Completion>> =
             FleetCore::new(fleet_cfg.clone(), router)?;
+        let controller = match &cfg.autoscale {
+            Some(auto) => Some(Controller::new(auto, &fleet_cfg)?),
+            None => None,
+        };
         let policy_label = crate::policies::by_name(&cfg.policy)
             .ok_or_else(|| anyhow!("unknown policy {:?}", cfg.policy))?
             .name();
@@ -151,7 +163,12 @@ impl FleetBackend {
             // Initial all-idle snapshot so /v0/workers is meaningful
             // before the first request.
             let mut s = snap.lock().expect("fresh mutex");
-            *s = build_snapshot(&label, &core.snapshot(), cfg.g);
+            *s = build_snapshot(
+                &label,
+                &core.snapshot(),
+                core.overflow_len(),
+                controller.as_ref().map(Controller::state),
+            );
         }
         let scheduler = Scheduler {
             cfg: cfg.clone(),
@@ -159,6 +176,7 @@ impl FleetBackend {
             rx,
             snap: Arc::clone(&snap),
             core,
+            controller,
         };
         let handle = std::thread::spawn(move || scheduler.run());
         Ok(FleetBackend {
@@ -198,6 +216,26 @@ impl Backend for FleetBackend {
     fn replicas(&self) -> Vec<ReplicaStatus> {
         self.snap.lock().map(|s| s.replicas.clone()).unwrap_or_default()
     }
+
+    fn supports_admin(&self) -> bool {
+        true
+    }
+
+    fn admin(&self, cmd: AdminCmd) -> Result<AdminOutcome> {
+        let (reply_tx, reply_rx) = channel::<AdminOutcome>();
+        {
+            let tx = self.tx.lock().map_err(|_| anyhow!("backend poisoned"))?;
+            tx.send(Msg::Admin(cmd, reply_tx))
+                .map_err(|_| anyhow!("fleet scheduler is gone"))?;
+        }
+        reply_rx
+            .recv()
+            .context("fleet scheduler dropped the admin command")
+    }
+
+    fn autoscaler(&self) -> Option<ControllerState> {
+        self.snap.lock().ok().and_then(|s| s.autoscaler.clone())
+    }
 }
 
 impl Drop for FleetBackend {
@@ -219,6 +257,7 @@ struct Scheduler {
     rx: Receiver<Msg>,
     snap: Arc<Mutex<Snapshot>>,
     core: FleetCore<Pending, Sender<Completion>>,
+    controller: Option<Controller>,
 }
 
 impl Scheduler {
@@ -228,12 +267,111 @@ impl Scheduler {
         self.core.submit(prefill, round, p);
     }
 
+    /// Apply one admin command against the live core.  Manual lifecycle
+    /// overrides work with or without an attached controller.
+    fn admin(&mut self, cmd: AdminCmd) -> AdminOutcome {
+        let known = |core: &FleetCore<Pending, Sender<Completion>>, id: usize| {
+            core.snapshot()
+                .get(id)
+                .map(|s| s.state)
+                .filter(|&s| s != ReplicaState::Removed)
+        };
+        match cmd {
+            AdminCmd::Drain { replica, remove } => match known(&self.core, replica) {
+                Some(_) => {
+                    self.core.drain_replica(replica, remove);
+                    AdminOutcome {
+                        applied: true,
+                        replica: Some(replica),
+                        detail: if remove {
+                            "draining for removal".to_string()
+                        } else {
+                            "draining (warm)".to_string()
+                        },
+                    }
+                }
+                None => AdminOutcome {
+                    applied: false,
+                    replica: Some(replica),
+                    detail: "unknown or removed replica".to_string(),
+                },
+            },
+            AdminCmd::Add { speed } => match self.core.add_replica(speed) {
+                Ok(id) => AdminOutcome {
+                    applied: true,
+                    replica: Some(id),
+                    detail: format!("added at speed {speed}"),
+                },
+                Err(e) => AdminOutcome {
+                    applied: false,
+                    replica: None,
+                    detail: format!("{e:#}"),
+                },
+            },
+            AdminCmd::Reactivate { replica } => {
+                let ok = self.core.reactivate_replica(replica);
+                AdminOutcome {
+                    applied: ok,
+                    replica: Some(replica),
+                    detail: if ok {
+                        "reactivated".to_string()
+                    } else {
+                        "not a draining replica".to_string()
+                    },
+                }
+            }
+            AdminCmd::Pause | AdminCmd::Resume => {
+                let pause = matches!(cmd, AdminCmd::Pause);
+                match self.controller.as_mut() {
+                    Some(c) => {
+                        c.set_paused(pause);
+                        AdminOutcome {
+                            applied: true,
+                            replica: None,
+                            detail: if pause { "paused" } else { "resumed" }
+                                .to_string(),
+                        }
+                    }
+                    None => AdminOutcome {
+                        applied: false,
+                        replica: None,
+                        detail: "no autoscaler attached".to_string(),
+                    },
+                }
+            }
+        }
+    }
+
+    fn publish(&mut self) {
+        let snapshot = build_snapshot(
+            &self.label,
+            &self.core.snapshot(),
+            self.core.overflow_len(),
+            self.controller.as_ref().map(Controller::state),
+        );
+        if let Ok(mut s) = self.snap.lock() {
+            *s = snapshot;
+        }
+    }
+
     fn run(mut self) {
+        // All replicas of this backend share the uniform shape `g`
+        // (lifecycle adds use the fleet default), so global worker ids
+        // stay `replica·G + worker`.
         let g = self.cfg.g;
         let mut out: Vec<FleetFinished<Sender<Completion>>> = Vec::new();
         'outer: loop {
             // Park while idle, then hold the batching window open.
-            if self.core.is_idle() {
+            // Also park when *stalled* — work sits in overflow but no
+            // replica is accepting and every engine is idle (reachable
+            // via manual admin drains) — unless a live controller could
+            // scale back up on its own; otherwise the loop would spin
+            // empty rounds at 100% CPU while clients block.
+            let can_self_heal = self
+                .controller
+                .as_ref()
+                .map_or(false, |c| !c.paused());
+            if self.core.is_idle() || (self.core.is_stalled() && !can_self_heal) {
                 match self.rx.recv() {
                     Ok(Msg::Submit(p)) => {
                         self.submit(p);
@@ -241,16 +379,37 @@ impl Scheduler {
                             std::thread::sleep(self.cfg.batch_window);
                         }
                     }
+                    Ok(Msg::Admin(cmd, reply)) => {
+                        let outcome = self.admin(cmd);
+                        self.publish();
+                        let _ = reply.send(outcome);
+                        continue 'outer;
+                    }
                     Ok(Msg::Shutdown) | Err(_) => break 'outer,
                 }
             }
             loop {
                 match self.rx.try_recv() {
                     Ok(Msg::Submit(p)) => self.submit(p),
+                    Ok(Msg::Admin(cmd, reply)) => {
+                        // Publish before replying (as in the idle
+                        // branch): a client that sees ok:true and then
+                        // reads /v0/admin/replicas or /metrics must see
+                        // the post-command state.
+                        let outcome = self.admin(cmd);
+                        self.publish();
+                        let _ = reply.send(outcome);
+                    }
                     Ok(Msg::Shutdown) => break 'outer,
                     Err(TryRecvError::Empty) => break,
                     Err(TryRecvError::Disconnected) => break 'outer,
                 }
+            }
+
+            // The control loop: observe → decide → (maybe) drain/add,
+            // before this round's admission.
+            if let Some(c) = self.controller.as_mut() {
+                let _ = c.tick(&mut self.core);
             }
 
             self.core.run_round(
@@ -263,13 +422,7 @@ impl Scheduler {
 
             // Publish before answering so a client that sees its
             // completion then reads /metrics sees itself counted.
-            {
-                let snapshot =
-                    build_snapshot(&self.label, &self.core.snapshot(), g);
-                if let Ok(mut s) = self.snap.lock() {
-                    *s = snapshot;
-                }
-            }
+            self.publish();
 
             for f in out.drain(..) {
                 let tpot = if f.tokens > 0 {
@@ -297,17 +450,25 @@ impl Scheduler {
     }
 }
 
-fn build_snapshot(label: &str, snaps: &[ReplicaSnapshot], g: usize) -> Snapshot {
-    let mut workers = Vec::with_capacity(snaps.len() * g);
+fn build_snapshot(
+    label: &str,
+    snaps: &[ReplicaSnapshot],
+    overflow: usize,
+    autoscaler: Option<ControllerState>,
+) -> Snapshot {
+    let mut workers = Vec::new();
     let mut replicas = Vec::with_capacity(snaps.len());
     let mut all_loads: Vec<f64> = Vec::new();
     let mut stats = BackendStats { policy: label.to_string(), ..Default::default() };
     let mut imbalance_sum = 0.0;
     let mut metered_steps = 0u64;
+    // Global worker ids: a running offset over replica worker counts
+    // (equals `replica·G + worker` for uniform fleets).
+    let mut worker_base = 0usize;
     for r in snaps {
-        for gi in 0..g {
+        for gi in 0..r.g {
             workers.push(WorkerStatus {
-                id: r.id * g + gi,
+                id: worker_base + gi,
                 replica: r.id,
                 load: r.loads[gi],
                 active: r.active_per_worker[gi],
@@ -315,6 +476,7 @@ fn build_snapshot(label: &str, snaps: &[ReplicaSnapshot], g: usize) -> Snapshot 
                 completed: r.completed_per_worker[gi],
             });
         }
+        worker_base += r.g;
         if r.state != ReplicaState::Removed {
             all_loads.extend_from_slice(&r.loads);
         }
@@ -330,10 +492,16 @@ fn build_snapshot(label: &str, snaps: &[ReplicaSnapshot], g: usize) -> Snapshot 
             steps: r.executed,
             clock_s: r.clock_s,
             energy_j: r.energy_j,
+            energy_useful_j: r.energy_useful_j,
+            energy_idle_j: r.energy_idle_j,
+            energy_correction_j: r.energy_correction_j,
         });
         stats.steps += r.executed;
         stats.clock_s = stats.clock_s.max(r.clock_s);
         stats.energy_j += r.energy_j;
+        stats.energy_useful_j += r.energy_useful_j;
+        stats.energy_idle_j += r.energy_idle_j;
+        stats.energy_correction_j += r.energy_correction_j;
         stats.completed += r.completed;
         stats.admitted += r.admitted;
         stats.total_tokens += r.tokens as u64;
@@ -350,7 +518,10 @@ fn build_snapshot(label: &str, snaps: &[ReplicaSnapshot], g: usize) -> Snapshot 
     } else {
         0.0
     };
-    Snapshot { workers, replicas, stats }
+    // Overflow-parked requests (no accepting replica) are queued work
+    // too — exactly the state where the queue gauge matters most.
+    stats.queue_depth += overflow;
+    Snapshot { workers, replicas, stats, autoscaler }
 }
 
 #[cfg(test)]
@@ -438,5 +609,94 @@ mod tests {
     fn unknown_router_or_policy_rejected() {
         assert!(FleetBackend::new(fast_cfg("no-such-router", "jsq")).is_err());
         assert!(FleetBackend::new(fast_cfg("low", "no-such-policy")).is_err());
+        let bad = FleetBackendConfig {
+            autoscale: Some(AutoscaleConfig {
+                policy: "no-such-scale-policy".to_string(),
+                ..AutoscaleConfig::default()
+            }),
+            ..fast_cfg("low", "jsq")
+        };
+        assert!(FleetBackend::new(bad).is_err());
+    }
+
+    #[test]
+    fn admin_drain_reactivate_add_roundtrip() {
+        let be = FleetBackend::new(fast_cfg("low", "jsq")).unwrap();
+        let out = be
+            .admin(AdminCmd::Drain { replica: 0, remove: false })
+            .unwrap();
+        assert!(out.applied);
+        assert_eq!(be.replicas()[0].state, "draining");
+        // requests still complete on the surviving replica
+        let c = be
+            .complete(CompletionRequest {
+                id: 1,
+                prompt_tokens: vec![1, 2],
+                max_tokens: 2,
+            })
+            .unwrap();
+        assert_eq!(c.id, 1);
+        let out = be.admin(AdminCmd::Reactivate { replica: 0 }).unwrap();
+        assert!(out.applied);
+        assert_eq!(be.replicas()[0].state, "accepting");
+        // invalid targets are refused, not errors
+        assert!(
+            !be.admin(AdminCmd::Drain { replica: 9, remove: false })
+                .unwrap()
+                .applied
+        );
+        assert!(!be.admin(AdminCmd::Reactivate { replica: 1 }).unwrap().applied);
+        // pause without an attached controller is refused
+        assert!(!be.admin(AdminCmd::Pause).unwrap().applied);
+        assert!(be.autoscaler().is_none());
+        // cold add grows the fleet and the worker list
+        let out = be.admin(AdminCmd::Add { speed: 2.0 }).unwrap();
+        assert!(out.applied);
+        assert_eq!(out.replica, Some(2));
+        assert_eq!(be.replicas().len(), 3);
+        assert_eq!(be.workers().len(), 6);
+        assert!(!be.admin(AdminCmd::Add { speed: -1.0 }).unwrap().applied);
+    }
+
+    #[test]
+    fn attached_controller_reports_state_and_pauses() {
+        let cfg = FleetBackendConfig {
+            autoscale: Some(AutoscaleConfig {
+                policy: "energy".to_string(),
+                min_replicas: 1,
+                max_replicas: 2,
+                cooldown_rounds: 2,
+                dwell_rounds: 1,
+                ..AutoscaleConfig::default()
+            }),
+            ..fast_cfg("low", "jsq")
+        };
+        let be = FleetBackend::new(cfg).unwrap();
+        let st = be.autoscaler().expect("controller attached");
+        assert!(!st.paused);
+        assert_eq!(st.min_replicas, 1);
+        for i in 0..3 {
+            be.complete(CompletionRequest {
+                id: i,
+                prompt_tokens: vec![1],
+                max_tokens: 2,
+            })
+            .unwrap();
+        }
+        let st = be.autoscaler().unwrap();
+        assert!(st.ticks > 0);
+        assert!(be.admin(AdminCmd::Pause).unwrap().applied);
+        assert!(be.autoscaler().unwrap().paused);
+        assert!(be.admin(AdminCmd::Resume).unwrap().applied);
+        assert!(!be.autoscaler().unwrap().paused);
+        let stats = be.stats();
+        assert_eq!(stats.completed, 3);
+        assert!(stats.energy_useful_j > 0.0);
+        assert!(
+            stats.energy_useful_j
+                + stats.energy_idle_j
+                + stats.energy_correction_j
+                <= stats.energy_j + 1e-9
+        );
     }
 }

@@ -90,18 +90,32 @@ pub struct ReplicaSnapshot {
     pub id: usize,
     pub speed: f64,
     pub state: ReplicaState,
+    /// This replica's worker count (heterogeneous fleets differ per
+    /// replica; equals `loads.len()`).
+    pub g: usize,
+    /// Per-worker batch capacity.
+    pub b: usize,
     /// Per-worker loads `L_g`.
     pub loads: Vec<f64>,
     pub active_per_worker: Vec<usize>,
     pub free_per_worker: Vec<usize>,
     pub completed_per_worker: Vec<u64>,
     pub queue_depth: usize,
+    /// Σ prefill of queued (not yet admitted) requests.
+    pub queued_prefill: f64,
+    /// Rounds until the last admitted request completes (exact; 0 when
+    /// idle) — the predicted-completion lookahead signal.
+    pub completion_horizon: u64,
     pub clock_s: f64,
     /// Post-warmup steps the recorder has metered.
     pub steps: u64,
     pub imbalance_sum: f64,
     pub tokens: f64,
     pub energy_j: f64,
+    /// Theorem 4 decomposition of the synchronized-phase energy so far.
+    pub energy_useful_j: f64,
+    pub energy_idle_j: f64,
+    pub energy_correction_j: f64,
     pub completed: u64,
     pub admitted: u64,
     pub routed: u64,
@@ -154,7 +168,16 @@ impl<T, P> FleetCore<T, P> {
     pub fn new(cfg: FleetConfig, router: Box<dyn FleetRouter>) -> Result<FleetCore<T, P>> {
         ensure!(cfg.g > 0 && cfg.b > 0, "fleet needs g >= 1 and b >= 1");
         ensure!(!cfg.speeds.is_empty(), "fleet needs at least one replica");
+        if let Some(shapes) = &cfg.shapes {
+            ensure!(
+                shapes.len() == cfg.speeds.len(),
+                "fleet shapes need {} entries, got {}",
+                cfg.speeds.len(),
+                shapes.len()
+            );
+        }
         let speeds = cfg.speeds.clone();
+        let shapes = cfg.shapes.clone();
         let mut core = FleetCore {
             route_rng: Rng::new(cfg.seed ^ 0xF1EE7),
             cfg,
@@ -167,22 +190,36 @@ impl<T, P> FleetCore<T, P> {
             views_dirty: true,
             fin: Vec::new(),
         };
-        for s in speeds {
-            core.add_replica(s)?;
+        for (i, s) in speeds.into_iter().enumerate() {
+            match shapes.as_ref().map(|v| v[i]) {
+                Some((g, b)) => core.add_replica_shaped(s, g, b)?,
+                None => core.add_replica(s)?,
+            };
         }
         Ok(core)
     }
 
-    /// Bring up a fresh, empty replica; returns its id.
+    /// Bring up a fresh, empty replica with the fleet's default
+    /// `(g, b)` shape; returns its id.
     pub fn add_replica(&mut self, speed: f64) -> Result<usize> {
+        self.add_replica_shaped(speed, self.cfg.g, self.cfg.b)
+    }
+
+    /// Bring up a fresh, empty replica with an explicit shape (the
+    /// heterogeneous-fleet path: `FleetConfig::shapes` routes through
+    /// here).  Queued work fleet-wide is re-offered through the router
+    /// once the replica is in rotation, so capacity gained by an *add*
+    /// rebalances the deepest queues, not only future arrivals.
+    pub fn add_replica_shaped(&mut self, speed: f64, g: usize, b: usize) -> Result<usize> {
         ensure!(speed > 0.0, "replica speed must be positive");
+        ensure!(g > 0 && b > 0, "replica shape needs g >= 1 and b >= 1");
         let id = self.slots.len();
         let policy = by_name(&self.cfg.policy)
             .ok_or_else(|| anyhow!("unknown policy {:?}", self.cfg.policy))?;
         let engine = Engine::new(
             EngineConfig {
-                g: self.cfg.g,
-                b: self.cfg.b,
+                g,
+                b,
                 drift: self.cfg.drift.clone(),
                 view_cap_floor: 4096,
             },
@@ -208,12 +245,65 @@ impl<T, P> FleetCore<T, P> {
             policy,
             recorder,
             rng: Rng::new((self.cfg.seed + id as u64) ^ 0xB1F0),
-            completed_per_worker: vec![0; self.cfg.g],
+            completed_per_worker: vec![0; g],
             routed: 0,
             executed: 0,
         });
         self.views_dirty = true;
+        self.reoffer_queued();
         Ok(id)
+    }
+
+    /// Put a draining (not yet removed) replica back in the routing
+    /// rotation — the autoscaler's "warm add": the engine, its actives,
+    /// and its KV state are already resident, so scale-up is instant.
+    /// Returns false for accepting/removed replicas.  Queued work is
+    /// re-offered fleet-wide, as with a cold add.
+    pub fn reactivate_replica(&mut self, id: usize) -> bool {
+        let Some(slot) = self.slots.get_mut(id) else { return false };
+        match slot.state {
+            ReplicaState::Draining { .. } => {
+                slot.state = ReplicaState::Accepting;
+                self.views_dirty = true;
+                self.reoffer_queued();
+                true
+            }
+            ReplicaState::Accepting | ReplicaState::Removed => false,
+        }
+    }
+
+    /// Re-offer every queued (not yet admitted) request through the
+    /// tier-1 router — the cross-replica *queue* rebalancing path, run
+    /// whenever capacity appears (replica add / reactivate), so backlog
+    /// parked on deep queues migrates toward the new capacity instead of
+    /// only future arrivals.  Deterministic order: overflow first (FIFO,
+    /// it has arrival-order precedence, as in [`FleetCore::submit`]),
+    /// then each live replica's queue in replica-id order (FIFO within).
+    /// Accrued queue wait transfers as a duration, exactly as on the
+    /// drain path.
+    fn reoffer_queued(&mut self) {
+        let mut moved: Vec<(f64, u64, f64, T)> = std::mem::take(&mut self.overflow);
+        for i in 0..self.slots.len() {
+            if self.slots[i].state == ReplicaState::Removed
+                || self.slots[i].engine.waiting_len() == 0
+            {
+                continue;
+            }
+            let src_clock = self.slots[i].recorder.clock();
+            for (prefill, arrival_step, clock, ticket) in
+                self.slots[i].engine.take_waiting()
+            {
+                let waited = (src_clock - clock).max(0.0);
+                moved.push((prefill, arrival_step, waited, ticket));
+            }
+        }
+        if moved.is_empty() {
+            return;
+        }
+        self.views_dirty = true;
+        for (prefill, arrival_step, waited, ticket) in moved {
+            self.route_in(prefill, arrival_step, waited, ticket);
+        }
     }
 
     /// Stop routing to a replica; its queued (not yet admitted)
@@ -283,6 +373,18 @@ impl<T, P> FleetCore<T, P> {
     /// All live replicas idle and nothing parked in overflow.
     pub fn is_idle(&self) -> bool {
         self.overflow.is_empty()
+            && self.slots.iter().all(|s| {
+                s.state == ReplicaState::Removed || s.engine.is_idle()
+            })
+    }
+
+    /// Work is parked in overflow but no replica is accepting and every
+    /// live engine is idle: rounds can make no progress until capacity
+    /// comes back (add / reactivate).  Drivers use this to park instead
+    /// of spinning empty rounds.
+    pub fn is_stalled(&self) -> bool {
+        !self.overflow.is_empty()
+            && !self.has_accepting()
             && self.slots.iter().all(|s| {
                 s.state == ReplicaState::Removed || s.engine.is_idle()
             })
@@ -376,13 +478,15 @@ impl<T, P> FleetCore<T, P> {
             let max_load = loads.iter().cloned().fold(0.0, f64::max);
             let min_load = loads.iter().cloned().fold(f64::INFINITY, f64::min);
             let active = s.engine.active_count();
+            let g = s.engine.worker_count();
+            let slots = g * s.engine.batch_cap();
             self.views.push(ReplicaView {
                 id: s.id,
                 speed: s.speed,
                 accepting: s.state == ReplicaState::Accepting,
-                workers: self.cfg.g,
-                slots: self.cfg.g * self.cfg.b,
-                free_slots: self.cfg.g * self.cfg.b - active,
+                workers: g,
+                slots,
+                free_slots: slots - active,
                 active,
                 queue_depth: s.engine.waiting_len(),
                 load_sum: loads.iter().sum(),
@@ -473,28 +577,38 @@ impl<T, P> FleetCore<T, P> {
     pub fn snapshot(&self) -> Vec<ReplicaSnapshot> {
         self.slots
             .iter()
-            .map(|s| ReplicaSnapshot {
-                id: s.id,
-                speed: s.speed,
-                state: s.state,
-                loads: s.engine.loads().to_vec(),
-                active_per_worker: (0..self.cfg.g)
-                    .map(|g| s.engine.worker_active(g))
-                    .collect(),
-                free_per_worker: (0..self.cfg.g)
-                    .map(|g| s.engine.free_slots(g))
-                    .collect(),
-                completed_per_worker: s.completed_per_worker.clone(),
-                queue_depth: s.engine.waiting_len(),
-                clock_s: s.recorder.clock(),
-                steps: s.recorder.steps_recorded(),
-                imbalance_sum: s.recorder.imbalance_sum(),
-                tokens: s.recorder.tokens_recorded(),
-                energy_j: s.recorder.energy.total_energy_j(),
-                completed: s.engine.completed(),
-                admitted: s.engine.admitted(),
-                routed: s.routed,
-                executed: s.executed,
+            .map(|s| {
+                let g = s.engine.worker_count();
+                ReplicaSnapshot {
+                    id: s.id,
+                    speed: s.speed,
+                    state: s.state,
+                    g,
+                    b: s.engine.batch_cap(),
+                    loads: s.engine.loads().to_vec(),
+                    active_per_worker: (0..g)
+                        .map(|gi| s.engine.worker_active(gi))
+                        .collect(),
+                    free_per_worker: (0..g)
+                        .map(|gi| s.engine.free_slots(gi))
+                        .collect(),
+                    completed_per_worker: s.completed_per_worker.clone(),
+                    queue_depth: s.engine.waiting_len(),
+                    queued_prefill: s.engine.waiting_prefill(),
+                    completion_horizon: s.engine.completion_horizon(),
+                    clock_s: s.recorder.clock(),
+                    steps: s.recorder.steps_recorded(),
+                    imbalance_sum: s.recorder.imbalance_sum(),
+                    tokens: s.recorder.tokens_recorded(),
+                    energy_j: s.recorder.energy.total_energy_j(),
+                    energy_useful_j: s.recorder.energy.useful_j,
+                    energy_idle_j: s.recorder.energy.idle_j,
+                    energy_correction_j: s.recorder.energy.correction_j,
+                    completed: s.engine.completed(),
+                    admitted: s.engine.admitted(),
+                    routed: s.routed,
+                    executed: s.executed,
+                }
             })
             .collect()
     }
@@ -600,10 +714,12 @@ mod tests {
     #[test]
     fn remove_retires_once_idle_and_overflow_waits_for_add() {
         let mut c = core(1);
+        assert!(!c.is_stalled());
         c.drain_replica(0, true);
         // no accepting replica: the request parks in overflow
         assert!(c.submit(3.0, 0, 1001).is_none());
         assert!(!c.is_idle());
+        assert!(c.is_stalled(), "parked work with zero capacity");
         let mut out = Vec::new();
         c.run_round(&mut open_ticket, &mut out);
         assert_eq!(c.snapshot()[0].state, ReplicaState::Removed);
@@ -611,6 +727,7 @@ mod tests {
         // a fresh replica picks the overflow up on the next round
         let id = c.add_replica(1.0).unwrap();
         assert_eq!(id, 1);
+        assert!(!c.is_stalled(), "capacity is back");
         let mut rounds = 0;
         while !c.is_idle() && rounds < 10 {
             c.run_round(&mut open_ticket, &mut out);
@@ -619,6 +736,89 @@ mod tests {
         let snaps = c.snapshot();
         assert_eq!(snaps[1].completed, 1);
         assert_eq!(c.submitted(), 1);
+    }
+
+    #[test]
+    fn reactivate_returns_draining_replica_to_rotation() {
+        let mut c = core(2);
+        c.drain_replica(0, false);
+        assert_eq!(
+            c.snapshot()[0].state,
+            ReplicaState::Draining { remove: false }
+        );
+        assert!(!c.reactivate_replica(1), "accepting replica is a no-op");
+        assert!(c.reactivate_replica(0), "warm add");
+        assert_eq!(c.snapshot()[0].state, ReplicaState::Accepting);
+        // an idle remove-drain retires instantly; removed stays removed
+        c.drain_replica(1, true);
+        assert_eq!(c.snapshot()[1].state, ReplicaState::Removed);
+        assert!(!c.reactivate_replica(1));
+        assert!(!c.reactivate_replica(99), "unknown id is a no-op");
+    }
+
+    #[test]
+    fn add_reoffers_queued_work_to_new_capacity() {
+        // One replica, 4 slots, 10 requests: 4 admitted, 6 queued.
+        let mut c = core(1);
+        for i in 0..10u64 {
+            c.submit(5.0, 0, i * 1000 + 5);
+        }
+        let mut out = Vec::new();
+        c.run_round(&mut open_ticket, &mut out);
+        assert_eq!(c.snapshot()[0].queue_depth, 6);
+        let id = c.add_replica(1.0).unwrap();
+        let after = c.snapshot();
+        // The backlog was re-offered through the router the moment
+        // capacity appeared — not left to wait for future arrivals.
+        assert!(after[id].queue_depth > 0, "new replica got re-offered work");
+        assert_eq!(after[0].queue_depth + after[id].queue_depth, 6);
+        // Actives stay in place (non-migratable KV).
+        assert_eq!(4 - after[0].free_per_worker.iter().sum::<usize>(), 4);
+        let mut rounds = 0;
+        while !c.is_idle() && rounds < 100 {
+            c.run_round(&mut open_ticket, &mut out);
+            rounds += 1;
+        }
+        let fin = c.snapshot();
+        assert_eq!(fin[0].completed + fin[1].completed, 10);
+    }
+
+    #[test]
+    fn heterogeneous_shapes_respected_per_replica() {
+        let cfg = FleetConfig {
+            shapes: Some(vec![(1, 1), (3, 2)]),
+            ..FleetConfig::uniform(2, 2, 2, "fcfs")
+        };
+        let mut c: FleetCore<u64, ()> =
+            FleetCore::new(cfg, Box::new(WeightedRoundRobin::new())).unwrap();
+        let snaps = c.snapshot();
+        assert_eq!(snaps[0].g, 1);
+        assert_eq!(snaps[0].b, 1);
+        assert_eq!(snaps[0].loads.len(), 1);
+        assert_eq!(snaps[1].g, 3);
+        assert_eq!(snaps[1].b, 2);
+        assert_eq!(snaps[1].free_per_worker, vec![2, 2, 2]);
+        // mismatched shape count is rejected
+        let bad = FleetConfig {
+            shapes: Some(vec![(1, 1)]),
+            ..FleetConfig::uniform(2, 2, 2, "fcfs")
+        };
+        assert!(
+            FleetCore::<u64, ()>::new(bad, Box::new(WeightedRoundRobin::new()))
+                .is_err()
+        );
+        // work still completes across the asymmetric replicas
+        for i in 0..6u64 {
+            c.submit(3.0, 0, i * 1000 + 2);
+        }
+        let mut out = Vec::new();
+        let mut rounds = 0;
+        while !c.is_idle() && rounds < 50 {
+            c.run_round(&mut open_ticket, &mut out);
+            rounds += 1;
+        }
+        let snaps = c.snapshot();
+        assert_eq!(snaps[0].completed + snaps[1].completed, 6);
     }
 
     #[test]

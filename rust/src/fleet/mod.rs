@@ -34,9 +34,12 @@
 //! Entry points:
 //! * [`run_fleet`] — offline driver over a trace (the `bfio fleet`
 //!   experiment and `benches/fleet.rs` build on it);
+//! * [`run_fleet_hooked`] — the same driver with a per-round
+//!   [`RoundHook`] in the loop (the [`crate::autoscale`] controller);
 //! * [`backend::FleetBackend`] — online [`crate::gateway`] backend, so
 //!   the HTTP gateway serves over a fleet with per-replica
-//!   `/v0/workers` entries and Prometheus series.
+//!   `/v0/workers` entries, Prometheus series, and the
+//!   `/v0/admin/replicas` lifecycle API.
 
 pub mod backend;
 pub mod core;
@@ -75,6 +78,12 @@ pub struct FleetConfig {
     /// Initial replica speed factors; length = initial replica count.
     /// Replica `r` runs its barrier steps in `Δt / speeds[r]`.
     pub speeds: Vec<f64>,
+    /// Per-replica heterogeneous `(G, B)` shapes (`bfio fleet --shapes
+    /// 8x16,4x32,...`).  `None` = every replica uses the fleet-level
+    /// `g`×`b`; `Some` must have one entry per initial replica.
+    /// Replicas added later (lifecycle / autoscaler) use the fleet-level
+    /// default shape.
+    pub shapes: Option<Vec<(usize, usize)>>,
     pub seed: u64,
     /// Hard cap on global rounds (0 = run until the trace drains).
     pub max_rounds: u64,
@@ -98,6 +107,7 @@ impl FleetConfig {
             c_overhead: sim.c_overhead,
             t_token: sim.t_token,
             speeds: vec![1.0; replicas],
+            shapes: None,
             seed: 0,
             max_rounds: 0,
             warmup_rounds: 0,
@@ -108,7 +118,10 @@ impl FleetConfig {
 
     /// Total batch slots across the initial fleet.
     pub fn slots(&self) -> usize {
-        self.speeds.len() * self.g * self.b
+        match &self.shapes {
+            Some(shapes) => shapes.iter().map(|&(g, b)| g * b).sum(),
+            None => self.speeds.len() * self.g * self.b,
+        }
     }
 
     /// Construct a tier-1 router parameterized by this config's Eq. 19
@@ -173,6 +186,24 @@ pub struct FleetResult {
     pub leftover_waiting: usize,
 }
 
+/// Per-round control hook over the offline fleet core: observes the
+/// core between admission rounds and may apply lifecycle actions
+/// (drain / add / reactivate).  The autoscale controller
+/// ([`crate::autoscale::Controller`]) is the implementation;
+/// [`run_fleet`] runs without one, and a hook that does nothing leaves
+/// the run bit-identical to the hook-free path.
+pub trait RoundHook {
+    fn on_round(&mut self, core: &mut FleetCore<u32, ()>);
+
+    /// Whether the hook could still restore capacity to a wedged fleet
+    /// (work parked, nothing accepting).  A paused controller returns
+    /// false so the driver gives up immediately instead of waiting out
+    /// the stall window.
+    fn can_unwedge(&self) -> bool {
+        true
+    }
+}
+
 /// Run `trace` (sorted by `arrival_step`) through an R-replica fleet
 /// under the named tier-1 router, applying `events` (sorted or not) at
 /// their rounds.  Arrival steps index global rounds; each request is
@@ -182,6 +213,18 @@ pub fn run_fleet(
     router_name: &str,
     trace: &[Request],
     events: &[FleetEvent],
+) -> Result<FleetResult> {
+    run_fleet_hooked(cfg, router_name, trace, events, None)
+}
+
+/// [`run_fleet`] with an optional per-round controller hook, called
+/// after arrivals are submitted and before the round executes.
+pub fn run_fleet_hooked(
+    cfg: &FleetConfig,
+    router_name: &str,
+    trace: &[Request],
+    events: &[FleetEvent],
+    mut hook: Option<&mut dyn RoundHook>,
 ) -> Result<FleetResult> {
     let router = cfg
         .router(router_name)
@@ -196,6 +239,7 @@ pub fn run_fleet(
     events.sort_by_key(FleetEvent::round);
     let mut ev = 0usize;
     let mut ptr = 0usize;
+    let mut stall = 0u32;
     let mut out: Vec<FleetFinished<()>> = Vec::new();
 
     let apply_due = |core: &mut FleetCore<u32, ()>, ev: &mut usize| {
@@ -247,6 +291,10 @@ pub fn run_fleet(
             break; // drained
         }
 
+        if let Some(h) = hook.as_mut() {
+            h.on_round(&mut core);
+        }
+
         let stepped = core.run_round(
             &mut |_, idx| {
                 let r = &trace[idx as usize];
@@ -259,14 +307,26 @@ pub fn run_fleet(
             break;
         }
         // Wedged: requests parked in overflow, every replica drained,
-        // and no lifecycle event is coming to unwedge it.
+        // and no lifecycle event is coming to unwedge it.  A controller
+        // hook may still unwedge (reactivate / add) once its cooldown
+        // expires, so with a hook the break waits out a generous stall
+        // window instead of firing on the first starved round.
         if stepped == 0
             && !core.is_idle()
             && !core.has_accepting()
             && ptr >= trace.len()
             && ev >= events.len()
         {
-            break;
+            stall += 1;
+            let limit = match hook.as_ref() {
+                Some(h) if h.can_unwedge() => 10_000,
+                _ => 1,
+            };
+            if stall >= limit {
+                break;
+            }
+        } else {
+            stall = 0;
         }
     }
 

@@ -10,7 +10,9 @@
 //! Both route admissions through the same [`crate::policies::Policy`]
 //! registry, so BF-IO vs JSQ vs FCFS can be compared over real sockets.
 
-use anyhow::Result;
+use anyhow::{bail, Result};
+
+use crate::autoscale::ControllerState;
 
 /// One completion request as seen by a backend (already tokenized).
 #[derive(Clone, Debug)]
@@ -82,6 +84,11 @@ pub struct ReplicaStatus {
     /// Replica-local virtual clock, seconds.
     pub clock_s: f64,
     pub energy_j: f64,
+    /// Theorem 4 decomposition of the replica's synchronized-phase
+    /// energy so far (useful / idle-at-barrier / concavity correction).
+    pub energy_useful_j: f64,
+    pub energy_idle_j: f64,
+    pub energy_correction_j: f64,
 }
 
 /// Aggregate backend counters for `GET /metrics`.
@@ -108,6 +115,37 @@ pub struct BackendStats {
     pub total_tokens: u64,
     /// Requests waiting for a batch slot.
     pub queue_depth: usize,
+    /// Theorem 4 decomposition of the synchronized-phase energy.
+    pub energy_useful_j: f64,
+    pub energy_idle_j: f64,
+    pub energy_correction_j: f64,
+}
+
+/// A replica-lifecycle administration command
+/// (`POST /v0/admin/replicas`).
+#[derive(Clone, Debug)]
+pub enum AdminCmd {
+    /// Stop routing to `replica`; queued work re-routes, actives finish
+    /// in place.  `remove` retires it once idle instead of keeping it
+    /// warm.
+    Drain { replica: usize, remove: bool },
+    /// Cold-add a fresh replica at the given speed factor.
+    Add { speed: f64 },
+    /// Warm add: return a draining replica to the rotation.
+    Reactivate { replica: usize },
+    /// Pause / resume the attached autoscale controller.
+    Pause,
+    Resume,
+}
+
+/// Outcome of an [`AdminCmd`] (`applied == false` means the command was
+/// understood but not applicable, e.g. an unknown replica id).
+#[derive(Clone, Debug)]
+pub struct AdminOutcome {
+    pub applied: bool,
+    /// Replica the command acted on (the new id for `Add`).
+    pub replica: Option<usize>,
+    pub detail: String,
 }
 
 /// An execution backend the gateway can route completions to.
@@ -131,5 +169,24 @@ pub trait Backend: Send + Sync {
     /// default), populated by [`crate::fleet::FleetBackend`].
     fn replicas(&self) -> Vec<ReplicaStatus> {
         Vec::new()
+    }
+
+    /// Whether this backend has a replica lifecycle to administer.  The
+    /// gateway answers `501 Not Implemented` when false; when true, an
+    /// [`Backend::admin`] error is a real server failure (`500`).
+    fn supports_admin(&self) -> bool {
+        false
+    }
+
+    /// Apply a replica-lifecycle administration command.  Errors for
+    /// backends without replica lifecycle (the default).
+    fn admin(&self, cmd: AdminCmd) -> Result<AdminOutcome> {
+        bail!("backend does not support replica administration ({cmd:?})")
+    }
+
+    /// Autoscale controller state, `None` when no controller is
+    /// attached (the default).
+    fn autoscaler(&self) -> Option<ControllerState> {
+        None
     }
 }

@@ -295,6 +295,15 @@ pub fn fetch_report(authority: &str, res: &LoadGenResult) -> Result<(String, Rep
         wall_time_s: res.wall_s,
         sync_energy_j: 0.0,
         total_energy_j: energy_j,
+        energy_useful_j: (after("bfio_energy_useful_joules")
+            - before("bfio_energy_useful_joules"))
+        .max(0.0),
+        energy_idle_j: (after("bfio_energy_idle_joules")
+            - before("bfio_energy_idle_joules"))
+        .max(0.0),
+        energy_correction_j: (after("bfio_energy_correction_joules")
+            - before("bfio_energy_correction_joules"))
+        .max(0.0),
         eta_sum: 0.0,
         total_workload: 0.0,
         imb_tot: 0.0,

@@ -9,6 +9,8 @@
 //! |------------------------|--------|------------------------------------------|
 //! | `/v1/completions`      | POST   | OpenAI-style completion (prompt → tokens)|
 //! | `/v0/workers`          | GET    | per-worker load / slots / queue depth    |
+//! | `/v0/admin/replicas`   | GET    | replica lifecycle + autoscaler state     |
+//! | `/v0/admin/replicas`   | POST   | drain / add / reactivate / pause / resume|
 //! | `/metrics`             | GET    | Prometheus text exposition               |
 //! | `/healthz`             | GET    | liveness                                 |
 //!
@@ -37,7 +39,7 @@ use anyhow::{Context, Result};
 use crate::metrics::prometheus::PromWriter;
 use crate::util::json::{self, Json};
 
-use backend::{Backend, CompletionRequest};
+use backend::{AdminCmd, Backend, CompletionRequest};
 use http::{read_request, respond, HttpRequest};
 
 /// Gateway server configuration.
@@ -207,12 +209,18 @@ fn route(req: &HttpRequest, shared: &Shared) -> Result<Routed> {
         ("GET", "/") => Ok((
             200,
             "text/plain",
-            b"bfio gateway\nPOST /v1/completions  GET /v0/workers  GET /metrics  GET /healthz\n"
+            b"bfio gateway\nPOST /v1/completions  GET /v0/workers  GET|POST /v0/admin/replicas  GET /metrics  GET /healthz\n"
                 .to_vec(),
         )),
         ("GET", "/v0/workers") => {
             Ok((200, "application/json", workers_json(shared).into_bytes()))
         }
+        ("GET", "/v0/admin/replicas") => Ok((
+            200,
+            "application/json",
+            admin_replicas_json(shared).into_bytes(),
+        )),
+        ("POST", "/v0/admin/replicas") => admin_replicas_post(req, shared),
         ("GET", "/metrics") => Ok((
             200,
             "text/plain; version=0.0.4",
@@ -347,6 +355,139 @@ fn completions(req: &HttpRequest, shared: &Shared) -> Result<Routed> {
     Ok((200, "application/json", resp.to_string().into_bytes()))
 }
 
+fn replicas_arr(reps: &[backend::ReplicaStatus]) -> Json {
+    json::arr(reps.iter().map(|r| {
+        json::obj(vec![
+            ("id", json::num(r.id as f64)),
+            ("speed", json::num(r.speed)),
+            ("state", json::s(&r.state)),
+            ("load", json::num(r.load)),
+            ("active", json::num(r.active as f64)),
+            ("free_slots", json::num(r.free_slots as f64)),
+            ("queue_depth", json::num(r.queue_depth as f64)),
+            ("completed", json::num(r.completed as f64)),
+            ("steps", json::num(r.steps as f64)),
+            ("clock_s", json::num(r.clock_s)),
+        ])
+    }))
+}
+
+fn autoscaler_json(st: &crate::autoscale::ControllerState) -> Json {
+    json::obj(vec![
+        ("policy", json::s(&st.policy)),
+        ("paused", Json::Bool(st.paused)),
+        ("min_replicas", json::num(st.min_replicas as f64)),
+        ("max_replicas", json::num(st.max_replicas as f64)),
+        ("accepting", json::num(st.accepting as f64)),
+        ("live", json::num(st.live as f64)),
+        ("utilization", json::num(st.utilization)),
+        ("adds", json::num(st.adds as f64)),
+        ("drains", json::num(st.drains as f64)),
+        ("reactivations", json::num(st.reactivations as f64)),
+        (
+            "last_action_round",
+            match st.last_action_round {
+                Some(r) => json::num(r as f64),
+                None => Json::Null,
+            },
+        ),
+        ("cooldown_remaining", json::num(st.cooldown_remaining as f64)),
+        ("last_decision", json::s(&st.last_decision)),
+        ("ticks", json::num(st.ticks as f64)),
+    ])
+}
+
+/// `GET /v0/admin/replicas`: lifecycle view + controller state.
+fn admin_replicas_json(shared: &Shared) -> String {
+    let reps = shared.backend.replicas();
+    json::obj(vec![
+        ("backend", json::s(&shared.backend.name())),
+        ("replicas", replicas_arr(&reps)),
+        (
+            "autoscaler",
+            match shared.backend.autoscaler() {
+                Some(st) => autoscaler_json(&st),
+                None => Json::Null,
+            },
+        ),
+    ])
+    .to_string()
+}
+
+/// `POST /v0/admin/replicas`: apply one lifecycle command.  Body:
+/// `{"action": "drain"|"remove"|"add"|"reactivate"|"pause"|"resume",
+///   "replica": <id>, "speed": <f>}`.
+fn admin_replicas_post(req: &HttpRequest, shared: &Shared) -> Result<Routed> {
+    let parsed = req
+        .body_str()
+        .ok()
+        .and_then(|s| Json::parse(s).ok())
+        .filter(|v| v.as_obj().is_some());
+    let body = match parsed {
+        Some(v) => v,
+        None => {
+            shared.bad_requests.fetch_add(1, Ordering::Relaxed);
+            return Ok((400, "application/json", error_body("body must be a JSON object")));
+        }
+    };
+    let action = body.get("action").and_then(Json::as_str).unwrap_or("");
+    let replica = body.get("replica").and_then(Json::as_usize);
+    let cmd = match (action, replica) {
+        ("drain", Some(r)) => AdminCmd::Drain { replica: r, remove: false },
+        ("remove", Some(r)) => AdminCmd::Drain { replica: r, remove: true },
+        ("reactivate", Some(r)) => AdminCmd::Reactivate { replica: r },
+        ("add", _) => AdminCmd::Add {
+            speed: body.get("speed").and_then(Json::as_f64).unwrap_or(1.0),
+        },
+        ("pause", _) => AdminCmd::Pause,
+        ("resume", _) => AdminCmd::Resume,
+        _ => {
+            shared.bad_requests.fetch_add(1, Ordering::Relaxed);
+            return Ok((
+                400,
+                "application/json",
+                error_body(
+                    "action must be drain|remove|add|reactivate|pause|resume \
+                     (drain/remove/reactivate need a replica id)",
+                ),
+            ));
+        }
+    };
+    if !shared.backend.supports_admin() {
+        // Backend without replica lifecycle (sim / pjrt): 501.
+        return Ok((
+            501,
+            "application/json",
+            error_body("backend does not support replica administration"),
+        ));
+    }
+    match shared.backend.admin(cmd) {
+        Ok(outcome) => {
+            let status = if outcome.applied { 200 } else { 400 };
+            let resp = json::obj(vec![
+                ("ok", Json::Bool(outcome.applied)),
+                ("action", json::s(action)),
+                (
+                    "replica",
+                    match outcome.replica {
+                        Some(r) => json::num(r as f64),
+                        None => Json::Null,
+                    },
+                ),
+                ("detail", json::s(&outcome.detail)),
+            ]);
+            Ok((status, "application/json", resp.to_string().into_bytes()))
+        }
+        // A supporting backend failing the command is a server fault
+        // (scheduler gone / poisoned), not "unimplemented".
+        Err(e) => Ok((
+            500,
+            "application/json",
+            error_body(&format!("{e:#}")),
+        )),
+    }
+}
+
 fn workers_json(shared: &Shared) -> String {
     let ws = shared.backend.workers();
     let st = shared.backend.stats();
@@ -373,23 +514,7 @@ fn workers_json(shared: &Shared) -> String {
         ),
     ];
     if !reps.is_empty() {
-        fields.push((
-            "replicas",
-            json::arr(reps.iter().map(|r| {
-                json::obj(vec![
-                    ("id", json::num(r.id as f64)),
-                    ("speed", json::num(r.speed)),
-                    ("state", json::s(&r.state)),
-                    ("load", json::num(r.load)),
-                    ("active", json::num(r.active as f64)),
-                    ("free_slots", json::num(r.free_slots as f64)),
-                    ("queue_depth", json::num(r.queue_depth as f64)),
-                    ("completed", json::num(r.completed as f64)),
-                    ("steps", json::num(r.steps as f64)),
-                    ("clock_s", json::num(r.clock_s)),
-                ])
-            })),
-        ));
+        fields.push(("replicas", replicas_arr(&reps)));
     }
     json::obj(fields).to_string()
 }
@@ -446,7 +571,7 @@ fn metrics_text(shared: &Shared) -> String {
     if !reps.is_empty() {
         // Uniform per-replica families: (name, help, kind, value).
         type RepVal = fn(&backend::ReplicaStatus) -> f64;
-        let families: [(&str, &str, &str, RepVal); 6] = [
+        let families: [(&str, &str, &str, RepVal); 9] = [
             (
                 "bfio_replica_load",
                 "Σ_g L_g per barrier-group replica.",
@@ -482,6 +607,24 @@ fn metrics_text(shared: &Shared) -> String {
                 "Cumulative energy per replica under the paper's power model.",
                 "gauge",
                 |r| r.energy_j,
+            ),
+            (
+                "bfio_replica_energy_useful_joules",
+                "Theorem 4 useful-work energy term per replica.",
+                "gauge",
+                |r| r.energy_useful_j,
+            ),
+            (
+                "bfio_replica_energy_idle_joules",
+                "Theorem 4 idle-at-barrier energy term per replica.",
+                "gauge",
+                |r| r.energy_idle_j,
+            ),
+            (
+                "bfio_replica_energy_correction_joules",
+                "Theorem 4 concavity-correction energy term per replica.",
+                "gauge",
+                |r| r.energy_correction_j,
             ),
         ];
         for (name, help, kind, value) in families {
@@ -529,6 +672,93 @@ fn metrics_text(shared: &Shared) -> String {
         "gauge",
     );
     w.sample("bfio_energy_joules", &[], st.energy_j);
+    w.family(
+        "bfio_energy_useful_joules",
+        "Theorem 4 useful-work energy term (kappa*P_max*W).",
+        "gauge",
+    );
+    w.sample("bfio_energy_useful_joules", &[], st.energy_useful_j);
+    w.family(
+        "bfio_energy_idle_joules",
+        "Theorem 4 idle-at-barrier energy term (kappa*P_idle*ImbTot).",
+        "gauge",
+    );
+    w.sample("bfio_energy_idle_joules", &[], st.energy_idle_j);
+    w.family(
+        "bfio_energy_correction_joules",
+        "Theorem 4 concavity-correction energy term.",
+        "gauge",
+    );
+    w.sample("bfio_energy_correction_joules", &[], st.energy_correction_j);
+    if let Some(auto) = shared.backend.autoscaler() {
+        w.family(
+            "bfio_autoscale_replicas",
+            "Replica counts as the autoscale controller sees them, by lifecycle bucket.",
+            "gauge",
+        );
+        w.sample(
+            "bfio_autoscale_replicas",
+            &[("state", "accepting")],
+            auto.accepting as f64,
+        );
+        w.sample(
+            "bfio_autoscale_replicas",
+            &[("state", "live")],
+            auto.live as f64,
+        );
+        w.family(
+            "bfio_autoscale_utilization",
+            "Demand over accepting capacity at the last controller tick.",
+            "gauge",
+        );
+        w.sample("bfio_autoscale_utilization", &[], auto.utilization);
+        w.family(
+            "bfio_autoscale_actions_total",
+            "Lifecycle actions taken by the controller, by kind.",
+            "counter",
+        );
+        w.sample(
+            "bfio_autoscale_actions_total",
+            &[("action", "add")],
+            auto.adds as f64,
+        );
+        w.sample(
+            "bfio_autoscale_actions_total",
+            &[("action", "drain")],
+            auto.drains as f64,
+        );
+        w.sample(
+            "bfio_autoscale_actions_total",
+            &[("action", "reactivate")],
+            auto.reactivations as f64,
+        );
+        w.family(
+            "bfio_autoscale_cooldown_rounds",
+            "Rounds until the controller may act again (0 = ready).",
+            "gauge",
+        );
+        w.sample(
+            "bfio_autoscale_cooldown_rounds",
+            &[],
+            auto.cooldown_remaining as f64,
+        );
+        w.family(
+            "bfio_autoscale_paused",
+            "1 when the control loop is paused via the admin API.",
+            "gauge",
+        );
+        w.sample(
+            "bfio_autoscale_paused",
+            &[],
+            if auto.paused { 1.0 } else { 0.0 },
+        );
+        w.family(
+            "bfio_autoscale_ticks_total",
+            "Controller observation rounds.",
+            "counter",
+        );
+        w.sample("bfio_autoscale_ticks_total", &[], auto.ticks as f64);
+    }
     w.family(
         "bfio_requests_total",
         "Completed requests, labelled by routing policy.",

@@ -351,6 +351,9 @@ fn publish<T, P>(
         admitted: engine.admitted(),
         total_tokens: recorder.tokens_recorded() as u64,
         queue_depth: engine.waiting_len(),
+        energy_useful_j: recorder.energy.useful_j,
+        energy_idle_j: recorder.energy.idle_j,
+        energy_correction_j: recorder.energy.correction_j,
     };
     if let Ok(mut s) = snap.lock() {
         s.workers = ws;

@@ -28,7 +28,12 @@
 //! * [`fleet`] — two-level routing across R data-parallel barrier-group
 //!   replicas: a tier-1 `FleetRouter` (weighted-RR, least-outstanding,
 //!   power-of-d, two-level BF-IO) in front of per-replica engines with
-//!   heterogeneous speeds and lifecycle churn (drain/add/remove).
+//!   heterogeneous speeds/shapes and lifecycle churn (drain/add/remove).
+//! * [`autoscale`] — the energy-aware elastic control plane over the
+//!   fleet: per-round signals (outstanding work, Eq. 19 step time,
+//!   completion horizon, Theorem-4 energy rates), scale policies
+//!   (static / target-tracking / energy-marginal) with hysteresis, and
+//!   an actuator that drains/adds/reactivates replicas live.
 //! * [`energy`] — the GPU power model `P(mfu)` and per-step energy
 //!   integration (Section 5.2 / Appendix D of the paper).
 //! * [`theory`] — closed-form theorem bounds and empirical IIR drivers.
@@ -39,6 +44,7 @@
 //!   bench + property-test harnesses) — the build image has no crates.io
 //!   access beyond `xla`/`anyhow`, so these are implemented from scratch.
 
+pub mod autoscale;
 pub mod config;
 pub mod coordinator;
 pub mod experiments;

@@ -1,16 +1,18 @@
 //! `bfio` — CLI for the BF-IO serving reproduction.
 //!
 //! ```text
-//! bfio sim     --policy bfio:40 --g 64 --b 24 --steps 600   one simulation
-//! bfio fleet   --replicas 8 --workers 16 --routers wrr,low,powd:2,bfio2
-//!                                                           fleet vs monolith
-//! bfio repro   <table1|fig1|fig2|fig6|fig7|fig9|fig10|burstgpt|
-//!               adversarial|predictors|drift|all> [--full]  paper artifacts
-//! bfio theory  <thm1|thm2|thm3|energy|all>                  theorem checks
-//! bfio serve   --workers 2 --policy bfio:8 --requests 16    live PJRT serving
-//! bfio gateway --backend sim|fleet --addr 127.0.0.1:8080    HTTP gateway
-//! bfio loadgen --url http://127.0.0.1:8080 --requests 64    drive a gateway
-//! bfio trace   --out trace.jsonl --steps 200                dump a trace
+//! bfio sim       --policy bfio:40 --g 64 --b 24 --steps 600   one simulation
+//! bfio fleet     --replicas 8 --workers 16 --routers wrr,low,powd:2,bfio2
+//!                [--shapes 8x16,4x32,...]                     fleet vs monolith
+//! bfio autoscale --replicas 3 --policies static,target,energy
+//!                [--smoke]                                    elastic vs static
+//! bfio repro     <table1|fig1|fig2|fig6|fig7|fig9|fig10|burstgpt|
+//!                 adversarial|predictors|drift|all> [--full]  paper artifacts
+//! bfio theory    <thm1|thm2|thm3|energy|all>                  theorem checks
+//! bfio serve     --workers 2 --policy bfio:8 --requests 16    live PJRT serving
+//! bfio gateway   --backend sim|fleet [--autoscale energy]     HTTP gateway
+//! bfio loadgen   --url http://127.0.0.1:8080 --requests 64    drive a gateway
+//! bfio trace     --out trace.jsonl --steps 200                dump a trace
 //! ```
 
 use std::sync::Arc;
@@ -18,8 +20,10 @@ use std::time::Duration;
 
 use anyhow::{bail, Context, Result};
 
+use bfio_serve::autoscale::AutoscaleConfig;
 use bfio_serve::coordinator::{serve, CoordinatorConfig, ServeRequest};
 use bfio_serve::experiments::{self, scaling, ExpScale};
+use bfio_serve::experiments::autoscale::{autoscale_sweep, AutoscaleScale};
 use bfio_serve::experiments::fleet::{fleet_sweep, FleetScale};
 use bfio_serve::fleet::{FleetBackend, FleetBackendConfig};
 use bfio_serve::gateway::backend::Backend;
@@ -61,6 +65,7 @@ fn run(args: &Args) -> Result<()> {
     match args.subcommand.as_deref() {
         Some("sim") => cmd_sim(args),
         Some("fleet") => cmd_fleet(args),
+        Some("autoscale") => cmd_autoscale(args),
         Some("repro") => cmd_repro(args),
         Some("theory") => cmd_theory(args),
         Some("serve") => cmd_serve(args),
@@ -68,13 +73,13 @@ fn run(args: &Args) -> Result<()> {
         Some("loadgen") => cmd_loadgen(args),
         Some("trace") => cmd_trace(args),
         Some(other) => bail!(
-            "unknown subcommand {other}; try sim|fleet|repro|theory|serve|gateway|loadgen|trace"
+            "unknown subcommand {other}; try sim|fleet|autoscale|repro|theory|serve|gateway|loadgen|trace"
         ),
         None => {
             println!(
                 "bfio — BF-IO load-balancing reproduction\n\
-                 subcommands: sim | fleet | repro <exp> | theory <thm> | serve | gateway | \
-                 loadgen | trace\n\
+                 subcommands: sim | fleet | autoscale | repro <exp> | theory <thm> | serve | \
+                 gateway | loadgen | trace\n\
                  see README.md for details"
             );
             Ok(())
@@ -128,6 +133,33 @@ fn parse_speeds(v: &str, replicas: usize) -> Result<Vec<f64>> {
     Ok(speeds)
 }
 
+/// Parse `--shapes 8x16,4x32` into per-replica `(G, B)` pairs,
+/// validated against `--replicas`.
+fn parse_shapes(v: &str, replicas: usize) -> Result<Vec<(usize, usize)>> {
+    let shapes: Vec<(usize, usize)> = v
+        .split(',')
+        .filter(|t| !t.is_empty())
+        .map(|t| -> Result<(usize, usize)> {
+            let (g, b) = t
+                .trim()
+                .split_once('x')
+                .with_context(|| format!("bad shape {t:?}; want GxB"))?;
+            Ok((
+                g.parse().with_context(|| format!("bad shape {t:?}"))?,
+                b.parse().with_context(|| format!("bad shape {t:?}"))?,
+            ))
+        })
+        .collect::<Result<Vec<(usize, usize)>>>()
+        .with_context(|| format!("bad --shapes {v:?}"))?;
+    if shapes.len() != replicas {
+        bail!("--shapes needs {replicas} entries, got {}", shapes.len());
+    }
+    if shapes.iter().any(|&(g, b)| g == 0 || b == 0) {
+        bail!("--shapes entries need G >= 1 and B >= 1");
+    }
+    Ok(shapes)
+}
+
 fn cmd_fleet(args: &Args) -> Result<()> {
     let replicas = args.usize_or("replicas", 8);
     let g = args.usize_or("workers", args.usize_or("g", 16));
@@ -142,6 +174,9 @@ fn cmd_fleet(args: &Args) -> Result<()> {
     if let Some(v) = args.flag("speeds") {
         scale.speeds = parse_speeds(v, replicas)?;
     }
+    if let Some(v) = args.flag("shapes") {
+        scale.shapes = Some(parse_shapes(v, replicas)?);
+    }
     let routers: Vec<String> = args
         .get_or("routers", "wrr,low,powd:2,bfio2")
         .split(',')
@@ -155,6 +190,40 @@ fn cmd_fleet(args: &Args) -> Result<()> {
         std::path::Path::new(out),
         args.has("churn"),
     )
+}
+
+fn cmd_autoscale(args: &Args) -> Result<()> {
+    // Anything short of an explicit (un-smoked) --full runs — and is
+    // recorded in the JSON as — the smoke scale.
+    let full = args.has("full") && !args.has("smoke");
+    let smoke = !full;
+    let mut scale = if full {
+        AutoscaleScale::full()
+    } else {
+        AutoscaleScale::smoke()
+    };
+    scale.replicas = args.usize_or("replicas", scale.replicas);
+    scale.g = args.usize_or("workers", args.usize_or("g", scale.g));
+    scale.b = args.usize_or("b", scale.b);
+    scale.rounds = args.u64_or("rounds", scale.rounds);
+    scale.seed = args.u64_or("seed", scale.seed);
+    scale.policy = args.get_or("policy", &scale.policy).to_string();
+    scale.router = args.get_or("router", &scale.router).to_string();
+    scale.period = args.u64_or("period", scale.period);
+    scale.valley = args.f64_or("valley", scale.valley);
+    scale.peak = args.f64_or("peak", scale.peak);
+    scale.decode_mean = args.f64_or("decode-mean", scale.decode_mean);
+    scale.min_replicas = args.usize_or("min-replicas", scale.min_replicas);
+    scale.cooldown_rounds = args.u64_or("cooldown", scale.cooldown_rounds);
+    scale.dwell_rounds = args.u64_or("dwell", scale.dwell_rounds);
+    let policies: Vec<String> = args
+        .get_or("policies", "static,target,energy")
+        .split(',')
+        .filter(|t| !t.is_empty())
+        .map(|t| t.trim().to_string())
+        .collect();
+    let out = args.get_or("out", "BENCH_autoscale.json");
+    autoscale_sweep(&scale, &policies, std::path::Path::new(out), smoke)
 }
 
 fn cmd_repro(args: &Args) -> Result<()> {
@@ -313,6 +382,16 @@ fn cmd_gateway(args: &Args) -> Result<()> {
                 Some(v) => Some(parse_speeds(v, replicas)?),
                 None => None,
             };
+            // `--autoscale energy|target|static[:...]` attaches the
+            // elastic controller; the admin API can pause/override it.
+            let autoscale = args.flag("autoscale").map(|p| AutoscaleConfig {
+                policy: p.to_string(),
+                min_replicas: args.usize_or("min-replicas", 1),
+                max_replicas: args.usize_or("max-replicas", replicas.max(1) * 2),
+                cooldown_rounds: args.u64_or("cooldown", 20),
+                dwell_rounds: args.u64_or("dwell", 5),
+                add_speed: 1.0,
+            });
             let cfg = FleetBackendConfig {
                 replicas,
                 g: args.usize_or("g", 4),
@@ -323,6 +402,7 @@ fn cmd_gateway(args: &Args) -> Result<()> {
                 seed: args.u64_or("seed", 0),
                 step_delay: Duration::from_millis(args.u64_or("step-delay-ms", 1)),
                 batch_window: Duration::from_millis(args.u64_or("batch-window-ms", 5)),
+                autoscale,
                 ..FleetBackendConfig::default()
             };
             Arc::new(FleetBackend::new(cfg)?)
@@ -345,7 +425,10 @@ fn cmd_gateway(args: &Args) -> Result<()> {
     let name = backend.name();
     let gw = Gateway::spawn(GatewayConfig { addr, threads }, backend)?;
     println!("bfio gateway ({name}) listening on http://{}", gw.addr);
-    println!("  POST /v1/completions   GET /v0/workers   GET /metrics   GET /healthz");
+    println!(
+        "  POST /v1/completions   GET /v0/workers   GET|POST /v0/admin/replicas   \
+         GET /metrics   GET /healthz"
+    );
     // Serve until killed.
     loop {
         std::thread::sleep(Duration::from_secs(3600));

@@ -271,6 +271,9 @@ impl Recorder {
             wall_time_s: self.wall_time,
             sync_energy_j: self.energy.sync_energy_j,
             total_energy_j: self.energy.total_energy_j(),
+            energy_useful_j: self.energy.useful_j,
+            energy_idle_j: self.energy.idle_j,
+            energy_correction_j: self.energy.correction_j,
             eta_sum: self.energy.eta_sum(),
             total_workload: self.energy.total_workload,
             imb_tot: self.energy.imb_tot,
@@ -330,6 +333,13 @@ pub struct Report {
     pub sync_energy_j: f64,
     /// Sync + fixed-overhead energy (experiment object), joules.
     pub total_energy_j: f64,
+    /// Theorem 4's useful-work term `κ·P_max·W`, joules.
+    pub energy_useful_j: f64,
+    /// Theorem 4's idle-at-barrier term `κ·P_idle·ImbTot`, joules.
+    pub energy_idle_j: f64,
+    /// Theorem 4's concavity correction (sandwiched by
+    /// `0 ≤ correction ≤ κ·D_γ·ImbTot`), joules.
+    pub energy_correction_j: f64,
     /// Normalized imbalance η_sum (Eq. 13).
     pub eta_sum: f64,
     pub total_workload: f64,

@@ -124,6 +124,24 @@ pub fn render_report(report: &Report, policy: &str) -> String {
         "gauge",
     );
     w.sample("bfio_energy_joules", &l, report.total_energy_j);
+    w.family(
+        "bfio_energy_useful_joules",
+        "Theorem 4 useful-work energy term (kappa*P_max*W).",
+        "gauge",
+    );
+    w.sample("bfio_energy_useful_joules", &l, report.energy_useful_j);
+    w.family(
+        "bfio_energy_idle_joules",
+        "Theorem 4 idle-at-barrier energy term (kappa*P_idle*ImbTot).",
+        "gauge",
+    );
+    w.sample("bfio_energy_idle_joules", &l, report.energy_idle_j);
+    w.family(
+        "bfio_energy_correction_joules",
+        "Theorem 4 concavity-correction energy term.",
+        "gauge",
+    );
+    w.sample("bfio_energy_correction_joules", &l, report.energy_correction_j);
     w.family("bfio_requests_total", "Completed requests.", "counter");
     w.sample("bfio_requests_total", &l, report.completed as f64);
     w.family("bfio_tokens_total", "Generated tokens.", "counter");
@@ -152,6 +170,9 @@ mod tests {
             wall_time_s: 1.5,
             sync_energy_j: 10.0,
             total_energy_j: 20.0,
+            energy_useful_j: 12.0,
+            energy_idle_j: 6.0,
+            energy_correction_j: 2.0,
             eta_sum: 0.1,
             total_workload: 100.0,
             imb_tot: 10.0,
@@ -178,6 +199,15 @@ bfio_tpot_seconds{policy=\"bfio:8\"} 0.125
 # HELP bfio_energy_joules Total energy under the paper's power model.
 # TYPE bfio_energy_joules gauge
 bfio_energy_joules{policy=\"bfio:8\"} 20
+# HELP bfio_energy_useful_joules Theorem 4 useful-work energy term (kappa*P_max*W).
+# TYPE bfio_energy_useful_joules gauge
+bfio_energy_useful_joules{policy=\"bfio:8\"} 12
+# HELP bfio_energy_idle_joules Theorem 4 idle-at-barrier energy term (kappa*P_idle*ImbTot).
+# TYPE bfio_energy_idle_joules gauge
+bfio_energy_idle_joules{policy=\"bfio:8\"} 6
+# HELP bfio_energy_correction_joules Theorem 4 concavity-correction energy term.
+# TYPE bfio_energy_correction_joules gauge
+bfio_energy_correction_joules{policy=\"bfio:8\"} 2
 # HELP bfio_requests_total Completed requests.
 # TYPE bfio_requests_total counter
 bfio_requests_total{policy=\"bfio:8\"} 7

@@ -234,6 +234,29 @@ impl<T, P> Engine<T, P> {
         self.step
     }
 
+    /// Number of decode workers `G`.
+    pub fn worker_count(&self) -> usize {
+        self.cfg.g
+    }
+
+    /// Per-worker batch capacity `B`.
+    pub fn batch_cap(&self) -> usize {
+        self.cfg.b
+    }
+
+    /// Steps (inclusive of the current one) until the *last* admitted
+    /// request completes, assuming no further admissions — the
+    /// Block-style predicted completion lookahead fleet controllers
+    /// scale on.  Exact, not predicted: completion steps are known at
+    /// admission (`admit_step + o − 1`).  0 when nothing is active.
+    pub fn completion_horizon(&self) -> u64 {
+        self.finish
+            .keys()
+            .map(|&k| k.saturating_sub(self.step) + 1)
+            .max()
+            .unwrap_or(0)
+    }
+
     /// Post-admission per-worker loads `L_g(k)` (feed to the recorder /
     /// imbalance).
     pub fn loads(&self) -> &[f64] {
@@ -723,6 +746,27 @@ mod tests {
             vec![(7.0, 0, 0.25, 2002), (3.0, 1, 0.5, 3001)],
             "FIFO order with original arrival metadata"
         );
+    }
+
+    #[test]
+    fn completion_horizon_counts_steps_to_last_active() {
+        let mut e = engine(2, 2, Drift::Unit);
+        assert_eq!(e.completion_horizon(), 0);
+        assert_eq!(e.worker_count(), 2);
+        assert_eq!(e.batch_cap(), 2);
+        e.submit(10.0, 0, 0.0, 1003); // o = 3: finishes at step 2
+        e.submit(4.0, 0, 0.0, 2001); // o = 1: finishes at step 0
+        e.admit(&mut Fcfs::new(), &mut Rng::new(1), 0.0, open_ticket);
+        assert_eq!(e.completion_horizon(), 3);
+        let mut done = Vec::new();
+        e.advance(&mut done); // step 0: the o=1 request completes
+        assert_eq!(done.len(), 1);
+        assert_eq!(e.completion_horizon(), 2);
+        e.advance(&mut done);
+        assert_eq!(e.completion_horizon(), 1);
+        e.advance(&mut done);
+        assert_eq!(done.len(), 1);
+        assert_eq!(e.completion_horizon(), 0);
     }
 
     #[test]

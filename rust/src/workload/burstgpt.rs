@@ -50,6 +50,27 @@ impl BurstGptLike {
             initial_backlog: 0,
         }
     }
+
+    /// The diurnal arrival process the autoscale sweep runs on: a
+    /// sinusoidal day/night rate profile (BurstGPT's dominant
+    /// non-stationarity at trace scale) between `valley` and `peak`
+    /// requests per round over `period` rounds.
+    pub fn diurnal(valley: f64, peak: f64, period: u64) -> ArrivalProcess {
+        ArrivalProcess::Diurnal { valley, peak, period, initial_backlog: 0 }
+    }
+
+    /// A scaled-down variant for smoke-size runs: conversational
+    /// prompt shape preserved, decode mean shrunk to `decode_mean`
+    /// rounds so steady state is reached within a few hundred rounds
+    /// instead of thousands.
+    pub fn scaled(decode_mean: f64) -> BurstGptLike {
+        let decode_mean = decode_mean.max(1.0);
+        BurstGptLike {
+            decode_p: 1.0 / decode_mean,
+            decode_cap: (decode_mean * 8.0) as u64,
+            ..BurstGptLike::default()
+        }
+    }
 }
 
 impl LengthSampler for BurstGptLike {
@@ -109,6 +130,34 @@ mod tests {
             &(0..20_000).map(|_| lb.sample(&mut rng).0).collect::<Vec<_>>(),
         );
         assert!(lb_mean > 4.0 * bg_mean, "lb {lb_mean} vs bg {bg_mean}");
+    }
+
+    #[test]
+    fn scaled_sampler_shrinks_decode_only() {
+        let s = BurstGptLike::scaled(20.0);
+        let mut rng = Rng::new(4);
+        let dec: Vec<f64> =
+            (0..30_000).map(|_| s.sample(&mut rng).1 as f64).collect();
+        let mean = stats::mean(&dec);
+        assert!((mean - 20.0).abs() < 2.0, "mean {mean}");
+        assert!(dec.iter().all(|&o| o >= 1.0 && o <= 160.0));
+        // prompts keep the conversational shape
+        let pre: Vec<f64> = (0..10_000).map(|_| s.sample(&mut rng).0).collect();
+        let med = stats::median(&pre);
+        assert!(med > 100.0 && med < 900.0, "median {med}");
+    }
+
+    #[test]
+    fn diurnal_process_constructed() {
+        let a = BurstGptLike::diurnal(0.5, 4.0, 120);
+        if let ArrivalProcess::Diurnal { valley, peak, period, initial_backlog } = a {
+            assert_eq!(valley, 0.5);
+            assert_eq!(peak, 4.0);
+            assert_eq!(period, 120);
+            assert_eq!(initial_backlog, 0);
+        } else {
+            panic!("expected diurnal");
+        }
     }
 
     #[test]

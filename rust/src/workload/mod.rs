@@ -224,6 +224,10 @@ pub enum ArrivalProcess {
     Fixed { per_step: usize, initial_backlog: usize },
     /// Bursty: Poisson(base) with bursts of size `burst` every `period`.
     Bursty { base: f64, burst: usize, period: u64, initial_backlog: usize },
+    /// Diurnal: Poisson with a sinusoidal rate cycling between `valley`
+    /// and `peak` over `period` steps (valley at step 0), the BurstGPT
+    /// day/night intensity profile the autoscaler is evaluated on.
+    Diurnal { valley: f64, peak: f64, period: u64, initial_backlog: usize },
 }
 
 impl ArrivalProcess {
@@ -249,6 +253,21 @@ impl ArrivalProcess {
                 if period > 0 && step % period == 0 {
                     n += burst;
                 }
+                if step == 0 {
+                    n += initial_backlog;
+                }
+                n
+            }
+            ArrivalProcess::Diurnal { valley, peak, period, initial_backlog } => {
+                let rate = if period == 0 {
+                    valley
+                } else {
+                    let phase = step % period;
+                    let x = 2.0 * std::f64::consts::PI * phase as f64
+                        / period as f64;
+                    valley + (peak - valley) * 0.5 * (1.0 - x.cos())
+                };
+                let mut n = rng.poisson(rate.max(0.0)) as usize;
                 if step == 0 {
                     n += initial_backlog;
                 }
@@ -413,6 +432,38 @@ mod tests {
         let later: usize = (1..1000).map(|k| a.arrivals_at(k, &mut rng)).sum();
         let mean = later as f64 / 999.0;
         assert!((mean - 2.0).abs() < 0.3, "mean {mean}");
+    }
+
+    #[test]
+    fn diurnal_arrivals_cycle_between_valley_and_peak() {
+        let a = ArrivalProcess::Diurnal {
+            valley: 1.0,
+            peak: 20.0,
+            period: 100,
+            initial_backlog: 0,
+        };
+        let mut rng = Rng::new(8);
+        // average the valley (phase 0) and peak (phase 50) rates over
+        // many cycles
+        let cycles = 300u64;
+        let mut valley_sum = 0usize;
+        let mut peak_sum = 0usize;
+        for c in 0..cycles {
+            valley_sum += a.arrivals_at(c * 100, &mut rng);
+            peak_sum += a.arrivals_at(c * 100 + 50, &mut rng);
+        }
+        let valley_mean = valley_sum as f64 / cycles as f64;
+        let peak_mean = peak_sum as f64 / cycles as f64;
+        assert!((valley_mean - 1.0).abs() < 0.5, "valley {valley_mean}");
+        assert!((peak_mean - 20.0).abs() < 2.0, "peak {peak_mean}");
+        // degenerate period pins the rate at the valley
+        let flat = ArrivalProcess::Diurnal {
+            valley: 2.0,
+            peak: 50.0,
+            period: 0,
+            initial_backlog: 3,
+        };
+        assert!(flat.arrivals_at(0, &mut rng) >= 3);
     }
 
     #[test]

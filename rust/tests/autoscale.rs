@@ -1,0 +1,413 @@
+//! Autoscale control-plane invariants:
+//!
+//! * Theorem 4's sandwich `0 ≤ correction ≤ κ·D_γ·ImbTot` holds per
+//!   replica and fleet-wide under lifecycle churn (property suite);
+//! * the controller with hysteresis never flaps on constant-rate load;
+//! * an autoscaler-disabled (static-policy) fleet reproduces the PR-3
+//!   open-loop `run_fleet` results to 1e-9;
+//! * `/v0/admin/replicas` drains and re-adds a replica on a *live*
+//!   `FleetBackend` under concurrent traffic without losing or
+//!   duplicating a single request (end-to-end over HTTP).
+
+use std::collections::HashSet;
+use std::sync::Arc;
+use std::time::Duration;
+
+use bfio_serve::autoscale::{run_autoscaled, AutoscaleConfig};
+use bfio_serve::config::PowerConfig;
+use bfio_serve::fleet::{
+    run_fleet, FleetBackend, FleetBackendConfig, FleetConfig, FleetEvent,
+};
+use bfio_serve::gateway::http as ghttp;
+use bfio_serve::gateway::{Gateway, GatewayConfig};
+use bfio_serve::util::json::Json;
+use bfio_serve::util::prop::Prop;
+use bfio_serve::util::rng::Rng;
+use bfio_serve::workload::{
+    generate_trace, ArrivalProcess, GeometricSampler, HomogeneousSampler,
+    Request,
+};
+
+fn geometric_trace(seed: u64, per_step: usize, backlog: usize, steps: u64) -> Vec<Request> {
+    let mut sampler = GeometricSampler::new(5, 80, 0.25);
+    sampler.o_cap = 12;
+    let arrivals = ArrivalProcess::Fixed { per_step, initial_backlog: backlog };
+    let mut rng = Rng::new(seed);
+    generate_trace(&sampler, &arrivals, steps, &mut rng)
+}
+
+// ---------------------------------------------------------------------
+// (a) Theorem 4 sandwich per replica and fleet-wide, under churn
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_theorem4_sandwich_holds_per_replica_under_churn() {
+    let power = PowerConfig::a100();
+    let d_gamma = power.d_gamma();
+    Prop::new(20).check(
+        "theorem4-sandwich",
+        |r| {
+            let replicas = 2 + r.below_usize(3);
+            let g = 1 + r.below_usize(3);
+            let b = 1 + r.below_usize(3);
+            let seed = r.next_u64();
+            let churn = r.below(2) == 0;
+            (replicas, g, b, seed, churn)
+        },
+        |&(replicas, g, b, seed, churn)| {
+            let trace = geometric_trace(seed, 2, 10, 25);
+            let cfg = FleetConfig {
+                seed,
+                ..FleetConfig::uniform(replicas, g, b, "jsq")
+            };
+            let events = if churn {
+                vec![
+                    FleetEvent::Drain { round: 8, replica: 0 },
+                    FleetEvent::Add { round: 12, speed: 1.5 },
+                    FleetEvent::Remove { round: 16, replica: 1 },
+                ]
+            } else {
+                Vec::new()
+            };
+            let res = run_fleet(&cfg, "low", &trace, &events)
+                .map_err(|e| e.to_string())?;
+            let mut fleet_corr = 0.0;
+            let mut fleet_bound = 0.0;
+            for rep in &res.per_replica {
+                let r = &rep.report;
+                let kappa = cfg.t_token / rep.speed;
+                let bound = kappa * d_gamma * r.imb_tot;
+                if r.energy_correction_j < -1e-12 {
+                    return Err(format!(
+                        "replica {}: negative correction {}",
+                        rep.id, r.energy_correction_j
+                    ));
+                }
+                if r.energy_correction_j > bound + 1e-9 * bound.max(1.0) {
+                    return Err(format!(
+                        "replica {}: correction {} above k*D*ImbTot {}",
+                        rep.id, r.energy_correction_j, bound
+                    ));
+                }
+                // exactness: useful + idle + correction == sync energy
+                let total = r.energy_useful_j
+                    + r.energy_idle_j
+                    + r.energy_correction_j;
+                if (total - r.sync_energy_j).abs()
+                    > 1e-9 * r.sync_energy_j.max(1.0)
+                {
+                    return Err(format!(
+                        "replica {}: decomposition {} != sync {}",
+                        rep.id, total, r.sync_energy_j
+                    ));
+                }
+                fleet_corr += r.energy_correction_j;
+                fleet_bound += bound;
+            }
+            if fleet_corr < -1e-12
+                || fleet_corr > fleet_bound + 1e-9 * fleet_bound.max(1.0)
+            {
+                return Err(format!(
+                    "fleet-wide sandwich violated: {fleet_corr} vs {fleet_bound}"
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+// ---------------------------------------------------------------------
+// (b) hysteresis: no flapping on constant-rate load
+// ---------------------------------------------------------------------
+
+/// Deterministic constant load (fixed arrivals, fixed decode length):
+/// after the admission ramp the active set is exactly constant, so a
+/// correctly damped controller must settle and never act again.  The
+/// initial backlog keeps even the ramp inside the hold band.
+#[test]
+fn controller_never_flaps_on_constant_load() {
+    // 2/round at o=8 over 3x(2x4)=24 slots: the in-system count stays
+    // in [14, 20] after the ramp — strictly inside the down gate
+    // (<= 11.2 for `energy`, <= 8.4 for `target`) and the up gate
+    // (>= 22.08) — so a damped controller must hold throughout.
+    let sampler = HomogeneousSampler { s_min: 10, s_max: 20, o: 8 };
+    let arrivals = ArrivalProcess::Fixed { per_step: 2, initial_backlog: 12 };
+    let mut rng = Rng::new(11);
+    let trace = generate_trace(&sampler, &arrivals, 400, &mut rng);
+    for policy in ["target", "energy"] {
+        let cfg = FleetConfig {
+            seed: 3,
+            ..FleetConfig::uniform(3, 2, 4, "jsq")
+        };
+        let auto = AutoscaleConfig {
+            policy: policy.to_string(),
+            min_replicas: 1,
+            max_replicas: 3,
+            cooldown_rounds: 10,
+            dwell_rounds: 3,
+            add_speed: 1.0,
+        };
+        let res = run_autoscaled(&cfg, "low", &auto, &trace, &[]).unwrap();
+        assert_eq!(
+            res.fleet.completed as usize,
+            trace.len(),
+            "{policy}: completes"
+        );
+        assert!(
+            res.actions.is_empty(),
+            "{policy}: controller flapped on constant load: {:?}",
+            res.actions
+        );
+        assert!(res.controller.ticks > 100, "{policy}: controller ran");
+    }
+}
+
+// ---------------------------------------------------------------------
+// (c) static policy ≡ open-loop run_fleet, to 1e-9
+// ---------------------------------------------------------------------
+
+#[test]
+fn static_policy_reproduces_open_loop_run_fleet() {
+    let trace = geometric_trace(21, 3, 20, 30);
+    for router in ["wrr", "low", "powd:2", "bfio2"] {
+        let cfg = FleetConfig {
+            seed: 9,
+            record_completions: true,
+            ..FleetConfig::uniform(3, 2, 3, "least")
+        };
+        let open = run_fleet(&cfg, router, &trace, &[]).unwrap();
+        let auto = AutoscaleConfig {
+            policy: "static".to_string(),
+            ..AutoscaleConfig::default()
+        };
+        let closed = run_autoscaled(&cfg, router, &auto, &trace, &[]).unwrap();
+        assert!(closed.actions.is_empty());
+        let c = &closed.fleet;
+        assert_eq!(open.completed, c.completed, "{router}");
+        assert_eq!(open.rounds, c.rounds, "{router}");
+        assert_eq!(open.steps, c.steps, "{router}");
+        let close = |a: f64, b: f64, what: &str| {
+            let scale = 1.0_f64.max(a.abs()).max(b.abs());
+            assert!(
+                (a - b).abs() <= 1e-9 * scale,
+                "{router}: {what}: open {a:.17e} vs closed {b:.17e}"
+            );
+        };
+        close(open.makespan_s, c.makespan_s, "makespan");
+        close(open.energy_j, c.energy_j, "energy");
+        close(open.avg_imbalance, c.avg_imbalance, "imbalance");
+        close(open.tpot_s, c.tpot_s, "tpot");
+        let ra: Vec<u64> = open.per_replica.iter().map(|r| r.routed).collect();
+        let rb: Vec<u64> = c.per_replica.iter().map(|r| r.routed).collect();
+        assert_eq!(ra, rb, "{router}: per-replica routing identical");
+    }
+}
+
+// ---------------------------------------------------------------------
+// admin API end-to-end: drain + re-add on a live FleetBackend
+// ---------------------------------------------------------------------
+
+#[test]
+fn admin_drain_and_readd_live_without_losing_requests() {
+    let backend = FleetBackend::new(FleetBackendConfig {
+        replicas: 2,
+        g: 2,
+        b: 2,
+        policy: "jsq".to_string(),
+        router: "low".to_string(),
+        step_delay: Duration::from_millis(1),
+        batch_window: Duration::from_millis(5),
+        ..FleetBackendConfig::default()
+    })
+    .unwrap();
+    let gw = Gateway::spawn(
+        GatewayConfig { addr: "127.0.0.1:0".to_string(), threads: 16 },
+        Arc::new(backend),
+    )
+    .unwrap();
+    let a = gw.addr.to_string();
+
+    // Concurrent completions racing the lifecycle commands below.
+    let n = 24usize;
+    let handles: Vec<_> = (0..n)
+        .map(|i| {
+            let a = a.clone();
+            std::thread::spawn(move || {
+                let body = format!(
+                    r#"{{"prompt": [3, 4, {i}], "max_tokens": 6}}"#
+                );
+                let r = ghttp::http_call(&a, "POST", "/v1/completions", Some(&body))
+                    .unwrap();
+                assert_eq!(r.status, 200, "body: {}", r.body_str().unwrap_or(""));
+                let v = Json::parse(r.body_str().unwrap()).unwrap();
+                v.get("bfio")
+                    .unwrap()
+                    .get("request_id")
+                    .unwrap()
+                    .as_u64()
+                    .unwrap()
+            })
+        })
+        .collect();
+
+    // Drain replica 0 mid-flight, then warm re-add it.
+    let r = ghttp::http_call(
+        &a,
+        "POST",
+        "/v0/admin/replicas",
+        Some(r#"{"action": "drain", "replica": 0}"#),
+    )
+    .unwrap();
+    assert_eq!(r.status, 200, "drain: {}", r.body_str().unwrap_or(""));
+    let v = Json::parse(r.body_str().unwrap()).unwrap();
+    assert_eq!(v.get("ok").unwrap().as_bool().unwrap(), true);
+
+    std::thread::sleep(Duration::from_millis(30));
+    let r = ghttp::http_call(
+        &a,
+        "POST",
+        "/v0/admin/replicas",
+        Some(r#"{"action": "reactivate", "replica": 0}"#),
+    )
+    .unwrap();
+    assert_eq!(r.status, 200, "reactivate: {}", r.body_str().unwrap_or(""));
+
+    // Every request completes exactly once.
+    let mut ids: Vec<u64> =
+        handles.into_iter().map(|h| h.join().unwrap()).collect();
+    ids.sort_unstable();
+    let uniq: HashSet<u64> = ids.iter().copied().collect();
+    assert_eq!(uniq.len(), n, "no duplicated responses");
+    assert_eq!(ids, (0..n as u64).collect::<Vec<u64>>(), "no lost requests");
+
+    // Admin GET reflects the final lifecycle state.
+    let r = ghttp::http_call(&a, "GET", "/v0/admin/replicas", None).unwrap();
+    assert_eq!(r.status, 200);
+    let v = Json::parse(r.body_str().unwrap()).unwrap();
+    let reps = v.get("replicas").unwrap().as_arr().unwrap();
+    assert_eq!(reps.len(), 2);
+    assert!(reps
+        .iter()
+        .all(|r| r.get("state").unwrap().as_str().unwrap() == "accepting"));
+    assert!(v.get("autoscaler").unwrap() == &Json::Null);
+    let done: u64 = reps
+        .iter()
+        .map(|r| r.get("completed").unwrap().as_u64().unwrap())
+        .sum();
+    assert_eq!(done, n as u64, "completions accounted once across replicas");
+
+    // A cold add appears in the admin view and serves traffic.
+    let r = ghttp::http_call(
+        &a,
+        "POST",
+        "/v0/admin/replicas",
+        Some(r#"{"action": "add", "speed": 2.0}"#),
+    )
+    .unwrap();
+    assert_eq!(r.status, 200);
+    let v = Json::parse(r.body_str().unwrap()).unwrap();
+    assert_eq!(v.get("replica").unwrap().as_usize().unwrap(), 2);
+    let r = ghttp::http_call(&a, "GET", "/v0/admin/replicas", None).unwrap();
+    let v = Json::parse(r.body_str().unwrap()).unwrap();
+    assert_eq!(v.get("replicas").unwrap().as_arr().unwrap().len(), 3);
+
+    // Unknown action and unknown replica are 400s, not 500s.
+    let r = ghttp::http_call(
+        &a,
+        "POST",
+        "/v0/admin/replicas",
+        Some(r#"{"action": "explode"}"#),
+    )
+    .unwrap();
+    assert_eq!(r.status, 400);
+    let r = ghttp::http_call(
+        &a,
+        "POST",
+        "/v0/admin/replicas",
+        Some(r#"{"action": "drain", "replica": 99}"#),
+    )
+    .unwrap();
+    assert_eq!(r.status, 400);
+    gw.shutdown();
+}
+
+// ---------------------------------------------------------------------
+// autoscaled gateway: controller state over HTTP + metrics families
+// ---------------------------------------------------------------------
+
+#[test]
+fn autoscaled_gateway_exposes_controller_state_and_metrics() {
+    let backend = FleetBackend::new(FleetBackendConfig {
+        replicas: 2,
+        g: 2,
+        b: 2,
+        policy: "jsq".to_string(),
+        router: "low".to_string(),
+        step_delay: Duration::ZERO,
+        batch_window: Duration::ZERO,
+        autoscale: Some(AutoscaleConfig {
+            policy: "energy".to_string(),
+            min_replicas: 1,
+            max_replicas: 2,
+            cooldown_rounds: 4,
+            dwell_rounds: 2,
+            add_speed: 1.0,
+        }),
+        ..FleetBackendConfig::default()
+    })
+    .unwrap();
+    let gw = Gateway::spawn(
+        GatewayConfig { addr: "127.0.0.1:0".to_string(), threads: 8 },
+        Arc::new(backend),
+    )
+    .unwrap();
+    let a = gw.addr.to_string();
+
+    for i in 0..8 {
+        let body = format!(r#"{{"prompt": [1, {i}], "max_tokens": 3}}"#);
+        let r = ghttp::http_call(&a, "POST", "/v1/completions", Some(&body))
+            .unwrap();
+        assert_eq!(r.status, 200);
+    }
+
+    let r = ghttp::http_call(&a, "GET", "/v0/admin/replicas", None).unwrap();
+    let v = Json::parse(r.body_str().unwrap()).unwrap();
+    let auto = v.get("autoscaler").unwrap();
+    assert!(auto.get("policy").unwrap().as_str().unwrap().starts_with("energy"));
+    assert_eq!(auto.get("paused").unwrap().as_bool().unwrap(), false);
+    assert!(auto.get("ticks").unwrap().as_u64().unwrap() > 0);
+
+    let r = ghttp::http_call(&a, "GET", "/metrics", None).unwrap();
+    let text = r.body_str().unwrap();
+    assert!(text.contains("# TYPE bfio_autoscale_replicas gauge"));
+    assert!(text.contains("bfio_autoscale_replicas{state=\"accepting\"}"));
+    assert!(text.contains("bfio_autoscale_actions_total{action=\"drain\"}"));
+    assert!(text.contains("bfio_autoscale_ticks_total"));
+    assert!(text.contains("bfio_energy_useful_joules"));
+    assert!(text.contains("bfio_energy_idle_joules"));
+    assert!(text.contains("bfio_replica_energy_useful_joules{replica=\"0\"}"));
+
+    // Pause over HTTP, visible in both views.
+    let r = ghttp::http_call(
+        &a,
+        "POST",
+        "/v0/admin/replicas",
+        Some(r#"{"action": "pause"}"#),
+    )
+    .unwrap();
+    assert_eq!(r.status, 200);
+    let r = ghttp::http_call(&a, "GET", "/v0/admin/replicas", None).unwrap();
+    let v = Json::parse(r.body_str().unwrap()).unwrap();
+    assert_eq!(
+        v.get("autoscaler")
+            .unwrap()
+            .get("paused")
+            .unwrap()
+            .as_bool()
+            .unwrap(),
+        true
+    );
+    let r = ghttp::http_call(&a, "GET", "/metrics", None).unwrap();
+    assert!(r.body_str().unwrap().contains("bfio_autoscale_paused 1"));
+    gw.shutdown();
+}

@@ -233,6 +233,47 @@ fn churn_drain_add_remove_loses_nothing() {
 }
 
 #[test]
+fn heterogeneous_shapes_serve_the_trace_under_every_router() {
+    // Asymmetric replicas (1x2, 3x2, 2x4) under each tier-1 router:
+    // everything completes exactly once and the per-replica snapshots
+    // report the configured shapes.
+    let trace = trace_of(51, 3, 15, 25);
+    for router in ["wrr", "low", "powd:2", "bfio2"] {
+        let cfg = recording(FleetConfig {
+            seed: 13,
+            shapes: Some(vec![(1, 2), (3, 2), (2, 4)]),
+            ..FleetConfig::uniform(3, 2, 2, "jsq")
+        });
+        let res = run_fleet(&cfg, router, &trace, &[]).unwrap();
+        assert_eq!(
+            res.completed as usize,
+            trace.len(),
+            "router {router} on asymmetric shapes"
+        );
+        assert_eq!(res.leftover_waiting, 0);
+        let mut seen = HashMap::new();
+        for rep in &res.per_replica {
+            for c in &rep.report.completions {
+                assert!(seen.insert(c.id, rep.id).is_none(), "id {} twice", c.id);
+            }
+        }
+        assert_eq!(seen.len(), trace.len());
+        // worker indices stay inside each replica's own G
+        let gs = [1usize, 3, 2];
+        for rep in &res.per_replica {
+            for c in &rep.report.completions {
+                assert!(
+                    c.worker < gs[rep.id],
+                    "router {router}: worker {} out of range for replica {}",
+                    c.worker,
+                    rep.id
+                );
+            }
+        }
+    }
+}
+
+#[test]
 fn heterogeneous_speeds_shift_work_to_fast_replicas() {
     let trace = trace_of(41, 4, 40, 30);
     let cfg = FleetConfig {

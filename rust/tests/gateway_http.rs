@@ -169,6 +169,32 @@ fn concurrent_completions_route_across_workers() {
 }
 
 #[test]
+fn admin_replicas_unsupported_on_sim_backend() {
+    // The admin surface exists on every gateway, but a single-group
+    // backend has no replica lifecycle: GET shows no autoscaler and
+    // POST answers 501, not 500.
+    let (gw, a) = boot("fcfs", 0, 0);
+    let r = ghttp::http_call(&a, "GET", "/v0/admin/replicas", None).unwrap();
+    assert_eq!(r.status, 200);
+    let v = Json::parse(r.body_str().unwrap()).unwrap();
+    assert_eq!(v.get("autoscaler"), Some(&Json::Null));
+    assert!(v.get("replicas").unwrap().as_arr().unwrap().is_empty());
+
+    let r = ghttp::http_call(
+        &a,
+        "POST",
+        "/v0/admin/replicas",
+        Some(r#"{"action": "drain", "replica": 0}"#),
+    )
+    .unwrap();
+    assert_eq!(r.status, 501, "body: {}", r.body_str().unwrap_or(""));
+    // malformed admin bodies are still client errors
+    let r = ghttp::http_call(&a, "POST", "/v0/admin/replicas", Some("[]")).unwrap();
+    assert_eq!(r.status, 400);
+    gw.shutdown();
+}
+
+#[test]
 fn metrics_exposition_tracks_requests() {
     let (gw, a) = boot("bfio:8", 0, 0);
     for i in 0..3 {
