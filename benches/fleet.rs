@@ -26,13 +26,14 @@ fn main() {
     let g = 16usize;
     let b = 8usize;
     let steps: u64 = if smoke { 60 } else { 200 };
-    let routers: Vec<String> = ["wrr", "low", "powd:2", "bfio2"]
+    let routers: Vec<String> = ["wrr", "low", "powd:2", "bfio2", "bfio2h"]
         .iter()
         .map(|r| r.to_string())
         .collect();
 
     println!(
-        "fleet sweep (G={g}, B={b}, {steps} steps): R replicas vs monolithic R·G workers"
+        "fleet sweep (G={g}, B={b}, {steps} steps): R replicas vs monolithic R·G workers,\n\
+         each router timed serial (--threads 1) vs parallel (all cores)"
     );
     let t_all = Instant::now();
     let mut sweep = Vec::new();
@@ -41,13 +42,19 @@ fn main() {
         let (rows, mono) =
             run_fleet_rows(&scale, &routers, &[]).expect("fleet run");
         println!(
-            "R={r}: monolith imb {:.3e}; per router (imb, clk, tok/s):",
+            "R={r}: monolith imb {:.3e}; per router (imb, clk, tok/s, ser ms, par ms, speedup):",
             mono.avg_imbalance
         );
         for row in &rows {
             println!(
-                "  {:<16} {:>12.3e} {:>6.3} {:>10.1}",
-                row.router, row.avg_imbalance, row.clock_ratio, row.throughput_tps
+                "  {:<16} {:>12.3e} {:>6.3} {:>10.1} {:>8.1} {:>8.1} {:>6.2}x",
+                row.router,
+                row.avg_imbalance,
+                row.clock_ratio,
+                row.throughput_tps,
+                row.serial_run_ms,
+                row.parallel_run_ms,
+                row.speedup
             );
         }
         sweep.push(rows_to_json(&scale, &rows, &mono));

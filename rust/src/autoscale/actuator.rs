@@ -295,7 +295,7 @@ mod tests {
         }
         let mut out = Vec::new();
         c.run_round(
-            &mut |_r: usize, t: u64| (t / 1000, t % 1000, ()),
+            &|_r: usize, t: u64| (t / 1000, t % 1000, ()),
             &mut out,
         );
         c.drain_replica(1, true);

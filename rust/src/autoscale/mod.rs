@@ -119,6 +119,10 @@ pub struct Controller {
     t_token: f64,
     c_overhead: f64,
     paused: bool,
+    /// Reused per-tick observation buffer: `sample_core` refills it in
+    /// place off the core's borrowed replica views, so a steady-state
+    /// tick allocates nothing and never calls `FleetCore::snapshot`.
+    sig: FleetSignal,
     /// Recent actions, newest last (bounded; counters below are the
     /// full-lifetime totals).
     history: Vec<AppliedAction>,
@@ -161,6 +165,7 @@ impl Controller {
             t_token: fleet.t_token,
             c_overhead: fleet.c_overhead,
             paused: false,
+            sig: FleetSignal::default(),
             history: Vec::new(),
             adds: 0,
             drains: 0,
@@ -195,18 +200,22 @@ impl Controller {
     }
 
     /// One control-loop iteration: sample → decide → (maybe) act.
+    ///
+    /// The sample reads the core's borrowed [`crate::fleet::ReplicaRef`]
+    /// views into the controller's reusable signal buffer — zero
+    /// allocation and zero [`FleetCore::snapshot`] calls per tick
+    /// (guarded by [`FleetCore::snapshots_taken`] in the tests).
     pub fn tick<T, P>(&mut self, core: &mut FleetCore<T, P>) -> Option<AppliedAction> {
         self.ticks += 1;
         self.last_round = core.round();
-        let snaps = core.snapshot();
-        let sig = signal::sample(
-            core.round(),
-            core.overflow_len(),
-            &snaps,
+        signal::sample_core(
+            &mut self.sig,
+            core,
             self.t_token,
             self.c_overhead,
             &self.power,
         );
+        let sig = &self.sig;
         self.accepting = sig.accepting;
         self.live = sig.live;
         self.utilization = sig.utilization;
@@ -214,9 +223,9 @@ impl Controller {
             self.last_decision = "paused".to_string();
             return None;
         }
-        let decision = self.policy.decide(&sig);
+        let decision = self.policy.decide(sig);
         self.last_decision = decision.label().to_string();
-        let acted = self.actuator.act(decision, &sig, core, sig.round);
+        let acted = self.actuator.act(decision, sig, core, sig.round);
         if let Some(a) = acted {
             match a {
                 AppliedAction::Added { .. } => self.adds += 1,

@@ -1,6 +1,8 @@
 //! Signal sampling: the per-round observation the scale policies decide
-//! on, derived from [`ReplicaSnapshot`]s plus the fleet's Eq. 19 / power
-//! constants.
+//! on, derived from the core's borrowed [`ReplicaRef`] views (the
+//! zero-alloc hot path, [`sample_core`] / [`sample_into`]) — or from
+//! owned [`ReplicaSnapshot`]s on the cold path ([`sample`]) — plus the
+//! fleet's Eq. 19 / power constants.
 //!
 //! Per replica the sampler derives:
 //!
@@ -20,7 +22,7 @@
 
 use crate::config::PowerConfig;
 use crate::energy::decompose;
-use crate::fleet::{ReplicaSnapshot, ReplicaState};
+use crate::fleet::{FleetCore, ReplicaRef, ReplicaSnapshot, ReplicaState};
 
 /// One replica's controller-facing observation.
 #[derive(Clone, Debug)]
@@ -63,7 +65,7 @@ pub struct ReplicaSignal {
 }
 
 /// The fleet-wide observation for one controller tick.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, Default)]
 pub struct FleetSignal {
     pub round: u64,
     /// Requests parked because no replica was accepting.
@@ -86,10 +88,142 @@ pub struct FleetSignal {
     pub replicas: Vec<ReplicaSignal>,
 }
 
-/// Sample one controller tick from the core's replica snapshots.
-/// `t_token`/`c_overhead` are the *unscaled* fleet constants; per-replica
-/// speed scaling (κ_r = t_ℓ / f_r) is applied here, matching each
-/// replica's recorder.
+/// Derive one replica's controller-facing signal from a borrowed view.
+/// `t_token`/`c_overhead` are the *unscaled* fleet constants;
+/// per-replica speed scaling (κ_r = t_ℓ / f_r) is applied here,
+/// matching each replica's recorder.
+fn replica_signal(
+    r: &ReplicaRef<'_>,
+    t_token: f64,
+    c_overhead: f64,
+    power: &PowerConfig,
+) -> ReplicaSignal {
+    let is_accepting = r.state == ReplicaState::Accepting;
+    let slots = r.g * r.b;
+    let active = r.active;
+    let speed = r.speed.max(1e-12);
+    let l_max = r.loads.iter().cloned().fold(0.0, f64::max);
+    let load_sum: f64 = r.loads.iter().sum();
+    let kappa = t_token / speed;
+    // One step's energy at the current loads, split per Theorem 4.
+    // A replica with nothing active does not step: its rates are 0.
+    let (energy_rate, useful_rate) = if active > 0 {
+        let d = decompose(r.loads, kappa, power);
+        let overhead = c_overhead / speed * r.g as f64 * power.p_idle;
+        (d.useful + d.idle + d.correction + overhead, d.useful)
+    } else {
+        (0.0, 0.0)
+    };
+    let marginal = if active > 0 {
+        energy_rate / active as f64
+    } else {
+        f64::INFINITY
+    };
+    let waste = if energy_rate > 0.0 {
+        1.0 - useful_rate / energy_rate
+    } else {
+        0.0
+    };
+    let power_w: f64 = r
+        .loads
+        .iter()
+        .map(|&l| power.power_at_util(if l_max > 0.0 { l / l_max } else { 0.0 }))
+        .sum();
+    ReplicaSignal {
+        id: r.id,
+        accepting: is_accepting,
+        draining: !is_accepting,
+        remove_pending: r.state == (ReplicaState::Draining { remove: true }),
+        speed: r.speed,
+        workers: r.g,
+        slots,
+        active,
+        free_slots: slots - active,
+        queue_depth: r.queue_depth,
+        queued_prefill: r.queued_prefill,
+        outstanding: (load_sum + r.queued_prefill) / speed,
+        step_time_s: (c_overhead + t_token * l_max) / speed,
+        completion_horizon: r.completion_horizon,
+        power_w,
+        energy_rate_j: energy_rate,
+        useful_rate_j: useful_rate,
+        marginal_j_per_token: marginal,
+        waste_fraction: waste,
+    }
+}
+
+/// Fill `sig` in place from borrowed per-replica views — the zero-alloc
+/// hot path: `sig.replicas` is cleared and refilled (its capacity is
+/// reused tick over tick), and nothing per-worker is copied.
+pub fn sample_into<'a>(
+    sig: &mut FleetSignal,
+    round: u64,
+    overflow: usize,
+    replicas: impl Iterator<Item = ReplicaRef<'a>>,
+    t_token: f64,
+    c_overhead: f64,
+    power: &PowerConfig,
+) {
+    sig.replicas.clear();
+    let mut accepting = 0usize;
+    let mut accepting_slots = 0usize;
+    let mut total_active = 0usize;
+    let mut total_queued = 0usize;
+    let mut max_horizon = 0u64;
+    for r in replicas {
+        if r.state == ReplicaState::Removed {
+            continue;
+        }
+        let rs = replica_signal(&r, t_token, c_overhead, power);
+        if rs.accepting {
+            accepting += 1;
+            accepting_slots += rs.slots;
+        }
+        total_active += rs.active;
+        total_queued += rs.queue_depth;
+        max_horizon = max_horizon.max(rs.completion_horizon);
+        sig.replicas.push(rs);
+    }
+    let demand = total_active + total_queued + overflow;
+    sig.round = round;
+    sig.overflow = overflow;
+    sig.accepting = accepting;
+    sig.live = sig.replicas.len();
+    sig.accepting_slots = accepting_slots;
+    sig.total_active = total_active;
+    sig.total_queued = total_queued;
+    sig.utilization = if accepting_slots > 0 {
+        demand as f64 / accepting_slots as f64
+    } else if demand > 0 {
+        f64::INFINITY
+    } else {
+        0.0
+    };
+    sig.max_completion_horizon = max_horizon;
+}
+
+/// Sample one controller tick straight off the live core — no
+/// [`FleetCore::snapshot`] call, no per-replica allocation.
+pub fn sample_core<T, P>(
+    sig: &mut FleetSignal,
+    core: &FleetCore<T, P>,
+    t_token: f64,
+    c_overhead: f64,
+    power: &PowerConfig,
+) {
+    sample_into(
+        sig,
+        core.round(),
+        core.overflow_len(),
+        core.replica_refs(),
+        t_token,
+        c_overhead,
+        power,
+    );
+}
+
+/// Sample one controller tick from owned replica snapshots — the
+/// cold-path convenience used by tests and offline tooling.
 pub fn sample(
     round: u64,
     overflow: usize,
@@ -98,97 +232,17 @@ pub fn sample(
     c_overhead: f64,
     power: &PowerConfig,
 ) -> FleetSignal {
-    let mut replicas = Vec::with_capacity(snaps.len());
-    let mut accepting = 0usize;
-    let mut accepting_slots = 0usize;
-    let mut total_active = 0usize;
-    let mut total_queued = 0usize;
-    let mut max_horizon = 0u64;
-    for s in snaps {
-        if s.state == ReplicaState::Removed {
-            continue;
-        }
-        let is_accepting = s.state == ReplicaState::Accepting;
-        let slots = s.g * s.b;
-        let active: usize = s.active_per_worker.iter().sum();
-        let speed = s.speed.max(1e-12);
-        let l_max = s.loads.iter().cloned().fold(0.0, f64::max);
-        let load_sum: f64 = s.loads.iter().sum();
-        let kappa = t_token / speed;
-        // One step's energy at the current loads, split per Theorem 4.
-        // A replica with nothing active does not step: its rates are 0.
-        let (energy_rate, useful_rate) = if active > 0 {
-            let d = decompose(&s.loads, kappa, power);
-            let overhead = c_overhead / speed * s.g as f64 * power.p_idle;
-            (d.useful + d.idle + d.correction + overhead, d.useful)
-        } else {
-            (0.0, 0.0)
-        };
-        let marginal = if active > 0 {
-            energy_rate / active as f64
-        } else {
-            f64::INFINITY
-        };
-        let waste = if energy_rate > 0.0 {
-            1.0 - useful_rate / energy_rate
-        } else {
-            0.0
-        };
-        let power_w: f64 = s
-            .loads
-            .iter()
-            .map(|&l| {
-                power.power_at_util(if l_max > 0.0 { l / l_max } else { 0.0 })
-            })
-            .sum();
-        if is_accepting {
-            accepting += 1;
-            accepting_slots += slots;
-        }
-        total_active += active;
-        total_queued += s.queue_depth;
-        max_horizon = max_horizon.max(s.completion_horizon);
-        replicas.push(ReplicaSignal {
-            id: s.id,
-            accepting: is_accepting,
-            draining: !is_accepting,
-            remove_pending: s.state == (ReplicaState::Draining { remove: true }),
-            speed: s.speed,
-            workers: s.g,
-            slots,
-            active,
-            free_slots: slots - active,
-            queue_depth: s.queue_depth,
-            queued_prefill: s.queued_prefill,
-            outstanding: (load_sum + s.queued_prefill) / speed,
-            step_time_s: (c_overhead + t_token * l_max) / speed,
-            completion_horizon: s.completion_horizon,
-            power_w,
-            energy_rate_j: energy_rate,
-            useful_rate_j: useful_rate,
-            marginal_j_per_token: marginal,
-            waste_fraction: waste,
-        });
-    }
-    let demand = total_active + total_queued + overflow;
-    FleetSignal {
+    let mut sig = FleetSignal::default();
+    sample_into(
+        &mut sig,
         round,
         overflow,
-        accepting,
-        live: replicas.len(),
-        accepting_slots,
-        total_active,
-        total_queued,
-        utilization: if accepting_slots > 0 {
-            demand as f64 / accepting_slots as f64
-        } else if demand > 0 {
-            f64::INFINITY
-        } else {
-            0.0
-        },
-        max_completion_horizon: max_horizon,
-        replicas,
-    }
+        snaps.iter().map(ReplicaSnapshot::view),
+        t_token,
+        c_overhead,
+        power,
+    );
+    sig
 }
 
 #[cfg(test)]

@@ -53,6 +53,9 @@ pub struct AutoscaleScale {
     pub min_replicas: usize,
     pub cooldown_rounds: u64,
     pub dwell_rounds: u64,
+    /// Round-execution parallelism (`0` = all cores, `1` = serial);
+    /// results are identical either way (`bfio autoscale --threads N`).
+    pub threads: usize,
 }
 
 impl AutoscaleScale {
@@ -73,6 +76,7 @@ impl AutoscaleScale {
             min_replicas: 1,
             cooldown_rounds: 10,
             dwell_rounds: 3,
+            threads: 0,
         }
     }
 
@@ -93,6 +97,7 @@ impl AutoscaleScale {
     pub fn fleet_config(&self) -> FleetConfig {
         FleetConfig {
             seed: self.seed,
+            threads: self.threads,
             ..FleetConfig::uniform(self.replicas, self.g, self.b, &self.policy)
         }
     }

@@ -42,6 +42,10 @@ pub struct FleetScale {
     /// Per-replica heterogeneous `(G, B)` shapes (`--shapes 8x16,4x32`);
     /// `None` = uniform `g`×`b`.
     pub shapes: Option<Vec<(usize, usize)>>,
+    /// Round-execution parallelism for the *parallel* timing of each
+    /// row (`0` = all cores); the serial timing always runs `threads =
+    /// 1`.  Results are identical either way.
+    pub threads: usize,
 }
 
 impl FleetScale {
@@ -55,6 +59,7 @@ impl FleetScale {
             policy: "bfio:8".to_string(),
             speeds: vec![1.0; replicas],
             shapes: None,
+            threads: 0,
         }
     }
 
@@ -73,6 +78,7 @@ impl FleetScale {
             policy: self.policy.clone(),
             speeds: self.speeds.clone(),
             shapes: self.shapes.clone(),
+            threads: self.threads,
             seed: self.seed,
             max_rounds: self.steps,
             warmup_rounds: self.steps / 5,
@@ -111,8 +117,16 @@ pub struct FleetBenchRow {
     /// and monolith rows measure the same thing (`Report::wall_time_s`
     /// excludes warmup on both sides).
     pub makespan_s: f64,
-    /// Wall-clock milliseconds this row took to simulate.
+    /// Wall-clock milliseconds this row took to simulate (the parallel
+    /// run — the path production drivers use).
     pub run_ms: f64,
+    /// The same row timed with `threads = 1` (the pre-parallel path).
+    pub serial_run_ms: f64,
+    /// The same row timed with `FleetScale::threads` (0 = all cores).
+    pub parallel_run_ms: f64,
+    /// `serial_run_ms / parallel_run_ms` — the per-row harness speedup
+    /// (< 1.0 means serial wins at this scale; see the README).
+    pub speedup: f64,
 }
 
 fn row_json(r: &FleetBenchRow, mono: &FleetBenchRow) -> Json {
@@ -127,6 +141,9 @@ fn row_json(r: &FleetBenchRow, mono: &FleetBenchRow) -> Json {
         ("completed", num(r.completed as f64)),
         ("makespan_s", num(r.makespan_s)),
         ("run_ms", num(r.run_ms)),
+        ("serial_run_ms", num(r.serial_run_ms)),
+        ("parallel_run_ms", num(r.parallel_run_ms)),
+        ("speedup", num(r.speedup)),
         ("imb_vs_monolithic", num(ratio(r.avg_imbalance, mono.avg_imbalance))),
         ("energy_vs_monolithic", num(ratio(r.energy_mj, mono.energy_mj))),
         ("tpot_vs_monolithic", num(ratio(r.tpot_s, mono.tpot_s))),
@@ -135,7 +152,12 @@ fn row_json(r: &FleetBenchRow, mono: &FleetBenchRow) -> Json {
 }
 
 /// Run every fleet router plus the monolithic R·G baseline over the
-/// shared trace.  Returns `(fleet_rows, monolithic_row)`.
+/// shared trace.  Each router row is simulated twice — `threads = 1`
+/// and `threads = scale.threads` (0 = all cores) — so the JSON carries
+/// the measured serial/parallel split and their speedup per row, and
+/// the two runs double as a coarse parity guard (the full ≤1e-9 suite
+/// lives in `rust/tests/fleet.rs`).  Returns
+/// `(fleet_rows, monolithic_row)`.
 pub fn run_fleet_rows(
     scale: &FleetScale,
     routers: &[String],
@@ -143,10 +165,28 @@ pub fn run_fleet_rows(
 ) -> Result<(Vec<FleetBenchRow>, FleetBenchRow)> {
     let trace = scale.trace();
     let cfg = scale.fleet_config();
+    let serial_cfg = FleetConfig { threads: 1, ..cfg.clone() };
     let mut rows = Vec::with_capacity(routers.len());
     for router in routers {
+        // One discarded warmup run per row: at smoke scale rows are
+        // single-digit ms, and whichever timed run goes first would
+        // otherwise pay allocator/page-fault warmup for both — biasing
+        // the speedup the field exists to measure.
+        let _ = run_fleet(&serial_cfg, router, &trace, events)?;
+        let t0 = std::time::Instant::now();
+        let serial = run_fleet(&serial_cfg, router, &trace, events)?;
+        let serial_run_ms = t0.elapsed().as_secs_f64() * 1e3;
         let t0 = std::time::Instant::now();
         let res = run_fleet(&cfg, router, &trace, events)?;
+        let parallel_run_ms = t0.elapsed().as_secs_f64() * 1e3;
+        anyhow::ensure!(
+            serial.completed == res.completed
+                && serial.rounds == res.rounds
+                && serial.steps == res.steps
+                && (serial.makespan_s - res.makespan_s).abs()
+                    <= 1e-9 * serial.makespan_s.max(1.0),
+            "parallel round execution diverged from serial under {router}"
+        );
         let window_s = res
             .per_replica
             .iter()
@@ -161,7 +201,14 @@ pub fn run_fleet_rows(
             energy_mj: res.energy_j / 1e6,
             completed: res.completed,
             makespan_s: window_s,
-            run_ms: t0.elapsed().as_secs_f64() * 1e3,
+            run_ms: parallel_run_ms,
+            serial_run_ms,
+            parallel_run_ms,
+            speedup: if parallel_run_ms > 0.0 {
+                serial_run_ms / parallel_run_ms
+            } else {
+                0.0
+            },
         });
     }
 
@@ -178,6 +225,10 @@ pub fn run_fleet_rows(
         .ok_or_else(|| anyhow::anyhow!("unknown policy {:?}", scale.policy))?;
     let t0 = std::time::Instant::now();
     let res = Simulator::new(mono_cfg).run(&trace, policy.as_mut());
+    let mono_ms = t0.elapsed().as_secs_f64() * 1e3;
+    // One barrier group has no cross-replica parallelism to exploit:
+    // the monolith is its own serial baseline (speedup 1.0 by
+    // construction, kept so every row shares the schema).
     let mono = FleetBenchRow {
         router: format!("monolithic({}w)", scale.total_workers()),
         avg_imbalance: res.report.avg_imbalance,
@@ -187,7 +238,10 @@ pub fn run_fleet_rows(
         energy_mj: res.report.energy_mj(),
         completed: res.completed,
         makespan_s: res.report.wall_time_s,
-        run_ms: t0.elapsed().as_secs_f64() * 1e3,
+        run_ms: mono_ms,
+        serial_run_ms: mono_ms,
+        parallel_run_ms: mono_ms,
+        speedup: 1.0,
     };
     Ok((rows, mono))
 }
@@ -218,6 +272,12 @@ pub fn rows_to_json(
                 None => Json::Null,
             },
         ),
+        // The *resolved* parallelism (0 = auto is clamped to the
+        // machine), so speedup-vs-threads analyses read the truth.
+        (
+            "threads",
+            num(crate::fleet::effective_threads(scale.threads) as f64),
+        ),
         ("monolithic", row_json(mono, mono)),
         ("rows", arr(rows.iter().map(|r| row_json(r, mono)))),
     ])
@@ -225,7 +285,7 @@ pub fn rows_to_json(
 
 fn print_row(r: &FleetBenchRow) {
     println!(
-        "{:<20} {:>14.4e} {:>7.3} {:>10.4} {:>10.1} {:>9.3} {:>9} {:>8.1}",
+        "{:<20} {:>14.4e} {:>7.3} {:>10.4} {:>10.1} {:>9.3} {:>9} {:>8.1} {:>8.1} {:>6.2}",
         r.router,
         r.avg_imbalance,
         r.clock_ratio,
@@ -233,7 +293,9 @@ fn print_row(r: &FleetBenchRow) {
         r.throughput_tps,
         r.energy_mj,
         r.completed,
-        r.run_ms
+        r.serial_run_ms,
+        r.parallel_run_ms,
+        r.speedup
     );
 }
 
@@ -282,8 +344,9 @@ pub fn fleet_sweep(
     let t0 = std::time::Instant::now();
     let (rows, mono) = run_fleet_rows(scale, routers, &events)?;
     println!(
-        "{:<20} {:>14} {:>7} {:>10} {:>10} {:>9} {:>9} {:>8}",
-        "router", "avg_imbalance", "clk", "tpot(s)", "tok/s", "MJ", "done", "ms"
+        "{:<20} {:>14} {:>7} {:>10} {:>10} {:>9} {:>9} {:>8} {:>8} {:>6}",
+        "router", "avg_imbalance", "clk", "tpot(s)", "tok/s", "MJ", "done",
+        "ser_ms", "par_ms", "spd"
     );
     for r in &rows {
         print_row(r);
@@ -319,13 +382,25 @@ mod tests {
             assert!(r.throughput_tps > 0.0);
             assert!(r.energy_mj > 0.0);
             assert!(r.clock_ratio >= 1.0 - 1e-12);
+            assert!(r.serial_run_ms > 0.0, "{}: no serial timing", r.router);
+            assert!(r.parallel_run_ms > 0.0, "{}: no parallel timing", r.router);
+            assert!(r.speedup > 0.0);
         }
         let j = rows_to_json(&tiny(), &rows, &mono).to_string();
         let parsed = crate::util::json::Json::parse(&j).unwrap();
-        assert_eq!(
-            parsed.get("rows").unwrap().as_arr().unwrap().len(),
-            3
-        );
+        let parsed_rows = parsed.get("rows").unwrap().as_arr().unwrap();
+        assert_eq!(parsed_rows.len(), 3);
+        // the machine-readable perf-trajectory fields are per row
+        for pr in parsed_rows {
+            assert!(pr.get("serial_run_ms").is_some());
+            assert!(pr.get("parallel_run_ms").is_some());
+            assert!(pr.get("speedup").is_some());
+        }
+        assert!(parsed
+            .get("monolithic")
+            .unwrap()
+            .get("parallel_run_ms")
+            .is_some());
     }
 
     #[test]

@@ -28,7 +28,7 @@ use crate::metrics::imbalance;
 use crate::sim::predictor::Predictor;
 use crate::workload::Drift;
 
-use super::core::{FleetCore, FleetFinished, ReplicaSnapshot, ReplicaState};
+use super::core::{FleetCore, FleetFinished, ReplicaState};
 use super::FleetConfig;
 
 /// Configuration for [`FleetBackend`].
@@ -58,6 +58,10 @@ pub struct FleetBackendConfig {
     /// Attach an autoscale controller that drains/adds replicas live
     /// (`None` = fixed fleet, PR-3 behavior).
     pub autoscale: Option<AutoscaleConfig>,
+    /// Round-execution parallelism for the fleet core (`0` = all
+    /// available parallelism, `1` = serial; `bfio gateway --backend
+    /// fleet --fleet-threads N`).  Results are identical either way.
+    pub threads: usize,
 }
 
 impl Default for FleetBackendConfig {
@@ -77,6 +81,7 @@ impl Default for FleetBackendConfig {
             step_delay: Duration::from_millis(1),
             batch_window: Duration::from_millis(5),
             autoscale: None,
+            threads: 0,
         }
     }
 }
@@ -96,6 +101,7 @@ impl FleetBackendConfig {
             t_token: self.t_token,
             speeds,
             shapes: None,
+            threads: self.threads,
             seed: self.seed,
             max_rounds: 0,
             warmup_rounds: 0,
@@ -158,18 +164,18 @@ impl FleetBackend {
         );
 
         let (tx, rx) = channel::<Msg>();
-        let snap = Arc::new(Mutex::new(Snapshot::default()));
-        {
-            // Initial all-idle snapshot so /v0/workers is meaningful
-            // before the first request.
-            let mut s = snap.lock().expect("fresh mutex");
-            *s = build_snapshot(
-                &label,
-                &core.snapshot(),
-                core.overflow_len(),
-                controller.as_ref().map(Controller::state),
-            );
-        }
+        // Initial all-idle snapshot so /v0/workers is meaningful before
+        // the first request.
+        let mut initial = Snapshot::default();
+        let mut loads_scratch = Vec::new();
+        fill_snapshot(
+            &mut initial,
+            &mut loads_scratch,
+            &label,
+            &core,
+            controller.as_ref().map(Controller::state),
+        );
+        let snap = Arc::new(Mutex::new(initial));
         let scheduler = Scheduler {
             cfg: cfg.clone(),
             label: label.clone(),
@@ -177,6 +183,7 @@ impl FleetBackend {
             snap: Arc::clone(&snap),
             core,
             controller,
+            loads_scratch,
         };
         let handle = std::thread::spawn(move || scheduler.run());
         Ok(FleetBackend {
@@ -258,6 +265,10 @@ struct Scheduler {
     snap: Arc<Mutex<Snapshot>>,
     core: FleetCore<Pending, Sender<Completion>>,
     controller: Option<Controller>,
+    /// Reusable scratch for the fleet-level imbalance concatenation in
+    /// `fill_snapshot` (the published `Snapshot` itself is updated in
+    /// place under its mutex, reusing its own buffers).
+    loads_scratch: Vec<f64>,
 }
 
 impl Scheduler {
@@ -271,10 +282,7 @@ impl Scheduler {
     /// overrides work with or without an attached controller.
     fn admin(&mut self, cmd: AdminCmd) -> AdminOutcome {
         let known = |core: &FleetCore<Pending, Sender<Completion>>, id: usize| {
-            core.snapshot()
-                .get(id)
-                .map(|s| s.state)
-                .filter(|&s| s != ReplicaState::Removed)
+            core.replica_state(id).filter(|&s| s != ReplicaState::Removed)
         };
         match cmd {
             AdminCmd::Drain { replica, remove } => match known(&self.core, replica) {
@@ -342,15 +350,23 @@ impl Scheduler {
         }
     }
 
+    /// Refresh the HTTP-facing snapshot in place, under its mutex:
+    /// `fill_snapshot` reuses the published buffers directly (Vecs keep
+    /// their capacity, each `ReplicaStatus` entry — state String
+    /// included — is updated rather than rebuilt), so a steady-state
+    /// publish allocates nothing and never calls `FleetCore::snapshot`.
+    /// The fill is O(R·G) with no syscalls, so holding the lock for it
+    /// is cheaper than the copy it replaces.
     fn publish(&mut self) {
-        let snapshot = build_snapshot(
-            &self.label,
-            &self.core.snapshot(),
-            self.core.overflow_len(),
-            self.controller.as_ref().map(Controller::state),
-        );
+        let state = self.controller.as_ref().map(Controller::state);
         if let Ok(mut s) = self.snap.lock() {
-            *s = snapshot;
+            fill_snapshot(
+                &mut s,
+                &mut self.loads_scratch,
+                &self.label,
+                &self.core,
+                state,
+            );
         }
     }
 
@@ -413,7 +429,7 @@ impl Scheduler {
             }
 
             self.core.run_round(
-                &mut |_, p: Pending| {
+                &|_, p: Pending| {
                     let o = u64::from(p.req.max_tokens.max(1));
                     (p.req.id, o, p.done)
                 },
@@ -450,52 +466,78 @@ impl Scheduler {
     }
 }
 
-fn build_snapshot(
+/// Fill the publish buffers in place from the core's borrowed replica
+/// views — the zero-alloc replacement for the old
+/// snapshot-then-convert path (which materialized every
+/// `ReplicaSnapshot`, per-worker Vecs included, twice per round).
+/// `all_loads` is reusable scratch for the fleet-level imbalance.
+fn fill_snapshot<T, P>(
+    s: &mut Snapshot,
+    all_loads: &mut Vec<f64>,
     label: &str,
-    snaps: &[ReplicaSnapshot],
-    overflow: usize,
+    core: &FleetCore<T, P>,
     autoscaler: Option<ControllerState>,
-) -> Snapshot {
-    let mut workers = Vec::new();
-    let mut replicas = Vec::with_capacity(snaps.len());
-    let mut all_loads: Vec<f64> = Vec::new();
-    let mut stats = BackendStats { policy: label.to_string(), ..Default::default() };
+) {
+    s.workers.clear();
+    all_loads.clear();
+    let stats = &mut s.stats;
+    if stats.policy != label {
+        stats.policy = label.to_string();
+    }
+    stats.steps = 0;
+    stats.clock_s = 0.0;
+    stats.energy_j = 0.0;
+    stats.energy_useful_j = 0.0;
+    stats.energy_idle_j = 0.0;
+    stats.energy_correction_j = 0.0;
+    stats.completed = 0;
+    stats.admitted = 0;
+    stats.total_tokens = 0;
+    stats.queue_depth = 0;
     let mut imbalance_sum = 0.0;
     let mut metered_steps = 0u64;
     // Global worker ids: a running offset over replica worker counts
     // (equals `replica·G + worker` for uniform fleets).
     let mut worker_base = 0usize;
-    for r in snaps {
+    let mut count = 0usize;
+    for r in core.replica_refs() {
         for gi in 0..r.g {
-            workers.push(WorkerStatus {
+            s.workers.push(WorkerStatus {
                 id: worker_base + gi,
                 replica: r.id,
                 load: r.loads[gi],
                 active: r.active_per_worker[gi],
-                free_slots: r.free_per_worker[gi],
+                free_slots: r.b - r.active_per_worker[gi],
                 completed: r.completed_per_worker[gi],
             });
         }
         worker_base += r.g;
         if r.state != ReplicaState::Removed {
-            all_loads.extend_from_slice(&r.loads);
+            all_loads.extend_from_slice(r.loads);
         }
-        replicas.push(ReplicaStatus {
-            id: r.id,
-            speed: r.speed,
-            state: r.state.label().to_string(),
-            load: r.loads.iter().sum(),
-            active: r.active_per_worker.iter().sum(),
-            free_slots: r.free_per_worker.iter().sum(),
-            queue_depth: r.queue_depth,
-            completed: r.completed,
-            steps: r.executed,
-            clock_s: r.clock_s,
-            energy_j: r.energy_j,
-            energy_useful_j: r.energy_useful_j,
-            energy_idle_j: r.energy_idle_j,
-            energy_correction_j: r.energy_correction_j,
-        });
+        // Update per-replica entries in place: `ReplicaStatus::state`
+        // is a String, so clear-and-push would re-allocate it every
+        // publish; reusing the entry keeps the steady state at zero.
+        if s.replicas.len() <= count {
+            s.replicas.push(ReplicaStatus::default());
+        }
+        let rs = &mut s.replicas[count];
+        count += 1;
+        rs.id = r.id;
+        rs.speed = r.speed;
+        rs.state.clear();
+        rs.state.push_str(r.state.label());
+        rs.load = r.loads.iter().sum();
+        rs.active = r.active;
+        rs.free_slots = r.g * r.b - r.active;
+        rs.queue_depth = r.queue_depth;
+        rs.completed = r.completed;
+        rs.steps = r.executed;
+        rs.clock_s = r.clock_s;
+        rs.energy_j = r.energy_j;
+        rs.energy_useful_j = r.energy_useful_j;
+        rs.energy_idle_j = r.energy_idle_j;
+        rs.energy_correction_j = r.energy_correction_j;
         stats.steps += r.executed;
         stats.clock_s = stats.clock_s.max(r.clock_s);
         stats.energy_j += r.energy_j;
@@ -509,10 +551,11 @@ fn build_snapshot(
         imbalance_sum += r.imbalance_sum;
         metered_steps += r.steps;
     }
+    s.replicas.truncate(count);
     // Fleet-level snapshot imbalance: Eq. 2 over the concatenated
     // worker loads of every live replica (captures cross-replica skew
     // on top of within-replica skew).
-    stats.imbalance = imbalance(&all_loads);
+    stats.imbalance = imbalance(all_loads);
     stats.avg_imbalance = if metered_steps > 0 {
         imbalance_sum / metered_steps as f64
     } else {
@@ -520,8 +563,8 @@ fn build_snapshot(
     };
     // Overflow-parked requests (no accepting replica) are queued work
     // too — exactly the state where the queue gauge matters most.
-    stats.queue_depth += overflow;
-    Snapshot { workers, replicas, stats, autoscaler }
+    stats.queue_depth += core.overflow_len();
+    s.autoscaler = autoscaler;
 }
 
 #[cfg(test)]

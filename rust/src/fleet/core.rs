@@ -21,6 +21,8 @@
 //! takes effect once the replica has fully drained; added replicas join
 //! the rotation empty.
 
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+
 use anyhow::{anyhow, ensure, Result};
 
 use crate::config::PowerConfig;
@@ -29,6 +31,7 @@ use crate::policies::{by_name, Policy};
 use crate::sim::engine::{Engine, EngineConfig, Finished};
 use crate::util::rng::Rng;
 
+use super::pool::{effective_threads, RoundPool};
 use super::router::{least_outstanding_of, FleetRouter, ReplicaView};
 use super::FleetConfig;
 
@@ -81,6 +84,12 @@ struct ReplicaSlot<T, P> {
     routed: u64,
     /// Barrier steps actually executed.
     executed: u64,
+    /// Reused engine-completion buffer (owned per replica so rounds can
+    /// step replicas on different threads with no shared scratch).
+    fin: Vec<Finished<P>>,
+    /// This round's completions, merged into the caller's `out` in
+    /// replica-id order after every replica has stepped.
+    out: Vec<FleetFinished<P>>,
 }
 
 /// Read-only per-replica snapshot (for `/v0/workers`, `/metrics`, and
@@ -122,6 +131,83 @@ pub struct ReplicaSnapshot {
     pub executed: u64,
 }
 
+impl ReplicaSnapshot {
+    /// Borrowed view with the same shape the live core exposes through
+    /// [`FleetCore::replica_refs`], so cold-path consumers of owned
+    /// snapshots can feed the one hot-path sampler.
+    pub fn view(&self) -> ReplicaRef<'_> {
+        ReplicaRef {
+            id: self.id,
+            speed: self.speed,
+            state: self.state,
+            g: self.g,
+            b: self.b,
+            loads: &self.loads,
+            active: self.active_per_worker.iter().sum(),
+            active_per_worker: &self.active_per_worker,
+            completed_per_worker: &self.completed_per_worker,
+            queue_depth: self.queue_depth,
+            queued_prefill: self.queued_prefill,
+            completion_horizon: self.completion_horizon,
+            clock_s: self.clock_s,
+            steps: self.steps,
+            imbalance_sum: self.imbalance_sum,
+            tokens: self.tokens,
+            energy_j: self.energy_j,
+            energy_useful_j: self.energy_useful_j,
+            energy_idle_j: self.energy_idle_j,
+            energy_correction_j: self.energy_correction_j,
+            completed: self.completed,
+            admitted: self.admitted,
+            routed: self.routed,
+            executed: self.executed,
+        }
+    }
+}
+
+/// Borrowed per-replica state — the zero-alloc signal path.  Everything
+/// the autoscale sampler and the gateway's `/metrics`/`/v0/workers`
+/// publisher need, straight off the live slot: slices borrow the
+/// engine's incrementally-maintained buffers, nothing is copied.  The
+/// owned [`ReplicaSnapshot`] (via [`FleetCore::snapshot`]) remains the
+/// cold-path debug/admin API.
+#[derive(Clone, Copy, Debug)]
+pub struct ReplicaRef<'a> {
+    pub id: usize,
+    pub speed: f64,
+    pub state: ReplicaState,
+    pub g: usize,
+    pub b: usize,
+    /// Per-worker loads `L_g`.
+    pub loads: &'a [f64],
+    /// Total active requests.
+    pub active: usize,
+    pub active_per_worker: &'a [usize],
+    pub completed_per_worker: &'a [u64],
+    pub queue_depth: usize,
+    pub queued_prefill: f64,
+    pub completion_horizon: u64,
+    pub clock_s: f64,
+    pub steps: u64,
+    pub imbalance_sum: f64,
+    pub tokens: f64,
+    pub energy_j: f64,
+    pub energy_useful_j: f64,
+    pub energy_idle_j: f64,
+    pub energy_correction_j: f64,
+    pub completed: u64,
+    pub admitted: u64,
+    pub routed: u64,
+    pub executed: u64,
+}
+
+impl ReplicaRef<'_> {
+    /// Free batch slots on worker `gi`.
+    pub fn free_slots(&self, gi: usize) -> usize {
+        self.b - self.active_per_worker[gi]
+    }
+}
+
 /// Final per-replica outcome (consumes the recorder).
 #[derive(Clone, Debug)]
 pub struct ReplicaOutcome {
@@ -154,14 +240,25 @@ pub struct FleetCore<T, P> {
     /// replica clock to charge it to.
     overflow: Vec<(f64, u64, f64, T)>,
     submitted: u64,
+    /// Effective round-execution parallelism (resolved from
+    /// [`FleetConfig::threads`]; 1 = serial).
+    threads: usize,
+    /// Lazily spawned persistent worker pool (`threads - 1` workers;
+    /// spawned on the first round that actually has >1 live replica).
+    pool: Option<RoundPool>,
+    /// Calls to the cold-path [`FleetCore::snapshot`] API — the
+    /// zero-alloc regression guard: steady-state controller ticks and
+    /// gateway publishes must leave this at 0.
+    snapshots: AtomicU64,
     // reused buffers
+    /// Cached per-replica router views, indexed by replica id (removed
+    /// replicas keep an entry with `accepting == false`).  Kept fresh
+    /// incrementally: each round's per-replica step refreshes its own
+    /// entry in place, per-arrival routing patches the chosen replica's
+    /// queue fields, and only lifecycle changes (add / drain /
+    /// reactivate / queue re-offers) force a full O(R·G) rebuild.
     views: Vec<ReplicaView>,
-    /// Cached views go stale only when engines step or the replica set
-    /// changes; per-arrival routing just patches the chosen replica's
-    /// queue fields instead of re-scanning every worker (O(R) per
-    /// arrival, not O(R·G)).
     views_dirty: bool,
-    fin: Vec<Finished<P>>,
 }
 
 impl<T, P> FleetCore<T, P> {
@@ -178,6 +275,7 @@ impl<T, P> FleetCore<T, P> {
         }
         let speeds = cfg.speeds.clone();
         let shapes = cfg.shapes.clone();
+        let threads = effective_threads(cfg.threads);
         let mut core = FleetCore {
             route_rng: Rng::new(cfg.seed ^ 0xF1EE7),
             cfg,
@@ -186,9 +284,11 @@ impl<T, P> FleetCore<T, P> {
             round: 0,
             overflow: Vec::new(),
             submitted: 0,
+            threads,
+            pool: None,
+            snapshots: AtomicU64::new(0),
             views: Vec::new(),
             views_dirty: true,
-            fin: Vec::new(),
         };
         for (i, s) in speeds.into_iter().enumerate() {
             match shapes.as_ref().map(|v| v[i]) {
@@ -248,6 +348,8 @@ impl<T, P> FleetCore<T, P> {
             completed_per_worker: vec![0; g],
             routed: 0,
             executed: 0,
+            fin: Vec::new(),
+            out: Vec::new(),
         });
         self.views_dirty = true;
         self.reoffer_queued();
@@ -460,138 +562,136 @@ impl<T, P> FleetCore<T, P> {
         slot.engine.submit(prefill, arrival_step, clock, ticket);
         slot.routed += 1;
         // Patch the cached view so later arrivals this round see the
-        // new queue state without an O(R·G) rebuild.
-        if let Some(v) = self.views.iter_mut().find(|v| v.id == id) {
-            v.queue_depth += 1;
-            v.queued_prefill += prefill;
-        }
+        // new queue state without an O(R·G) rebuild (views are indexed
+        // by replica id).
+        let v = &mut self.views[id];
+        v.queue_depth += 1;
+        v.queued_prefill += prefill;
         Some(id)
     }
 
+    /// Full view rebuild — only after lifecycle changes (add / drain /
+    /// reactivate / queue re-offers).  Steady-state rounds refresh each
+    /// stepped replica's entry in place instead.
     fn build_views(&mut self) {
-        self.views.clear();
-        for s in &self.slots {
-            if s.state == ReplicaState::Removed {
-                continue;
-            }
-            let loads = s.engine.loads();
-            let max_load = loads.iter().cloned().fold(0.0, f64::max);
-            let min_load = loads.iter().cloned().fold(f64::INFINITY, f64::min);
-            let active = s.engine.active_count();
-            let g = s.engine.worker_count();
-            let slots = g * s.engine.batch_cap();
-            self.views.push(ReplicaView {
-                id: s.id,
-                speed: s.speed,
-                accepting: s.state == ReplicaState::Accepting,
-                workers: g,
-                slots,
-                free_slots: slots - active,
-                active,
-                queue_depth: s.engine.waiting_len(),
-                load_sum: loads.iter().sum(),
-                max_load,
-                min_load: if min_load.is_finite() { min_load } else { 0.0 },
-                queued_prefill: s.engine.waiting_prefill(),
-                clock_s: s.recorder.clock(),
-            });
+        self.views.resize(self.slots.len(), ReplicaView::default());
+        for (s, v) in self.slots.iter().zip(self.views.iter_mut()) {
+            refresh_view(v, s);
         }
     }
 
-    /// Run one global round: every non-idle replica performs one
-    /// admission + barrier step + completion pass on its own clock.
-    /// `open(replica, ticket)` materializes an admitted ticket into
-    /// `(request id, decode length, payload)`.  Completions are
-    /// appended to `out` (cleared first).  Returns the number of
-    /// replicas that executed a step.
-    pub fn run_round<F>(&mut self, open: &mut F, out: &mut Vec<FleetFinished<P>>) -> usize
+    /// One replica's admission + barrier step + completion pass, on its
+    /// own clock.  Self-contained per slot (policy, rng, recorder, and
+    /// the `fin`/`out` scratch are all slot-owned), so rounds can step
+    /// replicas on any thread with results identical to the serial
+    /// order.  Refreshes the replica's cached router view in place.
+    /// Returns whether a barrier step actually executed.
+    fn step_slot<F>(slot: &mut ReplicaSlot<T, P>, view: &mut ReplicaView, open: &F) -> bool
     where
-        F: FnMut(usize, T) -> (u64, u64, P),
+        F: Fn(usize, T) -> (u64, u64, P),
     {
-        out.clear();
-        self.flush_overflow();
-        let mut executed_replicas = 0usize;
-        let Self { slots, fin, .. } = self;
-        for slot in slots.iter_mut() {
-            if slot.state == ReplicaState::Removed {
-                continue;
-            }
-            if slot.engine.is_idle() {
-                if slot.state == (ReplicaState::Draining { remove: true }) {
-                    slot.state = ReplicaState::Removed;
-                }
-                continue;
-            }
-            let draining_remove =
-                slot.state == (ReplicaState::Draining { remove: true });
-            let r = slot.id;
-            slot.engine.admit(
-                slot.policy.as_mut(),
-                &mut slot.rng,
-                slot.recorder.clock(),
-                |t| open(r, t),
-            );
-            let active = slot.engine.active_count();
-            if active == 0 {
-                continue; // non-work-conserving policy held everything
-            }
-            slot.recorder
-                .step(slot.engine.step_index(), slot.engine.loads(), active);
-            slot.executed += 1;
-            executed_replicas += 1;
-            slot.engine.advance(fin);
-            let finish_clock = slot.recorder.clock();
-            for f in fin.drain(..) {
-                slot.completed_per_worker[f.worker] += 1;
-                slot.recorder.complete_record(CompletionRecord {
-                    id: f.id,
-                    worker: f.worker,
-                    arrival_clock: f.arrival_clock,
-                    admit_clock: f.admit_clock,
-                    finish_clock,
-                    tokens: f.tokens,
-                });
-                out.push(FleetFinished {
-                    replica: r,
-                    worker: f.worker,
-                    id: f.id,
-                    tokens: f.tokens,
-                    arrival_clock: f.arrival_clock,
-                    admit_clock: f.admit_clock,
-                    finish_clock,
-                    payload: f.payload,
-                });
-            }
-            // Retire in the same round the last active drains, so a
-            // remove-drained replica never ends a run still "draining".
-            if draining_remove && slot.engine.is_idle() {
+        if slot.state == ReplicaState::Removed {
+            return false;
+        }
+        if slot.engine.is_idle() {
+            if slot.state == (ReplicaState::Draining { remove: true }) {
                 slot.state = ReplicaState::Removed;
+                refresh_view(view, slot);
+            }
+            return false;
+        }
+        let draining_remove = slot.state == (ReplicaState::Draining { remove: true });
+        let r = slot.id;
+        slot.engine.admit(
+            slot.policy.as_mut(),
+            &mut slot.rng,
+            slot.recorder.clock(),
+            |t| open(r, t),
+        );
+        let active = slot.engine.active_count();
+        if active == 0 {
+            return false; // non-work-conserving policy held everything
+        }
+        slot.recorder
+            .step(slot.engine.step_index(), slot.engine.loads(), active);
+        slot.executed += 1;
+        slot.engine.advance(&mut slot.fin);
+        let finish_clock = slot.recorder.clock();
+        for f in slot.fin.drain(..) {
+            slot.completed_per_worker[f.worker] += 1;
+            slot.recorder.complete_record(CompletionRecord {
+                id: f.id,
+                worker: f.worker,
+                arrival_clock: f.arrival_clock,
+                admit_clock: f.admit_clock,
+                finish_clock,
+                tokens: f.tokens,
+            });
+            slot.out.push(FleetFinished {
+                replica: r,
+                worker: f.worker,
+                id: f.id,
+                tokens: f.tokens,
+                arrival_clock: f.arrival_clock,
+                admit_clock: f.admit_clock,
+                finish_clock,
+                payload: f.payload,
+            });
+        }
+        // Retire in the same round the last active drains, so a
+        // remove-drained replica never ends a run still "draining".
+        if draining_remove && slot.engine.is_idle() {
+            slot.state = ReplicaState::Removed;
+        }
+        refresh_view(view, slot);
+        true
+    }
+
+    /// Serial round body: replicas step in id order on this thread.
+    fn run_round_serial<F>(&mut self, open: &F) -> usize
+    where
+        F: Fn(usize, T) -> (u64, u64, P),
+    {
+        let mut executed = 0usize;
+        for (slot, view) in self.slots.iter_mut().zip(self.views.iter_mut()) {
+            if Self::step_slot(slot, view, open) {
+                executed += 1;
             }
         }
-        self.round += 1;
-        self.views_dirty = true;
-        executed_replicas
+        executed
     }
 
     /// Per-replica snapshots (includes removed replicas, for totals).
+    /// This is the **cold-path** debug/admin API: it allocates one
+    /// `ReplicaSnapshot` (plus four per-worker Vecs) per replica.  Hot
+    /// paths — the autoscale controller tick, the gateway publisher —
+    /// read [`FleetCore::replica_refs`] instead; the
+    /// [`FleetCore::snapshots_taken`] counter guards that contract.
     pub fn snapshot(&self) -> Vec<ReplicaSnapshot> {
+        self.snapshots.fetch_add(1, Ordering::Relaxed);
         self.slots
             .iter()
             .map(|s| {
                 let g = s.engine.worker_count();
+                let b = s.engine.batch_cap();
+                // One pass over the cached active counts; `free` is
+                // derived, not re-queried per worker.
+                let counts = s.engine.active_counts();
+                let mut active_per_worker = Vec::with_capacity(g);
+                let mut free_per_worker = Vec::with_capacity(g);
+                for &a in counts {
+                    active_per_worker.push(a);
+                    free_per_worker.push(b - a);
+                }
                 ReplicaSnapshot {
                     id: s.id,
                     speed: s.speed,
                     state: s.state,
                     g,
-                    b: s.engine.batch_cap(),
+                    b,
                     loads: s.engine.loads().to_vec(),
-                    active_per_worker: (0..g)
-                        .map(|gi| s.engine.worker_active(gi))
-                        .collect(),
-                    free_per_worker: (0..g)
-                        .map(|gi| s.engine.free_slots(gi))
-                        .collect(),
+                    active_per_worker,
+                    free_per_worker,
                     completed_per_worker: s.completed_per_worker.clone(),
                     queue_depth: s.engine.waiting_len(),
                     queued_prefill: s.engine.waiting_prefill(),
@@ -613,6 +713,56 @@ impl<T, P> FleetCore<T, P> {
             .collect()
     }
 
+    /// Cold-path [`FleetCore::snapshot`] calls so far — the zero-alloc
+    /// steady-state regression guard (`rust/tests/autoscale.rs` asserts
+    /// this stays 0 across controller ticks and gateway rounds).
+    pub fn snapshots_taken(&self) -> u64 {
+        self.snapshots.load(Ordering::Relaxed)
+    }
+
+    /// Lifecycle state of one replica (`None` for unknown ids) without
+    /// snapshotting the fleet.
+    pub fn replica_state(&self, id: usize) -> Option<ReplicaState> {
+        self.slots.get(id).map(|s| s.state)
+    }
+
+    /// Live replicas (any state), as borrowed zero-alloc views in
+    /// replica-id order — the hot-path replacement for
+    /// [`FleetCore::snapshot`].
+    pub fn replica_refs(&self) -> impl Iterator<Item = ReplicaRef<'_>> {
+        self.slots.iter().map(|s| ReplicaRef {
+            id: s.id,
+            speed: s.speed,
+            state: s.state,
+            g: s.engine.worker_count(),
+            b: s.engine.batch_cap(),
+            loads: s.engine.loads(),
+            active: s.engine.active_count(),
+            active_per_worker: s.engine.active_counts(),
+            completed_per_worker: &s.completed_per_worker,
+            queue_depth: s.engine.waiting_len(),
+            queued_prefill: s.engine.waiting_prefill(),
+            completion_horizon: s.engine.completion_horizon(),
+            clock_s: s.recorder.clock(),
+            steps: s.recorder.steps_recorded(),
+            imbalance_sum: s.recorder.imbalance_sum(),
+            tokens: s.recorder.tokens_recorded(),
+            energy_j: s.recorder.energy.total_energy_j(),
+            energy_useful_j: s.recorder.energy.useful_j,
+            energy_idle_j: s.recorder.energy.idle_j,
+            energy_correction_j: s.recorder.energy.correction_j,
+            completed: s.engine.completed(),
+            admitted: s.engine.admitted(),
+            routed: s.routed,
+            executed: s.executed,
+        })
+    }
+
+    /// Round-execution parallelism this core resolved to (1 = serial).
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
     /// Finish every replica's recorder and return the outcomes.
     pub fn into_results(self) -> Vec<ReplicaOutcome> {
         self.slots
@@ -631,6 +781,141 @@ impl<T, P> FleetCore<T, P> {
             })
             .collect()
     }
+}
+
+/// Raw-pointer wrapper so the round job can hand disjoint `&mut`
+/// elements of the slot/view Vecs to pool threads.
+#[derive(Clone, Copy)]
+struct SendPtr<X>(*mut X);
+// SAFETY: the pointer is only dereferenced at indices claimed exactly
+// once from the round's atomic counter (disjoint &mut), and only while
+// `RoundPool::run` holds the round open.
+unsafe impl<X> Send for SendPtr<X> {}
+unsafe impl<X> Sync for SendPtr<X> {}
+
+impl<T: Send, P: Send> FleetCore<T, P> {
+    /// Run one global round: every non-idle replica performs one
+    /// admission + barrier step + completion pass on its own clock.
+    /// `open(replica, ticket)` materializes an admitted ticket into
+    /// `(request id, decode length, payload)`; it may be called from
+    /// any pool thread (in unspecified cross-replica order, exactly
+    /// once per admitted ticket), so it must not rely on call order
+    /// across replicas.  Completions are appended to `out` (cleared
+    /// first) in replica-id order, then by completion order within the
+    /// replica — identical to the serial path whatever `threads` is.
+    /// Returns the number of replicas that executed a step.
+    pub fn run_round<F>(&mut self, open: &F, out: &mut Vec<FleetFinished<P>>) -> usize
+    where
+        F: Fn(usize, T) -> (u64, u64, P) + Sync,
+    {
+        out.clear();
+        self.flush_overflow();
+        if self.views_dirty {
+            self.build_views();
+            self.views_dirty = false;
+        }
+        let runnable = self
+            .slots
+            .iter()
+            .filter(|s| s.state != ReplicaState::Removed && !s.engine.is_idle())
+            .count();
+        if self.pool.is_none() && self.threads > 1 && runnable > 1 {
+            self.pool = Some(RoundPool::new(self.threads - 1));
+        }
+        let executed_replicas = if runnable > 1 && self.pool.is_some() {
+            self.run_round_parallel(open, runnable)
+        } else {
+            // One busy replica (or a serial core): fan-out would only
+            // add wakeup latency — same per-slot code, same results.
+            self.run_round_serial(open)
+        };
+        for slot in &mut self.slots {
+            out.extend(slot.out.drain(..));
+        }
+        self.round += 1;
+        executed_replicas
+    }
+
+    /// Parallel round body: pool threads (plus this one) claim replica
+    /// indices off an atomic counter and run [`FleetCore::step_slot`]
+    /// on disjoint slots.  Per-replica state is fully owned, so the
+    /// outcome is bit-identical to the serial order; only wall-clock
+    /// changes.
+    fn run_round_parallel<F>(&mut self, open: &F, runnable: usize) -> usize
+    where
+        F: Fn(usize, T) -> (u64, u64, P) + Sync,
+    {
+        // Compile-time guard behind the SendPtr unsafety: slots (and
+        // everything in them — engine, policy, recorder, rng) must be
+        // safe to hand to another thread.
+        fn assert_send<X: Send>() {}
+        assert_send::<ReplicaSlot<T, P>>();
+        let n = self.slots.len();
+        debug_assert_eq!(self.views.len(), n, "views rebuilt before the round");
+        let next = AtomicUsize::new(0);
+        let executed = AtomicUsize::new(0);
+        let slots = SendPtr(self.slots.as_mut_ptr());
+        let views = SendPtr(self.views.as_mut_ptr());
+        let pool = self.pool.as_ref().expect("parallel round without a pool");
+        // Wake only as many workers as there are *other* busy replicas;
+        // idle slots are skipped in O(1) by whoever claims them.
+        let engage = (runnable - 1).min(pool.workers());
+        pool.run(
+            || loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                // SAFETY: `i` is claimed exactly once across all
+                // threads, so these are disjoint &mut borrows; the
+                // buffers outlive the round because `pool.run` joins
+                // every engaged worker before returning.
+                let (slot, view) =
+                    unsafe { (&mut *slots.0.add(i), &mut *views.0.add(i)) };
+                if Self::step_slot(slot, view, open) {
+                    executed.fetch_add(1, Ordering::Relaxed);
+                }
+            },
+            engage,
+        );
+        executed.load(Ordering::Relaxed)
+    }
+}
+
+/// Rebuild one replica's cached router view from its engine's
+/// incrementally-maintained state (O(G), no allocation).
+fn refresh_view<T, P>(view: &mut ReplicaView, slot: &ReplicaSlot<T, P>) {
+    let engine = &slot.engine;
+    let loads = engine.loads();
+    let mut sum = 0.0f64;
+    let mut max = 0.0f64;
+    let mut min = f64::INFINITY;
+    for &l in loads {
+        sum += l;
+        if l > max {
+            max = l;
+        }
+        if l < min {
+            min = l;
+        }
+    }
+    let active = engine.active_count();
+    let g = engine.worker_count();
+    let slots = g * engine.batch_cap();
+    view.id = slot.id;
+    view.speed = slot.speed;
+    view.accepting = slot.state == ReplicaState::Accepting;
+    view.workers = g;
+    view.slots = slots;
+    view.free_slots = slots - active;
+    view.active = active;
+    view.queue_depth = engine.waiting_len();
+    view.load_sum = sum;
+    view.max_load = max;
+    view.min_load = if min.is_finite() { min } else { 0.0 };
+    view.queued_prefill = engine.waiting_prefill();
+    view.completion_horizon = engine.completion_horizon();
+    view.clock_s = slot.recorder.clock();
 }
 
 #[cfg(test)]
@@ -661,9 +946,9 @@ mod tests {
             assert!(picked < 2);
         }
         let mut out = Vec::new();
-        c.run_round(&mut open_ticket, &mut out); // step 0: all survive
+        c.run_round(&open_ticket, &mut out); // step 0: all survive
         assert!(out.is_empty());
-        c.run_round(&mut open_ticket, &mut out); // step 1: o=2 completes
+        c.run_round(&open_ticket, &mut out); // step 1: o=2 completes
         assert_eq!(out.len(), 4);
         assert!(c.is_idle());
         let snaps = c.snapshot();
@@ -683,7 +968,7 @@ mod tests {
             c.submit(5.0, 0, i * 1000 + 5);
         }
         let mut out = Vec::new();
-        c.run_round(&mut open_ticket, &mut out);
+        c.run_round(&open_ticket, &mut out);
         let before = c.snapshot();
         let waiting0 = before[0].queue_depth;
         assert!(waiting0 > 0, "replica 0 should have a backlog");
@@ -703,7 +988,7 @@ mod tests {
         // everything still completes; drained replica gets nothing new
         let mut rounds = 0;
         while !c.is_idle() && rounds < 100 {
-            c.run_round(&mut open_ticket, &mut out);
+            c.run_round(&open_ticket, &mut out);
             rounds += 1;
         }
         let fin = c.snapshot();
@@ -721,7 +1006,7 @@ mod tests {
         assert!(!c.is_idle());
         assert!(c.is_stalled(), "parked work with zero capacity");
         let mut out = Vec::new();
-        c.run_round(&mut open_ticket, &mut out);
+        c.run_round(&open_ticket, &mut out);
         assert_eq!(c.snapshot()[0].state, ReplicaState::Removed);
         assert!(out.is_empty());
         // a fresh replica picks the overflow up on the next round
@@ -730,7 +1015,7 @@ mod tests {
         assert!(!c.is_stalled(), "capacity is back");
         let mut rounds = 0;
         while !c.is_idle() && rounds < 10 {
-            c.run_round(&mut open_ticket, &mut out);
+            c.run_round(&open_ticket, &mut out);
             rounds += 1;
         }
         let snaps = c.snapshot();
@@ -764,7 +1049,7 @@ mod tests {
             c.submit(5.0, 0, i * 1000 + 5);
         }
         let mut out = Vec::new();
-        c.run_round(&mut open_ticket, &mut out);
+        c.run_round(&open_ticket, &mut out);
         assert_eq!(c.snapshot()[0].queue_depth, 6);
         let id = c.add_replica(1.0).unwrap();
         let after = c.snapshot();
@@ -776,7 +1061,7 @@ mod tests {
         assert_eq!(4 - after[0].free_per_worker.iter().sum::<usize>(), 4);
         let mut rounds = 0;
         while !c.is_idle() && rounds < 100 {
-            c.run_round(&mut open_ticket, &mut out);
+            c.run_round(&open_ticket, &mut out);
             rounds += 1;
         }
         let fin = c.snapshot();
@@ -814,7 +1099,7 @@ mod tests {
         let mut out = Vec::new();
         let mut rounds = 0;
         while !c.is_idle() && rounds < 50 {
-            c.run_round(&mut open_ticket, &mut out);
+            c.run_round(&open_ticket, &mut out);
             rounds += 1;
         }
         let snaps = c.snapshot();
@@ -835,7 +1120,7 @@ mod tests {
         let mut out = Vec::new();
         let mut rounds = 0;
         while !c.is_idle() && rounds < 10 {
-            c.run_round(&mut open_ticket, &mut out);
+            c.run_round(&open_ticket, &mut out);
             rounds += 1;
         }
         let snaps = c.snapshot();

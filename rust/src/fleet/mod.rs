@@ -5,7 +5,7 @@
 //! ```text
 //!                        ┌──────────────────────────────┐
 //!        arrivals ──────►│  tier 1: FleetRouter          │
-//!                        │  wrr | low | powd:<d> | bfio2 │
+//!                        │  wrr|low|powd:<d>|bfio2|bfio2h│
 //!                        └──────┬───────┬───────┬───────┘
 //!                        sticky │       │       │ routing
 //!                     ┌─────────┘       │       └─────────┐
@@ -43,12 +43,15 @@
 
 pub mod backend;
 pub mod core;
+pub mod pool;
 pub mod router;
 
 pub use self::backend::{FleetBackend, FleetBackendConfig};
 pub use self::core::{
-    FleetCore, FleetFinished, ReplicaOutcome, ReplicaSnapshot, ReplicaState,
+    FleetCore, FleetFinished, ReplicaOutcome, ReplicaRef, ReplicaSnapshot,
+    ReplicaState,
 };
+pub use self::pool::{effective_threads, RoundPool};
 pub use self::router::{router_by_name, FleetRouter, ReplicaView};
 
 use anyhow::{anyhow, Result};
@@ -84,6 +87,13 @@ pub struct FleetConfig {
     /// Replicas added later (lifecycle / autoscaler) use the fleet-level
     /// default shape.
     pub shapes: Option<Vec<(usize, usize)>>,
+    /// Round-execution parallelism: each global round fans the
+    /// per-replica engine steps out across this many threads (a
+    /// persistent pool inside [`FleetCore`], spawned once).  `0` = all
+    /// available parallelism, `1` = the serial path.  Results are
+    /// identical either way — replicas own their policy/recorder/rng —
+    /// so this is purely a wall-clock knob (`bfio fleet --threads N`).
+    pub threads: usize,
     pub seed: u64,
     /// Hard cap on global rounds (0 = run until the trace drains).
     pub max_rounds: u64,
@@ -108,6 +118,7 @@ impl FleetConfig {
             t_token: sim.t_token,
             speeds: vec![1.0; replicas],
             shapes: None,
+            threads: 0,
             seed: 0,
             max_rounds: 0,
             warmup_rounds: 0,
@@ -296,7 +307,7 @@ pub fn run_fleet_hooked(
         }
 
         let stepped = core.run_round(
-            &mut |_, idx| {
+            &|_, idx| {
                 let r = &trace[idx as usize];
                 (r.id, r.decode_len, ())
             },
@@ -438,7 +449,7 @@ mod tests {
     #[test]
     fn drains_and_completes_under_every_router() {
         let trace = small_trace(1, 20);
-        for router in ["wrr", "low", "powd:2", "bfio2"] {
+        for router in ["wrr", "low", "powd:2", "bfio2", "bfio2h"] {
             let cfg = FleetConfig::uniform(3, 2, 2, "jsq");
             let res = run_fleet(&cfg, router, &trace, &[]).unwrap();
             assert_eq!(res.completed as usize, trace.len(), "router {router}");

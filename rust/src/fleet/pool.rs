@@ -1,0 +1,314 @@
+//! Persistent worker-thread pool for parallel fleet round execution.
+//!
+//! [`FleetCore::run_round`](super::core::FleetCore::run_round) fans each
+//! round's per-replica work (admission + barrier step + completion
+//! pass) out across threads.  Replicas are fully independent within a
+//! round — each owns its engine, policy, recorder, and rng — so the
+//! only coordination is claiming replica indices off a shared atomic
+//! counter and a barrier at the end of the round.
+//!
+//! Rounds are microseconds, so the pool is **persistent**: threads are
+//! spawned once (lazily, the first time a round actually has >1 live
+//! replica) and parked on a channel between rounds.  A per-round job is
+//! a closure borrowing the core's replica slots; its lifetime is erased
+//! to `'static` to cross the channel, which is sound because
+//! [`RoundPool::run`] does not return until every engaged worker has
+//! finished executing (and dropped) its clone of the job — the borrow
+//! is dead before the caller's frame can move on.
+//!
+//! The pool itself is type-erased (it runs opaque `Fn()` jobs), so one
+//! implementation serves every `FleetCore<T, P>` instantiation.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+/// A lifetime-erased per-round job.  Workers call it exactly once per
+/// round; the closure itself loops, claiming replica indices from an
+/// atomic counter until the round is exhausted (dynamic work-stealing,
+/// so a straggler replica never serializes the rest behind it).
+type Job = Arc<dyn Fn() + Send + Sync + 'static>;
+
+enum Msg {
+    Job(Job),
+    Shutdown,
+}
+
+/// Sends the end-of-round acknowledgement on every exit path, so the
+/// coordinating thread never deadlocks waiting on a worker.
+struct DoneGuard<'a>(&'a Sender<()>);
+
+impl Drop for DoneGuard<'_> {
+    fn drop(&mut self) {
+        let _ = self.0.send(());
+    }
+}
+
+/// Drains the engaged workers' done tokens even if the calling thread's
+/// own job execution panics: `RoundPool::run` must never unwind while a
+/// worker still holds a lifetime-erased job borrowing the caller's
+/// frame (that would be a use-after-free, not just a deadlock).
+struct Gather<'a> {
+    done_rx: &'a Receiver<()>,
+    pending: usize,
+}
+
+impl Drop for Gather<'_> {
+    fn drop(&mut self) {
+        while self.pending > 0 {
+            if self.done_rx.recv().is_err() {
+                break; // every worker is gone; nothing left to wait on
+            }
+            self.pending -= 1;
+        }
+    }
+}
+
+/// The persistent pool.  `workers` threads plus the calling thread
+/// cooperate on each round, so a pool sized `n - 1` uses `n` cores.
+pub struct RoundPool {
+    txs: Vec<Sender<Msg>>,
+    done_rx: Receiver<()>,
+    handles: Vec<JoinHandle<()>>,
+    /// Set by a worker whose job panicked; `run` re-raises it at the
+    /// end of the round so a half-stepped round can never pass as a
+    /// success (workers catch the unwind and stay alive).
+    poisoned: Arc<AtomicBool>,
+}
+
+impl RoundPool {
+    /// Spawn `workers` parked threads (0 is allowed: `run` then just
+    /// executes the job inline).
+    pub fn new(workers: usize) -> RoundPool {
+        let (done_tx, done_rx) = channel::<()>();
+        let poisoned = Arc::new(AtomicBool::new(false));
+        let mut txs = Vec::with_capacity(workers);
+        let mut handles = Vec::with_capacity(workers);
+        for i in 0..workers {
+            let (tx, rx) = channel::<Msg>();
+            let done = done_tx.clone();
+            let poison = Arc::clone(&poisoned);
+            let handle = std::thread::Builder::new()
+                .name(format!("bfio-fleet-{i}"))
+                .spawn(move || worker_loop(rx, done, poison))
+                .expect("spawn fleet worker");
+            txs.push(tx);
+            handles.push(handle);
+        }
+        RoundPool { txs, done_rx, handles, poisoned }
+    }
+
+    /// Worker threads available (the calling thread is one more).
+    pub fn workers(&self) -> usize {
+        self.txs.len()
+    }
+
+    /// Run one round: broadcast `job` to at most `engage` workers, run
+    /// it on the calling thread too, and wait for every engaged worker
+    /// to finish.  Engaging fewer workers than the pool holds keeps the
+    /// wakeup overhead proportional to the round's actual parallelism.
+    ///
+    /// The job must be safe to execute concurrently from `engage + 1`
+    /// threads (in the fleet core it partitions work by replica index
+    /// through an atomic counter).
+    pub fn run<'scope, F>(&self, job: F, engage: usize)
+    where
+        F: Fn() + Send + Sync + 'scope,
+    {
+        let engage = engage.min(self.txs.len());
+        let job: Arc<dyn Fn() + Send + Sync + 'scope> = Arc::new(job);
+        // SAFETY: only the lifetime is erased.  Every clone sent below
+        // is executed and dropped by its worker before the worker sends
+        // its done token, and this function does not return until all
+        // `engage` tokens are received — so no erased clone outlives
+        // `'scope`.  (On a worker panic the guard still sends the token
+        // while unwinding; the clone it drops during that unwind holds
+        // only trivially-droppable captures — references and raw
+        // pointers — so nothing with `'scope` data is *used* late.)
+        let job: Job = unsafe {
+            std::mem::transmute::<Arc<dyn Fn() + Send + Sync + 'scope>, Job>(job)
+        };
+        self.poisoned.store(false, Ordering::SeqCst);
+        // The gather guard must exist *before* the first send: from
+        // that moment on, any unwind out of this frame (a failed later
+        // send, a job panic on this thread) has to wait for the workers
+        // already running the lifetime-erased job — the borrows erased
+        // above must not outlive the round.  It counts only successful
+        // sends.
+        let mut gather = Gather { done_rx: &self.done_rx, pending: 0 };
+        for tx in &self.txs[..engage] {
+            tx.send(Msg::Job(Arc::clone(&job))).expect("fleet worker died");
+            gather.pending += 1;
+        }
+        (&*job)();
+        drop(job);
+        while gather.pending > 0 {
+            self.done_rx.recv().expect("fleet worker died");
+            gather.pending -= 1;
+        }
+        if self.poisoned.swap(false, Ordering::SeqCst) {
+            panic!("fleet pool worker panicked during round execution");
+        }
+    }
+}
+
+impl Drop for RoundPool {
+    fn drop(&mut self) {
+        for tx in &self.txs {
+            let _ = tx.send(Msg::Shutdown);
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(rx: Receiver<Msg>, done: Sender<()>, poisoned: Arc<AtomicBool>) {
+    loop {
+        match rx.recv() {
+            Ok(Msg::Job(job)) => {
+                let _guard = DoneGuard(&done);
+                // Catch the unwind so (a) the worker survives to serve
+                // later rounds and (b) the panic is re-raised from
+                // `run` instead of silently truncating this round.
+                let caught = std::panic::catch_unwind(
+                    std::panic::AssertUnwindSafe(|| (&*job)()),
+                );
+                if caught.is_err() {
+                    poisoned.store(true, Ordering::SeqCst);
+                }
+                drop(job);
+            }
+            Ok(Msg::Shutdown) | Err(_) => break,
+        }
+    }
+}
+
+/// Resolve a `threads` knob: `0` = all available parallelism, anything
+/// else is taken literally; clamped to `[1, 64]`.
+pub fn effective_threads(requested: usize) -> usize {
+    let n = if requested == 0 {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    } else {
+        requested
+    };
+    n.clamp(1, 64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn pool_runs_jobs_on_all_engaged_threads_and_reuses_them() {
+        let pool = RoundPool::new(3);
+        assert_eq!(pool.workers(), 3);
+        for round in 1..=5usize {
+            let hits = AtomicUsize::new(0);
+            pool.run(
+                || {
+                    hits.fetch_add(1, Ordering::Relaxed);
+                },
+                3,
+            );
+            // 3 workers + the calling thread
+            assert_eq!(hits.load(Ordering::Relaxed), 4, "round {round}");
+        }
+    }
+
+    #[test]
+    fn partial_engagement_wakes_only_that_many_workers() {
+        let pool = RoundPool::new(4);
+        let hits = AtomicUsize::new(0);
+        pool.run(
+            || {
+                hits.fetch_add(1, Ordering::Relaxed);
+            },
+            1,
+        );
+        assert_eq!(hits.load(Ordering::Relaxed), 2);
+        // engage beyond the pool size is capped, not an error
+        let hits = AtomicUsize::new(0);
+        pool.run(
+            || {
+                hits.fetch_add(1, Ordering::Relaxed);
+            },
+            99,
+        );
+        assert_eq!(hits.load(Ordering::Relaxed), 5);
+    }
+
+    #[test]
+    fn zero_worker_pool_runs_inline() {
+        let pool = RoundPool::new(0);
+        let hits = AtomicUsize::new(0);
+        pool.run(
+            || {
+                hits.fetch_add(1, Ordering::Relaxed);
+            },
+            8,
+        );
+        assert_eq!(hits.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn jobs_borrow_caller_stack_mutably_and_disjointly() {
+        let pool = RoundPool::new(2);
+        let mut data = vec![0u64; 16];
+        let next = AtomicUsize::new(0);
+        let ptr = data.as_mut_ptr() as usize;
+        let n = data.len();
+        pool.run(
+            || loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                // SAFETY: each index is claimed exactly once.
+                unsafe { *(ptr as *mut u64).add(i) = i as u64 + 1 };
+            },
+            2,
+        );
+        for (i, v) in data.iter().enumerate() {
+            assert_eq!(*v, i as u64 + 1);
+        }
+    }
+
+    #[test]
+    fn worker_panic_poisons_the_round_and_pool_survives() {
+        let pool = RoundPool::new(2);
+        // Panic only on pool threads, so the re-raise path in `run` is
+        // what surfaces it (a main-thread panic propagates directly).
+        let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.run(
+                || {
+                    let name = std::thread::current().name().map(str::to_string);
+                    if name.unwrap_or_default().starts_with("bfio-fleet-") {
+                        panic!("boom");
+                    }
+                },
+                2,
+            );
+        }));
+        assert!(caught.is_err(), "worker panic must surface from run()");
+        // Workers caught the unwind and parked: the pool still serves.
+        let hits = AtomicUsize::new(0);
+        pool.run(
+            || {
+                hits.fetch_add(1, Ordering::Relaxed);
+            },
+            2,
+        );
+        assert_eq!(hits.load(Ordering::Relaxed), 3);
+    }
+
+    #[test]
+    fn effective_threads_resolves_auto_and_clamps() {
+        assert!(effective_threads(0) >= 1);
+        assert_eq!(effective_threads(1), 1);
+        assert_eq!(effective_threads(7), 7);
+        assert_eq!(effective_threads(10_000), 64);
+    }
+}

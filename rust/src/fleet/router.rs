@@ -44,6 +44,11 @@ pub struct ReplicaView {
     pub min_load: f64,
     /// Σ prefill of queued (not yet admitted) requests.
     pub queued_prefill: f64,
+    /// Rounds until the replica's last admitted request completes
+    /// (exact — completion steps are known at admission; 0 when idle).
+    /// The Block-style predicted-completion lookahead signal
+    /// ([`crate::sim::engine::Engine::completion_horizon`]).
+    pub completion_horizon: u64,
     /// Replica-local virtual clock, seconds.
     pub clock_s: f64,
 }
@@ -69,6 +74,33 @@ pub trait FleetRouter: Send {
         replicas: &[ReplicaView],
         rng: &mut Rng,
     ) -> Option<usize>;
+}
+
+/// Accepting replica minimizing `cost` lexicographically: lowest cost
+/// first (within a 1e-12 epsilon), least outstanding work as the
+/// tie-break — the selection rule shared by both marginal-cost routers
+/// ([`TwoLevelBfIo`], [`PredictiveHorizon`]), factored out so their
+/// eps/tie-break semantics cannot drift apart.
+fn min_cost_accepting<C>(replicas: &[ReplicaView], cost: C) -> Option<usize>
+where
+    C: Fn(&ReplicaView) -> f64,
+{
+    let eps = 1e-12;
+    let mut best: Option<(&ReplicaView, f64)> = None;
+    for v in replicas.iter().filter(|v| v.accepting) {
+        let m = cost(v);
+        let better = match best {
+            None => true,
+            Some((bv, bm)) => {
+                m < bm - eps
+                    || (m < bm + eps && v.outstanding() < bv.outstanding())
+            }
+        };
+        if better {
+            best = Some((v, m));
+        }
+    }
+    best.map(|(v, _)| v.id)
 }
 
 /// Accepting replica with the least speed-normalized outstanding work
@@ -248,28 +280,69 @@ impl FleetRouter for TwoLevelBfIo {
         replicas: &[ReplicaView],
         _rng: &mut Rng,
     ) -> Option<usize> {
-        let eps = 1e-12;
-        let mut best: Option<(&ReplicaView, f64)> = None;
-        for v in replicas.iter().filter(|v| v.accepting) {
-            let m = self.marginal(v, prefill);
-            let better = match best {
-                None => true,
-                Some((bv, bm)) => {
-                    m < bm - eps
-                        || (m < bm + eps && v.outstanding() < bv.outstanding())
-                }
-            };
-            if better {
-                best = Some((v, m));
-            }
+        min_cost_accepting(replicas, |v| self.marginal(v, prefill))
+    }
+}
+
+/// Predictive two-level BF-IO (`bfio2h`): the ROADMAP's tier-1 router
+/// with Block-style predicted-completion lookahead.  Placement cost is
+/// the same marginal Eq. 19 step time as [`TwoLevelBfIo`]; the
+/// difference is the queueing term.  Where `bfio2` guesses the wait at
+/// a full replica from queue depth alone (an instantaneous signal),
+/// `bfio2h` reads the replica's *known* busy period — its
+/// [`ReplicaView::completion_horizon`], the exact number of rounds
+/// until the last admitted request completes — and charges
+/// `Δt_cur · horizon` scaled by the queued-ahead-per-slot share this
+/// request would join.  Two equally-full, equally-deep replicas thus
+/// split on which one actually frees slots sooner, which the
+/// instantaneous marginal cannot see.
+#[derive(Clone, Debug)]
+pub struct PredictiveHorizon {
+    pub c_overhead: f64,
+    pub t_token: f64,
+}
+
+impl PredictiveHorizon {
+    pub fn new(c_overhead: f64, t_token: f64) -> PredictiveHorizon {
+        PredictiveHorizon { c_overhead, t_token }
+    }
+
+    fn cost(&self, v: &ReplicaView, s: f64) -> f64 {
+        let speed = v.speed.max(1e-12);
+        let projected = v.max_load.max(v.min_load + s);
+        let dt = (self.c_overhead + self.t_token * projected) / speed;
+        if v.free_slots == 0 {
+            // Expected wait: the busy period is `horizon` rounds at the
+            // current step time (exact, not a queue-depth proxy); this
+            // request joins behind `queue_depth` others contending for
+            // `slots` slots as that period drains.
+            let cur = (self.c_overhead + self.t_token * v.max_load) / speed;
+            let share = (1.0 + v.queue_depth as f64) / v.slots.max(1) as f64;
+            dt + cur * v.completion_horizon as f64 * share
+        } else {
+            dt
         }
-        best.map(|(v, _)| v.id)
+    }
+}
+
+impl FleetRouter for PredictiveHorizon {
+    fn name(&self) -> String {
+        "BF-IO-2H".to_string()
+    }
+
+    fn route(
+        &mut self,
+        prefill: f64,
+        replicas: &[ReplicaView],
+        _rng: &mut Rng,
+    ) -> Option<usize> {
+        min_cost_accepting(replicas, |v| self.cost(v, prefill))
     }
 }
 
 /// Construct a fleet router by name:
-/// `wrr | low | powd:<d> | bfio2`.  `c_overhead`/`t_token` parameterize
-/// the Eq. 19 objective of `bfio2`.
+/// `wrr | low | powd:<d> | bfio2 | bfio2h`.  `c_overhead`/`t_token`
+/// parameterize the Eq. 19 objective of `bfio2`/`bfio2h`.
 pub fn router_by_name(
     name: &str,
     c_overhead: f64,
@@ -280,6 +353,9 @@ pub fn router_by_name(
         "low" | "least-outstanding" => Some(Box::new(LeastOutstanding)),
         "bfio2" | "two-level-bfio" => {
             Some(Box::new(TwoLevelBfIo::new(c_overhead, t_token)))
+        }
+        "bfio2h" | "two-level-bfio-horizon" => {
+            Some(Box::new(PredictiveHorizon::new(c_overhead, t_token)))
         }
         _ => name.strip_prefix("powd:").and_then(|d| {
             d.parse()
@@ -310,19 +386,21 @@ mod tests {
             max_load: load_sum / 2.0,
             min_load: load_sum / 2.0,
             queued_prefill: 0.0,
+            completion_horizon: 0,
             clock_s: 0.0,
         }
     }
 
     #[test]
     fn registry_constructs_all() {
-        for n in ["wrr", "low", "powd:2", "bfio2"] {
+        for n in ["wrr", "low", "powd:2", "bfio2", "bfio2h"] {
             assert!(router_by_name(n, 1.0, 1.0).is_some(), "router {n}");
         }
         assert!(router_by_name("nope", 1.0, 1.0).is_none());
         assert!(router_by_name("powd:0", 1.0, 1.0).is_none());
         assert!(router_by_name("powd:x", 1.0, 1.0).is_none());
         assert_eq!(router_by_name("powd:3", 1.0, 1.0).unwrap().name(), "Pow3Replicas");
+        assert_eq!(router_by_name("bfio2h", 1.0, 1.0).unwrap().name(), "BF-IO-2H");
     }
 
     #[test]
@@ -401,6 +479,37 @@ mod tests {
         fast.id = 2;
         fast.speed = 4.0;
         assert_eq!(r.route(50.0, &[a, b, fast], &mut rng), Some(2));
+    }
+
+    #[test]
+    fn bfio2h_splits_full_ties_on_completion_horizon() {
+        // Two identically loaded, identically deep, full replicas; the
+        // instantaneous marginal (bfio2) cannot tell them apart, but
+        // replica 1's batch drains in 2 rounds vs replica 0's 40.
+        let mut far = view(0, 1.0, 100.0);
+        far.free_slots = 0;
+        far.queue_depth = 4;
+        far.completion_horizon = 40;
+        let mut near = view(1, 1.0, 100.0);
+        near.free_slots = 0;
+        near.queue_depth = 4;
+        near.completion_horizon = 2;
+        let mut rng = Rng::new(1);
+        let mut r = PredictiveHorizon::new(0.0, 1.0);
+        assert_eq!(r.route(10.0, &[far.clone(), near.clone()], &mut rng), Some(1));
+        // with free slots the marginal dominates, exactly as bfio2:
+        // fits-below-max beats balanced-but-lower-sum
+        let mut a = view(2, 1.0, 110.0);
+        a.max_load = 100.0;
+        a.min_load = 10.0;
+        a.completion_horizon = 100;
+        let mut b = view(3, 1.0, 160.0);
+        b.max_load = 80.0;
+        b.min_load = 80.0;
+        b.completion_horizon = 1;
+        assert_eq!(r.route(50.0, &[a, b], &mut rng), Some(2));
+        // a full replica with a long horizon loses to an open one
+        assert_eq!(r.route(10.0, &[far, view(4, 1.0, 100.0)], &mut rng), Some(4));
     }
 
     #[test]

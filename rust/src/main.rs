@@ -2,10 +2,10 @@
 //!
 //! ```text
 //! bfio sim       --policy bfio:40 --g 64 --b 24 --steps 600   one simulation
-//! bfio fleet     --replicas 8 --workers 16 --routers wrr,low,powd:2,bfio2
-//!                [--shapes 8x16,4x32,...]                     fleet vs monolith
+//! bfio fleet     --replicas 8 --workers 16 --routers wrr,low,powd:2,bfio2,bfio2h
+//!                [--shapes 8x16,4x32,...] [--threads N]       fleet vs monolith
 //! bfio autoscale --replicas 3 --policies static,target,energy
-//!                [--smoke]                                    elastic vs static
+//!                [--smoke] [--threads N]                      elastic vs static
 //! bfio repro     <table1|fig1|fig2|fig6|fig7|fig9|fig10|burstgpt|
 //!                 adversarial|predictors|drift|all> [--full]  paper artifacts
 //! bfio theory    <thm1|thm2|thm3|energy|all>                  theorem checks
@@ -171,6 +171,8 @@ fn cmd_fleet(args: &Args) -> Result<()> {
     );
     scale.seed = args.u64_or("seed", scale.seed);
     scale.policy = args.get_or("policy", "bfio:8").to_string();
+    // Round-execution parallelism: 0 = all cores, 1 = serial.
+    scale.threads = args.usize_or("threads", scale.threads);
     if let Some(v) = args.flag("speeds") {
         scale.speeds = parse_speeds(v, replicas)?;
     }
@@ -178,7 +180,7 @@ fn cmd_fleet(args: &Args) -> Result<()> {
         scale.shapes = Some(parse_shapes(v, replicas)?);
     }
     let routers: Vec<String> = args
-        .get_or("routers", "wrr,low,powd:2,bfio2")
+        .get_or("routers", "wrr,low,powd:2,bfio2,bfio2h")
         .split(',')
         .filter(|t| !t.is_empty())
         .map(|t| t.trim().to_string())
@@ -216,6 +218,7 @@ fn cmd_autoscale(args: &Args) -> Result<()> {
     scale.min_replicas = args.usize_or("min-replicas", scale.min_replicas);
     scale.cooldown_rounds = args.u64_or("cooldown", scale.cooldown_rounds);
     scale.dwell_rounds = args.u64_or("dwell", scale.dwell_rounds);
+    scale.threads = args.usize_or("threads", scale.threads);
     let policies: Vec<String> = args
         .get_or("policies", "static,target,energy")
         .split(',')
@@ -403,6 +406,9 @@ fn cmd_gateway(args: &Args) -> Result<()> {
                 step_delay: Duration::from_millis(args.u64_or("step-delay-ms", 1)),
                 batch_window: Duration::from_millis(args.u64_or("batch-window-ms", 5)),
                 autoscale,
+                // `--threads` is the HTTP pool; the fleet core's
+                // round-execution parallelism gets its own flag.
+                threads: args.usize_or("fleet-threads", 0),
                 ..FleetBackendConfig::default()
             };
             Arc::new(FleetBackend::new(cfg)?)

@@ -273,6 +273,13 @@ impl<T, P> Engine<T, P> {
         self.counts[g]
     }
 
+    /// Per-worker active counts (one pass, no per-index calls) — the
+    /// cheap view fleet snapshots and cached replica views are built
+    /// from; `free` per worker is `B − counts[g]`.
+    pub fn active_counts(&self) -> &[usize] {
+        &self.counts
+    }
+
     /// Free batch slots on worker `g`.
     pub fn free_slots(&self, g: usize) -> usize {
         self.cfg.b - self.counts[g]

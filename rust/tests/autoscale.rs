@@ -162,6 +162,111 @@ fn controller_never_flaps_on_constant_load() {
     }
 }
 
+/// The no-flap scenario re-run under parallel round execution
+/// (`threads = 8`): the controller must still settle and never act, and
+/// the whole closed-loop run must match the serial one — the parallel
+/// executor feeds the controller the same signal every round.
+#[test]
+fn fleet_parity_no_flap_rerun_under_parallel_rounds() {
+    let sampler = HomogeneousSampler { s_min: 10, s_max: 20, o: 8 };
+    let arrivals = ArrivalProcess::Fixed { per_step: 2, initial_backlog: 12 };
+    let mut rng = Rng::new(11);
+    let trace = generate_trace(&sampler, &arrivals, 400, &mut rng);
+    for policy in ["target", "energy"] {
+        let auto = AutoscaleConfig {
+            policy: policy.to_string(),
+            min_replicas: 1,
+            max_replicas: 3,
+            cooldown_rounds: 10,
+            dwell_rounds: 3,
+            add_speed: 1.0,
+        };
+        let serial_cfg = FleetConfig {
+            seed: 3,
+            threads: 1,
+            ..FleetConfig::uniform(3, 2, 4, "jsq")
+        };
+        let serial = run_autoscaled(&serial_cfg, "low", &auto, &trace, &[]).unwrap();
+        let par_cfg = FleetConfig { threads: 8, ..serial_cfg.clone() };
+        let par = run_autoscaled(&par_cfg, "low", &auto, &trace, &[]).unwrap();
+        assert_eq!(par.fleet.completed as usize, trace.len(), "{policy}");
+        assert!(
+            par.actions.is_empty(),
+            "{policy}: controller flapped under threads=8: {:?}",
+            par.actions
+        );
+        assert_eq!(serial.fleet.completed, par.fleet.completed, "{policy}");
+        assert_eq!(serial.fleet.rounds, par.fleet.rounds, "{policy}");
+        assert_eq!(serial.fleet.steps, par.fleet.steps, "{policy}");
+        assert_eq!(serial.controller.ticks, par.controller.ticks, "{policy}");
+        assert!(
+            (serial.fleet.makespan_s - par.fleet.makespan_s).abs()
+                <= 1e-9 * serial.fleet.makespan_s.max(1.0),
+            "{policy}: makespan {} vs {}",
+            serial.fleet.makespan_s,
+            par.fleet.makespan_s
+        );
+    }
+}
+
+// ---------------------------------------------------------------------
+// (b2) zero-alloc signal path: steady-state ticks never snapshot
+// ---------------------------------------------------------------------
+
+/// The PR-2 zero-alloc steady state, restored: `Controller::tick`
+/// samples the core's borrowed replica views, so a full closed-loop run
+/// — ticks plus rounds, serial or parallel — performs **zero** calls to
+/// the cold-path `FleetCore::snapshot` API (O(R·G) allocation per
+/// call, which used to run twice per round).
+#[test]
+fn controller_ticks_take_zero_snapshots() {
+    use bfio_serve::autoscale::Controller;
+    use bfio_serve::fleet::FleetCore;
+    for threads in [1usize, 2] {
+        let cfg = FleetConfig {
+            seed: 1,
+            threads,
+            ..FleetConfig::uniform(3, 2, 4, "jsq")
+        };
+        let router = cfg.router("low").unwrap();
+        let mut core: FleetCore<u32, ()> =
+            FleetCore::new(cfg.clone(), router).unwrap();
+        let auto = AutoscaleConfig {
+            policy: "energy".to_string(),
+            cooldown_rounds: 5,
+            dwell_rounds: 2,
+            ..AutoscaleConfig::default()
+        };
+        let mut controller = Controller::new(&auto, &cfg).unwrap();
+        let trace = geometric_trace(5, 2, 10, 40);
+        let mut ptr = 0usize;
+        let mut out = Vec::new();
+        for round in 0..400u64 {
+            while ptr < trace.len() && trace[ptr].arrival_step <= round {
+                core.submit(trace[ptr].prefill, trace[ptr].arrival_step, ptr as u32);
+                ptr += 1;
+            }
+            controller.tick(&mut core);
+            core.run_round(
+                &|_, idx| {
+                    let r = &trace[idx as usize];
+                    (r.id, r.decode_len, ())
+                },
+                &mut out,
+            );
+            if core.is_idle() && ptr >= trace.len() {
+                break;
+            }
+        }
+        assert!(controller.state().ticks > 0);
+        assert_eq!(
+            core.snapshots_taken(),
+            0,
+            "threads={threads}: a steady-state tick used the cold-path snapshot API"
+        );
+    }
+}
+
 // ---------------------------------------------------------------------
 // (c) static policy ≡ open-loop run_fleet, to 1e-9
 // ---------------------------------------------------------------------

@@ -19,7 +19,7 @@ use std::time::Duration;
 use bfio_serve::config::SimConfig;
 use bfio_serve::fleet::{
     run_fleet, FleetBackend, FleetBackendConfig, FleetConfig, FleetEvent,
-    ReplicaState,
+    FleetResult, ReplicaState,
 };
 use bfio_serve::gateway::http as ghttp;
 use bfio_serve::gateway::loadgen;
@@ -29,7 +29,7 @@ use bfio_serve::util::json::Json;
 use bfio_serve::util::prop::Prop;
 use bfio_serve::util::rng::Rng;
 use bfio_serve::workload::{
-    generate_trace, ArrivalProcess, GeometricSampler, Request,
+    generate_trace, ArrivalProcess, Drift, GeometricSampler, Request,
 };
 
 fn trace_of(seed: u64, per_step: usize, backlog: usize, steps: u64) -> Vec<Request> {
@@ -51,7 +51,7 @@ fn recording(cfg: FleetConfig) -> FleetConfig {
 
 #[test]
 fn prop_every_request_admitted_to_exactly_one_replica() {
-    let routers = ["wrr", "low", "powd:2", "bfio2"];
+    let routers = ["wrr", "low", "powd:2", "bfio2", "bfio2h"];
     Prop::new(25).check(
         "one-replica-admission",
         |r| {
@@ -238,7 +238,7 @@ fn heterogeneous_shapes_serve_the_trace_under_every_router() {
     // everything completes exactly once and the per-replica snapshots
     // report the configured shapes.
     let trace = trace_of(51, 3, 15, 25);
-    for router in ["wrr", "low", "powd:2", "bfio2"] {
+    for router in ALL_ROUTERS {
         let cfg = recording(FleetConfig {
             seed: 13,
             shapes: Some(vec![(1, 2), (3, 2), (2, 4)]),
@@ -294,6 +294,149 @@ fn heterogeneous_speeds_shift_work_to_fast_replicas() {
     // speed-aware routing keeps the virtual clocks far closer than the
     // 4x raw speed gap
     assert!(res.clock_ratio < 2.0, "clock ratio {}", res.clock_ratio);
+}
+
+// ---------------------------------------------------------------------
+// Parallel ≡ serial parity (the `fleet_parity` CI gate)
+// ---------------------------------------------------------------------
+
+const ALL_ROUTERS: [&str; 5] = ["wrr", "low", "powd:2", "bfio2", "bfio2h"];
+
+/// Every field of two `FleetResult`s must agree: integers and
+/// placements exactly, floats to ≤1e-9 relative (replicas run the same
+/// per-slot code whatever the thread count, so in practice the floats
+/// are bit-identical too — the tolerance only absorbs a hypothetical
+/// future reassociation).
+fn assert_fleet_results_match(what: &str, a: &FleetResult, b: &FleetResult) {
+    let close = |x: f64, y: f64, field: &str| {
+        let scale = 1.0_f64.max(x.abs()).max(y.abs());
+        assert!(
+            (x - y).abs() <= 1e-9 * scale,
+            "{what}: {field}: serial {x:.17e} vs parallel {y:.17e}"
+        );
+    };
+    assert_eq!(a.router, b.router, "{what}: router");
+    assert_eq!(a.policy, b.policy, "{what}: policy");
+    assert_eq!(a.rounds, b.rounds, "{what}: rounds");
+    assert_eq!(a.steps, b.steps, "{what}: steps");
+    assert_eq!(a.submitted, b.submitted, "{what}: submitted");
+    assert_eq!(a.completed, b.completed, "{what}: completed");
+    assert_eq!(a.leftover_waiting, b.leftover_waiting, "{what}: leftover");
+    close(a.makespan_s, b.makespan_s, "makespan");
+    close(a.clock_ratio, b.clock_ratio, "clock_ratio");
+    close(a.energy_j, b.energy_j, "energy");
+    close(a.avg_imbalance, b.avg_imbalance, "avg_imbalance");
+    close(a.tpot_s, b.tpot_s, "tpot");
+    close(a.mean_queue_wait_s, b.mean_queue_wait_s, "queue_wait");
+    close(a.throughput_tps, b.throughput_tps, "throughput");
+    close(a.total_tokens, b.total_tokens, "tokens");
+    assert_eq!(a.per_replica.len(), b.per_replica.len(), "{what}: replicas");
+    for (ra, rb) in a.per_replica.iter().zip(&b.per_replica) {
+        let who = format!("{what}: replica {}", ra.id);
+        assert_eq!(ra.id, rb.id, "{who}: id");
+        assert_eq!(ra.state, rb.state, "{who}: state");
+        assert_eq!(ra.routed, rb.routed, "{who}: routed");
+        assert_eq!(ra.admitted, rb.admitted, "{who}: admitted");
+        assert_eq!(ra.completed, rb.completed, "{who}: completed");
+        assert_eq!(ra.executed, rb.executed, "{who}: executed");
+        assert_eq!(ra.leftover_waiting, rb.leftover_waiting, "{who}: leftover");
+        close(ra.clock_s, rb.clock_s, &format!("replica {} clock", ra.id));
+        close(
+            ra.report.avg_imbalance,
+            rb.report.avg_imbalance,
+            &format!("replica {} imbalance", ra.id),
+        );
+        close(
+            ra.report.total_energy_j,
+            rb.report.total_energy_j,
+            &format!("replica {} energy", ra.id),
+        );
+        assert_eq!(
+            ra.report.completions.len(),
+            rb.report.completions.len(),
+            "{who}: completion count"
+        );
+        for (ca, cb) in ra.report.completions.iter().zip(&rb.report.completions) {
+            assert_eq!(ca.id, cb.id, "{who}: completion order");
+            assert_eq!(ca.worker, cb.worker, "{who}: id {} placement", ca.id);
+            assert_eq!(ca.tokens, cb.tokens, "{who}: id {} tokens", ca.id);
+            close(ca.arrival_clock, cb.arrival_clock, "arrival_clock");
+            close(ca.admit_clock, cb.admit_clock, "admit_clock");
+            close(ca.finish_clock, cb.finish_clock, "finish_clock");
+        }
+    }
+}
+
+/// All five routers × {Unit, Cycle, Decay} drift, `threads ∈ {1, 2, 8}`:
+/// the parallel round executor must reproduce the serial path exactly —
+/// replicas own their policy/recorder/rng, so fan-out is a wall-clock
+/// optimization, never a semantic one.
+#[test]
+fn fleet_parity_parallel_matches_serial_across_routers_and_drifts() {
+    let drifts = [
+        ("unit", Drift::Unit),
+        ("cycle", Drift::Cycle(vec![2.0, 0.0, 1.0])),
+        ("decay", Drift::Decay { d0: 1.5, rate: 0.8 }),
+    ];
+    let trace = trace_of(17, 3, 12, 20);
+    for router in ALL_ROUTERS {
+        for (dname, drift) in &drifts {
+            let cfg = recording(FleetConfig {
+                seed: 23,
+                drift: drift.clone(),
+                threads: 1,
+                ..FleetConfig::uniform(3, 2, 2, "jsq")
+            });
+            let serial = run_fleet(&cfg, router, &trace, &[]).unwrap();
+            assert_eq!(serial.completed as usize, trace.len(), "{router}/{dname}");
+            for threads in [2usize, 8] {
+                let pcfg = FleetConfig { threads, ..cfg.clone() };
+                let par = run_fleet(&pcfg, router, &trace, &[]).unwrap();
+                assert_fleet_results_match(
+                    &format!("{router}/{dname}/threads={threads}"),
+                    &serial,
+                    &par,
+                );
+            }
+        }
+    }
+}
+
+/// Parity must survive the hard cases together: lifecycle churn
+/// (drain / add / remove mid-trace), heterogeneous per-replica shapes,
+/// an age-varying drift, and a lookahead tier-2 policy.
+#[test]
+fn fleet_parity_holds_under_churn_and_heterogeneous_shapes() {
+    let trace = trace_of(61, 3, 10, 30);
+    let events = vec![
+        FleetEvent::Drain { round: 8, replica: 0 },
+        FleetEvent::Add { round: 12, speed: 1.5 },
+        FleetEvent::Remove { round: 18, replica: 1 },
+    ];
+    for router in ALL_ROUTERS {
+        let cfg = recording(FleetConfig {
+            seed: 31,
+            drift: Drift::Cycle(vec![1.0, 2.0]),
+            shapes: Some(vec![(1, 2), (3, 2), (2, 4)]),
+            threads: 1,
+            ..FleetConfig::uniform(3, 2, 2, "bfio:4")
+        });
+        let serial = run_fleet(&cfg, router, &trace, &events).unwrap();
+        assert_eq!(
+            serial.completed as usize,
+            trace.len(),
+            "{router}: churn loses nothing"
+        );
+        for threads in [2usize, 8] {
+            let pcfg = FleetConfig { threads, ..cfg.clone() };
+            let par = run_fleet(&pcfg, router, &trace, &events).unwrap();
+            assert_fleet_results_match(
+                &format!("{router}/churn+shapes/threads={threads}"),
+                &serial,
+                &par,
+            );
+        }
+    }
 }
 
 // ---------------------------------------------------------------------
