@@ -107,6 +107,12 @@ pub struct ControllerState {
     /// Latest decision label (`hold | up | down | paused`).
     pub last_decision: String,
     pub ticks: u64,
+    /// Wall seconds the most recent control tick took (sample + decide
+    /// + act; observability only, never fed into virtual time).
+    pub last_tick_wall_s: f64,
+    /// Straggler gap from the latest observation: `max − min` of the
+    /// live replicas' virtual clocks, seconds.
+    pub straggler_gap_s: f64,
 }
 
 /// The per-round autoscale controller.  Generic over the core's
@@ -136,6 +142,8 @@ pub struct Controller {
     last_decision: String,
     last_round: u64,
     ticks: u64,
+    last_tick_wall_s: f64,
+    straggler_gap_s: f64,
 }
 
 impl Controller {
@@ -176,6 +184,8 @@ impl Controller {
             last_decision: "hold".to_string(),
             last_round: 0,
             ticks: 0,
+            last_tick_wall_s: 0.0,
+            straggler_gap_s: 0.0,
         })
     }
 
@@ -206,6 +216,7 @@ impl Controller {
     /// allocation and zero [`FleetCore::snapshot`] calls per tick
     /// (guarded by [`FleetCore::snapshots_taken`] in the tests).
     pub fn tick<T, P>(&mut self, core: &mut FleetCore<T, P>) -> Option<AppliedAction> {
+        let tick_start = std::time::Instant::now();
         self.ticks += 1;
         self.last_round = core.round();
         signal::sample_core(
@@ -219,8 +230,10 @@ impl Controller {
         self.accepting = sig.accepting;
         self.live = sig.live;
         self.utilization = sig.utilization;
+        self.straggler_gap_s = sig.straggler_gap_s;
         if self.paused {
             self.last_decision = "paused".to_string();
+            self.last_tick_wall_s = tick_start.elapsed().as_secs_f64();
             return None;
         }
         let decision = self.policy.decide(sig);
@@ -241,6 +254,7 @@ impl Controller {
             }
             self.history.push(a);
         }
+        self.last_tick_wall_s = tick_start.elapsed().as_secs_f64();
         acted
     }
 
@@ -260,6 +274,8 @@ impl Controller {
             cooldown_remaining: self.actuator.cooldown_remaining(self.last_round),
             last_decision: self.last_decision.clone(),
             ticks: self.ticks,
+            last_tick_wall_s: self.last_tick_wall_s,
+            straggler_gap_s: self.straggler_gap_s,
         }
     }
 }

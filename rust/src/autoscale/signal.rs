@@ -84,6 +84,10 @@ pub struct FleetSignal {
     /// `(active + queued + overflow) / accepting_slots`.
     pub utilization: f64,
     pub max_completion_horizon: u64,
+    /// Straggler gap: spread `max − min` of the virtual clocks of live
+    /// replicas that have executed at least one round, seconds (0 when
+    /// fewer than two have stepped).
+    pub straggler_gap_s: f64,
     /// Live replicas only (removed replicas are dropped).
     pub replicas: Vec<ReplicaSignal>,
 }
@@ -170,9 +174,15 @@ pub fn sample_into<'a>(
     let mut total_active = 0usize;
     let mut total_queued = 0usize;
     let mut max_horizon = 0u64;
+    let mut clock_min = f64::INFINITY;
+    let mut clock_max = f64::NEG_INFINITY;
     for r in replicas {
         if r.state == ReplicaState::Removed {
             continue;
+        }
+        if r.executed > 0 {
+            clock_min = clock_min.min(r.clock_s);
+            clock_max = clock_max.max(r.clock_s);
         }
         let rs = replica_signal(&r, t_token, c_overhead, power);
         if rs.accepting {
@@ -200,6 +210,11 @@ pub fn sample_into<'a>(
         0.0
     };
     sig.max_completion_horizon = max_horizon;
+    sig.straggler_gap_s = if clock_max > clock_min {
+        clock_max - clock_min
+    } else {
+        0.0
+    };
 }
 
 /// Sample one controller tick straight off the live core — no

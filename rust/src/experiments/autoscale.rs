@@ -138,6 +138,8 @@ pub struct AutoscaleBenchRow {
     pub overhead_j: f64,
     pub tpot_s: f64,
     pub mean_queue_wait_s: f64,
+    /// Fraction of completions meeting the TTFT/TPOT SLO targets.
+    pub slo_goodput: f64,
     /// Σ barrier steps executed across replicas.
     pub replica_rounds: u64,
     pub makespan_s: f64,
@@ -179,6 +181,7 @@ fn row_of(policy: &str, res: &AutoscaleResult, run_ms: f64) -> AutoscaleBenchRow
             .max(0.0),
         tpot_s: res.fleet.tpot_s,
         mean_queue_wait_s: res.fleet.mean_queue_wait_s,
+        slo_goodput: res.fleet.slo_goodput,
         replica_rounds: res.replica_rounds,
         makespan_s: res.fleet.makespan_s,
         adds: res.controller.adds,
@@ -225,6 +228,7 @@ fn row_json(r: &AutoscaleBenchRow, base: &AutoscaleBenchRow) -> Json {
         ("overhead_j", num(r.overhead_j)),
         ("tpot_s", num(r.tpot_s)),
         ("mean_queue_wait_s", num(r.mean_queue_wait_s)),
+        ("slo_goodput", num(r.slo_goodput)),
         ("replica_rounds", num(r.replica_rounds as f64)),
         ("makespan_s", num(r.makespan_s)),
         ("adds", num(r.adds as f64)),

@@ -112,6 +112,8 @@ pub struct FleetBenchRow {
     pub tpot_s: f64,
     pub throughput_tps: f64,
     pub energy_mj: f64,
+    /// Fraction of completions meeting the TTFT/TPOT SLO targets.
+    pub slo_goodput: f64,
     pub completed: u64,
     /// Post-warmup metered window (max across replicas), so the fleet
     /// and monolith rows measure the same thing (`Report::wall_time_s`
@@ -138,6 +140,7 @@ fn row_json(r: &FleetBenchRow, mono: &FleetBenchRow) -> Json {
         ("tpot_s", num(r.tpot_s)),
         ("throughput_tps", num(r.throughput_tps)),
         ("energy_mj", num(r.energy_mj)),
+        ("slo_goodput", num(r.slo_goodput)),
         ("completed", num(r.completed as f64)),
         ("makespan_s", num(r.makespan_s)),
         ("run_ms", num(r.run_ms)),
@@ -199,6 +202,7 @@ pub fn run_fleet_rows(
             tpot_s: res.tpot_s,
             throughput_tps: res.throughput_tps,
             energy_mj: res.energy_j / 1e6,
+            slo_goodput: res.slo_goodput,
             completed: res.completed,
             makespan_s: window_s,
             run_ms: parallel_run_ms,
@@ -236,6 +240,7 @@ pub fn run_fleet_rows(
         tpot_s: res.report.tpot_s,
         throughput_tps: res.report.throughput_tps,
         energy_mj: res.report.energy_mj(),
+        slo_goodput: res.report.slo_goodput,
         completed: res.completed,
         makespan_s: res.report.wall_time_s,
         run_ms: mono_ms,

@@ -13,7 +13,7 @@
 use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Context, Result};
 
@@ -25,6 +25,8 @@ use crate::gateway::backend::{
 };
 use crate::gateway::sim::gen_tokens;
 use crate::metrics::imbalance;
+use crate::obs::trace::NO_INDEX;
+use crate::obs::{SloConfig, SpanEvent, SpanKind, SpanLog, Tracer};
 use crate::sim::predictor::Predictor;
 use crate::workload::Drift;
 
@@ -62,6 +64,14 @@ pub struct FleetBackendConfig {
     /// available parallelism, `1` = serial; `bfio gateway --backend
     /// fleet --fleet-threads N`).  Results are identical either way.
     pub threads: usize,
+    /// SLO targets for the goodput metric (`--slo-ttft` / `--slo-tpot`).
+    pub slo: SloConfig,
+    /// Enable the request lifecycle tracer (`bfio gateway --trace`).
+    /// Off by default: tracing is strictly opt-in.
+    pub trace: bool,
+    /// Span capacity of the shared flight-recorder log (and of each
+    /// per-replica ring); oldest spans are overwritten when full.
+    pub trace_buf: usize,
 }
 
 impl Default for FleetBackendConfig {
@@ -82,6 +92,9 @@ impl Default for FleetBackendConfig {
             batch_window: Duration::from_millis(5),
             autoscale: None,
             threads: 0,
+            slo: SloConfig::default(),
+            trace: false,
+            trace_buf: 4096,
         }
     }
 }
@@ -107,6 +120,7 @@ impl FleetBackendConfig {
             warmup_rounds: 0,
             record_completions: false,
             predictor: Predictor::Oracle,
+            slo: self.slo,
         }
     }
 }
@@ -137,6 +151,8 @@ pub struct FleetBackend {
     tx: Mutex<Sender<Msg>>,
     snap: Arc<Mutex<Snapshot>>,
     handle: Mutex<Option<JoinHandle<()>>>,
+    /// Shared flight-recorder log when `--trace` is on (`/v0/trace`).
+    trace_log: Option<Arc<Mutex<SpanLog>>>,
 }
 
 impl FleetBackend {
@@ -146,8 +162,26 @@ impl FleetBackend {
             .router(&cfg.router)
             .ok_or_else(|| anyhow!("unknown fleet router {:?}", cfg.router))?;
         let router_label = router.name();
-        let core: FleetCore<Pending, Sender<Completion>> =
+        let mut core: FleetCore<Pending, Sender<Completion>> =
             FleetCore::new(fleet_cfg.clone(), router)?;
+        // Opt-in lifecycle tracing: one shared span log, drained from
+        // the per-replica rings each round; the scheduler keeps its own
+        // ring for the arrival/route spans it records at submit time.
+        let trace_log = if cfg.trace {
+            Some(core.enable_tracing(cfg.trace_buf.max(1)))
+        } else {
+            None
+        };
+        let tracer = match &trace_log {
+            Some(log) => {
+                let epoch = log
+                    .lock()
+                    .map(|l| l.epoch)
+                    .unwrap_or_else(|_| Instant::now());
+                Tracer::new(cfg.trace_buf.max(1), epoch)
+            }
+            None => Tracer::disabled(),
+        };
         let controller = match &cfg.autoscale {
             Some(auto) => Some(Controller::new(auto, &fleet_cfg)?),
             None => None,
@@ -184,6 +218,8 @@ impl FleetBackend {
             core,
             controller,
             loads_scratch,
+            tracer,
+            trace_log: trace_log.clone(),
         };
         let handle = std::thread::spawn(move || scheduler.run());
         Ok(FleetBackend {
@@ -191,6 +227,7 @@ impl FleetBackend {
             tx: Mutex::new(tx),
             snap,
             handle: Mutex::new(Some(handle)),
+            trace_log,
         })
     }
 }
@@ -243,6 +280,12 @@ impl Backend for FleetBackend {
     fn autoscaler(&self) -> Option<ControllerState> {
         self.snap.lock().ok().and_then(|s| s.autoscaler.clone())
     }
+
+    fn trace_events(&self, last: usize, id: Option<u64>) -> Option<Vec<SpanEvent>> {
+        let log = self.trace_log.as_ref()?;
+        let log = log.lock().ok()?;
+        Some(log.last(last, id))
+    }
 }
 
 impl Drop for FleetBackend {
@@ -269,13 +312,61 @@ struct Scheduler {
     /// `fill_snapshot` (the published `Snapshot` itself is updated in
     /// place under its mutex, reusing its own buffers).
     loads_scratch: Vec<f64>,
+    /// Scheduler-side flight recorder for arrival/route spans (disabled
+    /// unless `--trace`); drained into `trace_log` once per round.
+    tracer: Tracer,
+    trace_log: Option<Arc<Mutex<SpanLog>>>,
 }
 
 impl Scheduler {
     fn submit(&mut self, p: Pending) {
         let prefill = p.req.prompt_tokens.len().max(1) as f64;
         let round = self.core.round();
-        self.core.submit(prefill, round, p);
+        let id = p.req.id;
+        let enabled = self.tracer.is_enabled();
+        let chosen = self.core.submit(prefill, round, p);
+        if enabled {
+            // Arrival carries the prefill cost; the route span records
+            // the chosen replica and the router's view of its cost at
+            // decision time.  Overflow-parked requests (no accepting
+            // replica) get an arrival span with no route.
+            match chosen {
+                Some(r) => {
+                    let (virt, cost) = self
+                        .core
+                        .view_of(r)
+                        .map(|v| (v.clock_s, v.load_sum + v.queued_prefill))
+                        .unwrap_or((0.0, 0.0));
+                    self.tracer.record(
+                        SpanKind::Arrival,
+                        id,
+                        r as u32,
+                        NO_INDEX,
+                        virt,
+                        prefill,
+                        0.0,
+                    );
+                    self.tracer.record(
+                        SpanKind::Route,
+                        id,
+                        r as u32,
+                        NO_INDEX,
+                        virt,
+                        cost,
+                        0.0,
+                    );
+                }
+                None => self.tracer.record(
+                    SpanKind::Arrival,
+                    id,
+                    NO_INDEX,
+                    NO_INDEX,
+                    0.0,
+                    prefill,
+                    0.0,
+                ),
+            }
+        }
     }
 
     /// Apply one admin command against the live core.  Manual lifecycle
@@ -440,6 +531,17 @@ impl Scheduler {
             // completion then reads /metrics sees itself counted.
             self.publish();
 
+            // Merge this round's arrival/route spans into the shared
+            // log before responses go out, so a client that sees its
+            // completion finds its full span chain on /v0/trace.
+            if self.tracer.is_enabled() {
+                if let Some(log) = &self.trace_log {
+                    if let Ok(mut l) = log.lock() {
+                        self.tracer.drain_into(&mut l);
+                    }
+                }
+            }
+
             for f in out.drain(..) {
                 let tpot = if f.tokens > 0 {
                     (f.finish_clock - f.admit_clock) / f.tokens as f64
@@ -564,6 +666,11 @@ fn fill_snapshot<T, P>(
     // Overflow-parked requests (no accepting replica) are queued work
     // too — exactly the state where the queue gauge matters most.
     stats.queue_depth += core.overflow_len();
+    // Merged request-level sketches (exact DDSketch bucket addition
+    // across replicas) + the always-on round profile, for /metrics.
+    core.merge_obs_into(&mut stats.obs.req);
+    stats.obs.rounds.copy_from(core.profiler());
+    stats.obs.slo = core.slo();
     s.autoscaler = autoscaler;
 }
 
@@ -699,6 +806,53 @@ mod tests {
         assert_eq!(be.replicas().len(), 3);
         assert_eq!(be.workers().len(), 6);
         assert!(!be.admin(AdminCmd::Add { speed: -1.0 }).unwrap().applied);
+    }
+
+    #[test]
+    fn trace_chain_and_obs_roundtrip() {
+        // Tracing off (the default): no span store, and the snapshot
+        // still carries the always-on sketches + round profile.
+        let be = FleetBackend::new(fast_cfg("low", "jsq")).unwrap();
+        let _ = be
+            .complete(CompletionRequest {
+                id: 5,
+                prompt_tokens: vec![1, 2],
+                max_tokens: 2,
+            })
+            .unwrap();
+        assert!(be.trace_events(10, None).is_none());
+        let st = be.stats();
+        assert!(st.obs.req.ttft.count() >= 1);
+        assert!(st.obs.req.slo_total >= 1);
+        assert!(st.obs.rounds.rounds >= 2);
+        assert!(st.obs.rounds.last_threads_engaged >= 1);
+        let g = st.obs.req.goodput();
+        assert!((0.0..=1.0).contains(&g));
+
+        // Tracing on: the full tier-1 + tier-2 lifecycle chain for a
+        // known request id, in causal order.
+        let cfg = FleetBackendConfig { trace: true, ..fast_cfg("low", "jsq") };
+        let be = FleetBackend::new(cfg).unwrap();
+        for id in [21u64, 22, 23] {
+            let c = be
+                .complete(CompletionRequest {
+                    id,
+                    prompt_tokens: vec![3, 1, 4],
+                    max_tokens: 2,
+                })
+                .unwrap();
+            assert_eq!(c.id, id);
+        }
+        let evs = be.trace_events(256, Some(22)).expect("tracing enabled");
+        let kinds: Vec<&str> = evs.iter().map(|e| e.kind.label()).collect();
+        assert_eq!(
+            kinds,
+            vec!["arrival", "route", "admit", "first_token", "finish"]
+        );
+        assert!(evs.iter().all(|e| e.request_id == 22));
+        let finish = evs.last().unwrap();
+        assert!(finish.a > 0.0, "finish span carries TPOT");
+        assert_eq!(finish.b, 2.0, "finish span carries the token count");
     }
 
     #[test]

@@ -22,11 +22,14 @@
 //! the rotation empty.
 
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
 
 use anyhow::{anyhow, ensure, Result};
 
 use crate::config::PowerConfig;
 use crate::metrics::{CompletionRecord, Recorder};
+use crate::obs::{RequestObs, RoundProfiler, SloConfig, SpanKind, SpanLog, Tracer};
 use crate::policies::{by_name, Policy};
 use crate::sim::engine::{Engine, EngineConfig, Finished};
 use crate::util::rng::Rng;
@@ -90,6 +93,20 @@ struct ReplicaSlot<T, P> {
     /// This round's completions, merged into the caller's `out` in
     /// replica-id order after every replica has stepped.
     out: Vec<FleetFinished<P>>,
+    /// Slot-owned flight recorder for lifecycle spans (admit /
+    /// first-token / finish).  Owning it per slot keeps span recording
+    /// lock-free on pool threads; [`FleetCore::run_round`] drains every
+    /// tracer into the shared [`SpanLog`] once per round, in slot-id
+    /// order.  The disabled no-op instance unless tracing is on.
+    tracer: Tracer,
+}
+
+/// Shared destination for lifecycle spans when tracing is enabled
+/// (see [`FleetCore::enable_tracing`]).
+struct TraceSink {
+    cap: usize,
+    epoch: Instant,
+    log: Arc<Mutex<SpanLog>>,
 }
 
 /// Read-only per-replica snapshot (for `/v0/workers`, `/metrics`, and
@@ -250,6 +267,13 @@ pub struct FleetCore<T, P> {
     /// zero-alloc regression guard: steady-state controller ticks and
     /// gateway publishes must leave this at 0.
     snapshots: AtomicU64,
+    /// Per-round execution profile (wall time, threads engaged, router
+    /// decision time, straggler gap).  Always on: wall clocks here are
+    /// observability-only and never feed back into virtual time.
+    profiler: RoundProfiler,
+    /// Tracing sink; `None` (the default) keeps every slot tracer the
+    /// disabled no-op.
+    trace: Option<TraceSink>,
     // reused buffers
     /// Cached per-replica router views, indexed by replica id (removed
     /// replicas keep an entry with `accepting == false`).  Kept fresh
@@ -287,6 +311,8 @@ impl<T, P> FleetCore<T, P> {
             threads,
             pool: None,
             snapshots: AtomicU64::new(0),
+            profiler: RoundProfiler::default(),
+            trace: None,
             views: Vec::new(),
             views_dirty: true,
         };
@@ -333,10 +359,17 @@ impl<T, P> FleetCore<T, P> {
             self.cfg.t_token / speed,
             self.cfg.c_overhead / speed,
             self.cfg.warmup_rounds,
-        );
+        )
+        .with_slo(self.cfg.slo);
         if self.cfg.record_completions {
             recorder = recorder.with_completions();
         }
+        // Replicas added after `enable_tracing` inherit a flight
+        // recorder stamped against the shared epoch.
+        let tracer = match &self.trace {
+            Some(sink) => Tracer::new(sink.cap, sink.epoch),
+            None => Tracer::disabled(),
+        };
         self.slots.push(ReplicaSlot {
             id,
             speed,
@@ -350,6 +383,7 @@ impl<T, P> FleetCore<T, P> {
             executed: 0,
             fin: Vec::new(),
             out: Vec::new(),
+            tracer,
         });
         self.views_dirty = true;
         self.reoffer_queued();
@@ -538,7 +572,12 @@ impl<T, P> FleetCore<T, P> {
             self.build_views();
             self.views_dirty = false;
         }
+        // Wall-time the tier-1 decision itself (observability only; the
+        // measured duration never enters virtual time).
+        let route_start = Instant::now();
         let choice = self.router.route(prefill, &self.views, &mut self.route_rng);
+        self.profiler
+            .record_route(route_start.elapsed().as_secs_f64());
         let target = match choice {
             Some(id)
                 if id < self.slots.len()
@@ -602,21 +641,47 @@ impl<T, P> FleetCore<T, P> {
         }
         let draining_remove = slot.state == (ReplicaState::Draining { remove: true });
         let r = slot.id;
+        let admit_clock = slot.recorder.clock();
         slot.engine.admit(
             slot.policy.as_mut(),
             &mut slot.rng,
-            slot.recorder.clock(),
+            admit_clock,
             |t| open(r, t),
         );
         let active = slot.engine.active_count();
         if active == 0 {
             return false; // non-work-conserving policy held everything
         }
-        slot.recorder
+        let dt = slot
+            .recorder
             .step(slot.engine.step_index(), slot.engine.loads(), active);
         slot.executed += 1;
         slot.engine.advance(&mut slot.fin);
         let finish_clock = slot.recorder.clock();
+        if slot.tracer.is_enabled() {
+            // Requests admitted this round produce their first token in
+            // this very step: exact TTFT = queue wait + this step's Δt.
+            for note in slot.engine.admitted_notes() {
+                slot.tracer.record(
+                    SpanKind::Admit,
+                    note.id,
+                    r as u32,
+                    note.worker,
+                    admit_clock,
+                    note.wait_s,
+                    0.0,
+                );
+                slot.tracer.record(
+                    SpanKind::FirstToken,
+                    note.id,
+                    r as u32,
+                    note.worker,
+                    finish_clock,
+                    note.wait_s + dt,
+                    0.0,
+                );
+            }
+        }
         for f in slot.fin.drain(..) {
             slot.completed_per_worker[f.worker] += 1;
             slot.recorder.complete_record(CompletionRecord {
@@ -627,6 +692,20 @@ impl<T, P> FleetCore<T, P> {
                 finish_clock,
                 tokens: f.tokens,
             });
+            let tpot = if f.tokens > 0 {
+                (finish_clock - f.admit_clock) / f.tokens as f64
+            } else {
+                0.0
+            };
+            slot.tracer.record(
+                SpanKind::Finish,
+                f.id,
+                r as u32,
+                f.worker as u32,
+                finish_clock,
+                tpot,
+                f.tokens as f64,
+            );
             slot.out.push(FleetFinished {
                 replica: r,
                 worker: f.worker,
@@ -720,6 +799,53 @@ impl<T, P> FleetCore<T, P> {
         self.snapshots.load(Ordering::Relaxed)
     }
 
+    /// Turn on request lifecycle tracing: every replica (current and
+    /// future) gets a flight-recorder ring of `cap` events, drained
+    /// once per round into the returned shared [`SpanLog`] (also capped
+    /// at `cap`).  Call before work flows; spans recorded before this
+    /// call do not exist.  Returns the log handle the gateway serves
+    /// `GET /v0/trace` from.
+    pub fn enable_tracing(&mut self, cap: usize) -> Arc<Mutex<SpanLog>> {
+        let log = SpanLog::new(cap);
+        let epoch = log.epoch;
+        let log = Arc::new(Mutex::new(log));
+        for slot in &mut self.slots {
+            slot.tracer = Tracer::new(cap, epoch);
+        }
+        self.trace = Some(TraceSink { cap, epoch, log: Arc::clone(&log) });
+        log
+    }
+
+    /// The always-on per-round execution profile.
+    pub fn profiler(&self) -> &RoundProfiler {
+        &self.profiler
+    }
+
+    /// SLO targets every replica's recorder scores completions against.
+    pub fn slo(&self) -> SloConfig {
+        self.cfg.slo
+    }
+
+    /// Merge every replica's streaming request-level accumulators
+    /// (TTFT/TPOT/step-time/imbalance sketches + SLO counters) into
+    /// `dst`, in slot-id order (deterministic; sketch merges commute
+    /// anyway).  `dst` is cleared first and reuses its allocations — the
+    /// gateway's in-place publish path.  Removed replicas still count:
+    /// their completions happened.
+    pub fn merge_obs_into(&self, dst: &mut RequestObs) {
+        dst.clear();
+        for s in &self.slots {
+            dst.merge(s.recorder.obs());
+        }
+    }
+
+    /// The cached tier-1 router view of one replica (fresh after a
+    /// `submit`/`run_round`; indexed by replica id).  Lets online
+    /// drivers annotate route spans without re-deriving loads.
+    pub fn view_of(&self, id: usize) -> Option<&ReplicaView> {
+        self.views.get(id)
+    }
+
     /// Lifecycle state of one replica (`None` for unknown ids) without
     /// snapshotting the fleet.
     pub fn replica_state(&self, id: usize) -> Option<ReplicaState> {
@@ -808,6 +934,7 @@ impl<T: Send, P: Send> FleetCore<T, P> {
     where
         F: Fn(usize, T) -> (u64, u64, P) + Sync,
     {
+        let round_start = Instant::now();
         out.clear();
         self.flush_overflow();
         if self.views_dirty {
@@ -822,7 +949,16 @@ impl<T: Send, P: Send> FleetCore<T, P> {
         if self.pool.is_none() && self.threads > 1 && runnable > 1 {
             self.pool = Some(RoundPool::new(self.threads - 1));
         }
-        let executed_replicas = if runnable > 1 && self.pool.is_some() {
+        let use_pool = runnable > 1 && self.pool.is_some();
+        // Mirror of the engage computation in `run_round_parallel`,
+        // plus this thread (1 = fully serial round).
+        let threads_engaged = if use_pool {
+            let workers = self.pool.as_ref().map_or(0, RoundPool::workers);
+            (runnable - 1).min(workers) + 1
+        } else {
+            1
+        };
+        let executed_replicas = if use_pool {
             self.run_round_parallel(open, runnable)
         } else {
             // One busy replica (or a serial core): fan-out would only
@@ -833,6 +969,32 @@ impl<T: Send, P: Send> FleetCore<T, P> {
             out.extend(slot.out.drain(..));
         }
         self.round += 1;
+        // Observability epilogue: wall clocks and spans only — nothing
+        // below touches virtual-time state, so parallel ≡ serial
+        // results are unaffected.  Straggler gap = spread of the live
+        // replicas' virtual clocks (replicas that have stepped).
+        let mut max_clock = f64::NEG_INFINITY;
+        let mut min_clock = f64::INFINITY;
+        for s in &self.slots {
+            if s.state != ReplicaState::Removed && s.executed > 0 {
+                let c = s.recorder.clock();
+                max_clock = max_clock.max(c);
+                min_clock = min_clock.min(c);
+            }
+        }
+        let gap = if max_clock > min_clock { max_clock - min_clock } else { 0.0 };
+        self.profiler.record_round(
+            round_start.elapsed().as_secs_f64(),
+            threads_engaged,
+            gap,
+        );
+        if let Some(sink) = &self.trace {
+            if let Ok(mut log) = sink.log.lock() {
+                for slot in &mut self.slots {
+                    slot.tracer.drain_into(&mut log);
+                }
+            }
+        }
         executed_replicas
     }
 

@@ -58,6 +58,7 @@ use anyhow::{anyhow, Result};
 
 use crate::config::SimConfig;
 use crate::metrics::Report;
+use crate::obs::{RequestObs, SloConfig};
 use crate::sim::predictor::Predictor;
 use crate::workload::{Drift, Request};
 
@@ -95,6 +96,10 @@ pub struct FleetConfig {
     /// so this is purely a wall-clock knob (`bfio fleet --threads N`).
     pub threads: usize,
     pub seed: u64,
+    /// SLO targets (TTFT + TPOT) every replica's recorder scores
+    /// completions against — feeds [`FleetResult::slo_goodput`] and the
+    /// gateway's `bfio_slo_goodput_ratio` gauge.
+    pub slo: SloConfig,
     /// Hard cap on global rounds (0 = run until the trace drains).
     pub max_rounds: u64,
     /// Rounds excluded from steady-state metrics.
@@ -120,6 +125,7 @@ impl FleetConfig {
             shapes: None,
             threads: 0,
             seed: 0,
+            slo: SloConfig::default(),
             max_rounds: 0,
             warmup_rounds: 0,
             record_completions: false,
@@ -195,6 +201,12 @@ pub struct FleetResult {
     /// Post-warmup tokens over the slowest replica's metered window.
     pub throughput_tps: f64,
     pub leftover_waiting: usize,
+    /// Fraction of completions meeting the TTFT *and* TPOT SLO targets
+    /// ([`FleetConfig::slo`]); vacuously 1.0 with no completions.
+    pub slo_goodput: f64,
+    /// Streaming TTFT/TPOT/step-time/imbalance sketches + SLO counters,
+    /// merged across replicas in replica-id order.
+    pub obs: RequestObs,
 }
 
 /// Per-round control hook over the offline fleet core: observes the
@@ -398,6 +410,13 @@ fn aggregate(
         .map(|r| r.report.wall_time_s)
         .fold(0.0, f64::max);
     let throughput_tps = if window > 0.0 { total_tokens / window } else { 0.0 };
+    // Sketch merges are exact (bucket-wise addition), so the fleet-level
+    // quantiles equal those of the union of per-replica samples.
+    let mut obs = RequestObs::default();
+    for r in &per_replica {
+        obs.merge(&r.report.obs);
+    }
+    let slo_goodput = obs.goodput();
     FleetResult {
         router,
         policy,
@@ -415,6 +434,8 @@ fn aggregate(
         mean_queue_wait_s,
         throughput_tps,
         leftover_waiting: leftover,
+        slo_goodput,
+        obs,
     }
 }
 

@@ -13,6 +13,7 @@
 use anyhow::{bail, Result};
 
 use crate::autoscale::ControllerState;
+use crate::obs::{ObsStats, SpanEvent};
 
 /// One completion request as seen by a backend (already tokenized).
 #[derive(Clone, Debug)]
@@ -119,6 +120,9 @@ pub struct BackendStats {
     pub energy_useful_j: f64,
     pub energy_idle_j: f64,
     pub energy_correction_j: f64,
+    /// Streaming observability block: TTFT/TPOT/step-time/imbalance
+    /// sketches, SLO-goodput counters, round profile, SLO targets.
+    pub obs: ObsStats,
 }
 
 /// A replica-lifecycle administration command
@@ -187,6 +191,16 @@ pub trait Backend: Send + Sync {
     /// Autoscale controller state, `None` when no controller is
     /// attached (the default).
     fn autoscaler(&self) -> Option<ControllerState> {
+        None
+    }
+
+    /// Lifecycle span events from the backend's flight recorder, in
+    /// chronological order: the last `last` events, optionally filtered
+    /// to one request id.  `None` (the default) means tracing is not
+    /// supported or not enabled — the gateway answers `GET /v0/trace`
+    /// with `404`.
+    fn trace_events(&self, last: usize, id: Option<u64>) -> Option<Vec<SpanEvent>> {
+        let _ = (last, id);
         None
     }
 }

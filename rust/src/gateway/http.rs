@@ -35,6 +35,17 @@ impl HttpRequest {
         self.target.split('?').next().unwrap_or("")
     }
 
+    /// Value of a query-string parameter (`?a=1&b=2`), or `None` when
+    /// absent.  No percent-decoding — the gateway's query params are
+    /// plain integers.
+    pub fn query_param(&self, name: &str) -> Option<&str> {
+        let query = self.target.split_once('?')?.1;
+        query.split('&').find_map(|kv| {
+            let (k, v) = kv.split_once('=')?;
+            (k == name).then_some(v)
+        })
+    }
+
     /// Case-insensitive header lookup.
     pub fn header(&self, name: &str) -> Option<&str> {
         self.headers
@@ -107,6 +118,7 @@ fn reason(status: u16) -> &'static str {
         404 => "Not Found",
         405 => "Method Not Allowed",
         500 => "Internal Server Error",
+        501 => "Not Implemented",
         503 => "Service Unavailable",
         _ => "Unknown",
     }
@@ -240,6 +252,27 @@ mod tests {
         );
         assert_eq!(authority_of("127.0.0.1:8080").unwrap(), "127.0.0.1:8080");
         assert!(authority_of("http://").is_err());
+    }
+
+    #[test]
+    fn query_param_lookup() {
+        let req = HttpRequest {
+            method: "GET".into(),
+            target: "/v0/trace?last=32&id=7".into(),
+            headers: Vec::new(),
+            body: Vec::new(),
+        };
+        assert_eq!(req.path(), "/v0/trace");
+        assert_eq!(req.query_param("last"), Some("32"));
+        assert_eq!(req.query_param("id"), Some("7"));
+        assert_eq!(req.query_param("missing"), None);
+        let bare = HttpRequest {
+            method: "GET".into(),
+            target: "/v0/trace".into(),
+            headers: Vec::new(),
+            body: Vec::new(),
+        };
+        assert_eq!(bare.query_param("last"), None);
     }
 
     #[test]

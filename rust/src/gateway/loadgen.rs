@@ -288,6 +288,9 @@ pub fn fetch_report(authority: &str, res: &LoadGenResult) -> Result<(String, Rep
         } else {
             stats::percentile(&res.tpots_s, 99.0)
         },
+        // Ratio gauge, not a diffable counter: this is the gateway's
+        // lifetime goodput (exact for a fresh gateway, the CI case).
+        slo_goodput: after("bfio_slo_goodput_ratio"),
         mean_queue_wait_s: stats::mean(&res.queue_waits_s),
         completed: res.completed as u64,
         completions: Vec::new(),
@@ -307,6 +310,7 @@ pub fn fetch_report(authority: &str, res: &LoadGenResult) -> Result<(String, Rep
         eta_sum: 0.0,
         total_workload: 0.0,
         imb_tot: 0.0,
+        obs: Default::default(),
         series: None,
     };
     Ok((policy, report))

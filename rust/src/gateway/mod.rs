@@ -11,6 +11,7 @@
 //! | `/v0/workers`          | GET    | per-worker load / slots / queue depth    |
 //! | `/v0/admin/replicas`   | GET    | replica lifecycle + autoscaler state     |
 //! | `/v0/admin/replicas`   | POST   | drain / add / reactivate / pause / resume|
+//! | `/v0/trace`            | GET    | lifecycle spans (`?last=N&id=R&format=`) |
 //! | `/metrics`             | GET    | Prometheus text exposition               |
 //! | `/healthz`             | GET    | liveness                                 |
 //!
@@ -37,6 +38,8 @@ use std::time::{Duration, Instant};
 use anyhow::{Context, Result};
 
 use crate::metrics::prometheus::PromWriter;
+use crate::obs::sketch::{seconds_buckets, token_buckets};
+use crate::obs::trace::{to_chrome, to_jsonl};
 use crate::util::json::{self, Json};
 
 use backend::{AdminCmd, Backend, CompletionRequest};
@@ -221,6 +224,7 @@ fn route(req: &HttpRequest, shared: &Shared) -> Result<Routed> {
             admin_replicas_json(shared).into_bytes(),
         )),
         ("POST", "/v0/admin/replicas") => admin_replicas_post(req, shared),
+        ("GET", "/v0/trace") => trace_get(req, shared),
         ("GET", "/metrics") => Ok((
             200,
             "text/plain; version=0.0.4",
@@ -485,6 +489,35 @@ fn admin_replicas_post(req: &HttpRequest, shared: &Shared) -> Result<Routed> {
             "application/json",
             error_body(&format!("{e:#}")),
         )),
+    }
+}
+
+/// `GET /v0/trace?last=N&id=R&format=jsonl|chrome`: the flight
+/// recorder's most recent spans.  `404` when the backend has tracing
+/// off (it is strictly opt-in).
+fn trace_get(req: &HttpRequest, shared: &Shared) -> Result<Routed> {
+    let last = req
+        .query_param("last")
+        .and_then(|s| s.parse::<usize>().ok())
+        .unwrap_or(256);
+    let id = req.query_param("id").and_then(|s| s.parse::<u64>().ok());
+    let events = match shared.backend.trace_events(last, id) {
+        Some(evs) => evs,
+        None => {
+            return Ok((
+                404,
+                "application/json",
+                error_body("tracing is not enabled (start the gateway with --trace)"),
+            ));
+        }
+    };
+    match req.query_param("format") {
+        Some("chrome") => Ok((
+            200,
+            "application/json",
+            to_chrome(&events).into_bytes(),
+        )),
+        _ => Ok((200, "application/x-ndjson", to_jsonl(&events).into_bytes())),
     }
 }
 
@@ -758,6 +791,124 @@ fn metrics_text(shared: &Shared) -> String {
             "counter",
         );
         w.sample("bfio_autoscale_ticks_total", &[], auto.ticks as f64);
+        w.family(
+            "bfio_autoscale_tick_wall_seconds",
+            "Wall time of the last control tick (sample + decide + act).",
+            "gauge",
+        );
+        w.sample(
+            "bfio_autoscale_tick_wall_seconds",
+            &[],
+            auto.last_tick_wall_s,
+        );
+        w.family(
+            "bfio_autoscale_straggler_gap_seconds",
+            "Virtual-clock spread max-min across live replicas at the last tick.",
+            "gauge",
+        );
+        w.sample(
+            "bfio_autoscale_straggler_gap_seconds",
+            &[],
+            auto.straggler_gap_s,
+        );
+    }
+    // --- streaming observability: latency histograms, SLO-goodput,
+    //     and the per-round fleet profile ---------------------------
+    w.histogram(
+        "bfio_ttft_seconds",
+        "Time to first token per completion (virtual clock; DDSketch-backed).",
+        &policy_labels,
+        &st.obs.req.ttft,
+        seconds_buckets(),
+    );
+    w.histogram(
+        "bfio_tpot_seconds",
+        "Time per output token per completion (Eq. 22; DDSketch-backed).",
+        &policy_labels,
+        &st.obs.req.tpot,
+        seconds_buckets(),
+    );
+    w.histogram(
+        "bfio_step_time_seconds",
+        "Barrier step duration Δt (Eq. 19; DDSketch-backed).",
+        &policy_labels,
+        &st.obs.req.step_time,
+        seconds_buckets(),
+    );
+    w.histogram(
+        "bfio_step_imbalance_tokens",
+        "Per-step instantaneous imbalance G·max−Σ (Eq. 2; DDSketch-backed).",
+        &policy_labels,
+        &st.obs.req.imbalance,
+        token_buckets(),
+    );
+    w.family(
+        "bfio_slo_goodput_ratio",
+        "Fraction of completions meeting the TTFT/TPOT SLO targets.",
+        "gauge",
+    );
+    w.sample("bfio_slo_goodput_ratio", &policy_labels, st.obs.req.goodput());
+    w.family(
+        "bfio_slo_ttft_target_seconds",
+        "Configured TTFT SLO target.",
+        "gauge",
+    );
+    w.sample("bfio_slo_ttft_target_seconds", &[], st.obs.slo.ttft_s);
+    w.family(
+        "bfio_slo_tpot_target_seconds",
+        "Configured TPOT SLO target.",
+        "gauge",
+    );
+    w.sample("bfio_slo_tpot_target_seconds", &[], st.obs.slo.tpot_s);
+    if st.obs.rounds.rounds > 0 {
+        let prof = &st.obs.rounds;
+        w.family(
+            "bfio_round_total",
+            "Fleet rounds executed (profiler view).",
+            "counter",
+        );
+        w.sample("bfio_round_total", &[], prof.rounds as f64);
+        w.histogram(
+            "bfio_round_wall_seconds",
+            "Wall time per fleet round (observability only, never virtual).",
+            &[],
+            &prof.round_wall,
+            seconds_buckets(),
+        );
+        w.histogram(
+            "bfio_round_router_wall_seconds",
+            "Wall time per tier-1 router decision.",
+            &[],
+            &prof.router_wall,
+            seconds_buckets(),
+        );
+        w.histogram(
+            "bfio_round_straggler_gap_seconds",
+            "Per-round spread max−min of live replicas' virtual clocks.",
+            &[],
+            &prof.straggler_gap,
+            seconds_buckets(),
+        );
+        w.family(
+            "bfio_round_threads_engaged",
+            "Threads engaged by the most recent round, caller included (1 = serial).",
+            "gauge",
+        );
+        w.sample(
+            "bfio_round_threads_engaged",
+            &[],
+            prof.last_threads_engaged as f64,
+        );
+        w.family(
+            "bfio_round_threads_engaged_mean",
+            "Mean pool threads engaged per round.",
+            "gauge",
+        );
+        w.sample(
+            "bfio_round_threads_engaged_mean",
+            &[],
+            prof.mean_threads_engaged(),
+        );
     }
     w.family(
         "bfio_requests_total",

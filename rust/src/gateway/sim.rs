@@ -29,6 +29,8 @@ use anyhow::{anyhow, Context, Result};
 
 use crate::config::{PowerConfig, SimConfig};
 use crate::metrics::{imbalance, Recorder};
+use crate::obs::trace::NO_INDEX;
+use crate::obs::{ObsStats, SloConfig, SpanEvent, SpanKind, SpanLog, Tracer};
 use crate::policies::{by_name, Policy};
 use crate::sim::engine::{Engine, EngineConfig, Finished};
 use crate::sim::predictor::Predictor;
@@ -58,6 +60,15 @@ pub struct SimBackendConfig {
     pub step_delay: Duration,
     /// Real-time dynamic-batching window on the idle→busy transition.
     pub batch_window: Duration,
+    /// SLO targets completions are scored against (goodput metric).
+    pub slo: SloConfig,
+    /// Enable the request lifecycle flight recorder (`GET /v0/trace`).
+    /// Strictly opt-in: off, nothing is recorded and the hot path does
+    /// no per-request work.
+    pub trace: bool,
+    /// Span capacity of the flight recorder ring (per tracer and for
+    /// the shared log); oldest events are overwritten when full.
+    pub trace_buf: usize,
 }
 
 impl Default for SimBackendConfig {
@@ -73,6 +84,9 @@ impl Default for SimBackendConfig {
             seed: 0,
             step_delay: Duration::from_millis(1),
             batch_window: Duration::from_millis(5),
+            slo: SloConfig::default(),
+            trace: false,
+            trace_buf: 4096,
         }
     }
 }
@@ -101,6 +115,8 @@ pub struct SimBackend {
     policy_name: String,
     tx: Mutex<Sender<Msg>>,
     snap: Arc<Mutex<Snapshot>>,
+    /// Shared span store behind `GET /v0/trace`; `None` = tracing off.
+    trace_log: Option<Arc<Mutex<SpanLog>>>,
     handle: Mutex<Option<JoinHandle<()>>>,
 }
 
@@ -130,18 +146,28 @@ impl SimBackend {
                 .collect();
             s.stats.policy = policy_name.clone();
         }
+        let (trace_log, tracer) = if cfg.trace {
+            let log = SpanLog::new(cfg.trace_buf);
+            let tracer = Tracer::new(cfg.trace_buf, log.epoch);
+            (Some(Arc::new(Mutex::new(log))), tracer)
+        } else {
+            (None, Tracer::disabled())
+        };
         let scheduler = Scheduler {
             cfg: cfg.clone(),
             rx,
             snap: Arc::clone(&snap),
             policy,
             policy_name: policy_name.clone(),
+            tracer,
+            trace_log: trace_log.clone(),
         };
         let handle = std::thread::spawn(move || scheduler.run());
         Ok(SimBackend {
             policy_name,
             tx: Mutex::new(tx),
             snap,
+            trace_log,
             handle: Mutex::new(Some(handle)),
         })
     }
@@ -170,6 +196,12 @@ impl Backend for SimBackend {
 
     fn stats(&self) -> BackendStats {
         self.snap.lock().map(|s| s.stats.clone()).unwrap_or_default()
+    }
+
+    fn trace_events(&self, last: usize, id: Option<u64>) -> Option<Vec<SpanEvent>> {
+        let log = self.trace_log.as_ref()?;
+        let log = log.lock().ok()?;
+        Some(log.last(last, id))
     }
 }
 
@@ -206,6 +238,10 @@ struct Scheduler {
     snap: Arc<Mutex<Snapshot>>,
     policy: Box<dyn Policy>,
     policy_name: String,
+    /// Flight recorder for lifecycle spans (the disabled no-op unless
+    /// `cfg.trace`); drained into `trace_log` once per cycle.
+    tracer: Tracer,
+    trace_log: Option<Arc<Mutex<SpanLog>>>,
 }
 
 impl Scheduler {
@@ -219,7 +255,8 @@ impl Scheduler {
             self.cfg.t_token,
             self.cfg.c_overhead,
             0,
-        );
+        )
+        .with_slo(self.cfg.slo);
         let mut rng = Rng::new(self.cfg.seed ^ 0x6A7E_11AD);
         // Online, the true remaining length *is* the engine's knowledge
         // of the decode budget, so the oracle predictor is exact here.
@@ -242,6 +279,15 @@ impl Scheduler {
                 match self.rx.recv() {
                     Ok(Msg::Submit(p)) => {
                         let prefill = p.req.prompt_tokens.len().max(1) as f64;
+                        self.tracer.record(
+                            SpanKind::Arrival,
+                            p.req.id,
+                            NO_INDEX,
+                            NO_INDEX,
+                            recorder.clock(),
+                            prefill,
+                            0.0,
+                        );
                         engine.submit(prefill, engine.step_index(), recorder.clock(), p);
                         if !self.cfg.batch_window.is_zero() {
                             std::thread::sleep(self.cfg.batch_window);
@@ -256,6 +302,15 @@ impl Scheduler {
                 match self.rx.try_recv() {
                     Ok(Msg::Submit(p)) => {
                         let prefill = p.req.prompt_tokens.len().max(1) as f64;
+                        self.tracer.record(
+                            SpanKind::Arrival,
+                            p.req.id,
+                            NO_INDEX,
+                            NO_INDEX,
+                            recorder.clock(),
+                            prefill,
+                            0.0,
+                        );
                         engine.submit(prefill, engine.step_index(), recorder.clock(), p);
                     }
                     Ok(Msg::Shutdown) => break 'outer,
@@ -269,25 +324,88 @@ impl Scheduler {
                 let o = u64::from(p.req.max_tokens.max(1));
                 (p.req.id, o, p.done)
             });
+            if self.tracer.is_enabled() {
+                let admit_clock = recorder.clock();
+                for note in engine.admitted_notes() {
+                    self.tracer.record(
+                        SpanKind::Admit,
+                        note.id,
+                        NO_INDEX,
+                        note.worker,
+                        admit_clock,
+                        note.wait_s,
+                        0.0,
+                    );
+                }
+            }
 
             // --- one barrier-synchronized step in virtual time ---
             let active = engine.active_count();
             if active > 0 {
-                recorder.step(engine.step_index(), engine.loads(), active);
+                let dt = recorder.step(engine.step_index(), engine.loads(), active);
                 engine.advance(&mut finished);
                 for f in &finished {
                     completed_per[f.worker] += 1;
                 }
+                if self.tracer.is_enabled() {
+                    // This round's admissions produced their first token
+                    // in the step that just ran: exact TTFT = wait + Δt.
+                    let ft_clock = recorder.clock();
+                    for note in engine.admitted_notes() {
+                        self.tracer.record(
+                            SpanKind::FirstToken,
+                            note.id,
+                            NO_INDEX,
+                            note.worker,
+                            ft_clock,
+                            note.wait_s + dt,
+                            0.0,
+                        );
+                    }
+                }
             } else {
                 finished.clear();
+            }
+
+            // Score completions (TTFT/TPOT sketches + SLO counters)
+            // before publishing, so the snapshot a client reads after
+            // observing its completion already includes it.
+            let clock = recorder.clock();
+            for f in &finished {
+                recorder.complete_request_full(
+                    f.arrival_clock,
+                    f.admit_clock,
+                    clock,
+                    f.tokens,
+                );
+                let tpot = if f.tokens > 0 {
+                    (clock - f.admit_clock) / f.tokens as f64
+                } else {
+                    0.0
+                };
+                self.tracer.record(
+                    SpanKind::Finish,
+                    f.id,
+                    NO_INDEX,
+                    f.worker as u32,
+                    clock,
+                    tpot,
+                    f.tokens as f64,
+                );
             }
 
             // Responses are sent only *after* the snapshot is published,
             // so a client that observes its completion then reads
             // /metrics always sees itself counted.
             publish(&self.snap, &self.policy_name, &engine, &recorder, &completed_per);
-
-            let clock = recorder.clock();
+            // Flush spans before answering, so a client that observes
+            // its completion can immediately read its full chain from
+            // /v0/trace.
+            if let Some(log) = &self.trace_log {
+                if let Ok(mut log) = log.lock() {
+                    self.tracer.drain_into(&mut log);
+                }
+            }
             for f in finished.drain(..) {
                 let tpot = if f.tokens > 0 {
                     (clock - f.admit_clock) / f.tokens as f64
@@ -354,6 +472,11 @@ fn publish<T, P>(
         energy_useful_j: recorder.energy.useful_j,
         energy_idle_j: recorder.energy.idle_j,
         energy_correction_j: recorder.energy.correction_j,
+        obs: ObsStats {
+            req: recorder.obs().clone(),
+            rounds: Default::default(),
+            slo: recorder.slo(),
+        },
     };
     if let Ok(mut s) = snap.lock() {
         s.workers = ws;
@@ -434,6 +557,35 @@ mod tests {
         let per: u64 = be.workers().iter().map(|w| w.completed).sum();
         assert_eq!(per, n);
         assert_eq!(st.total_tokens, 3 * n);
+    }
+
+    #[test]
+    fn obs_block_and_trace_chain_roundtrip() {
+        let cfg = SimBackendConfig { trace: true, ..fast_cfg("fcfs") };
+        let be = SimBackend::new(cfg).unwrap();
+        let c = be
+            .complete(CompletionRequest {
+                id: 11,
+                prompt_tokens: vec![1, 2],
+                max_tokens: 3,
+            })
+            .unwrap();
+        assert_eq!(c.id, 11);
+        let st = be.stats();
+        assert_eq!(st.obs.req.ttft.count(), 1);
+        assert_eq!(st.obs.req.tpot.count(), 1);
+        assert_eq!(st.obs.req.slo_total, 1);
+        assert_eq!(st.obs.req.slo_ok, 1, "tiny virtual latencies meet the SLO");
+        assert!(st.obs.req.step_time.count() >= 3);
+        // Complete lifecycle chain, causal order, via the trace store.
+        let evs = be.trace_events(64, Some(11)).expect("tracing enabled");
+        let kinds: Vec<&str> = evs.iter().map(|e| e.kind.label()).collect();
+        assert_eq!(kinds, vec!["arrival", "admit", "first_token", "finish"]);
+        assert!(evs.iter().all(|e| e.request_id == 11));
+
+        // Tracing off: no store, /v0/trace gets None.
+        let be = SimBackend::new(fast_cfg("fcfs")).unwrap();
+        assert!(be.trace_events(10, None).is_none());
     }
 
     #[test]

@@ -34,6 +34,11 @@
 //!   completion horizon, Theorem-4 energy rates), scale policies
 //!   (static / target-tracking / energy-marginal) with hysteresis, and
 //!   an actuator that drains/adds/reactivates replicas live.
+//! * [`obs`] — the end-to-end observability layer: request lifecycle
+//!   span tracing into per-thread flight recorders (JSONL / Chrome
+//!   `trace_event` export, `GET /v0/trace`), mergeable DDSketch-style
+//!   quantile sketches for TTFT/TPOT/step-time/imbalance, the per-round
+//!   fleet profiler, and the SLO-goodput metric.
 //! * [`energy`] — the GPU power model `P(mfu)` and per-step energy
 //!   integration (Section 5.2 / Appendix D of the paper).
 //! * [`theory`] — closed-form theorem bounds and empirical IIR drivers.
@@ -52,6 +57,7 @@ pub mod energy;
 pub mod fleet;
 pub mod gateway;
 pub mod metrics;
+pub mod obs;
 pub mod policies;
 pub mod report;
 pub mod runtime;

@@ -10,7 +10,8 @@
 //!                 adversarial|predictors|drift|all> [--full]  paper artifacts
 //! bfio theory    <thm1|thm2|thm3|energy|all>                  theorem checks
 //! bfio serve     --workers 2 --policy bfio:8 --requests 16    live PJRT serving
-//! bfio gateway   --backend sim|fleet [--autoscale energy]     HTTP gateway
+//! bfio gateway   --backend sim|fleet [--autoscale energy]
+//!                [--trace] [--slo-ttft S] [--slo-tpot S]       HTTP gateway
 //! bfio loadgen   --url http://127.0.0.1:8080 --requests 64    drive a gateway
 //! bfio trace     --out trace.jsonl --steps 200                dump a trace
 //! ```
@@ -31,6 +32,7 @@ use bfio_serve::gateway::pjrt::{PjrtBackend, PjrtBackendConfig};
 use bfio_serve::gateway::sim::{SimBackend, SimBackendConfig};
 use bfio_serve::gateway::{self, loadgen, Gateway, GatewayConfig};
 use bfio_serve::metrics::Report;
+use bfio_serve::obs::SloConfig;
 use bfio_serve::policies::by_name;
 use bfio_serve::sim::Simulator;
 use bfio_serve::util::cli::Args;
@@ -366,6 +368,15 @@ fn cmd_gateway(args: &Args) -> Result<()> {
     let addr = args.get_or("addr", "127.0.0.1:8080").to_string();
     let threads = args.usize_or("threads", 8);
     let policy = args.get_or("policy", "bfio:8").to_string();
+    // Observability knobs, shared by the sim and fleet backends:
+    // `--trace` turns on the lifecycle flight recorder (`GET
+    // /v0/trace`), `--slo-ttft/--slo-tpot` set the goodput targets.
+    let trace = args.has("trace");
+    let trace_buf = args.usize_or("trace-buf", 4096);
+    let slo = SloConfig {
+        ttft_s: args.f64_or("slo-ttft", SloConfig::default().ttft_s),
+        tpot_s: args.f64_or("slo-tpot", SloConfig::default().tpot_s),
+    };
     let backend: Arc<dyn Backend> = match kind {
         "sim" => {
             let cfg = SimBackendConfig {
@@ -375,6 +386,9 @@ fn cmd_gateway(args: &Args) -> Result<()> {
                 seed: args.u64_or("seed", 0),
                 step_delay: Duration::from_millis(args.u64_or("step-delay-ms", 1)),
                 batch_window: Duration::from_millis(args.u64_or("batch-window-ms", 5)),
+                slo,
+                trace,
+                trace_buf,
                 ..SimBackendConfig::default()
             };
             Arc::new(SimBackend::new(cfg)?)
@@ -409,6 +423,9 @@ fn cmd_gateway(args: &Args) -> Result<()> {
                 // `--threads` is the HTTP pool; the fleet core's
                 // round-execution parallelism gets its own flag.
                 threads: args.usize_or("fleet-threads", 0),
+                slo,
+                trace,
+                trace_buf,
                 ..FleetBackendConfig::default()
             };
             Arc::new(FleetBackend::new(cfg)?)
@@ -433,7 +450,8 @@ fn cmd_gateway(args: &Args) -> Result<()> {
     println!("bfio gateway ({name}) listening on http://{}", gw.addr);
     println!(
         "  POST /v1/completions   GET /v0/workers   GET|POST /v0/admin/replicas   \
-         GET /metrics   GET /healthz"
+         GET /metrics   GET /healthz{}",
+        if trace { "   GET /v0/trace" } else { "" }
     );
     // Serve until killed.
     loop {

@@ -7,6 +7,7 @@ pub mod prometheus;
 
 use crate::config::PowerConfig;
 use crate::energy::EnergyAccumulator;
+use crate::obs::{RequestObs, SloConfig};
 use crate::util::stats;
 
 /// Instantaneous imbalance (Eq. 2): `G·max_g L_g − Σ_g L_g`.
@@ -67,7 +68,10 @@ pub struct Recorder {
     pub energy: EnergyAccumulator,
     tpot_sum: f64,
     tpot_count: u64,
-    tpot_samples: Vec<f64>,
+    /// Streaming sketches + SLO counters (bounded memory — replaces the
+    /// old store-every-sample `tpot_samples: Vec<f64>` percentile path).
+    obs: RequestObs,
+    slo: SloConfig,
     queue_wait_sum: f64,
     completed: u64,
     /// Keep per-request [`CompletionRecord`]s (off by default: large).
@@ -107,7 +111,8 @@ impl Recorder {
             energy: EnergyAccumulator::new(),
             tpot_sum: 0.0,
             tpot_count: 0,
-            tpot_samples: Vec::new(),
+            obs: RequestObs::default(),
+            slo: SloConfig::default(),
             queue_wait_sum: 0.0,
             completed: 0,
             record_completions: false,
@@ -134,6 +139,29 @@ impl Recorder {
     pub fn with_completions(mut self) -> Recorder {
         self.record_completions = true;
         self
+    }
+
+    /// Set the SLO targets completions are scored against (builder).
+    pub fn with_slo(mut self, slo: SloConfig) -> Recorder {
+        self.slo = slo;
+        self
+    }
+
+    /// Set the SLO targets completions are scored against.
+    pub fn set_slo(&mut self, slo: SloConfig) {
+        self.slo = slo;
+    }
+
+    /// The active SLO targets.
+    pub fn slo(&self) -> SloConfig {
+        self.slo
+    }
+
+    /// Live view of the streaming observability accumulators (sketches
+    /// + SLO counters) for online drivers that publish before
+    /// [`Recorder::finish`].
+    pub fn obs(&self) -> &RequestObs {
+        &self.obs
     }
 
     /// Current wall-clock time (s).
@@ -168,10 +196,13 @@ impl Recorder {
 
         if in_window {
             self.steps += 1;
-            self.imbalance_sum += imbalance(loads);
+            let imb = imbalance(loads);
+            self.imbalance_sum += imb;
             self.idle_sum += idle_fraction(loads);
             self.tokens += active as f64;
             self.wall_time += dt;
+            self.obs.step_time.insert(dt);
+            self.obs.imbalance.insert(imb);
         }
         // Energy is integrated over the whole run (matches the paper's
         // "total energy for the trace" figures).
@@ -209,12 +240,17 @@ impl Recorder {
         o: u64,
     ) {
         self.completed += 1;
-        self.queue_wait_sum += (admit_clock - arrival_clock).max(0.0);
+        let wait = (admit_clock - arrival_clock).max(0.0);
+        self.queue_wait_sum += wait;
         if o > 0 {
             let tpot = (finish_clock - admit_clock) / o as f64;
             self.tpot_sum += tpot;
             self.tpot_count += 1;
-            self.tpot_samples.push(tpot);
+            // TTFT estimate at completion: queue wait plus one mean
+            // token time (exact under constant step time; the opt-in
+            // tracer records the exact first-token clock per request).
+            let ttft = wait + tpot;
+            self.obs.observe_completion(ttft, tpot, &self.slo);
         }
     }
 
@@ -255,11 +291,8 @@ impl Recorder {
             } else {
                 0.0
             },
-            tpot_p99_s: if self.tpot_samples.is_empty() {
-                0.0
-            } else {
-                stats::percentile(&self.tpot_samples, 99.0)
-            },
+            tpot_p99_s: self.obs.tpot.quantile(0.99).unwrap_or(0.0),
+            slo_goodput: self.obs.goodput(),
             mean_queue_wait_s: if self.completed > 0 {
                 self.queue_wait_sum / self.completed as f64
             } else {
@@ -277,6 +310,7 @@ impl Recorder {
             eta_sum: self.energy.eta_sum(),
             total_workload: self.energy.total_workload,
             imb_tot: self.energy.imb_tot,
+            obs: self.obs,
             series: if self.record_series {
                 Some(Series {
                     time: self.series_time,
@@ -320,8 +354,12 @@ pub struct Report {
     pub throughput_tps: f64,
     /// Eq. 22 — mean time per output token, seconds.
     pub tpot_s: f64,
-    /// p99 time per output token (tail latency), seconds.
+    /// p99 time per output token (tail latency), seconds — read from
+    /// the streaming sketch (relative error ≤ its α, default 1%).
     pub tpot_p99_s: f64,
+    /// Fraction of completions meeting the TTFT *and* TPOT SLO targets
+    /// (1.0 when no completions were scored).
+    pub slo_goodput: f64,
     /// Mean router-queueing delay (arrival → admission), seconds.
     pub mean_queue_wait_s: f64,
     pub completed: u64,
@@ -344,6 +382,8 @@ pub struct Report {
     pub eta_sum: f64,
     pub total_workload: f64,
     pub imb_tot: f64,
+    /// Streaming TTFT/TPOT/step-time/imbalance sketches + SLO counters.
+    pub obs: RequestObs,
     pub series: Option<Series>,
 }
 
@@ -434,7 +474,9 @@ mod tests {
         }
         r.complete_request_full(0.0, 5.0, 105.0, 1); // tpot 100, wait 5
         let rep = r.finish();
-        assert!(rep.tpot_p99_s > 1.9, "p99 {}", rep.tpot_p99_s); // interpolated rank 98.01
+        // Nearest-rank p99 of 99×1.0 + 1×100.0 is 1.0; the sketch
+        // reports it within its 1% relative-error bound.
+        assert!((rep.tpot_p99_s - 1.0).abs() <= 0.02, "p99 {}", rep.tpot_p99_s);
         assert!((rep.tpot_s - (99.0 + 100.0) / 100.0).abs() < 1e-9);
         assert!((rep.mean_queue_wait_s - (99.0 + 5.0) / 100.0).abs() < 1e-9);
     }
@@ -446,7 +488,46 @@ mod tests {
         let rep = r.finish();
         assert_eq!(rep.mean_queue_wait_s, 0.0);
         assert!((rep.tpot_s - 1.0).abs() < 1e-12);
-        assert!((rep.tpot_p99_s - 1.0).abs() < 1e-12);
+        assert!((rep.tpot_p99_s - 1.0).abs() <= 0.02);
+    }
+
+    #[test]
+    fn slo_goodput_scores_ttft_and_tpot_jointly() {
+        let slo = SloConfig { ttft_s: 2.0, tpot_s: 0.25 };
+        let mut r =
+            Recorder::new(PowerConfig::a100(), 1e-7, 1e-3, 0).with_slo(slo);
+        assert_eq!(r.slo().ttft_s, 2.0);
+        // meets both: wait 0.5 + tpot 0.1 => ttft 0.6 ≤ 2, tpot ≤ 0.25
+        r.complete_request_full(0.0, 0.5, 1.5, 10);
+        // tpot violation: 1 s/token
+        r.complete_request_full(0.0, 0.0, 4.0, 4);
+        // ttft violation: wait 5 s even though tpot 0.1 is fine
+        r.complete_request_full(0.0, 5.0, 6.0, 10);
+        let rep = r.finish();
+        assert!((rep.slo_goodput - 1.0 / 3.0).abs() < 1e-12);
+        assert_eq!(rep.obs.tpot.count(), 3);
+        assert_eq!(rep.obs.ttft.count(), 3);
+    }
+
+    #[test]
+    fn empty_recorder_goodput_is_vacuously_one() {
+        let rep = Recorder::new(PowerConfig::a100(), 1e-7, 1e-3, 0).finish();
+        assert_eq!(rep.slo_goodput, 1.0);
+        assert_eq!(rep.tpot_p99_s, 0.0);
+    }
+
+    #[test]
+    fn step_feeds_the_streaming_sketches() {
+        let mut r = Recorder::new(PowerConfig::a100(), 0.0, 1.0, 1);
+        r.step(0, &[3.0, 1.0], 2); // warmup: excluded
+        r.step(1, &[3.0, 1.0], 2);
+        r.step(2, &[2.0, 2.0], 2);
+        let rep = r.finish();
+        assert_eq!(rep.obs.step_time.count(), 2);
+        assert_eq!(rep.obs.imbalance.count(), 2);
+        // max imbalance observed: 2·3 − 4 = 2 (within sketch error)
+        let p100 = rep.obs.imbalance.quantile(1.0).unwrap();
+        assert!((p100 - 2.0).abs() <= 0.04, "imb max {}", p100);
     }
 
     #[test]

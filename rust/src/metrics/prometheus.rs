@@ -5,24 +5,34 @@
 //! headers, gauge/counter samples with escaped labels.  Scrapeable by a
 //! stock Prometheus server pointed at the gateway.
 
+use std::collections::BTreeSet;
 use std::fmt::Write as _;
 
 use super::Report;
+use crate::obs::QuantileSketch;
 
 /// Incremental builder for one exposition document.
 #[derive(Clone, Debug, Default)]
 pub struct PromWriter {
     out: String,
+    /// Families whose headers were already emitted — `# HELP`/`# TYPE`
+    /// must appear exactly once per family, so repeated `family()` calls
+    /// (e.g. the same family rendered for several replicas) are no-ops.
+    seen: BTreeSet<String>,
 }
 
 impl PromWriter {
     pub fn new() -> PromWriter {
-        PromWriter { out: String::new() }
+        PromWriter::default()
     }
 
     /// Emit the `# HELP` / `# TYPE` headers for a metric family.
-    /// `kind` is `"gauge"` or `"counter"`.
+    /// `kind` is `"gauge"`, `"counter"`, or `"histogram"`.  Idempotent:
+    /// the headers are written only on the first call per family.
     pub fn family(&mut self, name: &str, help: &str, kind: &str) {
+        if !self.seen.insert(name.to_string()) {
+            return;
+        }
         let _ = writeln!(self.out, "# HELP {name} {help}");
         let _ = writeln!(self.out, "# TYPE {name} {kind}");
     }
@@ -41,6 +51,35 @@ impl PromWriter {
             self.out.push('}');
         }
         let _ = writeln!(self.out, " {}", fmt_value(value));
+    }
+
+    /// Render one [`QuantileSketch`] as a Prometheus `histogram` family
+    /// against a fixed bucket ladder: cumulative `name_bucket{le=...}`
+    /// counts (via [`QuantileSketch::count_le`]), the implicit `+Inf`
+    /// bucket, and `name_sum` / `name_count`.  A fixed ladder keeps the
+    /// exposition mergeable across replicas and scrapes regardless of
+    /// what each sketch observed.
+    pub fn histogram(
+        &mut self,
+        name: &str,
+        help: &str,
+        labels: &[(&str, &str)],
+        sketch: &QuantileSketch,
+        bounds: &[f64],
+    ) {
+        self.family(name, help, "histogram");
+        let bucket = format!("{name}_bucket");
+        for &b in bounds {
+            let le = fmt_value(b);
+            let mut lv: Vec<(&str, &str)> = labels.to_vec();
+            lv.push(("le", le.as_str()));
+            self.sample(&bucket, &lv, sketch.count_le(b) as f64);
+        }
+        let mut lv: Vec<(&str, &str)> = labels.to_vec();
+        lv.push(("le", "+Inf"));
+        self.sample(&bucket, &lv, sketch.count() as f64);
+        self.sample(&format!("{name}_sum"), labels, sketch.sum());
+        self.sample(&format!("{name}_count"), labels, sketch.count() as f64);
     }
 
     pub fn finish(self) -> String {
@@ -78,6 +117,253 @@ fn fmt_value(v: f64) -> String {
     } else {
         format!("{v}")
     }
+}
+
+/// Parse a sample value, accepting the Prometheus spellings
+/// `+Inf`/`-Inf`/`NaN` alongside ordinary floats.
+fn parse_value(s: &str) -> Option<f64> {
+    match s {
+        "+Inf" | "Inf" => Some(f64::INFINITY),
+        "-Inf" => Some(f64::NEG_INFINITY),
+        "NaN" => Some(f64::NAN),
+        _ => s.parse::<f64>().ok().filter(|v| v.is_finite()),
+    }
+}
+
+/// Split a sample line into `(name, labels, value)`.  Labels are
+/// returned as the raw `k="v"` pairs (unescaped values are not needed by
+/// the linter — it only checks well-formedness and uniqueness).
+fn parse_sample(line: &str) -> Result<(String, Vec<(String, String)>, f64), String> {
+    let name_end = line
+        .find(|c: char| c == '{' || c == ' ')
+        .ok_or("missing value")?;
+    let name = &line[..name_end];
+    if name.is_empty()
+        || !name
+            .chars()
+            .all(|c| c.is_ascii_alphanumeric() || c == '_' || c == ':')
+        || name.chars().next().is_some_and(|c| c.is_ascii_digit())
+    {
+        return Err(format!("bad metric name {name:?}"));
+    }
+    let mut labels = Vec::new();
+    let rest = if line.as_bytes()[name_end] == b'{' {
+        let mut chars = line[name_end + 1..].char_indices().peekable();
+        let body = &line[name_end + 1..];
+        loop {
+            // label name
+            let start = match chars.peek() {
+                Some(&(i, '}')) => {
+                    chars.next();
+                    break &body[i + 1..];
+                }
+                Some(&(i, _)) => i,
+                None => return Err("unterminated label set".into()),
+            };
+            let mut eq = None;
+            for (i, c) in chars.by_ref() {
+                if c == '=' {
+                    eq = Some(i);
+                    break;
+                }
+                if !(c.is_ascii_alphanumeric() || c == '_') {
+                    return Err(format!("bad label name char {c:?}"));
+                }
+            }
+            let eq = eq.ok_or("label without '='")?;
+            let key = &body[start..eq];
+            if key.is_empty() {
+                return Err("empty label name".into());
+            }
+            match chars.next() {
+                Some((_, '"')) => {}
+                _ => return Err("label value not quoted".into()),
+            }
+            // label value with escapes
+            let vstart = eq + 2;
+            let mut vend = None;
+            let mut escaped = false;
+            for (i, c) in chars.by_ref() {
+                if escaped {
+                    if !matches!(c, '\\' | '"' | 'n') {
+                        return Err(format!("bad escape \\{c}"));
+                    }
+                    escaped = false;
+                } else if c == '\\' {
+                    escaped = true;
+                } else if c == '"' {
+                    vend = Some(i);
+                    break;
+                } else if c == '\n' {
+                    return Err("raw newline in label value".into());
+                }
+            }
+            let vend = vend.ok_or("unterminated label value")?;
+            labels.push((key.to_string(), body[vstart..vend].to_string()));
+            match chars.next() {
+                Some((i, '}')) => break &body[i + 1..],
+                Some((_, ',')) => continue,
+                _ => return Err("expected ',' or '}' after label".into()),
+            }
+        }
+    } else {
+        &line[name_end..]
+    };
+    let rest = rest.trim_start_matches(' ');
+    let mut parts = rest.split_whitespace();
+    let value = parts.next().ok_or("missing value")?;
+    let value = parse_value(value).ok_or_else(|| format!("bad value {value:?}"))?;
+    // optional timestamp
+    if let Some(ts) = parts.next() {
+        ts.parse::<i64>()
+            .map_err(|_| format!("bad timestamp {ts:?}"))?;
+    }
+    if parts.next().is_some() {
+        return Err("trailing garbage after value".into());
+    }
+    Ok((name.to_string(), labels, value))
+}
+
+/// Strict structural linter for exposition text (format 0.0.4): every
+/// family must declare `# TYPE` exactly once *before* its samples, with
+/// a known kind; families must be contiguous; histogram `_bucket`
+/// samples must carry `le` with the `+Inf` bucket equal to `_count`;
+/// no sample (name + label set) may repeat; all values must parse.
+/// Returns the first violation found.
+pub fn lint(text: &str) -> Result<(), String> {
+    const KINDS: [&str; 5] = ["gauge", "counter", "histogram", "summary", "untyped"];
+    let mut types: std::collections::BTreeMap<String, String> =
+        std::collections::BTreeMap::new();
+    let mut helps: BTreeSet<String> = BTreeSet::new();
+    let mut series_seen: BTreeSet<String> = BTreeSet::new();
+    let mut closed: BTreeSet<String> = BTreeSet::new();
+    let mut current: Option<String> = None;
+    // histogram family -> (last cumulative bucket value, last le,
+    //                      +Inf value, _count value)
+    let mut hist: std::collections::BTreeMap<String, (f64, f64, Option<f64>, Option<f64>)> =
+        std::collections::BTreeMap::new();
+
+    for (i, line) in text.lines().enumerate() {
+        let n = i + 1;
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("# HELP ") {
+            let name = rest
+                .split(' ')
+                .next()
+                .filter(|s| !s.is_empty())
+                .ok_or(format!("line {n}: # HELP without a name"))?;
+            if !helps.insert(name.to_string()) {
+                return Err(format!("line {n}: duplicate # HELP for {name}"));
+            }
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("# TYPE ") {
+            let mut it = rest.split(' ');
+            let name = it
+                .next()
+                .filter(|s| !s.is_empty())
+                .ok_or(format!("line {n}: # TYPE without a name"))?;
+            let kind = it
+                .next()
+                .ok_or(format!("line {n}: # TYPE {name} without a kind"))?;
+            if !KINDS.contains(&kind) {
+                return Err(format!("line {n}: unknown kind {kind:?} for {name}"));
+            }
+            if types.insert(name.to_string(), kind.to_string()).is_some() {
+                return Err(format!("line {n}: duplicate # TYPE for {name}"));
+            }
+            if closed.contains(name) || current.as_deref() == Some(name) {
+                return Err(format!("line {n}: # TYPE {name} after its samples"));
+            }
+            continue;
+        }
+        if line.starts_with('#') {
+            continue; // free-form comment
+        }
+        let (name, labels, value) =
+            parse_sample(line).map_err(|e| format!("line {n}: {e}"))?;
+        // Resolve the family: histogram component samples belong to the
+        // base family that declared `# TYPE <base> histogram`.
+        let family = ["_bucket", "_sum", "_count"]
+            .iter()
+            .find_map(|suf| {
+                let base = name.strip_suffix(suf)?;
+                (types.get(base).map(String::as_str) == Some("histogram"))
+                    .then(|| base.to_string())
+            })
+            .unwrap_or_else(|| name.clone());
+        let kind = types
+            .get(&family)
+            .ok_or(format!("line {n}: sample for {family} before its # TYPE"))?
+            .clone();
+        if current.as_ref() != Some(&family) {
+            if closed.contains(&family) {
+                return Err(format!(
+                    "line {n}: family {family} is not contiguous"
+                ));
+            }
+            if let Some(prev) = current.replace(family.clone()) {
+                closed.insert(prev);
+            }
+        }
+        if kind == "histogram" {
+            if name == family {
+                return Err(format!(
+                    "line {n}: bare sample {name} in histogram family"
+                ));
+            }
+            let entry = hist
+                .entry(family.clone())
+                .or_insert((0.0, f64::NEG_INFINITY, None, None));
+            if name.ends_with("_bucket") {
+                let le = labels
+                    .iter()
+                    .find(|(k, _)| k == "le")
+                    .map(|(_, v)| v.as_str())
+                    .ok_or(format!("line {n}: bucket without le label"))?;
+                let le = parse_value(le)
+                    .or(if le == "+Inf" { Some(f64::INFINITY) } else { None })
+                    .ok_or(format!("line {n}: bad le value {le:?}"))?;
+                if le <= entry.1 {
+                    return Err(format!("line {n}: le bounds not increasing"));
+                }
+                if value < entry.0 {
+                    return Err(format!("line {n}: bucket counts not cumulative"));
+                }
+                entry.0 = value;
+                entry.1 = le;
+                if le.is_infinite() {
+                    entry.2 = Some(value);
+                }
+            } else if name.ends_with("_count") {
+                entry.3 = Some(value);
+            }
+        }
+        let mut series = name.clone();
+        let mut sorted = labels.clone();
+        sorted.sort();
+        for (k, v) in &sorted {
+            series.push(' ');
+            series.push_str(k);
+            series.push('=');
+            series.push_str(v);
+        }
+        if !series_seen.insert(series) {
+            return Err(format!("line {n}: duplicate sample {line:?}"));
+        }
+    }
+    for (family, (_, _, inf, count)) in &hist {
+        let inf = inf.ok_or(format!("histogram {family} missing +Inf bucket"))?;
+        let count = count.ok_or(format!("histogram {family} missing _count"))?;
+        if inf != count {
+            return Err(format!(
+                "histogram {family}: +Inf bucket {inf} != _count {count}"
+            ));
+        }
+    }
+    Ok(())
 }
 
 /// Render a finished [`Report`] as Prometheus gauges/counters, labelled
@@ -148,6 +434,12 @@ pub fn render_report(report: &Report, policy: &str) -> String {
     w.sample("bfio_tokens_total", &l, report.total_tokens);
     w.family("bfio_steps_total", "Decode steps executed.", "counter");
     w.sample("bfio_steps_total", &l, report.steps as f64);
+    w.family(
+        "bfio_slo_goodput_ratio",
+        "Fraction of completions meeting the TTFT/TPOT SLO targets.",
+        "gauge",
+    );
+    w.sample("bfio_slo_goodput_ratio", &l, report.slo_goodput);
     w.finish()
 }
 
@@ -163,6 +455,7 @@ mod tests {
             throughput_tps: 100.0,
             tpot_s: 0.125,
             tpot_p99_s: 0.5,
+            slo_goodput: 0.5,
             mean_queue_wait_s: 0.0,
             completed: 7,
             completions: Vec::new(),
@@ -176,6 +469,7 @@ mod tests {
             eta_sum: 0.1,
             total_workload: 100.0,
             imb_tot: 10.0,
+            obs: Default::default(),
             series: None,
         }
     }
@@ -217,8 +511,12 @@ bfio_tokens_total{policy=\"bfio:8\"} 42
 # HELP bfio_steps_total Decode steps executed.
 # TYPE bfio_steps_total counter
 bfio_steps_total{policy=\"bfio:8\"} 3
+# HELP bfio_slo_goodput_ratio Fraction of completions meeting the TTFT/TPOT SLO targets.
+# TYPE bfio_slo_goodput_ratio gauge
+bfio_slo_goodput_ratio{policy=\"bfio:8\"} 0.5
 ";
         assert_eq!(text, want);
+        lint(&text).expect("report exposition lints clean");
     }
 
     #[test]
@@ -247,5 +545,80 @@ bfio_steps_total{policy=\"bfio:8\"} 3
             w.finish(),
             "# HELP up Gateway liveness.\n# TYPE up gauge\nup 1\n"
         );
+    }
+
+    #[test]
+    fn family_headers_emitted_exactly_once() {
+        let mut w = PromWriter::new();
+        w.family("m", "A metric.", "gauge");
+        w.sample("m", &[("r", "0")], 1.0);
+        w.family("m", "A metric.", "gauge"); // deduped
+        w.sample("m", &[("r", "1")], 2.0);
+        let text = w.finish();
+        assert_eq!(text.matches("# TYPE m gauge").count(), 1);
+        assert_eq!(text.matches("# HELP").count(), 1);
+        lint(&text).unwrap();
+    }
+
+    #[test]
+    fn histogram_renders_cumulative_buckets_and_lints() {
+        let mut sk = QuantileSketch::default();
+        for x in [0.003, 0.004, 0.02, 0.7, 100.0] {
+            sk.insert(x);
+        }
+        let mut w = PromWriter::new();
+        w.histogram(
+            "bfio_ttft_seconds",
+            "TTFT distribution.",
+            &[("policy", "bfio:8")],
+            &sk,
+            crate::obs::sketch::seconds_buckets(),
+        );
+        let text = w.finish();
+        lint(&text).expect("histogram exposition lints clean");
+        assert!(text.contains("# TYPE bfio_ttft_seconds histogram"));
+        assert!(text
+            .contains("bfio_ttft_seconds_bucket{policy=\"bfio:8\",le=\"0.005\"} 2"));
+        assert!(text.contains("bfio_ttft_seconds_bucket{policy=\"bfio:8\",le=\"+Inf\"} 5"));
+        assert!(text.contains("bfio_ttft_seconds_count{policy=\"bfio:8\"} 5"));
+        // sum is within sketch relative error of the exact sum
+        let sum_line = text
+            .lines()
+            .find(|l| l.starts_with("bfio_ttft_seconds_sum"))
+            .unwrap();
+        let v: f64 = sum_line.split(' ').next_back().unwrap().parse().unwrap();
+        assert!((v - 100.727).abs() < 1e-9, "sum {v}");
+    }
+
+    #[test]
+    fn lint_rejects_malformed_expositions() {
+        // duplicate TYPE
+        let t = "# TYPE m gauge\n# TYPE m gauge\nm 1\n";
+        assert!(lint(t).unwrap_err().contains("duplicate # TYPE"));
+        // sample before TYPE
+        assert!(lint("m 1\n").unwrap_err().contains("before its # TYPE"));
+        // duplicate sample
+        let t = "# TYPE m gauge\nm{a=\"x\"} 1\nm{a=\"x\"} 2\n";
+        assert!(lint(t).unwrap_err().contains("duplicate sample"));
+        // non-contiguous family
+        let t = "# TYPE m gauge\n# TYPE n gauge\nm 1\nn 1\nm{a=\"y\"} 2\n";
+        assert!(lint(t).unwrap_err().contains("not contiguous"));
+        // unknown kind
+        assert!(lint("# TYPE m widget\n").unwrap_err().contains("unknown kind"));
+        // bucket without le
+        let t = "# TYPE h histogram\nh_bucket 1\nh_sum 1\nh_count 1\n";
+        assert!(lint(t).unwrap_err().contains("without le"));
+        // +Inf bucket disagrees with _count
+        let t = "# TYPE h histogram\nh_bucket{le=\"+Inf\"} 3\nh_sum 1\nh_count 4\n";
+        assert!(lint(t).unwrap_err().contains("!= _count"));
+        // bad value
+        let t = "# TYPE m gauge\nm one\n";
+        assert!(lint(t).unwrap_err().contains("bad value"));
+        // unterminated labels
+        let t = "# TYPE m gauge\nm{a=\"x\" 1\n";
+        assert!(lint(t).is_err());
+        // a clean document passes
+        let t = "# HELP m Demo.\n# TYPE m gauge\nm{a=\"x\"} 1\nm{a=\"y\"} 2\n";
+        lint(t).unwrap();
     }
 }

@@ -1,0 +1,180 @@
+//! End-to-end observability layer: request lifecycle tracing, streaming
+//! quantile sketches, and SLO-goodput.
+//!
+//! The paper's argument is about *where time goes* — barrier idle
+//! fractions, straggler-gated steps, Theorem-4 energy waste — so the
+//! serving stack needs per-request timing signals that survive the
+//! million-request scale target without storing every sample.  This
+//! module provides three substrates, all allocation-bounded:
+//!
+//! * [`sketch::QuantileSketch`] — a DDSketch-style relative-error
+//!   quantile sketch (log-γ buckets, mergeable across replicas and
+//!   threads) that replaces the `Vec<f64>`-and-sort percentile path for
+//!   TTFT / TPOT / step-time / imbalance.  Any quantile it reports is
+//!   within a configurable relative error `α` (default
+//!   [`sketch::DEFAULT_ALPHA`]) of the exact sample quantile.
+//! * [`trace`] — fixed-shape request lifecycle span events
+//!   (arrival → route → admit → first-token → finish/shed) carrying both
+//!   the virtual (simulated) clock and a wall-clock offset, recorded
+//!   into per-thread flight-recorder ring buffers ([`trace::Tracer`])
+//!   with bounded memory and zero steady-state allocation, merged into a
+//!   shared [`trace::SpanLog`] once per round, and exported as JSONL or
+//!   Chrome `trace_event` JSON (`GET /v0/trace` on the gateway).
+//! * [`profiler::RoundProfiler`] — per-round fleet execution profile
+//!   (round wall time, pool threads engaged, router decision time,
+//!   per-replica straggler gap) feeding the `bfio_round_*` metric
+//!   family.
+//!
+//! On top of these, [`SloConfig`] + [`RequestObs`] define the
+//! **SLO-goodput** metric: the fraction of completions whose TTFT and
+//! TPOT both meet configurable targets, reported in `FleetResult`,
+//! gateway `/metrics` (`bfio_slo_goodput_ratio`), and the bench JSONs.
+//!
+//! Tracing is strictly opt-in (`--trace` on the gateway): with it off,
+//! every [`trace::Tracer`] is the no-op disabled instance, nothing is
+//! recorded, and no per-request heap allocation is added to the hot
+//! path.  The sketches and the round profiler are always on — they are
+//! O(1) amortized per sample with hard memory bounds, matching the
+//! engine's zero-steady-state-allocation ethos.
+
+pub mod profiler;
+pub mod sketch;
+pub mod trace;
+
+pub use profiler::RoundProfiler;
+pub use sketch::QuantileSketch;
+pub use trace::{SpanEvent, SpanKind, SpanLog, Tracer};
+
+/// Service-level objective targets for one completion.
+///
+/// A completion is *good* when its TTFT (time from arrival to first
+/// output token) and its TPOT (mean time per output token, Eq. 22) both
+/// meet their targets.  Defaults follow common interactive-serving
+/// targets: first token within 2 s, sustained decode at ≥ 4 tok/s.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SloConfig {
+    /// TTFT target in (virtual) seconds.
+    pub ttft_s: f64,
+    /// TPOT target in (virtual) seconds per token.
+    pub tpot_s: f64,
+}
+
+impl Default for SloConfig {
+    fn default() -> SloConfig {
+        SloConfig { ttft_s: 2.0, tpot_s: 0.25 }
+    }
+}
+
+/// Per-request observability accumulators: streaming sketches for the
+/// latency families plus the SLO-goodput counters.  Owned by each
+/// [`crate::metrics::Recorder`]; mergeable across replicas (the fleet
+/// publishes one merged instance).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct RequestObs {
+    /// TTFT per completion, in virtual seconds.  Estimated at
+    /// completion as `(admit − arrival) + (finish − admit)/o` — queue
+    /// wait plus one mean token time — so it is exact under constant
+    /// step time and within one step-time spread otherwise.  (The
+    /// opt-in tracer records the *exact* first-token clock per span.)
+    pub ttft: QuantileSketch,
+    /// TPOT per completion (Eq. 22 per request), in virtual seconds.
+    pub tpot: QuantileSketch,
+    /// Per-step barrier time Δt (Eq. 19), in virtual seconds.
+    pub step_time: QuantileSketch,
+    /// Per-step instantaneous imbalance `G·max − Σ` (Eq. 2), tokens.
+    pub imbalance: QuantileSketch,
+    /// Completions meeting both SLO targets.
+    pub slo_ok: u64,
+    /// Completions evaluated against the SLO.
+    pub slo_total: u64,
+}
+
+impl RequestObs {
+    /// Record one completion's latency figures and score it against the
+    /// SLO targets.
+    pub fn observe_completion(&mut self, ttft_s: f64, tpot_s: f64, slo: &SloConfig) {
+        self.ttft.insert(ttft_s);
+        self.tpot.insert(tpot_s);
+        self.slo_total += 1;
+        if ttft_s <= slo.ttft_s && tpot_s <= slo.tpot_s {
+            self.slo_ok += 1;
+        }
+    }
+
+    /// SLO-goodput ratio: fraction of completions meeting both targets.
+    /// Vacuously 1.0 when nothing has completed yet.
+    pub fn goodput(&self) -> f64 {
+        if self.slo_total == 0 {
+            1.0
+        } else {
+            self.slo_ok as f64 / self.slo_total as f64
+        }
+    }
+
+    /// Fold another accumulator in (e.g. one per replica).
+    pub fn merge(&mut self, other: &RequestObs) {
+        self.ttft.merge(&other.ttft);
+        self.tpot.merge(&other.tpot);
+        self.step_time.merge(&other.step_time);
+        self.imbalance.merge(&other.imbalance);
+        self.slo_ok += other.slo_ok;
+        self.slo_total += other.slo_total;
+    }
+
+    /// Reset to empty, retaining sketch capacity (for reuse in the
+    /// fleet's in-place publish path).
+    pub fn clear(&mut self) {
+        self.ttft.clear();
+        self.tpot.clear();
+        self.step_time.clear();
+        self.imbalance.clear();
+        self.slo_ok = 0;
+        self.slo_total = 0;
+    }
+}
+
+/// Observability block published in the gateway's
+/// [`crate::gateway::backend::BackendStats`]: merged request-level
+/// accumulators, the fleet round profile, and the active SLO targets.
+#[derive(Clone, Debug, Default)]
+pub struct ObsStats {
+    pub req: RequestObs,
+    pub rounds: RoundProfiler,
+    pub slo: SloConfig,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn goodput_counts_joint_slo() {
+        let slo = SloConfig { ttft_s: 1.0, tpot_s: 0.1 };
+        let mut o = RequestObs::default();
+        assert_eq!(o.goodput(), 1.0, "vacuous goodput");
+        o.observe_completion(0.5, 0.05, &slo); // good
+        o.observe_completion(2.0, 0.05, &slo); // ttft miss
+        o.observe_completion(0.5, 0.50, &slo); // tpot miss
+        o.observe_completion(0.9, 0.09, &slo); // good
+        assert_eq!(o.slo_total, 4);
+        assert_eq!(o.slo_ok, 2);
+        assert!((o.goodput() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn merge_and_clear() {
+        let slo = SloConfig::default();
+        let mut a = RequestObs::default();
+        let mut b = RequestObs::default();
+        a.observe_completion(0.1, 0.01, &slo);
+        b.observe_completion(9.0, 9.0, &slo);
+        a.merge(&b);
+        assert_eq!(a.slo_total, 2);
+        assert_eq!(a.slo_ok, 1);
+        assert_eq!(a.ttft.count(), 2);
+        a.clear();
+        assert_eq!(a.slo_total, 0);
+        assert_eq!(a.ttft.count(), 0);
+        assert_eq!(a.goodput(), 1.0);
+    }
+}

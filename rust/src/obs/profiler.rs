@@ -1,0 +1,102 @@
+//! Per-round fleet execution profiler: wall time per round, pool
+//! threads engaged, router decision time, and the per-replica straggler
+//! gap, accumulated into streaming sketches and exposed as the
+//! `bfio_round_*` metric family on the gateway.
+//!
+//! Wall-clock figures here are observability-only: they are measured
+//! around the round, never fed back into virtual time, so the profiler
+//! cannot perturb the deterministic parallel ≡ serial fleet results.
+
+use super::sketch::QuantileSketch;
+
+/// Streaming per-round profile of a fleet core (or any round-driven
+/// driver).  All sketches use the default relative accuracy.
+#[derive(Clone, Debug, Default)]
+pub struct RoundProfiler {
+    /// Rounds profiled.
+    pub rounds: u64,
+    /// Wall time per `run_round` call, seconds.
+    pub round_wall: QuantileSketch,
+    /// Wall time per router decision (`route_in`), seconds.
+    pub router_wall: QuantileSketch,
+    /// Per-round straggler gap: spread `max − min` of the live
+    /// replicas' virtual clocks, seconds — how far the slowest replica
+    /// trails the fastest at the round boundary.
+    pub straggler_gap: QuantileSketch,
+    /// Wall seconds of the most recent round.
+    pub last_round_wall_s: f64,
+    /// Straggler gap of the most recent round, seconds.
+    pub last_straggler_gap_s: f64,
+    /// Threads engaged by the most recent round, caller included
+    /// (1 = serial execution).
+    pub last_threads_engaged: usize,
+    /// Σ threads engaged over all rounds (mean = sum / rounds).
+    pub threads_engaged_sum: u64,
+}
+
+impl RoundProfiler {
+    /// Record one completed round.
+    pub fn record_round(&mut self, wall_s: f64, threads_engaged: usize, gap_s: f64) {
+        self.rounds += 1;
+        self.round_wall.insert(wall_s);
+        self.straggler_gap.insert(gap_s);
+        self.last_round_wall_s = wall_s;
+        self.last_straggler_gap_s = gap_s;
+        self.last_threads_engaged = threads_engaged;
+        self.threads_engaged_sum += threads_engaged as u64;
+    }
+
+    /// Record one router decision's wall time.
+    pub fn record_route(&mut self, wall_s: f64) {
+        self.router_wall.insert(wall_s);
+    }
+
+    /// Mean pool threads engaged per round.
+    pub fn mean_threads_engaged(&self) -> f64 {
+        if self.rounds == 0 {
+            0.0
+        } else {
+            self.threads_engaged_sum as f64 / self.rounds as f64
+        }
+    }
+
+    /// Copy `src` into `self`, reusing existing sketch allocations (the
+    /// fleet's in-place snapshot publish path).
+    pub fn copy_from(&mut self, src: &RoundProfiler) {
+        self.rounds = src.rounds;
+        self.round_wall.copy_from(&src.round_wall);
+        self.router_wall.copy_from(&src.router_wall);
+        self.straggler_gap.copy_from(&src.straggler_gap);
+        self.last_round_wall_s = src.last_round_wall_s;
+        self.last_straggler_gap_s = src.last_straggler_gap_s;
+        self.last_threads_engaged = src.last_threads_engaged;
+        self.threads_engaged_sum = src.threads_engaged_sum;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accumulates_rounds_and_routes() {
+        let mut p = RoundProfiler::default();
+        assert_eq!(p.mean_threads_engaged(), 0.0);
+        p.record_round(0.010, 3, 0.5);
+        p.record_round(0.020, 1, 0.25);
+        p.record_route(0.0001);
+        assert_eq!(p.rounds, 2);
+        assert_eq!(p.last_threads_engaged, 1);
+        assert!((p.mean_threads_engaged() - 2.0).abs() < 1e-12);
+        assert_eq!(p.round_wall.count(), 2);
+        assert_eq!(p.straggler_gap.count(), 2);
+        assert_eq!(p.router_wall.count(), 1);
+        assert!((p.last_round_wall_s - 0.020).abs() < 1e-12);
+
+        let mut q = RoundProfiler::default();
+        q.copy_from(&p);
+        assert_eq!(q.rounds, 2);
+        assert_eq!(q.round_wall.count(), 2);
+        assert!((q.mean_threads_engaged() - 2.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,418 @@
+//! DDSketch-style streaming quantile sketch with relative-error
+//! guarantees (Masson, Rim & Lee, VLDB 2019 — reimplemented from the
+//! paper's bucket rule; no crate dependency).
+//!
+//! Values are mapped to logarithmic buckets `key = ⌈ln x / ln γ⌉` with
+//! `γ = (1+α)/(1−α)`; any reported quantile is then within relative
+//! error `α` of the exact sample quantile.  Buckets are a contiguous
+//! `Vec<u64>` with a sliding key offset, so memory is **bounded by the
+//! dynamic range** (for `α = 0.01` and the clamped range
+//! `[1e−9, 1e12]`, at most ~2400 buckets ≈ 19 KiB) regardless of how
+//! many samples are inserted — unlike the store-every-sample
+//! `Vec<f64>`-and-sort path it replaces.
+//!
+//! Sketches with the same `α` merge by bucket-wise addition
+//! ([`QuantileSketch::merge`]), which is exact: merging then querying
+//! equals querying the union, so per-replica sketches fold into fleet
+//! totals and Prometheus histogram families stay aggregatable.
+
+/// Default relative accuracy: quantile estimates within ±1%.
+pub const DEFAULT_ALPHA: f64 = 0.01;
+
+/// Positive values below this are counted in the zero bucket; above
+/// [`CLAMP_HI`] they clamp to the top bucket.  Bounds the key range.
+const CLAMP_LO: f64 = 1e-9;
+const CLAMP_HI: f64 = 1e12;
+
+/// A mergeable streaming quantile sketch with relative error `alpha`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct QuantileSketch {
+    alpha: f64,
+    gamma: f64,
+    ln_gamma: f64,
+    /// `bins[i]` counts samples with bucket key `offset + i`.
+    bins: Vec<u64>,
+    offset: i32,
+    /// Samples ≤ 0 (or below [`CLAMP_LO`]).
+    zero_count: u64,
+    count: u64,
+    sum: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Default for QuantileSketch {
+    fn default() -> QuantileSketch {
+        QuantileSketch::new(DEFAULT_ALPHA)
+    }
+}
+
+impl QuantileSketch {
+    /// New sketch with relative accuracy `alpha` (0 < alpha < 1).
+    pub fn new(alpha: f64) -> QuantileSketch {
+        assert!(alpha > 0.0 && alpha < 1.0, "alpha must be in (0, 1)");
+        let gamma = (1.0 + alpha) / (1.0 - alpha);
+        QuantileSketch {
+            alpha,
+            gamma,
+            ln_gamma: gamma.ln(),
+            bins: Vec::new(),
+            offset: 0,
+            zero_count: 0,
+            count: 0,
+            sum: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+
+    /// The configured relative accuracy.
+    pub fn alpha(&self) -> f64 {
+        self.alpha
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+
+    pub fn min(&self) -> Option<f64> {
+        (self.count > 0).then_some(self.min)
+    }
+
+    pub fn max(&self) -> Option<f64> {
+        (self.count > 0).then_some(self.max)
+    }
+
+    fn key_of(&self, x: f64) -> i32 {
+        let x = x.clamp(CLAMP_LO, CLAMP_HI);
+        (x.ln() / self.ln_gamma).ceil() as i32
+    }
+
+    /// Midpoint estimate for bucket `key`: `2γ^k / (γ + 1)`, within
+    /// relative error `alpha` of every sample in the bucket.
+    fn value_of(&self, key: i32) -> f64 {
+        2.0 * (key as f64 * self.ln_gamma).exp() / (self.gamma + 1.0)
+    }
+
+    fn bump(&mut self, key: i32) {
+        if self.bins.is_empty() {
+            self.offset = key;
+            self.bins.push(1);
+            return;
+        }
+        if key < self.offset {
+            let grow = (self.offset - key) as usize;
+            self.bins.resize(self.bins.len() + grow, 0);
+            self.bins.rotate_right(grow);
+            self.offset = key;
+            self.bins[0] += 1;
+        } else {
+            let idx = (key - self.offset) as usize;
+            if idx >= self.bins.len() {
+                self.bins.resize(idx + 1, 0);
+            }
+            self.bins[idx] += 1;
+        }
+    }
+
+    /// Insert one sample.  Non-finite values are ignored; values ≤ 0
+    /// land in the zero bucket (and report as 0.0 in quantiles).
+    pub fn insert(&mut self, x: f64) {
+        if !x.is_finite() {
+            return;
+        }
+        self.count += 1;
+        self.sum += x;
+        if x < self.min {
+            self.min = x;
+        }
+        if x > self.max {
+            self.max = x;
+        }
+        if x < CLAMP_LO {
+            self.zero_count += 1;
+            return;
+        }
+        let key = self.key_of(x);
+        self.bump(key);
+    }
+
+    /// Quantile estimate for `q` in [0, 1]; `None` when empty.  The
+    /// estimate is within relative error `alpha` of the exact sample
+    /// quantile (exactly 0.0 for samples in the zero bucket), and the
+    /// extremes are exact: `q = 0` returns `min`, `q = 1` returns `max`.
+    pub fn quantile(&self, q: f64) -> Option<f64> {
+        assert!((0.0..=1.0).contains(&q), "quantile q must be in [0, 1]");
+        if self.count == 0 {
+            return None;
+        }
+        if q <= 0.0 {
+            return Some(self.min);
+        }
+        if q >= 1.0 {
+            return Some(self.max);
+        }
+        let rank = (q * (self.count - 1) as f64) as u64; // floor
+        if rank < self.zero_count {
+            return Some(0.0);
+        }
+        let mut cum = self.zero_count;
+        for (i, &n) in self.bins.iter().enumerate() {
+            cum += n;
+            if cum > rank {
+                return Some(self.value_of(self.offset + i as i32));
+            }
+        }
+        Some(self.max) // fp safety net; unreachable when counts agree
+    }
+
+    /// Number of samples ≤ `bound` (within the bucket resolution: the
+    /// boundary bucket is attributed by its upper edge, so the answer
+    /// is exact for counts and within relative error `alpha` in the
+    /// bound).  Used to render cumulative Prometheus histogram buckets.
+    pub fn count_le(&self, bound: f64) -> u64 {
+        if bound.is_nan() {
+            return 0;
+        }
+        if bound < 0.0 {
+            return 0;
+        }
+        if bound.is_infinite() {
+            return self.count;
+        }
+        let mut cum = self.zero_count;
+        if bound < CLAMP_LO {
+            return cum;
+        }
+        let key_hi = self.key_of(bound);
+        for (i, &n) in self.bins.iter().enumerate() {
+            if self.offset + i as i32 > key_hi {
+                break;
+            }
+            cum += n;
+        }
+        cum
+    }
+
+    /// Fold `other` into `self` (bucket-wise; requires equal `alpha`).
+    pub fn merge(&mut self, other: &QuantileSketch) {
+        assert!(
+            (self.alpha - other.alpha).abs() < 1e-12,
+            "cannot merge sketches with different alpha ({} vs {})",
+            self.alpha,
+            other.alpha
+        );
+        if other.count == 0 {
+            return;
+        }
+        self.count += other.count;
+        self.sum += other.sum;
+        self.zero_count += other.zero_count;
+        if other.min < self.min {
+            self.min = other.min;
+        }
+        if other.max > self.max {
+            self.max = other.max;
+        }
+        if other.bins.is_empty() {
+            return;
+        }
+        if self.bins.is_empty() {
+            self.offset = other.offset;
+            self.bins.extend_from_slice(&other.bins);
+            return;
+        }
+        // Grow self's range to cover other's, then add bucket-wise.
+        if other.offset < self.offset {
+            let grow = (self.offset - other.offset) as usize;
+            self.bins.resize(self.bins.len() + grow, 0);
+            self.bins.rotate_right(grow);
+            self.offset = other.offset;
+        }
+        let need = (other.offset - self.offset) as usize + other.bins.len();
+        if need > self.bins.len() {
+            self.bins.resize(need, 0);
+        }
+        let base = (other.offset - self.offset) as usize;
+        for (i, &n) in other.bins.iter().enumerate() {
+            self.bins[base + i] += n;
+        }
+    }
+
+    /// Reset to empty, retaining bucket capacity.
+    pub fn clear(&mut self) {
+        self.bins.clear();
+        self.offset = 0;
+        self.zero_count = 0;
+        self.count = 0;
+        self.sum = 0.0;
+        self.min = f64::INFINITY;
+        self.max = f64::NEG_INFINITY;
+    }
+
+    /// Copy `src` into `self`, reusing this sketch's allocations.
+    pub fn copy_from(&mut self, src: &QuantileSketch) {
+        self.alpha = src.alpha;
+        self.gamma = src.gamma;
+        self.ln_gamma = src.ln_gamma;
+        self.bins.clear();
+        self.bins.extend_from_slice(&src.bins);
+        self.offset = src.offset;
+        self.zero_count = src.zero_count;
+        self.count = src.count;
+        self.sum = src.sum;
+        self.min = src.min;
+        self.max = src.max;
+    }
+}
+
+/// The default `le` bucket ladder for seconds-scale latency histograms
+/// on `/metrics` (the implicit `+Inf` bucket is appended by the
+/// renderer).  Fixed per family so scrapes stay aggregatable across
+/// replicas and over time.
+pub fn seconds_buckets() -> &'static [f64] {
+    &[
+        0.001, 0.0025, 0.005, 0.01, 0.025, 0.05, 0.1, 0.25, 0.5, 1.0, 2.5, 5.0, 10.0,
+        30.0,
+    ]
+}
+
+/// Bucket ladder for token-scale quantities (per-step imbalance): decade
+/// steps covering one stray token up to full-fleet KV residency.
+pub fn token_buckets() -> &'static [f64] {
+    &[1.0, 10.0, 100.0, 1e3, 1e4, 1e5, 1e6, 1e7]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_sketch() {
+        let s = QuantileSketch::default();
+        assert!(s.is_empty());
+        assert_eq!(s.quantile(0.5), None);
+        assert_eq!(s.min(), None);
+        assert_eq!(s.mean(), 0.0);
+        assert_eq!(s.count_le(f64::INFINITY), 0);
+    }
+
+    #[test]
+    fn single_value_everywhere() {
+        let mut s = QuantileSketch::default();
+        s.insert(0.125);
+        assert_eq!(s.count(), 1);
+        assert_eq!(s.quantile(0.0), Some(0.125), "q=0 is exact min");
+        assert_eq!(s.quantile(1.0), Some(0.125), "q=1 is exact max");
+        let mid = s.quantile(0.5).unwrap();
+        assert!((mid - 0.125).abs() / 0.125 <= DEFAULT_ALPHA);
+    }
+
+    #[test]
+    fn relative_error_bound_on_uniform_grid() {
+        let mut s = QuantileSketch::new(0.02);
+        let xs: Vec<f64> = (1..=10_000).map(|i| i as f64 * 1e-3).collect();
+        for &x in &xs {
+            s.insert(x);
+        }
+        for &q in &[0.01, 0.1, 0.25, 0.5, 0.75, 0.9, 0.99, 0.999] {
+            let exact = crate::util::stats::percentile(&xs, q * 100.0);
+            let est = s.quantile(q).unwrap();
+            assert!(
+                (est - exact).abs() / exact <= 0.02 + 1e-9,
+                "q={q}: est {est} vs exact {exact}"
+            );
+        }
+        assert_eq!(s.count(), 10_000);
+        assert!((s.sum() - xs.iter().sum::<f64>()).abs() < 1e-6);
+    }
+
+    #[test]
+    fn zero_and_negative_values() {
+        let mut s = QuantileSketch::default();
+        s.insert(0.0);
+        s.insert(-5.0);
+        s.insert(1.0);
+        assert_eq!(s.count(), 3);
+        assert_eq!(s.quantile(0.0), Some(-5.0), "min is exact");
+        assert_eq!(s.quantile(0.4), Some(0.0), "zero bucket reports 0");
+        assert_eq!(s.count_le(0.5), 2);
+        assert_eq!(s.count_le(2.0), 3);
+        s.insert(f64::NAN); // ignored
+        assert_eq!(s.count(), 3);
+    }
+
+    #[test]
+    fn merge_equals_union() {
+        let mut a = QuantileSketch::default();
+        let mut b = QuantileSketch::default();
+        let mut all = QuantileSketch::default();
+        for i in 1..=500 {
+            let x = (i as f64).powi(2) * 1e-4;
+            a.insert(x);
+            all.insert(x);
+        }
+        for i in 1..=300 {
+            let x = 5.0 / i as f64;
+            b.insert(x);
+            all.insert(x);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), all.count());
+        assert_eq!(a.min(), all.min());
+        assert_eq!(a.max(), all.max());
+        for &q in &[0.1, 0.5, 0.9, 0.99] {
+            assert_eq!(a.quantile(q), all.quantile(q), "merge is exact at q={q}");
+        }
+        for &le in seconds_buckets() {
+            assert_eq!(a.count_le(le), all.count_le(le));
+        }
+    }
+
+    #[test]
+    fn count_le_is_monotone_and_caps_at_count() {
+        let mut s = QuantileSketch::default();
+        for i in 1..=1000u64 {
+            s.insert(i as f64 * 7e-4);
+        }
+        let mut prev = 0;
+        for &le in seconds_buckets() {
+            let c = s.count_le(le);
+            assert!(c >= prev, "cumulative buckets must not decrease");
+            prev = c;
+        }
+        assert_eq!(s.count_le(f64::INFINITY), 1000);
+    }
+
+    #[test]
+    fn clear_retains_capacity_and_copy_from_roundtrips() {
+        let mut s = QuantileSketch::default();
+        for i in 1..=100 {
+            s.insert(i as f64);
+        }
+        let mut t = QuantileSketch::default();
+        t.copy_from(&s);
+        assert_eq!(t, s);
+        s.clear();
+        assert!(s.is_empty());
+        assert_eq!(s.quantile(0.5), None);
+        s.insert(2.0);
+        assert_eq!(s.count(), 1);
+    }
+}

@@ -1,0 +1,445 @@
+//! Request lifecycle tracing: fixed-shape span events recorded into
+//! per-thread flight-recorder ring buffers, merged into a shared
+//! [`SpanLog`], and exported as JSONL or Chrome `trace_event` JSON.
+//!
+//! ## Span schema
+//!
+//! Every event is a fixed-size [`SpanEvent`] (`Copy`, no heap) with two
+//! clocks: `virt_s` — the backend's *virtual* (simulated) clock at the
+//! event, on the owning replica's timeline — and `wall_us` — microseconds
+//! of real time since the trace epoch (monotonic, process-wide).  Wall
+//! time is observability-only: it never feeds back into virtual-time
+//! results, so tracing cannot perturb determinism.  The `a`/`b` payload
+//! fields are kind-specific:
+//!
+//! | kind         | `a`                         | `b`                          |
+//! |--------------|-----------------------------|------------------------------|
+//! | `Arrival`    | prefill tokens              | –                            |
+//! | `Route`      | chosen replica's cost       | best rejected candidate cost |
+//! | `Admit`      | queue wait (s)              | –                            |
+//! | `FirstToken` | exact TTFT (s)              | –                            |
+//! | `Finish`     | TPOT (s)                    | output tokens                |
+//! | `Shed`       | queue wait so far (s)       | –                            |
+//!
+//! ## Flight recorder
+//!
+//! Each scheduler/pool thread owns a [`Tracer`]: a bounded ring buffer
+//! that overwrites its oldest event when full and allocates only at
+//! construction — recording is lock-free and allocation-free.  Once per
+//! round the owning driver drains every tracer into the shared
+//! [`SpanLog`] (one short mutex hold per round, never per request).
+//! With tracing disabled, [`Tracer::disabled`] makes every `record` a
+//! branch-predicted no-op and holds no buffer at all.
+
+use std::time::Instant;
+
+use crate::util::json::{self, Json};
+
+/// Sentinel for "no replica" / "no worker" on an event.
+pub const NO_INDEX: u32 = u32::MAX;
+
+/// Lifecycle stage of a span event.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SpanKind {
+    /// Request entered the backend's wait queue.
+    Arrival,
+    /// Fleet router chose a replica (`a` = chosen cost, `b` = best
+    /// rejected candidate cost; single-group backends skip this stage).
+    Route,
+    /// Request admitted to a worker's batch (`a` = queue wait, s).
+    Admit,
+    /// First output token produced (`a` = exact TTFT, s).
+    FirstToken,
+    /// Request completed (`a` = TPOT s, `b` = output tokens).
+    Finish,
+    /// Request dropped without completing (`a` = queue wait so far, s).
+    Shed,
+}
+
+impl SpanKind {
+    pub fn label(self) -> &'static str {
+        match self {
+            SpanKind::Arrival => "arrival",
+            SpanKind::Route => "route",
+            SpanKind::Admit => "admit",
+            SpanKind::FirstToken => "first_token",
+            SpanKind::Finish => "finish",
+            SpanKind::Shed => "shed",
+        }
+    }
+
+    /// Causal order within one request's chain — used as a stable sort
+    /// tiebreak when wall clocks collide at µs resolution.
+    fn rank(self) -> u8 {
+        match self {
+            SpanKind::Arrival => 0,
+            SpanKind::Route => 1,
+            SpanKind::Admit => 2,
+            SpanKind::FirstToken => 3,
+            SpanKind::Finish => 4,
+            SpanKind::Shed => 5,
+        }
+    }
+}
+
+/// One fixed-shape lifecycle event.  See the module docs for the
+/// per-kind meaning of `a`/`b`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SpanEvent {
+    pub kind: SpanKind,
+    pub request_id: u64,
+    /// Owning replica, or [`NO_INDEX`] for single-group backends.
+    pub replica: u32,
+    /// Worker (batch group) within the replica, or [`NO_INDEX`].
+    pub worker: u32,
+    /// Virtual (simulated) clock at the event, seconds, on the owning
+    /// replica's timeline.
+    pub virt_s: f64,
+    /// Microseconds of wall time since the trace epoch.
+    pub wall_us: u64,
+    pub a: f64,
+    pub b: f64,
+}
+
+impl SpanEvent {
+    /// JSON object used by both the JSONL export and `/v0/trace`.
+    pub fn to_json(&self) -> Json {
+        let idx = |v: u32| if v == NO_INDEX { -1.0 } else { v as f64 };
+        json::obj(vec![
+            ("kind", json::s(self.kind.label())),
+            ("request_id", json::num(self.request_id as f64)),
+            ("replica", json::num(idx(self.replica))),
+            ("worker", json::num(idx(self.worker))),
+            ("virt_s", json::num(self.virt_s)),
+            ("wall_us", json::num(self.wall_us as f64)),
+            ("a", json::num(self.a)),
+            ("b", json::num(self.b)),
+        ])
+    }
+}
+
+/// A per-thread flight recorder: bounded ring buffer of [`SpanEvent`]s.
+/// All memory is allocated at construction; recording never allocates
+/// and never takes a lock.
+#[derive(Clone, Debug)]
+pub struct Tracer {
+    enabled: bool,
+    epoch: Instant,
+    cap: usize,
+    buf: Vec<SpanEvent>,
+    /// Index of the oldest event once the ring has wrapped.
+    head: usize,
+    /// Events overwritten before they could be drained.
+    dropped: u64,
+}
+
+impl Tracer {
+    /// The no-op tracer: `record` does nothing, no buffer is held.
+    pub fn disabled() -> Tracer {
+        Tracer {
+            enabled: false,
+            epoch: Instant::now(),
+            cap: 0,
+            buf: Vec::new(),
+            head: 0,
+            dropped: 0,
+        }
+    }
+
+    /// An enabled tracer holding up to `cap` events (≥ 1), stamping
+    /// wall clocks relative to `epoch` (share one epoch across all
+    /// tracers and the [`SpanLog`] so timestamps are comparable).
+    pub fn new(cap: usize, epoch: Instant) -> Tracer {
+        let cap = cap.max(1);
+        Tracer {
+            enabled: true,
+            epoch,
+            cap,
+            buf: Vec::with_capacity(cap),
+            head: 0,
+            dropped: 0,
+        }
+    }
+
+    pub fn is_enabled(&self) -> bool {
+        self.enabled
+    }
+
+    /// Record one event (no-op when disabled).
+    #[inline]
+    pub fn record(
+        &mut self,
+        kind: SpanKind,
+        request_id: u64,
+        replica: u32,
+        worker: u32,
+        virt_s: f64,
+        a: f64,
+        b: f64,
+    ) {
+        if !self.enabled {
+            return;
+        }
+        let ev = SpanEvent {
+            kind,
+            request_id,
+            replica,
+            worker,
+            virt_s,
+            wall_us: self.epoch.elapsed().as_micros() as u64,
+            a,
+            b,
+        };
+        if self.buf.len() < self.cap {
+            self.buf.push(ev);
+        } else {
+            self.buf[self.head] = ev;
+            self.head = (self.head + 1) % self.cap;
+            self.dropped += 1;
+        }
+    }
+
+    /// Move every recorded event into `log` (oldest first) and reset
+    /// the ring.  Called once per round by the owning driver.
+    pub fn drain_into(&mut self, log: &mut SpanLog) {
+        if self.buf.is_empty() {
+            log.dropped += std::mem::take(&mut self.dropped);
+            return;
+        }
+        let (newer, older) = self.buf.split_at(self.head);
+        // Ring order: [head..] is the older run once wrapped.
+        for ev in older.iter().chain(newer.iter()) {
+            log.push(*ev);
+        }
+        log.dropped += std::mem::take(&mut self.dropped);
+        self.buf.clear();
+        self.head = 0;
+    }
+}
+
+/// The shared, bounded span store behind `GET /v0/trace`: per-thread
+/// tracers drain into it once per round; readers copy slices out under
+/// a short lock on the cold path.
+#[derive(Debug)]
+pub struct SpanLog {
+    cap: usize,
+    buf: Vec<SpanEvent>,
+    head: usize,
+    /// Events lost to ring overwrites (here or in any tracer).
+    pub dropped: u64,
+    /// Wall-clock epoch every tracer should stamp against.
+    pub epoch: Instant,
+}
+
+impl SpanLog {
+    pub fn new(cap: usize) -> SpanLog {
+        let cap = cap.max(1);
+        SpanLog {
+            cap,
+            buf: Vec::with_capacity(cap),
+            head: 0,
+            dropped: 0,
+            epoch: Instant::now(),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    pub fn push(&mut self, ev: SpanEvent) {
+        if self.buf.len() < self.cap {
+            self.buf.push(ev);
+        } else {
+            self.buf[self.head] = ev;
+            self.head = (self.head + 1) % self.cap;
+            self.dropped += 1;
+        }
+    }
+
+    /// The most recent `n` events (optionally only those of request
+    /// `id`), returned in causal order (wall clock, then span rank).
+    pub fn last(&self, n: usize, id: Option<u64>) -> Vec<SpanEvent> {
+        let (newer, older) = self.buf.split_at(self.head);
+        let mut out: Vec<SpanEvent> = older
+            .iter()
+            .chain(newer.iter())
+            .filter(|ev| id.map(|want| ev.request_id == want).unwrap_or(true))
+            .copied()
+            .collect();
+        out.sort_by_key(|ev| (ev.wall_us, ev.kind.rank()));
+        if out.len() > n {
+            out.drain(..out.len() - n);
+        }
+        out
+    }
+}
+
+/// Render events as JSONL: one JSON object per line (the `/v0/trace`
+/// default and the CI artifact format).
+pub fn to_jsonl(events: &[SpanEvent]) -> String {
+    let mut out = String::new();
+    for ev in events {
+        out.push_str(&ev.to_json().to_string());
+        out.push('\n');
+    }
+    out
+}
+
+/// Render events as a Chrome `trace_event` document (load in
+/// `chrome://tracing` or Perfetto): instant events keyed by
+/// replica (pid) / worker (tid).
+pub fn to_chrome(events: &[SpanEvent]) -> String {
+    let idx = |v: u32| if v == NO_INDEX { -1.0 } else { v as f64 };
+    let evs: Vec<Json> = events
+        .iter()
+        .map(|ev| {
+            json::obj(vec![
+                ("name", json::s(ev.kind.label())),
+                ("cat", json::s("bfio")),
+                ("ph", json::s("i")),
+                ("s", json::s("g")),
+                ("ts", json::num(ev.wall_us as f64)),
+                ("pid", json::num(idx(ev.replica))),
+                ("tid", json::num(idx(ev.worker))),
+                (
+                    "args",
+                    json::obj(vec![
+                        ("request_id", json::num(ev.request_id as f64)),
+                        ("virt_s", json::num(ev.virt_s)),
+                        ("a", json::num(ev.a)),
+                        ("b", json::num(ev.b)),
+                    ]),
+                ),
+            ])
+        })
+        .collect();
+    json::obj(vec![
+        ("traceEvents", Json::Arr(evs)),
+        ("displayTimeUnit", json::s("ms")),
+    ])
+    .to_string()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(t: &mut Tracer, kind: SpanKind, id: u64) {
+        t.record(kind, id, 0, 0, 0.0, 0.0, 0.0);
+    }
+
+    #[test]
+    fn disabled_tracer_records_nothing() {
+        let mut t = Tracer::disabled();
+        ev(&mut t, SpanKind::Arrival, 1);
+        assert!(!t.is_enabled());
+        let mut log = SpanLog::new(8);
+        t.drain_into(&mut log);
+        assert!(log.is_empty());
+    }
+
+    #[test]
+    fn ring_overwrites_oldest_and_keeps_order() {
+        let epoch = Instant::now();
+        let mut t = Tracer::new(3, epoch);
+        for id in 1..=5 {
+            ev(&mut t, SpanKind::Arrival, id);
+        }
+        let mut log = SpanLog::new(8);
+        t.drain_into(&mut log);
+        assert_eq!(log.len(), 3);
+        assert_eq!(log.dropped, 2);
+        let ids: Vec<u64> = log.last(10, None).iter().map(|e| e.request_id).collect();
+        assert_eq!(ids, vec![3, 4, 5], "oldest events overwritten, order kept");
+    }
+
+    #[test]
+    fn span_log_filters_by_request_and_caps_last_n() {
+        let epoch = Instant::now();
+        let mut t = Tracer::new(64, epoch);
+        for id in [7u64, 8, 7, 9, 7] {
+            ev(&mut t, SpanKind::Arrival, id);
+        }
+        let mut log = SpanLog::new(64);
+        t.drain_into(&mut log);
+        assert_eq!(log.last(10, Some(7)).len(), 3);
+        assert_eq!(log.last(2, None).len(), 2);
+        assert_eq!(log.last(10, Some(404)).len(), 0);
+    }
+
+    #[test]
+    fn causal_chain_sorts_by_wall_then_rank() {
+        let epoch = Instant::now();
+        let mut t = Tracer::new(16, epoch);
+        // Record out of causal order with identical wall stamps is hard
+        // to force; instead check the rank tiebreak via direct pushes.
+        let mut log = SpanLog::new(16);
+        for kind in [SpanKind::Finish, SpanKind::Arrival, SpanKind::Admit] {
+            log.push(SpanEvent {
+                kind,
+                request_id: 1,
+                replica: 0,
+                worker: 0,
+                virt_s: 0.0,
+                wall_us: 100,
+                a: 0.0,
+                b: 0.0,
+            });
+        }
+        let kinds: Vec<SpanKind> = log.last(10, Some(1)).iter().map(|e| e.kind).collect();
+        assert_eq!(kinds, vec![SpanKind::Arrival, SpanKind::Admit, SpanKind::Finish]);
+        ev(&mut t, SpanKind::Arrival, 2);
+        t.drain_into(&mut log);
+        assert_eq!(log.len(), 4);
+    }
+
+    #[test]
+    fn jsonl_and_chrome_exports_parse() {
+        let events = vec![
+            SpanEvent {
+                kind: SpanKind::Arrival,
+                request_id: 42,
+                replica: 1,
+                worker: NO_INDEX,
+                virt_s: 0.5,
+                wall_us: 10,
+                a: 16.0,
+                b: 0.0,
+            },
+            SpanEvent {
+                kind: SpanKind::Finish,
+                request_id: 42,
+                replica: 1,
+                worker: 3,
+                virt_s: 1.5,
+                wall_us: 90,
+                a: 0.01,
+                b: 8.0,
+            },
+        ];
+        let jsonl = to_jsonl(&events);
+        let lines: Vec<&str> = jsonl.lines().collect();
+        assert_eq!(lines.len(), 2);
+        let first = Json::parse(lines[0]).unwrap();
+        assert_eq!(first.get("kind").unwrap().as_str().unwrap(), "arrival");
+        assert_eq!(first.get("request_id").unwrap().as_u64().unwrap(), 42);
+        assert_eq!(first.get("worker").unwrap().as_f64().unwrap(), -1.0);
+        let chrome = Json::parse(&to_chrome(&events)).unwrap();
+        let evs = chrome.get("traceEvents").unwrap().as_arr().unwrap();
+        assert_eq!(evs.len(), 2);
+        assert_eq!(evs[1].get("name").unwrap().as_str().unwrap(), "finish");
+        assert_eq!(
+            evs[1].get("args").unwrap().get("request_id").unwrap().as_u64().unwrap(),
+            42
+        );
+    }
+}

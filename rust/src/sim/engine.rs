@@ -135,6 +135,20 @@ pub struct Finished<P> {
     pub payload: P,
 }
 
+/// One admission from the most recent [`Engine::admit`] round — the
+/// hook the opt-in lifecycle tracer uses to emit `admit` spans and to
+/// time the exact first token (`wait_s` + the next step's Δt).  Kept in
+/// a reused buffer so reading it allocates nothing in steady state.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct AdmittedNote {
+    /// Request id (from `open`).
+    pub id: u64,
+    /// Worker the request was placed on.
+    pub worker: u32,
+    /// Queue wait at admission: `admit_clock − arrival_clock`, seconds.
+    pub wait_s: f64,
+}
+
 /// The shared barrier-step engine.  See the module docs for the data
 /// structures and the per-step complexity budget.
 #[derive(Debug)]
@@ -177,6 +191,9 @@ pub struct Engine<T, P> {
     /// stays waiting).
     dest: Vec<usize>,
     kept: Vec<WaitEntry<T>>,
+    /// Admissions of the most recent `admit` round (reused buffer) —
+    /// consumed by the lifecycle tracer, empty cost otherwise.
+    admit_log: Vec<AdmittedNote>,
     admitted: u64,
     completed: u64,
 }
@@ -221,6 +238,7 @@ impl<T, P> Engine<T, P> {
             waiting_views: Vec::new(),
             dest: Vec::new(),
             kept: Vec::new(),
+            admit_log: Vec::new(),
             admitted: 0,
             completed: 0,
             cfg,
@@ -302,6 +320,13 @@ impl<T, P> Engine<T, P> {
     }
 
     /// Requests admitted so far.
+    /// Admissions of the most recent [`Engine::admit`] round, in
+    /// placement order.  Cleared at the start of each round; read by
+    /// the opt-in lifecycle tracer (admit + first-token spans).
+    pub fn admitted_notes(&self) -> &[AdmittedNote] {
+        &self.admit_log
+    }
+
     pub fn admitted(&self) -> u64 {
         self.admitted
     }
@@ -359,6 +384,7 @@ impl<T, P> Engine<T, P> {
     {
         let g = self.cfg.g;
         let b = self.cfg.b;
+        self.admit_log.clear();
         let total_free = g * b - self.total_active;
         let wait_len = self.carry.len() + self.rest.len();
         if total_free == 0 || wait_len == 0 {
@@ -495,6 +521,11 @@ impl<T, P> Engine<T, P> {
                 }
             };
             bucket.push((gi as u32, slot as u32));
+            self.admit_log.push(AdmittedNote {
+                id,
+                worker: gi as u32,
+                wait_s: (admit_clock - e.arrival_clock).max(0.0),
+            });
             self.admitted += 1;
             admitted_now += 1;
         }

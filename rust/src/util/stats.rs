@@ -16,8 +16,30 @@ pub struct Summary {
 }
 
 impl Summary {
+    /// Summary of a sample.  An empty sample yields the documented
+    /// all-zero summary (`n == 0`) instead of panicking; use
+    /// [`Summary::try_of`] to distinguish "empty" explicitly.
     pub fn of(xs: &[f64]) -> Summary {
-        assert!(!xs.is_empty(), "Summary::of on empty sample");
+        match Summary::try_of(xs) {
+            Some(s) => s,
+            None => Summary {
+                n: 0,
+                mean: 0.0,
+                std: 0.0,
+                min: 0.0,
+                max: 0.0,
+                p50: 0.0,
+                p90: 0.0,
+                p99: 0.0,
+            },
+        }
+    }
+
+    /// Summary of a sample, or `None` when the sample is empty.
+    pub fn try_of(xs: &[f64]) -> Option<Summary> {
+        if xs.is_empty() {
+            return None;
+        }
         let n = xs.len();
         let mean = xs.iter().sum::<f64>() / n as f64;
         let var = if n > 1 {
@@ -27,7 +49,7 @@ impl Summary {
         };
         let mut sorted = xs.to_vec();
         sorted.sort_by(|a, b| a.total_cmp(b));
-        Summary {
+        Some(Summary {
             n,
             mean,
             std: var.sqrt(),
@@ -36,14 +58,18 @@ impl Summary {
             p50: percentile_sorted(&sorted, 50.0),
             p90: percentile_sorted(&sorted, 90.0),
             p99: percentile_sorted(&sorted, 99.0),
-        }
+        })
     }
 }
 
-/// Percentile (nearest-rank with linear interpolation) of a sorted slice.
+/// Percentile (nearest-rank with linear interpolation) of a sorted
+/// slice.  An empty slice yields 0.0 (documented zero path — callers
+/// that must distinguish emptiness should check before calling).
 pub fn percentile_sorted(sorted: &[f64], p: f64) -> f64 {
-    assert!(!sorted.is_empty());
     assert!((0.0..=100.0).contains(&p));
+    if sorted.is_empty() {
+        return 0.0;
+    }
     if sorted.len() == 1 {
         return sorted[0];
     }
@@ -54,7 +80,8 @@ pub fn percentile_sorted(sorted: &[f64], p: f64) -> f64 {
     sorted[lo] * (1.0 - frac) + sorted[hi] * frac
 }
 
-/// Percentile of an unsorted slice.
+/// Percentile of an unsorted slice (0.0 on empty input, like
+/// [`percentile_sorted`]).
 pub fn percentile(xs: &[f64], p: f64) -> f64 {
     let mut sorted = xs.to_vec();
     sorted.sort_by(|a, b| a.total_cmp(b));
@@ -188,6 +215,23 @@ mod tests {
     fn summary_std_sample() {
         let s = Summary::of(&[2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0]);
         assert!((s.std - 2.138089935).abs() < 1e-6);
+    }
+
+    #[test]
+    fn empty_inputs_take_the_documented_zero_path() {
+        // No panics: empty samples yield the all-zero summary / 0.0.
+        let s = Summary::of(&[]);
+        assert_eq!(s.n, 0);
+        assert_eq!(s.mean, 0.0);
+        assert_eq!(s.p99, 0.0);
+        assert_eq!(Summary::try_of(&[]), None);
+        assert_eq!(percentile_sorted(&[], 50.0), 0.0);
+        assert_eq!(percentile(&[], 99.0), 0.0);
+        assert_eq!(median(&[]), 0.0);
+        // and the non-empty path still works through try_of
+        let s = Summary::try_of(&[4.0]).unwrap();
+        assert_eq!(s.n, 1);
+        assert_eq!(s.p50, 4.0);
     }
 
     #[test]

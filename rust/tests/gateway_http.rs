@@ -11,6 +11,7 @@ use bfio_serve::gateway::http as ghttp;
 use bfio_serve::gateway::loadgen::{self, LoadGenConfig};
 use bfio_serve::gateway::sim::{SimBackend, SimBackendConfig};
 use bfio_serve::gateway::{Gateway, GatewayConfig};
+use bfio_serve::metrics::prometheus;
 use bfio_serve::util::json::Json;
 
 /// Boot a gateway on an ephemeral loopback port.
@@ -247,6 +248,102 @@ fn loadgen_end_to_end_reports_policy_table() {
     // the row renders without panicking
     let row = report.table_row(&policy);
     assert!(row.contains("BF-IO"));
+    gw.shutdown();
+}
+
+#[test]
+fn trace_endpoint_serves_complete_span_chains_and_metrics_lint_clean() {
+    // Gateway with the flight recorder on: a completed request's whole
+    // lifecycle is retrievable by id via /v0/trace, and the full live
+    // /metrics exposition (histogram families included) lints clean.
+    let backend = SimBackend::new(SimBackendConfig {
+        g: 2,
+        b: 2,
+        policy: "fcfs".to_string(),
+        step_delay: Duration::ZERO,
+        batch_window: Duration::ZERO,
+        trace: true,
+        trace_buf: 512,
+        ..SimBackendConfig::default()
+    })
+    .unwrap();
+    let gw = Gateway::spawn(
+        GatewayConfig { addr: "127.0.0.1:0".to_string(), threads: 8 },
+        Arc::new(backend),
+    )
+    .unwrap();
+    let a = gw.addr.to_string();
+
+    let mut last_id = 0u64;
+    for i in 0..4 {
+        let body = format!(r#"{{"prompt": [7, 7, {i}], "max_tokens": 3}}"#);
+        let r = ghttp::http_call(&a, "POST", "/v1/completions", Some(&body)).unwrap();
+        assert_eq!(r.status, 200);
+        let v = Json::parse(r.body_str().unwrap()).unwrap();
+        last_id = v
+            .get("bfio")
+            .unwrap()
+            .get("request_id")
+            .unwrap()
+            .as_u64()
+            .unwrap();
+    }
+
+    // Span chain for a known request id, as JSONL.
+    let r = ghttp::http_call(
+        &a,
+        "GET",
+        &format!("/v0/trace?last=256&id={last_id}"),
+        None,
+    )
+    .unwrap();
+    assert_eq!(r.status, 200);
+    let kinds: Vec<String> = r
+        .body_str()
+        .unwrap()
+        .lines()
+        .map(|l| {
+            let ev = Json::parse(l).unwrap();
+            assert_eq!(
+                ev.get("request_id").unwrap().as_u64().unwrap(),
+                last_id
+            );
+            ev.get("kind").unwrap().as_str().unwrap().to_string()
+        })
+        .collect();
+    assert_eq!(
+        kinds,
+        vec!["arrival", "admit", "first_token", "finish"],
+        "complete causal chain for request {last_id}"
+    );
+
+    // Chrome trace_event export of the same store.
+    let r = ghttp::http_call(&a, "GET", "/v0/trace?format=chrome", None).unwrap();
+    assert_eq!(r.status, 200);
+    let v = Json::parse(r.body_str().unwrap()).unwrap();
+    assert!(!v.get("traceEvents").unwrap().as_arr().unwrap().is_empty());
+
+    // The live exposition: structurally clean, with the mergeable
+    // latency histograms and the SLO-goodput gauge present.
+    let r = ghttp::http_call(&a, "GET", "/metrics", None).unwrap();
+    assert_eq!(r.status, 200);
+    let text = r.body_str().unwrap();
+    prometheus::lint(text).expect("live /metrics exposition must lint clean");
+    assert!(text.contains("# TYPE bfio_ttft_seconds histogram"));
+    assert!(text.contains("# TYPE bfio_tpot_seconds histogram"));
+    assert!(text.contains("bfio_ttft_seconds_bucket"));
+    assert!(text.contains("le=\"+Inf\""));
+    let goodput = loadgen::prom_value(text, "bfio_slo_goodput_ratio").unwrap();
+    assert!((0.0..=1.0).contains(&goodput));
+    assert!(loadgen::prom_value(text, "bfio_ttft_seconds_count").unwrap() >= 4.0);
+    gw.shutdown();
+}
+
+#[test]
+fn trace_endpoint_is_404_when_tracing_off() {
+    let (gw, a) = boot("fcfs", 0, 0);
+    let r = ghttp::http_call(&a, "GET", "/v0/trace", None).unwrap();
+    assert_eq!(r.status, 404, "tracing is strictly opt-in");
     gw.shutdown();
 }
 

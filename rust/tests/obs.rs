@@ -1,0 +1,143 @@
+//! Observability-layer integration tests: DDSketch-vs-exact quantile
+//! parity on realistic workload shapes (Zipf prompt lengths,
+//! BurstGPT-like lognormal latencies) including the merge path, plus an
+//! exposition-lint roundtrip over a real rendered report.
+
+use bfio_serve::config::SimConfig;
+use bfio_serve::metrics::prometheus::{lint, render_report, PromWriter};
+use bfio_serve::obs::sketch::{seconds_buckets, token_buckets, DEFAULT_ALPHA};
+use bfio_serve::obs::QuantileSketch;
+use bfio_serve::sim::Simulator;
+use bfio_serve::util::rng::{Rng, Zipf};
+use bfio_serve::util::stats;
+use bfio_serve::workload::adversarial::overloaded_trace;
+use bfio_serve::workload::longbench::LongBenchLike;
+
+/// Assert every checked quantile of `sk` is within the DDSketch
+/// relative-error guarantee of the exact sample quantile.  The exact
+/// side interpolates between order statistics, so allow the guarantee
+/// `alpha` plus the gap one rank can contribute at these sample sizes.
+fn assert_parity(sk: &QuantileSketch, xs: &[f64], label: &str) {
+    let mut sorted = xs.to_vec();
+    sorted.sort_by(|a, b| a.total_cmp(b));
+    for &q in &[0.01, 0.10, 0.25, 0.50, 0.75, 0.90, 0.99, 0.999] {
+        let got = sk.quantile(q).expect("non-empty sketch");
+        let want = stats::percentile_sorted(&sorted, q * 100.0);
+        let tol = 2.5 * DEFAULT_ALPHA * want.abs() + 1e-12;
+        assert!(
+            (got - want).abs() <= tol,
+            "{label}: q={q} sketch {got} vs exact {want} (tol {tol})"
+        );
+    }
+    // q=0 / q=1 are exact by construction.
+    assert_eq!(sk.quantile(0.0), Some(sorted[0]));
+    assert_eq!(sk.quantile(1.0), Some(*sorted.last().unwrap()));
+    assert_eq!(sk.count(), xs.len() as u64);
+}
+
+#[test]
+fn sketch_matches_exact_on_zipf_shaped_samples() {
+    // Zipf prompt lengths — the heavy-tailed shape prompt-length
+    // distributions take in the paper's workloads.
+    let z = Zipf::new(20_000, 1.1);
+    let mut rng = Rng::new(42);
+    let xs: Vec<f64> = (0..50_000).map(|_| z.sample(&mut rng) as f64).collect();
+    let mut sk = QuantileSketch::default();
+    for &x in &xs {
+        sk.insert(x);
+    }
+    assert_parity(&sk, &xs, "zipf");
+}
+
+#[test]
+fn sketch_matches_exact_on_burstgpt_like_latencies() {
+    // Lognormal virtual latencies, the BurstGPT-like TTFT/TPOT shape:
+    // median ~135 ms with a long right tail.
+    let mut rng = Rng::new(7);
+    let xs: Vec<f64> = (0..50_000).map(|_| rng.lognormal(-2.0, 1.0)).collect();
+    let mut sk = QuantileSketch::default();
+    for &x in &xs {
+        sk.insert(x);
+    }
+    assert_parity(&sk, &xs, "lognormal");
+}
+
+#[test]
+fn sharded_merge_is_exact_bucket_addition() {
+    // Per-replica sketches merged fleet-side must answer exactly like
+    // one sketch that saw every sample: merge adds bucket counts, so
+    // the results are bit-identical, not merely within tolerance.
+    let mut rng = Rng::new(19);
+    let xs: Vec<f64> = (0..40_000).map(|_| rng.lognormal(-1.5, 1.3)).collect();
+    let mut whole = QuantileSketch::default();
+    let mut shards: Vec<QuantileSketch> = (0..8).map(|_| QuantileSketch::default()).collect();
+    for (i, &x) in xs.iter().enumerate() {
+        whole.insert(x);
+        shards[i % 8].insert(x);
+    }
+    let mut merged = QuantileSketch::default();
+    for sh in &shards {
+        merged.merge(sh);
+    }
+    assert_eq!(merged.count(), whole.count());
+    assert_eq!(merged.min(), whole.min());
+    assert_eq!(merged.max(), whole.max());
+    for &q in &[0.0, 0.01, 0.5, 0.9, 0.99, 0.999, 1.0] {
+        assert_eq!(merged.quantile(q), whole.quantile(q), "q={q}");
+    }
+    assert_parity(&merged, &xs, "merged");
+}
+
+#[test]
+fn rendered_report_exposition_passes_lint() {
+    // End-to-end through the real pipeline: run the simulator on an
+    // overloaded LongBench-like trace, render the report exposition
+    // (histogram families backed by the live sketches included), and
+    // hold it to the strict structural linter.
+    let sampler = LongBenchLike::paper();
+    let mut rng = Rng::new(23);
+    let trace = overloaded_trace(&sampler, 4, 8, 80, 3.0, &mut rng);
+    let cfg = SimConfig {
+        g: 4,
+        b: 8,
+        max_steps: 80,
+        warmup_steps: 16,
+        seed: 23,
+        ..SimConfig::default()
+    };
+    let mut policy = bfio_serve::policies::by_name("bfio:8").unwrap();
+    let res = Simulator::new(cfg).run(&trace, policy.as_mut());
+    assert!(res.completed > 0);
+    assert!(res.report.obs.ttft.count() > 0, "sketches must be fed");
+    assert!((0.0..=1.0).contains(&res.report.slo_goodput));
+    let text = render_report(&res.report, "bfio:8");
+    lint(&text).expect("rendered exposition must lint clean");
+
+    // The histogram renderer over the run's live sketches: bucket lines
+    // must be cumulative, le-labelled, +Inf == _count — lint checks all
+    // of it structurally, then we spot-check the counts semantically.
+    let mut w = PromWriter::new();
+    let labels: [(&str, &str); 1] = [("policy", "bfio:8")];
+    w.histogram(
+        "bfio_ttft_seconds",
+        "Time to first token per completion.",
+        &labels,
+        &res.report.obs.ttft,
+        seconds_buckets(),
+    );
+    w.histogram(
+        "bfio_step_imbalance_tokens",
+        "Per-step instantaneous imbalance (Eq. 2).",
+        &labels,
+        &res.report.obs.imbalance,
+        token_buckets(),
+    );
+    let text = w.finish();
+    lint(&text).expect("histogram exposition must lint clean");
+    assert!(text.contains("bfio_ttft_seconds_bucket"));
+    assert!(text.contains("le=\"+Inf\""));
+    assert!(text.contains(&format!(
+        "bfio_ttft_seconds_count{{policy=\"bfio:8\"}} {}",
+        res.report.obs.ttft.count()
+    )));
+}
