@@ -34,6 +34,13 @@ pub struct ActuatorConfig {
     pub dwell_rounds: u64,
     /// Speed factor for cold-added replicas.
     pub add_speed: f64,
+    /// `(G, B)` shapes for cold-added replicas, cycled in order across
+    /// adds.  Empty means the fleet's uniform shape.  A heterogeneous
+    /// fleet (`FleetConfig::shapes`) seeds this so scale-up grows the
+    /// fleet with the same mix it was declared with; warm-pool
+    /// reactivation is untouched (the replica keeps its original
+    /// shape in place).
+    pub add_shapes: Vec<(usize, usize)>,
 }
 
 impl Default for ActuatorConfig {
@@ -44,6 +51,7 @@ impl Default for ActuatorConfig {
             cooldown_rounds: 20,
             dwell_rounds: 5,
             add_speed: 1.0,
+            add_shapes: Vec::new(),
         }
     }
 }
@@ -84,6 +92,8 @@ pub struct Actuator {
     last_action_round: Option<u64>,
     up_streak: u64,
     down_streak: u64,
+    /// Cold adds so far — indexes the `add_shapes` cycle.
+    cold_adds: u64,
 }
 
 impl Actuator {
@@ -93,6 +103,7 @@ impl Actuator {
             last_action_round: None,
             up_streak: 0,
             down_streak: 0,
+            cold_adds: 0,
         }
     }
 
@@ -194,8 +205,21 @@ impl Actuator {
         if sig.live >= self.cfg.max_replicas {
             return None;
         }
-        match core.add_replica(self.cfg.add_speed) {
-            Ok(id) => Some(AppliedAction::Added { round, replica: id }),
+        // Heterogeneous fleets grow with their declared shape mix:
+        // cold adds cycle through `add_shapes` in declaration order.
+        let added = match self
+            .cfg
+            .add_shapes
+            .get(self.cold_adds as usize % self.cfg.add_shapes.len().max(1))
+        {
+            Some(&(g, b)) => core.add_replica_shaped(self.cfg.add_speed, g, b),
+            None => core.add_replica(self.cfg.add_speed),
+        };
+        match added {
+            Ok(id) => {
+                self.cold_adds += 1;
+                Some(AppliedAction::Added { round, replica: id })
+            }
             Err(_) => None,
         }
     }
@@ -236,6 +260,7 @@ mod tests {
             cooldown_rounds: cooldown,
             dwell_rounds: dwell,
             add_speed: 1.0,
+            add_shapes: Vec::new(),
         })
     }
 
@@ -310,6 +335,32 @@ mod tests {
             crate::fleet::ReplicaState::Accepting,
             "decommission stands"
         );
+    }
+
+    #[test]
+    fn cold_adds_cycle_heterogeneous_shapes() {
+        let mut c = core(1);
+        let mut a = Actuator::new(ActuatorConfig {
+            min_replicas: 1,
+            max_replicas: 4,
+            cooldown_rounds: 0,
+            dwell_rounds: 1,
+            add_speed: 1.5,
+            add_shapes: vec![(4, 1), (1, 3)],
+        });
+        for i in 0..3u64 {
+            let sig = sig_of(&c);
+            let acted = a.act(ScaleDecision::Up, &sig, &mut c, i * 10);
+            assert!(
+                matches!(acted, Some(AppliedAction::Added { .. })),
+                "add {i}: {acted:?}"
+            );
+        }
+        let snaps = c.snapshot();
+        assert_eq!((snaps[1].g, snaps[1].b), (4, 1));
+        assert_eq!((snaps[2].g, snaps[2].b), (1, 3));
+        assert_eq!((snaps[3].g, snaps[3].b), (4, 1), "cycle wraps");
+        assert!(snaps.iter().skip(1).all(|s| (s.speed - 1.5).abs() < 1e-12));
     }
 
     #[test]

@@ -168,6 +168,9 @@ impl Controller {
                 cooldown_rounds: cfg.cooldown_rounds,
                 dwell_rounds: cfg.dwell_rounds,
                 add_speed: cfg.add_speed,
+                // Heterogeneous fleets scale up with their declared
+                // shape mix (cycled); uniform fleets inherit (G, B).
+                add_shapes: fleet.shapes.clone().unwrap_or_default(),
             }),
             power,
             t_token: fleet.t_token,

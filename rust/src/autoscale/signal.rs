@@ -22,7 +22,9 @@
 
 use crate::config::PowerConfig;
 use crate::energy::decompose;
-use crate::fleet::{FleetCore, ReplicaRef, ReplicaSnapshot, ReplicaState};
+use crate::fleet::{
+    FleetCore, ReplicaHealth, ReplicaRef, ReplicaSnapshot, ReplicaState,
+};
 
 /// One replica's controller-facing observation.
 #[derive(Clone, Debug)]
@@ -102,7 +104,11 @@ fn replica_signal(
     c_overhead: f64,
     power: &PowerConfig,
 ) -> ReplicaSignal {
-    let is_accepting = r.state == ReplicaState::Accepting;
+    // A Down replica is not capacity: the monitor has cut it from the
+    // rotation, so the controller must neither count its slots nor
+    // treat it as a warm drain to reactivate.
+    let is_accepting =
+        r.state == ReplicaState::Accepting && r.health != ReplicaHealth::Down;
     let slots = r.g * r.b;
     let active = r.active;
     let speed = r.speed.max(1e-12);
@@ -136,7 +142,10 @@ fn replica_signal(
     ReplicaSignal {
         id: r.id,
         accepting: is_accepting,
-        draining: !is_accepting,
+        // Lifecycle-draining only: a Down replica is *not* a warm-pool
+        // candidate (its engine state is gone, the monitor owns its
+        // return path via Recovering).
+        draining: r.state != ReplicaState::Accepting,
         remove_pending: r.state == (ReplicaState::Draining { remove: true }),
         speed: r.speed,
         workers: r.g,
@@ -271,6 +280,7 @@ mod tests {
             id,
             speed: 1.0,
             state,
+            health: ReplicaHealth::Healthy,
             g,
             b,
             free_per_worker: active.iter().map(|&a| b - a).collect(),
@@ -326,6 +336,24 @@ mod tests {
         assert!(!sig.replicas[0].remove_pending);
         assert!(sig.replicas[1].draining);
         assert!(sig.replicas[1].remove_pending);
+    }
+
+    #[test]
+    fn down_replica_is_neither_capacity_nor_warm_pool() {
+        // Health-Down with lifecycle state Accepting: the monitor has
+        // cut it out.  Its slots must not count as accepting capacity,
+        // and it must not masquerade as a reactivatable warm drain.
+        let mut snaps = vec![
+            snap(0, ReplicaState::Accepting, vec![1.0, 1.0], vec![1, 1]),
+            snap(1, ReplicaState::Accepting, vec![0.0, 0.0], vec![0, 0]),
+        ];
+        snaps[1].health = ReplicaHealth::Down;
+        let sig = sample(0, 0, &snaps, 1e-7, 1e-3, &PowerConfig::a100());
+        assert_eq!(sig.accepting, 1);
+        assert_eq!(sig.accepting_slots, 4);
+        assert_eq!(sig.live, 2, "down is still live (not removed)");
+        assert!(!sig.replicas[1].accepting);
+        assert!(!sig.replicas[1].draining, "down is not a warm drain");
     }
 
     #[test]

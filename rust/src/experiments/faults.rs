@@ -1,0 +1,244 @@
+//! Fault experiment: graceful degradation under deterministic chaos —
+//! energy per token, TPOT, and SLO-goodput versus crash rate × tier-1
+//! router, emitted as `BENCH_faults.json`.  The driver behind
+//! `bfio fleet --faults <plan>` and the CI chaos smoke.
+//!
+//! Each row runs the same trace through [`run_fleet_faulted`] with the
+//! plan's explicit events plus its random process re-seeded at one
+//! crash rate from the sweep ladder (rate 0 keeps only the explicit
+//! events, so the first column is the degradation baseline).  Same seed
+//! + plan ⇒ identical schedules and bit-identical results — the table
+//! is replayable, not a flaky chaos run.
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::fault::{FaultPlan, RandomFaults};
+use crate::fleet::run_fleet_faulted;
+use crate::util::json::{arr, num, obj, s, Json};
+
+use super::fleet::FleetScale;
+
+/// One (crash rate, router) cell of the degradation table.
+#[derive(Clone, Debug)]
+pub struct FaultBenchRow {
+    pub router: String,
+    /// Per-replica per-round random fault probability (0 = explicit
+    /// events only).
+    pub crash_rate: f64,
+    pub submitted: u64,
+    pub completed: u64,
+    /// Crash-lost requests requeued through the router (once per id).
+    pub requeued: u64,
+    /// Requests dropped (second loss or no surviving capacity).
+    pub shed: u64,
+    pub crashes: u64,
+    pub stalls: u64,
+    pub recoveries: u64,
+    pub tpot_s: f64,
+    pub throughput_tps: f64,
+    pub slo_goodput: f64,
+    /// Total energy over generated tokens, J/token.
+    pub energy_per_token_j: f64,
+    /// Wall-clock milliseconds this cell took to simulate.
+    pub run_ms: f64,
+}
+
+fn row_json(r: &FaultBenchRow) -> Json {
+    obj(vec![
+        ("router", s(&r.router)),
+        ("crash_rate", num(r.crash_rate)),
+        ("submitted", num(r.submitted as f64)),
+        ("completed", num(r.completed as f64)),
+        ("requeued", num(r.requeued as f64)),
+        ("shed", num(r.shed as f64)),
+        ("crashes", num(r.crashes as f64)),
+        ("stalls", num(r.stalls as f64)),
+        ("recoveries", num(r.recoveries as f64)),
+        ("tpot_s", num(r.tpot_s)),
+        ("throughput_tps", num(r.throughput_tps)),
+        ("slo_goodput", num(r.slo_goodput)),
+        ("energy_per_token_j", num(r.energy_per_token_j)),
+        ("run_ms", num(r.run_ms)),
+    ])
+}
+
+/// The crash-rate ladder for one sweep: the plan's own `rand:` rate
+/// when it has one (plus the rate-0 baseline), else a default ladder
+/// sized for smoke or full runs.
+fn rate_ladder(plan: &FaultPlan, smoke: bool) -> Vec<f64> {
+    match plan.random {
+        Some(rf) if rf.rate > 0.0 => vec![0.0, rf.rate],
+        _ if smoke => vec![0.0, 0.02],
+        _ => vec![0.0, 0.01, 0.05, 0.1],
+    }
+}
+
+/// Run every (crash rate, router) cell over the shared trace.
+pub fn run_fault_rows(
+    scale: &FleetScale,
+    routers: &[String],
+    plan: &FaultPlan,
+    smoke: bool,
+) -> Result<Vec<FaultBenchRow>> {
+    let trace = scale.trace();
+    let cfg = scale.fault_config();
+    let seed = plan.random.map_or(scale.seed, |rf| rf.seed);
+    let mut rows = Vec::new();
+    for &rate in &rate_ladder(plan, smoke) {
+        let cell_plan = FaultPlan {
+            events: plan.events.clone(),
+            random: (rate > 0.0).then_some(RandomFaults { rate, seed }),
+        };
+        let faults = (!cell_plan.is_empty()).then_some(&cell_plan);
+        for router in routers {
+            let t0 = std::time::Instant::now();
+            let res = run_fleet_faulted(&cfg, router, &trace, &[], None, faults)?;
+            let run_ms = t0.elapsed().as_secs_f64() * 1e3;
+            rows.push(FaultBenchRow {
+                router: res.router,
+                crash_rate: rate,
+                submitted: res.submitted,
+                completed: res.completed,
+                requeued: res.requeued,
+                shed: res.shed,
+                crashes: res.crashes,
+                stalls: res.stalls,
+                recoveries: res.recoveries,
+                tpot_s: res.tpot_s,
+                throughput_tps: res.throughput_tps,
+                slo_goodput: res.slo_goodput,
+                energy_per_token_j: if res.total_tokens > 0.0 {
+                    res.energy_j / res.total_tokens
+                } else {
+                    0.0
+                },
+                run_ms,
+            });
+        }
+    }
+    Ok(rows)
+}
+
+/// JSON document for one scale's degradation sweep.
+pub fn rows_to_json(scale: &FleetScale, plan_spec: &str, rows: &[FaultBenchRow]) -> Json {
+    obj(vec![
+        ("replicas", num(scale.replicas as f64)),
+        ("g", num(scale.g as f64)),
+        ("b", num(scale.b as f64)),
+        ("steps", num(scale.steps as f64)),
+        ("seed", num(scale.seed as f64)),
+        ("policy", s(&scale.policy)),
+        ("plan", s(plan_spec)),
+        ("rows", arr(rows.iter().map(row_json))),
+    ])
+}
+
+/// The shared `BENCH_faults.json` document shape — one schema whether
+/// the file was written by `bfio fleet --faults` or CI.
+pub fn bench_json(smoke: bool, total_ms: f64, sweep: Vec<Json>) -> Json {
+    obj(vec![
+        ("bench", s("faults")),
+        ("smoke", Json::Bool(smoke)),
+        ("total_ms", num(total_ms)),
+        ("sweep", arr(sweep)),
+    ])
+}
+
+fn print_row(r: &FaultBenchRow) {
+    println!(
+        "{:<20} {:>6.3} {:>8} {:>7} {:>6} {:>6} {:>6} {:>9.4} {:>9.4} {:>8.3} {:>8.1}",
+        r.router,
+        r.crash_rate,
+        r.completed,
+        r.requeued,
+        r.shed,
+        r.crashes,
+        r.recoveries,
+        r.tpot_s,
+        r.energy_per_token_j,
+        r.slo_goodput,
+        r.run_ms,
+    );
+}
+
+/// The `bfio fleet --faults` driver: run the degradation sweep, print
+/// the table, and write `out` (default `BENCH_faults.json`).
+pub fn faults_sweep(
+    scale: &FleetScale,
+    routers: &[String],
+    plan_spec: &str,
+    out: &Path,
+    smoke: bool,
+) -> Result<()> {
+    let plan = FaultPlan::parse(plan_spec)?;
+    println!(
+        "faults: {}x({}x{}) slots, {} steps, policy {}, plan {:?}, routers {:?}",
+        scale.replicas, scale.g, scale.b, scale.steps, scale.policy, plan_spec, routers,
+    );
+    let t0 = std::time::Instant::now();
+    let rows = run_fault_rows(scale, routers, &plan, smoke)?;
+    println!(
+        "{:<20} {:>6} {:>8} {:>7} {:>6} {:>6} {:>6} {:>9} {:>9} {:>8} {:>8}",
+        "router", "rate", "done", "requeue", "shed", "crash", "recov", "tpot(s)",
+        "J/tok", "goodput", "ms"
+    );
+    for r in &rows {
+        print_row(r);
+    }
+    let total_ms = t0.elapsed().as_secs_f64() * 1e3;
+    let json = bench_json(smoke, total_ms, vec![rows_to_json(scale, plan_spec, &rows)]);
+    std::fs::write(out, json.to_string_pretty() + "\n")?;
+    println!("wrote {}", out.display());
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> FleetScale {
+        FleetScale::new(3, 2, 4, 80)
+    }
+
+    #[test]
+    fn rate_zero_matches_fault_free_run() {
+        let scale = tiny();
+        let plan = FaultPlan::default();
+        let rows =
+            run_fault_rows(&scale, &["low".to_string()], &plan, true).unwrap();
+        // smoke ladder: rate 0 baseline + one chaos point
+        assert_eq!(rows.len(), 2);
+        let clean =
+            crate::fleet::run_fleet(&scale.fault_config(), "low", &scale.trace(), &[])
+                .unwrap();
+        assert_eq!(rows[0].completed, clean.completed);
+        assert_eq!(rows[0].crashes + rows[0].stalls, 0);
+        assert!((rows[0].tpot_s - clean.tpot_s).abs() < 1e-12);
+        // the chaos point injected something and still conserved work
+        let chaos = &rows[1];
+        assert!(chaos.crashes + chaos.stalls > 0, "rate 0.02 injected nothing");
+        assert_eq!(chaos.completed + chaos.shed, chaos.submitted);
+    }
+
+    #[test]
+    fn sweep_writes_json_with_rate_router_rows() {
+        let out = std::env::temp_dir().join("bfio_faults_test.json");
+        let routers = vec!["low".to_string(), "wrr".to_string()];
+        faults_sweep(&tiny(), &routers, "rand:0.03:5", &out, true).unwrap();
+        let text = std::fs::read_to_string(&out).unwrap();
+        let v = crate::util::json::Json::parse(&text).unwrap();
+        assert_eq!(v.get("bench").unwrap().as_str().unwrap(), "faults");
+        let sweep = v.get("sweep").unwrap().as_arr().unwrap();
+        let rows = sweep[0].get("rows").unwrap().as_arr().unwrap();
+        // 2 rates (0, plan rate) x 2 routers
+        assert_eq!(rows.len(), 4);
+        for r in rows {
+            assert!(r.get("crash_rate").is_some());
+            assert!(r.get("energy_per_token_j").is_some());
+            assert!(r.get("slo_goodput").is_some());
+        }
+        assert_eq!(sweep[0].get("plan").unwrap().as_str().unwrap(), "rand:0.03:5");
+    }
+}

@@ -86,6 +86,18 @@ impl FleetScale {
         }
     }
 
+    /// Like `fleet_config` but uncapped (`max_rounds = 0`, run until
+    /// the trace drains): the fault sweep's conservation accounting
+    /// (`completed + shed == submitted`) only holds for a fully
+    /// drained run, and crash-requeued work lands after the nominal
+    /// step horizon.
+    pub fn fault_config(&self) -> FleetConfig {
+        FleetConfig {
+            max_rounds: 0,
+            ..self.fleet_config()
+        }
+    }
+
     /// The shared trace: an overloaded instance sized for the fleet's
     /// total worker count.
     pub fn trace(&self) -> Vec<Request> {

@@ -7,6 +7,7 @@
 //! scaled down so every experiment completes in seconds.
 
 pub mod autoscale;
+pub mod faults;
 pub mod fleet;
 pub mod scaling;
 

@@ -1,0 +1,431 @@
+//! Deterministic fault injection: seeded schedules of replica crashes,
+//! transient fail-slow stalls, and recoveries, applied at round
+//! boundaries — plus the health-monitor knobs the fleet's replica
+//! state machine (Healthy → Suspect → Down → Recovering) runs on.
+//!
+//! One injection path serves every driver: the offline
+//! [`crate::fleet::run_fleet_faulted`], `benches`/`experiments` sweeps,
+//! and the live [`crate::fleet::FleetBackend`] all build a
+//! [`FaultInjector`] from the same [`FaultPlan`] and apply its due
+//! events between rounds.  Faults are *ground truth* hidden from the
+//! routing tier: a crash silently stops a replica's barrier steps (its
+//! non-migratable actives are lost), a stall multiplies its true step
+//! time while the declared speed factor is unchanged.  The routers only
+//! ever see what the observable health monitor infers — missed-round
+//! detection for crashes, an EWMA step-time ratio against the declared
+//! speed for fail-slow.
+//!
+//! ## Plan grammar (`--faults`)
+//!
+//! Comma-separated events plus an optional random generator:
+//!
+//! ```text
+//! crash@ROUND:rID            crash replica ID at round boundary ROUND
+//! stall@ROUND:rIDxFACTOR     fail-slow: hidden step-time multiplier
+//! recover@ROUND:rID          clear crash/stall; health goes half-open
+//! rand:RATE[:SEED]           seeded per-round crash/stall process
+//! ```
+//!
+//! Example: `--faults crash@20:r0,recover@40:r0,stall@10:r2x4,rand:0.01:7`.
+//! The `rand` generator is materialized deterministically once the
+//! driver knows the round horizon and replica count
+//! ([`FaultPlan::schedule`]), so identical seed + plan ⇒ identical
+//! schedules everywhere.
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::rng::Rng;
+
+/// Observable health of one replica, as inferred by the fleet's
+/// heartbeat/progress monitor (never from the hidden fault flags).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ReplicaHealth {
+    /// Progressing at the declared speed.
+    Healthy,
+    /// EWMA step-time ratio above [`HealthConfig::suspect_ratio`]:
+    /// fail-slow suspected, cost-penalized at the router.
+    Suspect,
+    /// Missed [`HealthConfig::miss_limit`] consecutive rounds with work
+    /// pending: excluded from routing (circuit breaker open).
+    Down,
+    /// Recovered but on probation (circuit breaker half-open): routable
+    /// under [`HealthConfig::probe_penalty`] until
+    /// [`HealthConfig::probe_rounds`] clean rounds pass.
+    Recovering,
+}
+
+impl ReplicaHealth {
+    pub fn label(self) -> &'static str {
+        match self {
+            ReplicaHealth::Healthy => "healthy",
+            ReplicaHealth::Suspect => "suspect",
+            ReplicaHealth::Down => "down",
+            ReplicaHealth::Recovering => "recovering",
+        }
+    }
+}
+
+/// Health-monitor and circuit-breaker knobs (the defaults are the
+/// documented behavior; see the README "Fault tolerance" section).
+#[derive(Clone, Copy, Debug)]
+pub struct HealthConfig {
+    /// EWMA smoothing factor for the observed/expected step-time ratio.
+    pub ewma_alpha: f64,
+    /// Ratio above which a stepping replica becomes `Suspect`.
+    pub suspect_ratio: f64,
+    /// Consecutive missed rounds (work pending, no step) before `Down`.
+    pub miss_limit: u32,
+    /// Clean rounds a `Recovering` replica must serve before `Healthy`.
+    pub probe_rounds: u32,
+    /// Router cost multiplier applied to `Suspect` replicas.
+    pub suspect_penalty: f64,
+    /// Router cost multiplier applied to `Recovering` replicas.
+    pub probe_penalty: f64,
+}
+
+impl Default for HealthConfig {
+    fn default() -> Self {
+        HealthConfig {
+            ewma_alpha: 0.3,
+            suspect_ratio: 1.5,
+            miss_limit: 3,
+            probe_rounds: 3,
+            suspect_penalty: 4.0,
+            probe_penalty: 2.0,
+        }
+    }
+}
+
+/// What happens to a replica at a fault event.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum FaultKind {
+    /// Process death: barrier steps stop, in-flight actives are lost
+    /// (requeued exactly once via request-id idempotency), queued work
+    /// is re-offered through the router.
+    Crash,
+    /// Fail-slow: the replica's *true* step time is multiplied by the
+    /// factor while its declared speed stays unchanged.
+    Stall(f64),
+    /// Clear any crash/stall; the health machine goes half-open.
+    Recover,
+}
+
+impl FaultKind {
+    pub fn label(&self) -> &'static str {
+        match self {
+            FaultKind::Crash => "crash",
+            FaultKind::Stall(_) => "stall",
+            FaultKind::Recover => "recover",
+        }
+    }
+}
+
+/// One scheduled fault, applied at the boundary *before* round `round`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FaultEvent {
+    pub round: u64,
+    pub replica: usize,
+    pub kind: FaultKind,
+}
+
+/// Parameters of the seeded random fault process (`rand:RATE[:SEED]`).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct RandomFaults {
+    /// Per-replica, per-round probability of a new fault.
+    pub rate: f64,
+    pub seed: u64,
+}
+
+/// A deterministic fault schedule: explicit events plus an optional
+/// seeded random process.  Parse with [`FaultPlan::parse`], materialize
+/// with [`FaultPlan::schedule`].
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct FaultPlan {
+    pub events: Vec<FaultEvent>,
+    pub random: Option<RandomFaults>,
+}
+
+impl FaultPlan {
+    /// True when the plan schedules nothing (a faulted run with an
+    /// empty plan is bit-identical to the fault-free path).
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty() && self.random.is_none()
+    }
+
+    /// A pure random plan at `rate` crashes/stalls per replica-round.
+    pub fn random(rate: f64, seed: u64) -> FaultPlan {
+        FaultPlan {
+            events: Vec::new(),
+            random: Some(RandomFaults { rate, seed }),
+        }
+    }
+
+    /// Parse the `--faults` grammar (see the module docs).
+    pub fn parse(spec: &str) -> Result<FaultPlan> {
+        let mut plan = FaultPlan::default();
+        for part in spec.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+            if let Some(rest) = part.strip_prefix("rand:") {
+                let mut it = rest.split(':');
+                let rate: f64 = it
+                    .next()
+                    .unwrap_or("")
+                    .parse()
+                    .with_context(|| format!("bad rand rate in {part:?}"))?;
+                if !(0.0..=1.0).contains(&rate) {
+                    bail!("rand rate {rate} not in [0, 1]");
+                }
+                let seed: u64 = match it.next() {
+                    Some(s) => s
+                        .parse()
+                        .with_context(|| format!("bad rand seed in {part:?}"))?,
+                    None => 0,
+                };
+                if plan.random.is_some() {
+                    bail!("duplicate rand: clause in fault plan");
+                }
+                plan.random = Some(RandomFaults { rate, seed });
+                continue;
+            }
+            let (kind_s, rest) = part
+                .split_once('@')
+                .with_context(|| format!("fault event {part:?}: expected KIND@ROUND:rID"))?;
+            let (round_s, target) = rest
+                .split_once(':')
+                .with_context(|| format!("fault event {part:?}: expected KIND@ROUND:rID"))?;
+            let round: u64 = round_s
+                .parse()
+                .with_context(|| format!("bad round in {part:?}"))?;
+            let target = target
+                .strip_prefix('r')
+                .with_context(|| format!("fault event {part:?}: replica must be rID"))?;
+            let (id_s, kind) = match kind_s {
+                "crash" => (target, FaultKind::Crash),
+                "recover" => (target, FaultKind::Recover),
+                "stall" => {
+                    let (id_s, factor_s) = target.split_once('x').with_context(|| {
+                        format!("stall event {part:?}: expected stall@ROUND:rIDxFACTOR")
+                    })?;
+                    let factor: f64 = factor_s
+                        .parse()
+                        .with_context(|| format!("bad stall factor in {part:?}"))?;
+                    if factor <= 1.0 {
+                        bail!("stall factor {factor} must be > 1");
+                    }
+                    (id_s, FaultKind::Stall(factor))
+                }
+                other => bail!("unknown fault kind {other:?} in {part:?}"),
+            };
+            let replica: usize = id_s
+                .parse()
+                .with_context(|| format!("bad replica in {part:?}"))?;
+            plan.events.push(FaultEvent { round, replica, kind });
+        }
+        Ok(plan)
+    }
+
+    /// Materialize the full schedule for `replicas` replicas over
+    /// `rounds` rounds: explicit events plus the seeded random process,
+    /// sorted by `(round, replica)` so application order is
+    /// deterministic whatever the driver.
+    ///
+    /// The random process draws one Bernoulli per (round, replica) in
+    /// row-major order from its own [`Rng`] — independent of every
+    /// simulation stream.  Each generated fault (2/3 crash, 1/3 stall
+    /// ×2..6) schedules its own recovery a bounded number of rounds
+    /// later, and a replica with an outstanding fault draws no new one,
+    /// so the process always heals and never double-crashes.  At least
+    /// one replica is left untouched per round, so the fleet always has
+    /// a survivor.
+    pub fn schedule(&self, rounds: u64, replicas: usize) -> Vec<FaultEvent> {
+        let mut events = self.events.clone();
+        if let Some(rf) = self.random {
+            let mut rng = Rng::new(rf.seed ^ 0xFA_17);
+            // round the replica recovers at; 0 = no outstanding fault
+            let mut busy_until = vec![0u64; replicas];
+            for round in 1..rounds {
+                let mut faulted_now = 0usize;
+                for replica in 0..replicas {
+                    if busy_until[replica] > round {
+                        continue;
+                    }
+                    // keep a survivor: never fault the last clean replica
+                    let clean = (0..replicas)
+                        .filter(|&r| busy_until[r] <= round)
+                        .count();
+                    if clean.saturating_sub(faulted_now) <= 1 {
+                        break;
+                    }
+                    if !rng.bernoulli(rf.rate) {
+                        continue;
+                    }
+                    let kind = if rng.below(3) < 2 {
+                        FaultKind::Crash
+                    } else {
+                        FaultKind::Stall(2.0 + rng.below(5) as f64)
+                    };
+                    let outage = 4 + rng.below(8);
+                    events.push(FaultEvent { round, replica, kind });
+                    events.push(FaultEvent {
+                        round: round + outage,
+                        replica,
+                        kind: FaultKind::Recover,
+                    });
+                    busy_until[replica] = round + outage + 1;
+                    faulted_now += 1;
+                }
+            }
+        }
+        events.sort_by_key(|e| (e.round, e.replica));
+        events
+    }
+}
+
+/// Fault counters every driver surfaces (gateway stats, `FleetResult`,
+/// the `bfio_fault_*` Prometheus families).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct FaultCounters {
+    pub crashes: u64,
+    pub stalls: u64,
+    pub recoveries: u64,
+    /// Lost in-flight actives requeued (exactly once per request id).
+    pub requeued: u64,
+    /// Requests shed: lost a second time, or no surviving capacity.
+    pub shed: u64,
+}
+
+/// Cursor over a materialized schedule: the driver calls
+/// [`FaultInjector::due`] once per round boundary and applies the
+/// returned events in order.
+#[derive(Clone, Debug)]
+pub struct FaultInjector {
+    events: Vec<FaultEvent>,
+    cursor: usize,
+}
+
+impl FaultInjector {
+    pub fn new(plan: &FaultPlan, rounds: u64, replicas: usize) -> FaultInjector {
+        FaultInjector { events: plan.schedule(rounds, replicas), cursor: 0 }
+    }
+
+    /// All not-yet-applied events with `event.round <= round`, in
+    /// schedule order.  Advances the cursor.
+    pub fn due(&mut self, round: u64) -> &[FaultEvent] {
+        let start = self.cursor;
+        while self.cursor < self.events.len() && self.events[self.cursor].round <= round {
+            self.cursor += 1;
+        }
+        &self.events[start..self.cursor]
+    }
+
+    /// Round of the next pending event (drivers must not idle-skip past
+    /// it), or `None` when the schedule is exhausted.
+    pub fn next_round(&self) -> Option<u64> {
+        self.events.get(self.cursor).map(|e| e.round)
+    }
+
+    pub fn pending(&self) -> usize {
+        self.events.len() - self.cursor
+    }
+
+    pub fn is_done(&self) -> bool {
+        self.cursor >= self.events.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_explicit_events() {
+        let p = FaultPlan::parse("crash@20:r0, recover@40:r0,stall@10:r2x4").unwrap();
+        assert_eq!(p.events.len(), 3);
+        assert_eq!(
+            p.events[0],
+            FaultEvent { round: 20, replica: 0, kind: FaultKind::Crash }
+        );
+        assert_eq!(
+            p.events[1],
+            FaultEvent { round: 40, replica: 0, kind: FaultKind::Recover }
+        );
+        assert_eq!(
+            p.events[2],
+            FaultEvent { round: 10, replica: 2, kind: FaultKind::Stall(4.0) }
+        );
+        assert!(p.random.is_none());
+        assert!(!p.is_empty());
+        assert!(FaultPlan::parse("").unwrap().is_empty());
+    }
+
+    #[test]
+    fn parse_rand_clause_and_errors() {
+        let p = FaultPlan::parse("rand:0.05:9").unwrap();
+        assert_eq!(p.random, Some(RandomFaults { rate: 0.05, seed: 9 }));
+        let p = FaultPlan::parse("rand:0.1").unwrap();
+        assert_eq!(p.random.unwrap().seed, 0);
+        assert!(FaultPlan::parse("rand:1.5").is_err());
+        assert!(FaultPlan::parse("crash@x:r0").is_err());
+        assert!(FaultPlan::parse("crash@5:0").is_err(), "replica needs r prefix");
+        assert!(FaultPlan::parse("stall@5:r0").is_err(), "stall needs xFACTOR");
+        assert!(FaultPlan::parse("stall@5:r0x0.5").is_err(), "factor must be > 1");
+        assert!(FaultPlan::parse("melt@5:r0").is_err());
+        assert!(FaultPlan::parse("rand:0.1,rand:0.2").is_err());
+    }
+
+    #[test]
+    fn schedule_is_deterministic_and_sorted() {
+        let p = FaultPlan::parse("crash@30:r1,rand:0.2:7").unwrap();
+        let a = p.schedule(60, 3);
+        let b = p.schedule(60, 3);
+        assert_eq!(a, b, "same plan + seed => same schedule");
+        assert!(a.windows(2).all(|w| (w[0].round, w[0].replica)
+            <= (w[1].round, w[1].replica)));
+        assert!(a.len() > 1, "rate 0.2 over 60 rounds generated nothing");
+        // a different seed gives a different realization
+        let c = FaultPlan::random(0.2, 8).schedule(60, 3);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn random_schedule_always_heals_and_keeps_a_survivor() {
+        let p = FaultPlan::random(0.5, 3);
+        let events = p.schedule(100, 4);
+        let mut down = vec![false; 4];
+        for e in &events {
+            match e.kind {
+                FaultKind::Crash | FaultKind::Stall(_) => {
+                    assert!(!down[e.replica], "double fault on r{}", e.replica);
+                    down[e.replica] = true;
+                    assert!(
+                        down.iter().filter(|d| **d).count() < 4,
+                        "all replicas faulted at once"
+                    );
+                }
+                FaultKind::Recover => down[e.replica] = false,
+            }
+        }
+        // every fault has a matching recovery somewhere in the schedule
+        let faults =
+            events.iter().filter(|e| e.kind != FaultKind::Recover).count();
+        let recovers =
+            events.iter().filter(|e| e.kind == FaultKind::Recover).count();
+        assert_eq!(faults, recovers);
+    }
+
+    #[test]
+    fn injector_cursor_and_next_round() {
+        let p = FaultPlan::parse("crash@5:r0,stall@5:r1x2,recover@9:r0").unwrap();
+        let mut inj = FaultInjector::new(&p, 20, 2);
+        assert_eq!(inj.next_round(), Some(5));
+        assert_eq!(inj.pending(), 3);
+        assert!(inj.due(4).is_empty());
+        let due = inj.due(5);
+        assert_eq!(due.len(), 2);
+        assert_eq!(due[0].replica, 0);
+        assert_eq!(due[1].replica, 1);
+        assert_eq!(inj.next_round(), Some(9));
+        assert_eq!(inj.due(100).len(), 1);
+        assert!(inj.is_done());
+        assert!(inj.due(200).is_empty());
+    }
+}

@@ -19,6 +19,7 @@ use anyhow::{anyhow, Context, Result};
 
 use crate::autoscale::{AutoscaleConfig, Controller, ControllerState};
 use crate::config::SimConfig;
+use crate::fault::{FaultInjector, FaultPlan, HealthConfig};
 use crate::gateway::backend::{
     AdminCmd, AdminOutcome, Backend, BackendStats, Completion,
     CompletionRequest, ReplicaStatus, WorkerStatus,
@@ -72,6 +73,12 @@ pub struct FleetBackendConfig {
     /// Span capacity of the shared flight-recorder log (and of each
     /// per-replica ring); oldest spans are overwritten when full.
     pub trace_buf: usize,
+    /// Deterministic fault plan (`bfio gateway --faults <plan>`; see
+    /// [`FaultPlan::parse`] for the grammar).  Events fire at their
+    /// scheduled *round* as the live core reaches it; random plans are
+    /// scheduled over [`FleetBackendConfig::FAULT_HORIZON_ROUNDS`].
+    /// `None` = fault-free (the PR-6 behavior, bit for bit).
+    pub faults: Option<FaultPlan>,
 }
 
 impl Default for FleetBackendConfig {
@@ -95,11 +102,16 @@ impl Default for FleetBackendConfig {
             slo: SloConfig::default(),
             trace: false,
             trace_buf: 4096,
+            faults: None,
         }
     }
 }
 
 impl FleetBackendConfig {
+    /// Round horizon random fault plans are scheduled over for the
+    /// online backend (the offline driver sizes from its trace).
+    pub const FAULT_HORIZON_ROUNDS: u64 = 10_000;
+
     fn fleet_config(&self) -> FleetConfig {
         let speeds = match &self.speeds {
             Some(s) => s.clone(),
@@ -121,6 +133,7 @@ impl FleetBackendConfig {
             record_completions: false,
             predictor: Predictor::Oracle,
             slo: self.slo,
+            health: HealthConfig::default(),
         }
     }
 }
@@ -186,6 +199,17 @@ impl FleetBackend {
             Some(auto) => Some(Controller::new(auto, &fleet_cfg)?),
             None => None,
         };
+        let injector = cfg
+            .faults
+            .as_ref()
+            .filter(|p| !p.is_empty())
+            .map(|p| {
+                FaultInjector::new(
+                    p,
+                    FleetBackendConfig::FAULT_HORIZON_ROUNDS,
+                    fleet_cfg.speeds.len(),
+                )
+            });
         let policy_label = crate::policies::by_name(&cfg.policy)
             .ok_or_else(|| anyhow!("unknown policy {:?}", cfg.policy))?
             .name();
@@ -217,6 +241,7 @@ impl FleetBackend {
             snap: Arc::clone(&snap),
             core,
             controller,
+            injector,
             loads_scratch,
             tracer,
             trace_log: trace_log.clone(),
@@ -308,6 +333,8 @@ struct Scheduler {
     snap: Arc<Mutex<Snapshot>>,
     core: FleetCore<Pending, Sender<Completion>>,
     controller: Option<Controller>,
+    /// Scheduled fault events (`--faults`), applied at round boundaries.
+    injector: Option<FaultInjector>,
     /// Reusable scratch for the fleet-level imbalance concatenation in
     /// `fill_snapshot` (the published `Snapshot` itself is updated in
     /// place under its mutex, reusing its own buffers).
@@ -441,6 +468,43 @@ impl Scheduler {
         }
     }
 
+    /// Apply the fault events due at the current round, then resolve
+    /// any crash-lost in-flight requests: each is resubmitted through
+    /// the router exactly once (a fresh prompt of the same shape — the
+    /// crashed KV is gone), as long as some replica is accepting and
+    /// not known-Down.  A repeat loss, or a loss with no surviving
+    /// capacity, is shed: dropping the response `Sender` fails the
+    /// blocked [`Backend::complete`] call, which the gateway turns into
+    /// a 503 (and retries, with a fresh id, up to its own budget).
+    fn apply_faults(&mut self) {
+        let Some(inj) = self.injector.as_mut() else { return };
+        let round = self.core.round();
+        let due = inj.due(round).to_vec();
+        for ev in &due {
+            self.core.apply_fault(ev);
+        }
+        if !self.core.has_lost() {
+            return;
+        }
+        let accepting = self.core.has_accepting();
+        for (id, prefill, o, done, requeue) in self.core.drain_lost() {
+            if requeue && accepting {
+                let req = CompletionRequest {
+                    id,
+                    prompt_tokens: vec![0; prefill.max(1.0) as usize],
+                    max_tokens: o.max(1) as u32,
+                };
+                self.core.resubmit(prefill, round, Pending { req, done });
+            } else {
+                if requeue {
+                    // Granted a retry but nowhere to run it: shed.
+                    self.core.note_shed(id);
+                }
+                drop(done);
+            }
+        }
+    }
+
     /// Refresh the HTTP-facing snapshot in place, under its mutex:
     /// `fill_snapshot` reuses the published buffers directly (Vecs keep
     /// their capacity, each `ReplicaStatus` entry — state String
@@ -478,7 +542,17 @@ impl Scheduler {
                 .controller
                 .as_ref()
                 .map_or(false, |c| !c.paused());
-            if self.core.is_idle() || (self.core.is_stalled() && !can_self_heal) {
+            // Pending fault events (e.g. a scheduled recover) also keep
+            // a stalled loop spinning: rounds must advance for their
+            // round to come due.  An *idle* core still parks — fault
+            // rounds are only meaningful while work exists.
+            let faults_pending = self
+                .injector
+                .as_ref()
+                .map_or(false, |i| !i.is_done());
+            if self.core.is_idle()
+                || (self.core.is_stalled() && !can_self_heal && !faults_pending)
+            {
                 match self.rx.recv() {
                     Ok(Msg::Submit(p)) => {
                         self.submit(p);
@@ -518,6 +592,10 @@ impl Scheduler {
             if let Some(c) = self.controller.as_mut() {
                 let _ = c.tick(&mut self.core);
             }
+
+            // Faults fire at their scheduled round, before admission —
+            // the same boundary the offline driver uses.
+            self.apply_faults();
 
             self.core.run_round(
                 &|_, p: Pending| {
@@ -629,6 +707,8 @@ fn fill_snapshot<T, P>(
         rs.speed = r.speed;
         rs.state.clear();
         rs.state.push_str(r.state.label());
+        rs.health.clear();
+        rs.health.push_str(r.health.label());
         rs.load = r.loads.iter().sum();
         rs.active = r.active;
         rs.free_slots = r.g * r.b - r.active;
@@ -671,6 +751,12 @@ fn fill_snapshot<T, P>(
     core.merge_obs_into(&mut stats.obs.req);
     stats.obs.rounds.copy_from(core.profiler());
     stats.obs.slo = core.slo();
+    let fc = core.fault_counters();
+    stats.crashes = fc.crashes;
+    stats.stalls = fc.stalls;
+    stats.recoveries = fc.recoveries;
+    stats.requeued = fc.requeued;
+    stats.shed = fc.shed;
     s.autoscaler = autoscaler;
 }
 
@@ -853,6 +939,68 @@ mod tests {
         let finish = evs.last().unwrap();
         assert!(finish.a > 0.0, "finish span carries TPOT");
         assert_eq!(finish.b, 2.0, "finish span carries the token count");
+    }
+
+    #[test]
+    fn crash_fault_requeues_in_flight_and_everything_completes() {
+        // Replica 0 crashes at round 2: its in-flight actives are
+        // requeued (exactly once) onto the survivor, its queued work
+        // escapes when the monitor marks it Down, and every client
+        // still gets an answer.  The late recover may or may not fire
+        // before the work drains — correctness must not depend on it.
+        let cfg = FleetBackendConfig {
+            faults: Some(FaultPlan::parse("crash@2:r0,recover@500:r0").unwrap()),
+            ..fast_cfg("low", "jsq")
+        };
+        let be = Arc::new(FleetBackend::new(cfg).unwrap());
+        let n = 8u64;
+        let handles: Vec<_> = (0..n)
+            .map(|i| {
+                let be = Arc::clone(&be);
+                std::thread::spawn(move || {
+                    be.complete(CompletionRequest {
+                        id: i,
+                        prompt_tokens: vec![0; 3],
+                        max_tokens: 3,
+                    })
+                    .unwrap()
+                })
+            })
+            .collect();
+        let mut ids: Vec<u64> = handles
+            .into_iter()
+            .map(|h| h.join().unwrap().id)
+            .collect();
+        ids.sort_unstable();
+        assert_eq!(ids, (0..n).collect::<Vec<u64>>());
+        let st = be.stats();
+        assert_eq!(st.completed, n);
+        assert_eq!(st.crashes, 1, "the planned crash fired");
+        assert_eq!(st.shed, 0, "a survivor existed: nothing shed");
+        let reps = be.replicas();
+        assert!(
+            reps.iter().all(|r| !r.health.is_empty()),
+            "health is published per replica"
+        );
+        assert_eq!(reps[1].health, "healthy");
+    }
+
+    #[test]
+    fn fault_free_backend_reports_zero_fault_counters() {
+        let be = FleetBackend::new(fast_cfg("low", "jsq")).unwrap();
+        let _ = be
+            .complete(CompletionRequest {
+                id: 1,
+                prompt_tokens: vec![1],
+                max_tokens: 2,
+            })
+            .unwrap();
+        let st = be.stats();
+        assert_eq!(
+            (st.crashes, st.stalls, st.recoveries, st.requeued, st.shed),
+            (0, 0, 0, 0, 0)
+        );
+        assert!(be.replicas().iter().all(|r| r.health == "healthy"));
     }
 
     #[test]

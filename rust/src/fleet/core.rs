@@ -20,7 +20,24 @@
 //! requests (admitted ones hold KV and must finish in place); removal
 //! takes effect once the replica has fully drained; added replicas join
 //! the rotation empty.
+//!
+//! Failure is a first-class scenario ([`crate::fault`]): an injected
+//! crash loses the replica's in-flight actives (KV is non-migratable,
+//! so they are buffered for the driver to requeue exactly once via
+//! [`FleetCore::drain_lost`]), an injected stall silently multiplies
+//! its step time.  The core never shows ground truth to the router;
+//! instead a per-replica health monitor (Healthy → Suspect → Down →
+//! Recovering) observes heartbeats (did the slot respond this round?)
+//! and an EWMA of observed-vs-declared step time, marks crashed
+//! replicas Down after [`HealthConfig::miss_limit`] missed rounds
+//! (draining their queues back through the router), cost-penalizes
+//! suspects, and half-open-probes recovering replicas — the circuit
+//! breaker every [`FleetRouter`] consumes through
+//! [`ReplicaView::penalty`] / `accepting`.  With no faults injected the
+//! monitor's arithmetic is exact (`×1.0` penalties, EWMA fixed at 1.0),
+//! so a fault-free run is bit-identical to one without the machinery.
 
+use std::collections::HashSet;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
@@ -28,6 +45,7 @@ use std::time::Instant;
 use anyhow::{anyhow, ensure, Result};
 
 use crate::config::PowerConfig;
+use crate::fault::{FaultCounters, FaultEvent, FaultKind, HealthConfig, ReplicaHealth};
 use crate::metrics::{CompletionRecord, Recorder};
 use crate::obs::{RequestObs, RoundProfiler, SloConfig, SpanKind, SpanLog, Tracer};
 use crate::policies::{by_name, Policy};
@@ -87,6 +105,39 @@ struct ReplicaSlot<T, P> {
     routed: u64,
     /// Barrier steps actually executed.
     executed: u64,
+    /// Monitor output: the observable health state every router sees.
+    health: ReplicaHealth,
+    /// Ground truth (hidden from the router): the replica is crashed —
+    /// it answers no heartbeat and steps no rounds until a recover
+    /// event.  Its actives were lost at crash time; queued requests sit
+    /// until the monitor marks it Down.
+    crashed: bool,
+    /// Ground truth: hidden step-time multiplier (1.0 = nominal).
+    stall_factor: f64,
+    /// Declared per-step time constants (`cfg / speed`), kept so stall
+    /// injection can rescale the recorder exactly and restore it
+    /// without divide drift, and so the monitor knows the *expected*
+    /// step time.
+    base_t_token: f64,
+    base_c_overhead: f64,
+    /// EWMA of observed/declared step-time ratio (exactly 1.0 while the
+    /// replica runs at its declared speed).
+    ewma_ratio: f64,
+    /// Consecutive rounds with pending work but no heartbeat.
+    missed_rounds: u32,
+    /// Consecutive clean probe rounds while Recovering.
+    good_rounds: u32,
+    /// Router cost multiplier derived from `health` (1.0 when Healthy).
+    penalty: f64,
+    /// Set by `step_slot` each round: the slot had work to do.
+    had_work: bool,
+    /// Set by `step_slot` each round: the slot responded (i.e. was not
+    /// crashed) — the heartbeat signal.
+    heartbeat: bool,
+    /// Set by `step_slot`: a barrier step executed, and its
+    /// observed/expected step-time ratio.
+    stepped_now: bool,
+    step_ratio: f64,
     /// Reused engine-completion buffer (owned per replica so rounds can
     /// step replicas on different threads with no shared scratch).
     fin: Vec<Finished<P>>,
@@ -116,6 +167,8 @@ pub struct ReplicaSnapshot {
     pub id: usize,
     pub speed: f64,
     pub state: ReplicaState,
+    /// Monitor-observed health (Healthy → Suspect → Down → Recovering).
+    pub health: ReplicaHealth,
     /// This replica's worker count (heterogeneous fleets differ per
     /// replica; equals `loads.len()`).
     pub g: usize,
@@ -157,6 +210,7 @@ impl ReplicaSnapshot {
             id: self.id,
             speed: self.speed,
             state: self.state,
+            health: self.health,
             g: self.g,
             b: self.b,
             loads: &self.loads,
@@ -193,6 +247,8 @@ pub struct ReplicaRef<'a> {
     pub id: usize,
     pub speed: f64,
     pub state: ReplicaState,
+    /// Monitor-observed health (Healthy → Suspect → Down → Recovering).
+    pub health: ReplicaHealth,
     pub g: usize,
     pub b: usize,
     /// Per-worker loads `L_g`.
@@ -231,6 +287,8 @@ pub struct ReplicaOutcome {
     pub id: usize,
     pub speed: f64,
     pub state: ReplicaState,
+    /// Final monitor-observed health (Healthy unless a fault plan ran).
+    pub health: ReplicaHealth,
     pub report: crate::metrics::Report,
     /// Full virtual clock, warmup included (`Report::wall_time_s` is
     /// the post-warmup window only).
@@ -283,6 +341,19 @@ pub struct FleetCore<T, P> {
     /// reactivate / queue re-offers) force a full O(R·G) rebuild.
     views: Vec<ReplicaView>,
     views_dirty: bool,
+    /// Fault/degradation tallies (crashes, stalls, recoveries, requeues,
+    /// sheds) across the core's lifetime.
+    counters: FaultCounters,
+    /// In-flight actives lost to crashes, awaiting the driver's
+    /// [`FleetCore::drain_lost`] — `(replica, id, prefill, o, payload)`.
+    lost: Vec<(usize, u64, f64, u64, P)>,
+    /// Request ids already requeued once after a crash: a second loss
+    /// sheds instead (retry-once idempotency).
+    requeued_ids: HashSet<u64>,
+    /// Debug-build conservation ledger: id → completed (`true`) or shed
+    /// (`false`); double resolution is a bug, asserted at insert.
+    #[cfg(debug_assertions)]
+    resolved: std::collections::HashMap<u64, bool>,
 }
 
 impl<T, P> FleetCore<T, P> {
@@ -315,6 +386,11 @@ impl<T, P> FleetCore<T, P> {
             trace: None,
             views: Vec::new(),
             views_dirty: true,
+            counters: FaultCounters::default(),
+            lost: Vec::new(),
+            requeued_ids: HashSet::new(),
+            #[cfg(debug_assertions)]
+            resolved: std::collections::HashMap::new(),
         };
         for (i, s) in speeds.into_iter().enumerate() {
             match shapes.as_ref().map(|v| v[i]) {
@@ -381,6 +457,19 @@ impl<T, P> FleetCore<T, P> {
             completed_per_worker: vec![0; g],
             routed: 0,
             executed: 0,
+            health: ReplicaHealth::Healthy,
+            crashed: false,
+            stall_factor: 1.0,
+            base_t_token: self.cfg.t_token / speed,
+            base_c_overhead: self.cfg.c_overhead / speed,
+            ewma_ratio: 1.0,
+            missed_rounds: 0,
+            good_rounds: 0,
+            penalty: 1.0,
+            had_work: false,
+            heartbeat: true,
+            stepped_now: false,
+            step_ratio: 1.0,
             fin: Vec::new(),
             out: Vec::new(),
             tracer,
@@ -494,11 +583,12 @@ impl<T, P> FleetCore<T, P> {
         self.submitted
     }
 
-    /// At least one replica is accepting new requests.
+    /// At least one replica is accepting new requests (lifecycle
+    /// Accepting *and* not marked Down by the health monitor).
     pub fn has_accepting(&self) -> bool {
-        self.slots
-            .iter()
-            .any(|s| s.state == ReplicaState::Accepting)
+        self.slots.iter().any(|s| {
+            s.state == ReplicaState::Accepting && s.health != ReplicaHealth::Down
+        })
     }
 
     /// Requests parked because no replica was accepting.
@@ -581,12 +671,16 @@ impl<T, P> FleetCore<T, P> {
         let target = match choice {
             Some(id)
                 if id < self.slots.len()
-                    && self.slots[id].state == ReplicaState::Accepting =>
+                    && self.slots[id].state == ReplicaState::Accepting
+                    && self.slots[id].health != ReplicaHealth::Down =>
             {
                 Some(id)
             }
-            // Defensive fallback: a router pick that is out of range or
-            // not accepting degrades to least-outstanding.
+            // Defensive fallback: a router pick that is out of range,
+            // not accepting, or Down degrades to least-outstanding
+            // (whose views already exclude Down replicas) — a drain or
+            // re-offer racing a crash can never park work on a dead
+            // replica.
             _ => least_outstanding_of(&self.views),
         };
         let Some(id) = target else {
@@ -632,6 +726,19 @@ impl<T, P> FleetCore<T, P> {
         if slot.state == ReplicaState::Removed {
             return false;
         }
+        // Per-round monitor inputs, all slot-owned (safe on pool
+        // threads): work pending, heartbeat answered, step observed.
+        slot.had_work = !slot.engine.is_idle();
+        slot.stepped_now = false;
+        slot.step_ratio = 1.0;
+        if slot.crashed {
+            // Ground truth the monitor cannot see directly: the replica
+            // is dead, answers no heartbeat, steps no rounds.  Queued
+            // work sits until the monitor marks it Down.
+            slot.heartbeat = false;
+            return false;
+        }
+        slot.heartbeat = true;
         if slot.engine.is_idle() {
             if slot.state == (ReplicaState::Draining { remove: true }) {
                 slot.state = ReplicaState::Removed;
@@ -652,9 +759,20 @@ impl<T, P> FleetCore<T, P> {
         if active == 0 {
             return false; // non-work-conserving policy held everything
         }
+        // Expected step time at the *declared* speed, from the same
+        // loads the recorder meters; observed/expected is exactly 1.0
+        // unless a stall rescaled the recorder's constants.
+        let max_load = slot
+            .engine
+            .loads()
+            .iter()
+            .fold(0.0f64, |m, &l| if l > m { l } else { m });
+        let expected = slot.base_c_overhead + slot.base_t_token * max_load;
         let dt = slot
             .recorder
             .step(slot.engine.step_index(), slot.engine.loads(), active);
+        slot.stepped_now = true;
+        slot.step_ratio = if expected > 0.0 { dt / expected } else { 1.0 };
         slot.executed += 1;
         slot.engine.advance(&mut slot.fin);
         let finish_clock = slot.recorder.clock();
@@ -766,6 +884,7 @@ impl<T, P> FleetCore<T, P> {
                     id: s.id,
                     speed: s.speed,
                     state: s.state,
+                    health: s.health,
                     g,
                     b,
                     loads: s.engine.loads().to_vec(),
@@ -852,6 +971,277 @@ impl<T, P> FleetCore<T, P> {
         self.slots.get(id).map(|s| s.state)
     }
 
+    /// Monitor-observed health of one replica (`None` for unknown ids).
+    pub fn health_of(&self, id: usize) -> Option<ReplicaHealth> {
+        self.slots.get(id).map(|s| s.health)
+    }
+
+    /// Fault/degradation tallies across the core's lifetime.
+    pub fn fault_counters(&self) -> FaultCounters {
+        self.counters
+    }
+
+    /// Crash-lost in-flight requests are waiting for
+    /// [`FleetCore::drain_lost`].
+    pub fn has_lost(&self) -> bool {
+        !self.lost.is_empty()
+    }
+
+    /// Ground truth for drivers: some replica is currently crashed or
+    /// stalled (used to keep fault rounds running where a fault-free
+    /// driver would park).
+    pub fn any_faulted(&self) -> bool {
+        self.slots
+            .iter()
+            .any(|s| s.crashed || s.stall_factor != 1.0)
+    }
+
+    /// Apply one scheduled fault event (driver dispatch helper).
+    pub fn apply_fault(&mut self, ev: &FaultEvent) {
+        match ev.kind {
+            FaultKind::Crash => self.inject_crash(ev.replica),
+            FaultKind::Stall(f) => self.inject_stall(ev.replica, f),
+            FaultKind::Recover => self.inject_recover(ev.replica),
+        }
+    }
+
+    /// Crash a replica (ground truth; the router only learns of it from
+    /// the health monitor).  The slot stops answering heartbeats and
+    /// stepping; its in-flight actives lose their KV and are buffered
+    /// for [`FleetCore::drain_lost`]; already-queued requests stay
+    /// parked on the dead replica until the monitor marks it Down and
+    /// drains them back through the router.  Idempotent while crashed;
+    /// no-op on removed replicas.
+    pub fn inject_crash(&mut self, id: usize) {
+        let Some(slot) = self.slots.get_mut(id) else { return };
+        if slot.state == ReplicaState::Removed || slot.crashed {
+            return;
+        }
+        slot.crashed = true;
+        self.counters.crashes += 1;
+        let clock = slot.recorder.clock();
+        let lost = slot.engine.take_actives();
+        slot.tracer.record(
+            SpanKind::Crash,
+            0,
+            id as u32,
+            crate::obs::trace::NO_INDEX,
+            clock,
+            lost.len() as f64,
+            slot.engine.waiting_len() as f64,
+        );
+        for (rid, prefill, o, payload) in lost {
+            self.lost.push((id, rid, prefill, o, payload));
+        }
+        // The crash emptied the replica's batch slots; the router must
+        // not be tempted by that phantom capacity mid-round.
+        self.views_dirty = true;
+    }
+
+    /// Silently multiply a replica's step time by `factor` (fail-slow,
+    /// ground truth): the recorder's time constants are rescaled from
+    /// the stored declared constants, so a later recover restores them
+    /// exactly (no divide drift).  The router learns of the slowdown
+    /// only through the monitor's EWMA estimator.
+    pub fn inject_stall(&mut self, id: usize, factor: f64) {
+        let Some(slot) = self.slots.get_mut(id) else { return };
+        if slot.state == ReplicaState::Removed || slot.crashed {
+            return;
+        }
+        let f = if factor > 1.0 { factor } else { 1.0 };
+        slot.stall_factor = f;
+        slot.recorder.t_token = slot.base_t_token * f;
+        slot.recorder.c_overhead = slot.base_c_overhead * f;
+        self.counters.stalls += 1;
+    }
+
+    /// Heal a replica: clears the crash/stall ground truth and restores
+    /// the declared time constants exactly.  A replica the monitor had
+    /// marked Down re-enters the rotation as Recovering — half-open,
+    /// probe-penalized until [`HealthConfig::probe_rounds`] clean
+    /// rounds pass.  A Suspect (fail-slow) replica keeps its state; the
+    /// EWMA decays back below the threshold on its own.
+    pub fn inject_recover(&mut self, id: usize) {
+        let Some(slot) = self.slots.get_mut(id) else { return };
+        if slot.state == ReplicaState::Removed
+            || (!slot.crashed && slot.stall_factor == 1.0)
+        {
+            return;
+        }
+        slot.crashed = false;
+        slot.stall_factor = 1.0;
+        slot.recorder.t_token = slot.base_t_token;
+        slot.recorder.c_overhead = slot.base_c_overhead;
+        slot.missed_rounds = 0;
+        slot.good_rounds = 0;
+        self.counters.recoveries += 1;
+        slot.tracer.record(
+            SpanKind::Recover,
+            0,
+            id as u32,
+            crate::obs::trace::NO_INDEX,
+            slot.recorder.clock(),
+            0.0,
+            0.0,
+        );
+        if slot.health == ReplicaHealth::Down {
+            slot.health = ReplicaHealth::Recovering;
+            slot.penalty = self.cfg.health.probe_penalty;
+            slot.ewma_ratio = 1.0;
+            self.views_dirty = true;
+        }
+    }
+
+    /// Drain the crash-lost in-flight requests for the driver:
+    /// `(id, prefill, decode_len, payload, requeue)`.  `requeue` is
+    /// true the first time an id is lost — resubmit it (exactly-once
+    /// retry); false on a repeat loss — shed it, which this call
+    /// already tallies in the counters and conservation ledger.
+    pub fn drain_lost(&mut self) -> Vec<(u64, f64, u64, P, bool)> {
+        if self.lost.is_empty() {
+            return Vec::new();
+        }
+        let lost = std::mem::take(&mut self.lost);
+        let mut out = Vec::with_capacity(lost.len());
+        for (replica, id, prefill, o, payload) in lost {
+            let requeue = self.requeued_ids.insert(id);
+            if requeue {
+                self.counters.requeued += 1;
+            } else {
+                self.note_shed(id);
+            }
+            if let Some(slot) = self.slots.get_mut(replica) {
+                slot.tracer.record(
+                    if requeue { SpanKind::Retry } else { SpanKind::Shed },
+                    id,
+                    replica as u32,
+                    crate::obs::trace::NO_INDEX,
+                    slot.recorder.clock(),
+                    prefill,
+                    0.0,
+                );
+            }
+            out.push((id, prefill, o, payload, requeue));
+        }
+        out
+    }
+
+    /// Record a driver-level shed (a request dropped instead of
+    /// requeued — repeat loss, or no surviving capacity) in the
+    /// counters and the debug conservation ledger.
+    pub fn note_shed(&mut self, id: u64) {
+        self.counters.shed += 1;
+        #[cfg(debug_assertions)]
+        {
+            let prev = self.resolved.insert(id, false);
+            debug_assert!(prev.is_none(), "request {id} resolved twice");
+        }
+        let _ = id;
+    }
+
+    /// Route a lost-and-requeued request back into the fleet.  Unlike
+    /// [`FleetCore::submit`] it does not count a new submission: the id
+    /// already exists in the conservation ledger's domain.
+    pub fn resubmit(&mut self, prefill: f64, arrival_step: u64, ticket: T) -> Option<usize> {
+        self.flush_overflow();
+        self.route_in(prefill, arrival_step, 0.0, ticket)
+    }
+
+    /// The per-round health monitor: consumes the heartbeat/progress
+    /// observations [`FleetCore::step_slot`] left on each slot and
+    /// advances Healthy → Suspect → Down → Recovering.  Runs serially
+    /// at the end of every round (deterministic whatever the thread
+    /// count).  A replica going Down has its queued requests drained
+    /// back through the router, which no longer sees it as accepting.
+    fn health_tick(&mut self) {
+        let hc = self.cfg.health;
+        let mut newly_down: Vec<usize> = Vec::new();
+        for slot in &mut self.slots {
+            if slot.state == ReplicaState::Removed
+                || slot.health == ReplicaHealth::Down
+            {
+                continue;
+            }
+            if !slot.heartbeat {
+                // Missed rounds only count against pending work: a
+                // crashed *idle* replica is unobservable (nothing to
+                // heartbeat about) until something is routed to it.
+                if slot.had_work {
+                    slot.missed_rounds += 1;
+                    if slot.missed_rounds >= hc.miss_limit {
+                        slot.health = ReplicaHealth::Down;
+                        slot.penalty = 1.0;
+                        slot.missed_rounds = 0;
+                        slot.good_rounds = 0;
+                        newly_down.push(slot.id);
+                        self.views_dirty = true;
+                    }
+                }
+                continue;
+            }
+            slot.missed_rounds = 0;
+            if slot.stepped_now {
+                slot.ewma_ratio = hc.ewma_alpha * slot.step_ratio
+                    + (1.0 - hc.ewma_alpha) * slot.ewma_ratio;
+            }
+            let slow = slot.ewma_ratio > hc.suspect_ratio;
+            match slot.health {
+                ReplicaHealth::Healthy if slow => {
+                    slot.health = ReplicaHealth::Suspect;
+                    slot.penalty = hc.suspect_penalty;
+                    self.views_dirty = true;
+                }
+                ReplicaHealth::Suspect if !slow => {
+                    slot.health = ReplicaHealth::Healthy;
+                    slot.penalty = 1.0;
+                    self.views_dirty = true;
+                }
+                ReplicaHealth::Recovering => {
+                    if slow {
+                        // the probe found it still slow: demote
+                        slot.health = ReplicaHealth::Suspect;
+                        slot.penalty = hc.suspect_penalty;
+                        slot.good_rounds = 0;
+                    } else {
+                        slot.good_rounds += 1;
+                        if slot.good_rounds >= hc.probe_rounds {
+                            slot.health = ReplicaHealth::Healthy;
+                            slot.penalty = 1.0;
+                            slot.good_rounds = 0;
+                        } else {
+                            continue; // still probing, no view change
+                        }
+                    }
+                    self.views_dirty = true;
+                }
+                _ => {}
+            }
+        }
+        // Down transitions: queued requests escape the dead replica
+        // through the router (the crash analogue of `drain_replica`'s
+        // queue re-route; actives were already lost at crash time).
+        for id in newly_down {
+            self.drain_queue_of(id);
+        }
+    }
+
+    /// Re-offer one replica's queued requests through the router,
+    /// carrying accrued queue wait as a duration (same cross-clock rule
+    /// as [`FleetCore::drain_replica`]).
+    fn drain_queue_of(&mut self, id: usize) {
+        let Some(slot) = self.slots.get_mut(id) else { return };
+        let src_clock = slot.recorder.clock();
+        let moved = slot.engine.take_waiting();
+        if moved.is_empty() {
+            return;
+        }
+        self.views_dirty = true;
+        for (prefill, arrival_step, clock, ticket) in moved {
+            let waited = (src_clock - clock).max(0.0);
+            self.route_in(prefill, arrival_step, waited, ticket);
+        }
+    }
+
     /// Live replicas (any state), as borrowed zero-alloc views in
     /// replica-id order — the hot-path replacement for
     /// [`FleetCore::snapshot`].
@@ -860,6 +1250,7 @@ impl<T, P> FleetCore<T, P> {
             id: s.id,
             speed: s.speed,
             state: s.state,
+            health: s.health,
             g: s.engine.worker_count(),
             b: s.engine.batch_cap(),
             loads: s.engine.loads(),
@@ -897,6 +1288,7 @@ impl<T, P> FleetCore<T, P> {
                 id: s.id,
                 speed: s.speed,
                 state: s.state,
+                health: s.health,
                 clock_s: s.recorder.clock(),
                 routed: s.routed,
                 admitted: s.engine.admitted(),
@@ -968,6 +1360,15 @@ impl<T: Send, P: Send> FleetCore<T, P> {
         for slot in &mut self.slots {
             out.extend(slot.out.drain(..));
         }
+        #[cfg(debug_assertions)]
+        for f in out.iter() {
+            let prev = self.resolved.insert(f.id, true);
+            debug_assert!(prev.is_none(), "request {} resolved twice", f.id);
+        }
+        // Health monitor: serial, after the completion merge, so its
+        // transitions (and any Down-drain re-routing) happen in slot-id
+        // order whatever the thread count.
+        self.health_tick();
         self.round += 1;
         // Observability epilogue: wall clocks and spans only — nothing
         // below touches virtual-time state, so parallel ≡ serial
@@ -1066,7 +1467,11 @@ fn refresh_view<T, P>(view: &mut ReplicaView, slot: &ReplicaSlot<T, P>) {
     let slots = g * engine.batch_cap();
     view.id = slot.id;
     view.speed = slot.speed;
-    view.accepting = slot.state == ReplicaState::Accepting;
+    // Down replicas are circuit-broken out of the rotation entirely;
+    // Suspect/Recovering stay in but carry the health cost penalty.
+    view.accepting = slot.state == ReplicaState::Accepting
+        && slot.health != ReplicaHealth::Down;
+    view.penalty = slot.penalty;
     view.workers = g;
     view.slots = slots;
     view.free_slots = slots - active;

@@ -36,6 +36,9 @@
 //!   experiment and `benches/fleet.rs` build on it);
 //! * [`run_fleet_hooked`] — the same driver with a per-round
 //!   [`RoundHook`] in the loop (the [`crate::autoscale`] controller);
+//! * [`run_fleet_faulted`] — the same driver with a deterministic
+//!   [`crate::fault::FaultPlan`] injected at round boundaries (crash /
+//!   fail-slow / recover), lost actives requeued exactly once;
 //! * [`backend::FleetBackend`] — online [`crate::gateway`] backend, so
 //!   the HTTP gateway serves over a fleet with per-replica
 //!   `/v0/workers` entries, Prometheus series, and the
@@ -53,10 +56,14 @@ pub use self::core::{
 };
 pub use self::pool::{effective_threads, RoundPool};
 pub use self::router::{router_by_name, FleetRouter, ReplicaView};
+pub use crate::fault::{FaultCounters, FaultPlan, HealthConfig, ReplicaHealth};
+
+use std::collections::HashMap;
 
 use anyhow::{anyhow, Result};
 
 use crate::config::SimConfig;
+use crate::fault::FaultInjector;
 use crate::metrics::Report;
 use crate::obs::{RequestObs, SloConfig};
 use crate::sim::predictor::Predictor;
@@ -107,6 +114,10 @@ pub struct FleetConfig {
     /// Keep per-request completion records in each replica's report.
     pub record_completions: bool,
     pub predictor: Predictor,
+    /// Health-monitor / circuit-breaker knobs (EWMA fail-slow
+    /// detection, missed-round crash detection, Suspect/Recovering
+    /// router penalties).  The defaults are inert on a fault-free run.
+    pub health: HealthConfig,
 }
 
 impl FleetConfig {
@@ -130,6 +141,7 @@ impl FleetConfig {
             warmup_rounds: 0,
             record_completions: false,
             predictor: Predictor::Oracle,
+            health: HealthConfig::default(),
         }
     }
 
@@ -207,6 +219,17 @@ pub struct FleetResult {
     /// Streaming TTFT/TPOT/step-time/imbalance sketches + SLO counters,
     /// merged across replicas in replica-id order.
     pub obs: RequestObs,
+    /// Replica crashes injected ([`run_fleet_faulted`]; 0 without a
+    /// fault plan, as are the rest of the fault tallies).
+    pub crashes: u64,
+    /// Fail-slow stalls injected.
+    pub stalls: u64,
+    /// Recoveries applied.
+    pub recoveries: u64,
+    /// Crash-lost in-flight requests requeued (exactly once per id).
+    pub requeued: u64,
+    /// Requests shed (lost twice, or dropped with no capacity left).
+    pub shed: u64,
 }
 
 /// Per-round control hook over the offline fleet core: observes the
@@ -237,7 +260,7 @@ pub fn run_fleet(
     trace: &[Request],
     events: &[FleetEvent],
 ) -> Result<FleetResult> {
-    run_fleet_hooked(cfg, router_name, trace, events, None)
+    run_fleet_faulted(cfg, router_name, trace, events, None, None)
 }
 
 /// [`run_fleet`] with an optional per-round controller hook, called
@@ -247,7 +270,25 @@ pub fn run_fleet_hooked(
     router_name: &str,
     trace: &[Request],
     events: &[FleetEvent],
+    hook: Option<&mut dyn RoundHook>,
+) -> Result<FleetResult> {
+    run_fleet_faulted(cfg, router_name, trace, events, hook, None)
+}
+
+/// [`run_fleet_hooked`] with a deterministic fault plan: scheduled
+/// crash / fail-slow / recover events apply at their round boundaries,
+/// crash-lost in-flight requests are requeued through the router
+/// exactly once per id (a second loss sheds), and the health monitor's
+/// detection/penalty/probing runs inside the core.  `None` (or an
+/// empty plan) is bit-identical to [`run_fleet_hooked`]: the fault path
+/// adds no arithmetic to a fault-free round.
+pub fn run_fleet_faulted(
+    cfg: &FleetConfig,
+    router_name: &str,
+    trace: &[Request],
+    events: &[FleetEvent],
     mut hook: Option<&mut dyn RoundHook>,
+    faults: Option<&FaultPlan>,
 ) -> Result<FleetResult> {
     let router = cfg
         .router(router_name)
@@ -257,6 +298,30 @@ pub fn run_fleet_hooked(
         .ok_or_else(|| anyhow!("unknown policy {:?}", cfg.policy))?
         .name();
     let mut core: FleetCore<u32, ()> = FleetCore::new(cfg.clone(), router)?;
+
+    // Materialize the fault schedule.  The random process needs a round
+    // horizon: the configured cap, or the trace span plus a drain tail.
+    let rounds_hint = if cfg.max_rounds > 0 {
+        cfg.max_rounds
+    } else {
+        trace.last().map_or(0, |r| r.arrival_step) + 200
+    };
+    let mut injector = match faults {
+        Some(p) if !p.is_empty() => {
+            Some(FaultInjector::new(p, rounds_hint, cfg.speeds.len()))
+        }
+        _ => None,
+    };
+    // Requeueing a lost active needs its trace ticket back: map the
+    // request id to its trace index (built only when faults can occur).
+    let id_to_idx: HashMap<u64, u32> = match injector {
+        Some(_) => trace
+            .iter()
+            .enumerate()
+            .map(|(i, r)| (r.id, i as u32))
+            .collect(),
+        None => HashMap::new(),
+    };
 
     let mut events: Vec<FleetEvent> = events.to_vec();
     events.sort_by_key(FleetEvent::round);
@@ -281,27 +346,51 @@ pub fn run_fleet_hooked(
             *ev += 1;
         }
     };
+    // Apply due fault events, then requeue whatever the crashes lost:
+    // first loss resubmits at the current round (the id keeps its
+    // identity — retry, not re-arrival), repeat loss is already shed
+    // and tallied by `drain_lost`.
+    let apply_faults = |core: &mut FleetCore<u32, ()>,
+                        injector: &mut Option<FaultInjector>| {
+        let Some(inj) = injector.as_mut() else { return };
+        for e in inj.due(core.round()).to_vec() {
+            core.apply_fault(&e);
+        }
+        if core.has_lost() {
+            let round = core.round();
+            for (id, prefill, _o, (), requeue) in core.drain_lost() {
+                if requeue {
+                    if let Some(&idx) = id_to_idx.get(&id) {
+                        core.resubmit(prefill, round, idx);
+                    }
+                }
+            }
+        }
+    };
 
     loop {
         apply_due(&mut core, &mut ev);
+        apply_faults(&mut core, &mut injector);
 
-        // Fleet-wide idle gap: jump straight to the next arrival or
-        // lifecycle event (no replica charges time for empty rounds).
+        // Fleet-wide idle gap: jump straight to the next arrival,
+        // lifecycle event, or fault event (no replica charges time for
+        // empty rounds, but a pending recover must not be skipped).
         if core.is_idle() {
             let next_arr = trace.get(ptr).map(|r| r.arrival_step);
             let next_ev = events.get(ev).map(FleetEvent::round);
-            let next = match (next_arr, next_ev) {
-                (None, None) => break,
-                (Some(a), None) => a,
-                (None, Some(e)) => e,
-                (Some(a), Some(e)) => a.min(e),
-            };
+            let next_fault = injector.as_ref().and_then(FaultInjector::next_round);
+            let next = [next_arr, next_ev, next_fault]
+                .into_iter()
+                .flatten()
+                .min();
+            let Some(next) = next else { break };
             if cfg.max_rounds > 0 && next >= cfg.max_rounds {
                 break;
             }
             if next > core.round() {
                 core.skip_to_round(next);
                 apply_due(&mut core, &mut ev);
+                apply_faults(&mut core, &mut injector);
             }
         }
 
@@ -310,7 +399,11 @@ pub fn run_fleet_hooked(
             ptr += 1;
         }
 
-        if core.is_idle() && ptr >= trace.len() && ev >= events.len() {
+        if core.is_idle()
+            && ptr >= trace.len()
+            && ev >= events.len()
+            && injector.as_ref().map_or(true, FaultInjector::is_done)
+        {
             break; // drained
         }
 
@@ -332,13 +425,15 @@ pub fn run_fleet_hooked(
         // Wedged: requests parked in overflow, every replica drained,
         // and no lifecycle event is coming to unwedge it.  A controller
         // hook may still unwedge (reactivate / add) once its cooldown
-        // expires, so with a hook the break waits out a generous stall
-        // window instead of firing on the first starved round.
+        // expires, and a pending fault event (recover) can revive a
+        // Down replica, so in those cases the break waits instead of
+        // firing on the first starved round.
         if stepped == 0
             && !core.is_idle()
             && !core.has_accepting()
             && ptr >= trace.len()
             && ev >= events.len()
+            && injector.as_ref().map_or(true, FaultInjector::is_done)
         {
             stall += 1;
             let limit = match hook.as_ref() {
@@ -356,6 +451,8 @@ pub fn run_fleet_hooked(
     let rounds = core.round();
     let submitted = core.submitted();
     let overflow = core.overflow_len();
+    let counters = core.fault_counters();
+    let drained = core.is_idle() && ptr >= trace.len();
     let per_replica = core.into_results();
     let mut res = aggregate(
         router_label,
@@ -363,8 +460,19 @@ pub fn run_fleet_hooked(
         rounds,
         submitted,
         per_replica,
+        counters,
     );
     res.leftover_waiting += overflow;
+    // Conservation (debug builds): once the fleet fully drains, every
+    // submitted request either completed or was shed — never neither.
+    // ("Never both / never twice" is asserted inside the core's ledger.)
+    debug_assert!(
+        !drained || res.completed + res.shed == res.submitted,
+        "conservation: completed {} + shed {} != submitted {}",
+        res.completed,
+        res.shed,
+        res.submitted
+    );
     Ok(res)
 }
 
@@ -374,6 +482,7 @@ fn aggregate(
     rounds: u64,
     submitted: u64,
     per_replica: Vec<ReplicaOutcome>,
+    counters: FaultCounters,
 ) -> FleetResult {
     let completed: u64 = per_replica.iter().map(|r| r.completed).sum();
     let steps: u64 = per_replica.iter().map(|r| r.executed).sum();
@@ -436,6 +545,11 @@ fn aggregate(
         leftover_waiting: leftover,
         slo_goodput,
         obs,
+        crashes: counters.crashes,
+        stalls: counters.stalls,
+        recoveries: counters.recoveries,
+        requeued: counters.requeued,
+        shed: counters.shed,
     }
 }
 

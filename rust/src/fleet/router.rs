@@ -51,6 +51,14 @@ pub struct ReplicaView {
     pub completion_horizon: u64,
     /// Replica-local virtual clock, seconds.
     pub clock_s: f64,
+    /// Health cost multiplier from the replica state machine
+    /// ([`crate::fault::ReplicaHealth`]): `1.0` for Healthy,
+    /// `suspect_penalty` for Suspect, `probe_penalty` for Recovering
+    /// (half-open probing).  Down replicas are excluded outright via
+    /// `accepting`.  Every router multiplies its cost by this factor —
+    /// exact in IEEE 754 at `1.0`, so a fault-free fleet is bit-identical
+    /// to one without the health machinery.
+    pub penalty: f64,
 }
 
 impl ReplicaView {
@@ -58,6 +66,12 @@ impl ReplicaView {
     /// prefill, divided by the speed factor.
     pub fn outstanding(&self) -> f64 {
         (self.load_sum + self.queued_prefill) / self.speed.max(1e-12)
+    }
+
+    /// [`ReplicaView::outstanding`] scaled by the health penalty — the
+    /// circuit-breaker-aware cost every baseline router minimizes.
+    pub fn penalized_outstanding(&self) -> f64 {
+        self.outstanding() * self.penalty
     }
 }
 
@@ -93,7 +107,8 @@ where
             None => true,
             Some((bv, bm)) => {
                 m < bm - eps
-                    || (m < bm + eps && v.outstanding() < bv.outstanding())
+                    || (m < bm + eps
+                        && v.penalized_outstanding() < bv.penalized_outstanding())
             }
         };
         if better {
@@ -103,13 +118,16 @@ where
     best.map(|(v, _)| v.id)
 }
 
-/// Accepting replica with the least speed-normalized outstanding work
-/// (ties broken by lower id) — also the core's fallback rule.
+/// Accepting replica with the least speed-normalized, health-penalized
+/// outstanding work (ties broken by lower id) — also the core's
+/// fallback rule.
 pub fn least_outstanding_of(replicas: &[ReplicaView]) -> Option<usize> {
     replicas
         .iter()
         .filter(|v| v.accepting)
-        .min_by(|a, b| a.outstanding().total_cmp(&b.outstanding()))
+        .min_by(|a, b| {
+            a.penalized_outstanding().total_cmp(&b.penalized_outstanding())
+        })
         .map(|v| v.id)
 }
 
@@ -147,8 +165,12 @@ impl FleetRouter for WeightedRoundRobin {
         let mut total = 0.0;
         let mut best: Option<usize> = None;
         for v in replicas.iter().filter(|v| v.accepting) {
-            total += v.speed;
-            self.current[v.id] += v.speed;
+            // Effective weight: speed discounted by the health penalty —
+            // a Suspect replica's share of traffic shrinks by the same
+            // factor its cost grows elsewhere (exact ÷1.0 when Healthy).
+            let w = v.speed / v.penalty.max(1e-12);
+            total += w;
+            self.current[v.id] += w;
             let better = match best {
                 None => true,
                 Some(b) => self.current[v.id] > self.current[b],
@@ -184,8 +206,10 @@ impl FleetRouter for LeastOutstanding {
             .iter()
             .filter(|v| v.accepting)
             .min_by(|a, b| {
-                let ka = a.outstanding() + prefill / a.speed.max(1e-12);
-                let kb = b.outstanding() + prefill / b.speed.max(1e-12);
+                let ka =
+                    (a.outstanding() + prefill / a.speed.max(1e-12)) * a.penalty;
+                let kb =
+                    (b.outstanding() + prefill / b.speed.max(1e-12)) * b.penalty;
                 ka.total_cmp(&kb)
             })
             .map(|v| v.id)
@@ -227,7 +251,9 @@ impl FleetRouter for PowerOfDReplicas {
         picks
             .iter()
             .map(|&i| accepting[i])
-            .min_by(|a, b| a.outstanding().total_cmp(&b.outstanding()))
+            .min_by(|a, b| {
+                a.penalized_outstanding().total_cmp(&b.penalized_outstanding())
+            })
             .map(|v| v.id)
     }
 }
@@ -259,13 +285,14 @@ impl TwoLevelBfIo {
         let speed = v.speed.max(1e-12);
         let projected = v.max_load.max(v.min_load + s);
         let dt = (self.c_overhead + self.t_token * projected) / speed;
-        if v.free_slots == 0 {
+        let m = if v.free_slots == 0 {
             let cur = (self.c_overhead + self.t_token * v.max_load) / speed;
             let backlog_rounds = 1.0 + v.queue_depth as f64 / v.slots.max(1) as f64;
             dt + cur * backlog_rounds
         } else {
             dt
-        }
+        };
+        m * v.penalty
     }
 }
 
@@ -311,7 +338,7 @@ impl PredictiveHorizon {
         let speed = v.speed.max(1e-12);
         let projected = v.max_load.max(v.min_load + s);
         let dt = (self.c_overhead + self.t_token * projected) / speed;
-        if v.free_slots == 0 {
+        let m = if v.free_slots == 0 {
             // Expected wait: the busy period is `horizon` rounds at the
             // current step time (exact, not a queue-depth proxy); this
             // request joins behind `queue_depth` others contending for
@@ -321,7 +348,8 @@ impl PredictiveHorizon {
             dt + cur * v.completion_horizon as f64 * share
         } else {
             dt
-        }
+        };
+        m * v.penalty
     }
 }
 
@@ -388,6 +416,7 @@ mod tests {
             queued_prefill: 0.0,
             completion_horizon: 0,
             clock_s: 0.0,
+            penalty: 1.0,
         }
     }
 
@@ -510,6 +539,42 @@ mod tests {
         assert_eq!(r.route(50.0, &[a, b], &mut rng), Some(2));
         // a full replica with a long horizon loses to an open one
         assert_eq!(r.route(10.0, &[far, view(4, 1.0, 100.0)], &mut rng), Some(4));
+    }
+
+    #[test]
+    fn health_penalty_steers_every_router_away_from_suspects() {
+        // replica 0 is strictly better on raw load, but carries a 4x
+        // Suspect penalty; every cost-based router must prefer replica 1.
+        let mut suspect = view(0, 1.0, 40.0);
+        suspect.penalty = 4.0;
+        let clean = view(1, 1.0, 100.0);
+        let views = vec![suspect, clean];
+        let mut rng = Rng::new(3);
+        let mut low = LeastOutstanding;
+        assert_eq!(low.route(10.0, &views, &mut rng), Some(1));
+        let mut powd = PowerOfDReplicas::new(2);
+        assert_eq!(powd.route(10.0, &views, &mut rng), Some(1));
+        let mut bf = TwoLevelBfIo::new(0.0, 1.0);
+        assert_eq!(bf.route(10.0, &views, &mut rng), Some(1));
+        let mut bfh = PredictiveHorizon::new(0.0, 1.0);
+        assert_eq!(bfh.route(10.0, &views, &mut rng), Some(1));
+        assert_eq!(least_outstanding_of(&views), Some(1));
+    }
+
+    #[test]
+    fn wrr_discounts_suspect_share_by_penalty() {
+        // equal speeds, but replica 0 runs at a 2x health penalty: its
+        // effective weight halves, so it gets 1/3 of the traffic.
+        let mut r = WeightedRoundRobin::new();
+        let mut views = vec![view(0, 1.0, 0.0), view(1, 1.0, 0.0)];
+        views[0].penalty = 2.0;
+        let mut rng = Rng::new(1);
+        let mut counts = [0usize; 2];
+        for _ in 0..300 {
+            counts[r.route(1.0, &views, &mut rng).unwrap()] += 1;
+        }
+        assert_eq!(counts[0], 100);
+        assert_eq!(counts[1], 200);
     }
 
     #[test]

@@ -73,6 +73,9 @@ pub struct ReplicaStatus {
     pub speed: f64,
     /// `accepting` | `draining` | `removed`.
     pub state: String,
+    /// Monitor-observed health: `healthy` | `suspect` | `down` |
+    /// `recovering` (see [`crate::fault::ReplicaHealth`]).
+    pub health: String,
     /// Σ_g L_g across the replica's workers.
     pub load: f64,
     pub active: usize,
@@ -123,6 +126,16 @@ pub struct BackendStats {
     /// Streaming observability block: TTFT/TPOT/step-time/imbalance
     /// sketches, SLO-goodput counters, round profile, SLO targets.
     pub obs: ObsStats,
+    /// Fault-injection / degradation tallies (`bfio_fault_*`); all zero
+    /// for backends without a fault plane (sim, pjrt).
+    pub crashes: u64,
+    pub stalls: u64,
+    pub recoveries: u64,
+    /// Crash-lost requests resubmitted through the router.
+    pub requeued: u64,
+    /// Requests dropped after a repeat loss or with no surviving
+    /// capacity (the gateway answers these with 503).
+    pub shed: u64,
 }
 
 /// A replica-lifecycle administration command

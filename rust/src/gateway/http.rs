@@ -132,13 +132,32 @@ pub fn respond(
     content_type: &str,
     body: &[u8],
 ) -> Result<()> {
-    let head = format!(
-        "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+    respond_with_headers(stream, status, content_type, &[], body)
+}
+
+/// [`respond`] with extra response headers (e.g. `Retry-After` on a
+/// 503 shed).  Header names/values must already be valid HTTP tokens.
+pub fn respond_with_headers(
+    stream: &mut TcpStream,
+    status: u16,
+    content_type: &str,
+    extra_headers: &[(&str, &str)],
+    body: &[u8],
+) -> Result<()> {
+    let mut head = format!(
+        "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\nConnection: close\r\n",
         status,
         reason(status),
         content_type,
         body.len()
     );
+    for (k, v) in extra_headers {
+        head.push_str(k);
+        head.push_str(": ");
+        head.push_str(v);
+        head.push_str("\r\n");
+    }
+    head.push_str("\r\n");
     stream.write_all(head.as_bytes())?;
     stream.write_all(body)?;
     stream.flush()?;
@@ -149,12 +168,22 @@ pub fn respond(
 #[derive(Clone, Debug)]
 pub struct HttpResponse {
     pub status: u16,
+    /// Response headers as received (name, value).
+    pub headers: Vec<(String, String)>,
     pub body: Vec<u8>,
 }
 
 impl HttpResponse {
     pub fn body_str(&self) -> Result<&str> {
         std::str::from_utf8(&self.body).context("response body is not utf-8")
+    }
+
+    /// Case-insensitive response-header lookup.
+    pub fn header(&self, name: &str) -> Option<&str> {
+        self.headers
+            .iter()
+            .find(|(k, _)| k.eq_ignore_ascii_case(name))
+            .map(|(_, v)| v.as_str())
     }
 }
 
@@ -207,6 +236,7 @@ pub fn http_call(
         .and_then(|s| s.parse().ok())
         .ok_or_else(|| anyhow!("bad status line {line:?}"))?;
     let mut content_length: Option<usize> = None;
+    let mut headers: Vec<(String, String)> = Vec::new();
     loop {
         let mut h = String::new();
         let n = reader.read_line(&mut h).context("read response header")?;
@@ -218,9 +248,12 @@ pub fn http_call(
             break;
         }
         if let Some((k, v)) = t.split_once(':') {
-            if k.trim().eq_ignore_ascii_case("content-length") {
-                content_length = v.trim().parse().ok();
+            let k = k.trim();
+            let v = v.trim();
+            if k.eq_ignore_ascii_case("content-length") {
+                content_length = v.parse().ok();
             }
+            headers.push((k.to_string(), v.to_string()));
         }
     }
     let mut body = Vec::new();
@@ -235,7 +268,7 @@ pub fn http_call(
                 .context("read response body to eof")?;
         }
     }
-    Ok(HttpResponse { status, body })
+    Ok(HttpResponse { status, headers, body })
 }
 
 #[cfg(test)]

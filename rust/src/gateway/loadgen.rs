@@ -69,11 +69,26 @@ struct PerRequest {
     queue_wait_s: f64,
 }
 
+/// What one client-observed request came back as.
+enum Outcome {
+    Done(PerRequest),
+    /// Gateway shed the request (503 after exhausting its retries).
+    Shed(String),
+    Failed(String),
+}
+
 /// Aggregate outcome of one load-generation run.
 #[derive(Clone, Debug, Default)]
 pub struct LoadGenResult {
     pub completed: usize,
+    /// Transport / protocol failures (not sheds).
     pub errors: usize,
+    /// 503 sheds — the gateway's graceful-degradation path, counted
+    /// separately from hard errors.
+    pub sheds: usize,
+    /// Server-side completion retries during this run
+    /// (`bfio_gateway_retries_total` diff).
+    pub retries: u64,
     /// Client wall time for the whole run.
     pub wall_s: f64,
     /// Total generated tokens (server-reported).
@@ -123,7 +138,7 @@ pub fn run(cfg: &LoadGenConfig) -> Result<LoadGenResult> {
     };
     let items = Arc::new(items);
     let cursor = Arc::new(AtomicUsize::new(0));
-    let (tx, rx) = channel::<std::result::Result<PerRequest, String>>();
+    let (tx, rx) = channel::<Outcome>();
 
     let metrics_before = scrape_metrics(&cfg.authority);
     let t0 = Instant::now();
@@ -139,8 +154,7 @@ pub fn run(cfg: &LoadGenConfig) -> Result<LoadGenResult> {
                 break;
             }
             let (plen, dec) = items[i];
-            let outcome = one_request(&authority, plen, dec)
-                .map_err(|e| format!("request {i}: {e:#}"));
+            let outcome = one_request(&authority, i, plen, dec);
             if tx.send(outcome).is_err() {
                 break;
             }
@@ -151,7 +165,7 @@ pub fn run(cfg: &LoadGenConfig) -> Result<LoadGenResult> {
     let mut res = LoadGenResult::default();
     for outcome in rx {
         match outcome {
-            Ok(p) => {
+            Outcome::Done(p) => {
                 res.completed += 1;
                 res.tokens += p.tokens;
                 res.latencies_s.push(p.latency_s);
@@ -159,7 +173,11 @@ pub fn run(cfg: &LoadGenConfig) -> Result<LoadGenResult> {
                 res.queue_waits_s.push(p.queue_wait_s);
                 *res.per_worker.entry(p.worker).or_insert(0) += 1;
             }
-            Err(e) => {
+            Outcome::Shed(e) => {
+                res.sheds += 1;
+                eprintln!("loadgen: shed: {e}");
+            }
+            Outcome::Failed(e) => {
                 res.errors += 1;
                 eprintln!("loadgen: {e}");
             }
@@ -171,6 +189,11 @@ pub fn run(cfg: &LoadGenConfig) -> Result<LoadGenResult> {
     res.wall_s = t0.elapsed().as_secs_f64();
     res.metrics_before = metrics_before;
     res.metrics_after = scrape_metrics(&cfg.authority);
+    let retries_before =
+        prom_value(&res.metrics_before, "bfio_gateway_retries_total").unwrap_or(0.0);
+    let retries_after =
+        prom_value(&res.metrics_after, "bfio_gateway_retries_total").unwrap_or(0.0);
+    res.retries = (retries_after - retries_before).max(0.0) as u64;
     Ok(res)
 }
 
@@ -183,7 +206,14 @@ fn scrape_metrics(authority: &str) -> String {
         .unwrap_or_default()
 }
 
-fn one_request(authority: &str, plen: usize, dec: u64) -> Result<PerRequest> {
+fn one_request(authority: &str, i: usize, plen: usize, dec: u64) -> Outcome {
+    match one_request_inner(authority, plen, dec) {
+        Ok(out) => out,
+        Err(e) => Outcome::Failed(format!("request {i}: {e:#}")),
+    }
+}
+
+fn one_request_inner(authority: &str, plen: usize, dec: u64) -> Result<Outcome> {
     let body = json::obj(vec![
         (
             "prompt",
@@ -195,6 +225,14 @@ fn one_request(authority: &str, plen: usize, dec: u64) -> Result<PerRequest> {
     let t0 = Instant::now();
     let resp = http_call(authority, "POST", "/v1/completions", Some(&body))?;
     let latency_s = t0.elapsed().as_secs_f64();
+    if resp.status == 503 {
+        // Graceful-degradation shed — not a protocol failure.
+        return Ok(Outcome::Shed(format!(
+            "retry-after={} {}",
+            resp.header("Retry-After").unwrap_or("?"),
+            resp.body_str().unwrap_or("<binary>"),
+        )));
+    }
     if resp.status != 200 {
         bail!("status {}: {}", resp.status, resp.body_str().unwrap_or("<binary>"));
     }
@@ -210,13 +248,13 @@ fn one_request(authority: &str, plen: usize, dec: u64) -> Result<PerRequest> {
         .and_then(|u| u.get("completion_tokens"))
         .and_then(Json::as_u64)
         .context("response missing usage.completion_tokens")?;
-    Ok(PerRequest {
+    Ok(Outcome::Done(PerRequest {
         worker: field("worker")? as usize,
         tokens,
         latency_s,
         tpot_s: field("tpot_s")?,
         queue_wait_s: field("queue_wait_s")?,
-    })
+    }))
 }
 
 /// Extract one sample value from a Prometheus exposition document.
@@ -319,13 +357,16 @@ pub fn fetch_report(authority: &str, res: &LoadGenResult) -> Result<(String, Rep
 /// Human summary of one run (client-side view + per-worker spread).
 pub fn print_summary(cfg: &LoadGenConfig, res: &LoadGenResult) {
     println!(
-        "loadgen: {} ok, {} errors over {} clients in {:.3}s  ({:.1} req/s, {:.1} tok/s)",
+        "loadgen: {} ok, {} shed, {} errors over {} clients in {:.3}s  \
+         ({:.1} req/s, {:.1} tok/s, {} server retries)",
         res.completed,
+        res.sheds,
         res.errors,
         cfg.concurrency,
         res.wall_s,
         res.completed as f64 / res.wall_s.max(1e-9),
         res.tokens as f64 / res.wall_s.max(1e-9),
+        res.retries,
     );
     if !res.latencies_s.is_empty() {
         println!(

@@ -66,6 +66,10 @@ struct Shared {
     next_id: AtomicU64,
     http_requests: AtomicU64,
     bad_requests: AtomicU64,
+    /// Completion attempts re-issued after a backend failure.
+    retries: AtomicU64,
+    /// Completions answered 503 after exhausting the retry budget.
+    sheds: AtomicU64,
     started: Instant,
 }
 
@@ -91,6 +95,8 @@ impl Gateway {
             next_id: AtomicU64::new(0),
             http_requests: AtomicU64::new(0),
             bad_requests: AtomicU64::new(0),
+            retries: AtomicU64::new(0),
+            sheds: AtomicU64::new(0),
             started: Instant::now(),
         });
 
@@ -195,7 +201,20 @@ fn handle_conn(stream: &mut TcpStream, shared: &Shared) {
     shared.http_requests.fetch_add(1, Ordering::Relaxed);
     match route(&req, shared) {
         Ok((status, ctype, body)) => {
-            let _ = respond(stream, status, ctype, &body);
+            if status == 503 {
+                // Shed responses carry Retry-After so well-behaved
+                // clients back off instead of hammering a degraded
+                // fleet.
+                let _ = http::respond_with_headers(
+                    stream,
+                    status,
+                    ctype,
+                    &[("Retry-After", "1")],
+                    &body,
+                );
+            } else {
+                let _ = respond(stream, status, ctype, &body);
+            }
         }
         Err(e) => {
             let body = json::obj(vec![("error", json::s(&format!("{e:#}")))]).to_string();
@@ -297,20 +316,45 @@ fn completions(req: &HttpRequest, shared: &Shared) -> Result<Routed> {
         .unwrap_or(16)
         .clamp(1, 4096) as u32;
 
-    let id = shared.next_id.fetch_add(1, Ordering::Relaxed);
     let prompt_n = prompt_tokens.len() as f64;
     let t0 = Instant::now();
-    let done = match shared.backend.complete(CompletionRequest {
-        id,
-        prompt_tokens,
-        max_tokens,
-    }) {
-        Ok(c) => c,
-        Err(e) => {
+    // Graceful degradation: a backend failure (replica crash shed, loss
+    // of the scheduler) gets a bounded retry with backoff under a fresh
+    // request id — the fault ledger has already resolved the old one.
+    // Exhausting the budget sheds the request as a 503 (handle_conn
+    // attaches Retry-After).
+    const MAX_RETRIES: u32 = 2;
+    let mut id = 0u64;
+    let mut done = None;
+    let mut last_err = String::new();
+    for attempt in 0..=MAX_RETRIES {
+        if attempt > 0 {
+            shared.retries.fetch_add(1, Ordering::Relaxed);
+            std::thread::sleep(Duration::from_millis(25u64 << (attempt - 1)));
+        }
+        id = shared.next_id.fetch_add(1, Ordering::Relaxed);
+        match shared.backend.complete(CompletionRequest {
+            id,
+            prompt_tokens: prompt_tokens.clone(),
+            max_tokens,
+        }) {
+            Ok(c) => {
+                done = Some(c);
+                break;
+            }
+            Err(e) => last_err = format!("{e:#}"),
+        }
+    }
+    let done = match done {
+        Some(c) => c,
+        None => {
+            shared.sheds.fetch_add(1, Ordering::Relaxed);
             return Ok((
                 503,
                 "application/json",
-                error_body(&format!("backend unavailable: {e:#}")),
+                error_body(&format!(
+                    "backend unavailable after {MAX_RETRIES} retries: {last_err}"
+                )),
             ));
         }
     };
@@ -365,6 +409,7 @@ fn replicas_arr(reps: &[backend::ReplicaStatus]) -> Json {
             ("id", json::num(r.id as f64)),
             ("speed", json::num(r.speed)),
             ("state", json::s(&r.state)),
+            ("health", json::s(&r.health)),
             ("load", json::num(r.load)),
             ("active", json::num(r.active as f64)),
             ("free_slots", json::num(r.free_slots as f64)),
@@ -680,6 +725,20 @@ fn metrics_text(shared: &Shared) -> String {
                 r.speed,
             );
         }
+        w.family(
+            "bfio_replica_health",
+            "1 for the replica's current monitor-observed health state \
+             (healthy|suspect|down|recovering).",
+            "gauge",
+        );
+        for r in &reps {
+            let id = r.id.to_string();
+            w.sample(
+                "bfio_replica_health",
+                &[("replica", id.as_str()), ("health", r.health.as_str())],
+                1.0,
+            );
+        }
     }
     w.family(
         "bfio_queue_depth",
@@ -920,6 +979,38 @@ fn metrics_text(shared: &Shared) -> String {
     w.sample("bfio_tokens_total", &policy_labels, st.total_tokens as f64);
     w.family("bfio_steps_total", "Barrier steps executed.", "counter");
     w.sample("bfio_steps_total", &policy_labels, st.steps as f64);
+    // --- fault plane: injected events + degradation outcomes --------
+    w.family(
+        "bfio_fault_crashes_total",
+        "Injected replica crash events.",
+        "counter",
+    );
+    w.sample("bfio_fault_crashes_total", &[], st.crashes as f64);
+    w.family(
+        "bfio_fault_stalls_total",
+        "Injected fail-slow (stall) events.",
+        "counter",
+    );
+    w.sample("bfio_fault_stalls_total", &[], st.stalls as f64);
+    w.family(
+        "bfio_fault_recoveries_total",
+        "Injected replica recovery events.",
+        "counter",
+    );
+    w.sample("bfio_fault_recoveries_total", &[], st.recoveries as f64);
+    w.family(
+        "bfio_fault_requeued_total",
+        "Crash-lost requests resubmitted through the router.",
+        "counter",
+    );
+    w.sample("bfio_fault_requeued_total", &[], st.requeued as f64);
+    w.family(
+        "bfio_fault_shed_total",
+        "Requests dropped by the backend after a repeat loss or with no \
+         surviving capacity.",
+        "counter",
+    );
+    w.sample("bfio_fault_shed_total", &[], st.shed as f64);
     w.family(
         "bfio_backend_clock_seconds",
         "Backend clock (virtual for sim, wall for pjrt).",
@@ -945,6 +1036,26 @@ fn metrics_text(shared: &Shared) -> String {
         "bfio_http_bad_requests_total",
         &[],
         shared.bad_requests.load(Ordering::Relaxed) as f64,
+    );
+    w.family(
+        "bfio_gateway_retries_total",
+        "Completion attempts re-issued after a backend failure.",
+        "counter",
+    );
+    w.sample(
+        "bfio_gateway_retries_total",
+        &[],
+        shared.retries.load(Ordering::Relaxed) as f64,
+    );
+    w.family(
+        "bfio_gateway_shed_total",
+        "Completions answered 503 after exhausting the retry budget.",
+        "counter",
+    );
+    w.sample(
+        "bfio_gateway_shed_total",
+        &[],
+        shared.sheds.load(Ordering::Relaxed) as f64,
     );
     w.family(
         "bfio_gateway_uptime_seconds",

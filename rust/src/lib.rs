@@ -25,6 +25,10 @@
 //!   execution by a `Backend` trait (discrete-event sim in virtual time,
 //!   the multi-replica fleet, or the live PJRT coordinator), plus a
 //!   closed-loop load generator.
+//! * [`fault`] — deterministic fault injection: seeded crash /
+//!   fail-slow / recovery plans applied at round boundaries, plus the
+//!   health-monitor knobs (Healthy → Suspect → Down → Recovering) the
+//!   fleet's replica state machine runs on.
 //! * [`fleet`] — two-level routing across R data-parallel barrier-group
 //!   replicas: a tier-1 `FleetRouter` (weighted-RR, least-outstanding,
 //!   power-of-d, two-level BF-IO) in front of per-replica engines with
@@ -54,6 +58,7 @@ pub mod config;
 pub mod coordinator;
 pub mod experiments;
 pub mod energy;
+pub mod fault;
 pub mod fleet;
 pub mod gateway;
 pub mod metrics;

@@ -4,6 +4,8 @@
 //! bfio sim       --policy bfio:40 --g 64 --b 24 --steps 600   one simulation
 //! bfio fleet     --replicas 8 --workers 16 --routers wrr,low,powd:2,bfio2,bfio2h
 //!                [--shapes 8x16,4x32,...] [--threads N]       fleet vs monolith
+//!                [--faults rand:0.05 | crash@40:r1,recover@90:r1 [--smoke]]
+//!                                                             degradation sweep
 //! bfio autoscale --replicas 3 --policies static,target,energy
 //!                [--smoke] [--threads N]                      elastic vs static
 //! bfio repro     <table1|fig1|fig2|fig6|fig7|fig9|fig10|burstgpt|
@@ -11,7 +13,8 @@
 //! bfio theory    <thm1|thm2|thm3|energy|all>                  theorem checks
 //! bfio serve     --workers 2 --policy bfio:8 --requests 16    live PJRT serving
 //! bfio gateway   --backend sim|fleet [--autoscale energy]
-//!                [--trace] [--slo-ttft S] [--slo-tpot S]       HTTP gateway
+//!                [--faults <plan>] [--trace] [--slo-ttft S] [--slo-tpot S]
+//!                                                             HTTP gateway
 //! bfio loadgen   --url http://127.0.0.1:8080 --requests 64    drive a gateway
 //! bfio trace     --out trace.jsonl --steps 200                dump a trace
 //! ```
@@ -25,8 +28,9 @@ use bfio_serve::autoscale::AutoscaleConfig;
 use bfio_serve::coordinator::{serve, CoordinatorConfig, ServeRequest};
 use bfio_serve::experiments::{self, scaling, ExpScale};
 use bfio_serve::experiments::autoscale::{autoscale_sweep, AutoscaleScale};
+use bfio_serve::experiments::faults::faults_sweep;
 use bfio_serve::experiments::fleet::{fleet_sweep, FleetScale};
-use bfio_serve::fleet::{FleetBackend, FleetBackendConfig};
+use bfio_serve::fleet::{FaultPlan, FleetBackend, FleetBackendConfig};
 use bfio_serve::gateway::backend::Backend;
 use bfio_serve::gateway::pjrt::{PjrtBackend, PjrtBackendConfig};
 use bfio_serve::gateway::sim::{SimBackend, SimBackendConfig};
@@ -187,6 +191,17 @@ fn cmd_fleet(args: &Args) -> Result<()> {
         .filter(|t| !t.is_empty())
         .map(|t| t.trim().to_string())
         .collect();
+    // `--faults <plan>` switches to the degradation sweep: the same
+    // scale and routers, run under the fault plan's crash-rate ladder,
+    // written to BENCH_faults.json instead of BENCH_fleet.json.
+    if let Some(plan) = args.flag("faults") {
+        let smoke = args.has("smoke");
+        if smoke && !args.has("steps") {
+            scale.steps = 120;
+        }
+        let out = args.get_or("out", "BENCH_faults.json");
+        return faults_sweep(&scale, &routers, plan, std::path::Path::new(out), smoke);
+    }
     let out = args.get_or("out", "BENCH_fleet.json");
     fleet_sweep(
         &scale,
@@ -409,6 +424,12 @@ fn cmd_gateway(args: &Args) -> Result<()> {
                 dwell_rounds: args.u64_or("dwell", 5),
                 add_speed: 1.0,
             });
+            // `--faults <plan>` injects the same deterministic fault
+            // grammar as `bfio fleet --faults` into the live scheduler.
+            let faults = match args.flag("faults") {
+                Some(spec) => Some(FaultPlan::parse(spec)?),
+                None => None,
+            };
             let cfg = FleetBackendConfig {
                 replicas,
                 g: args.usize_or("g", 4),
@@ -416,6 +437,7 @@ fn cmd_gateway(args: &Args) -> Result<()> {
                 policy: policy.clone(),
                 router: args.get_or("router", "bfio2").to_string(),
                 speeds,
+                faults,
                 seed: args.u64_or("seed", 0),
                 step_delay: Duration::from_millis(args.u64_or("step-delay-ms", 1)),
                 batch_window: Duration::from_millis(args.u64_or("batch-window-ms", 5)),

@@ -20,6 +20,9 @@
 //! | `FirstToken` | exact TTFT (s)              | –                            |
 //! | `Finish`     | TPOT (s)                    | output tokens                |
 //! | `Shed`       | queue wait so far (s)       | –                            |
+//! | `Crash`      | in-flight actives lost      | queued requests stranded     |
+//! | `Recover`    | –                           | –                            |
+//! | `Retry`      | prefill tokens requeued     | –                            |
 //!
 //! ## Flight recorder
 //!
@@ -54,6 +57,13 @@ pub enum SpanKind {
     Finish,
     /// Request dropped without completing (`a` = queue wait so far, s).
     Shed,
+    /// Replica crashed (`request_id` 0; `a` = in-flight actives lost,
+    /// `b` = queued requests stranded on the dead replica).
+    Crash,
+    /// Replica recovered (`request_id` 0); health goes half-open.
+    Recover,
+    /// Crash-lost request requeued through the router (`a` = prefill).
+    Retry,
 }
 
 impl SpanKind {
@@ -65,6 +75,9 @@ impl SpanKind {
             SpanKind::FirstToken => "first_token",
             SpanKind::Finish => "finish",
             SpanKind::Shed => "shed",
+            SpanKind::Crash => "crash",
+            SpanKind::Recover => "recover",
+            SpanKind::Retry => "retry",
         }
     }
 
@@ -78,6 +91,9 @@ impl SpanKind {
             SpanKind::FirstToken => 3,
             SpanKind::Finish => 4,
             SpanKind::Shed => 5,
+            SpanKind::Crash => 6,
+            SpanKind::Recover => 7,
+            SpanKind::Retry => 8,
         }
     }
 }

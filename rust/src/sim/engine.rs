@@ -358,6 +358,37 @@ impl<T, P> Engine<T, P> {
             .collect()
     }
 
+    /// Remove and return every admitted (in-flight) request as
+    /// `(id, prefill, o, payload)` in worker-then-slot order — the
+    /// crash path.  Unlike [`Engine::take_waiting`] this breaks the
+    /// sticky-KV contract on purpose: the replica process died, so its
+    /// non-migratable actives are *lost* (the fleet requeues each id at
+    /// most once).  Loads, counts, age histograms, and completion
+    /// buckets are reset; `admitted`/`completed` counters are untouched
+    /// (a lost request was admitted here but never completed).
+    pub fn take_actives(&mut self) -> Vec<(u64, f64, u64, P)> {
+        let mut lost = Vec::with_capacity(self.total_active);
+        let b = self.cfg.b;
+        for (gi, w) in self.workers.iter_mut().enumerate() {
+            for slot in w.slots.iter_mut() {
+                if let Some(e) = slot.take() {
+                    lost.push((e.id, e.prefill, e.o, e.payload));
+                }
+            }
+            w.free.clear();
+            w.free.extend((0..b as u32).rev());
+            self.loads[gi] = 0.0;
+            self.counts[gi] = 0;
+            self.age_hist[gi].clear();
+        }
+        self.total_active = 0;
+        for (_, mut bucket) in self.finish.drain() {
+            bucket.clear();
+            self.bucket_pool.push(bucket);
+        }
+        lost
+    }
+
     /// Jump the step counter over an idle gap (no actives, empty queue).
     /// The offline driver uses this to reach the next arrival without
     /// simulating empty barrier steps; no wall-clock time is charged.
@@ -784,6 +815,40 @@ mod tests {
             vec![(7.0, 0, 0.25, 2002), (3.0, 1, 0.5, 3001)],
             "FIFO order with original arrival metadata"
         );
+    }
+
+    #[test]
+    fn take_actives_drains_in_flight_and_resets_state() {
+        let mut e = engine(2, 2, Drift::Cycle(vec![1.0, 2.0]));
+        for i in 1..=3u64 {
+            e.submit(10.0 * i as f64, 0, 0.0, i * 1000 + 4); // o = 4
+        }
+        e.admit(&mut Jsq::new(), &mut Rng::new(1), 0.0, open_ticket);
+        assert_eq!(e.active_count(), 3);
+        let mut done = Vec::new();
+        e.advance(&mut done); // age the actives one step
+        assert!(done.is_empty());
+
+        let mut lost = e.take_actives();
+        lost.sort_by_key(|&(id, ..)| id);
+        assert_eq!(lost.len(), 3);
+        assert_eq!(lost[0], (1, 10.0, 4, ()));
+        assert_eq!(lost[2], (3, 30.0, 4, ()));
+        assert_eq!(e.active_count(), 0);
+        assert!(e.is_idle());
+        assert_eq!(e.loads(), &[0.0, 0.0]);
+        assert_eq!(e.completion_horizon(), 0);
+        assert_eq!(e.admitted(), 3, "lost work stays admitted");
+        assert_eq!(e.completed(), 0, "lost work never completed");
+
+        // the engine is fully reusable after the crash: a recovery can
+        // admit and complete new work with clean slots and buckets
+        e.submit(5.0, 2, 0.0, 9001);
+        e.admit(&mut Jsq::new(), &mut Rng::new(1), 0.0, open_ticket);
+        e.advance(&mut done);
+        assert_eq!(done.len(), 1);
+        assert_eq!(done[0].id, 9);
+        assert!(e.take_actives().is_empty());
     }
 
     #[test]

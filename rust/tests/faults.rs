@@ -1,0 +1,324 @@
+//! Chaos coverage for the fault-injection subsystem:
+//!
+//! * a zero-fault plan is bit-identical to the fault-free driver, per
+//!   router, across round-execution thread counts {1, 2, 8};
+//! * property suite: random seeded fault schedules conserve work
+//!   (`completed + shed == submitted`, nothing stranded) and stay
+//!   bit-identical between serial and parallel round execution;
+//! * explicit crash → recover loses nothing: crash-lost requests are
+//!   requeued exactly once and the replica probes back to Healthy;
+//! * fail-slow stalls are detected (Suspect) and the routers shift
+//!   work off the slow replica;
+//! * lifecycle drain racing a crash re-routes only to non-Down
+//!   replicas (regression for the re-offer path);
+//! * the gateway degrades gracefully when the backend sheds: bounded
+//!   retries, then a well-formed 503 with `Retry-After` and the
+//!   retry/shed counters visible in `/metrics`.
+
+use std::sync::Arc;
+
+use anyhow::bail;
+use bfio_serve::fleet::{
+    run_fleet, run_fleet_faulted, FaultPlan, FleetConfig, FleetEvent,
+    FleetResult, ReplicaHealth,
+};
+use bfio_serve::gateway::backend::{
+    Backend, BackendStats, Completion, CompletionRequest, WorkerStatus,
+};
+use bfio_serve::gateway::http as ghttp;
+use bfio_serve::gateway::{Gateway, GatewayConfig};
+use bfio_serve::util::json::Json;
+use bfio_serve::util::prop::Prop;
+use bfio_serve::util::rng::Rng;
+use bfio_serve::workload::{
+    generate_trace, ArrivalProcess, GeometricSampler, Request,
+};
+
+fn trace_of(seed: u64, per_step: usize, backlog: usize, steps: u64) -> Vec<Request> {
+    let mut sampler = GeometricSampler::new(5, 80, 0.25);
+    sampler.o_cap = 12;
+    let arrivals = ArrivalProcess::Fixed { per_step, initial_backlog: backlog };
+    let mut rng = Rng::new(seed);
+    generate_trace(&sampler, &arrivals, steps, &mut rng)
+}
+
+fn cfg_of(replicas: usize, seed: u64, threads: usize) -> FleetConfig {
+    FleetConfig {
+        seed,
+        threads,
+        ..FleetConfig::uniform(replicas, 2, 2, "bfio:8")
+    }
+}
+
+/// Field-by-field equality for two runs that must be deterministically
+/// identical (same house tolerance as `tests/fleet.rs`, plus the fault
+/// tallies).
+fn assert_same(what: &str, a: &FleetResult, b: &FleetResult) {
+    let close = |x: f64, y: f64, field: &str| {
+        let scale = 1.0_f64.max(x.abs()).max(y.abs());
+        assert!(
+            (x - y).abs() <= 1e-9 * scale,
+            "{what}: {field}: {x:.17e} vs {y:.17e}"
+        );
+    };
+    assert_eq!(a.rounds, b.rounds, "{what}: rounds");
+    assert_eq!(a.steps, b.steps, "{what}: steps");
+    assert_eq!(a.submitted, b.submitted, "{what}: submitted");
+    assert_eq!(a.completed, b.completed, "{what}: completed");
+    assert_eq!(a.leftover_waiting, b.leftover_waiting, "{what}: leftover");
+    assert_eq!(a.crashes, b.crashes, "{what}: crashes");
+    assert_eq!(a.stalls, b.stalls, "{what}: stalls");
+    assert_eq!(a.recoveries, b.recoveries, "{what}: recoveries");
+    assert_eq!(a.requeued, b.requeued, "{what}: requeued");
+    assert_eq!(a.shed, b.shed, "{what}: shed");
+    close(a.makespan_s, b.makespan_s, "makespan");
+    close(a.energy_j, b.energy_j, "energy");
+    close(a.tpot_s, b.tpot_s, "tpot");
+    close(a.total_tokens, b.total_tokens, "tokens");
+    close(a.slo_goodput, b.slo_goodput, "slo_goodput");
+    assert_eq!(a.per_replica.len(), b.per_replica.len(), "{what}: replicas");
+    for (ra, rb) in a.per_replica.iter().zip(&b.per_replica) {
+        let who = format!("{what}: replica {}", ra.id);
+        assert_eq!(ra.state, rb.state, "{who}: state");
+        assert_eq!(ra.health, rb.health, "{who}: health");
+        assert_eq!(ra.routed, rb.routed, "{who}: routed");
+        assert_eq!(ra.completed, rb.completed, "{who}: completed");
+        assert_eq!(ra.leftover_waiting, rb.leftover_waiting, "{who}: leftover");
+        close(ra.clock_s, rb.clock_s, &format!("replica {} clock", ra.id));
+    }
+}
+
+const ALL_ROUTERS: [&str; 5] = ["wrr", "low", "powd:2", "bfio2", "bfio2h"];
+
+// ---------------------------------------------------------------------
+// Zero-fault plan == fault-free driver, bit-identical, any thread count
+// ---------------------------------------------------------------------
+
+#[test]
+fn empty_fault_plan_is_identical_to_fault_free_run() {
+    let trace = trace_of(11, 2, 12, 30);
+    let plan = FaultPlan::default();
+    for router in ALL_ROUTERS {
+        let base = run_fleet(&cfg_of(3, 11, 1), router, &trace, &[]).unwrap();
+        assert_eq!(
+            base.crashes + base.stalls + base.recoveries + base.requeued + base.shed,
+            0,
+            "{router}: fault-free run tallied faults"
+        );
+        for threads in [1usize, 2, 8] {
+            let res = run_fleet_faulted(
+                &cfg_of(3, 11, threads),
+                router,
+                &trace,
+                &[],
+                None,
+                Some(&plan),
+            )
+            .unwrap();
+            assert_same(&format!("{router}/t{threads}"), &base, &res);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Property: random schedules conserve work + serial/parallel parity
+// ---------------------------------------------------------------------
+
+#[test]
+fn prop_chaos_conserves_work_and_matches_across_threads() {
+    Prop::new(12).check(
+        "chaos-conservation",
+        |r| {
+            let replicas = 3 + r.below_usize(3);
+            let rate = 0.02 + 0.02 * r.below(5) as f64;
+            let seed = r.next_u64();
+            let router = ALL_ROUTERS[r.below_usize(ALL_ROUTERS.len())];
+            (replicas, rate, seed, router)
+        },
+        |&(replicas, rate, seed, router)| {
+            let trace = trace_of(seed, 2, 10, 25);
+            let plan = FaultPlan::random(rate, seed);
+            let run = |threads: usize| {
+                run_fleet_faulted(
+                    &cfg_of(replicas, seed, threads),
+                    router,
+                    &trace,
+                    &[],
+                    None,
+                    Some(&plan),
+                )
+                .map_err(|e| e.to_string())
+            };
+            let serial = run(1)?;
+            let parallel = run(8)?;
+            assert_same(&format!("{router} rate {rate}"), &serial, &parallel);
+            if serial.completed + serial.shed != serial.submitted {
+                return Err(format!(
+                    "{router}: completed {} + shed {} != submitted {}",
+                    serial.completed, serial.shed, serial.submitted
+                ));
+            }
+            if serial.leftover_waiting != 0 {
+                return Err(format!(
+                    "{router}: {} requests stranded",
+                    serial.leftover_waiting
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+// ---------------------------------------------------------------------
+// Explicit crash → recover: requeue-once, nothing lost, probes back
+// ---------------------------------------------------------------------
+
+#[test]
+fn crash_then_recover_completes_everything() {
+    let trace = trace_of(9, 2, 10, 25);
+    // recover mid-backlog: probing back to Healthy needs routed work
+    // (an idle replica has nothing to heartbeat about)
+    let plan = FaultPlan::parse("crash@6:r0,recover@20:r0").unwrap();
+    for router in ALL_ROUTERS {
+        let res = run_fleet_faulted(
+            &cfg_of(3, 9, 1),
+            router,
+            &trace,
+            &[],
+            None,
+            Some(&plan),
+        )
+        .unwrap();
+        assert_eq!(res.crashes, 1, "{router}");
+        assert_eq!(res.recoveries, 1, "{router}");
+        // in-flight work at the crash was requeued, not dropped ...
+        assert!(res.requeued >= 1, "{router}: nothing requeued");
+        // ... and with two healthy survivors nothing had to shed
+        assert_eq!(res.shed, 0, "{router}");
+        assert_eq!(res.completed, res.submitted, "{router}");
+        assert_eq!(res.leftover_waiting, 0, "{router}");
+        // the recovered replica probed its way back to Healthy
+        assert_eq!(res.per_replica[0].health, ReplicaHealth::Healthy, "{router}");
+    }
+}
+
+// ---------------------------------------------------------------------
+// Fail-slow: detected as Suspect, work shifts off the slow replica
+// ---------------------------------------------------------------------
+
+#[test]
+fn stall_marks_suspect_and_sheds_load_off_the_slow_replica() {
+    let trace = trace_of(4, 2, 8, 40);
+    let plan = FaultPlan::parse("stall@5:r0x4").unwrap();
+    let cfg = cfg_of(3, 4, 1);
+    let clean = run_fleet(&cfg, "low", &trace, &[]).unwrap();
+    let res =
+        run_fleet_faulted(&cfg, "low", &trace, &[], None, Some(&plan)).unwrap();
+    assert_eq!(res.stalls, 1);
+    assert_eq!(res.crashes, 0);
+    // hidden 4x slowdown vs declared speed -> EWMA trips the monitor
+    assert_eq!(res.per_replica[0].health, ReplicaHealth::Suspect);
+    // a stall loses no work, it only slows it
+    assert_eq!(res.completed, res.submitted);
+    assert_eq!(res.shed, 0);
+    // the router routed less onto the stalled replica than it did in
+    // the clean run (queue pressure + Suspect penalty)
+    assert!(
+        res.per_replica[0].routed < clean.per_replica[0].routed,
+        "stalled replica kept its load: {} vs clean {}",
+        res.per_replica[0].routed,
+        clean.per_replica[0].routed
+    );
+}
+
+// ---------------------------------------------------------------------
+// Regression: drain re-routing while another replica is Down
+// ---------------------------------------------------------------------
+
+#[test]
+fn drain_reroute_skips_a_down_replica() {
+    let trace = trace_of(13, 2, 10, 30);
+    // r2 crashes (Down after the miss window) and never recovers; r0
+    // drains at round 12, so its queue re-offers while r2 is Down.
+    // Mis-routing any of it to r2 would strand work and break the
+    // conservation accounting below.
+    let plan = FaultPlan::parse("crash@5:r2").unwrap();
+    let events = [FleetEvent::Drain { round: 12, replica: 0 }];
+    for router in ALL_ROUTERS {
+        let res = run_fleet_faulted(
+            &cfg_of(3, 13, 1),
+            router,
+            &trace,
+            &events,
+            None,
+            Some(&plan),
+        )
+        .unwrap();
+        assert_eq!(res.per_replica[2].health, ReplicaHealth::Down, "{router}");
+        assert_eq!(res.per_replica[2].leftover_waiting, 0, "{router}");
+        assert_eq!(
+            res.completed + res.shed,
+            res.submitted,
+            "{router}: work lost"
+        );
+        assert_eq!(res.leftover_waiting, 0, "{router}");
+    }
+}
+
+// ---------------------------------------------------------------------
+// Gateway degradation: bounded retries, then a well-formed 503
+// ---------------------------------------------------------------------
+
+/// A backend with no capacity: every completion fails, as when the
+/// whole fleet is Down and the scheduler sheds.
+struct ShedBackend;
+
+impl Backend for ShedBackend {
+    fn name(&self) -> String {
+        "shed".to_string()
+    }
+
+    fn complete(&self, req: CompletionRequest) -> anyhow::Result<Completion> {
+        bail!("request {} shed: no accepting replica", req.id)
+    }
+
+    fn workers(&self) -> Vec<WorkerStatus> {
+        Vec::new()
+    }
+
+    fn stats(&self) -> BackendStats {
+        BackendStats::default()
+    }
+}
+
+#[test]
+fn gateway_sheds_with_retry_after_and_counters() {
+    let gw = Gateway::spawn(
+        GatewayConfig { addr: "127.0.0.1:0".to_string(), threads: 2 },
+        Arc::new(ShedBackend),
+    )
+    .unwrap();
+    let a = gw.addr.to_string();
+
+    let body = r#"{"prompt": [1, 2, 3], "max_tokens": 4}"#;
+    let r = ghttp::http_call(&a, "POST", "/v1/completions", Some(body)).unwrap();
+    assert_eq!(r.status, 503, "body: {}", r.body_str().unwrap_or(""));
+    assert_eq!(r.header("Retry-After"), Some("1"), "missing Retry-After");
+    let v = Json::parse(r.body_str().unwrap()).unwrap();
+    let msg = v.get("error").unwrap().as_str().unwrap();
+    assert!(msg.contains("retries"), "error body: {msg}");
+
+    // one shed request = MAX_RETRIES retries + one shed, both exported
+    let m = ghttp::http_call(&a, "GET", "/metrics", None).unwrap();
+    assert_eq!(m.status, 200);
+    let text = m.body_str().unwrap();
+    let metric = |name: &str| -> f64 {
+        text.lines()
+            .find(|l| l.starts_with(name) && !l.starts_with('#'))
+            .and_then(|l| l.split_whitespace().last())
+            .and_then(|v| v.parse().ok())
+            .unwrap_or_else(|| panic!("metric {name} missing:\n{text}"))
+    };
+    assert_eq!(metric("bfio_gateway_retries_total") as u64, 2);
+    assert_eq!(metric("bfio_gateway_shed_total") as u64, 1);
+}
