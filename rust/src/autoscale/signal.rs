@@ -64,6 +64,14 @@ pub struct ReplicaSignal {
     /// idle-at-barrier, concavity, or fixed overhead — the Theorem-4
     /// recoverable part.
     pub waste_fraction: f64,
+    /// This replica's share of fleet-wide gated barrier steps (the
+    /// straggler-attribution tally), in `[0, 1]`; 0 until any replica
+    /// has gated a step.  A persistently high share singles out the
+    /// replica dragging every barrier.
+    pub gate_share: f64,
+    /// Theorem-4 `idle + correction` joules charged to this replica's
+    /// gating workers so far.
+    pub attributed_waste_j: f64,
 }
 
 /// The fleet-wide observation for one controller tick.
@@ -90,6 +98,13 @@ pub struct FleetSignal {
     /// replicas that have executed at least one round, seconds (0 when
     /// fewer than two have stepped).
     pub straggler_gap_s: f64,
+    /// Cumulative tier-1 routing regret, seconds (controller
+    /// diagnostic: a persistently growing value means the router is
+    /// systematically mis-placing; filled by [`sample_core`], 0 on the
+    /// snapshot cold path which has no router to audit).
+    pub router_regret_s: f64,
+    /// Routing decisions the regret audit has seen.
+    pub router_regret_decisions: u64,
     /// Live replicas only (removed replicas are dropped).
     pub replicas: Vec<ReplicaSignal>,
 }
@@ -162,6 +177,10 @@ fn replica_signal(
         useful_rate_j: useful_rate,
         marginal_j_per_token: marginal,
         waste_fraction: waste,
+        // Raw gate count here; [`sample_into`] normalizes to a share
+        // once the fleet total is known.
+        gate_share: r.gates as f64,
+        attributed_waste_j: r.attributed_waste_j,
     }
 }
 
@@ -185,10 +204,12 @@ pub fn sample_into<'a>(
     let mut max_horizon = 0u64;
     let mut clock_min = f64::INFINITY;
     let mut clock_max = f64::NEG_INFINITY;
+    let mut fleet_gates = 0u64;
     for r in replicas {
         if r.state == ReplicaState::Removed {
             continue;
         }
+        fleet_gates += r.gates;
         if r.executed > 0 {
             clock_min = clock_min.min(r.clock_s);
             clock_max = clock_max.max(r.clock_s);
@@ -224,6 +245,18 @@ pub fn sample_into<'a>(
     } else {
         0.0
     };
+    // Normalize the raw per-replica gate counts into fleet shares.
+    for rs in sig.replicas.iter_mut() {
+        rs.gate_share = if fleet_gates > 0 {
+            rs.gate_share / fleet_gates as f64
+        } else {
+            0.0
+        };
+    }
+    // The snapshot cold path has no router to audit; [`sample_core`]
+    // overwrites these from the live core.
+    sig.router_regret_s = 0.0;
+    sig.router_regret_decisions = 0;
 }
 
 /// Sample one controller tick straight off the live core — no
@@ -244,6 +277,9 @@ pub fn sample_core<T, P>(
         c_overhead,
         power,
     );
+    let reg = core.regret();
+    sig.router_regret_s = reg.cumulative();
+    sig.router_regret_decisions = reg.decisions;
 }
 
 /// Sample one controller tick from owned replica snapshots — the
@@ -302,6 +338,9 @@ mod tests {
             admitted: 0,
             routed: 0,
             executed: 0,
+            gate_counts: vec![0; g],
+            gates: 0,
+            attributed_waste_j: 0.0,
         }
     }
 

@@ -141,6 +141,16 @@ pub struct FleetBenchRow {
     /// `serial_run_ms / parallel_run_ms` — the per-row harness speedup
     /// (< 1.0 means serial wins at this scale; see the README).
     pub speedup: f64,
+    /// Cumulative tier-1 routing regret (chosen − best marginal cost),
+    /// seconds; exactly 0 for exact-argmin routers, 0 for the monolith
+    /// (no tier-1 router to audit).
+    pub router_regret_s: f64,
+    /// Mean regret per audited routing decision, seconds.
+    pub router_regret_mean_s: f64,
+    /// Theorem-4 `idle + correction` megajoules attributed to gating
+    /// workers by the straggler ledger (0 for the monolith; conserved
+    /// against `energy_mj`'s idle+correction share for fleet rows).
+    pub attributed_waste_mj: f64,
 }
 
 fn row_json(r: &FleetBenchRow, mono: &FleetBenchRow) -> Json {
@@ -159,6 +169,9 @@ fn row_json(r: &FleetBenchRow, mono: &FleetBenchRow) -> Json {
         ("serial_run_ms", num(r.serial_run_ms)),
         ("parallel_run_ms", num(r.parallel_run_ms)),
         ("speedup", num(r.speedup)),
+        ("router_regret_s", num(r.router_regret_s)),
+        ("router_regret_mean_s", num(r.router_regret_mean_s)),
+        ("attributed_waste_mj", num(r.attributed_waste_mj)),
         ("imb_vs_monolithic", num(ratio(r.avg_imbalance, mono.avg_imbalance))),
         ("energy_vs_monolithic", num(ratio(r.energy_mj, mono.energy_mj))),
         ("tpot_vs_monolithic", num(ratio(r.tpot_s, mono.tpot_s))),
@@ -225,6 +238,9 @@ pub fn run_fleet_rows(
             } else {
                 0.0
             },
+            router_regret_s: res.regret.cumulative(),
+            router_regret_mean_s: res.regret.mean(),
+            attributed_waste_mj: res.attributed_waste_j / 1e6,
         });
     }
 
@@ -259,6 +275,9 @@ pub fn run_fleet_rows(
         serial_run_ms: mono_ms,
         parallel_run_ms: mono_ms,
         speedup: 1.0,
+        router_regret_s: 0.0,
+        router_regret_mean_s: 0.0,
+        attributed_waste_mj: 0.0,
     };
     Ok((rows, mono))
 }
@@ -412,6 +431,12 @@ mod tests {
             assert!(pr.get("serial_run_ms").is_some());
             assert!(pr.get("parallel_run_ms").is_some());
             assert!(pr.get("speedup").is_some());
+            // Observatory columns ride along in every row.
+            assert!(pr.get("router_regret_s").is_some());
+            assert!(pr.get("router_regret_mean_s").is_some());
+            assert!(
+                pr.get("attributed_waste_mj").unwrap().as_f64().unwrap() >= 0.0
+            );
         }
         assert!(parsed
             .get("monolithic")

@@ -27,7 +27,7 @@ use crate::gateway::backend::{
 use crate::gateway::sim::gen_tokens;
 use crate::metrics::imbalance;
 use crate::obs::trace::NO_INDEX;
-use crate::obs::{SloConfig, SpanEvent, SpanKind, SpanLog, Tracer};
+use crate::obs::{SeriesRing, SloConfig, SpanEvent, SpanKind, SpanLog, Tracer};
 use crate::sim::predictor::Predictor;
 use crate::workload::Drift;
 
@@ -79,6 +79,10 @@ pub struct FleetBackendConfig {
     /// scheduled over [`FleetBackendConfig::FAULT_HORIZON_ROUNDS`].
     /// `None` = fault-free (the PR-6 behavior, bit for bit).
     pub faults: Option<FaultPlan>,
+    /// Rounds per `GET /v0/series` window point (`--series-window`).
+    pub series_window: u64,
+    /// Time-series ring capacity in points (`--series-cap`).
+    pub series_cap: usize,
 }
 
 impl Default for FleetBackendConfig {
@@ -103,6 +107,8 @@ impl Default for FleetBackendConfig {
             trace: false,
             trace_buf: 4096,
             faults: None,
+            series_window: 8,
+            series_cap: 256,
         }
     }
 }
@@ -134,6 +140,8 @@ impl FleetBackendConfig {
             predictor: Predictor::Oracle,
             slo: self.slo,
             health: HealthConfig::default(),
+            series_window: self.series_window.max(1),
+            series_cap: self.series_cap.max(1),
         }
     }
 }
@@ -166,6 +174,10 @@ pub struct FleetBackend {
     handle: Mutex<Option<JoinHandle<()>>>,
     /// Shared flight-recorder log when `--trace` is on (`/v0/trace`).
     trace_log: Option<Arc<Mutex<SpanLog>>>,
+    /// Mirror of the core's windowed time-series ring, refreshed by the
+    /// scheduler's publish (version-checked in-place copy), served on
+    /// `GET /v0/series`.
+    series: Arc<Mutex<SeriesRing>>,
 }
 
 impl FleetBackend {
@@ -234,11 +246,16 @@ impl FleetBackend {
             controller.as_ref().map(Controller::state),
         );
         let snap = Arc::new(Mutex::new(initial));
+        let series = Arc::new(Mutex::new(SeriesRing::new(
+            cfg.series_window.max(1),
+            cfg.series_cap.max(1),
+        )));
         let scheduler = Scheduler {
             cfg: cfg.clone(),
             label: label.clone(),
             rx,
             snap: Arc::clone(&snap),
+            series: Arc::clone(&series),
             core,
             controller,
             injector,
@@ -253,6 +270,7 @@ impl FleetBackend {
             snap,
             handle: Mutex::new(Some(handle)),
             trace_log,
+            series,
         })
     }
 }
@@ -311,6 +329,16 @@ impl Backend for FleetBackend {
         let log = log.lock().ok()?;
         Some(log.last(last, id))
     }
+
+    fn trace_dropped(&self) -> Option<u64> {
+        let log = self.trace_log.as_ref()?;
+        let log = log.lock().ok()?;
+        Some(log.dropped)
+    }
+
+    fn series_json(&self, last: usize) -> Option<String> {
+        self.series.lock().ok().map(|s| s.to_json(last))
+    }
 }
 
 impl Drop for FleetBackend {
@@ -331,6 +359,8 @@ struct Scheduler {
     label: String,
     rx: Receiver<Msg>,
     snap: Arc<Mutex<Snapshot>>,
+    /// Published mirror of the core's time-series ring (`/v0/series`).
+    series: Arc<Mutex<SeriesRing>>,
     core: FleetCore<Pending, Sender<Completion>>,
     controller: Option<Controller>,
     /// Scheduled fault events (`--faults`), applied at round boundaries.
@@ -522,6 +552,12 @@ impl Scheduler {
                 &self.core,
                 state,
             );
+        }
+        // Mirror the time-series ring for `/v0/series`: the version
+        // check inside `copy_from` makes publishes between window
+        // boundaries free.
+        if let Ok(mut sr) = self.series.lock() {
+            sr.copy_from(self.core.series());
         }
     }
 
@@ -720,6 +756,10 @@ fn fill_snapshot<T, P>(
         rs.energy_useful_j = r.energy_useful_j;
         rs.energy_idle_j = r.energy_idle_j;
         rs.energy_correction_j = r.energy_correction_j;
+        rs.gate_counts.clear();
+        rs.gate_counts.extend_from_slice(r.gate_counts);
+        rs.gates = r.gates;
+        rs.attributed_waste_j = r.attributed_waste_j;
         stats.steps += r.executed;
         stats.clock_s = stats.clock_s.max(r.clock_s);
         stats.energy_j += r.energy_j;
@@ -751,6 +791,8 @@ fn fill_snapshot<T, P>(
     core.merge_obs_into(&mut stats.obs.req);
     stats.obs.rounds.copy_from(core.profiler());
     stats.obs.slo = core.slo();
+    // Routing-regret audit (in-place sketch copy, reusing buckets).
+    stats.regret.copy_from(core.regret());
     let fc = core.fault_counters();
     stats.crashes = fc.crashes;
     stats.stalls = fc.stalls;

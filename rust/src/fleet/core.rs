@@ -46,8 +46,12 @@ use anyhow::{anyhow, ensure, Result};
 
 use crate::config::PowerConfig;
 use crate::fault::{FaultCounters, FaultEvent, FaultKind, HealthConfig, ReplicaHealth};
-use crate::metrics::{CompletionRecord, Recorder};
-use crate::obs::{RequestObs, RoundProfiler, SloConfig, SpanKind, SpanLog, Tracer};
+use crate::metrics::{imbalance, CompletionRecord, Recorder};
+use crate::obs::series::{self, SeriesTotals};
+use crate::obs::{
+    GateLedger, RegretAudit, RequestObs, RoundProfiler, SeriesRing, SloConfig,
+    SpanKind, SpanLog, Tracer,
+};
 use crate::policies::{by_name, Policy};
 use crate::sim::engine::{Engine, EngineConfig, Finished};
 use crate::util::rng::Rng;
@@ -150,6 +154,12 @@ struct ReplicaSlot<T, P> {
     /// tracer into the shared [`SpanLog`] once per round, in slot-id
     /// order.  The disabled no-op instance unless tracing is on.
     tracer: Tracer,
+    /// Slot-owned straggler-attribution ledger: per barrier step, the
+    /// argmax-load worker that gated Eq. 19 is charged that step's
+    /// Theorem-4 `idle + correction` joules (compensated sums, so the
+    /// per-worker totals reconcile against the recorder's accumulators
+    /// to ≤ 1e-9).  Always on, O(G) memory, lock-free on pool threads.
+    ledger: GateLedger,
 }
 
 /// Shared destination for lifecycle spans when tracing is enabled
@@ -199,6 +209,14 @@ pub struct ReplicaSnapshot {
     pub admitted: u64,
     pub routed: u64,
     pub executed: u64,
+    /// Barrier steps each worker gated (argmax load), `loads.len()`
+    /// entries — the straggler-attribution tally.
+    pub gate_counts: Vec<u64>,
+    /// Total gated steps (Σ `gate_counts`; equals `executed`).
+    pub gates: u64,
+    /// Theorem-4 `idle + correction` joules attributed to this
+    /// replica's gating workers so far.
+    pub attributed_waste_j: f64,
 }
 
 impl ReplicaSnapshot {
@@ -232,6 +250,9 @@ impl ReplicaSnapshot {
             admitted: self.admitted,
             routed: self.routed,
             executed: self.executed,
+            gate_counts: &self.gate_counts,
+            gates: self.gates,
+            attributed_waste_j: self.attributed_waste_j,
         }
     }
 }
@@ -272,6 +293,13 @@ pub struct ReplicaRef<'a> {
     pub admitted: u64,
     pub routed: u64,
     pub executed: u64,
+    /// Barrier steps each worker gated (argmax load).
+    pub gate_counts: &'a [u64],
+    /// Total gated steps (Σ `gate_counts`).
+    pub gates: u64,
+    /// Theorem-4 `idle + correction` joules attributed to this
+    /// replica's gating workers.
+    pub attributed_waste_j: f64,
 }
 
 impl ReplicaRef<'_> {
@@ -298,6 +326,12 @@ pub struct ReplicaOutcome {
     pub completed: u64,
     pub executed: u64,
     pub leftover_waiting: usize,
+    /// Per-worker gated-step counts (straggler attribution).
+    pub gate_counts: Vec<u64>,
+    /// Theorem-4 `idle + correction` joules attributed to this
+    /// replica's gating workers (conserves against the report's
+    /// `energy_idle_j + energy_correction_j` to ≤ 1e-9).
+    pub attributed_waste_j: f64,
 }
 
 /// The multi-replica core.  See the module docs for the round model.
@@ -332,6 +366,16 @@ pub struct FleetCore<T, P> {
     /// Tracing sink; `None` (the default) keeps every slot tracer the
     /// disabled no-op.
     trace: Option<TraceSink>,
+    /// Online routing-regret audit: `chosen_cost − best_cost` per
+    /// tier-1 decision by the router's own cost model (observability
+    /// only — reads [`FleetRouter::decision_cost`], never the pick).
+    regret: RegretAudit,
+    /// Windowed fleet time-series ring behind `GET /v0/series` and the
+    /// dashboard; recorded every [`FleetConfig::series_window`] rounds.
+    series: SeriesRing,
+    /// Scratch for the fleet-wide Eq. 2 imbalance at series boundaries
+    /// (concatenated live per-worker loads, reused across windows).
+    series_loads: Vec<f64>,
     // reused buffers
     /// Cached per-replica router views, indexed by replica id (removed
     /// replicas keep an entry with `accepting == false`).  Kept fresh
@@ -373,6 +417,9 @@ impl<T, P> FleetCore<T, P> {
         let threads = effective_threads(cfg.threads);
         let mut core = FleetCore {
             route_rng: Rng::new(cfg.seed ^ 0xF1EE7),
+            regret: RegretAudit::new(),
+            series: SeriesRing::new(cfg.series_window, cfg.series_cap),
+            series_loads: Vec::new(),
             cfg,
             slots: Vec::new(),
             router,
@@ -473,7 +520,20 @@ impl<T, P> FleetCore<T, P> {
             fin: Vec::new(),
             out: Vec::new(),
             tracer,
+            ledger: GateLedger::new(g, crate::obs::attrib::DEFAULT_BLAME_CAP),
         });
+        // Scale span: cold add (`a` = 0), stamped on the new replica's
+        // own (zero) clock.
+        let slot = self.slots.last_mut().expect("just pushed");
+        slot.tracer.record(
+            SpanKind::Scale,
+            0,
+            id as u32,
+            crate::obs::trace::NO_INDEX,
+            slot.recorder.clock(),
+            0.0,
+            speed,
+        );
         self.views_dirty = true;
         self.reoffer_queued();
         Ok(id)
@@ -489,6 +549,17 @@ impl<T, P> FleetCore<T, P> {
         match slot.state {
             ReplicaState::Draining { .. } => {
                 slot.state = ReplicaState::Accepting;
+                // Scale span: warm reactivate (`a` = 1).
+                let speed = slot.speed;
+                slot.tracer.record(
+                    SpanKind::Scale,
+                    0,
+                    id as u32,
+                    crate::obs::trace::NO_INDEX,
+                    slot.recorder.clock(),
+                    1.0,
+                    speed,
+                );
                 self.views_dirty = true;
                 self.reoffer_queued();
                 true
@@ -546,6 +617,17 @@ impl<T, P> FleetCore<T, P> {
             }
             ReplicaState::Accepting => {
                 slot.state = ReplicaState::Draining { remove };
+                // Scale span: drain (`a` = 2) or drain-for-removal (3).
+                let speed = slot.speed;
+                slot.tracer.record(
+                    SpanKind::Scale,
+                    0,
+                    id as u32,
+                    crate::obs::trace::NO_INDEX,
+                    slot.recorder.clock(),
+                    if remove { 3.0 } else { 2.0 },
+                    speed,
+                );
             }
         }
         let src_clock = slot.recorder.clock();
@@ -687,6 +769,29 @@ impl<T, P> FleetCore<T, P> {
             self.overflow.push((prefill, arrival_step, waited, ticket));
             return None;
         };
+        // Regret audit (observability only, after the pick): replay the
+        // router's own marginal cost over every accepting candidate and
+        // record `chosen − best`.  `decision_cost` is `&self` and pure,
+        // so neither the pick nor the route rng stream is perturbed;
+        // routers without a cost model (WRR, power-of-d) only bump the
+        // decision counter.
+        match self.router.decision_cost(prefill, &self.views[id]) {
+            Some(chosen) => {
+                let mut best = chosen;
+                for v in &self.views {
+                    if !v.accepting {
+                        continue;
+                    }
+                    if let Some(c) = self.router.decision_cost(prefill, v) {
+                        if c < best {
+                            best = c;
+                        }
+                    }
+                }
+                self.regret.record(chosen, best);
+            }
+            None => self.regret.note_unaudited(),
+        }
         let slot = &mut self.slots[id];
         if slot.engine.is_idle() && slot.engine.step_index() < arrival_step {
             slot.engine.skip_to(arrival_step);
@@ -759,18 +864,33 @@ impl<T, P> FleetCore<T, P> {
         if active == 0 {
             return false; // non-work-conserving policy held everything
         }
+        // Requests placed this round become blame anchors: if their
+        // worker gates later steps, the attributed waste is charged to
+        // the placement (the ledger's per-request table).
+        for note in slot.engine.admitted_notes() {
+            slot.ledger.note_admit(note.worker as usize, note.id);
+        }
         // Expected step time at the *declared* speed, from the same
-        // loads the recorder meters; observed/expected is exactly 1.0
-        // unless a stall rescaled the recorder's constants.
-        let max_load = slot
-            .engine
-            .loads()
-            .iter()
-            .fold(0.0f64, |m, &l| if l > m { l } else { m });
+        // loads the recorder meters (observed/expected is exactly 1.0
+        // unless a stall rescaled the recorder's constants) — and the
+        // argmax worker, which gates Eq. 19 and is charged this step's
+        // Theorem-4 `idle + correction` delta.  First-max tie-break
+        // matches [`Engine::gating_worker`].
+        let mut max_load = 0.0f64;
+        let mut gate = 0usize;
+        for (gi, &l) in slot.engine.loads().iter().enumerate() {
+            if l > max_load {
+                max_load = l;
+                gate = gi;
+            }
+        }
         let expected = slot.base_c_overhead + slot.base_t_token * max_load;
+        let waste_before = slot.recorder.energy.idle_j + slot.recorder.energy.correction_j;
         let dt = slot
             .recorder
             .step(slot.engine.step_index(), slot.engine.loads(), active);
+        let waste_after = slot.recorder.energy.idle_j + slot.recorder.energy.correction_j;
+        slot.ledger.charge(gate, waste_after - waste_before);
         slot.stepped_now = true;
         slot.step_ratio = if expected > 0.0 { dt / expected } else { 1.0 };
         slot.executed += 1;
@@ -906,6 +1026,9 @@ impl<T, P> FleetCore<T, P> {
                     admitted: s.engine.admitted(),
                     routed: s.routed,
                     executed: s.executed,
+                    gate_counts: s.ledger.gate_counts().to_vec(),
+                    gates: s.ledger.gates_total(),
+                    attributed_waste_j: s.ledger.attributed_waste_j(),
                 }
             })
             .collect()
@@ -1272,12 +1395,39 @@ impl<T, P> FleetCore<T, P> {
             admitted: s.engine.admitted(),
             routed: s.routed,
             executed: s.executed,
+            gate_counts: s.ledger.gate_counts(),
+            gates: s.ledger.gates_total(),
+            attributed_waste_j: s.ledger.attributed_waste_j(),
         })
     }
 
     /// Round-execution parallelism this core resolved to (1 = serial).
     pub fn threads(&self) -> usize {
         self.threads
+    }
+
+    /// Online routing-regret audit so far.
+    pub fn regret(&self) -> &RegretAudit {
+        &self.regret
+    }
+
+    /// The windowed fleet time-series ring (`GET /v0/series`).
+    pub fn series(&self) -> &SeriesRing {
+        &self.series
+    }
+
+    /// Total gated steps attributed fleet-wide (Σ per-replica ledgers).
+    pub fn gates_fleet_total(&self) -> u64 {
+        self.slots.iter().map(|s| s.ledger.gates_total()).sum()
+    }
+
+    /// Theorem-4 `idle + correction` joules attributed fleet-wide —
+    /// conserves against the summed energy accumulators to ≤ 1e-9.
+    pub fn attributed_waste_fleet_j(&self) -> f64 {
+        self.slots
+            .iter()
+            .map(|s| s.ledger.attributed_waste_j())
+            .sum()
     }
 
     /// Finish every replica's recorder and return the outcomes.
@@ -1295,6 +1445,8 @@ impl<T, P> FleetCore<T, P> {
                 completed: s.engine.completed(),
                 executed: s.executed,
                 leftover_waiting: s.engine.waiting_len(),
+                gate_counts: s.ledger.gate_counts().to_vec(),
+                attributed_waste_j: s.ledger.attributed_waste_j(),
                 report: s.recorder.finish(),
             })
             .collect()
@@ -1389,6 +1541,59 @@ impl<T: Send, P: Send> FleetCore<T, P> {
             threads_engaged,
             gap,
         );
+        // Windowed time-series boundary (observability only): fold the
+        // cumulative fleet totals, the live-worker Eq. 2 imbalance, and
+        // per-replica health/penalty/gate-share into the bounded ring
+        // behind `GET /v0/series`.  Removed replicas still count toward
+        // totals (their energy was spent) but drop out of the live
+        // worker set and the per-replica table.
+        if self.series.due(self.round) {
+            let mut totals = SeriesTotals { arrivals: self.submitted, ..SeriesTotals::default() };
+            let mut slo_ok = 0u64;
+            let mut slo_total = 0u64;
+            let mut fleet_gates = 0u64;
+            self.series_loads.clear();
+            for s in &self.slots {
+                totals.completions += s.engine.completed();
+                totals.energy_j += s.recorder.energy.total_energy_j();
+                totals.useful_j += s.recorder.energy.useful_j;
+                totals.idle_j += s.recorder.energy.idle_j;
+                totals.correction_j += s.recorder.energy.correction_j;
+                let obs = s.recorder.obs();
+                slo_ok += obs.slo_ok;
+                slo_total += obs.slo_total;
+                fleet_gates += s.ledger.gates_total();
+                if s.state != ReplicaState::Removed {
+                    self.series_loads.extend_from_slice(s.engine.loads());
+                }
+            }
+            let imb = imbalance(&self.series_loads);
+            let goodput = if slo_total == 0 {
+                1.0
+            } else {
+                slo_ok as f64 / slo_total as f64
+            };
+            let clock = if max_clock.is_finite() { max_clock } else { 0.0 };
+            let pts = self
+                .series
+                .record(self.round, clock, totals, imb, gap, goodput);
+            for s in &self.slots {
+                if s.state == ReplicaState::Removed {
+                    continue;
+                }
+                pts.push(series::ReplicaPoint {
+                    id: s.id,
+                    health: health_code(s.health),
+                    penalty: s.penalty,
+                    gate_share: if fleet_gates == 0 {
+                        0.0
+                    } else {
+                        s.ledger.gates_total() as f64 / fleet_gates as f64
+                    },
+                    load: s.engine.loads().iter().sum(),
+                });
+            }
+        }
         if let Some(sink) = &self.trace {
             if let Ok(mut log) = sink.log.lock() {
                 for slot in &mut self.slots {
@@ -1442,6 +1647,16 @@ impl<T: Send, P: Send> FleetCore<T, P> {
             engage,
         );
         executed.load(Ordering::Relaxed)
+    }
+}
+
+/// Map monitor-observed health onto the series store's compact code.
+fn health_code(h: ReplicaHealth) -> u8 {
+    match h {
+        ReplicaHealth::Healthy => series::HEALTH_HEALTHY,
+        ReplicaHealth::Suspect => series::HEALTH_SUSPECT,
+        ReplicaHealth::Down => series::HEALTH_DOWN,
+        ReplicaHealth::Recovering => series::HEALTH_RECOVERING,
     }
 }
 

@@ -65,7 +65,7 @@ use anyhow::{anyhow, Result};
 use crate::config::SimConfig;
 use crate::fault::FaultInjector;
 use crate::metrics::Report;
-use crate::obs::{RequestObs, SloConfig};
+use crate::obs::{RegretAudit, RequestObs, SloConfig};
 use crate::sim::predictor::Predictor;
 use crate::workload::{Drift, Request};
 
@@ -118,6 +118,11 @@ pub struct FleetConfig {
     /// detection, missed-round crash detection, Suspect/Recovering
     /// router penalties).  The defaults are inert on a fault-free run.
     pub health: HealthConfig,
+    /// Rounds per windowed time-series point (`GET /v0/series`); the
+    /// ring records at every `round % series_window == 0` boundary.
+    pub series_window: u64,
+    /// Time-series ring capacity (points kept; oldest evicted first).
+    pub series_cap: usize,
 }
 
 impl FleetConfig {
@@ -142,6 +147,8 @@ impl FleetConfig {
             record_completions: false,
             predictor: Predictor::Oracle,
             health: HealthConfig::default(),
+            series_window: 8,
+            series_cap: 256,
         }
     }
 
@@ -230,6 +237,14 @@ pub struct FleetResult {
     pub requeued: u64,
     /// Requests shed (lost twice, or dropped with no capacity left).
     pub shed: u64,
+    /// Online routing-regret audit (`chosen_cost − best_cost` per
+    /// tier-1 decision by the router's own cost model; exact argmin
+    /// routers show regret ≡ 0).
+    pub regret: RegretAudit,
+    /// Theorem-4 `idle + correction` joules attributed to gating
+    /// workers fleet-wide (conserves against the summed per-replica
+    /// `energy_idle_j + energy_correction_j` to ≤ 1e-9).
+    pub attributed_waste_j: f64,
 }
 
 /// Per-round control hook over the offline fleet core: observes the
@@ -453,6 +468,10 @@ pub fn run_fleet_faulted(
     let overflow = core.overflow_len();
     let counters = core.fault_counters();
     let drained = core.is_idle() && ptr >= trace.len();
+    // Observatory summaries live on the core; capture them before
+    // `into_results` consumes it.
+    let regret = core.regret().clone();
+    let attributed_waste_j = core.attributed_waste_fleet_j();
     let per_replica = core.into_results();
     let mut res = aggregate(
         router_label,
@@ -462,6 +481,8 @@ pub fn run_fleet_faulted(
         per_replica,
         counters,
     );
+    res.regret = regret;
+    res.attributed_waste_j = attributed_waste_j;
     res.leftover_waiting += overflow;
     // Conservation (debug builds): once the fleet fully drains, every
     // submitted request either completed or was shed — never neither.
@@ -550,6 +571,8 @@ fn aggregate(
         recoveries: counters.recoveries,
         requeued: counters.requeued,
         shed: counters.shed,
+        regret: RegretAudit::default(),
+        attributed_waste_j: 0.0,
     }
 }
 

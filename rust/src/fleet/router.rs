@@ -88,6 +88,20 @@ pub trait FleetRouter: Send {
         replicas: &[ReplicaView],
         rng: &mut Rng,
     ) -> Option<usize>;
+
+    /// The router's own marginal cost of placing a prefill-`prefill`
+    /// request on `v`, for the routing-regret audit
+    /// ([`crate::obs::RegretAudit`]): the audit replays this over every
+    /// accepting candidate after a pick and records
+    /// `chosen − best`.  `None` (the default) means the router has no
+    /// per-candidate cost model to audit — sampled (power-of-d) and
+    /// cost-blind (WRR) routers stay unaudited rather than being scored
+    /// against a model they never consulted.  Must be pure (`&self`, no
+    /// state mutation) and must match the cost the router's `route`
+    /// minimizes exactly, or exact routers would show phantom regret.
+    fn decision_cost(&self, _prefill: f64, _v: &ReplicaView) -> Option<f64> {
+        None
+    }
 }
 
 /// Accepting replica minimizing `cost` lexicographically: lowest cost
@@ -214,6 +228,11 @@ impl FleetRouter for LeastOutstanding {
             })
             .map(|v| v.id)
     }
+
+    /// Exactly the per-candidate key `route` minimizes.
+    fn decision_cost(&self, prefill: f64, v: &ReplicaView) -> Option<f64> {
+        Some((v.outstanding() + prefill / v.speed.max(1e-12)) * v.penalty)
+    }
 }
 
 /// Power-of-d replicas: sample `d` accepting replicas uniformly, route
@@ -309,6 +328,10 @@ impl FleetRouter for TwoLevelBfIo {
     ) -> Option<usize> {
         min_cost_accepting(replicas, |v| self.marginal(v, prefill))
     }
+
+    fn decision_cost(&self, prefill: f64, v: &ReplicaView) -> Option<f64> {
+        Some(self.marginal(v, prefill))
+    }
 }
 
 /// Predictive two-level BF-IO (`bfio2h`): the ROADMAP's tier-1 router
@@ -365,6 +388,10 @@ impl FleetRouter for PredictiveHorizon {
         _rng: &mut Rng,
     ) -> Option<usize> {
         min_cost_accepting(replicas, |v| self.cost(v, prefill))
+    }
+
+    fn decision_cost(&self, prefill: f64, v: &ReplicaView) -> Option<f64> {
+        Some(self.cost(v, prefill))
     }
 }
 
@@ -575,6 +602,45 @@ mod tests {
         }
         assert_eq!(counts[0], 100);
         assert_eq!(counts[1], 200);
+    }
+
+    #[test]
+    fn decision_cost_matches_route_argmin() {
+        // The audited cost must be exactly the key each router
+        // minimizes: the pick's decision_cost equals the minimum over
+        // accepting candidates, so recorded regret is exactly zero.
+        let mut views = vec![
+            view(0, 1.0, 120.0),
+            view(1, 2.0, 100.0),
+            view(2, 1.0, 40.0),
+        ];
+        views[0].max_load = 90.0;
+        views[0].min_load = 30.0;
+        let mut rng = Rng::new(5);
+        let mut routers: Vec<Box<dyn FleetRouter>> = vec![
+            Box::new(LeastOutstanding),
+            Box::new(TwoLevelBfIo::new(0.1, 1.0)),
+            Box::new(PredictiveHorizon::new(0.1, 1.0)),
+        ];
+        for r in routers.iter_mut() {
+            let picked = r.route(25.0, &views, &mut rng).unwrap();
+            let chosen = r
+                .decision_cost(25.0, &views[picked])
+                .expect("cost-based routers expose a decision cost");
+            let best = views
+                .iter()
+                .filter(|v| v.accepting)
+                .filter_map(|v| r.decision_cost(25.0, v))
+                .fold(f64::INFINITY, f64::min);
+            assert!(
+                chosen - best <= 1e-12,
+                "{}: chosen {chosen} vs best {best}",
+                r.name()
+            );
+        }
+        // Cost-blind routers stay unaudited.
+        assert!(WeightedRoundRobin::new().decision_cost(1.0, &views[0]).is_none());
+        assert!(PowerOfDReplicas::new(2).decision_cost(1.0, &views[0]).is_none());
     }
 
     #[test]

@@ -13,7 +13,7 @@
 use anyhow::{bail, Result};
 
 use crate::autoscale::ControllerState;
-use crate::obs::{ObsStats, SpanEvent};
+use crate::obs::{ObsStats, RegretAudit, SpanEvent};
 
 /// One completion request as seen by a backend (already tokenized).
 #[derive(Clone, Debug)]
@@ -93,6 +93,14 @@ pub struct ReplicaStatus {
     pub energy_useful_j: f64,
     pub energy_idle_j: f64,
     pub energy_correction_j: f64,
+    /// Barrier steps each worker of this replica gated (argmax load) —
+    /// the straggler-attribution tally behind `bfio_gate_total`.
+    pub gate_counts: Vec<u64>,
+    /// Total gated steps (Σ `gate_counts`).
+    pub gates: u64,
+    /// Theorem-4 `idle + correction` joules attributed to this
+    /// replica's gating workers (`bfio_attributed_waste_joules_total`).
+    pub attributed_waste_j: f64,
 }
 
 /// Aggregate backend counters for `GET /metrics`.
@@ -136,6 +144,9 @@ pub struct BackendStats {
     /// Requests dropped after a repeat loss or with no surviving
     /// capacity (the gateway answers these with 503).
     pub shed: u64,
+    /// Online routing-regret audit (`bfio_router_regret_*`); the
+    /// inert default for backends without a tier-1 router.
+    pub regret: RegretAudit,
 }
 
 /// A replica-lifecycle administration command
@@ -214,6 +225,21 @@ pub trait Backend: Send + Sync {
     /// with `404`.
     fn trace_events(&self, last: usize, id: Option<u64>) -> Option<Vec<SpanEvent>> {
         let _ = (last, id);
+        None
+    }
+
+    /// Spans evicted from the flight recorder because its ring filled
+    /// (`bfio_trace_dropped_total` and the `/v0/trace` JSONL header).
+    /// `None` (the default) when tracing is unsupported or disabled.
+    fn trace_dropped(&self) -> Option<u64> {
+        None
+    }
+
+    /// The windowed time-series store rendered as the `/v0/series` JSON
+    /// document (newest `last` points).  `None` (the default) means the
+    /// backend keeps no series — the gateway answers `404`.
+    fn series_json(&self, last: usize) -> Option<String> {
+        let _ = last;
         None
     }
 }

@@ -12,6 +12,8 @@
 //! | `/v0/admin/replicas`   | GET    | replica lifecycle + autoscaler state     |
 //! | `/v0/admin/replicas`   | POST   | drain / add / reactivate / pause / resume|
 //! | `/v0/trace`            | GET    | lifecycle spans (`?last=N&id=R&format=`) |
+//! | `/v0/series`           | GET    | windowed time-series ring (`?last=N`)    |
+//! | `/v0/dash`             | GET    | self-contained live HTML dashboard       |
 //! | `/metrics`             | GET    | Prometheus text exposition               |
 //! | `/healthz`             | GET    | liveness                                 |
 //!
@@ -231,7 +233,7 @@ fn route(req: &HttpRequest, shared: &Shared) -> Result<Routed> {
         ("GET", "/") => Ok((
             200,
             "text/plain",
-            b"bfio gateway\nPOST /v1/completions  GET /v0/workers  GET|POST /v0/admin/replicas  GET /metrics  GET /healthz\n"
+            b"bfio gateway\nPOST /v1/completions  GET /v0/workers  GET|POST /v0/admin/replicas  GET /v0/trace  GET /v0/series  GET /v0/dash  GET /metrics  GET /healthz\n"
                 .to_vec(),
         )),
         ("GET", "/v0/workers") => {
@@ -244,6 +246,12 @@ fn route(req: &HttpRequest, shared: &Shared) -> Result<Routed> {
         )),
         ("POST", "/v0/admin/replicas") => admin_replicas_post(req, shared),
         ("GET", "/v0/trace") => trace_get(req, shared),
+        ("GET", "/v0/series") => series_get(req, shared),
+        ("GET", "/v0/dash") => Ok((
+            200,
+            "text/html; charset=utf-8",
+            crate::obs::series::DASH_HTML.as_bytes().to_vec(),
+        )),
         ("GET", "/metrics") => Ok((
             200,
             "text/plain; version=0.0.4",
@@ -562,7 +570,38 @@ fn trace_get(req: &HttpRequest, shared: &Shared) -> Result<Routed> {
             "application/json",
             to_chrome(&events).into_bytes(),
         )),
-        _ => Ok((200, "application/x-ndjson", to_jsonl(&events).into_bytes())),
+        _ => {
+            // JSONL leads with one header object so consumers can tell
+            // how many spans the ring evicted before this snapshot.
+            let dropped = shared.backend.trace_dropped().unwrap_or(0);
+            let header = json::obj(vec![
+                ("header", Json::Bool(true)),
+                ("dropped", json::num(dropped as f64)),
+                ("events", json::num(events.len() as f64)),
+            ]);
+            let mut body = header.to_string();
+            body.push('\n');
+            body.push_str(&to_jsonl(&events));
+            Ok((200, "application/x-ndjson", body.into_bytes()))
+        }
+    }
+}
+
+/// `GET /v0/series?last=N`: the backend's windowed time-series ring as
+/// one JSON document (newest `last` points, oldest first).  `404` when
+/// the backend keeps no series (sim/pjrt single-group backends).
+fn series_get(req: &HttpRequest, shared: &Shared) -> Result<Routed> {
+    let last = req
+        .query_param("last")
+        .and_then(|s| s.parse::<usize>().ok())
+        .unwrap_or(256);
+    match shared.backend.series_json(last) {
+        Some(body) => Ok((200, "application/json", body.into_bytes())),
+        None => Ok((
+            404,
+            "application/json",
+            error_body("this backend keeps no time series (fleet backends only)"),
+        )),
     }
 }
 
@@ -737,6 +776,39 @@ fn metrics_text(shared: &Shared) -> String {
                 "bfio_replica_health",
                 &[("replica", id.as_str()), ("health", r.health.as_str())],
                 1.0,
+            );
+        }
+        // --- straggler attribution: who gated the barrier, and what
+        //     Theorem-4 waste is charged to them ---------------------
+        w.family(
+            "bfio_gate_total",
+            "Barrier steps gated (argmax load) per worker — the straggler-\
+             attribution tally.",
+            "counter",
+        );
+        for r in &reps {
+            let rep = r.id.to_string();
+            for (g, &n) in r.gate_counts.iter().enumerate() {
+                let id = g.to_string();
+                w.sample(
+                    "bfio_gate_total",
+                    &[("replica", rep.as_str()), ("worker", id.as_str())],
+                    n as f64,
+                );
+            }
+        }
+        w.family(
+            "bfio_attributed_waste_joules_total",
+            "Theorem 4 idle+correction joules charged to the replica's \
+             gating workers (conserved against the energy decomposition).",
+            "counter",
+        );
+        for r in &reps {
+            let id = r.id.to_string();
+            w.sample(
+                "bfio_attributed_waste_joules_total",
+                &[("replica", id.as_str())],
+                r.attributed_waste_j,
             );
         }
     }
@@ -1011,6 +1083,64 @@ fn metrics_text(shared: &Shared) -> String {
         "counter",
     );
     w.sample("bfio_fault_shed_total", &[], st.shed as f64);
+    // --- routing-regret audit: chosen vs counterfactual-best cost ---
+    w.family(
+        "bfio_router_regret_decisions_total",
+        "Tier-1 routing decisions seen by the regret audit.",
+        "counter",
+    );
+    w.sample(
+        "bfio_router_regret_decisions_total",
+        &policy_labels,
+        st.regret.decisions as f64,
+    );
+    w.family(
+        "bfio_router_regret_audited_total",
+        "Decisions whose router exposed a marginal cost to audit.",
+        "counter",
+    );
+    w.sample(
+        "bfio_router_regret_audited_total",
+        &policy_labels,
+        st.regret.audited as f64,
+    );
+    w.family(
+        "bfio_router_regret_seconds_total",
+        "Cumulative routing regret (chosen − best marginal Eq. 19 cost); \
+         exactly 0 for exact-argmin routers.",
+        "counter",
+    );
+    w.sample(
+        "bfio_router_regret_seconds_total",
+        &policy_labels,
+        st.regret.cumulative(),
+    );
+    w.family(
+        "bfio_router_regret_seconds_max",
+        "Largest single-decision regret observed.",
+        "gauge",
+    );
+    w.sample(
+        "bfio_router_regret_seconds_max",
+        &policy_labels,
+        st.regret.max_regret,
+    );
+    w.histogram(
+        "bfio_router_regret_seconds",
+        "Per-decision routing regret (DDSketch-backed).",
+        &policy_labels,
+        &st.regret.sketch,
+        seconds_buckets(),
+    );
+    if let Some(dropped) = shared.backend.trace_dropped() {
+        w.family(
+            "bfio_trace_dropped_total",
+            "Spans evicted from the trace flight recorder because its \
+             ring filled.",
+            "counter",
+        );
+        w.sample("bfio_trace_dropped_total", &[], dropped as f64);
+    }
     w.family(
         "bfio_backend_clock_seconds",
         "Backend clock (virtual for sim, wall for pjrt).",

@@ -477,6 +477,9 @@ fn publish<T, P>(
             rounds: Default::default(),
             slo: recorder.slo(),
         },
+        // No fault plane and no tier-1 router here: the fault tallies
+        // and the regret audit stay at their inert defaults.
+        ..BackendStats::default()
     };
     if let Ok(mut s) = snap.lock() {
         s.workers = ws;

@@ -14,9 +14,10 @@
 //! bfio serve     --workers 2 --policy bfio:8 --requests 16    live PJRT serving
 //! bfio gateway   --backend sim|fleet [--autoscale energy]
 //!                [--faults <plan>] [--trace] [--slo-ttft S] [--slo-tpot S]
-//!                                                             HTTP gateway
+//!                [--series-window N] [--series-cap N]         HTTP gateway
 //! bfio loadgen   --url http://127.0.0.1:8080 --requests 64    drive a gateway
 //! bfio trace     --out trace.jsonl --steps 200                dump a trace
+//! bfio promlint  metrics.txt                                  lint an exposition
 //! ```
 
 use std::sync::Arc;
@@ -78,18 +79,41 @@ fn run(args: &Args) -> Result<()> {
         Some("gateway") => cmd_gateway(args),
         Some("loadgen") => cmd_loadgen(args),
         Some("trace") => cmd_trace(args),
+        Some("promlint") => cmd_promlint(args),
         Some(other) => bail!(
-            "unknown subcommand {other}; try sim|fleet|autoscale|repro|theory|serve|gateway|loadgen|trace"
+            "unknown subcommand {other}; try sim|fleet|autoscale|repro|theory|serve|gateway|loadgen|trace|promlint"
         ),
         None => {
             println!(
                 "bfio — BF-IO load-balancing reproduction\n\
                  subcommands: sim | fleet | autoscale | repro <exp> | theory <thm> | serve | \
-                 gateway | loadgen | trace\n\
+                 gateway | loadgen | trace | promlint\n\
                  see README.md for details"
             );
             Ok(())
         }
+    }
+}
+
+/// `bfio promlint <file>` (or `-`/no arg for stdin): hold a Prometheus
+/// text exposition to the same structural linter the test suite uses —
+/// CI points it at a live `/metrics` scrape.
+fn cmd_promlint(args: &Args) -> Result<()> {
+    let path = args.positional.first().map(String::as_str).unwrap_or("-");
+    let text = if path == "-" {
+        use std::io::Read as _;
+        let mut s = String::new();
+        std::io::stdin().read_to_string(&mut s)?;
+        s
+    } else {
+        std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?
+    };
+    match bfio_serve::metrics::prometheus::lint(&text) {
+        Ok(()) => {
+            println!("promlint: {path}: OK ({} bytes)", text.len());
+            Ok(())
+        }
+        Err(e) => bail!("promlint: {path}: {e}"),
     }
 }
 
@@ -448,6 +472,10 @@ fn cmd_gateway(args: &Args) -> Result<()> {
                 slo,
                 trace,
                 trace_buf,
+                // `/v0/series` ring shape: record every N rounds, keep
+                // the newest `series-cap` windows.
+                series_window: args.u64_or("series-window", 8),
+                series_cap: args.usize_or("series-cap", 256),
                 ..FleetBackendConfig::default()
             };
             Arc::new(FleetBackend::new(cfg)?)
@@ -472,7 +500,7 @@ fn cmd_gateway(args: &Args) -> Result<()> {
     println!("bfio gateway ({name}) listening on http://{}", gw.addr);
     println!(
         "  POST /v1/completions   GET /v0/workers   GET|POST /v0/admin/replicas   \
-         GET /metrics   GET /healthz{}",
+         GET /v0/series   GET /v0/dash   GET /metrics   GET /healthz{}",
         if trace { "   GET /v0/trace" } else { "" }
     );
     // Serve until killed.

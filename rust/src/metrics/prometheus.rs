@@ -4,6 +4,15 @@
 //! subset the gateway's `GET /metrics` endpoint needs: `# HELP`/`# TYPE`
 //! headers, gauge/counter samples with escaped labels.  Scrapeable by a
 //! stock Prometheus server pointed at the gateway.
+//!
+//! Beyond the core load/energy families, the gateway's exposition now
+//! carries the imbalance-observatory families: straggler attribution
+//! (`bfio_gate_total{replica,worker}`,
+//! `bfio_attributed_waste_joules_total{replica}`), the routing-regret
+//! audit (`bfio_router_regret_decisions_total`, `_audited_total`,
+//! `_seconds_total`, `_seconds_max`, and the `bfio_router_regret_seconds`
+//! histogram), and `bfio_trace_dropped_total` when tracing is on.  All
+//! are rendered through the same [`PromWriter`] and pass [`lint`].
 
 use std::collections::BTreeSet;
 use std::fmt::Write as _;

@@ -24,6 +24,16 @@
 //!   (round wall time, pool threads engaged, router decision time,
 //!   per-replica straggler gap) feeding the `bfio_round_*` metric
 //!   family.
+//! * [`attrib::GateLedger`] — per-barrier-step straggler attribution:
+//!   which worker gated each step, with the step's Theorem-4
+//!   `idle + correction` joules charged to it (and blamed onto the
+//!   request last placed there), under an exact ≤1e-9 conservation
+//!   identity against the energy accumulators.
+//! * [`regret::RegretAudit`] — online routing-regret audit
+//!   (`chosen_cost − best_cost` per tier-1 decision by the router's own
+//!   Eq. 19 cost model); exact routers show regret ≡ 0.
+//! * [`series::SeriesRing`] — bounded windowed time-series ring behind
+//!   `GET /v0/series` and the self-contained `GET /v0/dash` dashboard.
 //!
 //! On top of these, [`SloConfig`] + [`RequestObs`] define the
 //! **SLO-goodput** metric: the fraction of completions whose TTFT and
@@ -37,11 +47,17 @@
 //! O(1) amortized per sample with hard memory bounds, matching the
 //! engine's zero-steady-state-allocation ethos.
 
+pub mod attrib;
 pub mod profiler;
+pub mod regret;
+pub mod series;
 pub mod sketch;
 pub mod trace;
 
+pub use attrib::GateLedger;
 pub use profiler::RoundProfiler;
+pub use regret::RegretAudit;
+pub use series::SeriesRing;
 pub use sketch::QuantileSketch;
 pub use trace::{SpanEvent, SpanKind, SpanLog, Tracer};
 

@@ -1,0 +1,151 @@
+//! Online routing-regret audit: how good was each tier-1 decision
+//! versus the counterfactual best placement, by the router's own
+//! marginal Eq. 19 cost model?
+//!
+//! Cost-based routers (`low`, `bfio2`, `bfio2h`) already evaluate a
+//! marginal cost per candidate; the audit replays that cost over every
+//! accepting replica *after* the pick and records
+//! `chosen_cost − best_cost` into a [`QuantileSketch`] plus counters.
+//! Exact-argmin routers therefore show regret ≡ 0 on any fleet — the
+//! audit's built-in self-check — while sampled (power-of-d) or cost-blind
+//! (WRR) routers have no cost model to audit and only bump the decision
+//! counter.  Cumulative regret surfacing next to the health penalties
+//! tells an operator when a router is *systematically* mis-placing
+//! (e.g. stale views or a penalty pinned by a flapping replica).
+//!
+//! Observability-only: the audit reads costs through
+//! [`crate::fleet::FleetRouter::decision_cost`] (`&self`, no router
+//! state mutation) and never alters the pick, so routing behavior and
+//! the parity suites are untouched.
+
+use crate::obs::attrib::Kahan;
+use crate::obs::QuantileSketch;
+
+/// Regret at or below this is recorded as exactly 0.0.  Matches the
+/// tie-break epsilon of the routers' own argmin scan, so a pick that
+/// tied within epsilon (and was broken by the secondary key) does not
+/// register phantom regret.
+pub const REGRET_EPS: f64 = 1e-12;
+
+/// Cumulative routing-regret audit for one fleet core.
+#[derive(Clone, Debug)]
+pub struct RegretAudit {
+    /// Every routing decision seen (audited or not).
+    pub decisions: u64,
+    /// Decisions where the router exposed a marginal cost to audit.
+    pub audited: u64,
+    /// Largest single-decision regret observed.
+    pub max_regret: f64,
+    /// Per-decision regret distribution (seconds of marginal Eq. 19
+    /// cost); zero-regret decisions land in the sketch's zero bucket.
+    pub sketch: QuantileSketch,
+    cumulative: Kahan,
+}
+
+impl Default for RegretAudit {
+    fn default() -> RegretAudit {
+        RegretAudit {
+            decisions: 0,
+            audited: 0,
+            max_regret: 0.0,
+            sketch: QuantileSketch::default(),
+            cumulative: Kahan::default(),
+        }
+    }
+}
+
+impl RegretAudit {
+    pub fn new() -> RegretAudit {
+        RegretAudit::default()
+    }
+
+    /// A decision by a router with no auditable cost model (WRR,
+    /// power-of-d): counted, not measured.
+    pub fn note_unaudited(&mut self) {
+        self.decisions += 1;
+    }
+
+    /// Record one audited decision; returns the recorded regret.
+    pub fn record(&mut self, chosen_cost: f64, best_cost: f64) -> f64 {
+        self.decisions += 1;
+        self.audited += 1;
+        let mut r = (chosen_cost - best_cost).max(0.0);
+        if r <= REGRET_EPS {
+            r = 0.0;
+        }
+        self.cumulative.add(r);
+        if r > self.max_regret {
+            self.max_regret = r;
+        }
+        self.sketch.insert(r);
+        r
+    }
+
+    /// Total regret-seconds accumulated (compensated sum).
+    pub fn cumulative(&self) -> f64 {
+        self.cumulative.value()
+    }
+
+    /// Mean regret per audited decision.
+    pub fn mean(&self) -> f64 {
+        if self.audited == 0 {
+            0.0
+        } else {
+            self.cumulative() / self.audited as f64
+        }
+    }
+
+    /// In-place copy for the gateway's zero-steady-state-alloc publish
+    /// path (reuses the destination sketch's bucket allocation).
+    pub fn copy_from(&mut self, src: &RegretAudit) {
+        self.decisions = src.decisions;
+        self.audited = src.audited;
+        self.max_regret = src.max_regret;
+        self.cumulative = src.cumulative;
+        self.sketch.copy_from(&src.sketch);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_router_shows_zero_regret() {
+        let mut a = RegretAudit::new();
+        for _ in 0..1000 {
+            // An exact argmin pick: chosen == best (and fp ties within
+            // the router's epsilon floor to exactly zero).
+            assert_eq!(a.record(0.5, 0.5), 0.0);
+            assert_eq!(a.record(0.5 + 0.9e-12, 0.5), 0.0);
+        }
+        assert_eq!(a.decisions, 2000);
+        assert_eq!(a.audited, 2000);
+        assert_eq!(a.cumulative(), 0.0);
+        assert_eq!(a.max_regret, 0.0);
+        assert_eq!(a.mean(), 0.0);
+        assert_eq!(a.sketch.quantile(1.0), Some(0.0));
+    }
+
+    #[test]
+    fn regret_accumulates_and_copies() {
+        let mut a = RegretAudit::new();
+        a.note_unaudited();
+        assert_eq!(a.record(1.5, 1.0), 0.5);
+        assert_eq!(a.record(2.0, 1.75), 0.25);
+        // Negative differences (best filter wider than the pick set)
+        // clamp to zero rather than crediting the router.
+        assert_eq!(a.record(1.0, 2.0), 0.0);
+        assert_eq!(a.decisions, 4);
+        assert_eq!(a.audited, 3);
+        assert!((a.cumulative() - 0.75).abs() < 1e-15);
+        assert!((a.max_regret - 0.5).abs() < 1e-15);
+        assert!((a.mean() - 0.25).abs() < 1e-15);
+        let mut b = RegretAudit::new();
+        b.copy_from(&a);
+        assert_eq!(b.decisions, a.decisions);
+        assert_eq!(b.audited, a.audited);
+        assert_eq!(b.cumulative(), a.cumulative());
+        assert_eq!(b.sketch.count(), a.sketch.count());
+    }
+}

@@ -1,0 +1,543 @@
+//! Bounded windowed time-series ring for the live dashboard.
+//!
+//! Every `window` rounds the fleet core folds one [`SeriesPoint`] into
+//! the ring: per-window arrival/completion counts, the fleet Eq. 2
+//! imbalance, the straggler gap, the Theorem-4 energy decomposition
+//! (as window deltas of the cumulative accumulators), SLO-goodput, and
+//! a compact per-replica row (health / penalty / gate-share / load).
+//!
+//! The ring is bounded by `cap` points with oldest-first eviction and
+//! is **zero-alloc in steady state**: points are laid down once, then
+//! reused in place (the per-replica `Vec` is cleared, not rebuilt), so
+//! recording costs O(R) stores and no heap traffic once the ring has
+//! filled and the fleet size is stable.  The gateway publishes a
+//! mirror via [`SeriesRing::copy_from`] (same in-place discipline,
+//! skipped entirely when the version counter is unchanged) and renders
+//! it as JSON on `GET /v0/series?last=N`; `GET /v0/dash` serves
+//! [`DASH_HTML`], a dependency-free single-file dashboard polling that
+//! endpoint.
+
+use crate::util::json::{arr, num, obj, s, Json};
+
+/// Health codes carried per replica point (compact alternative to the
+/// label strings; see [`health_label`]).
+pub const HEALTH_HEALTHY: u8 = 0;
+pub const HEALTH_SUSPECT: u8 = 1;
+pub const HEALTH_DOWN: u8 = 2;
+pub const HEALTH_RECOVERING: u8 = 3;
+
+/// Label for a health code (mirrors `fault::HealthState::label`).
+pub fn health_label(code: u8) -> &'static str {
+    match code {
+        HEALTH_HEALTHY => "healthy",
+        HEALTH_SUSPECT => "suspect",
+        HEALTH_DOWN => "down",
+        HEALTH_RECOVERING => "recovering",
+        _ => "unknown",
+    }
+}
+
+/// Cumulative counters sampled at a window boundary; the ring turns
+/// consecutive samples into per-window deltas.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct SeriesTotals {
+    pub arrivals: u64,
+    pub completions: u64,
+    pub energy_j: f64,
+    pub useful_j: f64,
+    pub idle_j: f64,
+    pub correction_j: f64,
+}
+
+/// One replica's row within a point.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct ReplicaPoint {
+    pub id: usize,
+    pub health: u8,
+    pub penalty: f64,
+    /// This replica's share of all barrier-step gates so far (straggler
+    /// attribution; sums to ~1 across live replicas once steps exist).
+    pub gate_share: f64,
+    pub load: f64,
+}
+
+/// One window's sample.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct SeriesPoint {
+    pub round: u64,
+    pub clock_s: f64,
+    /// Per-window deltas of the cumulative counters.
+    pub arrivals: u64,
+    pub completions: u64,
+    pub energy_j: f64,
+    pub useful_j: f64,
+    pub idle_j: f64,
+    pub correction_j: f64,
+    /// Instantaneous fleet Eq. 2 imbalance at the boundary.
+    pub imbalance: f64,
+    /// Max-minus-min live replica clock at the boundary.
+    pub straggler_gap_s: f64,
+    /// Cumulative SLO-goodput at the boundary.
+    pub goodput: f64,
+    pub replicas: Vec<ReplicaPoint>,
+}
+
+/// The bounded ring itself.
+#[derive(Clone, Debug)]
+pub struct SeriesRing {
+    window: u64,
+    cap: usize,
+    buf: Vec<SeriesPoint>,
+    /// Index of the oldest point.
+    head: usize,
+    len: usize,
+    last: SeriesTotals,
+    version: u64,
+}
+
+impl SeriesRing {
+    pub fn new(window: u64, cap: usize) -> SeriesRing {
+        SeriesRing {
+            window: window.max(1),
+            cap: cap.max(1),
+            buf: Vec::new(),
+            head: 0,
+            len: 0,
+            last: SeriesTotals::default(),
+            version: 0,
+        }
+    }
+
+    pub fn window(&self) -> u64 {
+        self.window
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Bumped on every record; lets mirrors skip no-op copies.
+    pub fn version(&self) -> u64 {
+        self.version
+    }
+
+    /// Should round `round` close a window?  (`round` is 1-based by
+    /// the time the core's epilogue runs.)
+    pub fn due(&self, round: u64) -> bool {
+        round % self.window == 0
+    }
+
+    /// Record one window boundary.  `totals` are the *cumulative*
+    /// counters; the ring stores their delta against the previous
+    /// boundary.  Returns the point's replica Vec, cleared, for the
+    /// caller to fill — in place, no allocation once warm.
+    pub fn record(
+        &mut self,
+        round: u64,
+        clock_s: f64,
+        totals: SeriesTotals,
+        imbalance: f64,
+        straggler_gap_s: f64,
+        goodput: f64,
+    ) -> &mut Vec<ReplicaPoint> {
+        self.version += 1;
+        let idx = if self.len < self.cap {
+            let idx = (self.head + self.len) % self.cap;
+            if idx == self.buf.len() {
+                self.buf.push(SeriesPoint::default());
+            }
+            self.len += 1;
+            idx
+        } else {
+            let idx = self.head;
+            self.head = (self.head + 1) % self.cap;
+            idx
+        };
+        let p = &mut self.buf[idx];
+        p.round = round;
+        p.clock_s = clock_s;
+        p.arrivals = totals.arrivals.saturating_sub(self.last.arrivals);
+        p.completions = totals.completions.saturating_sub(self.last.completions);
+        p.energy_j = (totals.energy_j - self.last.energy_j).max(0.0);
+        p.useful_j = (totals.useful_j - self.last.useful_j).max(0.0);
+        p.idle_j = (totals.idle_j - self.last.idle_j).max(0.0);
+        p.correction_j =
+            (totals.correction_j - self.last.correction_j).max(0.0);
+        p.imbalance = imbalance;
+        p.straggler_gap_s = straggler_gap_s;
+        p.goodput = goodput;
+        p.replicas.clear();
+        self.last = totals;
+        &mut self.buf[idx].replicas
+    }
+
+    /// Point `i` in oldest-first order (`i < len`).
+    pub fn get(&self, i: usize) -> Option<&SeriesPoint> {
+        (i < self.len).then(|| &self.buf[(self.head + i) % self.cap])
+    }
+
+    /// Oldest-first iteration.
+    pub fn points(&self) -> impl Iterator<Item = &SeriesPoint> {
+        (0..self.len).map(move |i| &self.buf[(self.head + i) % self.cap])
+    }
+
+    /// Mirror `src` into `self` in place: per-point field copies with
+    /// the replica Vecs reused, and a version check that makes the
+    /// steady-state no-change publish free.
+    pub fn copy_from(&mut self, src: &SeriesRing) {
+        if self.version == src.version
+            && self.window == src.window
+            && self.cap == src.cap
+        {
+            return;
+        }
+        self.window = src.window;
+        self.cap = src.cap;
+        self.head = 0;
+        self.len = src.len;
+        self.last = src.last;
+        self.version = src.version;
+        if self.buf.len() > src.len {
+            self.buf.truncate(src.len);
+        }
+        for (i, sp) in src.points().enumerate() {
+            if i == self.buf.len() {
+                self.buf.push(SeriesPoint::default());
+            }
+            let dst = &mut self.buf[i];
+            let keep = std::mem::take(&mut dst.replicas);
+            *dst = SeriesPoint { replicas: keep, ..SeriesPoint::default() };
+            dst.round = sp.round;
+            dst.clock_s = sp.clock_s;
+            dst.arrivals = sp.arrivals;
+            dst.completions = sp.completions;
+            dst.energy_j = sp.energy_j;
+            dst.useful_j = sp.useful_j;
+            dst.idle_j = sp.idle_j;
+            dst.correction_j = sp.correction_j;
+            dst.imbalance = sp.imbalance;
+            dst.straggler_gap_s = sp.straggler_gap_s;
+            dst.goodput = sp.goodput;
+            dst.replicas.clear();
+            dst.replicas.extend_from_slice(&sp.replicas);
+        }
+    }
+
+    /// Fold another ring's points into this one by matching round —
+    /// the per-replica-shard merge used in tests and offline analysis.
+    /// Additive fields (arrivals, completions, energy terms, Eq. 2
+    /// imbalance, which is a sum of per-group terms) add exactly;
+    /// the straggler gap takes the max; goodput is
+    /// completion-weighted; replica rows concatenate.  Points whose
+    /// rounds exist only in `other` are appended in order.
+    pub fn merge_aligned(&mut self, other: &SeriesRing) {
+        self.version += 1;
+        for op in other.points() {
+            let mut found = false;
+            for i in 0..self.len {
+                let idx = (self.head + i) % self.cap;
+                if self.buf[idx].round == op.round {
+                    let p = &mut self.buf[idx];
+                    let done = p.completions + op.completions;
+                    if done > 0 {
+                        p.goodput = (p.goodput * p.completions as f64
+                            + op.goodput * op.completions as f64)
+                            / done as f64;
+                    }
+                    p.arrivals += op.arrivals;
+                    p.completions += op.completions;
+                    p.energy_j += op.energy_j;
+                    p.useful_j += op.useful_j;
+                    p.idle_j += op.idle_j;
+                    p.correction_j += op.correction_j;
+                    p.imbalance += op.imbalance;
+                    p.straggler_gap_s =
+                        p.straggler_gap_s.max(op.straggler_gap_s);
+                    p.clock_s = p.clock_s.max(op.clock_s);
+                    p.replicas.extend_from_slice(&op.replicas);
+                    found = true;
+                    break;
+                }
+            }
+            if !found {
+                let slot = self.record(
+                    op.round,
+                    op.clock_s,
+                    self.last, // zero delta; fields overwritten below
+                    op.imbalance,
+                    op.straggler_gap_s,
+                    op.goodput,
+                );
+                slot.extend_from_slice(&op.replicas);
+                let idx = (self.head + self.len - 1) % self.cap;
+                self.buf[idx].arrivals = op.arrivals;
+                self.buf[idx].completions = op.completions;
+                self.buf[idx].energy_j = op.energy_j;
+                self.buf[idx].useful_j = op.useful_j;
+                self.buf[idx].idle_j = op.idle_j;
+                self.buf[idx].correction_j = op.correction_j;
+            }
+        }
+    }
+
+    /// Render the newest `last` points as the `/v0/series` JSON
+    /// document (cold path; allocates freely).
+    pub fn to_json(&self, last: usize) -> String {
+        let n = last.min(self.len);
+        let skip = self.len - n;
+        let pts = self.points().skip(skip).map(|p| {
+            obj(vec![
+                ("round", num(p.round as f64)),
+                ("clock_s", num(p.clock_s)),
+                ("arrivals", num(p.arrivals as f64)),
+                ("completions", num(p.completions as f64)),
+                ("imbalance", num(p.imbalance)),
+                ("straggler_gap_s", num(p.straggler_gap_s)),
+                ("energy_j", num(p.energy_j)),
+                ("useful_j", num(p.useful_j)),
+                ("idle_j", num(p.idle_j)),
+                ("correction_j", num(p.correction_j)),
+                ("goodput", num(p.goodput)),
+                (
+                    "replicas",
+                    arr(p.replicas.iter().map(|r| {
+                        obj(vec![
+                            ("id", num(r.id as f64)),
+                            ("health", s(health_label(r.health))),
+                            ("penalty", num(r.penalty)),
+                            ("gate_share", num(r.gate_share)),
+                            ("load", num(r.load)),
+                        ])
+                    })),
+                ),
+            ])
+        });
+        obj(vec![
+            ("window", num(self.window as f64)),
+            ("cap", num(self.cap as f64)),
+            ("len", num(self.len as f64)),
+            ("points", arr(pts)),
+        ])
+        .to_string()
+    }
+}
+
+/// The `/v0/dash` page: a self-contained, dependency-free HTML file
+/// whose inline script polls `/v0/series` and redraws three canvas
+/// strips (imbalance + straggler gap, Theorem-4 energy split, traffic
+/// + goodput) plus a live replica table.  No external assets, no
+/// frameworks — it works from `curl | browser` on an air-gapped box.
+pub const DASH_HTML: &str = r#"<!doctype html>
+<html lang="en">
+<head>
+<meta charset="utf-8">
+<title>bfio imbalance observatory</title>
+<style>
+ body{background:#10141a;color:#cdd6e0;font:13px/1.5 monospace;margin:18px}
+ h1{font-size:16px;color:#e6edf3} h2{font-size:13px;color:#8ab4f8;margin:14px 0 4px}
+ canvas{background:#161b24;border:1px solid #2a3240;display:block;width:100%;height:120px}
+ table{border-collapse:collapse;margin-top:6px}
+ td,th{border:1px solid #2a3240;padding:2px 8px;text-align:right}
+ th{color:#8ab4f8} .h0{color:#7ce38b}.h1{color:#e3b341}.h2{color:#f85149}.h3{color:#79c0ff}
+ #meta{color:#768390}
+ .leg{font-size:11px;color:#768390}
+</style>
+</head>
+<body>
+<h1>bfio imbalance observatory</h1>
+<div id="meta">connecting…</div>
+<h2>Eq. 2 imbalance (tokens) / straggler gap (s)</h2>
+<div class="leg">imbalance <span style="color:#e3b341">&#9632;</span> · gap <span style="color:#f85149">&#9632;</span></div>
+<canvas id="imb"></canvas>
+<h2>Theorem-4 energy per window (J)</h2>
+<div class="leg">useful <span style="color:#7ce38b">&#9632;</span> · idle <span style="color:#e3b341">&#9632;</span> · correction <span style="color:#f85149">&#9632;</span></div>
+<canvas id="energy"></canvas>
+<h2>traffic per window / SLO-goodput</h2>
+<div class="leg">arrivals <span style="color:#79c0ff">&#9632;</span> · completions <span style="color:#7ce38b">&#9632;</span> · goodput <span style="color:#cdd6e0">&#9632;</span></div>
+<canvas id="traffic"></canvas>
+<h2>replicas</h2>
+<table id="reps"><tr><th>id</th><th>health</th><th>penalty</th><th>gate share</th><th>load</th></tr></table>
+<script>
+function draw(id, series, colors, norm) {
+  var cv = document.getElementById(id);
+  cv.width = cv.clientWidth; cv.height = cv.clientHeight;
+  var g = cv.getContext('2d'), W = cv.width, H = cv.height;
+  g.clearRect(0, 0, W, H);
+  var max = 1e-12;
+  series.forEach(function (ys) {
+    ys.forEach(function (y) { if (y > max) max = y; });
+  });
+  if (norm) max = norm;
+  series.forEach(function (ys, si) {
+    g.strokeStyle = colors[si]; g.beginPath();
+    ys.forEach(function (y, i) {
+      var x = ys.length > 1 ? i * (W - 8) / (ys.length - 1) + 4 : W / 2;
+      var yy = H - 6 - (y / max) * (H - 12);
+      if (i === 0) g.moveTo(x, yy); else g.lineTo(x, yy);
+    });
+    g.stroke();
+  });
+  g.fillStyle = '#768390'; g.fillText(max.toPrecision(3), 4, 12);
+}
+function tick() {
+  fetch('/v0/series?last=128').then(function (r) {
+    if (!r.ok) throw new Error('HTTP ' + r.status);
+    return r.json();
+  }).then(function (d) {
+    var p = d.points || [];
+    document.getElementById('meta').textContent =
+      p.length + ' points · window ' + d.window + ' rounds · cap ' + d.cap +
+      (p.length ? ' · round ' + p[p.length - 1].round : '');
+    var col = function (k) { return p.map(function (q) { return q[k]; }); };
+    draw('imb', [col('imbalance'), col('straggler_gap_s')], ['#e3b341', '#f85149']);
+    draw('energy', [col('useful_j'), col('idle_j'), col('correction_j')],
+         ['#7ce38b', '#e3b341', '#f85149']);
+    draw('traffic', [col('arrivals'), col('completions'),
+                     col('goodput').map(function (g0) {
+                       var m = Math.max.apply(null, col('arrivals').concat([1]));
+                       return g0 * m;
+                     })],
+         ['#79c0ff', '#7ce38b', '#cdd6e0']);
+    var t = document.getElementById('reps');
+    while (t.rows.length > 1) t.deleteRow(1);
+    var reps = p.length ? p[p.length - 1].replicas : [];
+    reps.forEach(function (r0) {
+      var row = t.insertRow(-1);
+      row.insertCell(-1).textContent = r0.id;
+      var hc = row.insertCell(-1);
+      hc.textContent = r0.health;
+      hc.className = { healthy: 'h0', suspect: 'h1', down: 'h2', recovering: 'h3' }[r0.health] || '';
+      row.insertCell(-1).textContent = r0.penalty.toFixed(3);
+      row.insertCell(-1).textContent = (100 * r0.gate_share).toFixed(1) + '%';
+      row.insertCell(-1).textContent = r0.load.toFixed(1);
+    });
+  }).catch(function (e) {
+    document.getElementById('meta').textContent = 'series unavailable: ' + e;
+  });
+}
+tick(); setInterval(tick, 2000);
+</script>
+</body>
+</html>
+"#;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn totals(a: u64, c: u64, e: f64) -> SeriesTotals {
+        SeriesTotals {
+            arrivals: a,
+            completions: c,
+            energy_j: e,
+            useful_j: e * 0.5,
+            idle_j: e * 0.3,
+            correction_j: e * 0.2,
+        }
+    }
+
+    #[test]
+    fn ring_bounds_and_oldest_first_eviction() {
+        let mut r = SeriesRing::new(4, 3);
+        assert!(r.due(4) && r.due(8) && !r.due(5));
+        for i in 1..=5u64 {
+            let reps =
+                r.record(i * 4, i as f64, totals(i * 10, i * 2, i as f64), 0.0, 0.0, 1.0);
+            reps.push(ReplicaPoint { id: 0, ..ReplicaPoint::default() });
+            assert!(r.len() <= r.capacity(), "ring must never exceed cap");
+        }
+        assert_eq!(r.len(), 3);
+        let rounds: Vec<u64> = r.points().map(|p| p.round).collect();
+        assert_eq!(rounds, vec![12, 16, 20], "oldest evicted first");
+        // Deltas, not cumulative values, are stored.
+        assert_eq!(r.get(0).unwrap().arrivals, 10);
+        assert_eq!(r.get(2).unwrap().completions, 2);
+        assert!((r.get(1).unwrap().energy_j - 1.0).abs() < 1e-12);
+        assert_eq!(r.get(2).unwrap().replicas.len(), 1);
+        assert!(r.get(3).is_none());
+    }
+
+    #[test]
+    fn merge_across_replica_shards_is_exact() {
+        // Two shards sampling the same window boundaries merge to the
+        // exact union on every additive field.
+        let mut a = SeriesRing::new(2, 8);
+        let mut b = SeriesRing::new(2, 8);
+        for i in 1..=4u64 {
+            a.record(i * 2, i as f64, totals(i * 3, i, i as f64 * 2.0), 1.5, 0.25, 1.0)
+                .push(ReplicaPoint { id: 0, ..ReplicaPoint::default() });
+            b.record(i * 2, i as f64, totals(i * 5, i * 2, i as f64 * 4.0), 2.5, 0.5, 0.5)
+                .push(ReplicaPoint { id: 1, ..ReplicaPoint::default() });
+        }
+        let mut merged = SeriesRing::new(2, 8);
+        merged.copy_from(&a);
+        merged.merge_aligned(&b);
+        assert_eq!(merged.len(), 4);
+        for (i, p) in merged.points().enumerate() {
+            let (pa, pb) = (a.get(i).unwrap(), b.get(i).unwrap());
+            assert_eq!(p.arrivals, pa.arrivals + pb.arrivals);
+            assert_eq!(p.completions, pa.completions + pb.completions);
+            assert_eq!(p.energy_j, pa.energy_j + pb.energy_j, "exact add");
+            assert_eq!(p.imbalance, pa.imbalance + pb.imbalance);
+            assert_eq!(p.straggler_gap_s, 0.5);
+            assert_eq!(p.replicas.len(), 2);
+        }
+        // Disjoint rounds append instead of merging.
+        let mut c = SeriesRing::new(2, 8);
+        c.record(100, 9.0, totals(1, 1, 1.0), 0.0, 0.0, 1.0);
+        merged.merge_aligned(&c);
+        assert_eq!(merged.len(), 5);
+        assert_eq!(merged.get(4).unwrap().round, 100);
+    }
+
+    #[test]
+    fn copy_from_mirrors_and_skips_unchanged_versions() {
+        let mut src = SeriesRing::new(8, 4);
+        src.record(8, 1.0, totals(4, 2, 8.0), 3.0, 0.1, 0.9)
+            .push(ReplicaPoint { id: 1, health: HEALTH_SUSPECT, ..ReplicaPoint::default() });
+        let mut dst = SeriesRing::new(1, 1);
+        dst.copy_from(&src);
+        assert_eq!(dst.len(), 1);
+        assert_eq!(dst.capacity(), 4);
+        assert_eq!(dst.get(0).unwrap(), src.get(0).unwrap());
+        let v = dst.version();
+        dst.copy_from(&src); // no change → no work, same version
+        assert_eq!(dst.version(), v);
+    }
+
+    #[test]
+    fn json_shape_parses_and_respects_last() {
+        let mut r = SeriesRing::new(1, 8);
+        for i in 1..=6u64 {
+            r.record(i, i as f64, totals(i, i, i as f64), 0.5, 0.0, 1.0)
+                .push(ReplicaPoint {
+                    id: 3,
+                    health: HEALTH_HEALTHY,
+                    penalty: 1.0,
+                    gate_share: 0.25,
+                    load: 7.0,
+                });
+        }
+        let doc = Json::parse(&r.to_json(2)).unwrap();
+        assert_eq!(doc.get("len").unwrap().as_f64().unwrap(), 6.0);
+        let pts = doc.get("points").unwrap().as_arr().unwrap();
+        assert_eq!(pts.len(), 2, "last=2 returns the newest two");
+        assert_eq!(pts[1].get("round").unwrap().as_f64().unwrap(), 6.0);
+        let reps = pts[1].get("replicas").unwrap().as_arr().unwrap();
+        assert_eq!(reps[0].get("health").unwrap().as_str().unwrap(), "healthy");
+        assert_eq!(reps[0].get("gate_share").unwrap().as_f64().unwrap(), 0.25);
+        // The dashboard is self-contained: no external fetches beyond
+        // the series endpoint, and it names the endpoint it polls.
+        assert!(DASH_HTML.contains("/v0/series"));
+        assert!(!DASH_HTML.contains("http://"));
+        assert!(!DASH_HTML.contains("https://"));
+    }
+}

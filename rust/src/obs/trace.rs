@@ -23,6 +23,7 @@
 //! | `Crash`      | in-flight actives lost      | queued requests stranded     |
 //! | `Recover`    | –                           | –                            |
 //! | `Retry`      | prefill tokens requeued     | –                            |
+//! | `Scale`      | action (0 add, 1 reactivate, 2 drain, 3 remove) | replica speed |
 //!
 //! ## Flight recorder
 //!
@@ -64,6 +65,11 @@ pub enum SpanKind {
     Recover,
     /// Crash-lost request requeued through the router (`a` = prefill).
     Retry,
+    /// Fleet scaling action (`request_id` 0; `a` = action code — 0 cold
+    /// add, 1 warm reactivate, 2 drain, 3 drain-for-removal — `b` = the
+    /// replica's speed factor), so `/v0/trace` shows autoscale and
+    /// admin lifecycle changes interleaved with request lifecycles.
+    Scale,
 }
 
 impl SpanKind {
@@ -78,6 +84,7 @@ impl SpanKind {
             SpanKind::Crash => "crash",
             SpanKind::Recover => "recover",
             SpanKind::Retry => "retry",
+            SpanKind::Scale => "scale",
         }
     }
 
@@ -94,6 +101,7 @@ impl SpanKind {
             SpanKind::Crash => 6,
             SpanKind::Recover => 7,
             SpanKind::Retry => 8,
+            SpanKind::Scale => 9,
         }
     }
 }

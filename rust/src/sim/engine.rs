@@ -281,6 +281,22 @@ impl<T, P> Engine<T, P> {
         &self.loads
     }
 
+    /// The worker whose load gates Eq. 19 this step — first argmax of
+    /// `loads` (0 when every load is zero).  This is the straggler the
+    /// fleet's per-step attribution ledger charges idle + correction
+    /// energy to.
+    pub fn gating_worker(&self) -> usize {
+        let mut gate = 0usize;
+        let mut max = 0.0f64;
+        for (g, &l) in self.loads.iter().enumerate() {
+            if l > max {
+                max = l;
+                gate = g;
+            }
+        }
+        gate
+    }
+
     /// Total active requests `|A(k)|`.
     pub fn active_count(&self) -> usize {
         self.total_active

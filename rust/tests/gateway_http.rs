@@ -298,10 +298,13 @@ fn trace_endpoint_serves_complete_span_chains_and_metrics_lint_clean() {
     )
     .unwrap();
     assert_eq!(r.status, 200);
-    let kinds: Vec<String> = r
-        .body_str()
-        .unwrap()
-        .lines()
+    let body = r.body_str().unwrap().to_string();
+    let mut lines = body.lines();
+    // First JSONL line is the store header (drop counter), not a span.
+    let header = Json::parse(lines.next().unwrap()).unwrap();
+    assert_eq!(header.get("header").and_then(Json::as_bool), Some(true));
+    assert!(header.get("dropped").unwrap().as_f64().unwrap() >= 0.0);
+    let kinds: Vec<String> = lines
         .map(|l| {
             let ev = Json::parse(l).unwrap();
             assert_eq!(

@@ -1,13 +1,23 @@
 //! Observability-layer integration tests: DDSketch-vs-exact quantile
 //! parity on realistic workload shapes (Zipf prompt lengths,
-//! BurstGPT-like lognormal latencies) including the merge path, plus an
-//! exposition-lint roundtrip over a real rendered report.
+//! BurstGPT-like lognormal latencies) including the merge path, an
+//! exposition-lint roundtrip over a real rendered report, and the
+//! PR-8 imbalance observatory: straggler-attribution conservation
+//! under churn + faults, the regret-zero invariant for exact routers,
+//! and the windowed series ring's bounds/eviction/merge contract.
 
 use bfio_serve::config::SimConfig;
+use bfio_serve::fleet::{
+    run_fleet, run_fleet_faulted, FaultPlan, FleetConfig, FleetEvent,
+};
 use bfio_serve::metrics::prometheus::{lint, render_report, PromWriter};
+use bfio_serve::obs::series::{
+    ReplicaPoint, SeriesRing, SeriesTotals, HEALTH_HEALTHY,
+};
 use bfio_serve::obs::sketch::{seconds_buckets, token_buckets, DEFAULT_ALPHA};
 use bfio_serve::obs::QuantileSketch;
 use bfio_serve::sim::Simulator;
+use bfio_serve::util::json::Json;
 use bfio_serve::util::rng::{Rng, Zipf};
 use bfio_serve::util::stats;
 use bfio_serve::workload::adversarial::overloaded_trace;
@@ -140,4 +150,207 @@ fn rendered_report_exposition_passes_lint() {
         "bfio_ttft_seconds_count{{policy=\"bfio:8\"}} {}",
         res.report.obs.ttft.count()
     )));
+}
+
+#[test]
+fn attribution_conserves_fleet_waste_under_churn_and_faults() {
+    // The hardest case the ledger must survive: an overloaded trace on
+    // a fleet that crashes, recovers, scales out, and drains mid-run.
+    // Every barrier step charges its Theorem-4 `idle + correction`
+    // delta to exactly one gating worker, so the attributed waste must
+    // telescope back to the recorders' accumulators to ≤ 1e-9.
+    let sampler = LongBenchLike::paper();
+    let mut rng = Rng::new(31);
+    let trace = overloaded_trace(&sampler, 6, 2, 120, 3.0, &mut rng);
+    let cfg = FleetConfig {
+        seed: 31,
+        ..FleetConfig::uniform(3, 2, 2, "bfio:8")
+    };
+    let events = [
+        FleetEvent::Add { round: 25, speed: 0.8 },
+        FleetEvent::Drain { round: 60, replica: 2 },
+    ];
+    let plan = FaultPlan::parse("crash@20:r1,recover@50:r1").unwrap();
+    let res = run_fleet_faulted(
+        &cfg,
+        "bfio2",
+        &trace,
+        &events,
+        None,
+        Some(&plan),
+    )
+    .unwrap();
+    assert!(res.completed > 0, "run must make progress");
+    assert_eq!(res.crashes, 1, "the planned crash must fire");
+    assert_eq!(res.recoveries, 1, "the planned recovery must fire");
+
+    let mut fleet_waste = 0.0f64;
+    let mut fleet_attr = 0.0f64;
+    for r in &res.per_replica {
+        let waste = r.report.energy_idle_j + r.report.energy_correction_j;
+        let tol = 1e-9 * 1.0f64.max(waste.abs());
+        assert!(
+            (r.attributed_waste_j - waste).abs() <= tol,
+            "replica {}: attributed {:.17e} vs accumulator {:.17e}",
+            r.id,
+            r.attributed_waste_j,
+            waste
+        );
+        // Every executed barrier step names exactly one gating worker.
+        assert_eq!(
+            r.gate_counts.iter().sum::<u64>(),
+            r.executed,
+            "replica {}: gates must count barrier steps",
+            r.id
+        );
+        fleet_waste += waste;
+        fleet_attr += r.attributed_waste_j;
+    }
+    assert!(
+        fleet_attr > 0.0,
+        "an overloaded run with churn must show nonzero waste"
+    );
+    let tol = 1e-9 * 1.0f64.max(fleet_waste.abs());
+    assert!(
+        (res.attributed_waste_j - fleet_attr).abs() <= tol,
+        "fleet total {:.17e} vs summed replicas {:.17e}",
+        res.attributed_waste_j,
+        fleet_attr
+    );
+    assert!(
+        (res.attributed_waste_j - fleet_waste).abs() <= tol,
+        "fleet conservation: attributed {:.17e} vs Theorem-4 {:.17e}",
+        res.attributed_waste_j,
+        fleet_waste
+    );
+}
+
+#[test]
+fn exact_router_has_zero_regret_on_homogeneous_healthy_fleet() {
+    // `bfio2` scores every replica with the exact cost model it routes
+    // by, so on a homogeneous healthy fleet the audit's
+    // `chosen − best` must be identically zero — any positive regret
+    // here is a routing bug, not noise.
+    let sampler = LongBenchLike::paper();
+    let mut rng = Rng::new(47);
+    let trace = overloaded_trace(&sampler, 8, 4, 100, 2.0, &mut rng);
+    let cfg = FleetConfig {
+        seed: 47,
+        ..FleetConfig::uniform(4, 2, 4, "bfio:8")
+    };
+    let res = run_fleet(&cfg, "bfio2", &trace, &[]).unwrap();
+    assert!(res.completed > 0, "run must make progress");
+    assert!(res.regret.decisions > 0, "decisions must be counted");
+    assert_eq!(
+        res.regret.audited, res.regret.decisions,
+        "a scoring router must expose a cost for every decision"
+    );
+    assert_eq!(
+        res.regret.cumulative(),
+        0.0,
+        "exact router regret must be identically zero"
+    );
+    assert_eq!(res.regret.max_regret, 0.0, "no single decision regrets");
+
+    // Contrast: a blind router takes decisions it cannot audit — the
+    // counters must say so instead of inventing zero-regret claims.
+    let blind = run_fleet(&cfg, "wrr", &trace, &[]).unwrap();
+    assert!(blind.regret.decisions > 0);
+    assert_eq!(
+        blind.regret.audited, 0,
+        "wrr exposes no cost model, so nothing is audited"
+    );
+}
+
+#[test]
+fn series_ring_bounds_eviction_and_merge() {
+    // Bounds + oldest-first eviction: 20 windows into an 8-slot ring.
+    let mut ring = SeriesRing::new(4, 8);
+    assert!(ring.is_empty());
+    assert!(!ring.due(3) && ring.due(4), "window-4 ring closes at 4k");
+    let mut cum = SeriesTotals::default();
+    for w in 1..=20u64 {
+        cum.arrivals += 10;
+        cum.completions += 9;
+        cum.energy_j += 5.0;
+        cum.useful_j += 3.0;
+        cum.idle_j += 1.5;
+        cum.correction_j += 0.5;
+        let reps = ring.record(w * 4, w as f64, cum, 2.0, 0.1, 0.9);
+        reps.push(ReplicaPoint {
+            id: 0,
+            health: HEALTH_HEALTHY,
+            penalty: 1.0,
+            gate_share: 1.0,
+            load: 0.5,
+        });
+        assert!(ring.len() <= ring.capacity(), "ring must stay bounded");
+    }
+    assert_eq!(ring.len(), 8, "full ring holds exactly `cap` points");
+    let rounds: Vec<u64> = ring.points().map(|p| p.round).collect();
+    assert_eq!(
+        rounds,
+        (13..=20).map(|w| w * 4).collect::<Vec<_>>(),
+        "eviction is oldest-first"
+    );
+    for p in ring.points() {
+        // The ring stores per-window deltas, never cumulative totals.
+        assert_eq!(p.arrivals, 10);
+        assert_eq!(p.completions, 9);
+        assert!((p.energy_j - 5.0).abs() < 1e-12);
+        assert!((p.idle_j - 1.5).abs() < 1e-12);
+        assert_eq!(p.replicas.len(), 1);
+    }
+
+    // The gateway's publish mirror: exact copy, version-gated.
+    let mut mirror = SeriesRing::new(4, 8);
+    mirror.copy_from(&ring);
+    assert_eq!(mirror.version(), ring.version());
+    assert_eq!(mirror.len(), ring.len());
+    for (a, b) in mirror.points().zip(ring.points()) {
+        assert_eq!(a, b, "mirror must be field-exact");
+    }
+
+    // Shard merge over aligned windows: additive fields add exactly,
+    // the straggler gap maxes, goodput is completion-weighted.
+    let mut a = SeriesRing::new(4, 16);
+    let mut b = SeriesRing::new(4, 16);
+    let mut ca = SeriesTotals::default();
+    let mut cb = SeriesTotals::default();
+    for w in 1..=6u64 {
+        ca.arrivals += 4;
+        ca.completions += 3;
+        ca.energy_j += 2.0;
+        cb.arrivals += 6;
+        cb.completions += 5;
+        cb.energy_j += 3.0;
+        a.record(w * 4, w as f64, ca, 1.0, 0.05, 0.8);
+        b.record(w * 4, w as f64, cb, 2.0, 0.20, 1.0);
+    }
+    a.merge_aligned(&b);
+    assert_eq!(a.len(), 6, "aligned rounds merge in place, not append");
+    for p in a.points() {
+        assert_eq!(p.arrivals, 10);
+        assert_eq!(p.completions, 8);
+        assert!((p.energy_j - 5.0).abs() < 1e-12);
+        assert!((p.imbalance - 3.0).abs() < 1e-12, "Eq. 2 terms add");
+        assert!((p.straggler_gap_s - 0.20).abs() < 1e-12, "gap maxes");
+        let want = (0.8 * 3.0 + 1.0 * 5.0) / 8.0;
+        assert!(
+            (p.goodput - want).abs() < 1e-12,
+            "goodput is completion-weighted: {} vs {want}",
+            p.goodput
+        );
+    }
+
+    // The `/v0/series` document honours `last` and parses cleanly.
+    let doc = ring.to_json(3);
+    let parsed = Json::parse(&doc).expect("series JSON must parse");
+    assert_eq!(parsed.get("len").and_then(Json::as_f64), Some(8.0));
+    let pts = parsed
+        .get("points")
+        .and_then(Json::as_arr)
+        .expect("points array");
+    assert_eq!(pts.len(), 3, "`last` bounds the document");
+    assert_eq!(pts[2].get("round").and_then(Json::as_f64), Some(80.0));
 }
