@@ -1,0 +1,221 @@
+//! Counterfactual replay sweep: one recorded journal, re-run under
+//! alternative tier-1 routers, emitted as `BENCH_replay.json`.  The
+//! driver behind `bfio replay <journal> --routers a,b,...` and the CI
+//! replay gate.
+//!
+//! The pinned replay (recorded decisions forced) is the baseline; each
+//! listed router is then run as a counterfactual over the *same*
+//! journaled arrivals, faults, and lifecycle actions.  The headline is
+//! the **trajectory regret**: pinned energy/token minus the best
+//! counterfactual's energy/token — how many joules per token the
+//! recorded routing trajectory left on the table against hindsight
+//! (0 when the recorded router was already the best of the panel).
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::obs::journal::Journal;
+use crate::obs::replay::{replay_journal, ReplayOptions};
+use crate::util::json::{arr, num, obj, s, Json};
+
+/// One replayed trajectory: the pinned baseline or one counterfactual
+/// router over the same journaled event stream.
+#[derive(Clone, Debug)]
+pub struct ReplayBenchRow {
+    /// Router label as reported by the replayed run.
+    pub router: String,
+    /// `true` for the pinned baseline row.
+    pub pinned: bool,
+    pub submitted: u64,
+    pub completed: u64,
+    pub shed: u64,
+    pub tpot_s: f64,
+    pub slo_goodput: f64,
+    pub energy_per_token_j: f64,
+    pub attributed_waste_j: f64,
+    /// Wall-clock milliseconds the replay took.
+    pub run_ms: f64,
+}
+
+fn row_json(r: &ReplayBenchRow) -> Json {
+    obj(vec![
+        ("router", s(&r.router)),
+        ("pinned", Json::Bool(r.pinned)),
+        ("submitted", num(r.submitted as f64)),
+        ("completed", num(r.completed as f64)),
+        ("shed", num(r.shed as f64)),
+        ("tpot_s", num(r.tpot_s)),
+        ("slo_goodput", num(r.slo_goodput)),
+        ("energy_per_token_j", num(r.energy_per_token_j)),
+        ("attributed_waste_j", num(r.attributed_waste_j)),
+        ("run_ms", num(r.run_ms)),
+    ])
+}
+
+fn row_of(journal: &Journal, opts: &ReplayOptions) -> Result<ReplayBenchRow> {
+    let t0 = std::time::Instant::now();
+    let outcome = replay_journal(journal, opts)?;
+    let run_ms = t0.elapsed().as_secs_f64() * 1e3;
+    let sum = outcome.summary();
+    Ok(ReplayBenchRow {
+        router: sum.router.clone(),
+        pinned: outcome.pinned,
+        submitted: sum.submitted,
+        completed: sum.completed,
+        shed: sum.shed,
+        tpot_s: sum.tpot_s,
+        slo_goodput: sum.slo_goodput,
+        energy_per_token_j: sum.energy_per_token_j(),
+        attributed_waste_j: sum.attributed_waste_j,
+        run_ms,
+    })
+}
+
+/// Run the pinned baseline plus one counterfactual per router over the
+/// journal.  The pinned row is always first in the returned vector.
+pub fn run_replay_rows(
+    journal: &Journal,
+    routers: &[String],
+) -> Result<Vec<ReplayBenchRow>> {
+    let mut rows = vec![row_of(journal, &ReplayOptions::default())?];
+    for router in routers {
+        let opts = ReplayOptions {
+            router: Some(router.clone()),
+            ..ReplayOptions::default()
+        };
+        rows.push(row_of(journal, &opts)?);
+    }
+    Ok(rows)
+}
+
+/// The `BENCH_replay.json` document: pinned baseline, counterfactual
+/// rows, and the trajectory-regret headline.
+pub fn bench_json(journal_path: &str, total_ms: f64, rows: &[ReplayBenchRow]) -> Json {
+    let pinned = &rows[0];
+    let best = rows[1..]
+        .iter()
+        .min_by(|a, b| a.energy_per_token_j.total_cmp(&b.energy_per_token_j));
+    // Regret floors at 0: the recorded trajectory can't regret beating
+    // the hindsight panel.
+    let (regret, best_router) = match best {
+        Some(b) => (
+            (pinned.energy_per_token_j - b.energy_per_token_j).max(0.0),
+            s(&b.router),
+        ),
+        None => (0.0, Json::Null),
+    };
+    obj(vec![
+        ("bench", s("replay")),
+        ("journal", s(journal_path)),
+        ("total_ms", num(total_ms)),
+        ("pinned", row_json(pinned)),
+        ("rows", arr(rows[1..].iter().map(row_json))),
+        ("trajectory_regret_per_token_j", num(regret)),
+        ("best_router", best_router),
+    ])
+}
+
+fn print_row(r: &ReplayBenchRow) {
+    println!(
+        "{:<24} {:>7} {:>8} {:>6} {:>9.4} {:>9.4} {:>8.3} {:>8.1}",
+        r.router,
+        if r.pinned { "pinned" } else { "cf" },
+        r.completed,
+        r.shed,
+        r.tpot_s,
+        r.energy_per_token_j,
+        r.slo_goodput,
+        r.run_ms,
+    );
+}
+
+/// The `bfio replay --routers` driver: load the journal, run the
+/// pinned + counterfactual panel, print the table, and write `out`
+/// (default `BENCH_replay.json`).
+pub fn replay_sweep(journal_path: &Path, routers: &[String], out: &Path) -> Result<()> {
+    let journal = Journal::load(journal_path)?;
+    println!(
+        "replay sweep: {} ({} events, recorded router {}), counterfactuals {:?}",
+        journal_path.display(),
+        journal.ring.len(),
+        journal.config.router,
+        routers,
+    );
+    let t0 = std::time::Instant::now();
+    let rows = run_replay_rows(&journal, routers)?;
+    println!(
+        "{:<24} {:>7} {:>8} {:>6} {:>9} {:>9} {:>8} {:>8}",
+        "router", "mode", "done", "shed", "tpot(s)", "J/tok", "goodput", "ms"
+    );
+    for r in &rows {
+        print_row(r);
+    }
+    let total_ms = t0.elapsed().as_secs_f64() * 1e3;
+    let json = bench_json(&journal_path.display().to_string(), total_ms, &rows);
+    if let Some(regret) = json.get("trajectory_regret_per_token_j").and_then(Json::as_f64) {
+        let best = json
+            .get("best_router")
+            .and_then(Json::as_str)
+            .unwrap_or("-");
+        println!("trajectory regret: {regret:.6} J/token (best counterfactual: {best})");
+    }
+    std::fs::write(out, json.to_string_pretty() + "\n")?;
+    println!("wrote {}", out.display());
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    use crate::fleet::run_fleet_recorded;
+    use crate::experiments::fleet::FleetScale;
+
+    fn recorded_journal() -> Journal {
+        let scale = FleetScale::new(3, 2, 4, 80);
+        let trace = scale.trace();
+        let cfg = scale.fault_config();
+        let (_res, journal) =
+            run_fleet_recorded(&cfg, "low", &trace, &[], None, None, 1 << 16).unwrap();
+        let j = journal.lock().unwrap().clone();
+        j
+    }
+
+    #[test]
+    fn pinned_row_matches_recorded_result() {
+        let journal = recorded_journal();
+        let rows = run_replay_rows(&journal, &["wrr".to_string()]).unwrap();
+        assert_eq!(rows.len(), 2);
+        assert!(rows[0].pinned && !rows[1].pinned);
+        let rec = journal.result.as_ref().unwrap();
+        assert_eq!(rows[0].completed, rec.completed);
+        assert!((rows[0].tpot_s - rec.tpot_s).abs() < 1e-9);
+        // the counterfactual conserved work over the same arrivals
+        assert_eq!(rows[1].submitted, rec.submitted);
+        assert_eq!(rows[1].completed + rows[1].shed, rows[1].submitted);
+    }
+
+    #[test]
+    fn sweep_writes_json_with_regret_headline() {
+        let journal = recorded_journal();
+        let jpath = std::env::temp_dir().join("bfio_replay_sweep_test.bin");
+        journal.save(&jpath).unwrap();
+        let out = std::env::temp_dir().join("bfio_replay_sweep_test.json");
+        let routers = vec!["low".to_string(), "wrr".to_string()];
+        replay_sweep(&jpath, &routers, &out).unwrap();
+        let text = std::fs::read_to_string(&out).unwrap();
+        let v = Json::parse(&text).unwrap();
+        assert_eq!(v.get("bench").unwrap().as_str().unwrap(), "replay");
+        assert_eq!(v.get("rows").unwrap().as_arr().unwrap().len(), 2);
+        let regret = v
+            .get("trajectory_regret_per_token_j")
+            .unwrap()
+            .as_f64()
+            .unwrap();
+        assert!(regret >= 0.0);
+        // identical-router counterfactual ties the pinned baseline, so
+        // the hindsight panel can never beat it by more than noise
+        assert!(regret < 1e-9, "regret {regret} against a panel containing the recorded router");
+    }
+}

@@ -10,6 +10,7 @@
 //! worker id `replica·G + worker`, with a `replica` field), `/metrics`
 //! adds per-replica series, and `stats` aggregates across the fleet.
 
+use std::path::PathBuf;
 use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
@@ -26,6 +27,7 @@ use crate::gateway::backend::{
 };
 use crate::gateway::sim::gen_tokens;
 use crate::metrics::imbalance;
+use crate::obs::journal::Journal;
 use crate::obs::trace::NO_INDEX;
 use crate::obs::{SeriesRing, SloConfig, SpanEvent, SpanKind, SpanLog, Tracer};
 use crate::sim::predictor::Predictor;
@@ -83,6 +85,17 @@ pub struct FleetBackendConfig {
     pub series_window: u64,
     /// Time-series ring capacity in points (`--series-cap`).
     pub series_cap: usize,
+    /// Enable the event-sourced run journal (`bfio gateway --journal`):
+    /// every arrival, routing decision, fault, health transition, and
+    /// lifecycle action lands in a bounded ring, served on
+    /// `GET /v0/journal` as JSONL for `bfio replay`.  Off by default.
+    pub journal: bool,
+    /// Journal ring capacity in events; oldest events are evicted when
+    /// full (an evicted journal refuses replay).
+    pub journal_buf: usize,
+    /// Also persist the journal here on shutdown (binary unless the
+    /// extension is `.jsonl`/`.json`).  Implies `journal`.
+    pub journal_path: Option<PathBuf>,
 }
 
 impl Default for FleetBackendConfig {
@@ -109,6 +122,9 @@ impl Default for FleetBackendConfig {
             faults: None,
             series_window: 8,
             series_cap: 256,
+            journal: false,
+            journal_buf: 65_536,
+            journal_path: None,
         }
     }
 }
@@ -178,6 +194,8 @@ pub struct FleetBackend {
     /// scheduler's publish (version-checked in-place copy), served on
     /// `GET /v0/series`.
     series: Arc<Mutex<SeriesRing>>,
+    /// Shared event journal when `--journal` is on (`GET /v0/journal`).
+    journal: Option<Arc<Mutex<Journal>>>,
 }
 
 impl FleetBackend {
@@ -194,6 +212,13 @@ impl FleetBackend {
         // ring for the arrival/route spans it records at submit time.
         let trace_log = if cfg.trace {
             Some(core.enable_tracing(cfg.trace_buf.max(1)))
+        } else {
+            None
+        };
+        // Opt-in event journal, enabled before any work flows so the
+        // captured config describes the initial fleet exactly.
+        let journal = if cfg.journal || cfg.journal_path.is_some() {
+            Some(core.enable_journal(&cfg.router, cfg.journal_buf.max(1)))
         } else {
             None
         };
@@ -262,6 +287,7 @@ impl FleetBackend {
             loads_scratch,
             tracer,
             trace_log: trace_log.clone(),
+            journal: journal.clone(),
         };
         let handle = std::thread::spawn(move || scheduler.run());
         Ok(FleetBackend {
@@ -271,6 +297,7 @@ impl FleetBackend {
             handle: Mutex::new(Some(handle)),
             trace_log,
             series,
+            journal,
         })
     }
 }
@@ -339,6 +366,12 @@ impl Backend for FleetBackend {
     fn series_json(&self, last: usize) -> Option<String> {
         self.series.lock().ok().map(|s| s.to_json(last))
     }
+
+    fn journal_jsonl(&self) -> Option<String> {
+        let j = self.journal.as_ref()?;
+        let j = j.lock().ok()?;
+        Some(j.to_jsonl())
+    }
 }
 
 impl Drop for FleetBackend {
@@ -373,6 +406,9 @@ struct Scheduler {
     /// unless `--trace`); drained into `trace_log` once per round.
     tracer: Tracer,
     trace_log: Option<Arc<Mutex<SpanLog>>>,
+    /// Shared handle to the core's journal (for the shutdown save; the
+    /// core itself records through its own reference).
+    journal: Option<Arc<Mutex<Journal>>>,
 }
 
 impl Scheduler {
@@ -380,7 +416,11 @@ impl Scheduler {
         let prefill = p.req.prompt_tokens.len().max(1) as f64;
         let round = self.core.round();
         let id = p.req.id;
+        // Journaled decode budget must match what the round-open closure
+        // answers with when the request is admitted.
+        let o = u64::from(p.req.max_tokens.max(1));
         let enabled = self.tracer.is_enabled();
+        self.core.journal_arrival(id, round, prefill, o);
         let chosen = self.core.submit(prefill, round, p);
         if enabled {
             // Arrival carries the prefill cost; the route span records
@@ -675,6 +715,15 @@ impl Scheduler {
 
             if !self.cfg.step_delay.is_zero() && !self.core.is_idle() {
                 std::thread::sleep(self.cfg.step_delay);
+            }
+        }
+        // Persist the journal on shutdown (best-effort; the gateway is
+        // exiting either way).
+        if let (Some(j), Some(path)) = (&self.journal, &self.cfg.journal_path) {
+            if let Ok(j) = j.lock() {
+                if let Err(e) = j.save(path) {
+                    eprintln!("journal: {e:#}");
+                }
             }
         }
         // Dropping the core drops queued tickets and response senders;

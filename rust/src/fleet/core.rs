@@ -47,6 +47,7 @@ use anyhow::{anyhow, ensure, Result};
 use crate::config::PowerConfig;
 use crate::fault::{FaultCounters, FaultEvent, FaultKind, HealthConfig, ReplicaHealth};
 use crate::metrics::{imbalance, CompletionRecord, Recorder};
+use crate::obs::journal::{Journal, LC_ADD, LC_DRAIN, LC_REACTIVATE, LC_REMOVE};
 use crate::obs::series::{self, SeriesTotals};
 use crate::obs::{
     GateLedger, RegretAudit, RequestObs, RoundProfiler, SeriesRing, SloConfig,
@@ -376,6 +377,11 @@ pub struct FleetCore<T, P> {
     /// Scratch for the fleet-wide Eq. 2 imbalance at series boundaries
     /// (concatenated live per-worker loads, reused across windows).
     series_loads: Vec<f64>,
+    /// Event-sourced run journal, opt-in via
+    /// [`FleetCore::enable_journal`]; `None` (the default) keeps every
+    /// capture site to a single `Option` check, so fault-free runs with
+    /// journaling off are bit-identical to a core without it.
+    journal: Option<Arc<Mutex<Journal>>>,
     // reused buffers
     /// Cached per-replica router views, indexed by replica id (removed
     /// replicas keep an entry with `accepting == false`).  Kept fresh
@@ -420,6 +426,7 @@ impl<T, P> FleetCore<T, P> {
             regret: RegretAudit::new(),
             series: SeriesRing::new(cfg.series_window, cfg.series_cap),
             series_loads: Vec::new(),
+            journal: None,
             cfg,
             slots: Vec::new(),
             router,
@@ -534,6 +541,15 @@ impl<T, P> FleetCore<T, P> {
             0.0,
             speed,
         );
+        // Journal the add before the queue re-offer so the lifecycle
+        // event precedes the route decisions it triggers.  Initial
+        // replicas (constructed before `enable_journal`) are carried by
+        // the journaled config, not events.
+        if let Some(j) = &self.journal {
+            j.lock()
+                .unwrap()
+                .record_lifecycle(self.round, id, LC_ADD, g, b, speed);
+        }
         self.views_dirty = true;
         self.reoffer_queued();
         Ok(id)
@@ -545,6 +561,13 @@ impl<T, P> FleetCore<T, P> {
     /// Returns false for accepting/removed replicas.  Queued work is
     /// re-offered fleet-wide, as with a cold add.
     pub fn reactivate_replica(&mut self, id: usize) -> bool {
+        // Journal the *call* (replay re-issues it; a no-op call is a
+        // no-op again against identical state).
+        if let Some(j) = &self.journal {
+            j.lock()
+                .unwrap()
+                .record_lifecycle(self.round, id, LC_REACTIVATE, 0, 0, 0.0);
+        }
         let Some(slot) = self.slots.get_mut(id) else { return false };
         match slot.state {
             ReplicaState::Draining { .. } => {
@@ -607,6 +630,14 @@ impl<T, P> FleetCore<T, P> {
     /// finish in place (non-migratable KV).  With `remove`, the replica
     /// is retired once it goes idle.
     pub fn drain_replica(&mut self, id: usize, remove: bool) {
+        // Journal the call before the queue re-route it triggers (see
+        // `reactivate_replica` on why calls, not effects, are recorded).
+        if let Some(j) = &self.journal {
+            let op = if remove { LC_REMOVE } else { LC_DRAIN };
+            j.lock()
+                .unwrap()
+                .record_lifecycle(self.round, id, op, 0, 0, 0.0);
+        }
         let Some(slot) = self.slots.get_mut(id) else { return };
         match slot.state {
             ReplicaState::Removed => return,
@@ -765,6 +796,10 @@ impl<T, P> FleetCore<T, P> {
             // replica.
             _ => least_outstanding_of(&self.views),
         };
+        // Journal the post-fallback decision (`None` = overflow): pinned
+        // replay forces this target, so the fallback itself never has to
+        // be re-derived from a possibly-divergent router state.
+        self.journal_route(target, prefill);
         let Some(id) = target else {
             self.overflow.push((prefill, arrival_step, waited, ticket));
             return None;
@@ -773,8 +808,8 @@ impl<T, P> FleetCore<T, P> {
         // router's own marginal cost over every accepting candidate and
         // record `chosen − best`.  `decision_cost` is `&self` and pure,
         // so neither the pick nor the route rng stream is perturbed;
-        // routers without a cost model (WRR, power-of-d) only bump the
-        // decision counter.
+        // candidates the router never scored (e.g. outside power-of-d's
+        // sampled subset) return `None` and are excluded from "best".
         match self.router.decision_cost(prefill, &self.views[id]) {
             Some(chosen) => {
                 let mut best = chosen;
@@ -1058,6 +1093,52 @@ impl<T, P> FleetCore<T, P> {
         log
     }
 
+    /// Turn on event journaling: every externally-sourced event the
+    /// core consumes from here on — arrivals (driver-fed via
+    /// [`FleetCore::journal_arrival`]), routing decisions with the
+    /// router's per-replica decision costs, faults, health transitions,
+    /// and lifecycle actions — lands in a bounded ring of `cap` events.
+    /// Call immediately after construction, before any work or
+    /// lifecycle flows: replay reconstructs the initial fleet from the
+    /// captured config, so events preceding the journal are lost
+    /// trajectory.  `router` is the parseable router *spec* (what
+    /// [`super::FleetConfig::router`] accepts), not the display label.
+    pub fn enable_journal(&mut self, router: &str, cap: usize) -> Arc<Mutex<Journal>> {
+        let j = Journal::shared(router, self.cfg.clone(), cap);
+        self.journal = Some(Arc::clone(&j));
+        j
+    }
+
+    /// Journal one external arrival.  Drivers call this immediately
+    /// before the matching [`FleetCore::submit`] so the journal's
+    /// arrival/route interleaving matches the live call order (`o` is
+    /// the decode budget the driver will answer with when the request
+    /// is admitted).  No-op without [`FleetCore::enable_journal`].
+    pub fn journal_arrival(&self, id: u64, arrival_step: u64, prefill: f64, o: u64) {
+        if let Some(j) = &self.journal {
+            j.lock()
+                .unwrap()
+                .record_arrival(self.round, id, arrival_step, prefill, o);
+        }
+    }
+
+    /// Journal one routing decision: the post-fallback target (`None` ⇒
+    /// overflow) plus the router's decision cost for every accepting
+    /// candidate (what counterfactual cost diffs replay against).
+    fn journal_route(&self, target: Option<usize>, prefill: f64) {
+        let Some(j) = &self.journal else { return };
+        let mut j = j.lock().unwrap();
+        let costs = j.record_route(self.round, prefill, target);
+        for v in &self.views {
+            if !v.accepting {
+                continue;
+            }
+            if let Some(c) = self.router.decision_cost(prefill, v) {
+                costs.push((v.id as u32, c));
+            }
+        }
+    }
+
     /// The always-on per-round execution profile.
     pub fn profiler(&self) -> &RoundProfiler {
         &self.profiler
@@ -1121,6 +1202,12 @@ impl<T, P> FleetCore<T, P> {
 
     /// Apply one scheduled fault event (driver dispatch helper).
     pub fn apply_fault(&mut self, ev: &FaultEvent) {
+        if let Some(j) = &self.journal {
+            // Journaled at the round the fault is *applied* (not its
+            // scheduled round): replay re-applies it at this exact
+            // round boundary.
+            j.lock().unwrap().record_fault(self.round, ev.replica, &ev.kind);
+        }
         match ev.kind {
             FaultKind::Crash => self.inject_crash(ev.replica),
             FaultKind::Stall(f) => self.inject_stall(ev.replica, f),
@@ -1212,6 +1299,13 @@ impl<T, P> FleetCore<T, P> {
             slot.penalty = self.cfg.health.probe_penalty;
             slot.ewma_ratio = 1.0;
             self.views_dirty = true;
+            journal_health(
+                &self.journal,
+                self.round,
+                id,
+                ReplicaHealth::Down,
+                ReplicaHealth::Recovering,
+            );
         }
     }
 
@@ -1292,12 +1386,20 @@ impl<T, P> FleetCore<T, P> {
                 if slot.had_work {
                     slot.missed_rounds += 1;
                     if slot.missed_rounds >= hc.miss_limit {
+                        let from = slot.health;
                         slot.health = ReplicaHealth::Down;
                         slot.penalty = 1.0;
                         slot.missed_rounds = 0;
                         slot.good_rounds = 0;
                         newly_down.push(slot.id);
                         self.views_dirty = true;
+                        journal_health(
+                            &self.journal,
+                            self.round,
+                            slot.id,
+                            from,
+                            ReplicaHealth::Down,
+                        );
                     }
                 }
                 continue;
@@ -1313,11 +1415,25 @@ impl<T, P> FleetCore<T, P> {
                     slot.health = ReplicaHealth::Suspect;
                     slot.penalty = hc.suspect_penalty;
                     self.views_dirty = true;
+                    journal_health(
+                        &self.journal,
+                        self.round,
+                        slot.id,
+                        ReplicaHealth::Healthy,
+                        ReplicaHealth::Suspect,
+                    );
                 }
                 ReplicaHealth::Suspect if !slow => {
                     slot.health = ReplicaHealth::Healthy;
                     slot.penalty = 1.0;
                     self.views_dirty = true;
+                    journal_health(
+                        &self.journal,
+                        self.round,
+                        slot.id,
+                        ReplicaHealth::Suspect,
+                        ReplicaHealth::Healthy,
+                    );
                 }
                 ReplicaHealth::Recovering => {
                     if slow {
@@ -1325,12 +1441,26 @@ impl<T, P> FleetCore<T, P> {
                         slot.health = ReplicaHealth::Suspect;
                         slot.penalty = hc.suspect_penalty;
                         slot.good_rounds = 0;
+                        journal_health(
+                            &self.journal,
+                            self.round,
+                            slot.id,
+                            ReplicaHealth::Recovering,
+                            ReplicaHealth::Suspect,
+                        );
                     } else {
                         slot.good_rounds += 1;
                         if slot.good_rounds >= hc.probe_rounds {
                             slot.health = ReplicaHealth::Healthy;
                             slot.penalty = 1.0;
                             slot.good_rounds = 0;
+                            journal_health(
+                                &self.journal,
+                                self.round,
+                                slot.id,
+                                ReplicaHealth::Recovering,
+                                ReplicaHealth::Healthy,
+                            );
                         } else {
                             continue; // still probing, no view change
                         }
@@ -1647,6 +1777,23 @@ impl<T: Send, P: Send> FleetCore<T, P> {
             engage,
         );
         executed.load(Ordering::Relaxed)
+    }
+}
+
+/// Journal one monitor health transition (no-op without journaling).
+/// Free function so capture sites inside `&mut self.slots` iteration
+/// can record through the disjoint `journal` field borrow.
+fn journal_health(
+    journal: &Option<Arc<Mutex<Journal>>>,
+    round: u64,
+    replica: usize,
+    from: ReplicaHealth,
+    to: ReplicaHealth,
+) {
+    if let Some(j) = journal {
+        j.lock()
+            .unwrap()
+            .record_health(round, replica, health_code(from), health_code(to));
     }
 }
 

@@ -39,6 +39,8 @@
 //! * [`run_fleet_faulted`] — the same driver with a deterministic
 //!   [`crate::fault::FaultPlan`] injected at round boundaries (crash /
 //!   fail-slow / recover), lost actives requeued exactly once;
+//! * [`run_fleet_recorded`] — the same driver with an event journal
+//!   attached ([`crate::obs::journal`]), feeding `bfio replay`;
 //! * [`backend::FleetBackend`] — online [`crate::gateway`] backend, so
 //!   the HTTP gateway serves over a fleet with per-replica
 //!   `/v0/workers` entries, Prometheus series, and the
@@ -59,12 +61,14 @@ pub use self::router::{router_by_name, FleetRouter, ReplicaView};
 pub use crate::fault::{FaultCounters, FaultPlan, HealthConfig, ReplicaHealth};
 
 use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
 
 use anyhow::{anyhow, Result};
 
 use crate::config::SimConfig;
 use crate::fault::FaultInjector;
 use crate::metrics::Report;
+use crate::obs::journal::{Journal, ResultSummary};
 use crate::obs::{RegretAudit, RequestObs, SloConfig};
 use crate::sim::predictor::Predictor;
 use crate::workload::{Drift, Request};
@@ -302,9 +306,53 @@ pub fn run_fleet_faulted(
     router_name: &str,
     trace: &[Request],
     events: &[FleetEvent],
-    mut hook: Option<&mut dyn RoundHook>,
+    hook: Option<&mut dyn RoundHook>,
     faults: Option<&FaultPlan>,
 ) -> Result<FleetResult> {
+    run_fleet_inner(cfg, router_name, trace, events, hook, faults, None)
+        .map(|(res, _)| res)
+}
+
+/// [`run_fleet_faulted`] with an event journal attached: every
+/// externally-sourced event the run consumes is recorded into a ring of
+/// `journal_cap` events, and the finished [`FleetResult`] is stamped
+/// into the journal as the [`ResultSummary`] that pinned replay
+/// (`bfio replay --check`) must reproduce.
+pub fn run_fleet_recorded(
+    cfg: &FleetConfig,
+    router_name: &str,
+    trace: &[Request],
+    events: &[FleetEvent],
+    hook: Option<&mut dyn RoundHook>,
+    faults: Option<&FaultPlan>,
+    journal_cap: usize,
+) -> Result<(FleetResult, Arc<Mutex<Journal>>)> {
+    let (res, journal) = run_fleet_inner(
+        cfg,
+        router_name,
+        trace,
+        events,
+        hook,
+        faults,
+        Some(journal_cap),
+    )?;
+    let journal = journal.expect("journal_cap was Some");
+    journal
+        .lock()
+        .unwrap()
+        .set_result(ResultSummary::from_result(&res));
+    Ok((res, journal))
+}
+
+fn run_fleet_inner(
+    cfg: &FleetConfig,
+    router_name: &str,
+    trace: &[Request],
+    events: &[FleetEvent],
+    mut hook: Option<&mut dyn RoundHook>,
+    faults: Option<&FaultPlan>,
+    journal_cap: Option<usize>,
+) -> Result<(FleetResult, Option<Arc<Mutex<Journal>>>)> {
     let router = cfg
         .router(router_name)
         .ok_or_else(|| anyhow!("unknown fleet router {router_name:?}"))?;
@@ -313,6 +361,9 @@ pub fn run_fleet_faulted(
         .ok_or_else(|| anyhow!("unknown policy {:?}", cfg.policy))?
         .name();
     let mut core: FleetCore<u32, ()> = FleetCore::new(cfg.clone(), router)?;
+    // Journaling starts before any work or lifecycle flows, so the
+    // journal's captured config describes the initial fleet exactly.
+    let journal = journal_cap.map(|cap| core.enable_journal(router_name, cap));
 
     // Materialize the fault schedule.  The random process needs a round
     // horizon: the configured cap, or the trace span plus a drain tail.
@@ -410,7 +461,9 @@ pub fn run_fleet_faulted(
         }
 
         while ptr < trace.len() && trace[ptr].arrival_step <= core.round() {
-            core.submit(trace[ptr].prefill, trace[ptr].arrival_step, ptr as u32);
+            let r = &trace[ptr];
+            core.journal_arrival(r.id, r.arrival_step, r.prefill, r.decode_len);
+            core.submit(r.prefill, r.arrival_step, ptr as u32);
             ptr += 1;
         }
 
@@ -494,10 +547,14 @@ pub fn run_fleet_faulted(
         res.shed,
         res.submitted
     );
-    Ok(res)
+    Ok((res, journal))
 }
 
-fn aggregate(
+/// Fold per-replica outcomes into one [`FleetResult`].  Shared by the
+/// live drivers above and [`crate::obs::replay`]'s finalize tail — the
+/// caller overwrites the regret / attributed-waste placeholders from
+/// the core before consuming it.
+pub(crate) fn aggregate(
     router: String,
     policy: String,
     rounds: u64,

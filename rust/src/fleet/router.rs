@@ -91,13 +91,16 @@ pub trait FleetRouter: Send {
 
     /// The router's own marginal cost of placing a prefill-`prefill`
     /// request on `v`, for the routing-regret audit
-    /// ([`crate::obs::RegretAudit`]): the audit replays this over every
-    /// accepting candidate after a pick and records
-    /// `chosen − best`.  `None` (the default) means the router has no
-    /// per-candidate cost model to audit — sampled (power-of-d) and
-    /// cost-blind (WRR) routers stay unaudited rather than being scored
-    /// against a model they never consulted.  Must be pure (`&self`, no
-    /// state mutation) and must match the cost the router's `route`
+    /// ([`crate::obs::RegretAudit`]) and the journal's per-candidate
+    /// cost columns ([`crate::obs::journal`]): the audit replays this
+    /// over every accepting candidate after a pick and records
+    /// `chosen − best`.  All five tier-1 routers expose a cost —
+    /// credit-based (WRR) and sampled (power-of-d) routers score only
+    /// what their `route` actually consulted (the smoothed credits /
+    /// the sampled subset), returning `None` for candidates outside
+    /// that set, so exact routers show regret ≡ 0 rather than being
+    /// judged against a model they never read.  Must be pure (`&self`,
+    /// no state mutation) and must match the key the router's `route`
     /// minimizes exactly, or exact routers would show phantom regret.
     fn decision_cost(&self, _prefill: f64, _v: &ReplicaView) -> Option<f64> {
         None
@@ -153,6 +156,11 @@ pub struct WeightedRoundRobin {
     /// Current (smoothed) weight per replica id; grown on demand so
     /// lifecycle-added replicas join the rotation.
     current: Vec<f64>,
+    /// Negated pre-decrement credit per replica id from the last
+    /// `route` call (`route` picks the argmax credit, so the argmin of
+    /// these is the pick): the cost surface `decision_cost` exposes to
+    /// the regret audit.  Non-participants hold the +∞ sentinel.
+    last_scores: Vec<f64>,
 }
 
 impl WeightedRoundRobin {
@@ -176,6 +184,8 @@ impl FleetRouter for WeightedRoundRobin {
         if self.current.len() <= max_id {
             self.current.resize(max_id + 1, 0.0);
         }
+        self.last_scores.clear();
+        self.last_scores.resize(max_id + 1, f64::INFINITY);
         let mut total = 0.0;
         let mut best: Option<usize> = None;
         for v in replicas.iter().filter(|v| v.accepting) {
@@ -185,6 +195,9 @@ impl FleetRouter for WeightedRoundRobin {
             let w = v.speed / v.penalty.max(1e-12);
             total += w;
             self.current[v.id] += w;
+            // Snapshot the pre-decrement credit, negated: argmax credit
+            // ≡ argmin score, so the audit sees an exact cost surface.
+            self.last_scores[v.id] = -self.current[v.id];
             let better = match best {
                 None => true,
                 Some(b) => self.current[v.id] > self.current[b],
@@ -196,6 +209,14 @@ impl FleetRouter for WeightedRoundRobin {
         let picked = best?;
         self.current[picked] -= total;
         Some(picked)
+    }
+
+    /// The negated smoothed credit `route` maximized on its last call —
+    /// an exact cost surface (the pick is the argmin), so WRR's regret
+    /// audits to ≡ 0.  `None` for replicas outside that decision (no
+    /// phantom regret for ids the rotation never weighed).
+    fn decision_cost(&self, _prefill: f64, v: &ReplicaView) -> Option<f64> {
+        self.last_scores.get(v.id).copied().filter(|c| c.is_finite())
     }
 }
 
@@ -241,12 +262,16 @@ impl FleetRouter for LeastOutstanding {
 #[derive(Clone, Debug)]
 pub struct PowerOfDReplicas {
     pub d: usize,
+    /// Membership mask of the last `route` call's sample, per replica
+    /// id: the only candidates the router consulted, hence the only
+    /// ones `decision_cost` will score.
+    last_sample: Vec<bool>,
 }
 
 impl PowerOfDReplicas {
     pub fn new(d: usize) -> PowerOfDReplicas {
         assert!(d >= 1);
-        PowerOfDReplicas { d }
+        PowerOfDReplicas { d, last_sample: Vec::new() }
     }
 }
 
@@ -266,7 +291,13 @@ impl FleetRouter for PowerOfDReplicas {
         if accepting.is_empty() {
             return None;
         }
+        let max_id = replicas.iter().map(|v| v.id).max().unwrap_or(0);
+        self.last_sample.clear();
+        self.last_sample.resize(max_id + 1, false);
         let picks = rng.sample_distinct(accepting.len(), self.d.min(accepting.len()));
+        for &i in &picks {
+            self.last_sample[accepting[i].id] = true;
+        }
         picks
             .iter()
             .map(|&i| accepting[i])
@@ -274,6 +305,18 @@ impl FleetRouter for PowerOfDReplicas {
                 a.penalized_outstanding().total_cmp(&b.penalized_outstanding())
             })
             .map(|v| v.id)
+    }
+
+    /// The key `route` minimized over its sample.  `None` outside the
+    /// sample: candidates the router never drew are not part of its
+    /// decision, so the audit's "best" is the best *of the sample* and
+    /// an exact sampled pick audits to regret ≡ 0.
+    fn decision_cost(&self, _prefill: f64, v: &ReplicaView) -> Option<f64> {
+        if self.last_sample.get(v.id).copied().unwrap_or(false) {
+            Some(v.penalized_outstanding())
+        } else {
+            None
+        }
     }
 }
 
@@ -621,12 +664,14 @@ mod tests {
             Box::new(LeastOutstanding),
             Box::new(TwoLevelBfIo::new(0.1, 1.0)),
             Box::new(PredictiveHorizon::new(0.1, 1.0)),
+            Box::new(WeightedRoundRobin::new()),
+            Box::new(PowerOfDReplicas::new(2)),
         ];
         for r in routers.iter_mut() {
             let picked = r.route(25.0, &views, &mut rng).unwrap();
             let chosen = r
                 .decision_cost(25.0, &views[picked])
-                .expect("cost-based routers expose a decision cost");
+                .expect("tier-1 routers expose a decision cost for their pick");
             let best = views
                 .iter()
                 .filter(|v| v.accepting)
@@ -638,7 +683,7 @@ mod tests {
                 r.name()
             );
         }
-        // Cost-blind routers stay unaudited.
+        // Before any route call there is no decision to score.
         assert!(WeightedRoundRobin::new().decision_cost(1.0, &views[0]).is_none());
         assert!(PowerOfDReplicas::new(2).decision_cost(1.0, &views[0]).is_none());
     }

@@ -242,4 +242,12 @@ pub trait Backend: Send + Sync {
         let _ = last;
         None
     }
+
+    /// The event-sourced run journal rendered as JSONL (the
+    /// `GET /v0/journal` document, replayable by `bfio replay`).
+    /// `None` (the default) means journaling is unsupported or not
+    /// enabled — the gateway answers `404`.
+    fn journal_jsonl(&self) -> Option<String> {
+        None
+    }
 }

@@ -14,6 +14,7 @@
 //! | `/v0/trace`            | GET    | lifecycle spans (`?last=N&id=R&format=`) |
 //! | `/v0/series`           | GET    | windowed time-series ring (`?last=N`)    |
 //! | `/v0/dash`             | GET    | self-contained live HTML dashboard       |
+//! | `/v0/journal`          | GET    | event-sourced run journal (JSONL)        |
 //! | `/metrics`             | GET    | Prometheus text exposition               |
 //! | `/healthz`             | GET    | liveness                                 |
 //!
@@ -233,7 +234,7 @@ fn route(req: &HttpRequest, shared: &Shared) -> Result<Routed> {
         ("GET", "/") => Ok((
             200,
             "text/plain",
-            b"bfio gateway\nPOST /v1/completions  GET /v0/workers  GET|POST /v0/admin/replicas  GET /v0/trace  GET /v0/series  GET /v0/dash  GET /metrics  GET /healthz\n"
+            b"bfio gateway\nPOST /v1/completions  GET /v0/workers  GET|POST /v0/admin/replicas  GET /v0/trace  GET /v0/series  GET /v0/dash  GET /v0/journal  GET /metrics  GET /healthz\n"
                 .to_vec(),
         )),
         ("GET", "/v0/workers") => {
@@ -247,6 +248,7 @@ fn route(req: &HttpRequest, shared: &Shared) -> Result<Routed> {
         ("POST", "/v0/admin/replicas") => admin_replicas_post(req, shared),
         ("GET", "/v0/trace") => trace_get(req, shared),
         ("GET", "/v0/series") => series_get(req, shared),
+        ("GET", "/v0/journal") => journal_get(shared),
         ("GET", "/v0/dash") => Ok((
             200,
             "text/html; charset=utf-8",
@@ -568,7 +570,8 @@ fn trace_get(req: &HttpRequest, shared: &Shared) -> Result<Routed> {
         Some("chrome") => Ok((
             200,
             "application/json",
-            to_chrome(&events).into_bytes(),
+            to_chrome(&events, shared.backend.trace_dropped().unwrap_or(0))
+                .into_bytes(),
         )),
         _ => {
             // JSONL leads with one header object so consumers can tell
@@ -601,6 +604,20 @@ fn series_get(req: &HttpRequest, shared: &Shared) -> Result<Routed> {
             404,
             "application/json",
             error_body("this backend keeps no time series (fleet backends only)"),
+        )),
+    }
+}
+
+/// `GET /v0/journal`: the backend's event-sourced run journal as JSONL
+/// (header line, one event per line — what `bfio replay` consumes).
+/// `404` when journaling is off (it is strictly opt-in).
+fn journal_get(shared: &Shared) -> Result<Routed> {
+    match shared.backend.journal_jsonl() {
+        Some(body) => Ok((200, "application/x-ndjson", body.into_bytes())),
+        None => Ok((
+            404,
+            "application/json",
+            error_body("journaling is not enabled (start the gateway with --journal)"),
         )),
     }
 }

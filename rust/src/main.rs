@@ -6,6 +6,10 @@
 //!                [--shapes 8x16,4x32,...] [--threads N]       fleet vs monolith
 //!                [--faults rand:0.05 | crash@40:r1,recover@90:r1 [--smoke]]
 //!                                                             degradation sweep
+//!                [--journal run.bin [--journal-cap N]]        record one run
+//! bfio replay    <journal> [--check] [--router R | --routers a,b --out
+//!                 BENCH_replay.json] [--threads N] [--no-faults]
+//!                [--speeds 1.0,0.5,...] [--dash [--addr A]]   time-travel replay
 //! bfio autoscale --replicas 3 --policies static,target,energy
 //!                [--smoke] [--threads N]                      elastic vs static
 //! bfio repro     <table1|fig1|fig2|fig6|fig7|fig9|fig10|burstgpt|
@@ -14,7 +18,8 @@
 //! bfio serve     --workers 2 --policy bfio:8 --requests 16    live PJRT serving
 //! bfio gateway   --backend sim|fleet [--autoscale energy]
 //!                [--faults <plan>] [--trace] [--slo-ttft S] [--slo-tpot S]
-//!                [--series-window N] [--series-cap N]         HTTP gateway
+//!                [--series-window N] [--series-cap N]
+//!                [--journal [run.bin] [--journal-buf N]]      HTTP gateway
 //! bfio loadgen   --url http://127.0.0.1:8080 --requests 64    drive a gateway
 //! bfio trace     --out trace.jsonl --steps 200                dump a trace
 //! bfio promlint  metrics.txt                                  lint an exposition
@@ -31,13 +36,17 @@ use bfio_serve::experiments::{self, scaling, ExpScale};
 use bfio_serve::experiments::autoscale::{autoscale_sweep, AutoscaleScale};
 use bfio_serve::experiments::faults::faults_sweep;
 use bfio_serve::experiments::fleet::{fleet_sweep, FleetScale};
-use bfio_serve::fleet::{FaultPlan, FleetBackend, FleetBackendConfig};
+use bfio_serve::experiments::replay::replay_sweep;
+use bfio_serve::fleet::{
+    run_fleet_recorded, FaultPlan, FleetBackend, FleetBackendConfig,
+};
 use bfio_serve::gateway::backend::Backend;
 use bfio_serve::gateway::pjrt::{PjrtBackend, PjrtBackendConfig};
 use bfio_serve::gateway::sim::{SimBackend, SimBackendConfig};
 use bfio_serve::gateway::{self, loadgen, Gateway, GatewayConfig};
 use bfio_serve::metrics::Report;
-use bfio_serve::obs::SloConfig;
+use bfio_serve::obs::replay::ReplayDashBackend;
+use bfio_serve::obs::{replay_journal, Journal, ReplayOptions, SloConfig};
 use bfio_serve::policies::by_name;
 use bfio_serve::sim::Simulator;
 use bfio_serve::util::cli::Args;
@@ -72,6 +81,7 @@ fn run(args: &Args) -> Result<()> {
     match args.subcommand.as_deref() {
         Some("sim") => cmd_sim(args),
         Some("fleet") => cmd_fleet(args),
+        Some("replay") => cmd_replay(args),
         Some("autoscale") => cmd_autoscale(args),
         Some("repro") => cmd_repro(args),
         Some("theory") => cmd_theory(args),
@@ -81,13 +91,13 @@ fn run(args: &Args) -> Result<()> {
         Some("trace") => cmd_trace(args),
         Some("promlint") => cmd_promlint(args),
         Some(other) => bail!(
-            "unknown subcommand {other}; try sim|fleet|autoscale|repro|theory|serve|gateway|loadgen|trace|promlint"
+            "unknown subcommand {other}; try sim|fleet|replay|autoscale|repro|theory|serve|gateway|loadgen|trace|promlint"
         ),
         None => {
             println!(
                 "bfio — BF-IO load-balancing reproduction\n\
-                 subcommands: sim | fleet | autoscale | repro <exp> | theory <thm> | serve | \
-                 gateway | loadgen | trace | promlint\n\
+                 subcommands: sim | fleet | replay | autoscale | repro <exp> | theory <thm> | \
+                 serve | gateway | loadgen | trace | promlint\n\
                  see README.md for details"
             );
             Ok(())
@@ -215,6 +225,46 @@ fn cmd_fleet(args: &Args) -> Result<()> {
         .filter(|t| !t.is_empty())
         .map(|t| t.trim().to_string())
         .collect();
+    // `--journal <path>` switches to a single recorded run: the first
+    // router (or `--router`) runs once — optionally under `--faults` —
+    // with the event journal attached, and the journal is saved to
+    // <path> for `bfio replay`.
+    if let Some(path) = args.flag("journal") {
+        if path == "true" {
+            bail!("--journal needs a path, e.g. --journal run.bin");
+        }
+        let smoke = args.has("smoke");
+        if smoke && !args.has("steps") {
+            scale.steps = 120;
+        }
+        let default_router = routers.first().map(String::as_str).unwrap_or("bfio2");
+        let router = args.get_or("router", default_router).to_string();
+        let faults = match args.flag("faults") {
+            Some(spec) => Some(FaultPlan::parse(spec)?),
+            None => None,
+        };
+        let cap = args.usize_or("journal-cap", 1 << 20);
+        let trace = scale.trace();
+        let cfg = scale.fault_config();
+        let t0 = std::time::Instant::now();
+        let (res, journal) =
+            run_fleet_recorded(&cfg, &router, &trace, &[], None, faults.as_ref(), cap)?;
+        let ms = t0.elapsed().as_secs_f64() * 1e3;
+        let j = journal.lock().unwrap();
+        j.save(std::path::Path::new(path))?;
+        println!(
+            "recorded {path}: {} events ({} dropped), router {}, \
+             {} submitted / {} completed, {:.1} ms",
+            j.ring.len(),
+            j.dropped(),
+            res.router,
+            res.submitted,
+            res.completed,
+            ms,
+        );
+        println!("replay with: bfio replay {path} --check");
+        return Ok(());
+    }
     // `--faults <plan>` switches to the degradation sweep: the same
     // scale and routers, run under the fault plan's crash-rate ladder,
     // written to BENCH_faults.json instead of BENCH_fleet.json.
@@ -233,6 +283,158 @@ fn cmd_fleet(args: &Args) -> Result<()> {
         std::path::Path::new(out),
         args.has("churn"),
     )
+}
+
+/// `bfio replay <journal>`: re-run a recorded journal.  Default is the
+/// pinned postmortem (recorded decisions forced; prints the
+/// recorded-vs-replayed table).  `--check` gates bit-exact reproduction
+/// of the recorded result; `--router/--threads/--no-faults/--speeds`
+/// run a counterfactual instead; `--routers a,b --out BENCH_replay.json`
+/// sweeps counterfactual routers and reports trajectory regret;
+/// `--dash` serves `/v0/dash` over the replayed run's series.
+fn cmd_replay(args: &Args) -> Result<()> {
+    let Some(path) = args.positional.first() else {
+        bail!(
+            "usage: bfio replay <journal> [--check] [--router R | --routers a,b \
+             [--out BENCH_replay.json]] [--threads N] [--no-faults] \
+             [--speeds 1.0,0.5,...] [--dash [--addr A]]"
+        );
+    };
+    let jpath = std::path::Path::new(path.as_str());
+    // Counterfactual router sweep → BENCH_replay.json with the
+    // trajectory-regret headline.
+    if let Some(list) = args.flag("routers") {
+        let routers: Vec<String> = list
+            .split(',')
+            .filter(|t| !t.is_empty())
+            .map(|t| t.trim().to_string())
+            .collect();
+        let out = args.get_or("out", "BENCH_replay.json");
+        return replay_sweep(jpath, &routers, std::path::Path::new(out));
+    }
+    let journal = Journal::load(jpath)?;
+    let replicas = journal.config.fleet.speeds.len();
+    let opts = ReplayOptions {
+        router: args.flag("router").map(str::to_string),
+        threads: args
+            .flag("threads")
+            .map(|v| v.parse::<usize>().with_context(|| format!("bad --threads {v}")))
+            .transpose()?,
+        no_faults: args.has("no-faults"),
+        speeds: match args.flag("speeds") {
+            Some(v) => Some(parse_speeds(v, replicas)?),
+            None => None,
+        },
+    };
+    if args.has("check") && !opts.is_pinned() {
+        bail!("--check requires a pinned replay (drop --router/--no-faults/--speeds)");
+    }
+    let outcome = replay_journal(&journal, &opts)?;
+    let summary = outcome.summary();
+    if args.has("check") {
+        let Some(rec) = &journal.result else {
+            bail!("journal records no final result; re-record from a finished run");
+        };
+        if outcome.forced > 0 || outcome.extra > 0 {
+            bail!(
+                "pinned replay diverged from the recorded decision stream: \
+                 {} forced, {} unrecorded",
+                outcome.forced,
+                outcome.extra,
+            );
+        }
+        let diff = rec.diff(&summary);
+        if !diff.is_empty() {
+            bail!(
+                "pinned replay diverged from the recorded result:\n  {}",
+                diff.join("\n  ")
+            );
+        }
+        println!(
+            "replay --check OK: {} rounds, {} completed, {:.6} J/token reproduced",
+            summary.rounds,
+            summary.completed,
+            summary.energy_per_token_j(),
+        );
+        return Ok(());
+    }
+    print_postmortem(&journal, &outcome);
+    if args.has("dash") {
+        let addr = args.get_or("addr", "127.0.0.1:8080").to_string();
+        let backend: Arc<dyn Backend> = Arc::new(ReplayDashBackend::new(
+            summary.router.clone(),
+            summary.policy.clone(),
+            outcome.series.clone(),
+            journal.to_jsonl(),
+        ));
+        let gw = Gateway::spawn(GatewayConfig { addr, threads: 4 }, backend)?;
+        println!("bfio replay dashboard on http://{}/v0/dash", gw.addr);
+        loop {
+            std::thread::sleep(Duration::from_secs(3600));
+        }
+    }
+    Ok(())
+}
+
+/// Human postmortem table: recorded vs replayed headline metrics and
+/// the per-replica attributed-waste shifts.
+fn print_postmortem(journal: &Journal, outcome: &bfio_serve::obs::ReplayOutcome) {
+    let now = outcome.summary();
+    let mode = if outcome.pinned { "pinned" } else { "counterfactual" };
+    println!(
+        "replay ({mode}): router {}, policy {}, {} events journaled ({} routes)",
+        now.router,
+        now.policy,
+        journal.ring.len(),
+        journal.route_seq,
+    );
+    if outcome.forced > 0 || outcome.extra > 0 {
+        println!(
+            "  decision divergence: {} forced, {} unrecorded",
+            outcome.forced, outcome.extra
+        );
+    }
+    match &journal.result {
+        Some(rec) => {
+            println!(
+                "{:<22} {:>14} {:>14} {:>14}",
+                "metric", "recorded", "replayed", "delta"
+            );
+            let rows: [(&str, f64, f64); 6] = [
+                ("energy/token (J)", rec.energy_per_token_j(), now.energy_per_token_j()),
+                ("tpot (s)", rec.tpot_s, now.tpot_s),
+                ("slo goodput", rec.slo_goodput, now.slo_goodput),
+                ("completed", rec.completed as f64, now.completed as f64),
+                ("shed", rec.shed as f64, now.shed as f64),
+                ("attributed waste (J)", rec.attributed_waste_j, now.attributed_waste_j),
+            ];
+            for (name, a, b) in rows {
+                println!("{name:<22} {a:>14.6} {b:>14.6} {:>+14.6}", b - a);
+            }
+            for (i, r) in now.per_replica.iter().enumerate() {
+                let base = rec.per_replica.get(i).map_or(0.0, |p| p.attributed_waste_j);
+                let delta = r.attributed_waste_j - base;
+                if delta.abs() > 1e-9 {
+                    println!(
+                        "  replica {:>3} waste: {:>12.3} J -> {:>12.3} J ({:+.3})",
+                        r.id, base, r.attributed_waste_j, delta
+                    );
+                }
+            }
+        }
+        None => {
+            println!("  (journal records no baseline result; replayed metrics only)");
+            println!(
+                "  completed {} / submitted {}, energy/token {:.6} J, \
+                 tpot {:.6} s, goodput {:.4}",
+                now.completed,
+                now.submitted,
+                now.energy_per_token_j(),
+                now.tpot_s,
+                now.slo_goodput,
+            );
+        }
+    }
 }
 
 fn cmd_autoscale(args: &Args) -> Result<()> {
@@ -412,6 +614,15 @@ fn cmd_gateway(args: &Args) -> Result<()> {
     // /v0/trace`), `--slo-ttft/--slo-tpot` set the goodput targets.
     let trace = args.has("trace");
     let trace_buf = args.usize_or("trace-buf", 4096);
+    // `--journal [path]` attaches the event-sourced run journal
+    // (`GET /v0/journal`, replayable by `bfio replay`); a path value
+    // additionally saves it when the scheduler shuts down.  Fleet
+    // backend only — the other backends answer `/v0/journal` with 404.
+    let journal = args.has("journal");
+    let journal_path = args
+        .flag("journal")
+        .filter(|v| *v != "true")
+        .map(std::path::PathBuf::from);
     let slo = SloConfig {
         ttft_s: args.f64_or("slo-ttft", SloConfig::default().ttft_s),
         tpot_s: args.f64_or("slo-tpot", SloConfig::default().tpot_s),
@@ -476,6 +687,9 @@ fn cmd_gateway(args: &Args) -> Result<()> {
                 // the newest `series-cap` windows.
                 series_window: args.u64_or("series-window", 8),
                 series_cap: args.usize_or("series-cap", 256),
+                journal,
+                journal_buf: args.usize_or("journal-buf", 65_536),
+                journal_path: journal_path.clone(),
                 ..FleetBackendConfig::default()
             };
             Arc::new(FleetBackend::new(cfg)?)
@@ -500,8 +714,9 @@ fn cmd_gateway(args: &Args) -> Result<()> {
     println!("bfio gateway ({name}) listening on http://{}", gw.addr);
     println!(
         "  POST /v1/completions   GET /v0/workers   GET|POST /v0/admin/replicas   \
-         GET /v0/series   GET /v0/dash   GET /metrics   GET /healthz{}",
-        if trace { "   GET /v0/trace" } else { "" }
+         GET /v0/series   GET /v0/dash   GET /metrics   GET /healthz{}{}",
+        if trace { "   GET /v0/trace" } else { "" },
+        if journal { "   GET /v0/journal" } else { "" }
     );
     // Serve until killed.
     loop {

@@ -1,0 +1,1435 @@
+//! Event-sourced run journal: the deterministic record of every
+//! externally-sourced event a fleet run consumes — request arrivals,
+//! tier-1 routing decisions (with per-replica decision costs), injected
+//! faults, observable health transitions, and replica lifecycle
+//! actions — captured at the [`crate::fleet::FleetCore`] choke points
+//! into a bounded, zero-steady-state-alloc ring.
+//!
+//! The journal is the "wire" between a run and its postmortem: because
+//! the simulator is strictly deterministic (engine/fleet parity locked
+//! to ≤ 1e-9), a journal plus the recorded [`crate::fleet::FleetConfig`]
+//! is sufficient to *re-run the exact trajectory* — see
+//! [`crate::obs::replay`] for the pinned / counterfactual replay
+//! engine.  Two interchangeable encodings are provided:
+//!
+//! * **binary** (`BFIOJRNL` magic): compact length-prefixed frames,
+//!   every `f64` as raw IEEE bits — the lossless archival format;
+//! * **JSONL**: one header line (`{"journal":true,...}`) carrying the
+//!   config, then one line per event, then an optional trailing
+//!   `{"result":{...}}` line — the greppable interchange format served
+//!   by the gateway's `GET /v0/journal`.  Floats are emitted in
+//!   shortest-round-trip form, so binary ↔ JSONL converts losslessly.
+//!
+//! Recording is opt-in (`--journal`); with it off the hot path pays a
+//! single `Option` check and runs bit-identical to a journal-free
+//! build.  When the ring overflows, the *oldest* events are evicted and
+//! the `dropped` counter advances — replay refuses a journal with
+//! evictions (the trajectory is no longer reconstructable), but the
+//! tail is still useful for postmortem reading.
+
+use std::path::Path;
+use std::sync::{Arc, Mutex};
+
+use anyhow::{bail, Context, Result};
+
+use crate::fault::{FaultKind, HealthConfig};
+use crate::fleet::{FleetConfig, FleetResult};
+use crate::obs::SloConfig;
+use crate::sim::predictor::Predictor;
+use crate::util::json::{self, Json};
+use crate::workload::Drift;
+
+/// Request arrival: `a` = request id, `b` = decode length `o`,
+/// `c` = arrival step, `x` = prefill.
+pub const EV_ARRIVAL: u8 = 0;
+/// Routing decision: `a` = decision sequence number, `c` = chosen
+/// replica id + 1 (0 = overflow), `x` = prefill, `costs` = per-replica
+/// decision costs over the accepting set (router's own cost model).
+pub const EV_ROUTE: u8 = 1;
+/// Injected fault: `a` = replica, `b` = kind code
+/// ([`FK_CRASH`]/[`FK_STALL`]/[`FK_RECOVER`]), `x` = stall factor.
+pub const EV_FAULT: u8 = 2;
+/// Observable health transition: `a` = replica, `b` = from-state code,
+/// `c` = to-state code (the `crate::obs::series::HEALTH_*` codes).
+pub const EV_HEALTH: u8 = 3;
+/// Replica lifecycle action: `a` = replica, `b` = op code
+/// ([`LC_ADD`]/[`LC_REACTIVATE`]/[`LC_DRAIN`]/[`LC_REMOVE`]),
+/// `c` = `(G << 32) | B` shape, `x` = speed (add only).
+pub const EV_LIFECYCLE: u8 = 4;
+
+pub const LC_ADD: u8 = 0;
+pub const LC_REACTIVATE: u8 = 1;
+pub const LC_DRAIN: u8 = 2;
+pub const LC_REMOVE: u8 = 3;
+
+pub const FK_CRASH: u64 = 0;
+pub const FK_STALL: u64 = 1;
+pub const FK_RECOVER: u64 = 2;
+
+/// Encode a [`FaultKind`] as `(code, factor)`.
+pub fn fault_code(kind: &FaultKind) -> (u64, f64) {
+    match kind {
+        FaultKind::Crash => (FK_CRASH, 0.0),
+        FaultKind::Stall(f) => (FK_STALL, *f),
+        FaultKind::Recover => (FK_RECOVER, 0.0),
+    }
+}
+
+/// Decode `(code, factor)` back into a [`FaultKind`].
+pub fn fault_of(code: u64, x: f64) -> Option<FaultKind> {
+    match code {
+        FK_CRASH => Some(FaultKind::Crash),
+        FK_STALL => Some(FaultKind::Stall(x)),
+        FK_RECOVER => Some(FaultKind::Recover),
+        _ => None,
+    }
+}
+
+/// One journaled event.  The payload is a fixed frame of three `u64`
+/// scalars + one `f64` (meaning per [`EV_ARRIVAL`]-family kind) plus a
+/// per-event cost vector whose capacity is reused on slot eviction, so
+/// steady-state recording allocates nothing.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct JournalEvent {
+    pub kind: u8,
+    /// Global round the event was applied/recorded at.
+    pub round: u64,
+    pub a: u64,
+    pub b: u64,
+    pub c: u64,
+    pub x: f64,
+    /// `(replica_id, decision_cost)` over the accepting set (routing
+    /// decisions only; empty for every other kind).
+    pub costs: Vec<(u32, f64)>,
+}
+
+/// Bounded event ring: grows lazily to `cap` slots, then evicts the
+/// oldest event per record (bumping `dropped`) and reuses the slot
+/// in place — zero allocation at steady state.
+#[derive(Clone, Debug)]
+pub struct JournalRing {
+    cap: usize,
+    buf: Vec<JournalEvent>,
+    head: usize,
+    len: usize,
+    dropped: u64,
+}
+
+impl JournalRing {
+    pub fn new(cap: usize) -> JournalRing {
+        JournalRing { cap: cap.max(1), buf: Vec::new(), head: 0, len: 0, dropped: 0 }
+    }
+
+    /// Claim the next slot (evicting the oldest when full), fill the
+    /// scalar frame, and hand back the event so the caller can push
+    /// decision costs into its (cleared, capacity-reused) vector.
+    pub fn record(
+        &mut self,
+        kind: u8,
+        round: u64,
+        a: u64,
+        b: u64,
+        c: u64,
+        x: f64,
+    ) -> &mut JournalEvent {
+        let idx = if self.len < self.cap {
+            let idx = (self.head + self.len) % self.cap;
+            if idx == self.buf.len() {
+                self.buf.push(JournalEvent::default());
+            }
+            self.len += 1;
+            idx
+        } else {
+            let idx = self.head;
+            self.head = (self.head + 1) % self.cap;
+            self.dropped += 1;
+            idx
+        };
+        let ev = &mut self.buf[idx];
+        ev.kind = kind;
+        ev.round = round;
+        ev.a = a;
+        ev.b = b;
+        ev.c = c;
+        ev.x = x;
+        ev.costs.clear();
+        ev
+    }
+
+    /// Events oldest-first.
+    pub fn events(&self) -> impl Iterator<Item = &JournalEvent> {
+        (0..self.len).map(move |i| &self.buf[(self.head + i) % self.cap])
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn cap(&self) -> usize {
+        self.cap
+    }
+
+    /// Oldest events evicted to make room (0 = the journal is complete
+    /// and the run is exactly replayable).
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+}
+
+/// Everything needed to reconstruct the run besides the events: the
+/// tier-1 router *spec* string (parseable by
+/// [`FleetConfig::router`], not the display label) and the full fleet
+/// config.
+#[derive(Clone, Debug)]
+pub struct JournalConfig {
+    pub router: String,
+    pub fleet: FleetConfig,
+}
+
+/// The run journal: config + event ring + (once the run finishes) the
+/// recorded [`ResultSummary`] that pinned replay must reproduce.
+#[derive(Clone, Debug)]
+pub struct Journal {
+    pub config: JournalConfig,
+    pub ring: JournalRing,
+    /// Routing decisions recorded so far (monotone; also the `a` field
+    /// of the next [`EV_ROUTE`] event).
+    pub route_seq: u64,
+    pub result: Option<ResultSummary>,
+}
+
+impl Journal {
+    pub fn new(router: &str, fleet: FleetConfig, cap: usize) -> Journal {
+        Journal {
+            config: JournalConfig { router: router.to_string(), fleet },
+            ring: JournalRing::new(cap),
+            route_seq: 0,
+            result: None,
+        }
+    }
+
+    pub fn shared(router: &str, fleet: FleetConfig, cap: usize) -> Arc<Mutex<Journal>> {
+        Arc::new(Mutex::new(Journal::new(router, fleet, cap)))
+    }
+
+    pub fn record_arrival(&mut self, round: u64, id: u64, arrival_step: u64, prefill: f64, o: u64) {
+        self.ring.record(EV_ARRIVAL, round, id, o, arrival_step, prefill);
+    }
+
+    /// Record a routing decision (`chosen = None` ⇒ overflow) and hand
+    /// back the event's cost vector for the caller to fill with the
+    /// accepting set's decision costs.
+    pub fn record_route(
+        &mut self,
+        round: u64,
+        prefill: f64,
+        chosen: Option<usize>,
+    ) -> &mut Vec<(u32, f64)> {
+        let seq = self.route_seq;
+        self.route_seq += 1;
+        let code = chosen.map_or(0, |id| id as u64 + 1);
+        let ev = self.ring.record(EV_ROUTE, round, seq, 0, code, prefill);
+        &mut ev.costs
+    }
+
+    pub fn record_fault(&mut self, round: u64, replica: usize, kind: &FaultKind) {
+        let (code, x) = fault_code(kind);
+        self.ring.record(EV_FAULT, round, replica as u64, code, 0, x);
+    }
+
+    pub fn record_health(&mut self, round: u64, replica: usize, from: u8, to: u8) {
+        self.ring
+            .record(EV_HEALTH, round, replica as u64, from as u64, to as u64, 0.0);
+    }
+
+    pub fn record_lifecycle(
+        &mut self,
+        round: u64,
+        replica: usize,
+        op: u8,
+        g: usize,
+        b: usize,
+        speed: f64,
+    ) {
+        let shape = ((g as u64) << 32) | (b as u64 & 0xffff_ffff);
+        self.ring
+            .record(EV_LIFECYCLE, round, replica as u64, op as u64, shape, speed);
+    }
+
+    pub fn set_result(&mut self, summary: ResultSummary) {
+        self.result = Some(summary);
+    }
+
+    pub fn dropped(&self) -> u64 {
+        self.ring.dropped()
+    }
+
+    /// The recorded routing decisions in sequence order: chosen replica
+    /// id + 1, 0 = overflow.  This is what pinned replay forces.
+    pub fn route_decisions(&self) -> Vec<u64> {
+        self.ring
+            .events()
+            .filter(|e| e.kind == EV_ROUTE)
+            .map(|e| e.c)
+            .collect()
+    }
+
+    /// Write to `path`: JSONL when the extension is `.jsonl`/`.json`,
+    /// the binary frame otherwise.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let ext = path.extension().and_then(|e| e.to_str()).unwrap_or("");
+        let bytes = if ext.eq_ignore_ascii_case("jsonl") || ext.eq_ignore_ascii_case("json") {
+            self.to_jsonl().into_bytes()
+        } else {
+            self.to_binary()
+        };
+        std::fs::write(path, bytes)
+            .with_context(|| format!("journal: writing {}", path.display()))
+    }
+
+    /// Read from `path`, sniffing the format by the binary magic.
+    pub fn load(path: &Path) -> Result<Journal> {
+        let bytes = std::fs::read(path)
+            .with_context(|| format!("journal: reading {}", path.display()))?;
+        if bytes.starts_with(MAGIC) {
+            Journal::from_binary(&bytes)
+        } else {
+            let text = String::from_utf8(bytes)
+                .with_context(|| format!("journal: {} is not UTF-8 JSONL", path.display()))?;
+            Journal::from_jsonl(&text)
+        }
+    }
+}
+
+const MAGIC: &[u8] = b"BFIOJRNL";
+const VERSION: u32 = 1;
+
+// ---------------------------------------------------------------------------
+// Binary codec
+// ---------------------------------------------------------------------------
+
+struct Reader<'a> {
+    b: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.pos + n > self.b.len() {
+            bail!("journal: truncated binary frame at byte {}", self.pos);
+        }
+        let s = &self.b[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+
+    fn str(&mut self) -> Result<String> {
+        let n = self.u32()? as usize;
+        Ok(String::from_utf8(self.take(n)?.to_vec())
+            .context("journal: non-UTF-8 string in binary frame")?)
+    }
+}
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_f64(out: &mut Vec<u8>, v: f64) {
+    put_u64(out, v.to_bits());
+}
+
+fn put_str(out: &mut Vec<u8>, s: &str) {
+    put_u32(out, s.len() as u32);
+    out.extend_from_slice(s.as_bytes());
+}
+
+/// `(tag, payload)` for a [`Drift`]; shared by both codecs.
+fn drift_enc(d: &Drift) -> (u8, Vec<f64>) {
+    match d {
+        Drift::Unit => (0, Vec::new()),
+        Drift::Zero => (1, Vec::new()),
+        Drift::Const(c) => (2, vec![*c]),
+        Drift::Speculative(m) => (3, vec![*m]),
+        Drift::Cycle(xs) => (4, xs.clone()),
+        Drift::Decay { d0, rate } => (5, vec![*d0, *rate]),
+    }
+}
+
+fn drift_dec(tag: u8, vals: &[f64]) -> Result<Drift> {
+    let need = |n: usize| -> Result<()> {
+        if vals.len() < n {
+            bail!("journal: drift tag {tag} needs {n} values, got {}", vals.len());
+        }
+        Ok(())
+    };
+    Ok(match tag {
+        0 => Drift::Unit,
+        1 => Drift::Zero,
+        2 => {
+            need(1)?;
+            Drift::Const(vals[0])
+        }
+        3 => {
+            need(1)?;
+            Drift::Speculative(vals[0])
+        }
+        4 => Drift::Cycle(vals.to_vec()),
+        5 => {
+            need(2)?;
+            Drift::Decay { d0: vals[0], rate: vals[1] }
+        }
+        _ => bail!("journal: unknown drift tag {tag}"),
+    })
+}
+
+fn predictor_enc(p: &Predictor) -> (u8, Vec<f64>) {
+    match p {
+        Predictor::Oracle => (0, Vec::new()),
+        Predictor::WindowOracle => (1, Vec::new()),
+        Predictor::Noisy { sigma_frac, miss_prob } => (2, vec![*sigma_frac, *miss_prob]),
+        Predictor::Pessimistic => (3, Vec::new()),
+    }
+}
+
+fn predictor_dec(tag: u8, vals: &[f64]) -> Result<Predictor> {
+    Ok(match tag {
+        0 => Predictor::Oracle,
+        1 => Predictor::WindowOracle,
+        2 => {
+            if vals.len() < 2 {
+                bail!("journal: predictor tag 2 needs 2 values");
+            }
+            Predictor::Noisy { sigma_frac: vals[0], miss_prob: vals[1] }
+        }
+        3 => Predictor::Pessimistic,
+        _ => bail!("journal: unknown predictor tag {tag}"),
+    })
+}
+
+fn put_tagged(out: &mut Vec<u8>, tag: u8, vals: &[f64]) {
+    out.push(tag);
+    put_u32(out, vals.len() as u32);
+    for &v in vals {
+        put_f64(out, v);
+    }
+}
+
+fn take_tagged(r: &mut Reader) -> Result<(u8, Vec<f64>)> {
+    let tag = r.u8()?;
+    let n = r.u32()? as usize;
+    let mut vals = Vec::with_capacity(n);
+    for _ in 0..n {
+        vals.push(r.f64()?);
+    }
+    Ok((tag, vals))
+}
+
+fn put_fleet_config(out: &mut Vec<u8>, c: &FleetConfig) {
+    put_u64(out, c.g as u64);
+    put_u64(out, c.b as u64);
+    put_str(out, &c.policy);
+    let (tag, vals) = drift_enc(&c.drift);
+    put_tagged(out, tag, &vals);
+    put_f64(out, c.c_overhead);
+    put_f64(out, c.t_token);
+    put_u32(out, c.speeds.len() as u32);
+    for &s in &c.speeds {
+        put_f64(out, s);
+    }
+    match &c.shapes {
+        None => out.push(0),
+        Some(shapes) => {
+            out.push(1);
+            put_u32(out, shapes.len() as u32);
+            for &(g, b) in shapes {
+                put_u64(out, g as u64);
+                put_u64(out, b as u64);
+            }
+        }
+    }
+    put_u64(out, c.threads as u64);
+    put_u64(out, c.seed);
+    put_f64(out, c.slo.ttft_s);
+    put_f64(out, c.slo.tpot_s);
+    put_u64(out, c.max_rounds);
+    put_u64(out, c.warmup_rounds);
+    out.push(c.record_completions as u8);
+    let (tag, vals) = predictor_enc(&c.predictor);
+    put_tagged(out, tag, &vals);
+    put_f64(out, c.health.ewma_alpha);
+    put_f64(out, c.health.suspect_ratio);
+    put_u32(out, c.health.miss_limit);
+    put_u32(out, c.health.probe_rounds);
+    put_f64(out, c.health.suspect_penalty);
+    put_f64(out, c.health.probe_penalty);
+    put_u64(out, c.series_window);
+    put_u64(out, c.series_cap as u64);
+}
+
+fn take_fleet_config(r: &mut Reader) -> Result<FleetConfig> {
+    let g = r.u64()? as usize;
+    let b = r.u64()? as usize;
+    let policy = r.str()?;
+    let (tag, vals) = take_tagged(r)?;
+    let drift = drift_dec(tag, &vals)?;
+    let c_overhead = r.f64()?;
+    let t_token = r.f64()?;
+    let n = r.u32()? as usize;
+    let mut speeds = Vec::with_capacity(n);
+    for _ in 0..n {
+        speeds.push(r.f64()?);
+    }
+    let shapes = match r.u8()? {
+        0 => None,
+        _ => {
+            let n = r.u32()? as usize;
+            let mut shapes = Vec::with_capacity(n);
+            for _ in 0..n {
+                let g = r.u64()? as usize;
+                let b = r.u64()? as usize;
+                shapes.push((g, b));
+            }
+            Some(shapes)
+        }
+    };
+    let threads = r.u64()? as usize;
+    let seed = r.u64()?;
+    let slo = SloConfig { ttft_s: r.f64()?, tpot_s: r.f64()? };
+    let max_rounds = r.u64()?;
+    let warmup_rounds = r.u64()?;
+    let record_completions = r.u8()? != 0;
+    let (tag, vals) = take_tagged(r)?;
+    let predictor = predictor_dec(tag, &vals)?;
+    let health = HealthConfig {
+        ewma_alpha: r.f64()?,
+        suspect_ratio: r.f64()?,
+        miss_limit: r.u32()?,
+        probe_rounds: r.u32()?,
+        suspect_penalty: r.f64()?,
+        probe_penalty: r.f64()?,
+    };
+    let series_window = r.u64()?;
+    let series_cap = r.u64()? as usize;
+    Ok(FleetConfig {
+        g,
+        b,
+        policy,
+        drift,
+        c_overhead,
+        t_token,
+        speeds,
+        shapes,
+        threads,
+        seed,
+        slo,
+        max_rounds,
+        warmup_rounds,
+        record_completions,
+        predictor,
+        health,
+        series_window,
+        series_cap,
+    })
+}
+
+impl Journal {
+    pub fn to_binary(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(64 + self.ring.len() * 48);
+        out.extend_from_slice(MAGIC);
+        put_u32(&mut out, VERSION);
+        put_str(&mut out, &self.config.router);
+        put_fleet_config(&mut out, &self.config.fleet);
+        put_u64(&mut out, self.ring.cap() as u64);
+        put_u64(&mut out, self.ring.dropped());
+        put_u64(&mut out, self.route_seq);
+        put_u64(&mut out, self.ring.len() as u64);
+        for ev in self.ring.events() {
+            out.push(ev.kind);
+            put_u64(&mut out, ev.round);
+            put_u64(&mut out, ev.a);
+            put_u64(&mut out, ev.b);
+            put_u64(&mut out, ev.c);
+            put_f64(&mut out, ev.x);
+            put_u32(&mut out, ev.costs.len() as u32);
+            for &(id, cost) in &ev.costs {
+                put_u32(&mut out, id);
+                put_f64(&mut out, cost);
+            }
+        }
+        match &self.result {
+            None => out.push(0),
+            Some(s) => {
+                out.push(1);
+                put_summary(&mut out, s);
+            }
+        }
+        out
+    }
+
+    pub fn from_binary(bytes: &[u8]) -> Result<Journal> {
+        if !bytes.starts_with(MAGIC) {
+            bail!("journal: bad magic (not a BFIOJRNL binary frame)");
+        }
+        let mut r = Reader { b: bytes, pos: MAGIC.len() };
+        let version = r.u32()?;
+        if version != VERSION {
+            bail!("journal: unsupported version {version} (expected {VERSION})");
+        }
+        let router = r.str()?;
+        let fleet = take_fleet_config(&mut r)?;
+        let cap = r.u64()? as usize;
+        let dropped = r.u64()?;
+        let route_seq = r.u64()?;
+        let n = r.u64()? as usize;
+        let mut ring = JournalRing::new(cap.max(n));
+        for _ in 0..n {
+            let kind = r.u8()?;
+            let round = r.u64()?;
+            let a = r.u64()?;
+            let b = r.u64()?;
+            let c = r.u64()?;
+            let x = r.f64()?;
+            let ev = ring.record(kind, round, a, b, c, x);
+            let m = r.u32()? as usize;
+            for _ in 0..m {
+                let id = r.u32()?;
+                let cost = r.f64()?;
+                ev.costs.push((id, cost));
+            }
+        }
+        ring.cap = cap.max(1);
+        ring.dropped = dropped;
+        let result = match r.u8()? {
+            0 => None,
+            _ => Some(take_summary(&mut r)?),
+        };
+        Ok(Journal {
+            config: JournalConfig { router, fleet },
+            ring,
+            route_seq,
+            result,
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// JSONL codec
+// ---------------------------------------------------------------------------
+
+fn tagged_json(tag: u8, vals: &[f64]) -> Json {
+    json::obj(vec![
+        ("tag", json::num(tag as f64)),
+        ("vals", json::nums(vals)),
+    ])
+}
+
+fn tagged_of(v: &Json, what: &str) -> Result<(u8, Vec<f64>)> {
+    let tag = v
+        .get("tag")
+        .and_then(|t| t.as_u64())
+        .with_context(|| format!("journal: {what}.tag missing"))? as u8;
+    let vals = v
+        .get("vals")
+        .and_then(|t| t.as_arr())
+        .with_context(|| format!("journal: {what}.vals missing"))?
+        .iter()
+        .map(|x| x.as_f64().with_context(|| format!("journal: {what}.vals entry")))
+        .collect::<Result<Vec<f64>>>()?;
+    Ok((tag, vals))
+}
+
+fn jf(v: &Json, k: &str) -> Result<f64> {
+    v.get(k)
+        .and_then(|x| x.as_f64())
+        .with_context(|| format!("journal: missing number {k:?}"))
+}
+
+fn ju(v: &Json, k: &str) -> Result<u64> {
+    v.get(k)
+        .and_then(|x| x.as_u64())
+        .with_context(|| format!("journal: missing integer {k:?}"))
+}
+
+fn jstr(v: &Json, k: &str) -> Result<String> {
+    Ok(v.get(k)
+        .and_then(|x| x.as_str())
+        .with_context(|| format!("journal: missing string {k:?}"))?
+        .to_string())
+}
+
+fn fleet_config_json(c: &FleetConfig) -> Json {
+    let (dtag, dvals) = drift_enc(&c.drift);
+    let (ptag, pvals) = predictor_enc(&c.predictor);
+    let shapes = match &c.shapes {
+        None => Json::Null,
+        Some(shapes) => json::arr(shapes.iter().map(|&(g, b)| {
+            json::arr(vec![json::num(g as f64), json::num(b as f64)])
+        })),
+    };
+    json::obj(vec![
+        ("g", json::num(c.g as f64)),
+        ("b", json::num(c.b as f64)),
+        ("policy", json::s(&c.policy)),
+        ("drift", tagged_json(dtag, &dvals)),
+        ("c_overhead", json::num(c.c_overhead)),
+        ("t_token", json::num(c.t_token)),
+        ("speeds", json::nums(&c.speeds)),
+        ("shapes", shapes),
+        ("threads", json::num(c.threads as f64)),
+        ("seed", json::num(c.seed as f64)),
+        (
+            "slo",
+            json::obj(vec![
+                ("ttft_s", json::num(c.slo.ttft_s)),
+                ("tpot_s", json::num(c.slo.tpot_s)),
+            ]),
+        ),
+        ("max_rounds", json::num(c.max_rounds as f64)),
+        ("warmup_rounds", json::num(c.warmup_rounds as f64)),
+        ("record_completions", Json::Bool(c.record_completions)),
+        ("predictor", tagged_json(ptag, &pvals)),
+        (
+            "health",
+            json::obj(vec![
+                ("ewma_alpha", json::num(c.health.ewma_alpha)),
+                ("suspect_ratio", json::num(c.health.suspect_ratio)),
+                ("miss_limit", json::num(c.health.miss_limit as f64)),
+                ("probe_rounds", json::num(c.health.probe_rounds as f64)),
+                ("suspect_penalty", json::num(c.health.suspect_penalty)),
+                ("probe_penalty", json::num(c.health.probe_penalty)),
+            ]),
+        ),
+        ("series_window", json::num(c.series_window as f64)),
+        ("series_cap", json::num(c.series_cap as f64)),
+    ])
+}
+
+fn fleet_config_of(v: &Json) -> Result<FleetConfig> {
+    let (dtag, dvals) = tagged_of(
+        v.get("drift").context("journal: missing fleet.drift")?,
+        "drift",
+    )?;
+    let (ptag, pvals) = tagged_of(
+        v.get("predictor").context("journal: missing fleet.predictor")?,
+        "predictor",
+    )?;
+    let shapes = match v.get("shapes") {
+        None | Some(Json::Null) => None,
+        Some(s) => Some(
+            s.as_arr()
+                .context("journal: fleet.shapes must be an array")?
+                .iter()
+                .map(|pair| {
+                    let g = pair
+                        .idx(0)
+                        .and_then(|x| x.as_usize())
+                        .context("journal: shape entry g")?;
+                    let b = pair
+                        .idx(1)
+                        .and_then(|x| x.as_usize())
+                        .context("journal: shape entry b")?;
+                    Ok((g, b))
+                })
+                .collect::<Result<Vec<(usize, usize)>>>()?,
+        ),
+    };
+    let speeds = v
+        .get("speeds")
+        .and_then(|s| s.as_arr())
+        .context("journal: missing fleet.speeds")?
+        .iter()
+        .map(|x| x.as_f64().context("journal: fleet.speeds entry"))
+        .collect::<Result<Vec<f64>>>()?;
+    let slo_v = v.get("slo").context("journal: missing fleet.slo")?;
+    let health_v = v.get("health").context("journal: missing fleet.health")?;
+    Ok(FleetConfig {
+        g: ju(v, "g")? as usize,
+        b: ju(v, "b")? as usize,
+        policy: jstr(v, "policy")?,
+        drift: drift_dec(dtag, &dvals)?,
+        c_overhead: jf(v, "c_overhead")?,
+        t_token: jf(v, "t_token")?,
+        speeds,
+        shapes,
+        threads: ju(v, "threads")? as usize,
+        seed: ju(v, "seed")?,
+        slo: SloConfig { ttft_s: jf(slo_v, "ttft_s")?, tpot_s: jf(slo_v, "tpot_s")? },
+        max_rounds: ju(v, "max_rounds")?,
+        warmup_rounds: ju(v, "warmup_rounds")?,
+        record_completions: v
+            .get("record_completions")
+            .and_then(|x| x.as_bool())
+            .unwrap_or(false),
+        predictor: predictor_dec(ptag, &pvals)?,
+        health: HealthConfig {
+            ewma_alpha: jf(health_v, "ewma_alpha")?,
+            suspect_ratio: jf(health_v, "suspect_ratio")?,
+            miss_limit: ju(health_v, "miss_limit")? as u32,
+            probe_rounds: ju(health_v, "probe_rounds")? as u32,
+            suspect_penalty: jf(health_v, "suspect_penalty")?,
+            probe_penalty: jf(health_v, "probe_penalty")?,
+        },
+        series_window: ju(v, "series_window")?,
+        series_cap: ju(v, "series_cap")? as usize,
+    })
+}
+
+fn event_json(ev: &JournalEvent) -> Json {
+    let mut pairs = vec![
+        ("kind", json::num(ev.kind as f64)),
+        ("round", json::num(ev.round as f64)),
+        ("a", json::num(ev.a as f64)),
+        ("b", json::num(ev.b as f64)),
+        ("c", json::num(ev.c as f64)),
+        ("x", json::num(ev.x)),
+    ];
+    if !ev.costs.is_empty() {
+        pairs.push((
+            "costs",
+            json::arr(ev.costs.iter().map(|&(id, cost)| {
+                json::arr(vec![json::num(id as f64), json::num(cost)])
+            })),
+        ));
+    }
+    json::obj(pairs)
+}
+
+fn event_of(v: &Json) -> Result<JournalEvent> {
+    let mut ev = JournalEvent {
+        kind: ju(v, "kind")? as u8,
+        round: ju(v, "round")?,
+        a: ju(v, "a")?,
+        b: ju(v, "b")?,
+        c: ju(v, "c")?,
+        x: jf(v, "x")?,
+        costs: Vec::new(),
+    };
+    if let Some(costs) = v.get("costs").and_then(|c| c.as_arr()) {
+        for pair in costs {
+            let id = pair
+                .idx(0)
+                .and_then(|x| x.as_u64())
+                .context("journal: cost entry id")? as u32;
+            let cost = pair
+                .idx(1)
+                .and_then(|x| x.as_f64())
+                .context("journal: cost entry value")?;
+            ev.costs.push((id, cost));
+        }
+    }
+    Ok(ev)
+}
+
+impl Journal {
+    pub fn to_jsonl(&self) -> String {
+        let mut out = String::new();
+        let header = json::obj(vec![
+            ("journal", Json::Bool(true)),
+            ("version", json::num(VERSION as f64)),
+            ("router", json::s(&self.config.router)),
+            ("cap", json::num(self.ring.cap() as f64)),
+            ("dropped", json::num(self.ring.dropped() as f64)),
+            ("route_seq", json::num(self.route_seq as f64)),
+            ("fleet", fleet_config_json(&self.config.fleet)),
+        ]);
+        out.push_str(&header.to_string());
+        out.push('\n');
+        for ev in self.ring.events() {
+            out.push_str(&event_json(ev).to_string());
+            out.push('\n');
+        }
+        if let Some(s) = &self.result {
+            out.push_str(&json::obj(vec![("result", summary_json(s))]).to_string());
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn from_jsonl(text: &str) -> Result<Journal> {
+        let mut lines = text.lines().filter(|l| !l.trim().is_empty());
+        let header = Json::parse(lines.next().context("journal: empty JSONL")?)
+            .map_err(|e| anyhow::anyhow!("journal: bad JSONL header: {e:?}"))?;
+        if header.get("journal").and_then(|x| x.as_bool()) != Some(true) {
+            bail!("journal: JSONL header is missing \"journal\":true");
+        }
+        let version = ju(&header, "version")?;
+        if version != VERSION as u64 {
+            bail!("journal: unsupported version {version} (expected {VERSION})");
+        }
+        let router = jstr(&header, "router")?;
+        let cap = ju(&header, "cap")? as usize;
+        let dropped = ju(&header, "dropped")?;
+        let route_seq = ju(&header, "route_seq")?;
+        let fleet = fleet_config_of(
+            header.get("fleet").context("journal: header missing fleet config")?,
+        )?;
+        let mut events: Vec<JournalEvent> = Vec::new();
+        let mut result = None;
+        for line in lines {
+            let v = Json::parse(line)
+                .map_err(|e| anyhow::anyhow!("journal: bad JSONL line: {e:?}"))?;
+            if let Some(r) = v.get("result") {
+                result = Some(summary_of(r)?);
+            } else {
+                events.push(event_of(&v)?);
+            }
+        }
+        let mut ring = JournalRing::new(cap.max(events.len()));
+        for e in events {
+            let ev = ring.record(e.kind, e.round, e.a, e.b, e.c, e.x);
+            ev.costs = e.costs;
+        }
+        ring.cap = cap.max(1);
+        ring.dropped = dropped;
+        Ok(Journal {
+            config: JournalConfig { router, fleet },
+            ring,
+            route_seq,
+            result,
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Result summary
+// ---------------------------------------------------------------------------
+
+/// One replica's line in the recorded outcome.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ReplicaSummary {
+    pub id: u64,
+    pub speed: f64,
+    pub routed: u64,
+    pub completed: u64,
+    pub executed: u64,
+    pub clock_s: f64,
+    pub energy_j: f64,
+    pub attributed_waste_j: f64,
+}
+
+/// The scalar surface of a [`FleetResult`], recorded into the journal
+/// when the run finishes.  Pinned replay must reproduce it — integers
+/// exactly, floats to ≤ 1e-9 relative ([`ResultSummary::diff`] is the
+/// gate `bfio replay --check` runs).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ResultSummary {
+    pub router: String,
+    pub policy: String,
+    pub rounds: u64,
+    pub steps: u64,
+    pub submitted: u64,
+    pub completed: u64,
+    pub total_tokens: f64,
+    pub makespan_s: f64,
+    pub clock_ratio: f64,
+    pub energy_j: f64,
+    pub avg_imbalance: f64,
+    pub tpot_s: f64,
+    pub mean_queue_wait_s: f64,
+    pub throughput_tps: f64,
+    pub leftover_waiting: u64,
+    pub slo_goodput: f64,
+    pub crashes: u64,
+    pub stalls: u64,
+    pub recoveries: u64,
+    pub requeued: u64,
+    pub shed: u64,
+    pub regret_decisions: u64,
+    pub regret_audited: u64,
+    pub regret_cumulative: f64,
+    pub max_regret: f64,
+    pub attributed_waste_j: f64,
+    pub per_replica: Vec<ReplicaSummary>,
+}
+
+impl ResultSummary {
+    pub fn from_result(r: &FleetResult) -> ResultSummary {
+        ResultSummary {
+            router: r.router.clone(),
+            policy: r.policy.clone(),
+            rounds: r.rounds,
+            steps: r.steps,
+            submitted: r.submitted,
+            completed: r.completed,
+            total_tokens: r.total_tokens,
+            makespan_s: r.makespan_s,
+            clock_ratio: r.clock_ratio,
+            energy_j: r.energy_j,
+            avg_imbalance: r.avg_imbalance,
+            tpot_s: r.tpot_s,
+            mean_queue_wait_s: r.mean_queue_wait_s,
+            throughput_tps: r.throughput_tps,
+            leftover_waiting: r.leftover_waiting as u64,
+            slo_goodput: r.slo_goodput,
+            crashes: r.crashes,
+            stalls: r.stalls,
+            recoveries: r.recoveries,
+            requeued: r.requeued,
+            shed: r.shed,
+            regret_decisions: r.regret.decisions,
+            regret_audited: r.regret.audited,
+            regret_cumulative: r.regret.cumulative(),
+            max_regret: r.regret.max_regret,
+            attributed_waste_j: r.attributed_waste_j,
+            per_replica: r
+                .per_replica
+                .iter()
+                .map(|p| ReplicaSummary {
+                    id: p.id as u64,
+                    speed: p.speed,
+                    routed: p.routed,
+                    completed: p.completed,
+                    executed: p.executed,
+                    clock_s: p.clock_s,
+                    energy_j: p.report.total_energy_j,
+                    attributed_waste_j: p.attributed_waste_j,
+                })
+                .collect(),
+        }
+    }
+
+    /// Post-warmup joules per token (0 with no tokens).
+    pub fn energy_per_token_j(&self) -> f64 {
+        if self.total_tokens > 0.0 {
+            self.energy_j / self.total_tokens
+        } else {
+            0.0
+        }
+    }
+
+    /// Field-by-field mismatches against `other`: integers must be
+    /// exact, floats within 1e-9 relative (the house determinism
+    /// tolerance).  Empty ⇒ the runs are the same trajectory.
+    pub fn diff(&self, other: &ResultSummary) -> Vec<String> {
+        fn int(out: &mut Vec<String>, name: &str, a: u64, b: u64) {
+            if a != b {
+                out.push(format!("{name}: {a} vs {b}"));
+            }
+        }
+        fn flt(out: &mut Vec<String>, name: &str, a: f64, b: f64) {
+            let scale = 1.0_f64.max(a.abs()).max(b.abs());
+            if (a - b).abs() > 1e-9 * scale {
+                out.push(format!("{name}: {a:.17e} vs {b:.17e}"));
+            }
+        }
+        let mut out = Vec::new();
+        if self.router != other.router {
+            out.push(format!("router: {:?} vs {:?}", self.router, other.router));
+        }
+        if self.policy != other.policy {
+            out.push(format!("policy: {:?} vs {:?}", self.policy, other.policy));
+        }
+        int(&mut out, "rounds", self.rounds, other.rounds);
+        int(&mut out, "steps", self.steps, other.steps);
+        int(&mut out, "submitted", self.submitted, other.submitted);
+        int(&mut out, "completed", self.completed, other.completed);
+        int(&mut out, "leftover_waiting", self.leftover_waiting, other.leftover_waiting);
+        int(&mut out, "crashes", self.crashes, other.crashes);
+        int(&mut out, "stalls", self.stalls, other.stalls);
+        int(&mut out, "recoveries", self.recoveries, other.recoveries);
+        int(&mut out, "requeued", self.requeued, other.requeued);
+        int(&mut out, "shed", self.shed, other.shed);
+        int(&mut out, "regret_decisions", self.regret_decisions, other.regret_decisions);
+        int(&mut out, "regret_audited", self.regret_audited, other.regret_audited);
+        flt(&mut out, "total_tokens", self.total_tokens, other.total_tokens);
+        flt(&mut out, "makespan_s", self.makespan_s, other.makespan_s);
+        flt(&mut out, "clock_ratio", self.clock_ratio, other.clock_ratio);
+        flt(&mut out, "energy_j", self.energy_j, other.energy_j);
+        flt(&mut out, "avg_imbalance", self.avg_imbalance, other.avg_imbalance);
+        flt(&mut out, "tpot_s", self.tpot_s, other.tpot_s);
+        flt(&mut out, "mean_queue_wait_s", self.mean_queue_wait_s, other.mean_queue_wait_s);
+        flt(&mut out, "throughput_tps", self.throughput_tps, other.throughput_tps);
+        flt(&mut out, "slo_goodput", self.slo_goodput, other.slo_goodput);
+        flt(&mut out, "regret_cumulative", self.regret_cumulative, other.regret_cumulative);
+        flt(&mut out, "max_regret", self.max_regret, other.max_regret);
+        flt(&mut out, "attributed_waste_j", self.attributed_waste_j, other.attributed_waste_j);
+        if self.per_replica.len() != other.per_replica.len() {
+            out.push(format!(
+                "per_replica: {} vs {} replicas",
+                self.per_replica.len(),
+                other.per_replica.len()
+            ));
+            return out;
+        }
+        for (a, b) in self.per_replica.iter().zip(&other.per_replica) {
+            let r = a.id;
+            int(&mut out, &format!("r{r}.id"), a.id, b.id);
+            int(&mut out, &format!("r{r}.routed"), a.routed, b.routed);
+            int(&mut out, &format!("r{r}.completed"), a.completed, b.completed);
+            int(&mut out, &format!("r{r}.executed"), a.executed, b.executed);
+            flt(&mut out, &format!("r{r}.speed"), a.speed, b.speed);
+            flt(&mut out, &format!("r{r}.clock_s"), a.clock_s, b.clock_s);
+            flt(&mut out, &format!("r{r}.energy_j"), a.energy_j, b.energy_j);
+            flt(
+                &mut out,
+                &format!("r{r}.attributed_waste_j"),
+                a.attributed_waste_j,
+                b.attributed_waste_j,
+            );
+        }
+        out
+    }
+}
+
+fn summary_json(s: &ResultSummary) -> Json {
+    json::obj(vec![
+        ("router", json::s(&s.router)),
+        ("policy", json::s(&s.policy)),
+        ("rounds", json::num(s.rounds as f64)),
+        ("steps", json::num(s.steps as f64)),
+        ("submitted", json::num(s.submitted as f64)),
+        ("completed", json::num(s.completed as f64)),
+        ("total_tokens", json::num(s.total_tokens)),
+        ("makespan_s", json::num(s.makespan_s)),
+        ("clock_ratio", json::num(s.clock_ratio)),
+        ("energy_j", json::num(s.energy_j)),
+        ("avg_imbalance", json::num(s.avg_imbalance)),
+        ("tpot_s", json::num(s.tpot_s)),
+        ("mean_queue_wait_s", json::num(s.mean_queue_wait_s)),
+        ("throughput_tps", json::num(s.throughput_tps)),
+        ("leftover_waiting", json::num(s.leftover_waiting as f64)),
+        ("slo_goodput", json::num(s.slo_goodput)),
+        ("crashes", json::num(s.crashes as f64)),
+        ("stalls", json::num(s.stalls as f64)),
+        ("recoveries", json::num(s.recoveries as f64)),
+        ("requeued", json::num(s.requeued as f64)),
+        ("shed", json::num(s.shed as f64)),
+        ("regret_decisions", json::num(s.regret_decisions as f64)),
+        ("regret_audited", json::num(s.regret_audited as f64)),
+        ("regret_cumulative", json::num(s.regret_cumulative)),
+        ("max_regret", json::num(s.max_regret)),
+        ("attributed_waste_j", json::num(s.attributed_waste_j)),
+        (
+            "per_replica",
+            json::arr(s.per_replica.iter().map(|p| {
+                json::obj(vec![
+                    ("id", json::num(p.id as f64)),
+                    ("speed", json::num(p.speed)),
+                    ("routed", json::num(p.routed as f64)),
+                    ("completed", json::num(p.completed as f64)),
+                    ("executed", json::num(p.executed as f64)),
+                    ("clock_s", json::num(p.clock_s)),
+                    ("energy_j", json::num(p.energy_j)),
+                    ("attributed_waste_j", json::num(p.attributed_waste_j)),
+                ])
+            })),
+        ),
+    ])
+}
+
+fn summary_of(v: &Json) -> Result<ResultSummary> {
+    let per_replica = v
+        .get("per_replica")
+        .and_then(|p| p.as_arr())
+        .context("journal: result missing per_replica")?
+        .iter()
+        .map(|p| {
+            Ok(ReplicaSummary {
+                id: ju(p, "id")?,
+                speed: jf(p, "speed")?,
+                routed: ju(p, "routed")?,
+                completed: ju(p, "completed")?,
+                executed: ju(p, "executed")?,
+                clock_s: jf(p, "clock_s")?,
+                energy_j: jf(p, "energy_j")?,
+                attributed_waste_j: jf(p, "attributed_waste_j")?,
+            })
+        })
+        .collect::<Result<Vec<ReplicaSummary>>>()?;
+    Ok(ResultSummary {
+        router: jstr(v, "router")?,
+        policy: jstr(v, "policy")?,
+        rounds: ju(v, "rounds")?,
+        steps: ju(v, "steps")?,
+        submitted: ju(v, "submitted")?,
+        completed: ju(v, "completed")?,
+        total_tokens: jf(v, "total_tokens")?,
+        makespan_s: jf(v, "makespan_s")?,
+        clock_ratio: jf(v, "clock_ratio")?,
+        energy_j: jf(v, "energy_j")?,
+        avg_imbalance: jf(v, "avg_imbalance")?,
+        tpot_s: jf(v, "tpot_s")?,
+        mean_queue_wait_s: jf(v, "mean_queue_wait_s")?,
+        throughput_tps: jf(v, "throughput_tps")?,
+        leftover_waiting: ju(v, "leftover_waiting")?,
+        slo_goodput: jf(v, "slo_goodput")?,
+        crashes: ju(v, "crashes")?,
+        stalls: ju(v, "stalls")?,
+        recoveries: ju(v, "recoveries")?,
+        requeued: ju(v, "requeued")?,
+        shed: ju(v, "shed")?,
+        regret_decisions: ju(v, "regret_decisions")?,
+        regret_audited: ju(v, "regret_audited")?,
+        regret_cumulative: jf(v, "regret_cumulative")?,
+        max_regret: jf(v, "max_regret")?,
+        attributed_waste_j: jf(v, "attributed_waste_j")?,
+        per_replica,
+    })
+}
+
+fn put_summary(out: &mut Vec<u8>, s: &ResultSummary) {
+    put_str(out, &s.router);
+    put_str(out, &s.policy);
+    put_u64(out, s.rounds);
+    put_u64(out, s.steps);
+    put_u64(out, s.submitted);
+    put_u64(out, s.completed);
+    put_f64(out, s.total_tokens);
+    put_f64(out, s.makespan_s);
+    put_f64(out, s.clock_ratio);
+    put_f64(out, s.energy_j);
+    put_f64(out, s.avg_imbalance);
+    put_f64(out, s.tpot_s);
+    put_f64(out, s.mean_queue_wait_s);
+    put_f64(out, s.throughput_tps);
+    put_u64(out, s.leftover_waiting);
+    put_f64(out, s.slo_goodput);
+    put_u64(out, s.crashes);
+    put_u64(out, s.stalls);
+    put_u64(out, s.recoveries);
+    put_u64(out, s.requeued);
+    put_u64(out, s.shed);
+    put_u64(out, s.regret_decisions);
+    put_u64(out, s.regret_audited);
+    put_f64(out, s.regret_cumulative);
+    put_f64(out, s.max_regret);
+    put_f64(out, s.attributed_waste_j);
+    put_u32(out, s.per_replica.len() as u32);
+    for p in &s.per_replica {
+        put_u64(out, p.id);
+        put_f64(out, p.speed);
+        put_u64(out, p.routed);
+        put_u64(out, p.completed);
+        put_u64(out, p.executed);
+        put_f64(out, p.clock_s);
+        put_f64(out, p.energy_j);
+        put_f64(out, p.attributed_waste_j);
+    }
+}
+
+fn take_summary(r: &mut Reader) -> Result<ResultSummary> {
+    let router = r.str()?;
+    let policy = r.str()?;
+    let rounds = r.u64()?;
+    let steps = r.u64()?;
+    let submitted = r.u64()?;
+    let completed = r.u64()?;
+    let total_tokens = r.f64()?;
+    let makespan_s = r.f64()?;
+    let clock_ratio = r.f64()?;
+    let energy_j = r.f64()?;
+    let avg_imbalance = r.f64()?;
+    let tpot_s = r.f64()?;
+    let mean_queue_wait_s = r.f64()?;
+    let throughput_tps = r.f64()?;
+    let leftover_waiting = r.u64()?;
+    let slo_goodput = r.f64()?;
+    let crashes = r.u64()?;
+    let stalls = r.u64()?;
+    let recoveries = r.u64()?;
+    let requeued = r.u64()?;
+    let shed = r.u64()?;
+    let regret_decisions = r.u64()?;
+    let regret_audited = r.u64()?;
+    let regret_cumulative = r.f64()?;
+    let max_regret = r.f64()?;
+    let attributed_waste_j = r.f64()?;
+    let n = r.u32()? as usize;
+    let mut per_replica = Vec::with_capacity(n);
+    for _ in 0..n {
+        per_replica.push(ReplicaSummary {
+            id: r.u64()?,
+            speed: r.f64()?,
+            routed: r.u64()?,
+            completed: r.u64()?,
+            executed: r.u64()?,
+            clock_s: r.f64()?,
+            energy_j: r.f64()?,
+            attributed_waste_j: r.f64()?,
+        });
+    }
+    Ok(ResultSummary {
+        router,
+        policy,
+        rounds,
+        steps,
+        submitted,
+        completed,
+        total_tokens,
+        makespan_s,
+        clock_ratio,
+        energy_j,
+        avg_imbalance,
+        tpot_s,
+        mean_queue_wait_s,
+        throughput_tps,
+        leftover_waiting,
+        slo_goodput,
+        crashes,
+        stalls,
+        recoveries,
+        requeued,
+        shed,
+        regret_decisions,
+        regret_audited,
+        regret_cumulative,
+        max_regret,
+        attributed_waste_j,
+        per_replica,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fixture() -> Journal {
+        let mut cfg = FleetConfig::uniform(2, 2, 2, "fcfs");
+        cfg.seed = 7;
+        cfg.drift = Drift::Decay { d0: 2.0, rate: 0.125 };
+        cfg.predictor = Predictor::Noisy { sigma_frac: 0.25, miss_prob: 0.1 };
+        cfg.shapes = Some(vec![(2, 2), (4, 1)]);
+        let mut j = Journal::new("bfio2", cfg, 16);
+        j.record_arrival(0, 1, 0, 10.0, 5);
+        let costs = j.record_route(0, 10.0, Some(1));
+        costs.push((0, 1.5));
+        costs.push((1, 0.5));
+        j.record_fault(3, 1, &FaultKind::Stall(4.0));
+        j.record_health(4, 1, 0, 1);
+        j.record_lifecycle(5, 2, LC_ADD, 2, 2, 1.0);
+        let _ = j.record_route(5, 3.0, None); // overflow
+        j
+    }
+
+    #[test]
+    fn ring_evicts_oldest_and_bounds_memory() {
+        let mut ring = JournalRing::new(4);
+        for i in 0..10u64 {
+            ring.record(EV_ARRIVAL, i, i, 0, 0, 0.0);
+        }
+        assert_eq!(ring.len(), 4);
+        assert_eq!(ring.cap(), 4);
+        assert_eq!(ring.dropped(), 6);
+        let rounds: Vec<u64> = ring.events().map(|e| e.round).collect();
+        assert_eq!(rounds, vec![6, 7, 8, 9], "oldest evicted first");
+        assert!(ring.buf.len() <= 4, "buffer never exceeds cap");
+    }
+
+    #[test]
+    fn binary_round_trip_is_lossless() {
+        let j = fixture();
+        let bytes = j.to_binary();
+        let j2 = Journal::from_binary(&bytes).unwrap();
+        assert_eq!(bytes, j2.to_binary());
+        assert_eq!(j2.config.router, "bfio2");
+        assert_eq!(j2.ring.len(), j.ring.len());
+        assert_eq!(j2.route_seq, 2);
+        assert_eq!(j2.route_decisions(), vec![2, 0]);
+        let evs: Vec<&JournalEvent> = j2.ring.events().collect();
+        assert_eq!(evs[1].costs, vec![(0, 1.5), (1, 0.5)]);
+    }
+
+    #[test]
+    fn jsonl_round_trip_matches_binary() {
+        let j = fixture();
+        let text = j.to_jsonl();
+        assert!(text.lines().next().unwrap().contains("\"journal\":true"));
+        let j2 = Journal::from_jsonl(&text).unwrap();
+        assert_eq!(
+            j.to_binary(),
+            j2.to_binary(),
+            "JSONL must convert losslessly back to the binary frame"
+        );
+    }
+
+    #[test]
+    fn load_sniffs_format_by_magic() {
+        let j = fixture();
+        let dir = std::env::temp_dir();
+        let pid = std::process::id();
+        let bin = dir.join(format!("bfio_journal_{pid}.bin"));
+        let jsonl = dir.join(format!("bfio_journal_{pid}.jsonl"));
+        j.save(&bin).unwrap();
+        j.save(&jsonl).unwrap();
+        let a = Journal::load(&bin).unwrap();
+        let b = Journal::load(&jsonl).unwrap();
+        assert_eq!(a.to_binary(), b.to_binary());
+        let _ = std::fs::remove_file(&bin);
+        let _ = std::fs::remove_file(&jsonl);
+    }
+
+    #[test]
+    fn fault_codes_round_trip() {
+        for kind in [FaultKind::Crash, FaultKind::Stall(3.0), FaultKind::Recover] {
+            let (code, x) = fault_code(&kind);
+            assert_eq!(fault_of(code, x), Some(kind));
+        }
+        assert_eq!(fault_of(9, 0.0), None);
+    }
+
+    #[test]
+    fn summary_diff_tolerances() {
+        let mut a = ResultSummary {
+            router: "BF-IO-2L".into(),
+            policy: "BF-IO".into(),
+            rounds: 10,
+            steps: 40,
+            submitted: 20,
+            completed: 20,
+            total_tokens: 800.0,
+            makespan_s: 12.0,
+            clock_ratio: 1.0,
+            energy_j: 9000.0,
+            avg_imbalance: 0.1,
+            tpot_s: 0.05,
+            mean_queue_wait_s: 0.2,
+            throughput_tps: 66.0,
+            leftover_waiting: 0,
+            slo_goodput: 1.0,
+            crashes: 0,
+            stalls: 0,
+            recoveries: 0,
+            requeued: 0,
+            shed: 0,
+            regret_decisions: 20,
+            regret_audited: 20,
+            regret_cumulative: 0.0,
+            max_regret: 0.0,
+            attributed_waste_j: 100.0,
+            per_replica: Vec::new(),
+        };
+        let b = a.clone();
+        assert!(a.diff(&b).is_empty());
+        a.energy_j += a.energy_j * 1e-12; // inside 1e-9 relative
+        assert!(a.diff(&b).is_empty());
+        a.energy_j = b.energy_j + 1.0;
+        a.completed = 19;
+        let d = a.diff(&b);
+        assert_eq!(d.len(), 2, "one int + one float mismatch: {d:?}");
+        assert!(a.energy_per_token_j() > 0.0);
+    }
+}

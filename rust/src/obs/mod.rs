@@ -34,6 +34,17 @@
 //!   Eq. 19 cost model); exact routers show regret ≡ 0.
 //! * [`series::SeriesRing`] — bounded windowed time-series ring behind
 //!   `GET /v0/series` and the self-contained `GET /v0/dash` dashboard.
+//! * [`journal::Journal`] — event-sourced run journal: every
+//!   externally-sourced event a run consumes (arrivals, routing
+//!   decisions + per-replica decision costs, faults, health
+//!   transitions, lifecycle actions) recorded into a bounded ring with
+//!   compact binary + JSONL export (`--journal` on `bfio fleet` /
+//!   `bfio gateway`, `GET /v0/journal`).
+//! * [`replay`] — counterfactual replay over a journal: pinned mode
+//!   reproduces the recorded `FleetResult` bit-exactly (`bfio replay
+//!   --check`), counterfactual mode re-decides routing under
+//!   `--router` / `--no-faults` / `--speeds` overrides for
+//!   trajectory-level regret postmortems.
 //!
 //! On top of these, [`SloConfig`] + [`RequestObs`] define the
 //! **SLO-goodput** metric: the fraction of completions whose TTFT and
@@ -48,15 +59,19 @@
 //! engine's zero-steady-state-allocation ethos.
 
 pub mod attrib;
+pub mod journal;
 pub mod profiler;
 pub mod regret;
+pub mod replay;
 pub mod series;
 pub mod sketch;
 pub mod trace;
 
 pub use attrib::GateLedger;
+pub use journal::{Journal, JournalConfig, JournalEvent, JournalRing, ResultSummary};
 pub use profiler::RoundProfiler;
 pub use regret::RegretAudit;
+pub use replay::{replay_journal, PinnedRouter, ReplayOptions, ReplayOutcome};
 pub use series::SeriesRing;
 pub use sketch::QuantileSketch;
 pub use trace::{SpanEvent, SpanKind, SpanLog, Tracer};

@@ -2,16 +2,18 @@
 //! versus the counterfactual best placement, by the router's own
 //! marginal Eq. 19 cost model?
 //!
-//! Cost-based routers (`low`, `bfio2`, `bfio2h`) already evaluate a
-//! marginal cost per candidate; the audit replays that cost over every
+//! All five tier-1 routers expose a cost surface: the marginal-cost
+//! routers (`low`, `bfio2`, `bfio2h`) evaluate Eq. 19 per candidate,
+//! WRR exposes its negated smoothed credits, and power-of-d scores its
+//! sampled subset (candidates it never drew return `None` and are
+//! excluded from "best").  The audit replays that cost over every
 //! accepting replica *after* the pick and records
-//! `chosen_cost − best_cost` into a [`QuantileSketch`] plus counters.
-//! Exact-argmin routers therefore show regret ≡ 0 on any fleet — the
-//! audit's built-in self-check — while sampled (power-of-d) or cost-blind
-//! (WRR) routers have no cost model to audit and only bump the decision
-//! counter.  Cumulative regret surfacing next to the health penalties
-//! tells an operator when a router is *systematically* mis-placing
-//! (e.g. stale views or a penalty pinned by a flapping replica).
+//! `chosen_cost − best_cost` into a [`QuantileSketch`] plus counters —
+//! exact routers therefore show regret ≡ 0 on any fleet, the audit's
+//! built-in self-check.  Cumulative regret surfacing next to the health
+//! penalties tells an operator when a router is *systematically*
+//! mis-placing (e.g. stale views or a penalty pinned by a flapping
+//! replica).
 //!
 //! Observability-only: the audit reads costs through
 //! [`crate::fleet::FleetRouter::decision_cost`] (`&self`, no router

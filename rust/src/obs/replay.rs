@@ -1,0 +1,525 @@
+//! Counterfactual replay: re-run a journaled fleet trajectory
+//! ([`crate::obs::journal`]) — exactly, or under a what-if override.
+//!
+//! Two modes:
+//!
+//! * **pinned** (no overrides): every recorded routing decision is
+//!   *forced* back onto the core while the wrapped router's internal
+//!   state (WRR credits, power-of-d sample draws, the routing RNG
+//!   stream) is still driven exactly as recorded.  Because the
+//!   simulator is strictly deterministic, pinned replay must reproduce
+//!   the recorded [`crate::fleet::FleetResult`] with integers exact and
+//!   floats ≤ 1e-9 — `bfio replay --check` diffs the outcome against
+//!   the journal's recorded [`ResultSummary`] and a non-empty diff is a
+//!   determinism bug (or a corrupted journal).
+//! * **counterfactual** (`--router` / `--no-faults` / `--speeds`;
+//!   `--threads` alone stays pinned since parallel ≡ serial is exact):
+//!   routing is re-decided live while the journaled arrivals, fault
+//!   schedule (unless suppressed), and lifecycle actions stay fixed —
+//!   "what would this exact bad afternoon have cost under `low`?".
+//!   The trajectory-level regret of the recorded run is then
+//!   `pinned − best counterfactual` on the metric of interest
+//!   (energy/token primary), computed by
+//!   [`crate::experiments::replay`].
+//!
+//! Faithfulness bounds: a journal whose ring evicted events
+//! (`dropped > 0`) is refused — the prefix of the trajectory is gone.
+//! A wedged run that a live controller hook sat out for its full
+//! 10 000-round stall window is cut short after one wedged round here
+//! (the journal records no events that would unwedge it, so the tail
+//! is round-count padding, not dynamics).  Gateway-recorded journals
+//! replay through the offline core: the arrival *schedule* is exact,
+//! while gateway-side shed-on-retry corners are approximated by the
+//! offline requeue rule.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::fault::FaultEvent;
+use crate::fleet::{FleetCore, FleetFinished, FleetResult, FleetRouter, ReplicaView};
+use crate::gateway::backend::{
+    Backend, BackendStats, Completion, CompletionRequest, WorkerStatus,
+};
+use crate::obs::journal::{
+    fault_of, Journal, JournalEvent, ResultSummary, EV_ARRIVAL, EV_FAULT,
+    EV_LIFECYCLE, LC_ADD, LC_DRAIN, LC_REACTIVATE, LC_REMOVE,
+};
+use crate::obs::series::SeriesRing;
+use crate::util::rng::Rng;
+use crate::workload::Request;
+
+/// A tier-1 router that forces the journal's recorded decisions while
+/// still driving the wrapped router through every call — so the inner
+/// router's state and the shared routing RNG stream evolve exactly as
+/// in the recorded run, and `decision_cost` audits against the same
+/// cost surface.
+pub struct PinnedRouter {
+    inner: Box<dyn FleetRouter>,
+    /// Recorded decisions in sequence order: replica id + 1, 0 =
+    /// overflow ([`Journal::route_decisions`]).
+    decisions: Vec<u64>,
+    cursor: usize,
+    /// Decisions where the freshly computed pick disagreed with the
+    /// recorded one and was overridden (must stay 0 on a true pinned
+    /// replay — nonzero means the trajectory diverged upstream).
+    forced: Arc<AtomicU64>,
+    /// Route calls beyond the recorded decision list (ditto).
+    extra: Arc<AtomicU64>,
+}
+
+impl PinnedRouter {
+    pub fn new(
+        inner: Box<dyn FleetRouter>,
+        decisions: Vec<u64>,
+    ) -> (PinnedRouter, Arc<AtomicU64>, Arc<AtomicU64>) {
+        let forced = Arc::new(AtomicU64::new(0));
+        let extra = Arc::new(AtomicU64::new(0));
+        let router = PinnedRouter {
+            inner,
+            decisions,
+            cursor: 0,
+            forced: Arc::clone(&forced),
+            extra: Arc::clone(&extra),
+        };
+        (router, forced, extra)
+    }
+}
+
+impl FleetRouter for PinnedRouter {
+    /// The wrapped router's display name, so a pinned replay's
+    /// [`FleetResult::router`] matches the recorded label.
+    fn name(&self) -> String {
+        self.inner.name()
+    }
+
+    fn route(
+        &mut self,
+        prefill: f64,
+        replicas: &[ReplicaView],
+        rng: &mut Rng,
+    ) -> Option<usize> {
+        // Drive the inner router first — its credits/samples/RNG draws
+        // must consume the stream exactly as recorded.
+        let fresh = self.inner.route(prefill, replicas, rng);
+        let rec = self.decisions.get(self.cursor).copied();
+        self.cursor += 1;
+        match rec {
+            // Recorded overflow: no replica accepted.  Returning `None`
+            // sends the core to its least-outstanding fallback, which
+            // (state being identical) also finds nothing — the request
+            // overflows exactly as recorded.
+            Some(0) => None,
+            Some(code) => {
+                let id = (code - 1) as usize;
+                if fresh != Some(id) {
+                    self.forced.fetch_add(1, Ordering::Relaxed);
+                }
+                Some(id)
+            }
+            None => {
+                self.extra.fetch_add(1, Ordering::Relaxed);
+                fresh
+            }
+        }
+    }
+
+    fn decision_cost(&self, prefill: f64, v: &ReplicaView) -> Option<f64> {
+        self.inner.decision_cost(prefill, v)
+    }
+}
+
+/// What-if overrides for a replay.  All `None`/`false` (the default) ⇒
+/// pinned mode.  `threads` alone keeps the replay pinned: round
+/// parallelism is locked bit-exact by the `fleet_parity` suite, so it
+/// is a wall-clock knob, not a counterfactual.
+#[derive(Clone, Debug, Default)]
+pub struct ReplayOptions {
+    /// Re-decide routing under this router spec (`wrr | low | powd:<d>
+    /// | bfio2 | bfio2h`) instead of forcing recorded decisions.
+    pub router: Option<String>,
+    /// Override round-execution threads.
+    pub threads: Option<usize>,
+    /// Suppress the journaled fault events (the "clean-room" baseline a
+    /// faulted run is compared against).
+    pub no_faults: bool,
+    /// Override replica speed factors (must match the recorded initial
+    /// fleet size — lifecycle/fault events reference replica ids).
+    pub speeds: Option<Vec<f64>>,
+}
+
+impl ReplayOptions {
+    /// True when the replay will force recorded decisions (bit-exact
+    /// reproduction) rather than re-deciding.
+    pub fn is_pinned(&self) -> bool {
+        self.router.is_none() && !self.no_faults && self.speeds.is_none()
+    }
+}
+
+/// Outcome of one replay run.
+pub struct ReplayOutcome {
+    pub result: FleetResult,
+    /// Whether recorded decisions were forced (pinned) or re-decided.
+    pub pinned: bool,
+    /// Pinned-mode divergence diagnostics (both must be 0 on a healthy
+    /// pinned replay; always 0 in counterfactual mode).
+    pub forced: u64,
+    pub extra: u64,
+    /// The replayed run's windowed time-series ring — what
+    /// `bfio replay --dash` serves through the `/v0/dash` dashboard.
+    pub series: SeriesRing,
+}
+
+impl ReplayOutcome {
+    /// The replay's outcome in journal-comparable form.
+    pub fn summary(&self) -> ResultSummary {
+        ResultSummary::from_result(&self.result)
+    }
+}
+
+/// Apply every journal event due at the core's current round, in
+/// recorded order.  Fault events are applied in their recorded batches
+/// (all due faults, then one crash-loss requeue pass), mirroring the
+/// live driver's `apply_faults`.
+fn apply_due(
+    core: &mut FleetCore<u32, ()>,
+    evs: &[JournalEvent],
+    cursor: &mut usize,
+    id_to_idx: &HashMap<u64, u32>,
+) -> Result<()> {
+    while *cursor < evs.len() && evs[*cursor].round <= core.round() {
+        let ev = &evs[*cursor];
+        *cursor += 1;
+        match ev.kind {
+            EV_ARRIVAL => {
+                if let Some(&idx) = id_to_idx.get(&ev.a) {
+                    core.submit(ev.x, ev.c, idx);
+                }
+            }
+            EV_LIFECYCLE => match ev.b as u8 {
+                LC_ADD => {
+                    let g = (ev.c >> 32) as usize;
+                    let b = (ev.c & 0xffff_ffff) as usize;
+                    let _ = core.add_replica_shaped(ev.x, g, b);
+                }
+                LC_REACTIVATE => {
+                    core.reactivate_replica(ev.a as usize);
+                }
+                LC_DRAIN => core.drain_replica(ev.a as usize, false),
+                LC_REMOVE => core.drain_replica(ev.a as usize, true),
+                op => bail!("journal: unknown lifecycle op {op}"),
+            },
+            EV_FAULT => {
+                apply_fault_ev(core, ev)?;
+                // One recorded batch = every fault applied at the same
+                // round boundary; the journal keeps them adjacent, and
+                // the round gate separates batches applied at different
+                // rounds.
+                while *cursor < evs.len()
+                    && evs[*cursor].kind == EV_FAULT
+                    && evs[*cursor].round <= core.round()
+                {
+                    let next = &evs[*cursor];
+                    *cursor += 1;
+                    apply_fault_ev(core, next)?;
+                }
+                // Requeue what the batch's crashes lost: first loss
+                // resubmits at the current round, repeat loss is
+                // already shed and tallied by `drain_lost` — the live
+                // drivers' rule exactly.
+                if core.has_lost() {
+                    let round = core.round();
+                    for (id, prefill, _o, (), requeue) in core.drain_lost() {
+                        if requeue {
+                            if let Some(&idx) = id_to_idx.get(&id) {
+                                core.resubmit(prefill, round, idx);
+                            }
+                        }
+                    }
+                }
+            }
+            kind => bail!("journal: unexpected event kind {kind} in replay walk"),
+        }
+    }
+    Ok(())
+}
+
+fn apply_fault_ev(core: &mut FleetCore<u32, ()>, ev: &JournalEvent) -> Result<()> {
+    let kind = fault_of(ev.b, ev.x)
+        .ok_or_else(|| anyhow!("journal: unknown fault code {}", ev.b))?;
+    core.apply_fault(&FaultEvent { round: ev.round, replica: ev.a as usize, kind });
+    Ok(())
+}
+
+/// Re-run a journaled trajectory — pinned (exact reproduction) or
+/// counterfactual (overridden routing over the identical arrival /
+/// fault / lifecycle schedule).  See the module docs for the
+/// faithfulness contract.
+pub fn replay_journal(journal: &Journal, opts: &ReplayOptions) -> Result<ReplayOutcome> {
+    if journal.ring.dropped() > 0 {
+        bail!(
+            "journal dropped {} events (ring cap {}): the trajectory is not \
+             reconstructable — record with a larger --journal-cap",
+            journal.ring.dropped(),
+            journal.ring.cap()
+        );
+    }
+    let mut cfg = journal.config.fleet.clone();
+    if let Some(t) = opts.threads {
+        cfg.threads = t;
+    }
+    if let Some(speeds) = &opts.speeds {
+        if speeds.len() != cfg.speeds.len() {
+            bail!(
+                "--speeds must list {} factors (the recorded initial fleet), got {}",
+                cfg.speeds.len(),
+                speeds.len()
+            );
+        }
+        cfg.speeds = speeds.clone();
+    }
+    let pinned = opts.is_pinned();
+    let router_spec = opts
+        .router
+        .clone()
+        .unwrap_or_else(|| journal.config.router.clone());
+    let base = cfg
+        .router(&router_spec)
+        .ok_or_else(|| anyhow!("unknown fleet router {router_spec:?}"))?;
+    let (router, forced, extra): (Box<dyn FleetRouter>, Arc<AtomicU64>, Arc<AtomicU64>) =
+        if pinned {
+            let (p, f, e) = PinnedRouter::new(base, journal.route_decisions());
+            (Box::new(p), f, e)
+        } else {
+            (base, Arc::new(AtomicU64::new(0)), Arc::new(AtomicU64::new(0)))
+        };
+    let router_label = router.name();
+    let policy_label = crate::policies::by_name(&cfg.policy)
+        .ok_or_else(|| anyhow!("unknown policy {:?}", cfg.policy))?
+        .name();
+
+    // Reconstruct the trace and the ordered walk list (arrivals,
+    // lifecycle, faults); routing decisions ride in the PinnedRouter
+    // and health transitions are re-derived by the core's own monitor.
+    let mut trace: Vec<Request> = Vec::new();
+    let mut id_to_idx: HashMap<u64, u32> = HashMap::new();
+    let mut evs: Vec<JournalEvent> = Vec::new();
+    for ev in journal.ring.events() {
+        match ev.kind {
+            EV_ARRIVAL => {
+                id_to_idx.insert(ev.a, trace.len() as u32);
+                trace.push(Request {
+                    id: ev.a,
+                    arrival_step: ev.c,
+                    prefill: ev.x,
+                    decode_len: ev.b.max(1),
+                });
+                evs.push(ev.clone());
+            }
+            EV_LIFECYCLE => evs.push(ev.clone()),
+            EV_FAULT if !opts.no_faults => evs.push(ev.clone()),
+            _ => {}
+        }
+    }
+
+    let mut core: FleetCore<u32, ()> = FleetCore::new(cfg.clone(), router)?;
+    let mut cursor = 0usize;
+    let mut out: Vec<FleetFinished<()>> = Vec::new();
+
+    loop {
+        apply_due(&mut core, &evs, &mut cursor, &id_to_idx)?;
+
+        // Fleet-wide idle gap: jump to the next journaled event (the
+        // walk list is chronological, so its head is the global next).
+        if core.is_idle() {
+            let Some(next) = evs.get(cursor).map(|e| e.round) else { break };
+            if cfg.max_rounds > 0 && next >= cfg.max_rounds {
+                break;
+            }
+            if next > core.round() {
+                core.skip_to_round(next);
+                apply_due(&mut core, &evs, &mut cursor, &id_to_idx)?;
+            }
+        }
+
+        if core.is_idle() && cursor >= evs.len() {
+            break; // drained
+        }
+
+        let stepped = core.run_round(
+            &|_, idx| {
+                let r = &trace[idx as usize];
+                (r.id, r.decode_len, ())
+            },
+            &mut out,
+        );
+
+        if cfg.max_rounds > 0 && core.round() >= cfg.max_rounds {
+            break;
+        }
+        // Wedged with nothing left in the journal to unwedge it: stop
+        // (the hookless offline driver's rule; see the module docs for
+        // the hooked-run corner).
+        if stepped == 0 && !core.is_idle() && !core.has_accepting() && cursor >= evs.len() {
+            break;
+        }
+    }
+
+    let rounds = core.round();
+    let submitted = core.submitted();
+    let overflow = core.overflow_len();
+    let counters = core.fault_counters();
+    let drained = core.is_idle() && cursor >= evs.len();
+    let regret = core.regret().clone();
+    let attributed_waste_j = core.attributed_waste_fleet_j();
+    let series = core.series().clone();
+    let per_replica = core.into_results();
+    let mut res = crate::fleet::aggregate(
+        router_label,
+        policy_label,
+        rounds,
+        submitted,
+        per_replica,
+        counters,
+    );
+    res.regret = regret;
+    res.attributed_waste_j = attributed_waste_j;
+    res.leftover_waiting += overflow;
+    debug_assert!(
+        !drained || res.completed + res.shed == res.submitted,
+        "replay conservation: completed {} + shed {} != submitted {}",
+        res.completed,
+        res.shed,
+        res.submitted
+    );
+    Ok(ReplayOutcome {
+        result: res,
+        pinned,
+        forced: forced.load(Ordering::Relaxed),
+        extra: extra.load(Ordering::Relaxed),
+        series,
+    })
+}
+
+/// A read-only gateway backend over a replayed journal: serves the
+/// replay's time-series ring through `GET /v0/series` + the live
+/// `GET /v0/dash` dashboard, and the journal itself through
+/// `GET /v0/journal` — postmortems get the dashboard view offline
+/// (`bfio replay --dash`).
+pub struct ReplayDashBackend {
+    label: String,
+    policy: String,
+    series: SeriesRing,
+    jsonl: String,
+}
+
+impl ReplayDashBackend {
+    pub fn new(
+        label: String,
+        policy: String,
+        series: SeriesRing,
+        jsonl: String,
+    ) -> ReplayDashBackend {
+        ReplayDashBackend { label, policy, series, jsonl }
+    }
+}
+
+impl Backend for ReplayDashBackend {
+    fn name(&self) -> String {
+        format!("replay/{}", self.label)
+    }
+
+    fn complete(&self, _req: CompletionRequest) -> Result<Completion> {
+        bail!("replay dashboard is read-only: the journaled run already executed")
+    }
+
+    fn workers(&self) -> Vec<WorkerStatus> {
+        Vec::new()
+    }
+
+    fn stats(&self) -> BackendStats {
+        BackendStats { policy: self.policy.clone(), ..BackendStats::default() }
+    }
+
+    fn series_json(&self, last: usize) -> Option<String> {
+        Some(self.series.to_json(last))
+    }
+
+    fn journal_jsonl(&self) -> Option<String> {
+        Some(self.jsonl.clone())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fleet::router::LeastOutstanding;
+
+    fn view(id: usize, load_sum: f64) -> ReplicaView {
+        ReplicaView {
+            id,
+            speed: 1.0,
+            accepting: true,
+            workers: 2,
+            slots: 4,
+            free_slots: 4,
+            active: 0,
+            queue_depth: 0,
+            load_sum,
+            max_load: load_sum / 2.0,
+            min_load: load_sum / 2.0,
+            queued_prefill: 0.0,
+            completion_horizon: 0,
+            clock_s: 0.0,
+            penalty: 1.0,
+        }
+    }
+
+    #[test]
+    fn pinned_router_forces_recorded_decisions() {
+        // Recorded: r1, r0, overflow.  The inner router (low) would
+        // pick r1 every time — decisions 2 and 3 are forced.
+        let (mut r, forced, extra) =
+            PinnedRouter::new(Box::new(LeastOutstanding), vec![2, 1, 0]);
+        let views = vec![view(0, 100.0), view(1, 10.0)];
+        let mut rng = Rng::new(1);
+        assert_eq!(r.route(5.0, &views, &mut rng), Some(1));
+        assert_eq!(r.route(5.0, &views, &mut rng), Some(0));
+        assert_eq!(r.route(5.0, &views, &mut rng), None, "recorded overflow");
+        assert_eq!(forced.load(Ordering::Relaxed), 2);
+        assert_eq!(extra.load(Ordering::Relaxed), 0);
+        // Past the recorded list: fall through to the live pick.
+        assert_eq!(r.route(5.0, &views, &mut rng), Some(1));
+        assert_eq!(extra.load(Ordering::Relaxed), 1);
+        assert_eq!(r.name(), "LeastOutstanding");
+    }
+
+    #[test]
+    fn replay_options_pinned_rules() {
+        assert!(ReplayOptions::default().is_pinned());
+        let t = ReplayOptions { threads: Some(8), ..ReplayOptions::default() };
+        assert!(t.is_pinned(), "threads alone stays pinned (parity is exact)");
+        let r = ReplayOptions { router: Some("low".into()), ..ReplayOptions::default() };
+        assert!(!r.is_pinned());
+        let f = ReplayOptions { no_faults: true, ..ReplayOptions::default() };
+        assert!(!f.is_pinned());
+    }
+
+    #[test]
+    fn dash_backend_is_read_only() {
+        let b = ReplayDashBackend::new(
+            "BF-IO-2L".into(),
+            "BF-IO".into(),
+            SeriesRing::new(8, 16),
+            "{\"journal\":true}\n".into(),
+        );
+        assert!(b.name().starts_with("replay/"));
+        let req = CompletionRequest { id: 1, prompt_tokens: vec![1, 2], max_tokens: 4 };
+        assert!(b.complete(req).is_err());
+        assert!(b.series_json(8).is_some());
+        assert_eq!(b.journal_jsonl().unwrap(), "{\"journal\":true}\n");
+        assert!(b.workers().is_empty());
+    }
+}

@@ -320,8 +320,10 @@ pub fn to_jsonl(events: &[SpanEvent]) -> String {
 
 /// Render events as a Chrome `trace_event` document (load in
 /// `chrome://tracing` or Perfetto): instant events keyed by
-/// replica (pid) / worker (tid).
-pub fn to_chrome(events: &[SpanEvent]) -> String {
+/// replica (pid) / worker (tid).  `dropped` is the flight-recorder
+/// drop counter, carried in the document's `metadata` so the Chrome
+/// export states its own completeness like the JSONL header line does.
+pub fn to_chrome(events: &[SpanEvent], dropped: u64) -> String {
     let idx = |v: u32| if v == NO_INDEX { -1.0 } else { v as f64 };
     let evs: Vec<Json> = events
         .iter()
@@ -349,6 +351,10 @@ pub fn to_chrome(events: &[SpanEvent]) -> String {
     json::obj(vec![
         ("traceEvents", Json::Arr(evs)),
         ("displayTimeUnit", json::s("ms")),
+        (
+            "metadata",
+            json::obj(vec![("dropped", json::num(dropped as f64))]),
+        ),
     ])
     .to_string()
 }
@@ -457,13 +463,18 @@ mod tests {
         assert_eq!(first.get("kind").unwrap().as_str().unwrap(), "arrival");
         assert_eq!(first.get("request_id").unwrap().as_u64().unwrap(), 42);
         assert_eq!(first.get("worker").unwrap().as_f64().unwrap(), -1.0);
-        let chrome = Json::parse(&to_chrome(&events)).unwrap();
+        let chrome = Json::parse(&to_chrome(&events, 7)).unwrap();
         let evs = chrome.get("traceEvents").unwrap().as_arr().unwrap();
         assert_eq!(evs.len(), 2);
         assert_eq!(evs[1].get("name").unwrap().as_str().unwrap(), "finish");
         assert_eq!(
             evs[1].get("args").unwrap().get("request_id").unwrap().as_u64().unwrap(),
             42
+        );
+        // The drop counter rides in metadata, mirroring the JSONL header.
+        assert_eq!(
+            chrome.get("metadata").unwrap().get("dropped").unwrap().as_u64().unwrap(),
+            7
         );
     }
 }

@@ -465,6 +465,49 @@ fn boot_fleet(router: &str, policy: &str) -> (Gateway, String) {
 }
 
 #[test]
+fn gateway_journal_endpoint_serves_replayable_jsonl() {
+    let backend = FleetBackend::new(FleetBackendConfig {
+        replicas: 2,
+        g: 2,
+        b: 2,
+        policy: "bfio:8".to_string(),
+        router: "low".to_string(),
+        step_delay: Duration::ZERO,
+        batch_window: Duration::ZERO,
+        journal: true,
+        ..FleetBackendConfig::default()
+    })
+    .unwrap();
+    let gw = Gateway::spawn(
+        GatewayConfig { addr: "127.0.0.1:0".to_string(), threads: 8 },
+        Arc::new(backend),
+    )
+    .unwrap();
+    let a = gw.addr.to_string();
+    for i in 0..4 {
+        let body = format!(r#"{{"prompt": [7, 8, {i}], "max_tokens": 4}}"#);
+        let r = ghttp::http_call(&a, "POST", "/v1/completions", Some(&body)).unwrap();
+        assert_eq!(r.status, 200);
+    }
+    let r = ghttp::http_call(&a, "GET", "/v0/journal", None).unwrap();
+    assert_eq!(r.status, 200);
+    let body = r.body_str().unwrap();
+    let header = Json::parse(body.lines().next().unwrap()).unwrap();
+    assert_eq!(header.get("journal").and_then(Json::as_bool), Some(true));
+    // The served document parses back into a journal carrying every
+    // arrival the gateway admitted.
+    let journal = bfio_serve::obs::Journal::from_jsonl(body).unwrap();
+    let arrivals = journal
+        .ring
+        .events()
+        .filter(|ev| ev.kind == bfio_serve::obs::journal::EV_ARRIVAL)
+        .count();
+    assert_eq!(arrivals, 4);
+    assert!(journal.route_seq >= 4, "each arrival was routed");
+    gw.shutdown();
+}
+
+#[test]
 fn gateway_serves_completions_over_a_fleet() {
     let (gw, a) = boot_fleet("low", "bfio:8");
     for i in 0..6 {

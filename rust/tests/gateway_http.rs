@@ -320,11 +320,19 @@ fn trace_endpoint_serves_complete_span_chains_and_metrics_lint_clean() {
         "complete causal chain for request {last_id}"
     );
 
-    // Chrome trace_event export of the same store.
+    // Chrome trace_event export of the same store.  The `metadata`
+    // block carries the ring's drop counter so an eviction-truncated
+    // export is distinguishable from a complete one.
     let r = ghttp::http_call(&a, "GET", "/v0/trace?format=chrome", None).unwrap();
     assert_eq!(r.status, 200);
     let v = Json::parse(r.body_str().unwrap()).unwrap();
     assert!(!v.get("traceEvents").unwrap().as_arr().unwrap().is_empty());
+    let dropped = v
+        .get("metadata")
+        .and_then(|m| m.get("dropped"))
+        .and_then(Json::as_u64)
+        .expect("chrome export carries metadata.dropped");
+    assert_eq!(dropped, 0, "nothing should have been evicted in this run");
 
     // The live exposition: structurally clean, with the mergeable
     // latency histograms and the SLO-goodput gauge present.
@@ -339,6 +347,14 @@ fn trace_endpoint_serves_complete_span_chains_and_metrics_lint_clean() {
     let goodput = loadgen::prom_value(text, "bfio_slo_goodput_ratio").unwrap();
     assert!((0.0..=1.0).contains(&goodput));
     assert!(loadgen::prom_value(text, "bfio_ttft_seconds_count").unwrap() >= 4.0);
+    gw.shutdown();
+}
+
+#[test]
+fn journal_endpoint_is_404_without_a_journaling_backend() {
+    let (gw, a) = boot("fcfs", 0, 0);
+    let r = ghttp::http_call(&a, "GET", "/v0/journal", None).unwrap();
+    assert_eq!(r.status, 404, "journaling is opt-in (fleet backend + --journal)");
     gw.shutdown();
 }
 

@@ -1,0 +1,191 @@
+//! Journal + counterfactual replay coverage:
+//!
+//! * pinned replay reproduces the recorded result bit-exactly (ints
+//!   exact, floats ≤ 1e-9 relative) across the tier-1 router panel ×
+//!   round-execution threads {1, 8} × faults on/off, with zero decision
+//!   divergence;
+//! * a counterfactual whose overrides equal the recorded run (same
+//!   router spec, same speeds) re-decides every route and still lands
+//!   on the same trajectory — the replay event reconstruction is
+//!   faithful, not just the decision pinning;
+//! * a genuinely different counterfactual router completes and
+//!   conserves work over the same journaled arrivals;
+//! * `--no-faults` on a faulted journal replays a clean run;
+//! * binary and JSONL journal files round-trip through disk and still
+//!   replay exactly;
+//! * a ring that evicted events refuses to replay.
+
+use bfio_serve::fault::FaultPlan;
+use bfio_serve::fleet::{run_fleet_recorded, FleetConfig};
+use bfio_serve::obs::{replay_journal, Journal, ReplayOptions};
+use bfio_serve::util::rng::Rng;
+use bfio_serve::workload::{
+    generate_trace, ArrivalProcess, GeometricSampler, Request,
+};
+
+fn trace_of(seed: u64, per_step: usize, backlog: usize, steps: u64) -> Vec<Request> {
+    let mut sampler = GeometricSampler::new(5, 80, 0.25);
+    sampler.o_cap = 12;
+    let arrivals = ArrivalProcess::Fixed { per_step, initial_backlog: backlog };
+    let mut rng = Rng::new(seed);
+    generate_trace(&sampler, &arrivals, steps, &mut rng)
+}
+
+fn cfg_of(replicas: usize, seed: u64, threads: usize) -> FleetConfig {
+    FleetConfig {
+        seed,
+        threads,
+        ..FleetConfig::uniform(replicas, 2, 2, "bfio:8")
+    }
+}
+
+/// Record one run and hand back its journal (cloned out of the shared
+/// handle, as `bfio replay` sees it after `Journal::load`).
+fn record(
+    router: &str,
+    threads: usize,
+    faults: Option<&FaultPlan>,
+    cap: usize,
+) -> Journal {
+    let cfg = cfg_of(3, 11, threads);
+    let trace = trace_of(42, 2, 6, 30);
+    let (_res, journal) =
+        run_fleet_recorded(&cfg, router, &trace, &[], None, faults, cap).unwrap();
+    let j = journal.lock().unwrap().clone();
+    j
+}
+
+fn assert_pinned_exact(what: &str, journal: &Journal) {
+    let outcome = replay_journal(journal, &ReplayOptions::default()).unwrap();
+    assert!(outcome.pinned, "{what}: default options must be pinned");
+    assert_eq!(outcome.forced, 0, "{what}: forced decisions in pinned replay");
+    assert_eq!(outcome.extra, 0, "{what}: unrecorded decisions in pinned replay");
+    let rec = journal.result.as_ref().expect("recorded result");
+    let diff = rec.diff(&outcome.summary());
+    assert!(diff.is_empty(), "{what}: pinned replay diverged:\n  {}", diff.join("\n  "));
+}
+
+#[test]
+fn pinned_replay_reproduces_every_router() {
+    for router in ["wrr", "low", "powd:2", "bfio2", "bfio2h"] {
+        let journal = record(router, 1, None, 1 << 16);
+        assert_pinned_exact(&format!("router {router}"), &journal);
+    }
+}
+
+#[test]
+fn pinned_replay_reproduces_faulted_runs() {
+    let plan = FaultPlan::parse("crash@6:r0,recover@40:r0").unwrap();
+    for router in ["low", "bfio2"] {
+        let journal = record(router, 1, Some(&plan), 1 << 16);
+        let rec = journal.result.as_ref().unwrap();
+        assert!(rec.crashes > 0, "plan injected nothing");
+        assert_pinned_exact(&format!("faulted {router}"), &journal);
+    }
+}
+
+#[test]
+fn pinned_replay_is_thread_invariant() {
+    // Journal recorded serially, replayed with 8 round-execution
+    // threads: a threads-only override keeps the replay pinned and the
+    // result identical (parallel ≡ serial parity).
+    let journal = record("bfio2", 1, None, 1 << 16);
+    let opts = ReplayOptions { threads: Some(8), ..ReplayOptions::default() };
+    assert!(opts.is_pinned());
+    let outcome = replay_journal(&journal, &opts).unwrap();
+    assert_eq!(outcome.forced + outcome.extra, 0);
+    let diff = journal.result.as_ref().unwrap().diff(&outcome.summary());
+    assert!(diff.is_empty(), "threads=8 replay diverged:\n  {}", diff.join("\n  "));
+    // And a journal recorded in parallel replays exactly too.
+    let journal8 = record("bfio2", 8, None, 1 << 16);
+    assert_pinned_exact("recorded with threads=8", &journal8);
+}
+
+#[test]
+fn identical_override_counterfactual_ties_pinned() {
+    // Re-deciding every route with the *same* router spec (and the
+    // recorded speeds) must land on the recorded trajectory: the
+    // counterfactual path reconstructs the same arrivals, faults, and
+    // lifecycle stream the live run consumed.
+    let plan = FaultPlan::parse("crash@6:r0,recover@40:r0").unwrap();
+    let journal = record("low", 1, Some(&plan), 1 << 16);
+    let opts = ReplayOptions {
+        router: Some(journal.config.router.clone()),
+        speeds: Some(journal.config.fleet.speeds.clone()),
+        ..ReplayOptions::default()
+    };
+    assert!(!opts.is_pinned());
+    let outcome = replay_journal(&journal, &opts).unwrap();
+    assert!(!outcome.pinned);
+    let diff = journal.result.as_ref().unwrap().diff(&outcome.summary());
+    assert!(
+        diff.is_empty(),
+        "identical-override counterfactual diverged:\n  {}",
+        diff.join("\n  ")
+    );
+}
+
+#[test]
+fn different_router_counterfactual_conserves_work() {
+    let journal = record("low", 1, None, 1 << 16);
+    let opts = ReplayOptions {
+        router: Some("wrr".to_string()),
+        ..ReplayOptions::default()
+    };
+    let outcome = replay_journal(&journal, &opts).unwrap();
+    let sum = outcome.summary();
+    let rec = journal.result.as_ref().unwrap();
+    assert_eq!(sum.submitted, rec.submitted, "same journaled arrivals");
+    assert_eq!(
+        sum.completed + sum.shed + sum.leftover_waiting,
+        sum.submitted,
+        "counterfactual stranded work"
+    );
+    assert!(sum.completed > 0);
+    assert!(sum.router.to_lowercase().contains("wrr"), "router {:?}", sum.router);
+}
+
+#[test]
+fn no_faults_counterfactual_replays_clean() {
+    let plan = FaultPlan::parse("crash@6:r0,recover@40:r0").unwrap();
+    let journal = record("low", 1, Some(&plan), 1 << 16);
+    assert!(journal.result.as_ref().unwrap().crashes > 0);
+    let opts = ReplayOptions { no_faults: true, ..ReplayOptions::default() };
+    let outcome = replay_journal(&journal, &opts).unwrap();
+    let sum = outcome.summary();
+    assert_eq!(sum.crashes + sum.stalls + sum.recoveries, 0, "faults leaked");
+    assert_eq!(sum.shed, 0);
+    assert_eq!(sum.completed + sum.leftover_waiting, sum.submitted);
+}
+
+#[test]
+fn journal_files_round_trip_and_replay() {
+    let plan = FaultPlan::parse("crash@6:r0,recover@40:r0").unwrap();
+    let journal = record("bfio2", 1, Some(&plan), 1 << 16);
+    for ext in ["bin", "jsonl"] {
+        let path = std::env::temp_dir().join(format!("bfio_replay_rt.{ext}"));
+        journal.save(&path).unwrap();
+        let loaded = Journal::load(&path).unwrap();
+        assert_eq!(loaded.ring.len(), journal.ring.len(), "{ext}: event count");
+        assert_eq!(loaded.route_seq, journal.route_seq, "{ext}: route_seq");
+        assert_eq!(loaded.config.router, journal.config.router, "{ext}: router");
+        assert_eq!(
+            loaded.result.as_ref().map(|r| r.completed),
+            journal.result.as_ref().map(|r| r.completed),
+            "{ext}: recorded result"
+        );
+        assert_pinned_exact(&format!("loaded from .{ext}"), &loaded);
+    }
+}
+
+#[test]
+fn evicting_ring_refuses_replay() {
+    // A cap far below the event volume forces evictions; the journal
+    // still records (bounded memory) but replay must refuse rather than
+    // reconstruct a partial trajectory.
+    let journal = record("low", 1, None, 8);
+    assert!(journal.ring.dropped() > 0, "cap 8 evicted nothing");
+    let err = replay_journal(&journal, &ReplayOptions::default()).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("journal-cap") || msg.to_lowercase().contains("evict"), "{msg}");
+}
