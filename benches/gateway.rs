@@ -1,0 +1,33 @@
+//! Gateway transport sweep: epoll reactor vs the legacy blocking
+//! thread pool over real sockets (sim backend, virtual time — no GPUs
+//! needed), one SSE-streamed loadgen run per connection count.
+//!
+//! Emits `BENCH_gateway.json` (per-connection-count completed/shed
+//! counts, req/s, tok/s, TTFT and TPOT p50/p99 for both transports,
+//! plus the `reactor_ge_pool_at_max` verdict CI gates on).
+//! `-- --smoke` runs a small sweep for CI; `-- --out PATH` overrides
+//! the output file (CI uses it to regenerate the canonical file with
+//! measured numbers).
+
+use bfio_serve::experiments::gateway::{gateway_bench, GatewayScale};
+
+fn main() {
+    let argv: Vec<String> = std::env::args().collect();
+    let smoke = argv.iter().any(|a| a == "--smoke");
+    let out_override = argv
+        .iter()
+        .position(|a| a == "--out")
+        .and_then(|i| argv.get(i + 1))
+        .cloned();
+    let scale = if smoke { GatewayScale::smoke() } else { GatewayScale::full() };
+    let conns: &[usize] = if smoke { &[1, 8, 32] } else { &[1, 4, 16, 64] };
+
+    let json = gateway_bench(&scale, conns, smoke).expect("gateway bench");
+    let default_path =
+        if smoke { "BENCH_gateway_smoke.json" } else { "BENCH_gateway.json" };
+    let path = out_override.as_deref().unwrap_or(default_path);
+    match std::fs::write(path, json.to_string_pretty() + "\n") {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+}

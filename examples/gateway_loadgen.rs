@@ -28,7 +28,11 @@ fn main() -> anyhow::Result<()> {
             ..SimBackendConfig::default()
         })?;
         let gw = Gateway::spawn(
-            GatewayConfig { addr: "127.0.0.1:0".to_string(), threads: 8 },
+            GatewayConfig {
+                addr: "127.0.0.1:0".to_string(),
+                threads: 8,
+                ..GatewayConfig::default()
+            },
             Arc::new(backend),
         )?;
         let cfg = LoadGenConfig {
@@ -39,6 +43,7 @@ fn main() -> anyhow::Result<()> {
             max_tokens: 12,
             seed: 1,
             trace: None,
+            ..LoadGenConfig::default()
         };
         let res = loadgen::run(&cfg)?;
         let (name, report) = loadgen::fetch_report(&cfg.authority, &res)?;

@@ -1,0 +1,179 @@
+//! Gateway transport bench: the epoll reactor versus the legacy
+//! blocking thread pool, on identical simulated backends and identical
+//! SSE-streamed workloads, across a connection-count ladder — the
+//! evidence behind `benches/gateway.rs` and `BENCH_gateway.json`.
+//!
+//! The pool is pinned at `threads` blocking workers, so past that many
+//! concurrent connections it queues at accept; the reactor multiplexes
+//! every connection on one event loop and lets the backend batch the
+//! full set.  The headline verdict is `reactor_ge_pool_at_max`:
+//! reactor throughput must match or beat the pool at the *largest*
+//! connection count — the regime the reactor exists for.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::gateway::loadgen::{self, LoadGenConfig, SweepRow};
+use crate::gateway::sim::{SimBackend, SimBackendConfig};
+use crate::gateway::{Gateway, GatewayConfig};
+use crate::util::json::{arr, num, obj, s, Json};
+
+/// Scale knobs for one transport comparison.
+#[derive(Clone, Debug)]
+pub struct GatewayScale {
+    /// Simulated workers behind the gateway.
+    pub g: usize,
+    /// Per-worker batch capacity.
+    pub b: usize,
+    /// Requests per sweep point.
+    pub requests: usize,
+    /// Mean prompt length for the synthetic sampler.
+    pub prompt_tokens: usize,
+    /// Mean decode budget for the synthetic sampler.
+    pub max_tokens: u64,
+    pub seed: u64,
+    /// Wall-clock length of one barrier step in the simulated backend.
+    pub step_delay: Duration,
+    /// Admission batch window of the simulated backend.
+    pub batch_window: Duration,
+    /// Worker threads for the legacy pool (the reactor runs one loop
+    /// thread regardless; its exec workers are idle on a streaming
+    /// backend).
+    pub threads: usize,
+    /// SSE streaming on/off — on, TTFT is the first `data:` event.
+    pub stream: bool,
+}
+
+impl GatewayScale {
+    /// CI-sized comparison: completes in a few seconds.
+    pub fn smoke() -> GatewayScale {
+        GatewayScale {
+            g: 4,
+            b: 8,
+            requests: 48,
+            prompt_tokens: 16,
+            max_tokens: 8,
+            seed: 7,
+            step_delay: Duration::from_millis(1),
+            batch_window: Duration::from_millis(5),
+            threads: 8,
+            stream: true,
+        }
+    }
+
+    /// The canonical `BENCH_gateway.json` scale.
+    pub fn full() -> GatewayScale {
+        GatewayScale {
+            g: 8,
+            b: 16,
+            requests: 256,
+            prompt_tokens: 32,
+            max_tokens: 12,
+            seed: 7,
+            step_delay: Duration::from_millis(2),
+            batch_window: Duration::from_millis(5),
+            threads: 8,
+            stream: true,
+        }
+    }
+}
+
+/// Boot a fresh sim-backed gateway on the requested transport and run
+/// the `connections` sweep against it.
+pub fn run_transport(
+    scale: &GatewayScale,
+    legacy_pool: bool,
+    conns: &[usize],
+) -> Result<Vec<SweepRow>> {
+    let backend = SimBackend::new(SimBackendConfig {
+        g: scale.g,
+        b: scale.b,
+        policy: "bfio:8".to_string(),
+        step_delay: scale.step_delay,
+        batch_window: scale.batch_window,
+        ..SimBackendConfig::default()
+    })?;
+    let gw = Gateway::spawn(
+        GatewayConfig {
+            addr: "127.0.0.1:0".to_string(),
+            threads: scale.threads,
+            legacy_pool,
+            ..GatewayConfig::default()
+        },
+        Arc::new(backend),
+    )?;
+    let cfg = LoadGenConfig {
+        authority: gw.addr.to_string(),
+        requests: scale.requests,
+        prompt_tokens: scale.prompt_tokens,
+        max_tokens: scale.max_tokens,
+        seed: scale.seed,
+        stream: scale.stream,
+        ..LoadGenConfig::default()
+    };
+    let rows = loadgen::sweep(&cfg, conns)?;
+    gw.shutdown();
+    Ok(rows)
+}
+
+/// One sweep row as a `BENCH_gateway.json` object.
+pub fn row_json(r: &SweepRow) -> Json {
+    obj(vec![
+        ("connections", num(r.connections as f64)),
+        ("completed", num(r.completed as f64)),
+        ("sheds", num(r.sheds as f64)),
+        ("errors", num(r.errors as f64)),
+        ("wall_s", num(r.wall_s)),
+        ("throughput_rps", num(r.throughput_rps)),
+        ("throughput_tps", num(r.throughput_tps)),
+        ("ttft_p50_s", num(r.ttft_p50_s)),
+        ("ttft_p99_s", num(r.ttft_p99_s)),
+        ("tpot_p50_s", num(r.tpot_p50_s)),
+        ("tpot_p99_s", num(r.tpot_p99_s)),
+    ])
+}
+
+/// Run both transports, print both sweeps, and assemble the
+/// `BENCH_gateway.json` document.
+pub fn gateway_bench(scale: &GatewayScale, conns: &[usize], smoke: bool) -> Result<Json> {
+    let t0 = Instant::now();
+    println!(
+        "gateway transport sweep (G={}, B={}, {} requests/pt, stream={}):",
+        scale.g, scale.b, scale.requests, scale.stream
+    );
+    let reactor = run_transport(scale, false, conns)?;
+    println!("reactor:");
+    loadgen::print_sweep(&reactor);
+    let pool = run_transport(scale, true, conns)?;
+    println!("legacy pool ({} threads):", scale.threads);
+    loadgen::print_sweep(&pool);
+
+    let reactor_ge_pool_at_max = match (reactor.last(), pool.last()) {
+        (Some(r), Some(p)) => r.throughput_rps >= p.throughput_rps,
+        _ => false,
+    };
+    let total_ms = t0.elapsed().as_secs_f64() * 1e3;
+    println!(
+        "reactor >= pool at {} connections: {}   ({:.0} ms total)",
+        conns.last().copied().unwrap_or(0),
+        reactor_ge_pool_at_max,
+        total_ms
+    );
+    Ok(obj(vec![
+        ("bench", s("gateway")),
+        ("smoke", Json::Bool(smoke)),
+        ("stream", Json::Bool(scale.stream)),
+        ("g", num(scale.g as f64)),
+        ("b", num(scale.b as f64)),
+        ("requests", num(scale.requests as f64)),
+        ("pool_threads", num(scale.threads as f64)),
+        ("seed", num(scale.seed as f64)),
+        ("connections", arr(conns.iter().map(|&c| num(c as f64)))),
+        ("reactor", arr(reactor.iter().map(row_json))),
+        ("legacy_pool", arr(pool.iter().map(row_json))),
+        ("reactor_ge_pool_at_max", Json::Bool(reactor_ge_pool_at_max)),
+        ("total_ms", num(total_ms)),
+    ]))
+}

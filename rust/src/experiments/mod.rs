@@ -9,6 +9,7 @@
 pub mod autoscale;
 pub mod faults;
 pub mod fleet;
+pub mod gateway;
 pub mod replay;
 pub mod scaling;
 

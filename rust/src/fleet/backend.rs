@@ -10,6 +10,7 @@
 //! worker id `replica·G + worker`, with a `replica` field), `/metrics`
 //! adds per-replica series, and `stats` aggregates across the fleet.
 
+use std::collections::HashMap;
 use std::path::PathBuf;
 use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
 use std::sync::{Arc, Mutex};
@@ -23,9 +24,9 @@ use crate::config::SimConfig;
 use crate::fault::{FaultInjector, FaultPlan, HealthConfig};
 use crate::gateway::backend::{
     AdminCmd, AdminOutcome, Backend, BackendStats, Completion,
-    CompletionRequest, ReplicaStatus, WorkerStatus,
+    CompletionRequest, ReplicaStatus, Responder, StreamSink, WorkerStatus,
 };
-use crate::gateway::sim::gen_tokens;
+use crate::gateway::sim::{gen_token, gen_tokens};
 use crate::metrics::imbalance;
 use crate::obs::journal::Journal;
 use crate::obs::trace::NO_INDEX;
@@ -165,7 +166,16 @@ impl FleetBackendConfig {
 /// A submitted request waiting for its answer.
 struct Pending {
     req: CompletionRequest,
-    done: Sender<Completion>,
+    resp: Responder,
+}
+
+/// Streaming progress for one in-flight request.  `emitted` is a
+/// monotone watermark: a crash-requeued request restarts its decode at
+/// age 0, and the watermark guarantees already-streamed tokens are
+/// never re-emitted (the terminal flush fills any gap at completion).
+struct StreamProg {
+    sink: StreamSink,
+    emitted: u64,
 }
 
 enum Msg {
@@ -205,7 +215,7 @@ impl FleetBackend {
             .router(&cfg.router)
             .ok_or_else(|| anyhow!("unknown fleet router {:?}", cfg.router))?;
         let router_label = router.name();
-        let mut core: FleetCore<Pending, Sender<Completion>> =
+        let mut core: FleetCore<Pending, Responder> =
             FleetCore::new(fleet_cfg.clone(), router)?;
         // Opt-in lifecycle tracing: one shared span log, drained from
         // the per-replica rings each round; the scheduler keeps its own
@@ -288,6 +298,7 @@ impl FleetBackend {
             tracer,
             trace_log: trace_log.clone(),
             journal: journal.clone(),
+            streams: HashMap::new(),
         };
         let handle = std::thread::spawn(move || scheduler.run());
         Ok(FleetBackend {
@@ -311,12 +322,25 @@ impl Backend for FleetBackend {
         let (done_tx, done_rx) = channel::<Completion>();
         {
             let tx = self.tx.lock().map_err(|_| anyhow!("backend poisoned"))?;
-            tx.send(Msg::Submit(Pending { req, done: done_tx }))
+            tx.send(Msg::Submit(Pending { req, resp: Responder::Blocking(done_tx) }))
                 .map_err(|_| anyhow!("fleet scheduler is gone"))?;
         }
         done_rx
             .recv()
             .context("fleet scheduler dropped the request (shutting down?)")
+    }
+
+    fn supports_streaming(&self) -> bool {
+        true
+    }
+
+    fn submit_stream(&self, req: CompletionRequest, sink: StreamSink) -> Result<()> {
+        let tx = self.tx.lock().map_err(|_| anyhow!("backend poisoned"))?;
+        // On send failure the Pending (and its sink) is dropped, which
+        // fires the sink's terminal-failure event.
+        tx.send(Msg::Submit(Pending { req, resp: Responder::Stream(sink) }))
+            .map_err(|_| anyhow!("fleet scheduler is gone"))?;
+        Ok(())
     }
 
     fn workers(&self) -> Vec<WorkerStatus> {
@@ -394,7 +418,7 @@ struct Scheduler {
     snap: Arc<Mutex<Snapshot>>,
     /// Published mirror of the core's time-series ring (`/v0/series`).
     series: Arc<Mutex<SeriesRing>>,
-    core: FleetCore<Pending, Sender<Completion>>,
+    core: FleetCore<Pending, Responder>,
     controller: Option<Controller>,
     /// Scheduled fault events (`--faults`), applied at round boundaries.
     injector: Option<FaultInjector>,
@@ -409,6 +433,8 @@ struct Scheduler {
     /// Shared handle to the core's journal (for the shutdown save; the
     /// core itself records through its own reference).
     journal: Option<Arc<Mutex<Journal>>>,
+    /// Streamed requests awaiting per-round token deltas, by id.
+    streams: HashMap<u64, StreamProg>,
 }
 
 impl Scheduler {
@@ -420,6 +446,11 @@ impl Scheduler {
         // answers with when the request is admitted.
         let o = u64::from(p.req.max_tokens.max(1));
         let enabled = self.tracer.is_enabled();
+        if let Responder::Stream(sink) = &p.resp {
+            if sink.wants_deltas() {
+                self.streams.insert(id, StreamProg { sink: sink.clone(), emitted: 0 });
+            }
+        }
         self.core.journal_arrival(id, round, prefill, o);
         let chosen = self.core.submit(prefill, round, p);
         if enabled {
@@ -469,7 +500,7 @@ impl Scheduler {
     /// Apply one admin command against the live core.  Manual lifecycle
     /// overrides work with or without an attached controller.
     fn admin(&mut self, cmd: AdminCmd) -> AdminOutcome {
-        let known = |core: &FleetCore<Pending, Sender<Completion>>, id: usize| {
+        let known = |core: &FleetCore<Pending, Responder>, id: usize| {
             core.replica_state(id).filter(|&s| s != ReplicaState::Removed)
         };
         match cmd {
@@ -557,20 +588,23 @@ impl Scheduler {
             return;
         }
         let accepting = self.core.has_accepting();
-        for (id, prefill, o, done, requeue) in self.core.drain_lost() {
+        for (id, prefill, o, resp, requeue) in self.core.drain_lost() {
             if requeue && accepting {
                 let req = CompletionRequest {
                     id,
                     prompt_tokens: vec![0; prefill.max(1.0) as usize],
                     max_tokens: o.max(1) as u32,
                 };
-                self.core.resubmit(prefill, round, Pending { req, done });
+                self.core.resubmit(prefill, round, Pending { req, resp });
             } else {
                 if requeue {
                     // Granted a retry but nowhere to run it: shed.
                     self.core.note_shed(id);
                 }
-                drop(done);
+                // Dropping the responder fails the blocked complete()
+                // call (or fires a streamed sink's terminal failure).
+                self.streams.remove(&id);
+                drop(resp);
             }
         }
     }
@@ -606,7 +640,7 @@ impl Scheduler {
         // (lifecycle adds use the fleet default), so global worker ids
         // stay `replica·G + worker`.
         let g = self.cfg.g;
-        let mut out: Vec<FleetFinished<Sender<Completion>>> = Vec::new();
+        let mut out: Vec<FleetFinished<Responder>> = Vec::new();
         'outer: loop {
             // Park while idle, then hold the batching window open.
             // Also park when *stalled* — work sits in overflow but no
@@ -676,10 +710,27 @@ impl Scheduler {
             self.core.run_round(
                 &|_, p: Pending| {
                     let o = u64::from(p.req.max_tokens.max(1));
-                    (p.req.id, o, p.done)
+                    (p.req.id, o, p.resp)
                 },
                 &mut out,
             );
+
+            // Per-round token deltas for streamed requests still active
+            // (completions flush their remainder below).  Disjoint
+            // field borrows: `streams` mutable, `core` shared.
+            if !self.streams.is_empty() {
+                let streams = &mut self.streams;
+                self.core.for_each_active(|id, done, clock| {
+                    if let Some(prog) = streams.get_mut(&id) {
+                        if done > prog.emitted {
+                            let toks: Vec<i32> =
+                                (prog.emitted..done).map(|j| gen_token(id, j)).collect();
+                            prog.sink.delta(toks, clock);
+                            prog.emitted = done;
+                        }
+                    }
+                });
+            }
 
             // Publish before answering so a client that sees its
             // completion then reads /metrics sees itself counted.
@@ -702,7 +753,7 @@ impl Scheduler {
                 } else {
                     0.0
                 };
-                let _ = f.payload.send(Completion {
+                let completion = Completion {
                     id: f.id,
                     worker: f.replica * g + f.worker,
                     tokens: gen_tokens(f.id, f.tokens),
@@ -710,7 +761,23 @@ impl Scheduler {
                     queue_wait_s: (f.admit_clock - f.arrival_clock).max(0.0),
                     tpot_s: tpot,
                     latency_s: f.finish_clock - f.arrival_clock,
-                });
+                };
+                match f.payload {
+                    Responder::Blocking(tx) => {
+                        let _ = tx.send(completion);
+                    }
+                    Responder::Stream(sink) => {
+                        if let Some(prog) = self.streams.remove(&f.id) {
+                            if f.tokens > prog.emitted {
+                                let toks: Vec<i32> = (prog.emitted..f.tokens)
+                                    .map(|j| gen_token(f.id, j))
+                                    .collect();
+                                sink.delta(toks, f.finish_clock);
+                            }
+                        }
+                        sink.finish(completion);
+                    }
+                }
             }
 
             if !self.cfg.step_delay.is_zero() && !self.core.is_idle() {
@@ -919,6 +986,96 @@ mod tests {
         let per: u64 = be.workers().iter().map(|w| w.completed).sum();
         assert_eq!(per, n);
         assert_eq!(st.total_tokens, 3 * n);
+    }
+
+    use crate::gateway::backend::{StreamConsumer, StreamEvent};
+
+    struct Chan(Mutex<Sender<(u64, StreamEvent)>>);
+    impl StreamConsumer for Chan {
+        fn event(&self, _conn: u64, seq: u64, ev: StreamEvent) {
+            let _ = self.0.lock().unwrap().send((seq, ev));
+        }
+    }
+
+    fn collect_stream(
+        rx: &Receiver<(u64, StreamEvent)>,
+        n: usize,
+    ) -> HashMap<u64, (Vec<i32>, Completion)> {
+        let mut toks: HashMap<u64, Vec<i32>> = HashMap::new();
+        let mut done: HashMap<u64, (Vec<i32>, Completion)> = HashMap::new();
+        while done.len() < n {
+            let (seq, ev) = rx
+                .recv_timeout(Duration::from_secs(20))
+                .expect("stream event before timeout");
+            match ev {
+                StreamEvent::Delta { tokens, .. } => {
+                    toks.entry(seq).or_default().extend(tokens)
+                }
+                StreamEvent::Done(c) => {
+                    let t = toks.remove(&seq).unwrap_or_default();
+                    done.insert(seq, (t, c));
+                }
+                StreamEvent::Failed(e) => panic!("stream {seq} failed: {e}"),
+            }
+        }
+        done
+    }
+
+    #[test]
+    fn streamed_fleet_completions_deliver_all_tokens() {
+        let be = FleetBackend::new(fast_cfg("wrr", "jsq")).unwrap();
+        assert!(be.supports_streaming());
+        let (tx, rx) = channel();
+        let consumer = Arc::new(Chan(Mutex::new(tx)));
+        for id in 0..4u64 {
+            let sink = StreamSink::new(1, id, true, consumer.clone() as Arc<dyn StreamConsumer>);
+            be.submit_stream(
+                CompletionRequest {
+                    id,
+                    prompt_tokens: vec![0; 2 + id as usize],
+                    max_tokens: 4,
+                },
+                sink,
+            )
+            .unwrap();
+        }
+        let done = collect_stream(&rx, 4);
+        for id in 0..4u64 {
+            let (toks, c) = &done[&id];
+            assert_eq!(c.id, id);
+            assert_eq!(c.n_tokens, 4);
+            assert_eq!(toks, &gen_tokens(id, 4), "deltas concatenate to the full output");
+            assert_eq!(&c.tokens, toks);
+        }
+    }
+
+    #[test]
+    fn streamed_requests_survive_crash_requeue() {
+        // A crash mid-decode requeues in-flight streams; the emitted
+        // watermark must prevent duplicate tokens while the terminal
+        // flush fills any gap — concatenation stays exact.
+        let cfg = FleetBackendConfig {
+            faults: Some(FaultPlan::parse("crash@2:r0,recover@500:r0").unwrap()),
+            ..fast_cfg("low", "jsq")
+        };
+        let be = FleetBackend::new(cfg).unwrap();
+        let (tx, rx) = channel();
+        let consumer = Arc::new(Chan(Mutex::new(tx)));
+        for id in 0..6u64 {
+            let sink = StreamSink::new(2, id, true, consumer.clone() as Arc<dyn StreamConsumer>);
+            be.submit_stream(
+                CompletionRequest { id, prompt_tokens: vec![0; 3], max_tokens: 3 },
+                sink,
+            )
+            .unwrap();
+        }
+        let done = collect_stream(&rx, 6);
+        for id in 0..6u64 {
+            let (toks, c) = &done[&id];
+            assert_eq!(c.n_tokens, 3);
+            assert_eq!(toks, &gen_tokens(id, 3), "no duplicates, no gaps after requeue");
+        }
+        assert_eq!(be.stats().crashes, 1);
     }
 
     #[test]

@@ -1356,6 +1356,22 @@ impl<T, P> FleetCore<T, P> {
         let _ = id;
     }
 
+    /// Visit every in-flight request across all live replicas as
+    /// `(id, tokens_done, replica_clock_s)`.  `tokens_done` is the
+    /// number of decode steps the request has executed on its replica's
+    /// engine — the gateway's streaming hook reads this after each
+    /// round to emit SSE token deltas.  Crash-requeued requests restart
+    /// at age 0; the caller's emitted-watermark must only grow.
+    pub fn for_each_active<F: FnMut(u64, u64, f64)>(&self, mut f: F) {
+        for slot in &self.slots {
+            if slot.state == ReplicaState::Removed {
+                continue;
+            }
+            let clock = slot.recorder.clock();
+            slot.engine.for_each_active(|id, _worker, done, _o| f(id, done, clock));
+        }
+    }
+
     /// Route a lost-and-requeued request back into the fleet.  Unlike
     /// [`FleetCore::submit`] it does not count a new submission: the id
     /// already exists in the conservation ledger's domain.

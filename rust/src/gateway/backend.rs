@@ -10,6 +10,10 @@
 //! Both route admissions through the same [`crate::policies::Policy`]
 //! registry, so BF-IO vs JSQ vs FCFS can be compared over real sockets.
 
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::Sender;
+use std::sync::Arc;
+
 use anyhow::{bail, Result};
 
 use crate::autoscale::ControllerState;
@@ -149,6 +153,128 @@ pub struct BackendStats {
     pub regret: RegretAudit,
 }
 
+/// One streaming event for a request submitted via
+/// [`Backend::submit_stream`].
+#[derive(Clone, Debug)]
+pub enum StreamEvent {
+    /// Newly generated tokens since the last delta, in order, plus the
+    /// backend clock at emission time.
+    Delta { tokens: Vec<i32>, clock_s: f64 },
+    /// Terminal: the request finished; carries the full completion
+    /// record (scores, worker, and the complete token list).
+    Done(Completion),
+    /// Terminal: the request was shed or failed inside the backend.
+    Failed(String),
+}
+
+/// Receives [`StreamEvent`]s for in-flight streamed requests.  The
+/// reactor implements this with an event inbox + poller wakeup; events
+/// for one `(conn, seq)` arrive in order, ending with exactly one
+/// terminal event.
+pub trait StreamConsumer: Send + Sync {
+    fn event(&self, conn: u64, seq: u64, ev: StreamEvent);
+}
+
+struct SinkShared {
+    conn: u64,
+    seq: u64,
+    deltas: bool,
+    consumer: Arc<dyn StreamConsumer>,
+    finished: AtomicBool,
+}
+
+impl Drop for SinkShared {
+    fn drop(&mut self) {
+        // A backend that drops the sink without a terminal event (crash
+        // shed, scheduler teardown, submit error) still resolves the
+        // request: the consumer sees a failure and can answer 503.
+        if !self.finished.swap(true, Ordering::AcqRel) {
+            self.consumer.event(
+                self.conn,
+                self.seq,
+                StreamEvent::Failed("stream dropped by backend".to_string()),
+            );
+        }
+    }
+}
+
+/// Per-request handle a backend uses to push tokens and the terminal
+/// completion back to the gateway.  Clone-able; the first terminal
+/// event wins and later ones are ignored.
+#[derive(Clone)]
+pub struct StreamSink {
+    shared: Arc<SinkShared>,
+}
+
+impl StreamSink {
+    pub fn new(conn: u64, seq: u64, deltas: bool, consumer: Arc<dyn StreamConsumer>) -> StreamSink {
+        StreamSink {
+            shared: Arc::new(SinkShared {
+                conn,
+                seq,
+                deltas,
+                consumer,
+                finished: AtomicBool::new(false),
+            }),
+        }
+    }
+
+    /// Whether the consumer wants per-step [`StreamEvent::Delta`]s.
+    /// When false the backend may skip token emission and only send the
+    /// terminal event (a non-streamed request on the reactor path).
+    pub fn wants_deltas(&self) -> bool {
+        self.shared.deltas
+    }
+
+    pub fn delta(&self, tokens: Vec<i32>, clock_s: f64) {
+        if tokens.is_empty() || self.shared.finished.load(Ordering::Acquire) {
+            return;
+        }
+        self.shared.consumer.event(
+            self.shared.conn,
+            self.shared.seq,
+            StreamEvent::Delta { tokens, clock_s },
+        );
+    }
+
+    pub fn finish(&self, c: Completion) {
+        if !self.shared.finished.swap(true, Ordering::AcqRel) {
+            self.shared
+                .consumer
+                .event(self.shared.conn, self.shared.seq, StreamEvent::Done(c));
+        }
+    }
+
+    pub fn fail(&self, reason: &str) {
+        if !self.shared.finished.swap(true, Ordering::AcqRel) {
+            self.shared.consumer.event(
+                self.shared.conn,
+                self.shared.seq,
+                StreamEvent::Failed(reason.to_string()),
+            );
+        }
+    }
+}
+
+/// How a backend scheduler answers a request: the legacy blocking
+/// channel (used by [`Backend::complete`]) or a streaming sink.
+pub enum Responder {
+    Blocking(Sender<Completion>),
+    Stream(StreamSink),
+}
+
+impl Responder {
+    /// Resolve with a finished completion.
+    pub fn finish(self, c: Completion) {
+        match self {
+            Responder::Blocking(tx) => {
+                let _ = tx.send(c);
+            }
+            Responder::Stream(sink) => sink.finish(c),
+        }
+    }
+}
+
 /// A replica-lifecycle administration command
 /// (`POST /v0/admin/replicas`).
 #[derive(Clone, Debug)]
@@ -249,5 +375,79 @@ pub trait Backend: Send + Sync {
     /// enabled — the gateway answers `404`.
     fn journal_jsonl(&self) -> Option<String> {
         None
+    }
+
+    /// Whether [`Backend::submit_stream`] is implemented.  When false
+    /// the reactor falls back to [`Backend::complete`] on an executor
+    /// thread (no per-token deltas; SSE responses arrive as one burst).
+    fn supports_streaming(&self) -> bool {
+        false
+    }
+
+    /// Submit a request without blocking; progress and the terminal
+    /// completion arrive through `sink`.  Backends that return `Ok(())`
+    /// own the sink and must eventually resolve it (dropping it counts
+    /// as failure).  Errors for backends without streaming support.
+    fn submit_stream(&self, req: CompletionRequest, sink: StreamSink) -> Result<()> {
+        drop(sink);
+        bail!("backend {} does not support streaming", req.id)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Mutex;
+
+    struct Capture {
+        events: Mutex<Vec<(u64, u64, StreamEvent)>>,
+    }
+
+    impl StreamConsumer for Capture {
+        fn event(&self, conn: u64, seq: u64, ev: StreamEvent) {
+            self.events.lock().unwrap().push((conn, seq, ev));
+        }
+    }
+
+    fn completion(id: u64) -> Completion {
+        Completion {
+            id,
+            worker: 0,
+            tokens: vec![1, 2],
+            n_tokens: 2,
+            queue_wait_s: 0.0,
+            tpot_s: 0.1,
+            latency_s: 0.2,
+        }
+    }
+
+    #[test]
+    fn dropped_sink_emits_failure() {
+        let cap = Arc::new(Capture {
+            events: Mutex::new(Vec::new()),
+        });
+        let sink = StreamSink::new(3, 9, true, cap.clone() as Arc<dyn StreamConsumer>);
+        drop(sink);
+        let events = cap.events.lock().unwrap();
+        assert_eq!(events.len(), 1);
+        assert_eq!((events[0].0, events[0].1), (3, 9));
+        assert!(matches!(events[0].2, StreamEvent::Failed(_)));
+    }
+
+    #[test]
+    fn first_terminal_event_wins() {
+        let cap = Arc::new(Capture {
+            events: Mutex::new(Vec::new()),
+        });
+        let sink = StreamSink::new(1, 1, true, cap.clone() as Arc<dyn StreamConsumer>);
+        sink.delta(vec![5], 0.5);
+        sink.finish(completion(1));
+        sink.fail("late failure must be ignored");
+        sink.delta(vec![6], 0.6);
+        drop(sink);
+        let events = cap.events.lock().unwrap();
+        assert_eq!(events.len(), 2);
+        assert!(matches!(events[0].2, StreamEvent::Delta { .. }));
+        assert!(matches!(events[1].2, StreamEvent::Done(_)));
     }
 }

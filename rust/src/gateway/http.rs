@@ -7,7 +7,7 @@
 
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::TcpStream;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Context, Result};
 
@@ -57,6 +57,77 @@ impl HttpRequest {
     pub fn body_str(&self) -> Result<&str> {
         std::str::from_utf8(&self.body).context("request body is not utf-8")
     }
+
+    /// HTTP/1.1 default: persistent unless the client asked to close.
+    pub fn keep_alive(&self) -> bool {
+        !matches!(self.header("connection"), Some(v) if v.eq_ignore_ascii_case("close"))
+    }
+}
+
+/// The parsed request line + headers of one request (reactor path);
+/// the body is read separately once `content_length` is known.
+#[derive(Clone, Debug)]
+pub struct ParsedHead {
+    pub method: String,
+    pub target: String,
+    pub headers: Vec<(String, String)>,
+    pub content_length: usize,
+    pub keep_alive: bool,
+}
+
+/// Parse a complete request head (everything before the blank line,
+/// exclusive).  `head` must not include the terminating `\r\n\r\n`.
+/// Used by the reactor's incremental per-connection state machine;
+/// errors map to `400 Bad Request`.
+pub fn parse_head(head: &[u8]) -> Result<ParsedHead> {
+    let text = std::str::from_utf8(head).context("request head is not utf-8")?;
+    let mut lines = text.split("\r\n");
+    let request_line = lines.next().unwrap_or("");
+    let mut parts = request_line.split_whitespace();
+    let method = parts
+        .next()
+        .filter(|m| !m.is_empty() && m.chars().all(|c| c.is_ascii_uppercase()))
+        .ok_or_else(|| anyhow!("bad request line {request_line:?}"))?
+        .to_string();
+    let target = parts
+        .next()
+        .ok_or_else(|| anyhow!("missing request target"))?
+        .to_string();
+    let version = parts.next().unwrap_or("HTTP/1.1");
+    if !version.starts_with("HTTP/1.") {
+        bail!("unsupported protocol {version:?}");
+    }
+
+    let mut headers = Vec::new();
+    let mut content_length = 0usize;
+    let mut keep_alive = true;
+    for line in lines {
+        if line.is_empty() {
+            continue;
+        }
+        let (k, v) = line
+            .split_once(':')
+            .ok_or_else(|| anyhow!("malformed header line {line:?}"))?;
+        let k = k.trim();
+        let v = v.trim();
+        if k.is_empty() {
+            bail!("empty header name");
+        }
+        if k.eq_ignore_ascii_case("content-length") {
+            content_length = v.parse().context("bad content-length")?;
+        }
+        if k.eq_ignore_ascii_case("connection") && v.eq_ignore_ascii_case("close") {
+            keep_alive = false;
+        }
+        headers.push((k.to_string(), v.to_string()));
+    }
+    Ok(ParsedHead {
+        method,
+        target,
+        headers,
+        content_length,
+        keep_alive,
+    })
 }
 
 /// Read one request from the stream (blocking, with the stream's
@@ -117,11 +188,51 @@ fn reason(status: u16) -> &'static str {
         400 => "Bad Request",
         404 => "Not Found",
         405 => "Method Not Allowed",
+        408 => "Request Timeout",
+        413 => "Payload Too Large",
+        429 => "Too Many Requests",
+        431 => "Request Header Fields Too Large",
         500 => "Internal Server Error",
         501 => "Not Implemented",
         503 => "Service Unavailable",
         _ => "Unknown",
     }
+}
+
+/// Serialize a full response to bytes (reactor path: responses are
+/// queued on the connection's write buffer, not written inline).
+pub fn response_bytes(
+    status: u16,
+    content_type: &str,
+    extra_headers: &[(&str, &str)],
+    body: &[u8],
+    keep_alive: bool,
+) -> Vec<u8> {
+    let mut head = format!(
+        "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\nConnection: {}\r\n",
+        status,
+        reason(status),
+        content_type,
+        body.len(),
+        if keep_alive { "keep-alive" } else { "close" }
+    );
+    for (k, v) in extra_headers {
+        head.push_str(k);
+        head.push_str(": ");
+        head.push_str(v);
+        head.push_str("\r\n");
+    }
+    head.push_str("\r\n");
+    let mut out = head.into_bytes();
+    out.extend_from_slice(body);
+    out
+}
+
+/// Response head for an SSE stream: no `Content-Length` (the stream
+/// ends when the server closes), so the connection cannot be reused.
+pub fn sse_head_bytes() -> Vec<u8> {
+    b"HTTP/1.1 200 OK\r\nContent-Type: text/event-stream\r\nCache-Control: no-cache\r\nConnection: close\r\n\r\n"
+        .to_vec()
 }
 
 /// Write one response and flush; the connection is then done
@@ -201,35 +312,17 @@ pub fn authority_of(url: &str) -> Result<String> {
     Ok(authority.to_string())
 }
 
-/// One blocking HTTP call: connect, send, read the full response.
-/// `authority` is `host:port`.
-pub fn http_call(
-    authority: &str,
-    method: &str,
-    path: &str,
-    body: Option<&str>,
-) -> Result<HttpResponse> {
-    let stream =
-        TcpStream::connect(authority).with_context(|| format!("connect {authority}"))?;
-    stream.set_nodelay(true).ok();
-    stream
-        .set_read_timeout(Some(Duration::from_secs(60)))
-        .ok();
-    let mut stream = stream;
-    let body_bytes = body.unwrap_or("").as_bytes();
-    let head = format!(
-        "{method} {path} HTTP/1.1\r\nHost: {authority}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
-        body_bytes.len()
-    );
-    stream.write_all(head.as_bytes())?;
-    if !body_bytes.is_empty() {
-        stream.write_all(body_bytes)?;
-    }
-    stream.flush()?;
-
-    let mut reader = BufReader::new(stream);
+/// Read one response head: status line + headers.  Returns the status,
+/// headers, `Content-Length` (if present), and whether the server will
+/// keep the connection open afterwards.
+fn read_response_head(
+    reader: &mut BufReader<TcpStream>,
+) -> Result<(u16, Vec<(String, String)>, Option<usize>, bool)> {
     let mut line = String::new();
     reader.read_line(&mut line).context("read status line")?;
+    if line.is_empty() {
+        bail!("connection closed before response");
+    }
     let status: u16 = line
         .split_whitespace()
         .nth(1)
@@ -237,6 +330,7 @@ pub fn http_call(
         .ok_or_else(|| anyhow!("bad status line {line:?}"))?;
     let mut content_length: Option<usize> = None;
     let mut headers: Vec<(String, String)> = Vec::new();
+    let mut keep_alive = true;
     loop {
         let mut h = String::new();
         let n = reader.read_line(&mut h).context("read response header")?;
@@ -253,22 +347,182 @@ pub fn http_call(
             if k.eq_ignore_ascii_case("content-length") {
                 content_length = v.parse().ok();
             }
+            if k.eq_ignore_ascii_case("connection") && v.eq_ignore_ascii_case("close") {
+                keep_alive = false;
+            }
             headers.push((k.to_string(), v.to_string()));
         }
     }
+    Ok((status, headers, content_length, keep_alive))
+}
+
+fn read_response(reader: &mut BufReader<TcpStream>) -> Result<(HttpResponse, bool)> {
+    let (status, headers, content_length, keep_alive) = read_response_head(reader)?;
     let mut body = Vec::new();
-    match content_length {
+    let reusable = match content_length {
         Some(n) => {
             body = vec![0u8; n];
             reader.read_exact(&mut body).context("read response body")?;
+            keep_alive
         }
         None => {
+            // No framing — the body runs to EOF, so the connection is
+            // spent regardless of the Connection header.
             reader
                 .read_to_end(&mut body)
                 .context("read response body to eof")?;
+            false
+        }
+    };
+    Ok((HttpResponse { status, headers, body }, reusable))
+}
+
+fn connect(authority: &str) -> Result<TcpStream> {
+    let stream = TcpStream::connect(authority).with_context(|| format!("connect {authority}"))?;
+    stream.set_nodelay(true).ok();
+    stream.set_read_timeout(Some(Duration::from_secs(60))).ok();
+    Ok(stream)
+}
+
+fn write_request(
+    stream: &mut TcpStream,
+    authority: &str,
+    method: &str,
+    path: &str,
+    body: &[u8],
+    keep_alive: bool,
+) -> Result<()> {
+    let head = format!(
+        "{method} {path} HTTP/1.1\r\nHost: {authority}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: {}\r\n\r\n",
+        body.len(),
+        if keep_alive { "keep-alive" } else { "close" }
+    );
+    stream.write_all(head.as_bytes())?;
+    if !body.is_empty() {
+        stream.write_all(body)?;
+    }
+    stream.flush()?;
+    Ok(())
+}
+
+/// One blocking HTTP call: connect, send, read the full response.
+/// `authority` is `host:port`.
+pub fn http_call(
+    authority: &str,
+    method: &str,
+    path: &str,
+    body: Option<&str>,
+) -> Result<HttpResponse> {
+    let mut stream = connect(authority)?;
+    let body_bytes = body.unwrap_or("").as_bytes();
+    write_request(&mut stream, authority, method, path, body_bytes, false)?;
+    let mut reader = BufReader::new(stream);
+    let (resp, _) = read_response(&mut reader)?;
+    Ok(resp)
+}
+
+/// A persistent keep-alive client: one connection reused across calls,
+/// reconnecting transparently when the server closes it.  This is what
+/// a loadgen "connection" is — `N` concurrent `HttpClient`s ≙ `N` open
+/// sockets against the reactor.
+pub struct HttpClient {
+    authority: String,
+    reader: Option<BufReader<TcpStream>>,
+}
+
+impl HttpClient {
+    pub fn new(authority: &str) -> HttpClient {
+        HttpClient {
+            authority: authority.to_string(),
+            reader: None,
         }
     }
-    Ok(HttpResponse { status, headers, body })
+
+    fn call_once(&mut self, method: &str, path: &str, body: &[u8]) -> Result<HttpResponse> {
+        if self.reader.is_none() {
+            self.reader = Some(BufReader::new(connect(&self.authority)?));
+        }
+        let reader = self.reader.as_mut().unwrap();
+        write_request(reader.get_mut(), &self.authority, method, path, body, true)?;
+        let (resp, reusable) = read_response(reader)?;
+        if !reusable {
+            self.reader = None;
+        }
+        Ok(resp)
+    }
+
+    /// Send one request on the persistent connection.  A failure on a
+    /// *reused* connection (the server may have idle-closed it between
+    /// calls) retries once on a fresh connection.
+    pub fn call(&mut self, method: &str, path: &str, body: Option<&str>) -> Result<HttpResponse> {
+        let body_bytes = body.unwrap_or("").as_bytes();
+        let had_conn = self.reader.is_some();
+        match self.call_once(method, path, body_bytes) {
+            Ok(resp) => Ok(resp),
+            Err(e) if had_conn => {
+                self.reader = None;
+                self.call_once(method, path, body_bytes)
+                    .with_context(|| format!("retry after reuse failure: {e}"))
+            }
+            Err(e) => Err(e),
+        }
+    }
+}
+
+/// Result of one SSE call: the `data:` payloads in arrival order, each
+/// stamped with its arrival instant (TTFT = first event's stamp).
+#[derive(Clone, Debug)]
+pub struct SseResult {
+    pub status: u16,
+    pub headers: Vec<(String, String)>,
+    /// `data:` payloads, the `[DONE]` terminator excluded.
+    pub events: Vec<(String, Instant)>,
+    /// For non-200 responses: the (JSON) error body.
+    pub body: Vec<u8>,
+    /// Whether the stream ended with the `[DONE]` terminator.
+    pub done: bool,
+}
+
+/// POST an SSE request and consume the stream to its `[DONE]`
+/// terminator (or EOF).  Non-200 responses are read as regular bodies
+/// and returned with empty `events` — shed (429/503) stays observable.
+pub fn sse_call(authority: &str, path: &str, body: &str) -> Result<SseResult> {
+    let mut stream = connect(authority)?;
+    write_request(&mut stream, authority, "POST", path, body.as_bytes(), false)?;
+    let mut reader = BufReader::new(stream);
+    let (status, headers, content_length, _) = read_response_head(&mut reader)?;
+    if status != 200 {
+        let mut body = Vec::new();
+        match content_length {
+            Some(n) => {
+                body = vec![0u8; n];
+                reader.read_exact(&mut body).context("read error body")?;
+            }
+            None => {
+                reader.read_to_end(&mut body).context("read error body")?;
+            }
+        }
+        return Ok(SseResult { status, headers, events: Vec::new(), body, done: false });
+    }
+    let mut events = Vec::new();
+    let mut done = false;
+    loop {
+        let mut line = String::new();
+        let n = reader.read_line(&mut line).context("read sse line")?;
+        if n == 0 {
+            break;
+        }
+        let t = line.trim_end();
+        if let Some(payload) = t.strip_prefix("data:") {
+            let payload = payload.trim_start();
+            if payload == "[DONE]" {
+                done = true;
+                break;
+            }
+            events.push((payload.to_string(), Instant::now()));
+        }
+    }
+    Ok(SseResult { status, headers, events, body: Vec::new(), done })
 }
 
 #[cfg(test)]
@@ -331,6 +585,86 @@ mod tests {
         .unwrap();
         assert_eq!(resp.status, 200);
         assert_eq!(resp.body_str().unwrap(), "{\"a\": 1}");
+        server.join().unwrap();
+    }
+
+    #[test]
+    fn parse_head_roundtrip() {
+        let head = b"POST /v1/completions?stream=true HTTP/1.1\r\nHost: x\r\nContent-Length: 12\r\nConnection: close";
+        let parsed = parse_head(head).unwrap();
+        assert_eq!(parsed.method, "POST");
+        assert_eq!(parsed.target, "/v1/completions?stream=true");
+        assert_eq!(parsed.content_length, 12);
+        assert!(!parsed.keep_alive);
+
+        let ka = parse_head(b"GET /healthz HTTP/1.1\r\nHost: x").unwrap();
+        assert!(ka.keep_alive);
+        assert_eq!(ka.content_length, 0);
+    }
+
+    #[test]
+    fn parse_head_rejects_garbage() {
+        assert!(parse_head(b"").is_err());
+        assert!(parse_head(b"garbage").is_err());
+        assert!(parse_head(b"get lowercase HTTP/1.1").is_err());
+        assert!(parse_head(b"GET /x SMTP/1.0").is_err());
+        assert!(parse_head(b"GET /x HTTP/1.1\r\nno-colon-header").is_err());
+        assert!(parse_head(b"GET /x HTTP/1.1\r\nContent-Length: abc").is_err());
+        assert!(parse_head(b"\xff\xfe\x00").is_err());
+    }
+
+    #[test]
+    fn response_bytes_framing() {
+        let ka = response_bytes(200, "text/plain", &[], b"hi", true);
+        let text = String::from_utf8(ka).unwrap();
+        assert!(text.starts_with("HTTP/1.1 200 OK\r\n"));
+        assert!(text.contains("Connection: keep-alive\r\n"));
+        assert!(text.contains("Content-Length: 2\r\n"));
+        assert!(text.ends_with("\r\n\r\nhi"));
+
+        let close = response_bytes(429, "application/json", &[("Retry-After", "1")], b"{}", false);
+        let text = String::from_utf8(close).unwrap();
+        assert!(text.starts_with("HTTP/1.1 429 Too Many Requests\r\n"));
+        assert!(text.contains("Connection: close\r\n"));
+        assert!(text.contains("Retry-After: 1\r\n"));
+
+        let sse = String::from_utf8(sse_head_bytes()).unwrap();
+        assert!(sse.contains("text/event-stream"));
+        assert!(!sse.contains("Content-Length"));
+    }
+
+    #[test]
+    fn keep_alive_client_reuses_one_connection() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let server = std::thread::spawn(move || {
+            // One accepted connection serves both requests.
+            let (stream, _) = listener.accept().unwrap();
+            let mut reader = BufReader::new(stream.try_clone().unwrap());
+            let mut stream = stream;
+            for i in 0..2u8 {
+                let mut head = Vec::new();
+                loop {
+                    let mut line = String::new();
+                    reader.read_line(&mut line).unwrap();
+                    let t = line.trim_end();
+                    if t.is_empty() {
+                        break;
+                    }
+                    head.push(t.to_string());
+                }
+                assert!(head[0].starts_with("GET /ping"));
+                let body = format!("pong{i}");
+                let out = response_bytes(200, "text/plain", &[], body.as_bytes(), true);
+                stream.write_all(&out).unwrap();
+                stream.flush().unwrap();
+            }
+        });
+        let mut client = HttpClient::new(&addr.to_string());
+        let a = client.call("GET", "/ping", None).unwrap();
+        assert_eq!(a.body_str().unwrap(), "pong0");
+        let b = client.call("GET", "/ping", None).unwrap();
+        assert_eq!(b.body_str().unwrap(), "pong1");
         server.join().unwrap();
     }
 

@@ -1,8 +1,21 @@
-//! Closed-loop HTTP load generator: `concurrency` client threads each
-//! replay requests against a gateway's `/v1/completions` endpoint as
-//! fast as responses come back, then the per-policy results are folded
-//! into the same [`Report`] table the simulator prints — so `bfio sim`,
-//! `bfio serve`, and a live gateway are comparable line by line.
+//! HTTP load generator for the gateway's `/v1/completions` endpoint.
+//!
+//! Two arrival modes:
+//! - **closed loop** (default): `concurrency` client threads each hold
+//!   one keep-alive connection and fire the next request as soon as the
+//!   previous response lands — so `concurrency` ≙ open connections;
+//! - **open loop** (`rate: Some(r)`): request `i` is *due* at
+//!   `t0 + i/r` regardless of how fast earlier responses came back,
+//!   which is what exposes queueing collapse under overload.
+//!
+//! With `stream: true` requests go out as SSE (`"stream": true`) and
+//! TTFT is measured at the first `data:` event — the first byte of
+//! generated text, not the end of the response.
+//!
+//! Results fold into the same [`Report`] table the simulator prints —
+//! so `bfio sim`, `bfio serve`, and a live gateway are comparable line
+//! by line.  [`sweep`] repeats one workload across a `--connections`
+//! ladder and yields the `BENCH_gateway.json` rows.
 //!
 //! Workload shapes come either from a recorded trace (`--trace`, the
 //! JSONL format of [`crate::workload::trace`]) or from a seeded uniform
@@ -12,7 +25,7 @@ use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::channel;
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Context, Result};
 
@@ -22,7 +35,7 @@ use crate::util::rng::Rng;
 use crate::util::stats;
 use crate::workload::Request;
 
-use super::http::http_call;
+use super::http::{http_call, sse_call, HttpClient};
 
 /// Load-generator configuration.
 #[derive(Clone, Debug)]
@@ -41,6 +54,11 @@ pub struct LoadGenConfig {
     /// Replay these request shapes instead of sampling (cycled if
     /// shorter than `requests`).
     pub trace: Option<Vec<Request>>,
+    /// Request SSE streaming (`"stream": true`) and measure TTFT at
+    /// the first `data:` event.
+    pub stream: bool,
+    /// Open-loop arrival rate in requests/s; `None` = closed loop.
+    pub rate: Option<f64>,
 }
 
 impl Default for LoadGenConfig {
@@ -53,6 +71,8 @@ impl Default for LoadGenConfig {
             max_tokens: 16,
             seed: 0,
             trace: None,
+            stream: false,
+            rate: None,
         }
     }
 }
@@ -64,6 +84,9 @@ struct PerRequest {
     tokens: u64,
     /// Client-side wall latency.
     latency_s: f64,
+    /// Client-side time to first token: first SSE `data:` event for
+    /// streamed requests, `None` for non-streamed ones.
+    ttft_s: Option<f64>,
     /// Server-reported (backend clock) figures.
     tpot_s: f64,
     queue_wait_s: f64,
@@ -72,7 +95,8 @@ struct PerRequest {
 /// What one client-observed request came back as.
 enum Outcome {
     Done(PerRequest),
-    /// Gateway shed the request (503 after exhausting its retries).
+    /// Gateway shed the request (429 at the admission watermark or 503
+    /// at the connection cap / during drain / after retry exhaustion).
     Shed(String),
     Failed(String),
 }
@@ -83,8 +107,8 @@ pub struct LoadGenResult {
     pub completed: usize,
     /// Transport / protocol failures (not sheds).
     pub errors: usize,
-    /// 503 sheds — the gateway's graceful-degradation path, counted
-    /// separately from hard errors.
+    /// 429/503 sheds — the gateway's graceful-degradation path,
+    /// counted separately from hard errors.
     pub sheds: usize,
     /// Server-side completion retries during this run
     /// (`bfio_gateway_retries_total` diff).
@@ -94,6 +118,8 @@ pub struct LoadGenResult {
     /// Total generated tokens (server-reported).
     pub tokens: u64,
     pub latencies_s: Vec<f64>,
+    /// Time-to-first-token samples (streamed requests only).
+    pub ttfts_s: Vec<f64>,
     pub tpots_s: Vec<f64>,
     pub queue_waits_s: Vec<f64>,
     /// Completions per worker id.
@@ -148,15 +174,31 @@ pub fn run(cfg: &LoadGenConfig) -> Result<LoadGenResult> {
         let cursor = Arc::clone(&cursor);
         let tx = tx.clone();
         let authority = cfg.authority.clone();
-        handles.push(std::thread::spawn(move || loop {
-            let i = cursor.fetch_add(1, Ordering::SeqCst);
-            if i >= items.len() {
-                break;
-            }
-            let (plen, dec) = items[i];
-            let outcome = one_request(&authority, i, plen, dec);
-            if tx.send(outcome).is_err() {
-                break;
+        let stream = cfg.stream;
+        let rate = cfg.rate;
+        handles.push(std::thread::spawn(move || {
+            // One keep-alive connection per client thread — this is
+            // what a loadgen "connection" means.
+            let mut client = HttpClient::new(&authority);
+            loop {
+                let i = cursor.fetch_add(1, Ordering::SeqCst);
+                if i >= items.len() {
+                    break;
+                }
+                if let Some(r) = rate {
+                    // Open loop: request i is due at t0 + i/r no
+                    // matter how fast earlier responses came back.
+                    let due = t0 + Duration::from_secs_f64(i as f64 / r.max(1e-9));
+                    let now = Instant::now();
+                    if due > now {
+                        std::thread::sleep(due - now);
+                    }
+                }
+                let (plen, dec) = items[i];
+                let outcome = one_request(&mut client, &authority, i, plen, dec, stream);
+                if tx.send(outcome).is_err() {
+                    break;
+                }
             }
         }));
     }
@@ -169,6 +211,9 @@ pub fn run(cfg: &LoadGenConfig) -> Result<LoadGenResult> {
                 res.completed += 1;
                 res.tokens += p.tokens;
                 res.latencies_s.push(p.latency_s);
+                if let Some(t) = p.ttft_s {
+                    res.ttfts_s.push(t);
+                }
                 res.tpots_s.push(p.tpot_s);
                 res.queue_waits_s.push(p.queue_wait_s);
                 *res.per_worker.entry(p.worker).or_insert(0) += 1;
@@ -206,37 +251,46 @@ fn scrape_metrics(authority: &str) -> String {
         .unwrap_or_default()
 }
 
-fn one_request(authority: &str, i: usize, plen: usize, dec: u64) -> Outcome {
-    match one_request_inner(authority, plen, dec) {
+fn one_request(
+    client: &mut HttpClient,
+    authority: &str,
+    i: usize,
+    plen: usize,
+    dec: u64,
+    stream: bool,
+) -> Outcome {
+    let r = if stream {
+        one_request_stream(authority, plen, dec)
+    } else {
+        one_request_blocking(client, plen, dec)
+    };
+    match r {
         Ok(out) => out,
         Err(e) => Outcome::Failed(format!("request {i}: {e:#}")),
     }
 }
 
-fn one_request_inner(authority: &str, plen: usize, dec: u64) -> Result<Outcome> {
-    let body = json::obj(vec![
+fn request_body(plen: usize, dec: u64, stream: bool) -> String {
+    let mut fields = vec![
         (
             "prompt",
             Json::Arr((0..plen).map(|j| Json::Num((j % 997) as f64)).collect()),
         ),
         ("max_tokens", json::num(dec as f64)),
-    ])
-    .to_string();
-    let t0 = Instant::now();
-    let resp = http_call(authority, "POST", "/v1/completions", Some(&body))?;
-    let latency_s = t0.elapsed().as_secs_f64();
-    if resp.status == 503 {
-        // Graceful-degradation shed — not a protocol failure.
-        return Ok(Outcome::Shed(format!(
-            "retry-after={} {}",
-            resp.header("Retry-After").unwrap_or("?"),
-            resp.body_str().unwrap_or("<binary>"),
-        )));
+    ];
+    if stream {
+        fields.push(("stream", Json::Bool(true)));
     }
-    if resp.status != 200 {
-        bail!("status {}: {}", resp.status, resp.body_str().unwrap_or("<binary>"));
-    }
-    let v = Json::parse(resp.body_str()?).map_err(|e| anyhow!("bad response json: {e}"))?;
+    json::obj(fields).to_string()
+}
+
+/// Pull `(worker, tokens, tpot_s, queue_wait_s)` from a completion (or
+/// final SSE chunk) JSON object — both carry the same usage/bfio shape.
+fn parse_done(
+    v: &Json,
+    latency_s: f64,
+    ttft_s: Option<f64>,
+) -> Result<PerRequest> {
     let bfio = v.get("bfio").context("response missing bfio block")?;
     let field = |k: &str| -> Result<f64> {
         bfio.get(k)
@@ -248,13 +302,70 @@ fn one_request_inner(authority: &str, plen: usize, dec: u64) -> Result<Outcome> 
         .and_then(|u| u.get("completion_tokens"))
         .and_then(Json::as_u64)
         .context("response missing usage.completion_tokens")?;
-    Ok(Outcome::Done(PerRequest {
+    Ok(PerRequest {
         worker: field("worker")? as usize,
         tokens,
         latency_s,
+        ttft_s,
         tpot_s: field("tpot_s")?,
         queue_wait_s: field("queue_wait_s")?,
-    }))
+    })
+}
+
+fn one_request_blocking(client: &mut HttpClient, plen: usize, dec: u64) -> Result<Outcome> {
+    let body = request_body(plen, dec, false);
+    let t0 = Instant::now();
+    let resp = client.call("POST", "/v1/completions", Some(&body))?;
+    let latency_s = t0.elapsed().as_secs_f64();
+    if resp.status == 503 || resp.status == 429 {
+        // Graceful-degradation shed — not a protocol failure.
+        return Ok(Outcome::Shed(format!(
+            "status={} retry-after={} {}",
+            resp.status,
+            resp.header("Retry-After").unwrap_or("?"),
+            resp.body_str().unwrap_or("<binary>"),
+        )));
+    }
+    if resp.status != 200 {
+        bail!("status {}: {}", resp.status, resp.body_str().unwrap_or("<binary>"));
+    }
+    let v = Json::parse(resp.body_str()?).map_err(|e| anyhow!("bad response json: {e}"))?;
+    Ok(Outcome::Done(parse_done(&v, latency_s, None)?))
+}
+
+fn one_request_stream(authority: &str, plen: usize, dec: u64) -> Result<Outcome> {
+    let body = request_body(plen, dec, true);
+    let t0 = Instant::now();
+    let res = sse_call(authority, "/v1/completions", &body)?;
+    let latency_s = t0.elapsed().as_secs_f64();
+    if res.status == 503 || res.status == 429 {
+        let retry_after = res
+            .headers
+            .iter()
+            .find(|(k, _)| k.eq_ignore_ascii_case("retry-after"))
+            .map(|(_, v)| v.as_str())
+            .unwrap_or("?");
+        return Ok(Outcome::Shed(format!(
+            "status={} retry-after={} {}",
+            res.status,
+            retry_after,
+            String::from_utf8_lossy(&res.body),
+        )));
+    }
+    if res.status != 200 {
+        bail!("status {}: {}", res.status, String::from_utf8_lossy(&res.body));
+    }
+    if !res.done {
+        bail!("stream ended without data: [DONE] terminator");
+    }
+    let ttft_s = res
+        .events
+        .first()
+        .map(|(_, at)| at.duration_since(t0).as_secs_f64());
+    // The final pre-[DONE] chunk carries usage + bfio.
+    let (last, _) = res.events.last().context("stream carried no data events")?;
+    let v = Json::parse(last).map_err(|e| anyhow!("bad final chunk json: {e}"))?;
+    Ok(Outcome::Done(parse_done(&v, latency_s, ttft_s)?))
 }
 
 /// Extract one sample value from a Prometheus exposition document.
@@ -376,12 +487,95 @@ pub fn print_summary(cfg: &LoadGenConfig, res: &LoadGenResult) {
             stats::mean(&res.tpots_s),
         );
     }
+    if !res.ttfts_s.is_empty() {
+        println!(
+            "  ttft (first SSE byte): mean {:.4}s  p50 {:.4}s  p99 {:.4}s",
+            stats::mean(&res.ttfts_s),
+            stats::percentile(&res.ttfts_s, 50.0),
+            stats::percentile(&res.ttfts_s, 99.0),
+        );
+    }
     let spread: Vec<String> = res
         .per_worker
         .iter()
         .map(|(w, n)| format!("{w}:{n}"))
         .collect();
     println!("  per-worker completions: {}", spread.join(" "));
+}
+
+/// One row of a `--connections` sweep (the `BENCH_gateway.json` shape).
+#[derive(Clone, Debug)]
+pub struct SweepRow {
+    pub connections: usize,
+    pub completed: usize,
+    pub sheds: usize,
+    pub errors: usize,
+    pub wall_s: f64,
+    pub throughput_rps: f64,
+    pub throughput_tps: f64,
+    pub ttft_p50_s: f64,
+    pub ttft_p99_s: f64,
+    pub tpot_p50_s: f64,
+    pub tpot_p99_s: f64,
+}
+
+/// Run the same workload once per connection count.  Connections ==
+/// concurrency: each client thread holds one keep-alive socket.  For
+/// non-streamed runs TTFT falls back to the full wall latency (first
+/// byte and last byte arrive together).
+pub fn sweep(cfg: &LoadGenConfig, connections: &[usize]) -> Result<Vec<SweepRow>> {
+    let mut rows = Vec::new();
+    for &conns in connections {
+        let run_cfg = LoadGenConfig { concurrency: conns.max(1), ..cfg.clone() };
+        let res = run(&run_cfg)?;
+        let ttfts: &[f64] = if res.ttfts_s.is_empty() { &res.latencies_s } else { &res.ttfts_s };
+        rows.push(SweepRow {
+            connections: conns,
+            completed: res.completed,
+            sheds: res.sheds,
+            errors: res.errors,
+            wall_s: res.wall_s,
+            throughput_rps: res.completed as f64 / res.wall_s.max(1e-9),
+            throughput_tps: res.tokens as f64 / res.wall_s.max(1e-9),
+            ttft_p50_s: pct(ttfts, 50.0),
+            ttft_p99_s: pct(ttfts, 99.0),
+            tpot_p50_s: pct(&res.tpots_s, 50.0),
+            tpot_p99_s: pct(&res.tpots_s, 99.0),
+        });
+    }
+    Ok(rows)
+}
+
+fn pct(xs: &[f64], p: f64) -> f64 {
+    if xs.is_empty() {
+        0.0
+    } else {
+        stats::percentile(xs, p)
+    }
+}
+
+/// Table view of a sweep, one line per connection count.
+pub fn print_sweep(rows: &[SweepRow]) {
+    println!(
+        "{:>6} {:>7} {:>5} {:>5} {:>8} {:>9} {:>10} {:>10} {:>10} {:>10}",
+        "conns", "ok", "shed", "err", "req/s", "tok/s", "ttft_p50", "ttft_p99",
+        "tpot_p50", "tpot_p99"
+    );
+    for r in rows {
+        println!(
+            "{:>6} {:>7} {:>5} {:>5} {:>8.1} {:>9.1} {:>10.4} {:>10.4} {:>10.4} {:>10.4}",
+            r.connections,
+            r.completed,
+            r.sheds,
+            r.errors,
+            r.throughput_rps,
+            r.throughput_tps,
+            r.ttft_p50_s,
+            r.ttft_p99_s,
+            r.tpot_p50_s,
+            r.tpot_p99_s,
+        );
+    }
 }
 
 #[cfg(test)]

@@ -24,11 +24,34 @@
 //! live [`crate::coordinator::serve`] stack.  Routing in both goes
 //! through the [`crate::policies::Policy`] registry, so BF-IO vs JSQ vs
 //! FCFS is comparable over real sockets; [`loadgen`] closes the loop.
+//!
+//! Two transports serve the same route table:
+//!
+//! * the **epoll reactor** ([`reactor`], the default on Linux) — a
+//!   single-threaded non-blocking event loop with per-connection state
+//!   machines: incremental HTTP/1.1 parsing under hard head/body caps,
+//!   keep-alive and pipelining, SSE token streaming on
+//!   `POST /v1/completions` with `"stream": true` (per-step deltas from
+//!   the backend's streaming hook), bounded per-connection write queues
+//!   (backpressure: a stalled client stops being read, a stalled
+//!   *streaming* client is disconnected), admission shedding at the
+//!   in-flight watermark (429 + `Retry-After`), and a draining graceful
+//!   shutdown;
+//! * the **legacy thread pool** (`--legacy-pool`, and the fallback on
+//!   targets without the raw-syscall epoll binding) — one blocking
+//!   handler per connection, one request per connection, kept as the
+//!   bench baseline for `BENCH_gateway.json`.
 
 pub mod backend;
+pub mod epoll;
 pub mod http;
 pub mod loadgen;
 pub mod pjrt;
+#[cfg(all(
+    target_os = "linux",
+    any(target_arch = "x86_64", target_arch = "aarch64")
+))]
+mod reactor;
 pub mod sim;
 
 use std::net::{IpAddr, Ipv4Addr, Ipv6Addr, SocketAddr, TcpListener, TcpStream};
@@ -45,7 +68,7 @@ use crate::obs::sketch::{seconds_buckets, token_buckets};
 use crate::obs::trace::{to_chrome, to_jsonl};
 use crate::util::json::{self, Json};
 
-use backend::{AdminCmd, Backend, CompletionRequest};
+use backend::{AdminCmd, Backend, Completion, CompletionRequest};
 use http::{read_request, respond, HttpRequest};
 
 /// Gateway server configuration.
@@ -53,13 +76,57 @@ use http::{read_request, respond, HttpRequest};
 pub struct GatewayConfig {
     /// Bind address, e.g. `127.0.0.1:8080` (`:0` for an ephemeral port).
     pub addr: String,
-    /// Handler thread-pool size.
+    /// Handler thread-pool size (legacy pool mode; the reactor sizes
+    /// its blocking-executor pool with it for backends that cannot
+    /// stream).
     pub threads: usize,
+    /// Serve with the legacy blocking thread pool instead of the epoll
+    /// reactor.  Kept as the bench baseline, and forced on targets
+    /// without the raw-syscall epoll binding.
+    pub legacy_pool: bool,
+    /// Reactor: maximum simultaneous client connections; beyond it new
+    /// connections are answered 503 + `Retry-After` and closed.
+    pub max_conns: usize,
+    /// Admission watermark: completions in flight beyond which new ones
+    /// are immediately shed with 429 + `Retry-After`.
+    pub max_inflight: usize,
+    /// Reactor parser: request heads larger than this are answered 431
+    /// and the connection closed (slowloris / junk defense).
+    pub max_header_bytes: usize,
+    /// Reactor parser: declared bodies larger than this are answered
+    /// 413 and the connection closed.
+    pub max_body_bytes: usize,
+    /// A connection with an incomplete request older than this is
+    /// answered 408 and closed.
+    pub read_deadline: Duration,
+    /// Idle keep-alive connections older than this are closed.
+    pub idle_timeout: Duration,
+    /// Graceful-shutdown budget: stop accepting, flush in-flight
+    /// responses until the deadline, then close.
+    pub drain: Duration,
+    /// Per-connection write-queue cap: a streaming client stalled past
+    /// it is disconnected; a non-streaming one stops being read.
+    pub write_buf_cap: usize,
+    /// Maximum pipelined requests parsed ahead on one connection.
+    pub pipeline_cap: usize,
 }
 
 impl Default for GatewayConfig {
     fn default() -> Self {
-        GatewayConfig { addr: "127.0.0.1:8080".to_string(), threads: 8 }
+        GatewayConfig {
+            addr: "127.0.0.1:8080".to_string(),
+            threads: 8,
+            legacy_pool: false,
+            max_conns: 1024,
+            max_inflight: 512,
+            max_header_bytes: 64 * 1024,
+            max_body_bytes: 1 << 20,
+            read_deadline: Duration::from_secs(10),
+            idle_timeout: Duration::from_secs(60),
+            drain: Duration::from_secs(5),
+            write_buf_cap: 256 * 1024,
+            pipeline_cap: 16,
+        }
     }
 }
 
@@ -71,23 +138,45 @@ struct Shared {
     bad_requests: AtomicU64,
     /// Completion attempts re-issued after a backend failure.
     retries: AtomicU64,
-    /// Completions answered 503 after exhausting the retry budget.
+    /// Completions shed (429 admission watermark, connection-cap and
+    /// drain 503s, retry exhaustion).
     sheds: AtomicU64,
+    /// Currently open client connections (gauge).
+    conns: AtomicU64,
+    /// SSE completion streams started (counter).
+    streams: AtomicU64,
     started: Instant,
 }
 
 /// A running gateway.  Dropping it (or calling [`Gateway::shutdown`])
-/// stops the accept loop and joins every handler thread.
+/// stops the transport — the reactor drains in-flight responses under
+/// the configured deadline; the legacy pool joins every handler thread.
 pub struct Gateway {
     /// The actual bound address (useful with `:0` ephemeral ports).
     pub addr: SocketAddr,
     stop: Arc<AtomicBool>,
-    accept_handle: Option<JoinHandle<()>>,
-    worker_handles: Vec<JoinHandle<()>>,
+    inner: Inner,
+}
+
+enum Inner {
+    Pool {
+        accept_handle: Option<JoinHandle<()>>,
+        worker_handles: Vec<JoinHandle<()>>,
+    },
+    #[cfg(all(
+        target_os = "linux",
+        any(target_arch = "x86_64", target_arch = "aarch64")
+    ))]
+    Reactor {
+        handle: Option<JoinHandle<()>>,
+        waker: epoll::Waker,
+    },
 }
 
 impl Gateway {
-    /// Bind, spawn the accept loop + handler pool, and return.
+    /// Bind and spawn the transport: the epoll reactor by default, the
+    /// legacy accept-loop + handler pool with `legacy_pool` (or on
+    /// targets without the epoll binding).
     pub fn spawn(cfg: GatewayConfig, backend: Arc<dyn Backend>) -> Result<Gateway> {
         let listener = TcpListener::bind(&cfg.addr)
             .with_context(|| format!("bind {}", cfg.addr))?;
@@ -100,9 +189,35 @@ impl Gateway {
             bad_requests: AtomicU64::new(0),
             retries: AtomicU64::new(0),
             sheds: AtomicU64::new(0),
+            conns: AtomicU64::new(0),
+            streams: AtomicU64::new(0),
             started: Instant::now(),
         });
 
+        #[cfg(all(
+            target_os = "linux",
+            any(target_arch = "x86_64", target_arch = "aarch64")
+        ))]
+        if !cfg.legacy_pool {
+            let (handle, waker) =
+                reactor::spawn(cfg, listener, Arc::clone(&stop), shared)?;
+            return Ok(Gateway {
+                addr,
+                stop,
+                inner: Inner::Reactor { handle: Some(handle), waker },
+            });
+        }
+
+        Self::spawn_pool(cfg, listener, addr, stop, shared)
+    }
+
+    fn spawn_pool(
+        cfg: GatewayConfig,
+        listener: TcpListener,
+        addr: SocketAddr,
+        stop: Arc<AtomicBool>,
+        shared: Arc<Shared>,
+    ) -> Result<Gateway> {
         let (tx, rx) = channel::<TcpStream>();
         let rx = Arc::new(Mutex::new(rx));
         let mut worker_handles = Vec::with_capacity(cfg.threads.max(1));
@@ -144,37 +259,53 @@ impl Gateway {
         Ok(Gateway {
             addr,
             stop,
-            accept_handle: Some(accept_handle),
-            worker_handles,
+            inner: Inner::Pool { accept_handle: Some(accept_handle), worker_handles },
         })
     }
 
-    /// Stop accepting, join all threads.
+    /// Stop the transport.  The reactor stops accepting, drains
+    /// in-flight responses under the drain deadline, then exits; the
+    /// pool stops accepting and joins every handler thread.
     pub fn shutdown(mut self) {
         self.stop_inner();
     }
 
     fn stop_inner(&mut self) {
         self.stop.store(true, Ordering::SeqCst);
-        // Poke the blocking accept so the loop observes `stop`.  A
-        // 0.0.0.0 / :: bind is not connectable on every platform —
-        // rewrite to loopback, and never block the shutdown path.
-        let mut poke = self.addr;
-        match poke.ip() {
-            IpAddr::V4(ip) if ip.is_unspecified() => {
-                poke.set_ip(IpAddr::V4(Ipv4Addr::LOCALHOST));
+        match &mut self.inner {
+            Inner::Pool { accept_handle, worker_handles } => {
+                // Poke the blocking accept so the loop observes `stop`.
+                // A 0.0.0.0 / :: bind is not connectable on every
+                // platform — rewrite to loopback, and never block the
+                // shutdown path.
+                let mut poke = self.addr;
+                match poke.ip() {
+                    IpAddr::V4(ip) if ip.is_unspecified() => {
+                        poke.set_ip(IpAddr::V4(Ipv4Addr::LOCALHOST));
+                    }
+                    IpAddr::V6(ip) if ip.is_unspecified() => {
+                        poke.set_ip(IpAddr::V6(Ipv6Addr::LOCALHOST));
+                    }
+                    _ => {}
+                }
+                let _ = TcpStream::connect_timeout(&poke, Duration::from_millis(250));
+                if let Some(h) = accept_handle.take() {
+                    let _ = h.join();
+                }
+                for h in worker_handles.drain(..) {
+                    let _ = h.join();
+                }
             }
-            IpAddr::V6(ip) if ip.is_unspecified() => {
-                poke.set_ip(IpAddr::V6(Ipv6Addr::LOCALHOST));
+            #[cfg(all(
+                target_os = "linux",
+                any(target_arch = "x86_64", target_arch = "aarch64")
+            ))]
+            Inner::Reactor { handle, waker } => {
+                waker.wake();
+                if let Some(h) = handle.take() {
+                    let _ = h.join();
+                }
             }
-            _ => {}
-        }
-        let _ = TcpStream::connect_timeout(&poke, Duration::from_millis(250));
-        if let Some(h) = self.accept_handle.take() {
-            let _ = h.join();
-        }
-        for h in self.worker_handles.drain(..) {
-            let _ = h.join();
         }
     }
 }
@@ -186,6 +317,12 @@ impl Drop for Gateway {
 }
 
 fn handle_conn(stream: &mut TcpStream, shared: &Shared) {
+    shared.conns.fetch_add(1, Ordering::Relaxed);
+    handle_conn_inner(stream, shared);
+    shared.conns.fetch_sub(1, Ordering::Relaxed);
+}
+
+fn handle_conn_inner(stream: &mut TcpStream, shared: &Shared) {
     stream.set_nodelay(true).ok();
     stream
         .set_read_timeout(Some(Duration::from_secs(60)))
@@ -290,7 +427,25 @@ fn tokenize(s: &str) -> Vec<i32> {
         .collect()
 }
 
-fn completions(req: &HttpRequest, shared: &Shared) -> Result<Routed> {
+/// Retry budget for backend completion failures, shared by the pool
+/// handlers and the reactor (executor pool and native streams alike).
+const MAX_RETRIES: u32 = 2;
+
+/// Validated `/v1/completions` parameters.
+struct CompletionParams {
+    prompt_tokens: Vec<i32>,
+    max_tokens: u32,
+    /// SSE streaming requested (`"stream": true` body field or
+    /// `?stream=true` query parameter).
+    stream: bool,
+}
+
+/// Parse and validate a completions request body; counts bad requests
+/// and returns the ready-to-send 400 on failure.
+fn parse_completion(
+    req: &HttpRequest,
+    shared: &Shared,
+) -> std::result::Result<CompletionParams, Routed> {
     let parsed = req
         .body_str()
         .ok()
@@ -300,7 +455,7 @@ fn completions(req: &HttpRequest, shared: &Shared) -> Result<Routed> {
         Some(v) => v,
         None => {
             shared.bad_requests.fetch_add(1, Ordering::Relaxed);
-            return Ok((400, "application/json", error_body("body must be a JSON object")));
+            return Err((400, "application/json", error_body("body must be a JSON object")));
         }
     };
     let prompt_tokens: Vec<i32> = match body.get("prompt") {
@@ -314,7 +469,7 @@ fn completions(req: &HttpRequest, shared: &Shared) -> Result<Routed> {
     };
     if prompt_tokens.is_empty() {
         shared.bad_requests.fetch_add(1, Ordering::Relaxed);
-        return Ok((
+        return Err((
             400,
             "application/json",
             error_body("missing prompt (string or token array)"),
@@ -325,17 +480,22 @@ fn completions(req: &HttpRequest, shared: &Shared) -> Result<Routed> {
         .and_then(Json::as_u64)
         .unwrap_or(16)
         .clamp(1, 4096) as u32;
+    let stream = body.get("stream").and_then(Json::as_bool).unwrap_or(false)
+        || req.query_param("stream") == Some("true");
+    Ok(CompletionParams { prompt_tokens, max_tokens, stream })
+}
 
-    let prompt_n = prompt_tokens.len() as f64;
-    let t0 = Instant::now();
-    // Graceful degradation: a backend failure (replica crash shed, loss
-    // of the scheduler) gets a bounded retry with backoff under a fresh
-    // request id — the fault ledger has already resolved the old one.
-    // Exhausting the budget sheds the request as a 503 (handle_conn
-    // attaches Retry-After).
-    const MAX_RETRIES: u32 = 2;
+/// Graceful degradation: a backend failure (replica crash shed, loss
+/// of the scheduler) gets a bounded retry with backoff under a fresh
+/// request id — the fault ledger has already resolved the old one.
+/// Exhausting the budget counts a shed; the caller turns it into a 503
+/// (with Retry-After attached at write time).
+fn complete_with_retries(
+    shared: &Shared,
+    prompt_tokens: &[i32],
+    max_tokens: u32,
+) -> (u64, std::result::Result<Completion, String>) {
     let mut id = 0u64;
-    let mut done = None;
     let mut last_err = String::new();
     for attempt in 0..=MAX_RETRIES {
         if attempt > 0 {
@@ -345,31 +505,21 @@ fn completions(req: &HttpRequest, shared: &Shared) -> Result<Routed> {
         id = shared.next_id.fetch_add(1, Ordering::Relaxed);
         match shared.backend.complete(CompletionRequest {
             id,
-            prompt_tokens: prompt_tokens.clone(),
+            prompt_tokens: prompt_tokens.to_vec(),
             max_tokens,
         }) {
-            Ok(c) => {
-                done = Some(c);
-                break;
-            }
+            Ok(c) => return (id, Ok(c)),
             Err(e) => last_err = format!("{e:#}"),
         }
     }
-    let done = match done {
-        Some(c) => c,
-        None => {
-            shared.sheds.fetch_add(1, Ordering::Relaxed);
-            return Ok((
-                503,
-                "application/json",
-                error_body(&format!(
-                    "backend unavailable after {MAX_RETRIES} retries: {last_err}"
-                )),
-            ));
-        }
-    };
+    shared.sheds.fetch_add(1, Ordering::Relaxed);
+    (id, Err(last_err))
+}
 
-    let text = if done.tokens.is_empty() {
+/// The non-streamed completion text: one `t<id>` word per token, so the
+/// concatenation of the streamed deltas is byte-identical.
+fn completion_text(done: &Completion) -> String {
+    if done.tokens.is_empty() {
         format!("<{} tokens>", done.n_tokens)
     } else {
         done.tokens
@@ -377,11 +527,22 @@ fn completions(req: &HttpRequest, shared: &Shared) -> Result<Routed> {
             .map(|t| format!("t{t}"))
             .collect::<Vec<_>>()
             .join(" ")
-    };
-    let resp = json::obj(vec![
+    }
+}
+
+/// The non-streamed 200 response body.
+fn completion_json(
+    id: u64,
+    model: &str,
+    prompt_n: f64,
+    done: &Completion,
+    wall_s: f64,
+) -> Vec<u8> {
+    let text = completion_text(done);
+    json::obj(vec![
         ("id", json::s(&format!("cmpl-{id}"))),
         ("object", json::s("text_completion")),
-        ("model", json::s(&shared.backend.name())),
+        ("model", json::s(model)),
         (
             "choices",
             json::arr(vec![json::obj(vec![
@@ -406,11 +567,128 @@ fn completions(req: &HttpRequest, shared: &Shared) -> Result<Routed> {
                 ("tpot_s", json::num(done.tpot_s)),
                 ("queue_wait_s", json::num(done.queue_wait_s)),
                 ("latency_s", json::num(done.latency_s)),
-                ("wall_latency_s", json::num(t0.elapsed().as_secs_f64())),
+                ("wall_latency_s", json::num(wall_s)),
+            ]),
+        ),
+    ])
+    .to_string()
+    .into_bytes()
+}
+
+/// Text fragment for the `j`-th streamed token.  Fragments concatenate
+/// to exactly the non-streamed `choices[0].text`.
+fn sse_delta_text(j: u64, tok: i32) -> String {
+    if j == 0 {
+        format!("t{tok}")
+    } else {
+        format!(" t{tok}")
+    }
+}
+
+/// One SSE event carrying a text delta for stream `id`.
+fn sse_chunk(id: u64, model: &str, text: &str) -> String {
+    let chunk = json::obj(vec![
+        ("id", json::s(&format!("cmpl-{id}"))),
+        ("object", json::s("text_completion.chunk")),
+        ("model", json::s(model)),
+        (
+            "choices",
+            json::arr(vec![json::obj(vec![
+                ("index", json::num(0.0)),
+                ("text", json::s(text)),
+                ("finish_reason", Json::Null),
+            ])]),
+        ),
+    ]);
+    format!("data: {chunk}\n\n")
+}
+
+/// The terminal SSE payload: an empty-text chunk carrying
+/// `finish_reason`, usage, and the bfio scoring block, then `[DONE]`.
+fn sse_final(id: u64, model: &str, prompt_n: f64, done: &Completion, wall_s: f64) -> String {
+    let chunk = json::obj(vec![
+        ("id", json::s(&format!("cmpl-{id}"))),
+        ("object", json::s("text_completion.chunk")),
+        ("model", json::s(model)),
+        (
+            "choices",
+            json::arr(vec![json::obj(vec![
+                ("index", json::num(0.0)),
+                ("text", json::s("")),
+                ("finish_reason", json::s("length")),
+            ])]),
+        ),
+        (
+            "usage",
+            json::obj(vec![
+                ("prompt_tokens", json::num(prompt_n)),
+                ("completion_tokens", json::num(f64::from(done.n_tokens))),
+                ("total_tokens", json::num(prompt_n + f64::from(done.n_tokens))),
+            ]),
+        ),
+        (
+            "bfio",
+            json::obj(vec![
+                ("request_id", json::num(id as f64)),
+                ("worker", json::num(done.worker as f64)),
+                ("tpot_s", json::num(done.tpot_s)),
+                ("queue_wait_s", json::num(done.queue_wait_s)),
+                ("latency_s", json::num(done.latency_s)),
+                ("wall_latency_s", json::num(wall_s)),
             ]),
         ),
     ]);
-    Ok((200, "application/json", resp.to_string().into_bytes()))
+    format!("data: {chunk}\n\ndata: [DONE]\n\n")
+}
+
+/// The entire SSE stream for an already-finished completion, one chunk
+/// per token.  Used by the legacy pool and the reactor's executor
+/// fallback (non-streaming backends), where the completion arrives
+/// whole; framing is identical to the reactor's incremental path.
+fn sse_full_body(id: u64, model: &str, prompt_n: f64, done: &Completion, wall_s: f64) -> Vec<u8> {
+    let mut out = String::new();
+    for (j, t) in done.tokens.iter().enumerate() {
+        out.push_str(&sse_chunk(id, model, &sse_delta_text(j as u64, *t)));
+    }
+    out.push_str(&sse_final(id, model, prompt_n, done, wall_s));
+    out.into_bytes()
+}
+
+fn completions(req: &HttpRequest, shared: &Shared) -> Result<Routed> {
+    let params = match parse_completion(req, shared) {
+        Ok(p) => p,
+        Err(routed) => return Ok(routed),
+    };
+    let t0 = Instant::now();
+    let (id, outcome) =
+        complete_with_retries(shared, &params.prompt_tokens, params.max_tokens);
+    let done = match outcome {
+        Ok(c) => c,
+        Err(last_err) => {
+            return Ok((
+                503,
+                "application/json",
+                error_body(&format!(
+                    "backend unavailable after {MAX_RETRIES} retries: {last_err}"
+                )),
+            ));
+        }
+    };
+    let prompt_n = params.prompt_tokens.len() as f64;
+    let model = shared.backend.name();
+    let wall_s = t0.elapsed().as_secs_f64();
+    if params.stream {
+        shared.streams.fetch_add(1, Ordering::Relaxed);
+        // Blocking transport: the completion is already whole, so the
+        // SSE stream goes out as one Content-Length'd body.
+        let body = sse_full_body(id, &model, prompt_n, &done, wall_s);
+        return Ok((200, "text/event-stream", body));
+    }
+    Ok((
+        200,
+        "application/json",
+        completion_json(id, &model, prompt_n, &done, wall_s),
+    ))
 }
 
 fn replicas_arr(reps: &[backend::ReplicaStatus]) -> Json {
@@ -1196,13 +1474,34 @@ fn metrics_text(shared: &Shared) -> String {
     );
     w.family(
         "bfio_gateway_shed_total",
-        "Completions answered 503 after exhausting the retry budget.",
+        "Completions shed: 429 at the admission watermark, 503 on \
+         connection-cap, drain, or retry exhaustion.",
         "counter",
     );
     w.sample(
         "bfio_gateway_shed_total",
         &[],
         shared.sheds.load(Ordering::Relaxed) as f64,
+    );
+    w.family(
+        "bfio_gateway_open_connections",
+        "Currently open client connections.",
+        "gauge",
+    );
+    w.sample(
+        "bfio_gateway_open_connections",
+        &[],
+        shared.conns.load(Ordering::Relaxed) as f64,
+    );
+    w.family(
+        "bfio_gateway_streams_total",
+        "SSE completion streams started.",
+        "counter",
+    );
+    w.sample(
+        "bfio_gateway_streams_total",
+        &[],
+        shared.streams.load(Ordering::Relaxed) as f64,
     );
     w.family(
         "bfio_gateway_uptime_seconds",
@@ -1220,6 +1519,31 @@ fn metrics_text(shared: &Shared) -> String {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn sse_deltas_concatenate_to_completion_text() {
+        let done = Completion {
+            id: 7,
+            worker: 1,
+            tokens: vec![5, 9, 13],
+            n_tokens: 3,
+            queue_wait_s: 0.0,
+            tpot_s: 0.01,
+            latency_s: 0.03,
+        };
+        let concat: String = done
+            .tokens
+            .iter()
+            .enumerate()
+            .map(|(j, t)| sse_delta_text(j as u64, *t))
+            .collect();
+        assert_eq!(concat, completion_text(&done));
+
+        let body = String::from_utf8(sse_full_body(7, "sim", 2.0, &done, 0.05)).unwrap();
+        assert_eq!(body.matches("data: ").count(), 5, "3 deltas + final + [DONE]");
+        assert!(body.contains("text_completion.chunk"));
+        assert!(body.ends_with("data: [DONE]\n\n"));
+    }
 
     #[test]
     fn tokenizer_counts_words() {

@@ -1,0 +1,1132 @@
+//! The epoll reactor: the gateway's non-blocking intake loop.
+//!
+//! One thread owns every socket.  Readiness comes from the raw-syscall
+//! [`super::epoll`] binding (level-triggered); each connection is a
+//! small state machine: bytes accumulate in a read buffer, an
+//! incremental HTTP/1.1 parser lifts out complete requests (bounded
+//! head and body, keep-alive, pipelining), responses queue on a bounded
+//! write buffer and drain as the socket allows.  Backpressure is
+//! connection-level: a client that stops reading stops being read
+//! (paused `EPOLLIN`), and a *streaming* client that stalls past the
+//! write cap is disconnected rather than buffered without bound.
+//!
+//! Completions never block the loop.  Streaming backends get a
+//! [`StreamSink`] and push [`StreamEvent`]s into the reactor's inbox
+//! (eventfd wakeup); per-step token deltas are framed as SSE on the
+//! fly.  Non-streaming backends run on a small blocking executor pool
+//! whose results come back through the same inbox.  Admission beyond
+//! the in-flight watermark is shed immediately with 429 +
+//! `Retry-After`; shutdown stops accepting, flushes in-flight
+//! responses under the drain deadline, then closes.
+
+use std::collections::{HashMap, VecDeque};
+use std::io::{self, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::os::unix::io::AsRawFd;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use super::backend::{Completion, CompletionRequest, StreamConsumer, StreamEvent, StreamSink};
+use super::epoll::{
+    EpollEvent, Poller, Waker, EPOLLERR, EPOLLHUP, EPOLLIN, EPOLLOUT, EPOLLRDHUP,
+};
+use super::http::{parse_head, response_bytes, sse_head_bytes, HttpRequest, ParsedHead};
+use super::{
+    complete_with_retries, completion_json, error_body, parse_completion, route, sse_chunk,
+    sse_delta_text, sse_final, sse_full_body, GatewayConfig, Shared, MAX_RETRIES,
+};
+
+/// Poller token of the accept socket; connections count up from 2
+/// (`u64::MAX` is the poller's internal waker).
+const LISTENER_TOKEN: u64 = 1;
+const FIRST_CONN_TOKEN: u64 = 2;
+
+/// Retry-After attached to every shed (429 and 503 alike).
+const RETRY_AFTER: [(&str, &str); 1] = [("Retry-After", "1")];
+
+/// Messages from backend threads into the reactor loop.
+enum Note {
+    /// A [`StreamEvent`] from a streaming backend's sink.
+    Stream { conn: u64, seq: u64, ev: StreamEvent },
+    /// A finished blocking completion from the executor pool.
+    Exec {
+        conn: u64,
+        seq: u64,
+        id: u64,
+        prompt_n: f64,
+        sse: bool,
+        wall_s: f64,
+        outcome: std::result::Result<Completion, String>,
+    },
+}
+
+/// Lock-free enough for the purpose: producers append under a mutex and
+/// kick the eventfd; the reactor swaps the vector empty each tick.
+struct Inbox {
+    q: Mutex<Vec<Note>>,
+    waker: Waker,
+}
+
+impl Inbox {
+    fn push(&self, n: Note) {
+        if let Ok(mut q) = self.q.lock() {
+            q.push(n);
+        }
+        self.waker.wake();
+    }
+
+    fn take(&self) -> Vec<Note> {
+        self.q
+            .lock()
+            .map(|mut q| std::mem::take(&mut *q))
+            .unwrap_or_default()
+    }
+}
+
+impl StreamConsumer for Inbox {
+    fn event(&self, conn: u64, seq: u64, ev: StreamEvent) {
+        self.push(Note::Stream { conn, seq, ev });
+    }
+}
+
+/// A completion handed to the blocking executor pool (backends without
+/// streaming support: PJRT, replay-dash).
+struct ExecJob {
+    conn: u64,
+    seq: u64,
+    prompt_tokens: Vec<i32>,
+    max_tokens: u32,
+    sse: bool,
+}
+
+/// The in-flight request of a connection (strictly one at a time —
+/// pipelined responses must go out in order).
+struct Active {
+    seq: u64,
+    kind: Kind,
+}
+
+enum Kind {
+    /// Waiting on the executor pool.
+    Exec,
+    /// Streaming natively from the backend scheduler.
+    Native {
+        id: u64,
+        prompt_tokens: Vec<i32>,
+        max_tokens: u32,
+        prompt_n: f64,
+        t0: Instant,
+        /// SSE requested; false = plain JSON assembled from `Done`.
+        sse: bool,
+        /// Tokens already framed as SSE deltas.
+        emitted: u64,
+        attempts: u32,
+        /// The SSE response head is on the wire — no more retries, and
+        /// the connection must close at stream end (no Content-Length).
+        head_sent: bool,
+    },
+}
+
+/// Per-connection state machine.
+struct Conn {
+    stream: TcpStream,
+    /// Unparsed request bytes.
+    buf: Vec<u8>,
+    /// Bytes of `buf` already scanned for the head terminator.
+    scan: usize,
+    /// Parsed head awaiting its body.
+    head: Option<ParsedHead>,
+    /// Complete requests not yet dispatched (pipelining).
+    pending: VecDeque<HttpRequest>,
+    /// Write queue (`out[out_pos..]` is unsent).
+    out: Vec<u8>,
+    out_pos: usize,
+    /// Current epoll interest mask.
+    interest: u32,
+    active: Option<Active>,
+    /// An SSE response is being written incrementally.
+    streaming: bool,
+    /// Keep-alive of the request currently being answered.
+    keep_alive: bool,
+    /// Close once the write queue drains.
+    closing: bool,
+    /// Reads paused by write backpressure.
+    paused: bool,
+    /// Client closed its write half (or a parse error poisoned the
+    /// stream) — serve what is queued, read no further.
+    read_closed: bool,
+    /// Error response to emit once earlier pipelined responses drain,
+    /// keeping responses in request order.
+    deferred: Option<(u16, String)>,
+    last_activity: Instant,
+    /// Set while an incomplete request sits in the buffer (read
+    /// deadline / slowloris defense).
+    partial_since: Option<Instant>,
+    /// Next request sequence number on this connection.
+    seq: u64,
+}
+
+impl Conn {
+    fn new(stream: TcpStream) -> Conn {
+        Conn {
+            stream,
+            buf: Vec::new(),
+            scan: 0,
+            head: None,
+            pending: VecDeque::new(),
+            out: Vec::new(),
+            out_pos: 0,
+            interest: EPOLLIN | EPOLLRDHUP,
+            active: None,
+            streaming: false,
+            keep_alive: true,
+            closing: false,
+            paused: false,
+            read_closed: false,
+            deferred: None,
+            last_activity: Instant::now(),
+            partial_since: None,
+            seq: 0,
+        }
+    }
+
+    fn unsent(&self) -> usize {
+        self.out.len() - self.out_pos
+    }
+
+    fn idle(&self) -> bool {
+        self.active.is_none()
+            && self.pending.is_empty()
+            && self.deferred.is_none()
+            && self.unsent() == 0
+    }
+}
+
+fn conn_queue(c: &mut Conn, bytes: &[u8]) {
+    if c.out_pos > 0 {
+        c.out.drain(..c.out_pos);
+        c.out_pos = 0;
+    }
+    c.out.extend_from_slice(bytes);
+}
+
+/// Write as much of the queue as the socket takes right now.
+fn conn_flush(c: &mut Conn) -> io::Result<()> {
+    while c.out_pos < c.out.len() {
+        match c.stream.write(&c.out[c.out_pos..]) {
+            Ok(0) => return Err(io::ErrorKind::WriteZero.into()),
+            Ok(n) => {
+                c.out_pos += n;
+                c.last_activity = Instant::now();
+            }
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(e),
+        }
+    }
+    if c.out_pos >= c.out.len() {
+        c.out.clear();
+        c.out_pos = 0;
+    }
+    Ok(())
+}
+
+/// Find the `\r\n\r\n` head terminator, resuming at `scanned` (bytes
+/// covered by previous searches; the window backs up 3 bytes for a
+/// terminator split across reads).
+fn find_blank_line(buf: &[u8], scanned: usize) -> Option<usize> {
+    let start = scanned.saturating_sub(3);
+    buf.windows(4)
+        .skip(start)
+        .position(|w| w == b"\r\n\r\n")
+        .map(|p| p + start)
+}
+
+struct Reactor {
+    cfg: GatewayConfig,
+    shared: Arc<Shared>,
+    poller: Poller,
+    inbox: Arc<Inbox>,
+    exec_tx: Sender<ExecJob>,
+    listener: Option<TcpListener>,
+    conns: HashMap<u64, Conn>,
+    next_token: u64,
+    /// Completions in flight (admission watermark).
+    inflight: usize,
+    draining: bool,
+    drain_deadline: Option<Instant>,
+    model: String,
+}
+
+/// Spawn the reactor thread (plus its blocking executor pool) and
+/// return the join handle and a waker for shutdown.
+pub(super) fn spawn(
+    cfg: GatewayConfig,
+    listener: TcpListener,
+    stop: Arc<AtomicBool>,
+    shared: Arc<Shared>,
+) -> Result<(JoinHandle<()>, Waker)> {
+    listener
+        .set_nonblocking(true)
+        .context("set listener nonblocking")?;
+    let poller = Poller::new().context("epoll_create1")?;
+    poller
+        .add(listener.as_raw_fd(), LISTENER_TOKEN, EPOLLIN)
+        .context("register listener")?;
+    let waker = poller.waker();
+    let inbox = Arc::new(Inbox {
+        q: Mutex::new(Vec::new()),
+        waker: poller.waker(),
+    });
+
+    // Blocking executor pool for backends without streaming support.
+    // Workers exit when the reactor drops the job sender; they are not
+    // joined — a worker stuck in a slow backend call must not hold up
+    // the drain deadline.
+    let (exec_tx, exec_rx) = channel::<ExecJob>();
+    let exec_rx = Arc::new(Mutex::new(exec_rx));
+    for _ in 0..cfg.threads.max(1) {
+        let rx = Arc::clone(&exec_rx);
+        let shared = Arc::clone(&shared);
+        let inbox = Arc::clone(&inbox);
+        std::thread::spawn(move || loop {
+            let job = match rx.lock() {
+                Ok(guard) => guard.recv(),
+                Err(_) => break,
+            };
+            let Ok(job) = job else { break };
+            let t0 = Instant::now();
+            let prompt_n = job.prompt_tokens.len() as f64;
+            let (id, outcome) =
+                complete_with_retries(&shared, &job.prompt_tokens, job.max_tokens);
+            inbox.push(Note::Exec {
+                conn: job.conn,
+                seq: job.seq,
+                id,
+                prompt_n,
+                sse: job.sse,
+                wall_s: t0.elapsed().as_secs_f64(),
+                outcome,
+            });
+        });
+    }
+
+    let model = shared.backend.name();
+    let reactor = Reactor {
+        cfg,
+        shared,
+        poller,
+        inbox,
+        exec_tx,
+        listener: Some(listener),
+        conns: HashMap::new(),
+        next_token: FIRST_CONN_TOKEN,
+        inflight: 0,
+        draining: false,
+        drain_deadline: None,
+        model,
+    };
+    let handle = std::thread::spawn(move || reactor.run(stop));
+    Ok((handle, waker))
+}
+
+impl Reactor {
+    fn run(mut self, stop: Arc<AtomicBool>) {
+        let mut events = [EpollEvent::zeroed(); 256];
+        loop {
+            let n = match self.poller.wait(&mut events, 100) {
+                Ok(n) => n,
+                Err(_) => break,
+            };
+            if stop.load(Ordering::SeqCst) && !self.draining {
+                self.begin_drain();
+            }
+            for note in self.inbox.take() {
+                self.handle_note(note);
+            }
+            for ev in events.iter().take(n) {
+                let token = ev.data;
+                let mask = ev.events;
+                if token == LISTENER_TOKEN {
+                    self.accept_ready();
+                    continue;
+                }
+                if mask & (EPOLLERR | EPOLLHUP) != 0 {
+                    self.remove_conn(token);
+                    continue;
+                }
+                if mask & (EPOLLIN | EPOLLRDHUP) != 0 {
+                    self.on_readable(token);
+                }
+                if mask & EPOLLOUT != 0 {
+                    self.flush_and_update(token);
+                }
+            }
+            self.sweep_timers();
+            if self.draining {
+                let expired = self
+                    .drain_deadline
+                    .map(|d| Instant::now() >= d)
+                    .unwrap_or(true);
+                if self.conns.is_empty() || expired {
+                    break;
+                }
+            }
+        }
+        let tokens: Vec<u64> = self.conns.keys().copied().collect();
+        for t in tokens {
+            self.remove_conn(t);
+        }
+        // Dropping `exec_tx` lets idle executor workers exit.
+    }
+
+    fn begin_drain(&mut self) {
+        self.draining = true;
+        self.drain_deadline = Some(Instant::now() + self.cfg.drain);
+        if let Some(l) = self.listener.take() {
+            let _ = self.poller.delete(l.as_raw_fd());
+            // Dropping closes the socket: new connections are refused
+            // at the kernel while in-flight responses drain.
+        }
+    }
+
+    fn accept_ready(&mut self) {
+        loop {
+            let Some(listener) = self.listener.as_ref() else {
+                return;
+            };
+            match listener.accept() {
+                Ok((stream, _)) => {
+                    if self.conns.len() >= self.cfg.max_conns {
+                        // Best-effort shed: the response may not fit in
+                        // the socket buffer of a hostile peer, but we
+                        // will not block or track the connection.
+                        self.shared.sheds.fetch_add(1, Ordering::Relaxed);
+                        let mut s = stream;
+                        let _ = s.set_nonblocking(true);
+                        let _ = s.write(&response_bytes(
+                            503,
+                            "application/json",
+                            &RETRY_AFTER,
+                            &error_body("connection limit reached"),
+                            false,
+                        ));
+                        continue;
+                    }
+                    stream.set_nonblocking(true).ok();
+                    stream.set_nodelay(true).ok();
+                    let token = self.next_token;
+                    self.next_token += 1;
+                    if self
+                        .poller
+                        .add(stream.as_raw_fd(), token, EPOLLIN | EPOLLRDHUP)
+                        .is_err()
+                    {
+                        continue;
+                    }
+                    self.shared.conns.fetch_add(1, Ordering::Relaxed);
+                    self.conns.insert(token, Conn::new(stream));
+                }
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => return,
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                Err(_) => return,
+            }
+        }
+    }
+
+    fn remove_conn(&mut self, token: u64) {
+        if let Some(c) = self.conns.remove(&token) {
+            let _ = self.poller.delete(c.stream.as_raw_fd());
+            self.shared.conns.fetch_sub(1, Ordering::Relaxed);
+            // An active request keeps running backend-side; its
+            // terminal note decrements `inflight` when it arrives and
+            // finds the connection gone.
+        }
+    }
+
+    fn on_readable(&mut self, token: u64) {
+        let mut kill = false;
+        match self.conns.get_mut(&token) {
+            None => return,
+            Some(c) => {
+                if !c.read_closed && !c.paused {
+                    let mut tmp = [0u8; 16 * 1024];
+                    loop {
+                        match c.stream.read(&mut tmp) {
+                            Ok(0) => {
+                                c.read_closed = true;
+                                if c.idle() && c.buf.is_empty() && c.head.is_none() {
+                                    kill = true;
+                                }
+                                break;
+                            }
+                            Ok(n) => {
+                                c.buf.extend_from_slice(&tmp[..n]);
+                                c.last_activity = Instant::now();
+                                if c.partial_since.is_none() {
+                                    c.partial_since = Some(Instant::now());
+                                }
+                                // Hard cap on runaway buffering: one
+                                // head plus one body, no matter what.
+                                if c.buf.len()
+                                    > self.cfg.max_header_bytes + self.cfg.max_body_bytes
+                                {
+                                    break;
+                                }
+                            }
+                            Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
+                            Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                            Err(_) => {
+                                kill = true;
+                                break;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        if kill {
+            self.remove_conn(token);
+            return;
+        }
+        self.process_conn(token);
+    }
+
+    /// Parse buffered bytes into requests, dispatch up to one active
+    /// completion (answering everything else synchronously), then
+    /// flush.  Safe to call whenever a connection's state may have
+    /// advanced.
+    fn process_conn(&mut self, token: u64) {
+        if let Some(c) = self.conns.get_mut(&token) {
+            // --- incremental parse ---
+            loop {
+                if c.closing || c.deferred.is_some() {
+                    break;
+                }
+                if c.pending.len() >= self.cfg.pipeline_cap {
+                    break;
+                }
+                if let Some(h) = c.head.take() {
+                    if c.buf.len() < h.content_length {
+                        c.head = Some(h);
+                        break;
+                    }
+                    let body: Vec<u8> = c.buf.drain(..h.content_length).collect();
+                    self.shared.http_requests.fetch_add(1, Ordering::Relaxed);
+                    c.pending.push_back(HttpRequest {
+                        method: h.method,
+                        target: h.target,
+                        headers: h.headers,
+                        body,
+                    });
+                    c.partial_since = if c.buf.is_empty() {
+                        None
+                    } else {
+                        Some(Instant::now())
+                    };
+                    continue;
+                }
+                let Some(p) = find_blank_line(&c.buf, c.scan) else {
+                    if c.buf.len() > self.cfg.max_header_bytes {
+                        self.shared.http_requests.fetch_add(1, Ordering::Relaxed);
+                        self.shared.bad_requests.fetch_add(1, Ordering::Relaxed);
+                        c.read_closed = true;
+                        c.deferred = Some((431, "request head too large".to_string()));
+                    }
+                    c.scan = c.buf.len();
+                    break;
+                };
+                match parse_head(&c.buf[..p]) {
+                    Ok(h) => {
+                        if h.content_length > self.cfg.max_body_bytes {
+                            self.shared.http_requests.fetch_add(1, Ordering::Relaxed);
+                            self.shared.bad_requests.fetch_add(1, Ordering::Relaxed);
+                            c.read_closed = true;
+                            c.deferred = Some((
+                                413,
+                                format!(
+                                    "declared body of {} bytes exceeds the limit",
+                                    h.content_length
+                                ),
+                            ));
+                            break;
+                        }
+                        c.buf.drain(..p + 4);
+                        c.scan = 0;
+                        c.head = Some(h);
+                    }
+                    Err(e) => {
+                        // The framing is untrustworthy from here on:
+                        // poison the read side, answer 400 once earlier
+                        // responses drain, then close.
+                        self.shared.http_requests.fetch_add(1, Ordering::Relaxed);
+                        self.shared.bad_requests.fetch_add(1, Ordering::Relaxed);
+                        c.read_closed = true;
+                        c.deferred = Some((400, format!("{e:#}")));
+                        break;
+                    }
+                }
+            }
+
+            // --- dispatch (strictly in order, one active at a time) ---
+            loop {
+                if c.active.is_some() || c.streaming || c.closing {
+                    break;
+                }
+                let Some(req) = c.pending.pop_front() else {
+                    if let Some((status, msg)) = c.deferred.take() {
+                        conn_queue(
+                            c,
+                            &response_bytes(
+                                status,
+                                "application/json",
+                                &[],
+                                &error_body(&msg),
+                                false,
+                            ),
+                        );
+                        c.closing = true;
+                    }
+                    break;
+                };
+                c.keep_alive = req.keep_alive();
+                let ka = c.keep_alive;
+                if !(req.method == "POST" && req.path() == "/v1/completions") {
+                    match route(&req, &self.shared) {
+                        Ok((status, ctype, body)) => {
+                            let extra: &[(&str, &str)] =
+                                if status == 503 { &RETRY_AFTER } else { &[] };
+                            conn_queue(c, &response_bytes(status, ctype, extra, &body, ka));
+                        }
+                        Err(e) => {
+                            conn_queue(
+                                c,
+                                &response_bytes(
+                                    500,
+                                    "application/json",
+                                    &[],
+                                    &error_body(&format!("{e:#}")),
+                                    ka,
+                                ),
+                            );
+                        }
+                    }
+                    if !ka {
+                        c.closing = true;
+                    }
+                    continue;
+                }
+                let params = match parse_completion(&req, &self.shared) {
+                    Ok(p) => p,
+                    Err((status, ctype, body)) => {
+                        conn_queue(c, &response_bytes(status, ctype, &[], &body, ka));
+                        if !ka {
+                            c.closing = true;
+                        }
+                        continue;
+                    }
+                };
+                if self.draining {
+                    self.shared.sheds.fetch_add(1, Ordering::Relaxed);
+                    conn_queue(
+                        c,
+                        &response_bytes(
+                            503,
+                            "application/json",
+                            &RETRY_AFTER,
+                            &error_body("gateway is draining"),
+                            false,
+                        ),
+                    );
+                    c.closing = true;
+                    continue;
+                }
+                if self.inflight >= self.cfg.max_inflight {
+                    // Admission watermark: shed before touching the
+                    // backend so overload cost stays O(parse).
+                    self.shared.sheds.fetch_add(1, Ordering::Relaxed);
+                    conn_queue(
+                        c,
+                        &response_bytes(
+                            429,
+                            "application/json",
+                            &RETRY_AFTER,
+                            &error_body("admission watermark reached, retry later"),
+                            ka,
+                        ),
+                    );
+                    if !ka {
+                        c.closing = true;
+                    }
+                    continue;
+                }
+                let seq = c.seq;
+                c.seq += 1;
+                if params.stream {
+                    self.shared.streams.fetch_add(1, Ordering::Relaxed);
+                }
+                self.inflight += 1;
+                if self.shared.backend.supports_streaming() {
+                    let id = self.shared.next_id.fetch_add(1, Ordering::Relaxed);
+                    let prompt_n = params.prompt_tokens.len() as f64;
+                    let sink = StreamSink::new(
+                        token,
+                        seq,
+                        params.stream,
+                        Arc::clone(&self.inbox) as Arc<dyn StreamConsumer>,
+                    );
+                    c.active = Some(Active {
+                        seq,
+                        kind: Kind::Native {
+                            id,
+                            prompt_tokens: params.prompt_tokens.clone(),
+                            max_tokens: params.max_tokens,
+                            prompt_n,
+                            t0: Instant::now(),
+                            sse: params.stream,
+                            emitted: 0,
+                            attempts: 0,
+                            head_sent: false,
+                        },
+                    });
+                    // A submit error drops the sink, which fires a
+                    // Failed note — the single event path handles it.
+                    let _ = self.shared.backend.submit_stream(
+                        CompletionRequest {
+                            id,
+                            prompt_tokens: params.prompt_tokens,
+                            max_tokens: params.max_tokens,
+                        },
+                        sink,
+                    );
+                } else {
+                    c.active = Some(Active { seq, kind: Kind::Exec });
+                    let _ = self.exec_tx.send(ExecJob {
+                        conn: token,
+                        seq,
+                        prompt_tokens: params.prompt_tokens,
+                        max_tokens: params.max_tokens,
+                        sse: params.stream,
+                    });
+                }
+                break;
+            }
+        }
+        self.flush_and_update(token);
+    }
+
+    /// Flush the write queue, apply backpressure, refresh epoll
+    /// interest, and close fully-drained closing connections.
+    fn flush_and_update(&mut self, token: u64) {
+        let mut kill = false;
+        if let Some(c) = self.conns.get_mut(&token) {
+            if conn_flush(c).is_err() {
+                kill = true;
+            }
+            if !kill {
+                let buffered = c.unsent();
+                if buffered > self.cfg.write_buf_cap {
+                    if c.streaming {
+                        // A stalled SSE consumer would otherwise grow
+                        // the buffer one delta per barrier step forever.
+                        kill = true;
+                    } else {
+                        c.paused = true;
+                    }
+                } else if c.paused && buffered <= self.cfg.write_buf_cap / 2 {
+                    c.paused = false;
+                }
+            }
+            if !kill
+                && c.closing
+                && c.unsent() == 0
+                && c.active.is_none()
+            {
+                kill = true;
+            }
+            // A half-closed client with nothing left to serve gets
+            // reaped now rather than at the idle timeout.
+            if !kill && c.read_closed && c.idle() {
+                kill = true;
+            }
+            if !kill {
+                let want_read = !c.closing
+                    && !c.paused
+                    && !c.read_closed
+                    && c.pending.len() < self.cfg.pipeline_cap;
+                let want_write = c.unsent() > 0;
+                let mut interest = EPOLLRDHUP;
+                if want_read {
+                    interest |= EPOLLIN;
+                }
+                if want_write {
+                    interest |= EPOLLOUT;
+                }
+                if interest != c.interest {
+                    c.interest = interest;
+                    let _ = self.poller.modify(c.stream.as_raw_fd(), token, interest);
+                }
+            }
+        }
+        if kill {
+            self.remove_conn(token);
+        }
+    }
+
+    fn handle_note(&mut self, note: Note) {
+        match note {
+            Note::Exec {
+                conn,
+                seq,
+                id,
+                prompt_n,
+                sse,
+                wall_s,
+                outcome,
+            } => {
+                self.inflight = self.inflight.saturating_sub(1);
+                if let Some(c) = self.conns.get_mut(&conn) {
+                    if c.active.as_ref().map(|a| a.seq) == Some(seq) {
+                        c.active = None;
+                        let ka = c.keep_alive;
+                        match outcome {
+                            Ok(done) => {
+                                if sse {
+                                    conn_queue(
+                                        c,
+                                        &response_bytes(
+                                            200,
+                                            "text/event-stream",
+                                            &[],
+                                            &sse_full_body(
+                                                id,
+                                                &self.model,
+                                                prompt_n,
+                                                &done,
+                                                wall_s,
+                                            ),
+                                            ka,
+                                        ),
+                                    );
+                                } else {
+                                    conn_queue(
+                                        c,
+                                        &response_bytes(
+                                            200,
+                                            "application/json",
+                                            &[],
+                                            &completion_json(
+                                                id,
+                                                &self.model,
+                                                prompt_n,
+                                                &done,
+                                                wall_s,
+                                            ),
+                                            ka,
+                                        ),
+                                    );
+                                }
+                            }
+                            Err(last_err) => {
+                                conn_queue(
+                                    c,
+                                    &response_bytes(
+                                        503,
+                                        "application/json",
+                                        &RETRY_AFTER,
+                                        &error_body(&format!(
+                                            "backend unavailable after {MAX_RETRIES} \
+                                             retries: {last_err}"
+                                        )),
+                                        ka,
+                                    ),
+                                );
+                            }
+                        }
+                        if !ka {
+                            c.closing = true;
+                        }
+                    }
+                }
+                self.process_conn(conn);
+            }
+            Note::Stream { conn, seq, ev } => self.handle_stream_event(conn, seq, ev),
+        }
+    }
+
+    fn handle_stream_event(&mut self, conn: u64, seq: u64, ev: StreamEvent) {
+        match ev {
+            StreamEvent::Delta { tokens, .. } => {
+                if let Some(c) = self.conns.get_mut(&conn) {
+                    let mut push: Vec<u8> = Vec::new();
+                    let mut became_streaming = false;
+                    if let Some(a) = c.active.as_mut() {
+                        if a.seq == seq {
+                            if let Kind::Native {
+                                id,
+                                sse,
+                                emitted,
+                                head_sent,
+                                ..
+                            } = &mut a.kind
+                            {
+                                if *sse {
+                                    if !*head_sent {
+                                        push.extend_from_slice(&sse_head_bytes());
+                                        *head_sent = true;
+                                        became_streaming = true;
+                                    }
+                                    for t in &tokens {
+                                        push.extend_from_slice(
+                                            sse_chunk(
+                                                *id,
+                                                &self.model,
+                                                &sse_delta_text(*emitted, *t),
+                                            )
+                                            .as_bytes(),
+                                        );
+                                        *emitted += 1;
+                                    }
+                                }
+                            }
+                        }
+                    }
+                    if became_streaming {
+                        c.streaming = true;
+                    }
+                    if !push.is_empty() {
+                        conn_queue(c, &push);
+                    }
+                }
+                self.flush_and_update(conn);
+            }
+            StreamEvent::Done(done) => {
+                self.inflight = self.inflight.saturating_sub(1);
+                if let Some(c) = self.conns.get_mut(&conn) {
+                    let mut push: Vec<u8> = Vec::new();
+                    let mut matched = false;
+                    let mut close_stream = false;
+                    if let Some(a) = c.active.as_mut() {
+                        if a.seq == seq {
+                            matched = true;
+                            if let Kind::Native {
+                                id,
+                                prompt_n,
+                                t0,
+                                sse,
+                                emitted,
+                                head_sent,
+                                ..
+                            } = &mut a.kind
+                            {
+                                let wall_s = t0.elapsed().as_secs_f64();
+                                if *sse {
+                                    if !*head_sent {
+                                        push.extend_from_slice(&sse_head_bytes());
+                                        *head_sent = true;
+                                    }
+                                    // Deltas the periodic emitter had
+                                    // not surfaced yet (the final step
+                                    // finishes before the next barrier
+                                    // publishes progress).
+                                    while (*emitted as usize) < done.tokens.len() {
+                                        let j = *emitted;
+                                        let t = done.tokens[j as usize];
+                                        push.extend_from_slice(
+                                            sse_chunk(
+                                                *id,
+                                                &self.model,
+                                                &sse_delta_text(j, t),
+                                            )
+                                            .as_bytes(),
+                                        );
+                                        *emitted += 1;
+                                    }
+                                    push.extend_from_slice(
+                                        sse_final(*id, &self.model, *prompt_n, &done, wall_s)
+                                            .as_bytes(),
+                                    );
+                                    close_stream = true;
+                                } else {
+                                    push.extend_from_slice(&response_bytes(
+                                        200,
+                                        "application/json",
+                                        &[],
+                                        &completion_json(
+                                            *id,
+                                            &self.model,
+                                            *prompt_n,
+                                            &done,
+                                            wall_s,
+                                        ),
+                                        c.keep_alive,
+                                    ));
+                                }
+                            }
+                        }
+                    }
+                    if matched {
+                        c.active = None;
+                        if close_stream {
+                            // SSE has no Content-Length: end-of-stream
+                            // is end-of-connection.
+                            c.streaming = false;
+                            c.closing = true;
+                        } else if !c.keep_alive {
+                            c.closing = true;
+                        }
+                        conn_queue(c, &push);
+                    }
+                }
+                self.process_conn(conn);
+            }
+            StreamEvent::Failed(err) => {
+                let mut resubmit: Option<(u64, Vec<i32>, u32, bool)> = None;
+                let mut kill = false;
+                let mut terminal = true;
+                if let Some(c) = self.conns.get_mut(&conn) {
+                    let mut push: Vec<u8> = Vec::new();
+                    let mut matched = false;
+                    if let Some(a) = c.active.as_mut() {
+                        if a.seq == seq {
+                            matched = true;
+                            if let Kind::Native {
+                                id,
+                                prompt_tokens,
+                                max_tokens,
+                                sse,
+                                emitted,
+                                attempts,
+                                head_sent,
+                                ..
+                            } = &mut a.kind
+                            {
+                                if *attempts < MAX_RETRIES
+                                    && *emitted == 0
+                                    && !*head_sent
+                                    && !self.draining
+                                {
+                                    // Transparent retry under a fresh id
+                                    // (no backoff — the reactor thread
+                                    // must not sleep; the fault ledger
+                                    // already resolved the old id).
+                                    *attempts += 1;
+                                    self.shared.retries.fetch_add(1, Ordering::Relaxed);
+                                    let new_id =
+                                        self.shared.next_id.fetch_add(1, Ordering::Relaxed);
+                                    *id = new_id;
+                                    resubmit = Some((
+                                        new_id,
+                                        prompt_tokens.clone(),
+                                        *max_tokens,
+                                        *sse,
+                                    ));
+                                    terminal = false;
+                                } else if *head_sent {
+                                    // Mid-stream failure with the 200
+                                    // head on the wire: truncate (no
+                                    // [DONE]) so the client sees the
+                                    // stream die rather than a forged
+                                    // success.
+                                    self.shared.sheds.fetch_add(1, Ordering::Relaxed);
+                                    kill = true;
+                                } else {
+                                    self.shared.sheds.fetch_add(1, Ordering::Relaxed);
+                                    push.extend_from_slice(&response_bytes(
+                                        503,
+                                        "application/json",
+                                        &RETRY_AFTER,
+                                        &error_body(&format!(
+                                            "backend unavailable after {MAX_RETRIES} \
+                                             retries: {err}"
+                                        )),
+                                        c.keep_alive,
+                                    ));
+                                }
+                            }
+                        }
+                    }
+                    if matched && terminal && !kill {
+                        c.active = None;
+                        conn_queue(c, &push);
+                        if !c.keep_alive {
+                            c.closing = true;
+                        }
+                    }
+                }
+                if terminal {
+                    self.inflight = self.inflight.saturating_sub(1);
+                }
+                if let Some((new_id, prompt_tokens, max_tokens, sse)) = resubmit {
+                    let sink = StreamSink::new(
+                        conn,
+                        seq,
+                        sse,
+                        Arc::clone(&self.inbox) as Arc<dyn StreamConsumer>,
+                    );
+                    let _ = self.shared.backend.submit_stream(
+                        CompletionRequest {
+                            id: new_id,
+                            prompt_tokens,
+                            max_tokens,
+                        },
+                        sink,
+                    );
+                }
+                if kill {
+                    self.remove_conn(conn);
+                } else {
+                    self.process_conn(conn);
+                }
+            }
+        }
+    }
+
+    fn sweep_timers(&mut self) {
+        let now = Instant::now();
+        let mut expired: Vec<u64> = Vec::new();
+        let mut idle: Vec<u64> = Vec::new();
+        for (t, c) in &self.conns {
+            if c.closing || c.deferred.is_some() {
+                continue;
+            }
+            if let Some(since) = c.partial_since {
+                if now.duration_since(since) > self.cfg.read_deadline {
+                    expired.push(*t);
+                }
+            } else if c.idle() && now.duration_since(c.last_activity) > self.cfg.idle_timeout {
+                idle.push(*t);
+            }
+        }
+        for t in expired {
+            if let Some(c) = self.conns.get_mut(&t) {
+                c.read_closed = true;
+                c.head = None;
+                c.deferred =
+                    Some((408, "request not completed within the read deadline".to_string()));
+            }
+            self.process_conn(t);
+        }
+        for t in idle {
+            self.remove_conn(t);
+        }
+        if self.draining {
+            // Keep-alive connections with nothing in flight have no
+            // reason to outlive the drain.
+            let parked: Vec<u64> = self
+                .conns
+                .iter()
+                .filter(|(_, c)| c.idle() && !c.streaming)
+                .map(|(t, _)| *t)
+                .collect();
+            for t in parked {
+                self.remove_conn(t);
+            }
+        }
+    }
+}

@@ -20,7 +20,8 @@
 //! dynamic-batching window real servers use).  Both default to ~1 ms and
 //! can be zeroed for maximum throughput.
 
-use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
+use std::collections::HashMap;
+use std::sync::mpsc::{channel, Receiver, TryRecvError};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::Duration;
@@ -37,7 +38,9 @@ use crate::sim::predictor::Predictor;
 use crate::util::rng::Rng;
 use crate::workload::Drift;
 
-use super::backend::{Backend, BackendStats, Completion, CompletionRequest, WorkerStatus};
+use super::backend::{
+    Backend, BackendStats, Completion, CompletionRequest, Responder, StreamSink, WorkerStatus,
+};
 
 /// Configuration for [`SimBackend`].
 #[derive(Clone, Debug)]
@@ -94,7 +97,24 @@ impl Default for SimBackendConfig {
 /// A submitted request waiting for its answer.
 struct Pending {
     req: CompletionRequest,
-    done: Sender<Completion>,
+    resp: Responder,
+}
+
+/// Streaming progress for one in-flight request: how many tokens have
+/// been pushed through the sink so far.
+struct StreamProg {
+    sink: StreamSink,
+    emitted: u64,
+}
+
+/// Register a streamed arrival for per-step delta emission (blocking
+/// responders and sinks that don't want deltas skip the side map).
+fn register_stream(streams: &mut HashMap<u64, StreamProg>, p: &Pending) {
+    if let Responder::Stream(sink) = &p.resp {
+        if sink.wants_deltas() {
+            streams.insert(p.req.id, StreamProg { sink: sink.clone(), emitted: 0 });
+        }
+    }
 }
 
 enum Msg {
@@ -182,12 +202,26 @@ impl Backend for SimBackend {
         let (done_tx, done_rx) = channel::<Completion>();
         {
             let tx = self.tx.lock().map_err(|_| anyhow!("backend poisoned"))?;
-            tx.send(Msg::Submit(Pending { req, done: done_tx }))
+            tx.send(Msg::Submit(Pending { req, resp: Responder::Blocking(done_tx) }))
                 .map_err(|_| anyhow!("sim scheduler is gone"))?;
         }
         done_rx
             .recv()
             .context("sim scheduler dropped the request (shutting down?)")
+    }
+
+    fn supports_streaming(&self) -> bool {
+        true
+    }
+
+    fn submit_stream(&self, req: CompletionRequest, sink: StreamSink) -> Result<()> {
+        let tx = self.tx.lock().map_err(|_| anyhow!("backend poisoned"))?;
+        // On send failure the Pending (and its sink) is dropped, which
+        // fires the sink's terminal-failure event — the caller observes
+        // the outcome through the consumer either way.
+        tx.send(Msg::Submit(Pending { req, resp: Responder::Stream(sink) }))
+            .map_err(|_| anyhow!("sim scheduler is gone"))?;
+        Ok(())
     }
 
     fn workers(&self) -> Vec<WorkerStatus> {
@@ -221,15 +255,15 @@ impl Drop for SimBackend {
 /// Deterministic pseudo-tokens for a completed request (the sim and
 /// fleet backends have no real model; ids are stable for a given
 /// request id).
+pub(crate) fn gen_token(id: u64, j: u64) -> i32 {
+    let h = id
+        .wrapping_mul(6_364_136_223_846_793_005)
+        .wrapping_add(j.wrapping_mul(1_442_695_040_888_963_407));
+    ((h >> 33) % 50_000) as i32
+}
+
 pub(crate) fn gen_tokens(id: u64, n: u64) -> Vec<i32> {
-    (0..n)
-        .map(|j| {
-            let h = id
-                .wrapping_mul(6_364_136_223_846_793_005)
-                .wrapping_add(j.wrapping_mul(1_442_695_040_888_963_407));
-            ((h >> 33) % 50_000) as i32
-        })
-        .collect()
+    (0..n).map(|j| gen_token(id, j)).collect()
 }
 
 struct Scheduler {
@@ -260,7 +294,7 @@ impl Scheduler {
         let mut rng = Rng::new(self.cfg.seed ^ 0x6A7E_11AD);
         // Online, the true remaining length *is* the engine's knowledge
         // of the decode budget, so the oracle predictor is exact here.
-        let mut engine: Engine<Pending, Sender<Completion>> = Engine::new(
+        let mut engine: Engine<Pending, Responder> = Engine::new(
             EngineConfig {
                 g,
                 b: self.cfg.b,
@@ -270,7 +304,9 @@ impl Scheduler {
             Predictor::Oracle,
         );
         let mut completed_per: Vec<u64> = vec![0; g];
-        let mut finished: Vec<Finished<Sender<Completion>>> = Vec::new();
+        let mut finished: Vec<Finished<Responder>> = Vec::new();
+        // Streamed requests awaiting per-step token deltas, by id.
+        let mut streams: HashMap<u64, StreamProg> = HashMap::new();
 
         'outer: loop {
             // Park while idle: block until the next arrival (or shutdown),
@@ -288,6 +324,7 @@ impl Scheduler {
                             prefill,
                             0.0,
                         );
+                        register_stream(&mut streams, &p);
                         engine.submit(prefill, engine.step_index(), recorder.clock(), p);
                         if !self.cfg.batch_window.is_zero() {
                             std::thread::sleep(self.cfg.batch_window);
@@ -311,6 +348,7 @@ impl Scheduler {
                             prefill,
                             0.0,
                         );
+                        register_stream(&mut streams, &p);
                         engine.submit(prefill, engine.step_index(), recorder.clock(), p);
                     }
                     Ok(Msg::Shutdown) => break 'outer,
@@ -322,7 +360,7 @@ impl Scheduler {
             // --- admission (the shared engine + Policy machinery) ---
             engine.admit(&mut *self.policy, &mut rng, recorder.clock(), |p| {
                 let o = u64::from(p.req.max_tokens.max(1));
-                (p.req.id, o, p.done)
+                (p.req.id, o, p.resp)
             });
             if self.tracer.is_enabled() {
                 let admit_clock = recorder.clock();
@@ -406,15 +444,29 @@ impl Scheduler {
                     self.tracer.drain_into(&mut log);
                 }
             }
+            // Per-step token deltas for streamed requests that are
+            // still active (completions flush theirs below, from the
+            // finished record, since `advance` already removed them).
+            if !streams.is_empty() {
+                engine.for_each_active(|id, _worker, done, _o| {
+                    if let Some(prog) = streams.get_mut(&id) {
+                        if done > prog.emitted {
+                            let toks: Vec<i32> =
+                                (prog.emitted..done).map(|j| gen_token(id, j)).collect();
+                            prog.sink.delta(toks, clock);
+                            prog.emitted = done;
+                        }
+                    }
+                });
+            }
+
             for f in finished.drain(..) {
                 let tpot = if f.tokens > 0 {
                     (clock - f.admit_clock) / f.tokens as f64
                 } else {
                     0.0
                 };
-                // The receiver may have hung up (client gone); ignore
-                // send failures.
-                let _ = f.payload.send(Completion {
+                let completion = Completion {
                     id: f.id,
                     worker: f.worker,
                     tokens: gen_tokens(f.id, f.tokens),
@@ -422,7 +474,25 @@ impl Scheduler {
                     queue_wait_s: (f.admit_clock - f.arrival_clock).max(0.0),
                     tpot_s: tpot,
                     latency_s: clock - f.arrival_clock,
-                });
+                };
+                match f.payload {
+                    // The receiver may have hung up (client gone);
+                    // ignore send failures.
+                    Responder::Blocking(tx) => {
+                        let _ = tx.send(completion);
+                    }
+                    Responder::Stream(sink) => {
+                        if let Some(prog) = streams.remove(&f.id) {
+                            if f.tokens > prog.emitted {
+                                let toks: Vec<i32> = (prog.emitted..f.tokens)
+                                    .map(|j| gen_token(f.id, j))
+                                    .collect();
+                                sink.delta(toks, clock);
+                            }
+                        }
+                        sink.finish(completion);
+                    }
+                }
             }
 
             if !self.cfg.step_delay.is_zero() && !engine.is_idle() {
@@ -589,6 +659,45 @@ mod tests {
         // Tracing off: no store, /v0/trace gets None.
         let be = SimBackend::new(fast_cfg("fcfs")).unwrap();
         assert!(be.trace_events(10, None).is_none());
+    }
+
+    #[test]
+    fn streamed_deltas_match_blocking_tokens() {
+        use crate::gateway::backend::{StreamConsumer, StreamEvent};
+        use std::sync::mpsc::Sender;
+
+        struct Chan(Mutex<Sender<StreamEvent>>);
+        impl StreamConsumer for Chan {
+            fn event(&self, _conn: u64, _seq: u64, ev: StreamEvent) {
+                let _ = self.0.lock().unwrap().send(ev);
+            }
+        }
+
+        let be = SimBackend::new(fast_cfg("fcfs")).unwrap();
+        assert!(be.supports_streaming());
+        let (tx, rx) = channel();
+        let sink = StreamSink::new(1, 1, true, Arc::new(Chan(Mutex::new(tx))));
+        be.submit_stream(
+            CompletionRequest { id: 42, prompt_tokens: vec![1, 2], max_tokens: 5 },
+            sink,
+        )
+        .unwrap();
+        let mut toks = Vec::new();
+        let mut done = None;
+        while done.is_none() {
+            match rx.recv_timeout(Duration::from_secs(10)).unwrap() {
+                StreamEvent::Delta { tokens, .. } => toks.extend(tokens),
+                StreamEvent::Done(c) => done = Some(c),
+                StreamEvent::Failed(e) => panic!("stream failed: {e}"),
+            }
+        }
+        let c = done.unwrap();
+        assert_eq!(c.id, 42);
+        assert_eq!(c.n_tokens, 5);
+        // The concatenated deltas are exactly the tokens a blocking
+        // completion of the same id would carry.
+        assert_eq!(toks, gen_tokens(42, 5));
+        assert_eq!(c.tokens, toks);
     }
 
     #[test]

@@ -28,7 +28,7 @@
 use std::sync::Arc;
 use std::time::Duration;
 
-use anyhow::{bail, Context, Result};
+use anyhow::{anyhow, bail, Context, Result};
 
 use bfio_serve::autoscale::AutoscaleConfig;
 use bfio_serve::coordinator::{serve, CoordinatorConfig, ServeRequest};
@@ -367,7 +367,10 @@ fn cmd_replay(args: &Args) -> Result<()> {
             outcome.series.clone(),
             journal.to_jsonl(),
         ));
-        let gw = Gateway::spawn(GatewayConfig { addr, threads: 4 }, backend)?;
+        let gw = Gateway::spawn(
+            GatewayConfig { addr, threads: 4, ..GatewayConfig::default() },
+            backend,
+        )?;
         println!("bfio replay dashboard on http://{}/v0/dash", gw.addr);
         loop {
             std::thread::sleep(Duration::from_secs(3600));
@@ -710,7 +713,35 @@ fn cmd_gateway(args: &Args) -> Result<()> {
         other => bail!("unknown backend {other}; try sim|fleet|pjrt"),
     };
     let name = backend.name();
-    let gw = Gateway::spawn(GatewayConfig { addr, threads }, backend)?;
+    // Transport knobs: the epoll reactor is the default; `--legacy-pool`
+    // restores the blocking thread pool (bench baseline).  The caps map
+    // 1:1 onto GatewayConfig.
+    let gw_defaults = GatewayConfig::default();
+    let gw = Gateway::spawn(
+        GatewayConfig {
+            addr,
+            threads,
+            legacy_pool: args.has("legacy-pool"),
+            max_conns: args.usize_or("max-conns", gw_defaults.max_conns),
+            max_inflight: args.usize_or("max-inflight", gw_defaults.max_inflight),
+            max_header_bytes: args
+                .usize_or("max-header-bytes", gw_defaults.max_header_bytes),
+            max_body_bytes: args.usize_or("max-body-bytes", gw_defaults.max_body_bytes),
+            read_deadline: Duration::from_millis(args.u64_or(
+                "read-deadline-ms",
+                gw_defaults.read_deadline.as_millis() as u64,
+            )),
+            idle_timeout: Duration::from_millis(args.u64_or(
+                "idle-timeout-ms",
+                gw_defaults.idle_timeout.as_millis() as u64,
+            )),
+            drain: Duration::from_millis(
+                args.u64_or("drain-ms", gw_defaults.drain.as_millis() as u64),
+            ),
+            ..gw_defaults
+        },
+        backend,
+    )?;
     println!("bfio gateway ({name}) listening on http://{}", gw.addr);
     println!(
         "  POST /v1/completions   GET /v0/workers   GET|POST /v0/admin/replicas   \
@@ -739,7 +770,28 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
         max_tokens: args.u64_or("max-tokens", 16),
         seed: args.u64_or("seed", 0),
         trace,
+        stream: args.has("stream"),
+        rate: args.flag("rate").map(|_| args.f64_or("rate", 0.0)).filter(|r| *r > 0.0),
     };
+    // `--connections 1,8,32` runs the workload once per count and
+    // prints one sweep row each instead of the single-run summary.
+    if let Some(spec) = args.flag("connections") {
+        let conns: Vec<usize> = spec
+            .split(',')
+            .filter(|s| !s.trim().is_empty())
+            .map(|s| {
+                s.trim()
+                    .parse::<usize>()
+                    .map_err(|e| anyhow!("bad --connections entry {s}: {e}"))
+            })
+            .collect::<Result<_>>()?;
+        if conns.is_empty() {
+            bail!("--connections needs at least one count");
+        }
+        let rows = loadgen::sweep(&cfg, &conns)?;
+        loadgen::print_sweep(&rows);
+        return Ok(());
+    }
     let res = loadgen::run(&cfg)?;
     loadgen::print_summary(&cfg, &res);
     let (policy, report) = loadgen::fetch_report(&cfg.authority, &res)?;

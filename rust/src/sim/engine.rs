@@ -405,6 +405,22 @@ impl<T, P> Engine<T, P> {
         lost
     }
 
+    /// Visit every in-flight request as
+    /// `(id, worker, tokens_done, o)` in worker-then-slot order.
+    /// `tokens_done = step − admit_step` is the number of decode steps
+    /// (= generated tokens) the request has executed so far — after an
+    /// [`Engine::advance`] every active has at least one.  The gateway's
+    /// streaming hook reads this each round to emit SSE token deltas.
+    pub fn for_each_active<F: FnMut(u64, usize, u64, u64)>(&self, mut f: F) {
+        for (gi, w) in self.workers.iter().enumerate() {
+            for slot in &w.slots {
+                if let Some(e) = slot {
+                    f(e.id, gi, self.step - e.admit_step, e.o);
+                }
+            }
+        }
+    }
+
     /// Jump the step counter over an idle gap (no actives, empty queue).
     /// The offline driver uses this to reach the next arrival without
     /// simulating empty barrier steps; no wall-clock time is charged.

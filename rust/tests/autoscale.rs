@@ -326,7 +326,11 @@ fn admin_drain_and_readd_live_without_losing_requests() {
     })
     .unwrap();
     let gw = Gateway::spawn(
-        GatewayConfig { addr: "127.0.0.1:0".to_string(), threads: 16 },
+        GatewayConfig {
+            addr: "127.0.0.1:0".to_string(),
+            threads: 16,
+            ..GatewayConfig::default()
+        },
         Arc::new(backend),
     )
     .unwrap();
@@ -462,7 +466,11 @@ fn autoscaled_gateway_exposes_controller_state_and_metrics() {
     })
     .unwrap();
     let gw = Gateway::spawn(
-        GatewayConfig { addr: "127.0.0.1:0".to_string(), threads: 8 },
+        GatewayConfig {
+            addr: "127.0.0.1:0".to_string(),
+            threads: 8,
+            ..GatewayConfig::default()
+        },
         Arc::new(backend),
     )
     .unwrap();

@@ -294,7 +294,11 @@ impl Backend for ShedBackend {
 #[test]
 fn gateway_sheds_with_retry_after_and_counters() {
     let gw = Gateway::spawn(
-        GatewayConfig { addr: "127.0.0.1:0".to_string(), threads: 2 },
+        GatewayConfig {
+            addr: "127.0.0.1:0".to_string(),
+            threads: 2,
+            ..GatewayConfig::default()
+        },
         Arc::new(ShedBackend),
     )
     .unwrap();

@@ -456,7 +456,11 @@ fn boot_fleet(router: &str, policy: &str) -> (Gateway, String) {
     })
     .unwrap();
     let gw = Gateway::spawn(
-        GatewayConfig { addr: "127.0.0.1:0".to_string(), threads: 8 },
+        GatewayConfig {
+            addr: "127.0.0.1:0".to_string(),
+            threads: 8,
+            ..GatewayConfig::default()
+        },
         Arc::new(backend),
     )
     .unwrap();
@@ -479,7 +483,11 @@ fn gateway_journal_endpoint_serves_replayable_jsonl() {
     })
     .unwrap();
     let gw = Gateway::spawn(
-        GatewayConfig { addr: "127.0.0.1:0".to_string(), threads: 8 },
+        GatewayConfig {
+            addr: "127.0.0.1:0".to_string(),
+            threads: 8,
+            ..GatewayConfig::default()
+        },
         Arc::new(backend),
     )
     .unwrap();

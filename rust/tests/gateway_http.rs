@@ -26,7 +26,11 @@ fn boot(policy: &str, step_delay_ms: u64, batch_window_ms: u64) -> (Gateway, Str
     })
     .unwrap();
     let gw = Gateway::spawn(
-        GatewayConfig { addr: "127.0.0.1:0".to_string(), threads: 16 },
+        GatewayConfig {
+            addr: "127.0.0.1:0".to_string(),
+            threads: 16,
+            ..GatewayConfig::default()
+        },
         Arc::new(backend),
     )
     .unwrap();
@@ -229,6 +233,7 @@ fn loadgen_end_to_end_reports_policy_table() {
         max_tokens: 6,
         seed: 7,
         trace: None,
+        ..LoadGenConfig::default()
     };
     let res = loadgen::run(&cfg).unwrap();
     assert_eq!(res.completed, 16);
@@ -268,7 +273,11 @@ fn trace_endpoint_serves_complete_span_chains_and_metrics_lint_clean() {
     })
     .unwrap();
     let gw = Gateway::spawn(
-        GatewayConfig { addr: "127.0.0.1:0".to_string(), threads: 8 },
+        GatewayConfig {
+            addr: "127.0.0.1:0".to_string(),
+            threads: 8,
+            ..GatewayConfig::default()
+        },
         Arc::new(backend),
     )
     .unwrap();
@@ -374,4 +383,202 @@ fn shutdown_is_idempotent_and_frees_the_port() {
     gw.shutdown();
     // The port no longer serves the gateway.
     assert!(ghttp::http_call(&a, "GET", "/healthz", None).is_err());
+}
+
+/// Parser hardening and connection-reuse semantics of the epoll
+/// reactor (Linux-only: other platforms fall back to the thread pool,
+/// which has its own cruder 400 path).
+#[cfg(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64")))]
+mod reactor_hardening {
+    use super::*;
+    use std::io::{BufRead, BufReader, Read, Write};
+    use std::net::TcpStream;
+
+    /// Gateway with tight parser limits so abuse tests run fast.
+    fn boot_hardened() -> (Gateway, String) {
+        let backend = SimBackend::new(SimBackendConfig {
+            g: 2,
+            b: 2,
+            policy: "fcfs".to_string(),
+            step_delay: Duration::ZERO,
+            batch_window: Duration::ZERO,
+            ..SimBackendConfig::default()
+        })
+        .unwrap();
+        let gw = Gateway::spawn(
+            GatewayConfig {
+                addr: "127.0.0.1:0".to_string(),
+                threads: 4,
+                max_header_bytes: 1024,
+                max_body_bytes: 2048,
+                read_deadline: Duration::from_millis(300),
+                ..GatewayConfig::default()
+            },
+            Arc::new(backend),
+        )
+        .unwrap();
+        let a = gw.addr.to_string();
+        (gw, a)
+    }
+
+    fn connect(a: &str) -> TcpStream {
+        let s = TcpStream::connect(a).unwrap();
+        s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+        s
+    }
+
+    /// Read one HTTP response (status + Content-Length-framed body).
+    fn read_one(r: &mut BufReader<TcpStream>) -> (u16, String) {
+        let mut line = String::new();
+        r.read_line(&mut line).unwrap();
+        let status: u16 = line
+            .split_whitespace()
+            .nth(1)
+            .unwrap_or_else(|| panic!("bad status line {line:?}"))
+            .parse()
+            .unwrap();
+        let mut clen = 0usize;
+        loop {
+            let mut h = String::new();
+            r.read_line(&mut h).unwrap();
+            if h == "\r\n" || h.is_empty() {
+                break;
+            }
+            if let Some(v) = h.to_ascii_lowercase().strip_prefix("content-length:") {
+                clen = v.trim().parse().unwrap();
+            }
+        }
+        let mut body = vec![0u8; clen];
+        r.read_exact(&mut body).unwrap();
+        (status, String::from_utf8_lossy(&body).into_owned())
+    }
+
+    #[test]
+    fn garbage_request_gets_400_then_close() {
+        let (gw, a) = boot_hardened();
+        let mut s = connect(&a);
+        s.write_all(b"TOTAL NONSENSE\r\n\r\n").unwrap();
+        let mut r = BufReader::new(s);
+        let (status, _) = read_one(&mut r);
+        assert_eq!(status, 400);
+        // The framing is poisoned: the server closes the connection.
+        let mut rest = Vec::new();
+        r.read_to_end(&mut rest).unwrap();
+        assert!(rest.is_empty());
+        gw.shutdown();
+    }
+
+    #[test]
+    fn truncated_request_times_out_with_408() {
+        let (gw, a) = boot_hardened();
+        let mut s = connect(&a);
+        // Head never finishes: the read deadline (300ms) must answer
+        // 408 and close instead of holding the slot open (slowloris).
+        s.write_all(b"POST /v1/completions HTTP/1.1\r\nContent-Ty").unwrap();
+        let mut r = BufReader::new(s);
+        let (status, _) = read_one(&mut r);
+        assert_eq!(status, 408);
+        gw.shutdown();
+    }
+
+    #[test]
+    fn oversized_head_gets_431() {
+        let (gw, a) = boot_hardened();
+        let mut s = connect(&a);
+        let mut req = b"GET /healthz HTTP/1.1\r\nX-Pad: ".to_vec();
+        req.extend(std::iter::repeat(b'a').take(4096));
+        // No terminator yet — the limit must trip on buffered size.
+        s.write_all(&req).unwrap();
+        let mut r = BufReader::new(s);
+        let (status, _) = read_one(&mut r);
+        assert_eq!(status, 431);
+        gw.shutdown();
+    }
+
+    #[test]
+    fn oversized_declared_body_gets_413() {
+        let (gw, a) = boot_hardened();
+        let mut s = connect(&a);
+        s.write_all(
+            b"POST /v1/completions HTTP/1.1\r\nContent-Length: 1000000\r\n\r\n",
+        )
+        .unwrap();
+        let mut r = BufReader::new(s);
+        let (status, body) = read_one(&mut r);
+        assert_eq!(status, 413, "body: {body}");
+        gw.shutdown();
+    }
+
+    #[test]
+    fn keep_alive_serves_sequential_requests_on_one_socket() {
+        let (gw, a) = boot_hardened();
+        let s = connect(&a);
+        let mut r = BufReader::new(s);
+        for _ in 0..3 {
+            r.get_mut()
+                .write_all(b"GET /healthz HTTP/1.1\r\n\r\n")
+                .unwrap();
+            let (status, body) = read_one(&mut r);
+            assert_eq!(status, 200);
+            assert_eq!(body, "ok\n");
+        }
+        gw.shutdown();
+    }
+
+    #[test]
+    fn pipelined_requests_with_trailing_junk_answer_in_order() {
+        let (gw, a) = boot_hardened();
+        let mut s = connect(&a);
+        s.write_all(
+            b"GET /healthz HTTP/1.1\r\n\r\nGET / HTTP/1.1\r\n\r\nJUNK LINE\r\n\r\n",
+        )
+        .unwrap();
+        let mut r = BufReader::new(s);
+        let (s1, b1) = read_one(&mut r);
+        let (s2, b2) = read_one(&mut r);
+        let (s3, _) = read_one(&mut r);
+        assert_eq!((s1, b1.as_str()), (200, "ok\n"));
+        assert_eq!(s2, 200);
+        assert!(b2.contains("/v1/completions"));
+        // The junk's 400 comes *after* both good responses.
+        assert_eq!(s3, 400);
+        gw.shutdown();
+    }
+
+    #[test]
+    fn pipelined_completions_answer_in_request_order() {
+        let (gw, a) = boot_hardened();
+        let q1 = r#"{"prompt": [1, 2], "max_tokens": 2}"#;
+        let q2 = r#"{"prompt": [3, 4], "max_tokens": 3}"#;
+        let mut req = Vec::new();
+        for q in [q1, q2] {
+            req.extend_from_slice(
+                format!(
+                    "POST /v1/completions HTTP/1.1\r\nContent-Length: {}\r\n\r\n{}",
+                    q.len(),
+                    q
+                )
+                .as_bytes(),
+            );
+        }
+        let mut s = connect(&a);
+        s.write_all(&req).unwrap();
+        let mut r = BufReader::new(s);
+        let (s1, b1) = read_one(&mut r);
+        let (s2, b2) = read_one(&mut r);
+        assert_eq!((s1, s2), (200, 200));
+        let n = |b: &str| {
+            Json::parse(b)
+                .unwrap()
+                .get("usage")
+                .unwrap()
+                .get("completion_tokens")
+                .unwrap()
+                .as_u64()
+                .unwrap()
+        };
+        assert_eq!(n(&b1), 2, "first response answers the first request");
+        assert_eq!(n(&b2), 3, "second response answers the second request");
+        gw.shutdown();
+    }
 }

@@ -1,0 +1,296 @@
+//! SSE streaming end-to-end: framing, stream/non-stream byte equality,
+//! TTFT, shedding under overload, mid-stream disconnects, and the
+//! shutdown drain — all against the epoll reactor with the sim backend
+//! (virtual time, no GPUs).
+
+#![cfg(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64")))]
+
+use std::io::{BufRead, BufReader, Write};
+use std::sync::{Arc, Barrier};
+use std::time::Duration;
+
+use bfio_serve::gateway::http as ghttp;
+use bfio_serve::gateway::loadgen::{self, LoadGenConfig};
+use bfio_serve::gateway::sim::{SimBackend, SimBackendConfig};
+use bfio_serve::gateway::{Gateway, GatewayConfig};
+use bfio_serve::util::json::Json;
+use bfio_serve::util::stats;
+
+fn boot(
+    step_delay_ms: u64,
+    batch_window_ms: u64,
+    cfg_mut: impl FnOnce(&mut GatewayConfig),
+) -> (Gateway, String) {
+    let backend = SimBackend::new(SimBackendConfig {
+        g: 4,
+        b: 4,
+        policy: "fcfs".to_string(),
+        step_delay: Duration::from_millis(step_delay_ms),
+        batch_window: Duration::from_millis(batch_window_ms),
+        ..SimBackendConfig::default()
+    })
+    .unwrap();
+    let mut cfg = GatewayConfig {
+        addr: "127.0.0.1:0".to_string(),
+        threads: 4,
+        ..GatewayConfig::default()
+    };
+    cfg_mut(&mut cfg);
+    let gw = Gateway::spawn(cfg, Arc::new(backend)).unwrap();
+    let a = gw.addr.to_string();
+    (gw, a)
+}
+
+#[test]
+fn sse_framing_and_stream_nonstream_byte_equality() {
+    // Two identical fresh gateways: request ids start at 0 on both, and
+    // the sim backend's tokens are a pure function of the request id —
+    // so the streamed deltas must concatenate to the exact non-streamed
+    // text for the same request.
+    let (gw_a, a) = boot(0, 0, |_| {});
+    let (gw_b, b) = boot(0, 0, |_| {});
+
+    let body = r#"{"prompt": [1, 2, 3], "max_tokens": 4}"#;
+    let r = ghttp::http_call(&a, "POST", "/v1/completions", Some(body)).unwrap();
+    assert_eq!(r.status, 200, "body: {}", r.body_str().unwrap_or(""));
+    let v = Json::parse(r.body_str().unwrap()).unwrap();
+    let plain_text = v
+        .get("choices")
+        .unwrap()
+        .idx(0)
+        .unwrap()
+        .get("text")
+        .unwrap()
+        .as_str()
+        .unwrap()
+        .to_string();
+
+    let stream_body = r#"{"prompt": [1, 2, 3], "max_tokens": 4, "stream": true}"#;
+    let res = ghttp::sse_call(&b, "/v1/completions", stream_body).unwrap();
+    assert_eq!(res.status, 200);
+    assert!(res.done, "stream must end with data: [DONE]");
+    // One chunk per generated token, plus the final usage chunk.
+    assert_eq!(res.events.len(), 4 + 1, "events: {:?}", res.events);
+
+    let mut streamed = String::new();
+    for (payload, _) in &res.events[..res.events.len() - 1] {
+        let ev = Json::parse(payload).unwrap();
+        assert_eq!(
+            ev.get("object").unwrap().as_str().unwrap(),
+            "text_completion.chunk"
+        );
+        let choice = ev.get("choices").unwrap().idx(0).unwrap();
+        assert_eq!(choice.get("finish_reason"), Some(&Json::Null));
+        streamed.push_str(choice.get("text").unwrap().as_str().unwrap());
+    }
+    assert_eq!(
+        streamed, plain_text,
+        "streamed deltas must concatenate to the non-streamed text"
+    );
+
+    // The final pre-[DONE] chunk: empty text, finish_reason, usage.
+    let (last, _) = res.events.last().unwrap();
+    let fin = Json::parse(last).unwrap();
+    let choice = fin.get("choices").unwrap().idx(0).unwrap();
+    assert_eq!(choice.get("text").unwrap().as_str().unwrap(), "");
+    assert_eq!(choice.get("finish_reason").unwrap().as_str().unwrap(), "length");
+    assert_eq!(
+        fin.get("usage")
+            .unwrap()
+            .get("completion_tokens")
+            .unwrap()
+            .as_u64()
+            .unwrap(),
+        4
+    );
+    assert!(fin.get("bfio").unwrap().get("worker").is_some());
+    gw_a.shutdown();
+    gw_b.shutdown();
+}
+
+#[test]
+fn loadgen_stream_reports_ttft_below_total_latency() {
+    let (gw, a) = boot(3, 5, |_| {});
+    let cfg = LoadGenConfig {
+        authority: a.clone(),
+        concurrency: 4,
+        requests: 8,
+        prompt_tokens: 8,
+        max_tokens: 8,
+        seed: 7,
+        stream: true,
+        ..LoadGenConfig::default()
+    };
+    let res = loadgen::run(&cfg).unwrap();
+    assert_eq!(res.completed, 8, "sheds={} errors={}", res.sheds, res.errors);
+    assert_eq!(res.errors, 0);
+    assert_eq!(res.ttfts_s.len(), 8, "every streamed request measures TTFT");
+    let mean_ttft = stats::mean(&res.ttfts_s);
+    let mean_lat = stats::mean(&res.latencies_s);
+    assert!(
+        mean_ttft < mean_lat,
+        "first token must land before the full response (ttft {mean_ttft} vs latency {mean_lat})"
+    );
+    assert!(
+        loadgen::prom_value(&res.metrics_after, "bfio_gateway_streams_total").unwrap() >= 8.0,
+        "stream counter tracks SSE completions"
+    );
+    gw.shutdown();
+}
+
+#[test]
+fn overload_sheds_429_with_retry_after() {
+    // Watermark of 1 in-flight completion; a slow backend holds it for
+    // ~500ms, so the follow-up burst must shed with 429 + Retry-After.
+    let (gw, a) = boot(20, 0, |c| c.max_inflight = 1);
+    let a2 = a.clone();
+    let first = std::thread::spawn(move || {
+        ghttp::sse_call(
+            &a2,
+            "/v1/completions",
+            r#"{"prompt": [1, 2], "max_tokens": 25, "stream": true}"#,
+        )
+        .unwrap()
+    });
+    // Let the first stream get admitted, then burst.
+    std::thread::sleep(Duration::from_millis(100));
+    let mut sheds = 0;
+    for _ in 0..3 {
+        let r = ghttp::sse_call(
+            &a,
+            "/v1/completions",
+            r#"{"prompt": [3, 4], "max_tokens": 2, "stream": true}"#,
+        )
+        .unwrap();
+        if r.status == 429 {
+            assert!(
+                r.headers
+                    .iter()
+                    .any(|(k, _)| k.eq_ignore_ascii_case("retry-after")),
+                "shed must carry Retry-After"
+            );
+            sheds += 1;
+        }
+    }
+    assert!(sheds >= 1, "burst past the watermark must shed");
+    let first = first.join().unwrap();
+    assert_eq!(first.status, 200);
+    assert!(first.done);
+
+    let m = ghttp::http_call(&a, "GET", "/metrics", None).unwrap();
+    let text = m.body_str().unwrap();
+    assert!(
+        loadgen::prom_value(text, "bfio_gateway_shed_total").unwrap() >= sheds as f64,
+        "shed counter reflects 429s"
+    );
+    gw.shutdown();
+}
+
+#[test]
+fn mid_stream_disconnect_frees_the_connection_and_gateway_keeps_serving() {
+    let (gw, a) = boot(10, 0, |c| c.max_inflight = 2);
+    {
+        // Start a long stream, read only its first delta, then drop the
+        // socket mid-stream.
+        let mut s = std::net::TcpStream::connect(a.as_str()).unwrap();
+        s.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+        let body = r#"{"prompt": [9, 9], "max_tokens": 100, "stream": true}"#;
+        write!(
+            s,
+            "POST /v1/completions HTTP/1.1\r\nContent-Length: {}\r\n\r\n{}",
+            body.len(),
+            body
+        )
+        .unwrap();
+        let mut r = BufReader::new(s);
+        let mut line = String::new();
+        loop {
+            line.clear();
+            assert!(r.read_line(&mut line).unwrap() > 0, "stream ended early");
+            if line.starts_with("data:") {
+                break;
+            }
+        }
+        // Dropping the socket here aborts the stream client-side.
+    }
+    // The gateway must keep serving new completions immediately.
+    let r = ghttp::http_call(
+        &a,
+        "POST",
+        "/v1/completions",
+        Some(r#"{"prompt": [1], "max_tokens": 2}"#),
+    )
+    .unwrap();
+    assert_eq!(r.status, 200);
+    // And the dead connection is reaped: the open-connections gauge
+    // falls back to just the scraping connection itself.
+    let deadline = std::time::Instant::now() + Duration::from_secs(10);
+    loop {
+        let m = ghttp::http_call(&a, "GET", "/metrics", None).unwrap();
+        let open =
+            loadgen::prom_value(m.body_str().unwrap(), "bfio_gateway_open_connections")
+                .unwrap();
+        if open <= 1.0 {
+            break;
+        }
+        assert!(
+            std::time::Instant::now() < deadline,
+            "aborted stream connection was never reaped (open={open})"
+        );
+        std::thread::sleep(Duration::from_millis(50));
+    }
+    gw.shutdown();
+}
+
+#[test]
+fn shutdown_drains_in_flight_requests_without_losing_responses() {
+    let (gw, a) = boot(5, 0, |_| {});
+    let n = 6usize;
+    let barrier = Arc::new(Barrier::new(n + 1));
+    let handles: Vec<_> = (0..n)
+        .map(|i| {
+            let a = a.clone();
+            let barrier = Arc::clone(&barrier);
+            std::thread::spawn(move || {
+                let body =
+                    format!(r#"{{"prompt": [7, {i}], "max_tokens": 40}}"#);
+                let mut s = std::net::TcpStream::connect(a.as_str()).unwrap();
+                s.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+                write!(
+                    s,
+                    "POST /v1/completions HTTP/1.1\r\nConnection: close\r\n\
+                     Content-Length: {}\r\n\r\n{}",
+                    body.len(),
+                    body
+                )
+                .unwrap();
+                s.flush().unwrap();
+                // Request fully on the wire — now let main shut down.
+                barrier.wait();
+                let mut r = BufReader::new(s);
+                let mut line = String::new();
+                r.read_line(&mut line).unwrap();
+                let status: u16 =
+                    line.split_whitespace().nth(1).unwrap().parse().unwrap();
+                status
+            })
+        })
+        .collect();
+    barrier.wait();
+    // Give the reactor a beat to accept every queued connection (the
+    // drain closes the listener, discarding unaccepted backlog), then
+    // shut down with all requests on the wire: each must be answered
+    // (200 if in flight, 503 if it arrived behind the drain), none
+    // dropped on the floor.
+    std::thread::sleep(Duration::from_millis(50));
+    gw.shutdown();
+    let statuses: Vec<u16> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+    assert!(
+        statuses.iter().all(|s| *s == 200 || *s == 503),
+        "drain must answer every accepted request: {statuses:?}"
+    );
+    assert!(
+        statuses.iter().any(|s| *s == 200),
+        "at least one in-flight request completes through the drain: {statuses:?}"
+    );
+}
